@@ -1,0 +1,105 @@
+//! Format explorer: everything §3 and the appendix say about the formats,
+//! regenerated live from the rust format library —
+//!
+//! * Table A1 (format comparison),
+//! * Fig. A1 (FP8 density per binade),
+//! * Fig. 3 (effect of the shift/squeeze on tensors of varying width),
+//! * the §5 hardware cost model,
+//! * a tour of α/β fits across tensor regimes.
+//!
+//! Run: `cargo run --release --example format_explorer`
+
+use s2fp8::bench::report::Table;
+use s2fp8::formats::{analysis, s2fp8 as s2, FormatKind, NumericFormat};
+use s2fp8::util::rng::{Pcg32, Rng};
+
+fn main() {
+    // ---- Table A1 --------------------------------------------------------
+    let mut t = Table::new("Table A1 — format comparison", &[
+        "Format", "Bits", "s/e/m", "Min subnormal", "Min normal", "Max normal", "eps", "Range",
+    ]);
+    for r in analysis::table_a1_rows() {
+        t.row(vec![
+            r.format, r.bits.to_string(), r.sem, r.min_subnormal, r.min_normal, r.max_normal,
+            r.epsilon, r.range,
+        ]);
+    }
+    t.print();
+
+    // ---- Fig. A1 ---------------------------------------------------------
+    println!("Fig. A1 — FP8 values per binade (denormals thin out, 4 elsewhere):");
+    for (e, c) in analysis::fp8_binade_density() {
+        println!("  2^{e:<4} {}", "#".repeat(c));
+    }
+
+    // ---- Fig. 3: the transform across distribution widths ----------------
+    let mut f3 = Table::new(
+        "Fig. 3 — α/β across tensor log-widths (center 2^-20, outside FP8 range)",
+        &["σ(log2|X|)", "α", "β", "FP8 mean rel err", "S2FP8 mean rel err"],
+    );
+    for (sigma, alpha, beta, e8, es2) in
+        analysis::fig3_sweep(-20.0, &[0.25, 0.5, 1.0, 2.0, 4.0, 8.0], 4096, 7)
+    {
+        f3.row(vec![
+            format!("{sigma}"),
+            format!("{alpha:.2}"),
+            format!("{beta:.1}"),
+            format!("{:.3}", e8),
+            format!("{:.4}", es2),
+        ]);
+    }
+    f3.print();
+
+    // ---- α/β regimes (the four cases of §3.2) ----------------------------
+    let mut rng = Pcg32::new(1, 1);
+    let mut regimes = Table::new(
+        "§3.2 — what α and β do per tensor regime",
+        &["tensor", "α", "β", "interpretation"],
+    );
+    let cases: Vec<(&str, Vec<f32>, &str)> = vec![
+        (
+            "very small (≈2^-21)",
+            (0..512).map(|_| rng.next_lognormal(-14.5, 1.4)).collect(),
+            "β>0: right-shift into range",
+        ),
+        (
+            "very large (≈2^24)",
+            (0..512).map(|_| rng.next_lognormal(16.6, 1.4)).collect(),
+            "β<0: left-shift into range",
+        ),
+        (
+            "very narrow (σ≈0.1)",
+            (0..512).map(|_| rng.next_lognormal(0.0, 0.07)).collect(),
+            "α>1: expand to use the bits",
+        ),
+        (
+            "very wide (σ≈12)",
+            (0..512).map(|_| rng.next_lognormal(0.0, 8.3)).collect(),
+            "α<1: squeeze into range",
+        ),
+    ];
+    for (name, xs, note) in cases {
+        let c = s2::S2fp8Codec::fit(&xs);
+        regimes.row(vec![
+            name.to_string(),
+            format!("{:.3}", c.alpha),
+            format!("{:.1}", c.beta),
+            note.to_string(),
+        ]);
+    }
+    regimes.print();
+
+    // ---- §5 hardware costs -------------------------------------------------
+    let cost = analysis::s2fp8_hardware_cost(1 << 20, true);
+    println!("§5 hardware overhead for S2FP8 vs plain FP8 (1M-element tensor):");
+    println!("  statistics unit : {} ops/elem", cost.stats_ops_per_elem);
+    println!("  shift+squeeze   : {} ops/elem", cost.apply_ops_per_elem);
+    println!("  statistics mem  : {} bytes/tensor (stored in FP8, as §5 suggests)",
+        cost.stats_bytes_per_tensor);
+    println!("  memory vs FP32  : {:.4}×", cost.memory_ratio_vs_fp32);
+
+    // ---- storage formats summary ------------------------------------------
+    println!("\nformats available: {:?}",
+        NumericFormat::all().iter().map(|f| f.name).collect::<Vec<_>>());
+    println!("element-wise zoo: {:?}", FormatKind::elementwise());
+}

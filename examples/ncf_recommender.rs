@@ -1,0 +1,47 @@
+//! Recommendation walkthrough (paper §4.4): train NCF/NeuMF on the
+//! synthetic implicit-feedback dataset and evaluate with the paper's
+//! 1-positive-vs-99-negatives protocol (HR@10 / NDCG@10), comparing FP32,
+//! S2FP8 and vanilla FP8 — Table 4 in miniature.
+//!
+//! Run: `cargo run --release --example ncf_recommender [steps]`
+
+use s2fp8::bench::report::{f3, Table};
+use s2fp8::config::experiment::DatasetKind;
+use s2fp8::coordinator::loss_scale::LossScalePolicy;
+use s2fp8::coordinator::runner::{quick_config, run_experiment};
+use s2fp8::coordinator::trainer::LrSchedule;
+use s2fp8::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+    let rt = Runtime::cpu()?;
+
+    let mut table = Table::new(
+        "NCF on synthetic implicit feedback (MovieLens-1M stand-in)",
+        &["format", "HR@10", "NDCG@10", "final loss"],
+    );
+    for (label, artifact) in
+        [("FP32", "ncf_fp32"), ("S2FP8", "ncf_s2fp8"), ("FP8", "ncf_fp8")]
+    {
+        let cfg = quick_config(
+            &format!("example-ncf-{label}"),
+            artifact,
+            DatasetKind::Cf,
+            steps,
+            256,
+            LrSchedule::Constant(5e-4), // paper: Adam, lr 5e-4
+            LossScalePolicy::None,
+        );
+        println!("training {label}…");
+        let out = run_experiment(&rt, &cfg)?;
+        table.row(vec![
+            label.to_string(),
+            f3(out.final_metric),
+            f3(out.final_metric2),
+            format!("{:.4}", out.curve.last("loss").unwrap_or(f64::NAN)),
+        ]);
+    }
+    table.print();
+    println!("(paper Table 4: FP32 0.666, S2FP8 0.663, FP8 0.633 — FP8 lags, S2FP8 matches)");
+    Ok(())
+}

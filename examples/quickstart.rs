@@ -1,0 +1,69 @@
+//! Quickstart: the S2FP8 format in three acts.
+//!
+//!  1. quantize concrete tensors with FP8 vs S2FP8 (the paper's Fig. 2/3
+//!     story on real numbers),
+//!  2. train the MLP artifact end-to-end through the PJRT runtime,
+//!  3. save an S2FP8-compressed checkpoint (the 4× memory claim).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use s2fp8::config::experiment::DatasetKind;
+use s2fp8::coordinator::loss_scale::LossScalePolicy;
+use s2fp8::coordinator::runner::{quick_config, run_experiment};
+use s2fp8::coordinator::trainer::LrSchedule;
+use s2fp8::formats::{analysis, fp8, s2fp8 as s2, FormatKind};
+use s2fp8::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. the format itself -------------------------------------------
+    println!("== FP8 E5M2 vs S2FP8 on a small-magnitude tensor ==");
+    let xs: Vec<f32> = vec![3.1e-6, -1.2e-6, 7.0e-7, 2.4e-6, -4.4e-6];
+    let codec = s2::S2fp8Codec::fit(&xs);
+    println!("tensor: {xs:?}");
+    println!("fitted α = {:.3}, β = {:.3}  (Eq. 4)", codec.alpha, codec.beta);
+    println!("{:<14} {:<14} {:<14}", "x", "FP8(x)", "S2FP8(x)");
+    for &x in &xs {
+        println!("{:<14e} {:<14e} {:<14e}", x, fp8::truncate(x), codec.truncate(x));
+    }
+    let e_fp8 = analysis::quantization_error(FormatKind::Fp8, &xs);
+    let e_s2 = analysis::quantization_error(FormatKind::S2fp8, &xs);
+    println!(
+        "FP8 flushes {:.0}% of elements to zero; S2FP8 mean rel err {:.3}%\n",
+        100.0 * e_fp8.underflow_frac,
+        100.0 * e_s2.mean_rel
+    );
+
+    // ---- 2. train a model through the AOT runtime ------------------------
+    println!("== training the MLP artifact in S2FP8 (no loss scaling) ==");
+    let rt = Runtime::cpu()?;
+    let cfg = quick_config(
+        "quickstart",
+        "mlp_s2fp8",
+        DatasetKind::Vector,
+        150,
+        64,
+        LrSchedule::Constant(0.05),
+        LossScalePolicy::None,
+    );
+    let out = run_experiment(&rt, &cfg)?;
+    let losses = out.curve.column("loss");
+    println!(
+        "loss: {:.3} → {:.3} over {} steps ({} params, {:.1}s)",
+        losses.first().unwrap(),
+        losses.last().unwrap(),
+        out.steps_run,
+        out.param_count,
+        out.wall_secs
+    );
+    assert!(!out.diverged);
+
+    // ---- 3. S2FP8-compressed checkpoints ---------------------------------
+    let raw = std::fs::metadata(format!("runs/{}/final.s2ck", out.name))?.len();
+    println!(
+        "\ncheckpoint runs/{}/final.s2ck: {} KiB (S2FP8-compressed, ≈4× smaller than FP32)",
+        out.name,
+        raw / 1024
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

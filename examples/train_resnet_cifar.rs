@@ -1,0 +1,65 @@
+//! Image-classification walkthrough (paper §4.2 in miniature): train the
+//! CIFAR-class ResNet in three numeric regimes on the same data —
+//!
+//!   FP32 (baseline) · S2FP8 (no knobs) · FP8 + constant loss scaling
+//!
+//! and print the paper's Table-1-shaped comparison. A short run by
+//! default; the full Table 1 lives in `cargo bench --bench table1_cifar`.
+//!
+//! Run: `cargo run --release --example train_resnet_cifar [steps]`
+
+use s2fp8::bench::report::{pct_or_nan, Table};
+use s2fp8::config::experiment::DatasetKind;
+use s2fp8::coordinator::loss_scale::LossScalePolicy;
+use s2fp8::coordinator::runner::{quick_config, run_experiment};
+use s2fp8::coordinator::trainer::LrSchedule;
+use s2fp8::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let rt = Runtime::cpu()?;
+    let lr = || LrSchedule::Piecewise {
+        base: 0.1,
+        boundaries: vec![steps * 6 / 10, steps * 8 / 10],
+        decay: 10.0,
+    };
+
+    let mut table = Table::new(
+        "ResNet-8 on synthetic CIFAR (short run)",
+        &["format", "loss scale", "top-1 %", "val xent", "overflows"],
+    );
+    for (label, artifact, policy) in [
+        ("FP32", "resnet8_fp32", LossScalePolicy::None),
+        ("S2FP8", "resnet8_s2fp8", LossScalePolicy::None),
+        ("FP8", "resnet8_fp8", LossScalePolicy::None),
+        ("FP8+LS(100)", "resnet8_fp8", LossScalePolicy::Constant(100.0)),
+    ] {
+        let mut cfg = quick_config(
+            &format!("example-resnet-{label}"),
+            artifact,
+            DatasetKind::Image,
+            steps,
+            128,
+            lr(),
+            policy.clone(),
+        );
+        cfg.n_train = 2560;
+        cfg.n_test = 512;
+        println!("training {label}…");
+        let out = run_experiment(&rt, &cfg)?;
+        table.row(vec![
+            label.to_string(),
+            match policy {
+                LossScalePolicy::None => "—".into(),
+                LossScalePolicy::Constant(c) => format!("{c}"),
+                _ => "?".into(),
+            },
+            pct_or_nan(out.final_metric, out.diverged),
+            if out.diverged { "NaN".into() } else { format!("{:.3}", out.final_metric2) },
+            out.n_overflows.to_string(),
+        ]);
+    }
+    table.print();
+    println!("(the bench harness runs the full-depth sweep: cargo bench --bench table1_cifar)");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile path: formats, kernels, models, AOT lowering."""

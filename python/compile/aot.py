@@ -1,0 +1,405 @@
+"""AOT lowering: JAX programs → HLO **text** + JSON manifests.
+
+This is the only python that ever runs (once, at build time — `make
+artifacts`). It lowers every (model, format) train/eval/decode step plus
+the standalone Layer-1 kernel programs, and writes, per program:
+
+  artifacts/<name>.hlo.txt         — HLO text. NOT a serialized proto:
+      jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+      image's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+      text parser reassigns ids and round-trips cleanly (see
+      /opt/xla-example/README.md).
+  artifacts/<name>.manifest.json   — the L3 contract: flattened input/
+      output layout (name, shape, dtype, role), model/format metadata,
+      stats-site names, and initial parameter values' digest.
+
+  artifacts/<name>.init.bin        — initial (params, opt_state,
+      model_state) leaves, concatenated little-endian f32/i32, in manifest
+      order, so the rust trainer starts from the exact initialization the
+      paper's recipe prescribes (He init etc.) without reimplementing it.
+
+Run: ``cd python && python -m compile.aot --out ../artifacts [--only re]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import optim as optimlib
+from . import train as trainlib
+from .formats import QuantConfig
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "bool": "pred"}[np.dtype(dt).name]
+
+
+def _leaf_entries(tree, prefix: str, role: str):
+    """Flatten a pytree into manifest entries (name/shape/dtype/role),
+    in jax's canonical tree_flatten order (what HLO parameters follow)."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        name = prefix + "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append(
+            {
+                "name": name if path else prefix.rstrip("/"),
+                "shape": list(np.shape(leaf)),
+                "dtype": _dtype_name(jnp.result_type(leaf)),
+                "role": role,
+            }
+        )
+    return out
+
+
+def _concat_leaves_bytes(tree) -> bytes:
+    buf = bytearray()
+    for leaf in jax.tree_util.tree_leaves(tree):
+        buf += np.asarray(leaf).tobytes()
+    return bytes(buf)
+
+
+class Emitter:
+    def __init__(self, out_dir: str, only: str | None):
+        self.out_dir = out_dir
+        self.only = re.compile(only) if only else None
+        self.emitted = []
+
+    def want(self, name: str) -> bool:
+        return self.only is None or bool(self.only.search(name))
+
+    def emit(self, name: str, fn, example_args: tuple, manifest: dict, init_bin: bytes | None = None):
+        if not self.want(name):
+            return
+        # keep_unused: the manifest promises every declared input is a real
+        # HLO parameter (e.g. `seed` in non-stochastic configs, `step` for
+        # SGD) — without this jax prunes them and the rust feed order breaks.
+        lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+        text = to_hlo_text(lowered)
+        with open(f"{self.out_dir}/{name}.hlo.txt", "w") as f:
+            f.write(text)
+        with open(f"{self.out_dir}/{name}.manifest.json", "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        if init_bin is not None:
+            with open(f"{self.out_dir}/{name}.init.bin", "wb") as f:
+                f.write(init_bin)
+        self.emitted.append(name)
+        print(f"  [aot] {name}: {len(text)/1024:.0f} KiB hlo", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# program catalogue
+# ---------------------------------------------------------------------------
+
+
+def fmt_cfg(fmt: str, stochastic=False, collect_stats=False, use_pallas=False) -> QuantConfig:
+    return QuantConfig(
+        fmt=fmt, stochastic=stochastic, collect_stats=collect_stats, use_pallas=use_pallas
+    )
+
+
+def artifact_name(model: str, fmt_tag: str, kind: str) -> str:
+    return f"{model}_{fmt_tag}_{kind}"
+
+
+def emit_model_family(
+    em: Emitter,
+    model: str,
+    fmt: str,
+    batch: int,
+    *,
+    fmt_tag: str | None = None,
+    stochastic: bool = False,
+    collect_stats: bool = False,
+    grad_stats: bool = False,
+    use_pallas: bool = False,
+    eval_batch: int | None = None,
+    seed: int = 2020,
+    model_kw: dict | None = None,
+):
+    """Emit train/eval (and decode, for seq2seq) artifacts for one
+    (model, format) pair."""
+    fmt_tag = fmt_tag or fmt
+    spec = trainlib.make_spec(model, **(model_kw or {}))
+    cfg = fmt_cfg(fmt, stochastic, collect_stats, use_pallas)
+    eval_batch = eval_batch or batch
+
+    key = jax.random.PRNGKey(seed)
+    params, model_state = spec.init(key)
+    opt = optimlib.make(spec.optimizer)
+    opt_state = opt.init(params)
+    batch_ex = trainlib.make_example_batch(spec, batch)
+
+    scalars = dict(
+        loss_scale=jnp.float32(1.0), lr=jnp.float32(0.1), step=jnp.float32(1.0),
+        seed=jnp.int32(0),
+    )
+
+    # ---- train step ----
+    name = artifact_name(model, fmt_tag, "train")
+    train_step = trainlib.build_train_step(spec, cfg, grad_stats=grad_stats)
+    example = (params, opt_state, model_state, batch_ex) + tuple(scalars.values())
+
+    inputs = (
+        _leaf_entries(params, "params/", "param")
+        + _leaf_entries(opt_state, "opt/", "opt")
+        + _leaf_entries(model_state, "state/", "state")
+        + _leaf_entries(batch_ex, "batch/", "batch")
+        + [
+            {"name": n, "shape": [], "dtype": "i32" if n == "seed" else "f32", "role": "scalar"}
+            for n in scalars
+        ]
+    )
+    out_shapes = jax.eval_shape(train_step, *example)
+    outputs = (
+        _leaf_entries(out_shapes["params"], "params/", "param")
+        + _leaf_entries(out_shapes["opt_state"], "opt/", "opt")
+        + _leaf_entries(out_shapes["model_state"], "state/", "state")
+        + [{"name": "loss", "shape": [], "dtype": "f32", "role": "loss"}]
+        + [{"name": "grad_finite", "shape": [], "dtype": "f32", "role": "flag"}]
+    )
+    stats_names = {"site_stats": [], "grad_stats": []}
+    if collect_stats:
+        stats_names = trainlib.stats_site_names(spec, cfg, batch)
+    elif grad_stats:
+        stats_names["grad_stats"] = trainlib.grad_leaf_names(spec)
+
+    # HLO outputs follow the tree-flatten order of the returned dict: keys
+    # sorted alphabetically. Record that order explicitly.
+    ordered_keys = sorted(out_shapes.keys())
+    flat_output_entries = []
+    for k in ordered_keys:
+        role = {
+            "params": "param",
+            "opt_state": "opt",
+            "model_state": "state",
+            "loss": "loss",
+            "grad_finite": "flag",
+            "site_stats": "aux",
+            "grad_stats": "aux",
+        }[k]
+        prefix = {"params": "params/", "opt_state": "opt/", "model_state": "state/"}.get(k)
+        if prefix:
+            flat_output_entries += _leaf_entries(out_shapes[k], prefix, role)
+        else:
+            flat_output_entries.append(
+                {
+                    "name": k,
+                    "shape": list(out_shapes[k].shape),
+                    "dtype": "f32",
+                    "role": role,
+                }
+            )
+    del outputs  # superseded by flat_output_entries
+
+    def train_flat(*args):
+        p, o, s, b = args[0], args[1], args[2], args[3]
+        return train_step(p, o, s, b, *args[4:])
+
+    manifest = {
+        "name": name,
+        "kind": "train_step",
+        "inputs": inputs,
+        "outputs": flat_output_entries,
+        "stats_sites": stats_names,
+        "meta": {
+            "model": model,
+            "format": fmt,
+            "fmt_tag": fmt_tag,
+            "stochastic": stochastic,
+            "collect_stats": collect_stats,
+            "grad_stats": grad_stats or collect_stats,
+            "use_pallas": use_pallas,
+            "batch": batch,
+            "optimizer": spec.optimizer,
+            "hp": {k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in vars(spec.hp).items()},
+        },
+    }
+    init_bin = _concat_leaves_bytes((params, opt_state, model_state))
+    em.emit(name, train_flat, example, manifest, init_bin)
+
+    # ---- eval step ----
+    ename = artifact_name(model, fmt_tag, "eval")
+    eval_step = trainlib.build_eval_step(spec, cfg)
+    ebatch = trainlib.make_example_batch(spec, eval_batch)
+    eexample = (params, model_state, ebatch)
+    eout = jax.eval_shape(eval_step, *eexample)
+    emanifest = {
+        "name": ename,
+        "kind": "eval_step",
+        "inputs": (
+            _leaf_entries(params, "params/", "param")
+            + _leaf_entries(model_state, "state/", "state")
+            + _leaf_entries(ebatch, "batch/", "batch")
+        ),
+        "outputs": [
+            {"name": "out", "shape": list(eout.shape), "dtype": _dtype_name(eout.dtype),
+             "role": "logits"}
+        ],
+        "stats_sites": {"site_stats": [], "grad_stats": []},
+        "meta": manifest["meta"] | {"batch": eval_batch},
+    }
+    em.emit(ename, eval_step, eexample, emanifest)
+
+    # ---- greedy decode (seq2seq only) ----
+    if spec.decode_fn is not None:
+        dname = artifact_name(model, fmt_tag, "decode")
+        decode_step = trainlib.build_decode_step(spec, cfg)
+        src = jnp.zeros((eval_batch, spec.hp.seq_len), jnp.int32)
+        dout = jax.eval_shape(decode_step, params, src)
+        dmanifest = {
+            "name": dname,
+            "kind": "decode_step",
+            "inputs": (
+                _leaf_entries(params, "params/", "param")
+                + [{"name": "batch/src", "shape": list(src.shape), "dtype": "i32",
+                    "role": "batch"}]
+            ),
+            "outputs": [
+                {"name": "tokens", "shape": list(dout.shape), "dtype": "i32", "role": "tokens"}
+            ],
+            "stats_sites": {"site_stats": [], "grad_stats": []},
+            "meta": manifest["meta"] | {"batch": eval_batch},
+        }
+        em.emit(dname, decode_step, (params, src), dmanifest)
+
+
+def emit_kernel_programs(em: Emitter, n: int = 4096):
+    """Standalone Layer-1 kernel artifacts (rust integration tests + the
+    perf bench drive these directly)."""
+    from .kernels import fp8_quant, qmatmul, s2fp8_quant
+
+    x = jnp.zeros((n,), jnp.float32)
+    for name, fn in [
+        ("kernel_fp8_quant", lambda v: fp8_quant.quantize_fp8_pallas(v)),
+        ("kernel_s2fp8_quant", lambda v: s2fp8_quant.quantize_s2fp8_pallas(v)),
+    ]:
+        em.emit(
+            name,
+            fn,
+            (x,),
+            {
+                "name": name,
+                "kind": "kernel",
+                "inputs": [{"name": "x", "shape": [n], "dtype": "f32", "role": "batch"}],
+                "outputs": [{"name": "y", "shape": [n], "dtype": "f32", "role": "out"}],
+                "stats_sites": {"site_stats": [], "grad_stats": []},
+                "meta": {"kernel": name, "n": n},
+            },
+        )
+    m, k, nn_ = 128, 256, 128
+    a = jnp.zeros((m, k), jnp.float32)
+    b = jnp.zeros((k, nn_), jnp.float32)
+    em.emit(
+        "kernel_qmatmul",
+        lambda aa, bb: qmatmul.qmatmul_fp8_pallas(aa, bb),
+        (a, b),
+        {
+            "name": "kernel_qmatmul",
+            "kind": "kernel",
+            "inputs": [
+                {"name": "a", "shape": [m, k], "dtype": "f32", "role": "batch"},
+                {"name": "b", "shape": [k, nn_], "dtype": "f32", "role": "batch"},
+            ],
+            "outputs": [{"name": "y", "shape": [m, nn_], "dtype": "f32", "role": "out"}],
+            "stats_sites": {"site_stats": [], "grad_stats": []},
+            "meta": {"kernel": "qmatmul", "m": m, "k": k, "n": nn_},
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# the default artifact set (everything DESIGN.md's experiment index needs)
+# ---------------------------------------------------------------------------
+
+
+def emit_all(em: Emitter):
+    emit_kernel_programs(em)
+
+    # Quickstart MLP (small; also the trainer integration-test artifact).
+    for fmt in ["fp32", "fp8", "s2fp8"]:
+        emit_model_family(em, "mlp", fmt, batch=64)
+
+    # Table 1: CIFAR-class ResNets (scaled: width 8, depths 8/14/20).
+    for depth in [8, 14, 20]:
+        for fmt in ["fp32", "fp8", "s2fp8"]:
+            emit_model_family(em, f"resnet{depth}", fmt, batch=128, model_kw={"width": 8})
+    # Table A2 also needs a BF16 CIFAR point (depth 20).
+    emit_model_family(em, "resnet20", "bf16", batch=128, model_kw={"width": 8})
+
+    # Table 2: ImageNet-proxy (100-class) ResNet-14 + the Ex / Ex+SR
+    # baselines (first/last layer FP32, stochastic rounding).
+    for fmt in ["fp32", "fp8", "s2fp8"]:
+        emit_model_family(em, "resnet14-c100", fmt, batch=128, model_kw={"width": 8})
+    emit_model_family(em, "resnet14-c100-ex", "fp8", batch=128, model_kw={"width": 8})
+    emit_model_family(
+        em, "resnet14-c100-ex", "fp8", fmt_tag="fp8sr", stochastic=True, batch=128,
+        model_kw={"width": 8},
+    )
+
+    # Fig. 5 statistics run: ResNet-20 with per-parameter gradient
+    # statistics (grad-only: full forward taps triple the op count and
+    # XLA 0.5.1's superlinear compile chokes — see DESIGN.md §Perf/L2).
+    emit_model_family(
+        em, "resnet20", "s2fp8", fmt_tag="s2fp8stats", grad_stats=True, batch=128,
+        model_kw={"width": 8},
+    )
+    # Full site-tap plumbing is exercised on the cheap MLP.
+    emit_model_family(em, "mlp", "s2fp8", fmt_tag="s2fp8stats", collect_stats=True, batch=64)
+
+    # Table 3 / Fig. 7: Transformer tiny (+BF16 for A2, +stats for Fig. 1).
+    for fmt in ["fp32", "fp8", "s2fp8", "bf16"]:
+        emit_model_family(em, "transformer", fmt, batch=64)
+    emit_model_family(
+        em, "transformer", "s2fp8", fmt_tag="s2fp8stats", grad_stats=True, batch=64
+    )
+
+    # Table 4 / Fig. 8: NCF (+BF16 for A2).
+    for fmt in ["fp32", "fp8", "s2fp8", "bf16"]:
+        emit_model_family(em, "ncf", fmt, batch=256)
+
+    # Layer-1-fused variant: MLP with the Pallas qmatmul on the hot path
+    # (ablation: fused kernel vs jnp path must train identically).
+    emit_model_family(em, "mlp", "fp8", fmt_tag="fp8pallas", use_pallas=True, batch=64)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    args = ap.parse_args()
+
+    em = Emitter(args.out, args.only)
+    emit_all(em)
+
+    index = {"artifacts": em.emitted}
+    with open(f"{args.out}/index.json", "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"[aot] emitted {len(em.emitted)} programs to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

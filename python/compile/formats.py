@@ -1,0 +1,296 @@
+"""Numeric-format emulation in pure jnp (Layer-2 reference math).
+
+These functions are the *shared algorithm* with the rust implementations in
+``rust/src/formats/`` — ``truncate_fp8`` is bit-identical with
+``fp8::truncate_arith`` (power-of-two scaling + round-half-even are exact in
+f32), and the S2FP8 path agrees to ~1e-5 relative (libm ``exp2``/``log2``
+differ by ulps across languages). Cross-checked by the golden files emitted
+by ``compile.golden`` and consumed by ``rust/tests/golden_formats.rs``.
+
+Format recap (paper §3.1, Table A1):
+  FP8 = E5M2: bias 15, normals ``2^-14 .. (1-2^-3)*2^16 = 57344``,
+  denormal step ``2^-16``, machine epsilon ``2^-3`` (max RNE rel. error).
+
+S2FP8 (paper §3.2): a tensor X is represented by FP8 tensor Y plus (α, β):
+  ``log2|Y_i| = α log2|X_i| + β``                      (Eq. 1)
+  ``mean'(log2|Y|) = 0`` and ``max'(log2|Y|) = 15``    (Eq. 2)
+  ``μ = mean' log2|X_i|``, ``m = max log2|X_i|``       (Eq. 3)
+  ``α = 15/(m − μ)``, ``β = −αμ``                      (Eq. 4)
+where the primes ignore zero elements. The training-simulation truncation is
+  ``X̂ = sign(X)·(2^{−β}·truncate_FP8(2^β|X|^α))^{1/α}``  (Eq. 5)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# FP8 E5M2 constants (mirror rust/src/formats/fp8.rs)
+# ---------------------------------------------------------------------------
+FP8_BIAS = 15
+FP8_MANT_BITS = 2
+FP8_MIN_POSITIVE = 2.0 ** -16  # smallest denormal
+FP8_MIN_NORMAL = 2.0 ** -14
+FP8_MAX_NORMAL = 57344.0  # (1 + 3/4) * 2^15 = (1 - 2^-3) * 2^16
+FP8_EPSILON = 2.0 ** -3
+
+# S2FP8 constants (mirror rust/src/formats/s2fp8.rs)
+TARGET_MAX_LOG2 = 15.0
+MIN_SPREAD = 1e-3
+
+
+def _floor_log2(ax: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(ax)) for positive finite ax, exactly (via frexp).
+
+    Kept as the transparent reference; the hot truncation paths use
+    `_exponent_bits` instead — `jnp.frexp` lowers to a 36-op HLO
+    subcomputation, which multiplied by hundreds of quantization sites
+    makes XLA 0.5.1's compile time explode (see DESIGN.md §Perf/L2).
+    """
+    _, e = jnp.frexp(ax)
+    return e - 1
+
+
+def _exponent_bits(bits_abs: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(x)) for positive *normal* f32 from its bit pattern
+    (4 HLO ops). f32-subnormal inputs yield −127, which the callers clamp
+    to the FP8/FP16 min-normal exponent — identical downstream results
+    (those magnitudes quantize to 0 or the denormal grid either way)."""
+    return (bits_abs >> 23).astype(jnp.int32) - 127
+
+
+def _pow2_from_exp(e: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2^e (integer e ≥ −126) via exponent-field construction."""
+    return jax.lax.bitcast_convert_type(((e + 127).astype(jnp.uint32)) << 23, jnp.float32)
+
+
+def exact_pow2(e: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2^e for integer e ≥ −126, via exponent-field construction.
+
+    `jnp.exp2` lowers to a polynomial approximation on the CPU backend and
+    can be off by an ulp even at integer arguments — which breaks the
+    bit-exactness contract with the rust implementation. Building the f32
+    directly from the exponent field is exact by construction.
+    """
+    bits = ((e + 127).astype(jnp.uint32)) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def truncate_fp8(x: jnp.ndarray) -> jnp.ndarray:
+    """FP8 E5M2 truncation with RNE rounding and saturation (paper §4.1).
+
+    Bit-identical to ``rust fp8::truncate``: with ``e = floor(log2|x|)``
+    clamped to the min-normal exponent −14, the grid step is ``2^(e−2)``;
+    scaling by a power of two and ``round`` (numpy = half-to-even) are both
+    exact in f32. Zeros/signs preserved, NaN propagates, |x| > max saturates.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    absbits = bits & jnp.uint32(0x7FFF_FFFF)
+    ax = jax.lax.bitcast_convert_type(absbits, jnp.float32)
+    eff = jnp.maximum(_exponent_bits(absbits), -(FP8_BIAS - 1))
+    scale = _pow2_from_exp(eff - FP8_MANT_BITS)
+    y = jnp.round(ax / scale) * scale  # exact: power-of-two scale, RNE
+    y = jnp.minimum(y, FP8_MAX_NORMAL)  # saturate (Inf included)
+    signed = jnp.where(x < 0, -y, y)
+    # zeros (and ±0 sign) preserved; NaN propagates through `x`
+    return jnp.where(ax > 0, signed, x)
+
+
+def truncate_fp8_stochastic(x: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """FP8 truncation with stochastic rounding (Wang et al. 2018 baseline).
+
+    ``u`` is uniform in [0,1) with the same shape as ``x``; |x| rounds up
+    with probability equal to its fractional grid position.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    absbits = bits & jnp.uint32(0x7FFF_FFFF)
+    ax = jax.lax.bitcast_convert_type(absbits, jnp.float32)
+    eff = jnp.maximum(_exponent_bits(absbits), -(FP8_BIAS - 1))
+    scale = _pow2_from_exp(eff - FP8_MANT_BITS)
+    q = ax / scale
+    lo = jnp.floor(q)
+    y = (lo + (q - lo > u)) * scale
+    y = jnp.minimum(y, FP8_MAX_NORMAL)
+    signed = jnp.where(x < 0, -y, y)
+    return jnp.where(ax > 0, signed, x)
+
+
+def truncate_bf16(x: jnp.ndarray) -> jnp.ndarray:
+    """BF16 truncation (RNE) via bit manipulation — Table A2's BF16 rows."""
+    x = jnp.asarray(x, jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    lsb = (bits >> 16) & 1
+    rounded = (bits + 0x7FFF + lsb) & jnp.uint32(0xFFFF0000)
+    out = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+    return jnp.where(jnp.isnan(x), x, out)
+
+
+def truncate_fp16(x: jnp.ndarray) -> jnp.ndarray:
+    """IEEE FP16 truncation (RNE, saturating to ±65504 like our rust impl)."""
+    x = jnp.asarray(x, jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    absbits = bits & jnp.uint32(0x7FFF_FFFF)
+    ax = jax.lax.bitcast_convert_type(absbits, jnp.float32)
+    eff = jnp.maximum(_exponent_bits(absbits), -14)
+    scale = _pow2_from_exp(eff - 10)
+    y = jnp.round(ax / scale) * scale
+    y = jnp.minimum(y, 65504.0)
+    signed = jnp.where(x < 0, -y, y)
+    return jnp.where(ax > 0, signed, x)
+
+
+# ---------------------------------------------------------------------------
+# S2FP8
+# ---------------------------------------------------------------------------
+def s2fp8_stats(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(μ, m, n_nonzero) of Eq. 3, ignoring zero elements.
+
+    All-zero tensors return (0, 0, 0); callers must special-case them
+    (``s2fp8_factors`` does).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    ax = jnp.abs(x)
+    nz = ax > 0
+    l = jnp.log2(jnp.where(nz, ax, 1.0))
+    n = jnp.sum(nz.astype(jnp.float32))
+    mu = jnp.sum(jnp.where(nz, l, 0.0)) / jnp.maximum(n, 1.0)
+    m = jnp.max(jnp.where(nz, l, -jnp.inf))
+    m = jnp.where(n > 0, m, 0.0)
+    return mu, m, n
+
+
+def s2fp8_factors(mu: jnp.ndarray, m: jnp.ndarray, n: jnp.ndarray):
+    """(α, β) of Eq. 4 with the degenerate-tensor guards of DESIGN.md."""
+    spread = jnp.maximum(m - mu, MIN_SPREAD)
+    alpha = TARGET_MAX_LOG2 / spread
+    beta = -alpha * mu
+    # all-zero tensor → identity codec
+    alpha = jnp.where(n > 0, alpha, 1.0)
+    beta = jnp.where(n > 0, beta, 0.0)
+    return alpha, beta
+
+
+def s2fp8_squeeze(x, alpha, beta):
+    """Forward transform Eq. 1: ``y = ±2^(β + α·log2|x|)`` (0 ↦ 0)."""
+    ax = jnp.abs(x)
+    nz = ax > 0
+    l = jnp.log2(jnp.where(nz, ax, 1.0))
+    y = jnp.exp2(beta + alpha * l)
+    y = jnp.where(x < 0, -y, y)
+    return jnp.where(nz, y, x)
+
+
+def s2fp8_unsqueeze(y, alpha, beta):
+    """Inverse transform: ``x = ±2^((log2|y| − β)/α)`` (0 ↦ 0)."""
+    ay = jnp.abs(y)
+    nz = ay > 0
+    l = jnp.log2(jnp.where(nz, ay, 1.0))
+    x = jnp.exp2((l - beta) / alpha)
+    x = jnp.where(y < 0, -x, x)
+    return jnp.where(nz, x, y)
+
+
+def site_stats(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-tensor statistics vector logged for Fig. 1 / Fig. 5:
+
+    ``[μ, m, α, β, frac_below_fp8, frac_above_fp8]``
+
+    where the last two are the fractions of non-zero elements whose
+    magnitude falls outside FP8's representable window ``[2^-16, 2^16]`` —
+    the quantity Fig. 1 visualizes.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    mu, m, n = s2fp8_stats(x)
+    alpha, beta = s2fp8_factors(mu, m, n)
+    ax = jnp.abs(x)
+    nz = ax > 0
+    denom = jnp.maximum(n, 1.0)
+    below = jnp.sum((nz & (ax < FP8_MIN_POSITIVE)).astype(jnp.float32)) / denom
+    above = jnp.sum((ax > 65536.0).astype(jnp.float32)) / denom
+    return jnp.stack([mu, m, alpha, beta, below, above])
+
+
+def truncate_s2fp8(x: jnp.ndarray, return_stats: bool = False):
+    """The paper's Eq. 5 truncation: fit (α, β) on the tensor, squeeze,
+    FP8-truncate, unsqueeze. Optionally also return ``site_stats(x)``."""
+    x = jnp.asarray(x, jnp.float32)
+    mu, m, n = s2fp8_stats(x)
+    alpha, beta = s2fp8_factors(mu, m, n)
+    y = s2fp8_squeeze(x, alpha, beta)
+    yq = truncate_fp8(y)
+    out = s2fp8_unsqueeze(yq, alpha, beta)
+    if return_stats:
+        return out, site_stats(x)
+    return out
+
+
+def truncate_s2fp8_stochastic(x: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 5 with a stochastically-rounded inner FP8 step (ablation)."""
+    x = jnp.asarray(x, jnp.float32)
+    mu, m, n = s2fp8_stats(x)
+    alpha, beta = s2fp8_factors(mu, m, n)
+    y = s2fp8_squeeze(x, alpha, beta)
+    yq = truncate_fp8_stochastic(y, u)
+    return s2fp8_unsqueeze(yq, alpha, beta)
+
+
+# ---------------------------------------------------------------------------
+# Quantization config used by qops / models
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """One quantization policy, inserted around every GEMM (paper §4.1).
+
+    fmt:         'fp32' (no-op) | 'fp8' | 's2fp8' | 'bf16' | 'fp16'
+    stochastic:  stochastic rounding for the fp8 inner step (needs rng key)
+    use_pallas:  route element-wise quantization through the Layer-1 Pallas
+                 kernels (interpret=True) instead of plain jnp
+    collect_stats: make quantization sites record (μ, m, α, β) — Fig. 5
+    """
+
+    fmt: str = "s2fp8"
+    stochastic: bool = False
+    use_pallas: bool = False
+    collect_stats: bool = False
+
+    def __post_init__(self):
+        assert self.fmt in ("fp32", "fp8", "s2fp8", "bf16", "fp16"), self.fmt
+        if self.stochastic:
+            assert self.fmt in ("fp8", "s2fp8"), "SR is an FP8-path option"
+
+    @property
+    def is_noop(self) -> bool:
+        return self.fmt == "fp32"
+
+
+def quantize(x: jnp.ndarray, cfg: QuantConfig, key=None):
+    """Dispatch a tensor through the configured truncation (jnp path)."""
+    if cfg.is_noop:
+        return x
+    if cfg.fmt == "bf16":
+        return truncate_bf16(x)
+    if cfg.fmt == "fp16":
+        return truncate_fp16(x)
+    if cfg.stochastic:
+        assert key is not None, "stochastic rounding needs a PRNG key"
+        u = jax.random.uniform(key, x.shape, jnp.float32)
+        if cfg.fmt == "fp8":
+            return truncate_fp8_stochastic(x, u)
+        return truncate_s2fp8_stochastic(x, u)
+    if cfg.fmt == "fp8":
+        if cfg.use_pallas:
+            from .kernels import fp8_quant
+
+            return fp8_quant.quantize_fp8_pallas(x)
+        return truncate_fp8(x)
+    # s2fp8
+    if cfg.use_pallas:
+        from .kernels import s2fp8_quant
+
+        return s2fp8_quant.quantize_s2fp8_pallas(x)
+    return truncate_s2fp8(x)

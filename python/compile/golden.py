@@ -1,0 +1,107 @@
+"""Golden-file emitter: cross-language test vectors consumed by
+``rust/tests/golden_formats.rs``.
+
+Binary layout per file: little-endian f32 pairs/rows.
+
+  golden/fp8_pairs.bin     — N × (input, truncate_fp8(input)): rust must
+                             match **bit-exactly**.
+  golden/fp8_sr.bin        — N × (input, u, truncate_fp8_stochastic):
+                             bit-exact given the same uniform draw.
+  golden/s2fp8_tensors.bin — a set of tensors: for each, header
+                             [len, mu, m, alpha, beta] then len ×
+                             (input, truncate_s2fp8(input)); rust matches
+                             stats tightly and values to rel-tol.
+  golden/bf16_pairs.bin / fp16_pairs.bin — like fp8_pairs.
+
+Run: ``cd python && python -m compile.golden --out ../artifacts/golden``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from . import formats
+
+
+def _interesting_inputs(rng: np.random.Generator, n: int) -> np.ndarray:
+    """Wide-log-range signed values + adversarial specials."""
+    logmag = rng.uniform(-45, 25, size=n).astype(np.float32)
+    sign = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    vals = sign * np.exp2(logmag)
+    specials = np.array(
+        [
+            0.0, -0.0, 1.0, -1.0, 1.125, 1.375, 1.625,  # RNE ties
+            2.0 ** -16, 2.0 ** -17, 1.5 * 2.0 ** -16,   # denormal ties
+            57344.0, 60000.0, 61440.0, 65536.0, 3e38,   # saturation edge
+            2.0 ** -14, (1 - 2 ** -4) * 2.0 ** -14,     # normal/denormal edge
+        ],
+        dtype=np.float32,
+    )
+    return np.concatenate([specials, vals])
+
+
+def emit_pairs(path: str, fn, xs: np.ndarray):
+    ys = np.asarray(fn(jnp.asarray(xs)), dtype=np.float32)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", len(xs)))
+        np.stack([xs, ys], axis=1).astype("<f4").tofile(f)
+    print(f"  [golden] {os.path.basename(path)}: {len(xs)} pairs")
+
+
+def emit_sr(path: str, xs: np.ndarray, rng: np.random.Generator):
+    us = rng.uniform(0, 1, size=len(xs)).astype(np.float32)
+    ys = np.asarray(
+        formats.truncate_fp8_stochastic(jnp.asarray(xs), jnp.asarray(us)), dtype=np.float32
+    )
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", len(xs)))
+        np.stack([xs, us, ys], axis=1).astype("<f4").tofile(f)
+    print(f"  [golden] {os.path.basename(path)}: {len(xs)} triples")
+
+
+def emit_s2fp8(path: str, tensors: list[np.ndarray]):
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", len(tensors)))
+        for xs in tensors:
+            xs = xs.astype(np.float32)
+            out, stats = formats.truncate_s2fp8(jnp.asarray(xs), return_stats=True)
+            out = np.asarray(out, dtype=np.float32)
+            mu, m, alpha, beta = (float(v) for v in np.asarray(stats)[:4])
+            f.write(struct.pack("<Iffff", len(xs), mu, m, alpha, beta))
+            np.stack([xs, out], axis=1).astype("<f4").tofile(f)
+    print(f"  [golden] {os.path.basename(path)}: {len(tensors)} tensors")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    rng = np.random.default_rng(2020)
+    xs = _interesting_inputs(rng, 4000)
+    emit_pairs(f"{args.out}/fp8_pairs.bin", formats.truncate_fp8, xs)
+    emit_pairs(f"{args.out}/bf16_pairs.bin", formats.truncate_bf16, xs)
+    emit_pairs(f"{args.out}/fp16_pairs.bin", formats.truncate_fp16, xs)
+    emit_sr(f"{args.out}/fp8_sr.bin", xs, rng)
+
+    tensors = [
+        rng.lognormal(mean=-12.0, sigma=2.0, size=512).astype(np.float32)
+        * rng.choice([-1, 1], size=512),
+        rng.lognormal(mean=14.0, sigma=1.0, size=256).astype(np.float32),
+        rng.normal(0, 0.05, size=1024).astype(np.float32),          # weight-like
+        np.full(64, 0.37, dtype=np.float32),                        # degenerate
+        np.concatenate([np.zeros(100, np.float32),                  # sparse
+                        rng.lognormal(-20, 3, 156).astype(np.float32)]),
+    ]
+    emit_s2fp8(f"{args.out}/s2fp8_tensors.bin", tensors)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; lowered with interpret=True so
+they compile to plain HLO runnable on the CPU PJRT plugin).
+
+Kernels:
+  * fp8_quant   -- element-wise FP8 E5M2 RNE truncation
+  * s2fp8_quant -- the S2FP8 truncation: stats reduction (Eq. 3) then an
+                   element-wise squeeze/truncate/unsqueeze pass (Eq. 5)
+  * qmatmul     -- quantized GEMM: Q(A)@Q(B) with an f32 VMEM accumulator
+                   (paper Fig. 4: FP8 operands, FP32 accumulation)
+  * ref         -- pure-jnp oracles used by pytest/hypothesis
+"""

@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: element-wise FP8 E5M2 truncation (RNE).
+
+The tensor is flattened and padded to a multiple of the block size, then a
+1-D grid of VMEM-resident blocks streams through the truncation. Padding
+with zeros is harmless (0 is a fixed point of the truncation).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): this is the "convert on
+memory store" unit of paper Fig. 4 — pure VPU element-wise work; each block
+makes one HBM→VMEM→HBM round trip. Block size 2048 f32 = 8 KiB in / 8 KiB
+out, far under VMEM (≈16 MiB), letting the real-TPU pipeline double-buffer.
+`interpret=True` is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FP8_MAX_NORMAL = 57344.0
+FP8_MANT_BITS = 2
+FP8_MIN_NORMAL_EXP = -14
+
+DEFAULT_BLOCK = 2048
+
+
+def _truncate_fp8_block(x: jnp.ndarray) -> jnp.ndarray:
+    """The in-kernel truncation math (same algorithm as formats.truncate_fp8;
+    duplicated here so the kernel body is self-contained for lowering)."""
+    # pure bit-op path (no frexp: 36 extra HLO ops per site and inexact
+    # exp2 both hurt; see formats.truncate_fp8 — identical algorithm)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    absbits = bits & jnp.uint32(0x7FFF_FFFF)
+    ax = jax.lax.bitcast_convert_type(absbits, jnp.float32)
+    e = (absbits >> 23).astype(jnp.int32) - 127
+    eff = jnp.maximum(e, FP8_MIN_NORMAL_EXP)
+    scale_bits = ((eff - FP8_MANT_BITS + 127).astype(jnp.uint32)) << 23
+    scale = jax.lax.bitcast_convert_type(scale_bits, jnp.float32)
+    y = jnp.round(ax / scale) * scale
+    y = jnp.minimum(y, FP8_MAX_NORMAL)
+    signed = jnp.where(x < 0, -y, y)
+    return jnp.where(ax > 0, signed, x)
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = _truncate_fp8_block(x_ref[...])
+
+
+def quantize_fp8_pallas(x: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """FP8-truncate an arbitrary-shape tensor through the Pallas kernel."""
+    shape = x.shape
+    flat = jnp.ravel(x).astype(jnp.float32)
+    n = flat.shape[0]
+    if n <= block:
+        # single block, no grid
+        out = pl.pallas_call(
+            _kernel,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )(flat)
+        return out.reshape(shape)
+    pad = (-n) % block
+    padded = jnp.pad(flat, (0, pad))
+    grid = padded.shape[0] // block
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(padded.shape, jnp.float32),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(padded)
+    return out[:n].reshape(shape)

@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: quantized GEMM — ``Q(A) @ Q(B)`` with FP32
+accumulation (the tensor-processing-engine datapath of paper Fig. 4/§5).
+
+Tiling: grid over (M/bm, N/bn); each program loads an (bm, K) slab of A and
+a (K, bn) slab of B into VMEM, quantizes them element-wise (the paper's
+"convert on operand load"), and runs one f32 `jnp.dot`. Full-K blocks keep
+the accumulation order identical to the jnp oracle, so fp8-path results are
+bit-exact against `ref.qmatmul_ref`.
+
+TPU mapping / MXU utilization estimate (DESIGN.md §Hardware-Adaptation):
+with bm = bn = 128 and K ≤ 2048, VMEM footprint per program is
+``(bm·K + K·bn + bm·bn)·4B ≤ 2.2 MiB`` — comfortably double-bufferable in
+16 MiB VMEM. The inner dot maps to ⌈bm/128⌉·⌈bn/128⌉·⌈K/128⌉ MXU passes
+with no wasted lanes when shapes are multiples of 128, i.e. structural MXU
+utilization = (bm·bn·K)/(⌈·⌉ padding) ≈ 100% for our model shapes.
+`interpret=True` is for CPU correctness only; wallclock here is not a TPU
+proxy (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fp8_quant import _truncate_fp8_block
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _kernel(a_ref, b_ref, o_ref, *, quantize_out: bool):
+    qa = _truncate_fp8_block(a_ref[...])
+    qb = _truncate_fp8_block(b_ref[...])
+    acc = jnp.dot(qa, qb, preferred_element_type=jnp.float32)
+    if quantize_out:
+        acc = _truncate_fp8_block(acc)
+    o_ref[...] = acc
+
+
+def qmatmul_fp8_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    quantize_out: bool = False,
+) -> jnp.ndarray:
+    """Quantized matmul for 2-D operands (M,K) @ (K,N) → (M,N) f32.
+
+    Operands are FP8-truncated inside the kernel; accumulation stays FP32
+    (master-precision accumulate, paper Fig. 4). Set ``quantize_out`` to
+    also truncate the result before it leaves the engine ("converted back
+    to S2FP8 when needed, e.g. to store back in memory", paper §5).
+    """
+    (m, k) = a.shape
+    (k2, n) = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    pm = (-m) % bm
+    pn = (-n) % bn
+    ap = jnp.pad(a, ((0, pm), (0, 0))) if pm else a
+    bp = jnp.pad(b, ((0, 0), (0, pn))) if pn else b
+    gm = ap.shape[0] // bm
+    gn = bp.shape[1] // bn
+
+    kern = functools.partial(_kernel, quantize_out=quantize_out)
+    if gm == 1 and gn == 1:
+        out = pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), jnp.float32),
+            interpret=True,
+        )(ap, bp)
+    else:
+        out = pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), jnp.float32),
+            grid=(gm, gn),
+            in_specs=[
+                pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+                pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            interpret=True,
+        )(ap, bp)
+    return out[:m, :n]

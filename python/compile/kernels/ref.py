@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+These re-derive the expected outputs from the shared format math in
+``compile.formats`` — the kernels must match them exactly (fp8 path) or to
+tight tolerance (s2fp8 pow path; see DESIGN.md "Numerics decisions").
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import formats
+
+
+def fp8_quant_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.fp8_quant: element-wise E5M2 RNE truncation."""
+    return formats.truncate_fp8(x)
+
+
+def s2fp8_stats_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the stats pass: [Σ'log2|x|, max'log2|x|, n'] (primes
+    ignore zeros), the reduction of paper Eq. 3."""
+    x = jnp.asarray(x, jnp.float32)
+    ax = jnp.abs(x)
+    nz = ax > 0
+    l = jnp.log2(jnp.where(nz, ax, 1.0))
+    s = jnp.sum(jnp.where(nz, l, 0.0))
+    m = jnp.max(jnp.where(nz, l, -jnp.inf))
+    n = jnp.sum(nz.astype(jnp.float32))
+    m = jnp.where(n > 0, m, 0.0)
+    return jnp.stack([s, m, n])
+
+
+def s2fp8_quant_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.s2fp8_quant: the full Eq. 5 truncation."""
+    return formats.truncate_s2fp8(x)
+
+
+def qmatmul_ref(a: jnp.ndarray, b: jnp.ndarray, fmt: str = "fp8") -> jnp.ndarray:
+    """Oracle for kernels.qmatmul: truncate operands, matmul in f32.
+
+    Matches the kernel when the kernel's K-tiling covers the full K range
+    per block (our default — partial-K accumulation in FP32 is exact w.r.t.
+    dot-product reassociation only when XLA keeps the same order, so the
+    kernel uses full-K blocks; see qmatmul.py).
+    """
+    cfg = formats.QuantConfig(fmt=fmt)
+    qa = formats.quantize(a, cfg)
+    qb = formats.quantize(b, cfg)
+    return jnp.matmul(qa, qb, precision="highest")

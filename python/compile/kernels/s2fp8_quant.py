@@ -1,0 +1,140 @@
+"""Layer-1 Pallas kernels for the paper's S2FP8 truncation (Eq. 3–5).
+
+Two passes, exactly the two hardware components of paper §5:
+
+  1. **Statistics unit** (`_stats_kernel`): a grid reduction producing
+     ``[Σ' log2|x|, max' log2|x|, n']`` over non-zero elements. On TPU this
+     is one HBM→VMEM stream of the tensor with three VMEM accumulators
+     carried across sequential grid steps (the Pallas/TPU grid is
+     sequential, so `o_ref` accumulation across `program_id` is the
+     idiomatic reduction; CUDA would have used a two-level warp reduction).
+  2. **Shift/squeeze + truncate unit** (`_apply_kernel`): element-wise
+     ``x ↦ unsqueeze(truncate_fp8(squeeze(x)))`` with (α, β) passed as a
+     two-element operand streamed to every block.
+
+(α, β) from the stats (Eq. 4) is O(1) scalar math done between the passes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fp8_quant import _truncate_fp8_block
+
+TARGET_MAX_LOG2 = 15.0
+MIN_SPREAD = 1e-3
+
+DEFAULT_BLOCK = 2048
+
+
+def _stats_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = 0.0
+        o_ref[1] = -jnp.inf
+        o_ref[2] = 0.0
+
+    blk = x_ref[...]
+    ax = jnp.abs(blk)
+    nz = ax > 0
+    l = jnp.log2(jnp.where(nz, ax, 1.0))
+    o_ref[0] += jnp.sum(jnp.where(nz, l, 0.0))
+    o_ref[1] = jnp.maximum(o_ref[1], jnp.max(jnp.where(nz, l, -jnp.inf)))
+    o_ref[2] += jnp.sum(nz.astype(jnp.float32))
+
+
+def _apply_kernel(x_ref, ab_ref, o_ref):
+    x = x_ref[...]
+    alpha = ab_ref[0]
+    beta = ab_ref[1]
+    ax = jnp.abs(x)
+    nz = ax > 0
+    l = jnp.log2(jnp.where(nz, ax, 1.0))
+    y = jnp.exp2(beta + alpha * l)
+    y = jnp.where(x < 0, -y, y)
+    y = jnp.where(nz, y, x)
+    yq = _truncate_fp8_block(y)
+    ayq = jnp.abs(yq)
+    nzq = ayq > 0
+    lq = jnp.log2(jnp.where(nzq, ayq, 1.0))
+    out = jnp.exp2((lq - beta) / alpha)
+    out = jnp.where(yq < 0, -out, out)
+    o_ref[...] = jnp.where(nzq, out, yq)
+
+
+def stats_pallas(x: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """[Σ'log2|x|, max'log2|x|, n'] via the grid-reduction kernel."""
+    flat = jnp.ravel(x).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block if n > block else 0
+    padded = jnp.pad(flat, (0, pad)) if pad else flat
+    if padded.shape[0] <= block:
+        out = pl.pallas_call(
+            _stats_kernel,
+            out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+            grid=(1,),
+            in_specs=[pl.BlockSpec((padded.shape[0],), lambda i: (0,))],
+            out_specs=pl.BlockSpec((3,), lambda i: (0,)),
+            interpret=True,
+        )(padded)
+    else:
+        grid = padded.shape[0] // block
+        out = pl.pallas_call(
+            _stats_kernel,
+            out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+            grid=(grid,),
+            in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((3,), lambda i: (0,)),
+            interpret=True,
+        )(padded)
+    # all-zero guard: max' of an empty set is -inf → report 0
+    s, m, cnt = out[0], out[1], out[2]
+    m = jnp.where(cnt > 0, m, 0.0)
+    return jnp.stack([s, m, cnt])
+
+
+def quantize_s2fp8_pallas(x: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Full Eq. 5 truncation via the two Pallas passes."""
+    shape = x.shape
+    flat = jnp.ravel(x).astype(jnp.float32)
+    n = flat.shape[0]
+
+    s, m, cnt = (v for v in stats_pallas(flat, block))
+    mu = s / jnp.maximum(cnt, 1.0)
+    spread = jnp.maximum(m - mu, MIN_SPREAD)
+    alpha = jnp.where(cnt > 0, TARGET_MAX_LOG2 / spread, 1.0)
+    beta = jnp.where(cnt > 0, -alpha * mu, 0.0)
+    ab = jnp.stack([alpha, beta])
+
+    pad = (-n) % block if n > block else 0
+    padded = jnp.pad(flat, (0, pad)) if pad else flat
+    if padded.shape[0] <= block:
+        out = pl.pallas_call(
+            _apply_kernel,
+            out_shape=jax.ShapeDtypeStruct(padded.shape, jnp.float32),
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((padded.shape[0],), lambda i: (0,)),
+                pl.BlockSpec((2,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((padded.shape[0],), lambda i: (0,)),
+            interpret=True,
+        )(padded, ab)
+    else:
+        grid = padded.shape[0] // block
+        out = pl.pallas_call(
+            _apply_kernel,
+            out_shape=jax.ShapeDtypeStruct(padded.shape, jnp.float32),
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((block,), lambda i: (i,)),
+                pl.BlockSpec((2,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+            interpret=True,
+        )(padded, ab)
+    return out[:n].reshape(shape)

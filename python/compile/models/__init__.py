@@ -1,0 +1,17 @@
+"""Layer-2 model zoo — the topologies of the paper's evaluation (§4):
+
+  * mlp         — quickstart classifier (not in the paper; smallest useful
+                  end-to-end demonstration of the format)
+  * resnet      — CIFAR-style residual networks (§4.2, Tables 1–2): depth
+                  6n+2, BatchNorm, SGD+momentum; per-layer format overrides
+                  implement the "Ex" first/last-layer-FP32 baseline
+  * transformer — Transformer tiny (§4.3, Table 3): 2 layers, d_model 128,
+                  d_ff 512, Adam
+  * ncf         — Neural Collaborative Filtering / NeuMF (§4.4, Table 4):
+                  GMF + MLP towers over user/item embeddings, Adam
+
+Each module exposes a config dataclass, ``init(key, hp)`` returning
+``(params, state)`` and a loss/apply API consumed by ``compile.train``.
+"""
+
+from . import mlp, ncf, resnet, transformer  # noqa: F401

@@ -1,0 +1,45 @@
+"""Quickstart MLP classifier: Dense→ReLU stack with quantized GEMMs."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..formats import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    d_in: int = 256
+    hidden: tuple = (128, 64)
+    classes: int = 10
+
+
+def init(key, hp: Config):
+    dims = (hp.d_in,) + tuple(hp.hidden) + (hp.classes,)
+    keys = jax.random.split(key, len(dims) - 1)
+    params = {f"fc{i}": nn.dense_init(keys[i], dims[i], dims[i + 1]) for i in range(len(dims) - 1)}
+    return params, {}  # no BN state
+
+
+def apply(params, state, x, cfg: QuantConfig, key=None, tap=None, train=True):
+    del train
+    n = len(params)
+    keys = jax.random.split(key, n) if key is not None else [None] * n
+    h = x
+    for i in range(n):
+        last = i == n - 1
+        h = nn.dense_apply(params[f"fc{i}"], h, cfg, keys[i], tap, f"fc{i}", quantize_out=not last)
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h, state
+
+
+def loss_fn(params, state, batch, cfg, key=None, tap=None):
+    x, y = batch["x"], batch["y"]
+    logits, new_state = apply(params, state, x, cfg, key, tap, train=True)
+    loss = nn.softmax_xent(logits, y)
+    return loss, {"state": new_state, "logits": logits}

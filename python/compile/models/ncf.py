@@ -1,0 +1,77 @@
+"""Neural Collaborative Filtering / NeuMF (paper §4.4, He et al. 2017).
+
+GMF path: element-wise product of user/item embeddings.
+MLP path: concat of a second pair of embeddings through a Dense tower.
+Head: Dense on [gmf, mlp] → 1 logit, trained with BCE on implicit feedback
+(1 positive + sampled negatives), Adam, "8 predictive factors" as the paper.
+
+Embedding look-ups and all matmuls are quantization sites (§4.4: "We
+simulate Matrix-Multiplications and look-ups from the embeddings in
+S2FP8"). Evaluation scores 1 positive + 99 negatives per user; the rust
+coordinator computes HR@10 / NDCG@10 from the returned scores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..formats import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    n_users: int = 512
+    n_items: int = 1024
+    factors: int = 8  # paper's "8 predictive factors" (GMF dim)
+    mlp_dim: int = 16  # MLP-path embedding dim
+    mlp_layers: tuple = (32, 16, 8)
+
+
+def init(key, hp: Config):
+    keys = iter(jax.random.split(key, 6 + len(hp.mlp_layers)))
+    params = {
+        "gmf_user": nn.embedding_init(next(keys), hp.n_users, hp.factors, std=0.01),
+        "gmf_item": nn.embedding_init(next(keys), hp.n_items, hp.factors, std=0.01),
+        "mlp_user": nn.embedding_init(next(keys), hp.n_users, hp.mlp_dim, std=0.01),
+        "mlp_item": nn.embedding_init(next(keys), hp.n_items, hp.mlp_dim, std=0.01),
+    }
+    d = 2 * hp.mlp_dim
+    for i, w in enumerate(hp.mlp_layers):
+        params[f"mlp{i}"] = nn.dense_init(next(keys), d, w)
+        d = w
+    params["head"] = nn.dense_init(next(keys), hp.factors + d, 1)
+    return params, {}
+
+
+def score(params, user, item, hp: Config, cfg: QuantConfig, key=None, tap=None):
+    """user, item: (B,) int32 → logits (B,)."""
+    n_keys = 5 + len(hp.mlp_layers)
+    keys = iter(jax.random.split(key, n_keys)) if key is not None else iter([None] * n_keys)
+    gu = nn.embedding_apply(params["gmf_user"], user, cfg, next(keys), tap, "gmf_user")
+    gi = nn.embedding_apply(params["gmf_item"], item, cfg, next(keys), tap, "gmf_item")
+    gmf = gu * gi
+    mu = nn.embedding_apply(params["mlp_user"], user, cfg, next(keys), tap, "mlp_user")
+    mi = nn.embedding_apply(params["mlp_item"], item, cfg, next(keys), tap, "mlp_item")
+    h = jnp.concatenate([mu, mi], axis=-1)
+    for i in range(len(hp.mlp_layers)):
+        h = nn.dense_apply(params[f"mlp{i}"], h, cfg, next(keys), tap, f"mlp{i}")
+        h = jax.nn.relu(h)
+    both = jnp.concatenate([gmf, h], axis=-1)
+    logit = nn.dense_apply(params["head"], both, cfg, next(keys), tap, "head", quantize_out=False)
+    return logit[:, 0]
+
+
+def apply(params, state, batch, hp: Config, cfg: QuantConfig, key=None, tap=None, train=True):
+    del train
+    logits = score(params, batch["user"], batch["item"], hp, cfg, key, tap)
+    return logits, state
+
+
+def loss_fn(params, state, batch, hp: Config, cfg, key=None, tap=None):
+    logits, new_state = apply(params, state, batch, hp, cfg, key, tap)
+    loss = nn.sigmoid_bce(logits, batch["label"])
+    return loss, {"state": new_state, "logits": logits}

@@ -1,0 +1,113 @@
+"""CIFAR-style residual networks (paper §4.2, He et al. 2016).
+
+Depth 6n+2 with three stages of widths (w, 2w, 4w) and n basic blocks per
+stage; identity shortcuts with 1×1 projection on downsampling. BatchNorm
+after every conv; global average pool + dense head.
+
+Per-layer format overrides implement the baselines of Table 2:
+``exempt_first_last=True`` keeps the stem conv and the classifier dense in
+FP32 while the body is quantized — the "Ex" recipe required by
+Mellempudi et al. 2019 that S2FP8 renders unnecessary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..formats import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    depth: int = 20  # 6n+2
+    width: int = 16  # channels of the first stage
+    classes: int = 10
+    image: int = 32
+    channels: int = 3
+    exempt_first_last: bool = False  # the "Ex" baseline knob
+
+    @property
+    def n_blocks(self) -> int:
+        assert (self.depth - 2) % 6 == 0, "depth must be 6n+2"
+        return (self.depth - 2) // 6
+
+
+def init(key, hp: Config):
+    n = hp.n_blocks
+    widths = [hp.width, 2 * hp.width, 4 * hp.width]
+    params, state = {}, {}
+    keys = iter(jax.random.split(key, 4 + 6 * n * 3 + 3))
+
+    params["stem"] = nn.conv2d_init(next(keys), 3, 3, hp.channels, hp.width)
+    params["stem_bn"], state["stem_bn"] = nn.batchnorm_init(hp.width)
+
+    c_in = hp.width
+    for s, c_out in enumerate(widths):
+        for b in range(n):
+            pre = f"s{s}b{b}"
+            stride = 2 if (s > 0 and b == 0) else 1
+            params[f"{pre}_conv1"] = nn.conv2d_init(next(keys), 3, 3, c_in, c_out)
+            params[f"{pre}_bn1"], state[f"{pre}_bn1"] = nn.batchnorm_init(c_out)
+            params[f"{pre}_conv2"] = nn.conv2d_init(next(keys), 3, 3, c_out, c_out)
+            params[f"{pre}_bn2"], state[f"{pre}_bn2"] = nn.batchnorm_init(c_out)
+            if stride != 1 or c_in != c_out:
+                params[f"{pre}_proj"] = nn.conv2d_init(next(keys), 1, 1, c_in, c_out)
+            c_in = c_out
+
+    params["head"] = nn.dense_init(next(keys), c_in, hp.classes)
+    return params, state
+
+
+def apply(params, state, x, hp: Config, cfg: QuantConfig, key=None, tap=None, train=True):
+    """x: (B, H, W, C) → logits (B, classes). Returns (logits, new_state)."""
+    new_state = {}
+    fp32 = QuantConfig(fmt="fp32")
+    stem_cfg = fp32 if hp.exempt_first_last else cfg
+    head_cfg = fp32 if hp.exempt_first_last else cfg
+    n = hp.n_blocks
+    n_keys = 2 + 6 * n * 3
+    keys = iter(jax.random.split(key, n_keys)) if key is not None else iter([None] * n_keys)
+
+    h = nn.conv2d_apply(params["stem"], x, stem_cfg, key=next(keys), tap=tap, name="stem")
+    h, new_state["stem_bn"] = nn.batchnorm_apply(params["stem_bn"], state["stem_bn"], h, train)
+    h = jax.nn.relu(h)
+
+    for s in range(3):
+        for b in range(n):
+            pre = f"s{s}b{b}"
+            stride = 2 if (s > 0 and b == 0) else 1
+            shortcut = h
+            y = nn.conv2d_apply(
+                params[f"{pre}_conv1"], h, cfg, stride=stride, key=next(keys), tap=tap,
+                name=f"{pre}_conv1",
+            )
+            y, new_state[f"{pre}_bn1"] = nn.batchnorm_apply(
+                params[f"{pre}_bn1"], state[f"{pre}_bn1"], y, train
+            )
+            y = jax.nn.relu(y)
+            y = nn.conv2d_apply(
+                params[f"{pre}_conv2"], y, cfg, key=next(keys), tap=tap, name=f"{pre}_conv2"
+            )
+            y, new_state[f"{pre}_bn2"] = nn.batchnorm_apply(
+                params[f"{pre}_bn2"], state[f"{pre}_bn2"], y, train
+            )
+            if f"{pre}_proj" in params:
+                shortcut = nn.conv2d_apply(
+                    params[f"{pre}_proj"], h, cfg, stride=stride, key=next(keys), tap=tap,
+                    name=f"{pre}_proj",
+                )
+            h = jax.nn.relu(y + shortcut)
+
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    logits = nn.dense_apply(params["head"], h, head_cfg, next(keys), tap, "head", quantize_out=False)
+    return logits, new_state
+
+
+def loss_fn(params, state, batch, hp: Config, cfg, key=None, tap=None):
+    logits, new_state = apply(params, state, batch["x"], hp, cfg, key, tap, train=True)
+    loss = nn.softmax_xent(logits, batch["y"])
+    return loss, {"state": new_state, "logits": logits}

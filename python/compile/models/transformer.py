@@ -1,0 +1,154 @@
+"""Transformer tiny (paper §4.3): encoder–decoder, 2 layers, d_model 128,
+d_ff 512, trained with Adam on a sequence-transduction task.
+
+The paper trains on IWSLT'15 En-Vi; our offline substitute is a synthetic
+transduction grammar (see rust data/synth_translation.rs) with the same
+model and BLEU pipeline. Greedy decoding runs *inside* the lowered HLO via
+`lax.scan` over target positions, so the rust coordinator gets final token
+ids and computes BLEU itself — python stays off the eval path.
+
+Special tokens: 0 = PAD, 1 = BOS, 2 = EOS.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..formats import QuantConfig
+
+PAD, BOS, EOS = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    vocab: int = 64
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    seq_len: int = 16
+
+
+def _positional(t, d):
+    pos = jnp.arange(t)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def init(key, hp: Config):
+    keys = iter(jax.random.split(key, 4 + hp.n_layers * 16))
+    params = {
+        "src_emb": nn.embedding_init(next(keys), hp.vocab, hp.d_model),
+        "tgt_emb": nn.embedding_init(next(keys), hp.vocab, hp.d_model),
+        "out": nn.dense_init(next(keys), hp.d_model, hp.vocab),
+    }
+    for l in range(hp.n_layers):
+        params[f"enc{l}_attn"] = nn.mha_init(next(keys), hp.d_model)
+        params[f"enc{l}_ln1"] = nn.layernorm_init(hp.d_model)
+        params[f"enc{l}_ff1"] = nn.dense_init(next(keys), hp.d_model, hp.d_ff)
+        params[f"enc{l}_ff2"] = nn.dense_init(next(keys), hp.d_ff, hp.d_model)
+        params[f"enc{l}_ln2"] = nn.layernorm_init(hp.d_model)
+        params[f"dec{l}_self"] = nn.mha_init(next(keys), hp.d_model)
+        params[f"dec{l}_ln1"] = nn.layernorm_init(hp.d_model)
+        params[f"dec{l}_cross"] = nn.mha_init(next(keys), hp.d_model)
+        params[f"dec{l}_ln2"] = nn.layernorm_init(hp.d_model)
+        params[f"dec{l}_ff1"] = nn.dense_init(next(keys), hp.d_model, hp.d_ff)
+        params[f"dec{l}_ff2"] = nn.dense_init(next(keys), hp.d_ff, hp.d_model)
+        params[f"dec{l}_ln3"] = nn.layernorm_init(hp.d_model)
+    return params, {}
+
+
+def _ffn(params, pre, h, hp, cfg, keys, tap):
+    y = nn.dense_apply(params[f"{pre}_ff1"], h, cfg, next(keys), tap, f"{pre}_ff1")
+    y = jax.nn.relu(y)
+    return nn.dense_apply(params[f"{pre}_ff2"], y, cfg, next(keys), tap, f"{pre}_ff2")
+
+
+def encode(params, src, hp: Config, cfg: QuantConfig, key=None, tap=None):
+    """src: (B, T) int32 → (memory (B,T,D), src_mask (B,1,1,T))."""
+    t = src.shape[1]
+    n_keys = 1 + hp.n_layers * 3
+    keys = iter(jax.random.split(key, n_keys)) if key is not None else iter([None] * n_keys)
+    src_mask = (src != PAD).astype(jnp.float32)[:, None, None, :]
+    h = nn.embedding_apply(params["src_emb"], src, cfg, next(keys), tap, "src_emb")
+    h = h * jnp.sqrt(float(hp.d_model)) + _positional(t, hp.d_model)
+    for l in range(hp.n_layers):
+        a = nn.mha_apply(
+            params[f"enc{l}_attn"], h, h, src_mask, hp.n_heads, cfg, next(keys), tap, f"enc{l}_attn"
+        )
+        h = nn.layernorm_apply(params[f"enc{l}_ln1"], h + a)
+        f = _ffn(params, f"enc{l}", h, hp, cfg, keys, tap)
+        h = nn.layernorm_apply(params[f"enc{l}_ln2"], h + f)
+    return h, src_mask
+
+
+def decode(params, memory, src_mask, tgt_in, hp: Config, cfg: QuantConfig, key=None, tap=None):
+    """tgt_in: (B, T) int32 (BOS-shifted) → logits (B, T, V)."""
+    t = tgt_in.shape[1]
+    n_keys = 2 + hp.n_layers * 4
+    keys = iter(jax.random.split(key, n_keys)) if key is not None else iter([None] * n_keys)
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))[None, None, :, :]
+    pad_mask = (tgt_in != PAD).astype(jnp.float32)[:, None, None, :]
+    self_mask = causal * pad_mask
+    h = nn.embedding_apply(params["tgt_emb"], tgt_in, cfg, next(keys), tap, "tgt_emb")
+    h = h * jnp.sqrt(float(hp.d_model)) + _positional(t, hp.d_model)
+    for l in range(hp.n_layers):
+        a = nn.mha_apply(
+            params[f"dec{l}_self"], h, h, self_mask, hp.n_heads, cfg, next(keys), tap,
+            f"dec{l}_self",
+        )
+        h = nn.layernorm_apply(params[f"dec{l}_ln1"], h + a)
+        c = nn.mha_apply(
+            params[f"dec{l}_cross"], h, memory, src_mask, hp.n_heads, cfg, next(keys), tap,
+            f"dec{l}_cross",
+        )
+        h = nn.layernorm_apply(params[f"dec{l}_ln2"], h + c)
+        f = _ffn(params, f"dec{l}", h, hp, cfg, keys, tap)
+        h = nn.layernorm_apply(params[f"dec{l}_ln3"], h + f)
+    return nn.dense_apply(params["out"], h, cfg, next(keys), tap, "out", quantize_out=False)
+
+
+def apply(params, state, batch, hp: Config, cfg: QuantConfig, key=None, tap=None, train=True):
+    del train
+    k1 = k2 = None
+    if key is not None:
+        k1, k2 = jax.random.split(key)
+    memory, src_mask = encode(params, batch["src"], hp, cfg, k1, tap)
+    logits = decode(params, memory, src_mask, batch["tgt_in"], hp, cfg, k2, tap)
+    return logits, state
+
+
+def loss_fn(params, state, batch, hp: Config, cfg, key=None, tap=None):
+    logits, new_state = apply(params, state, batch, hp, cfg, key, tap)
+    mask = (batch["tgt_out"] != PAD).astype(jnp.float32)
+    loss = nn.masked_softmax_xent(logits, batch["tgt_out"], mask)
+    return loss, {"state": new_state, "logits": logits}
+
+
+def greedy_decode(params, src, hp: Config, cfg: QuantConfig):
+    """Greedy autoregressive decode, fully inside the HLO.
+
+    Runs the decoder on the growing BOS-prefixed sequence T times (cheap at
+    T=16); returns (B, T) int32 token ids (EOS/PAD semantics handled by the
+    rust BLEU pipeline).
+    """
+    b = src.shape[0]
+    t = hp.seq_len
+    memory, src_mask = encode(params, src, hp, cfg)
+
+    def step(tokens, i):
+        logits = decode(params, memory, src_mask, tokens, hp, cfg)
+        nxt = jnp.argmax(logits[:, i, :], axis=-1).astype(jnp.int32)
+        tokens = jax.lax.dynamic_update_slice(
+            tokens, nxt[:, None], (jnp.int32(0), i + 1)
+        )
+        return tokens, None
+
+    init_tokens = jnp.full((b, t + 1), PAD, jnp.int32).at[:, 0].set(BOS)
+    tokens, _ = jax.lax.scan(step, init_tokens, jnp.arange(t, dtype=jnp.int32))
+    return tokens[:, 1:]

@@ -1,0 +1,217 @@
+"""From-scratch neural-network layer library (Layer 2).
+
+The offline image ships bare jax (no flax/haiku/optax), so layers are
+implemented functionally: ``init(key, ...) -> params`` returning nested
+dicts, and pure ``apply`` functions. Every matmul/conv routes through
+``qops`` so the paper's truncation sites wrap each GEMM in both passes.
+
+BatchNorm keeps running statistics as *state* (threaded through the train
+step and updated with momentum 0.9), trains on batch statistics, and
+evaluates on the running ones — matching the reference ResNet recipe the
+paper trains.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import qops
+from .formats import QuantConfig
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def he_normal(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def glorot_uniform(key, shape, fan_in, fan_out):
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def normal_init(key, shape, std=0.02):
+    return jax.random.normal(key, shape, jnp.float32) * std
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in, d_out, bias=True):
+    kw, _ = jax.random.split(key)
+    p = {"w": glorot_uniform(kw, (d_in, d_out), d_in, d_out)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_apply(p, x, cfg: QuantConfig, key=None, tap=None, name="dense", quantize_out=True):
+    """y = Q(Q(x) @ Q(w)) + b. The bias add stays FP32 (it is not a GEMM).
+
+    ``quantize_out=False`` skips the output-side truncation — used for the
+    network's *final* layer: per paper §5 the FP32 GEMM result is converted
+    back to S2FP8 only "when needed (e.g. to store back in memory)"; logits
+    feeding the loss (or the serving-side ranking/argmax) are consumed
+    directly from the FP32 accumulator. Re-quantizing them would collapse
+    near-tied scores onto the same grid point and corrupt rankings without
+    modelling any real datapath.
+    """
+    shape = x.shape
+    x2 = x.reshape((-1, shape[-1]))
+    y = qops.qmatmul(x2, p["w"], cfg, key=key, tap=tap, name=name, quantize_out=quantize_out)
+    if "b" in p:
+        y = y + p["b"]
+    return y.reshape(shape[:-1] + (p["w"].shape[1],))
+
+
+# ---------------------------------------------------------------------------
+# Conv2d (NHWC)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_init(key, kh, kw, c_in, c_out):
+    fan_in = kh * kw * c_in
+    return {"w": he_normal(key, (kh, kw, c_in, c_out), fan_in)}
+
+
+def conv2d_apply(p, x, cfg: QuantConfig, stride=1, padding="SAME", key=None, tap=None, name="conv"):
+    return qops.qconv2d(x, p["w"], cfg, stride=stride, padding=padding, key=key, tap=tap, name=name)
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (NHWC, channel-last)
+# ---------------------------------------------------------------------------
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+
+
+def batchnorm_init(c):
+    params = {"gamma": jnp.ones((c,), jnp.float32), "beta": jnp.zeros((c,), jnp.float32)}
+    state = {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
+    return params, state
+
+
+def batchnorm_apply(p, s, x, train: bool):
+    """Returns (y, new_state). Reduction axes = all but channel (last)."""
+    axes = tuple(range(x.ndim - 1))
+    if train:
+        mean = jnp.mean(x, axes)
+        var = jnp.var(x, axes)
+        new_s = {
+            "mean": BN_MOMENTUM * s["mean"] + (1 - BN_MOMENTUM) * mean,
+            "var": BN_MOMENTUM * s["var"] + (1 - BN_MOMENTUM) * var,
+        }
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) * jax.lax.rsqrt(var + BN_EPS) * p["gamma"] + p["beta"]
+    return y, new_s
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+
+def layernorm_init(d):
+    return {"gamma": jnp.ones((d,), jnp.float32), "beta": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_apply(p, x, eps=1e-6):
+    mean = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * p["gamma"] + p["beta"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab, dim, std=None):
+    std = std if std is not None else dim**-0.5
+    return {"table": normal_init(key, (vocab, dim), std)}
+
+
+def embedding_apply(p, ids, cfg: QuantConfig, key=None, tap=None, name="emb"):
+    """Quantized embedding lookup: the paper simulates "look-ups from the
+    embeddings in S2FP8" (§4.4) — the gathered rows pass a truncation site
+    in both directions (so the scatter-add gradient is truncated too)."""
+    out = jnp.take(p["table"], ids, axis=0)
+    return qops.quant_fb(cfg, key, tap, name)(out)
+
+
+# ---------------------------------------------------------------------------
+# Multi-head attention (encoder/decoder, paper §4.3's Transformer tiny)
+# ---------------------------------------------------------------------------
+
+
+def mha_init(key, d_model):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, d_model),
+        "wk": dense_init(ks[1], d_model, d_model),
+        "wv": dense_init(ks[2], d_model, d_model),
+        "wo": dense_init(ks[3], d_model, d_model),
+    }
+
+
+def mha_apply(p, q_in, kv_in, mask, n_heads, cfg: QuantConfig, key=None, tap=None, name="mha"):
+    """mask: broadcastable to (B, H, Tq, Tk); 1 = attend, 0 = blocked."""
+    keys = jax.random.split(key, 4) if key is not None else [None] * 4
+    b, tq, d = q_in.shape
+    tk = kv_in.shape[1]
+    dh = d // n_heads
+
+    def split_heads(x, t):
+        return x.reshape(b, t, n_heads, dh).transpose(0, 2, 1, 3)
+
+    q = split_heads(dense_apply(p["wq"], q_in, cfg, keys[0], tap, f"{name}/q"), tq)
+    k = split_heads(dense_apply(p["wk"], kv_in, cfg, keys[1], tap, f"{name}/k"), tk)
+    v = split_heads(dense_apply(p["wv"], kv_in, cfg, keys[2], tap, f"{name}/v"), tk)
+
+    # attention scores: batched GEMM — quantize operands & output like any
+    # other matmul (the qk^T and attn·V products are the paper's "matrix-
+    # matrix product operations")
+    scores = qops.qmatmul(q, k.transpose(0, 1, 3, 2), cfg, key=keys[3], tap=tap, name=f"{name}/qk")
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.where(mask > 0, scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = qops.qmatmul(attn, v, cfg, key=keys[3], tap=tap, name=f"{name}/av")
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, tq, d)
+    return dense_apply(p["wo"], ctx, cfg, keys[3], tap, f"{name}/o")
+
+
+# ---------------------------------------------------------------------------
+# losses / metrics helpers
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, labels, n_classes=None):
+    """Mean cross-entropy with integer labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def masked_softmax_xent(logits, labels, mask):
+    """Token-level cross-entropy ignoring mask==0 positions (padding)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    tok = -jnp.sum(onehot * logp, axis=-1)
+    return jnp.sum(tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def sigmoid_bce(logits, labels):
+    """Binary cross-entropy on logits (NCF's implicit-feedback loss)."""
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,98 @@
+"""From-scratch optimizers (no optax in the offline image).
+
+Both optimizers keep FP32 master weights and FP32 state — exactly the
+paper's Fig. 4 training procedure ("master weights are kept in FP32 and
+updated during the update step"); quantization only ever happens around the
+GEMMs inside the model.
+
+API: ``opt.init(params) -> state``; ``opt.update(grads, state, params,
+step) -> (new_params, new_state)``. Everything is a pure pytree function so
+it lowers into the AOT train-step HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SgdMomentum:
+    """SGD with (heavy-ball) momentum, the ResNet recipe of paper §4.2.
+
+    lr is supplied per-step (piecewise schedule driven by the rust
+    coordinator), so it is an *input* of the lowered train step.
+    """
+
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(self, grads, state, params, lr, step=None):
+        del step
+        new_state = jax.tree_util.tree_map(
+            lambda g, v, p: self.momentum * v + g + self.weight_decay * p, grads, state, params
+        )
+        new_params = jax.tree_util.tree_map(lambda p, v: p - lr * v, params, new_state)
+        return new_params, new_state
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    """Adam (Kingma & Ba) — the Transformer/NCF recipe of paper §4.3–4.4."""
+
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    def init(self, params):
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(self, grads, state, params, lr, step):
+        """step is the 1-based step count (f32 scalar input of the HLO)."""
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1**step
+        bc2 = 1.0 - b2**step
+
+        new_m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        new_v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return p - lr * mhat / (jnp.sqrt(vhat) + self.eps)
+
+        new_params = jax.tree_util.tree_map(upd, params, new_m, new_v)
+        return new_params, {"m": new_m, "v": new_v}
+
+
+def make(name: str, **kw) -> Any:
+    if name == "sgdm":
+        return SgdMomentum(**kw)
+    if name == "adam":
+        return Adam(**kw)
+    raise ValueError(f"unknown optimizer {name}")
+
+
+def tree_all_finite(tree) -> jnp.ndarray:
+    """Scalar bool: every element of every leaf is finite (the grad-health
+    flag the rust loss-scale controller consumes)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    flags = [jnp.all(jnp.isfinite(l)) for l in leaves]
+    return jnp.stack(flags).all() if flags else jnp.array(True)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda l: l * s, tree)
+
+
+def tree_select(pred, a, b):
+    """Per-leaf jnp.where(pred, a, b) — used to skip updates on non-finite
+    gradients (dynamic loss scaling semantics)."""
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)

@@ -1,0 +1,194 @@
+"""Quantization-inserted ops — the paper's simulation methodology (§4.1):
+
+    "We simulated S2FP8 by inserting appropriate truncation function
+     throughout the network, before and after every convolution and
+     matrix-matrix product operations, during both the forward and
+     backward passes."
+
+`quant_fb(cfg)` builds a custom-vjp function that truncates its input on
+the forward pass and truncates the incoming cotangent on the backward
+pass. Composing it as
+
+    out = quant_fb(matmul(quant_fb(a), quant_fb(b)))
+
+yields exactly the paper's scheme in *both* directions:
+
+  forward : out = Q( Q(a) @ Q(b) )                       (FP32 accumulate)
+  backward: da  = Q( Q(g) @ Q(b)ᵀ ),  db = Q( Q(a)ᵀ @ Q(g) )
+
+because the outer site truncates the gradient entering the GEMM and the
+inner sites truncate the gradients leaving it. The same wrapper works for
+convolutions (XLA differentiates the conv; every operand/cotangent passes
+through a quantization site). Master weights and the optimizer update stay
+FP32 (paper Fig. 4).
+
+Stochastic rounding threads a PRNG key through the site; the backward pass
+uses `fold_in(key, 1)` so forward/backward draw independent bits.
+
+Per-site statistics (μ, m, α, β — paper Fig. 5) are collected through a
+trace-time `StatsTap` registry: when `cfg.collect_stats` is set, each
+*named* site appends its forward-pass statistics to the tap, and the train
+step returns them stacked as an auxiliary output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import formats
+from .formats import QuantConfig
+
+
+class StatsTap:
+    """Trace-time registry of per-site quantization statistics.
+
+    Sites call `record(name, stats4)` during tracing; the builder collects
+    `stacked()` as an aux output of the lowered function. Order is the
+    (deterministic) trace order of the sites.
+    """
+
+    def __init__(self):
+        self.names: list[str] = []
+        self.values: list[jnp.ndarray] = []
+
+    def record(self, name: str, stats4: jnp.ndarray):
+        self.names.append(name)
+        self.values.append(stats4)
+
+    def stacked(self) -> jnp.ndarray:
+        if not self.values:
+            return jnp.zeros((0, 4), jnp.float32)
+        return jnp.stack(self.values)
+
+
+def _quant_with_stats(x, cfg: QuantConfig, key, tap: StatsTap | None, name: str):
+    """Forward truncation + optional stats recording."""
+    if cfg.is_noop:
+        return x
+    if cfg.fmt == "s2fp8" and tap is not None:
+        out, stats = formats.truncate_s2fp8(x, return_stats=True)
+        tap.record(name, stats)
+        return out
+    return formats.quantize(x, cfg, key=key)
+
+
+def quant_fb(
+    cfg: QuantConfig,
+    key=None,
+    tap: StatsTap | None = None,
+    name: str = "site",
+):
+    """Build the forward+backward truncation site for one tensor.
+
+    Returns a unary function. With `cfg.fmt == 'fp32'` it is the identity
+    (and introduces nothing into the graph).
+    """
+    if cfg.is_noop:
+        return lambda x: x
+
+    # No key ⇒ deterministic context (e.g. eval of an SR-trained model):
+    # fall back to RNE, the standard inference behaviour.
+    if cfg.stochastic and key is None:
+        cfg = dataclasses.replace(cfg, stochastic=False)
+
+    fwd_key = bwd_key = None
+    if cfg.stochastic:
+        fwd_key = key
+        bwd_key = jax.random.fold_in(key, 1)
+
+    @jax.custom_vjp
+    def q(x):
+        return _quant_with_stats(x, cfg, fwd_key, tap, name)
+
+    def q_fwd(x):
+        return q(x), None
+
+    def q_bwd(_, g):
+        # Gradients are truncated with the same format; stats of gradient
+        # tensors are tapped under a "/grad" suffix when collecting.
+        gname = name + "/grad"
+        if cfg.fmt == "s2fp8" and tap is not None:
+            out, stats = formats.truncate_s2fp8(g, return_stats=True)
+            tap.record(gname, stats)
+            return (out,)
+        return (formats.quantize(g, cfg, key=bwd_key),)
+
+    q.defvjp(q_fwd, q_bwd)
+    return q
+
+
+@jax.custom_vjp
+def _pallas_qmm(a, b):
+    """Layer-1 fused quantized GEMM. `pallas_call` does not support
+    reverse-mode autodiff, so the backward GEMMs are expressed directly
+    (the surrounding quant_fb sites still truncate all gradients, and the
+    operands reaching here are already truncated — semantics identical to
+    the jnp path)."""
+    from .kernels import qmatmul as qk
+
+    return qk.qmatmul_fp8_pallas(a, b)
+
+
+def _pallas_qmm_fwd(a, b):
+    return _pallas_qmm(a, b), (a, b)
+
+
+def _pallas_qmm_bwd(res, g):
+    a, b = res
+    da = jnp.matmul(g, b.T, precision="highest")
+    db = jnp.matmul(a.T, g, precision="highest")
+    return da, db
+
+
+_pallas_qmm.defvjp(_pallas_qmm_fwd, _pallas_qmm_bwd)
+
+
+def qmatmul(a, b, cfg: QuantConfig, key=None, tap=None, name="mm", quantize_out=True):
+    """Quantized matrix product: Q(Q(a) @ Q(b)) fwd, quantized grads bwd."""
+    if cfg.is_noop:
+        return jnp.matmul(a, b, precision="highest")
+    k1 = k2 = k3 = None
+    if cfg.stochastic and key is not None:
+        k1, k2, k3 = jax.random.split(key, 3)
+    qa = quant_fb(cfg, k1, tap, f"{name}/a")(a)
+    qb = quant_fb(cfg, k2, tap, f"{name}/b")(b)
+    if cfg.use_pallas and a.ndim == 2 and b.ndim == 2 and cfg.fmt == "fp8" and not cfg.stochastic:
+        # Layer-1 fused path: quantization happens inside the Pallas GEMM;
+        # the outer sites above still handle the gradient direction.
+        out = _pallas_qmm(qa, qb)
+    else:
+        out = jnp.matmul(qa, qb, precision="highest")
+    if not quantize_out:
+        return out
+    return quant_fb(cfg, k3, tap, f"{name}/out")(out)
+
+
+def qconv2d(x, w, cfg: QuantConfig, stride=1, padding="SAME", key=None, tap=None, name="conv"):
+    """Quantized NHWC conv: Q(conv(Q(x), Q(w))) with quantized gradients.
+
+    x: (N, H, W, Cin), w: (KH, KW, Cin, Cout).
+    """
+    strides = (stride, stride) if isinstance(stride, int) else stride
+
+    def conv(xq, wq):
+        return jax.lax.conv_general_dilated(
+            xq,
+            wq,
+            window_strides=strides,
+            padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            precision=jax.lax.Precision.HIGHEST,
+        )
+
+    if cfg.is_noop:
+        return conv(x, w)
+    k1 = k2 = k3 = None
+    if cfg.stochastic and key is not None:
+        k1, k2, k3 = jax.random.split(key, 3)
+    xq = quant_fb(cfg, k1, tap, f"{name}/x")(x)
+    wq = quant_fb(cfg, k2, tap, f"{name}/w")(w)
+    out = conv(xq, wq)
+    return quant_fb(cfg, k3, tap, f"{name}/out")(out)

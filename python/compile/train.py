@@ -1,0 +1,238 @@
+"""Layer-2 step builders: the pure functions that get AOT-lowered.
+
+``build_train_step`` assembles, for one (model, format, optimizer) triple,
+the function
+
+  (params, opt_state, model_state, batch, loss_scale, lr, step, seed)
+      → (new_params, new_opt_state, new_model_state,
+         loss, grad_finite, [site_stats, grad_stats])
+
+implementing the paper's Fig. 4 procedure: quantized fwd/bwd GEMMs (via
+qops inside the model), FP32 master weights, FP32 optimizer update, with
+
+  * **loss scaling as a runtime input**: the loss is multiplied by
+    ``loss_scale`` before differentiation and gradients divided by it after
+    (paper Eq. 6) — the FP8 baselines' constant/exponential/dynamic
+    schedules are decided step-by-step by the *rust* controller, so one
+    artifact serves every schedule (S2FP8 runs simply keep it at 1).
+  * **non-finite-gradient skipping**: if any gradient element is NaN/Inf,
+    the whole update (params, optimizer state, BN state) is skipped and the
+    ``grad_finite`` flag tells the controller to back off its scale.
+  * optional **statistics taps** (Fig. 1/5): per-site forward statistics
+    and per-parameter gradient statistics, each a ``[μ, m, α, β,
+    frac_below_fp8, frac_above_fp8]`` row.
+
+Everything is a pure pytree function; ``compile.aot`` lowers it once to
+HLO text and records the flattened input/output layout in a manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import formats, optim, qops
+from .formats import QuantConfig
+from .models import mlp, ncf, resnet, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Everything aot.py needs to build artifacts for one model config."""
+
+    name: str
+    hp: Any
+    init: Callable  # (key, hp) -> (params, state)
+    loss_fn: Callable  # (params, state, batch, hp, cfg, key, tap) -> (loss, aux)
+    batch_spec: dict  # input name -> (shape-without-batch, dtype)
+    optimizer: str  # 'sgdm' | 'adam'
+    eval_fn: Callable | None = None  # (params, state, batch, hp, cfg) -> outputs
+    decode_fn: Callable | None = None  # transformer greedy decode
+
+
+def make_spec(model: str, **kw) -> ModelSpec:
+    """Model registry. Names: mlp, resnet{8,14,20,...}[-c<classes>][-ex],
+    transformer, ncf (hyperparameters overridable via kw)."""
+    if model == "mlp":
+        hp = mlp.Config(**kw)
+        return ModelSpec(
+            name="mlp",
+            hp=hp,
+            init=lambda key, h=hp: mlp.init(key, h),
+            loss_fn=lambda p, s, b, h, c, k, t: mlp.loss_fn(p, s, b, c, k, t),
+            batch_spec={"x": ((hp.d_in,), jnp.float32), "y": ((), jnp.int32)},
+            optimizer="sgdm",
+            eval_fn=lambda p, s, b, h, c: mlp.apply(p, s, b["x"], c, train=False)[0],
+        )
+    if model.startswith("resnet"):
+        body = model[len("resnet"):]
+        ex = body.endswith("-ex")
+        if ex:
+            body = body[: -len("-ex")]
+        if "-c" in body:
+            depth_s, classes_s = body.split("-c")
+            depth, classes = int(depth_s), int(classes_s)
+        else:
+            depth, classes = int(body), 10
+        cfg_kw = {"depth": depth, "classes": classes, "exempt_first_last": ex}
+        cfg_kw.update(kw)  # explicit kwargs (tests) override name-derived ones
+        hp = resnet.Config(**cfg_kw)
+        return ModelSpec(
+            name=model,
+            hp=hp,
+            init=lambda key, h=hp: resnet.init(key, h),
+            loss_fn=resnet.loss_fn,
+            batch_spec={
+                "x": ((hp.image, hp.image, hp.channels), jnp.float32),
+                "y": ((), jnp.int32),
+            },
+            optimizer="sgdm",
+            eval_fn=lambda p, s, b, h, c: resnet.apply(p, s, b["x"], h, c, train=False)[0],
+        )
+    if model == "transformer":
+        hp = transformer.Config(**kw)
+        t = hp.seq_len
+        return ModelSpec(
+            name="transformer",
+            hp=hp,
+            init=lambda key, h=hp: transformer.init(key, h),
+            loss_fn=transformer.loss_fn,
+            batch_spec={
+                "src": ((t,), jnp.int32),
+                "tgt_in": ((t,), jnp.int32),
+                "tgt_out": ((t,), jnp.int32),
+            },
+            optimizer="adam",
+            eval_fn=lambda p, s, b, h, c: transformer.apply(p, s, b, h, c, train=False)[0],
+            decode_fn=lambda p, src, h, c: transformer.greedy_decode(p, src, h, c),
+        )
+    if model == "ncf":
+        hp = ncf.Config(**kw)
+        return ModelSpec(
+            name="ncf",
+            hp=hp,
+            init=lambda key, h=hp: ncf.init(key, h),
+            loss_fn=ncf.loss_fn,
+            batch_spec={
+                "user": ((), jnp.int32),
+                "item": ((), jnp.int32),
+                "label": ((), jnp.float32),
+            },
+            optimizer="adam",
+            eval_fn=lambda p, s, b, h, c: ncf.score(p, b["user"], b["item"], h, c),
+        )
+    raise ValueError(f"unknown model '{model}'")
+
+
+def build_train_step(spec: ModelSpec, cfg: QuantConfig, grad_stats: bool = False):
+    """The pure train-step function (see module docstring for semantics).
+
+    ``grad_stats=True`` adds per-parameter gradient statistics (cheap: one
+    reduction per grad leaf) without the per-site forward taps —
+    ``cfg.collect_stats`` adds both. The forward taps triple the
+    quantization-site op count, which XLA 0.5.1's superlinear compile time
+    cannot afford on the big models (DESIGN.md §Perf/L2); Fig. 1/Fig. 5
+    track *tensor distributions over training*, which the gradient/weight
+    statistics capture.
+    """
+    opt = optim.make(spec.optimizer)
+    loss_fn = spec.loss_fn
+    collect = cfg.collect_stats
+    want_grad_stats = grad_stats or collect
+
+    def train_step(params, opt_state, model_state, batch, loss_scale, lr, step, seed):
+        key = jax.random.PRNGKey(seed) if cfg.stochastic else None
+        tap = qops.StatsTap() if collect else None
+
+        def scaled_loss(p):
+            loss, aux = loss_fn(p, model_state, batch, spec.hp, cfg, key, tap)
+            return loss * loss_scale, (loss, aux)
+
+        grads, (loss, aux) = jax.grad(scaled_loss, has_aux=True)(params)
+        finite = optim.tree_all_finite(grads)
+        inv = jnp.where(finite, 1.0 / loss_scale, 0.0)
+        grads = optim.tree_scale(grads, inv)
+
+        new_params, new_opt = opt.update(grads, opt_state, params, lr, step)
+        new_params = optim.tree_select(finite, new_params, params)
+        new_opt = optim.tree_select(finite, new_opt, opt_state)
+        new_state = optim.tree_select(finite, aux["state"], model_state)
+
+        outputs = {
+            "params": new_params,
+            "opt_state": new_opt,
+            "model_state": new_state,
+            "loss": loss,
+            "grad_finite": finite.astype(jnp.float32),
+        }
+        if collect:
+            outputs["site_stats"] = tap.stacked()
+        if want_grad_stats:
+            gleaves = jax.tree_util.tree_leaves(grads)
+            outputs["grad_stats"] = jnp.stack([formats.site_stats(g) for g in gleaves])
+        return outputs
+
+    return train_step
+
+
+def build_eval_step(spec: ModelSpec, cfg: QuantConfig):
+    """Inference outputs (logits/scores) on a batch with train=False
+    statistics. Quantization still applies (the paper evaluates the
+    quantized network)."""
+
+    def eval_step(params, model_state, batch):
+        return spec.eval_fn(params, model_state, batch, spec.hp, cfg)
+
+    return eval_step
+
+
+def build_decode_step(spec: ModelSpec, cfg: QuantConfig):
+    assert spec.decode_fn is not None
+
+    def decode_step(params, src):
+        return spec.decode_fn(params, src, spec.hp, cfg)
+
+    return decode_step
+
+
+def stats_site_names(spec: ModelSpec, cfg: QuantConfig, batch_size: int) -> dict:
+    """Trace once (abstractly) to learn the tap site order and the grad
+    leaf order — recorded in the manifest so rust can label Fig. 5 curves."""
+    if not cfg.collect_stats:
+        return {"site_stats": [], "grad_stats": []}
+    key = jax.random.PRNGKey(0)
+    params, state = spec.init(key)
+    batch = make_example_batch(spec, batch_size)
+    tap = qops.StatsTap()
+
+    def scaled(p):
+        loss, aux = spec.loss_fn(p, state, batch, spec.hp, cfg, None, tap)
+        return loss, (loss, aux)
+
+    jax.eval_shape(lambda p: jax.grad(scaled, has_aux=True)(p), params)
+    grad_names = [
+        "/".join(str(getattr(k, "key", k)) for k in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(params)[0]
+    ]
+    return {"site_stats": list(tap.names), "grad_stats": grad_names}
+
+
+def grad_leaf_names(spec: ModelSpec) -> list:
+    """Flattened parameter-leaf names ("params/..."), the row labels of the
+    grad_stats aux output."""
+    params, _ = spec.init(jax.random.PRNGKey(0))
+    return [
+        "params/" + "/".join(str(getattr(k, "key", k)) for k in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(params)[0]
+    ]
+
+
+def make_example_batch(spec: ModelSpec, batch_size: int) -> dict:
+    """Zero-filled example batch matching the batch_spec (for lowering)."""
+    return {
+        name: jnp.zeros((batch_size,) + tuple(shape), dtype)
+        for name, (shape, dtype) in spec.batch_spec.items()
+    }

@@ -1,0 +1,150 @@
+//! §Perf bench — the performance-optimized hot paths, measured:
+//!
+//! * L3 host quantization throughput: FP8 encode/truncate and S2FP8
+//!   compress/decompress, single- and multi-threaded (scales with the
+//!   24-core box; the checkpoint writer and format analysis use these).
+//! * L3 coordinator overhead: literal conversion + slot binding vs device
+//!   execution for the MLP and ResNet-8 train steps (the trainer's `prep`
+//!   must stay ≪ `device`).
+//! * L1-via-runtime kernel latency: the Pallas-derived `kernel_fp8_quant`
+//!   / `kernel_s2fp8_quant` / `kernel_qmatmul` programs end to end.
+//!
+//! Results are recorded in EXPERIMENTS.md §Perf (before/after log).
+
+use std::time::Duration;
+
+use s2fp8::bench::harness::bench_fn;
+use s2fp8::formats::{fp8, s2fp8 as s2};
+use s2fp8::runtime::{Artifact, HostValue, Runtime};
+use s2fp8::util::rng::{Pcg32, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let budget = Duration::from_millis(400);
+    let n = 1 << 20; // 1M elements = 4 MiB f32
+    let mut rng = Pcg32::new(42, 0);
+    let xs: Vec<f32> = (0..n).map(|_| rng.next_lognormal(-6.0, 4.0)).collect();
+    println!("== L3 host quantization (1M elements) ==");
+
+    let r = bench_fn("fp8::truncate_slice (1 thread)", 2, 5, budget, Some(n as f64), || {
+        let mut v = xs.clone();
+        fp8::truncate_slice(&mut v);
+        std::hint::black_box(&v);
+    });
+    println!("{}", r.summary());
+
+    let r = bench_fn("fp8::encode_slice (1 thread)", 2, 5, budget, Some(n as f64), || {
+        std::hint::black_box(fp8::encode_slice(&xs));
+    });
+    println!("{}", r.summary());
+
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(8).min(16);
+    let r = bench_fn(
+        &format!("fp8::encode ({threads} threads)"),
+        2,
+        5,
+        budget,
+        Some(n as f64),
+        || {
+            let chunk = xs.len().div_ceil(threads);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = xs
+                    .chunks(chunk)
+                    .map(|c| s.spawn(move || fp8::encode_slice(c)))
+                    .collect();
+                for h in handles {
+                    std::hint::black_box(h.join().unwrap());
+                }
+            });
+        },
+    );
+    println!("{}", r.summary());
+
+    let r = bench_fn("s2fp8::compress (fit+encode)", 2, 5, budget, Some(n as f64), || {
+        std::hint::black_box(s2::compress(&xs));
+    });
+    println!("{}", r.summary());
+    let compressed = s2::compress(&xs);
+    let r = bench_fn("s2fp8::decompress", 2, 5, budget, Some(n as f64), || {
+        std::hint::black_box(s2::decompress(&compressed));
+    });
+    println!("{}", r.summary());
+
+    let r = bench_fn("s2fp8::stats (Eq. 3 pass)", 2, 5, budget, Some(n as f64), || {
+        std::hint::black_box(s2::stats(&xs));
+    });
+    println!("{}", r.summary());
+
+    // ---- runtime kernel latency ------------------------------------------
+    println!("\n== L1 kernels through the PJRT runtime ==");
+    let dir = std::env::var("S2FP8_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = Runtime::cpu()?;
+    for name in ["kernel_fp8_quant", "kernel_s2fp8_quant"] {
+        let exe = rt.load(&dir, name)?;
+        let kn = exe.manifest.inputs[0].element_count();
+        let input = HostValue::f32(vec![kn], xs[..kn].to_vec());
+        let r = bench_fn(name, 3, 10, budget, Some(kn as f64), || {
+            std::hint::black_box(exe.run1(std::slice::from_ref(&input)).unwrap());
+        });
+        println!("{}", r.summary());
+    }
+    {
+        let exe = rt.load(&dir, "kernel_qmatmul")?;
+        let (m, k) = (exe.manifest.inputs[0].shape[0], exe.manifest.inputs[0].shape[1]);
+        let nn = exe.manifest.inputs[1].shape[1];
+        let a = HostValue::f32(vec![m, k], xs[..m * k].to_vec());
+        let b = HostValue::f32(vec![k, nn], xs[..k * nn].to_vec());
+        let flops = 2.0 * m as f64 * k as f64 * nn as f64;
+        let r = bench_fn("kernel_qmatmul (flops/s)", 3, 10, budget, Some(flops), || {
+            std::hint::black_box(exe.run1(&[a.clone(), b.clone()]).unwrap());
+        });
+        println!("{}", r.summary());
+    }
+
+    // ---- trainer step latency + coordinator overhead ---------------------
+    println!("\n== L3 train-step latency (prep/device/post attribution) ==");
+    for name in ["mlp_s2fp8_train", "resnet8_s2fp8_train"] {
+        let art = Artifact::load(&dir, name)?;
+        let mut trainer = s2fp8::coordinator::trainer::Trainer::new(&rt, &art)?;
+        let man = trainer.exe.manifest.clone();
+        let batch_names = trainer.batch_slot_names().into_iter().map(String::from).collect::<Vec<_>>();
+        let mut brng = Pcg32::new(1, 1);
+        let batch: Vec<HostValue> = batch_names
+            .iter()
+            .map(|bn| {
+                let spec = &man.inputs[man.input_index(bn).unwrap()];
+                match spec.dtype {
+                    s2fp8::runtime::Dtype::F32 => {
+                        let count = spec.element_count();
+                        HostValue::f32(
+                            spec.shape.clone(),
+                            (0..count).map(|_| brng.next_normal()).collect(),
+                        )
+                    }
+                    s2fp8::runtime::Dtype::I32 => {
+                        let count = spec.element_count();
+                        HostValue::i32(
+                            spec.shape.clone(),
+                            (0..count).map(|_| brng.next_below(10) as i32).collect(),
+                        )
+                    }
+                }
+            })
+            .collect();
+        let mut step = 0usize;
+        let r = bench_fn(name, 2, 5, budget, None, || {
+            step += 1;
+            std::hint::black_box(trainer.step(&batch, 1.0, 0.01, step, false).unwrap());
+        });
+        println!("{}", r.summary());
+        let prep = trainer.profiler.total("prep").as_secs_f64();
+        let device = trainer.profiler.total("device").as_secs_f64();
+        let post = trainer.profiler.total("post").as_secs_f64();
+        println!(
+            "    coordinator overhead: prep {:.2}% post {:.2}% (device {:.1}ms/step)",
+            100.0 * prep / (prep + device + post),
+            100.0 * post / (prep + device + post),
+            1e3 * device / step as f64,
+        );
+    }
+    Ok(())
+}

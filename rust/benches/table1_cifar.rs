@@ -1,0 +1,72 @@
+//! **Paper Table 1** — validation accuracy on CIFAR-10 with
+//! ResNet-20/34/50, comparing FP32 / S2FP8 / FP8 / FP8+LS(100).
+//!
+//! Scaled reproduction (DESIGN.md "Substitutions"): ResNet-8/14/20
+//! (width 8) on the synthetic CIFAR substitute, a few hundred steps with
+//! the paper's piecewise-decay SGD recipe. The claim under test is the
+//! *shape*: S2FP8 ≈ FP32 with zero knobs; vanilla FP8 lands far below;
+//! FP8 recovers only with tuned loss scaling.
+//!
+//! Also emits the per-run loss/accuracy curves (Fig. 6-left/Fig. A2
+//! analogue for this dataset) under `runs/table1_cifar/`.
+
+use s2fp8::bench::paper::{self, resnet_lr, Row};
+use s2fp8::bench::report::{pct_or_nan, Table};
+use s2fp8::config::experiment::DatasetKind;
+use s2fp8::coordinator::loss_scale::LossScalePolicy;
+use s2fp8::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let bench = "table1_cifar";
+    let steps = paper::steps(300);
+    let rt = Runtime::cpu()?;
+
+    let mut table = Table::new(
+        &format!("Table 1 — synthetic-CIFAR top-1 % ({steps} steps, width-8 ResNets)"),
+        &["CIFAR-10 (synthetic)", "FP32", "S2FP8", "Δ", "FP8", "FP8+LS(100)"],
+    );
+
+    for depth in [8usize, 14, 20] {
+        let rows = [
+            Row::new("FP32", &format!("resnet{depth}_fp32"), LossScalePolicy::None),
+            Row::new("S2FP8", &format!("resnet{depth}_s2fp8"), LossScalePolicy::None),
+            Row::new("FP8", &format!("resnet{depth}_fp8"), LossScalePolicy::None),
+            Row::new(
+                "FP8+LS(100)",
+                &format!("resnet{depth}_fp8"),
+                LossScalePolicy::Constant(100.0),
+            ),
+        ];
+        let mut metrics = Vec::new();
+        for row in &rows {
+            let out = paper::run_row(
+                &rt,
+                bench,
+                &Row::new(&format!("r{depth}-{}", row.label), &row.artifact, row.policy.clone()),
+                DatasetKind::Image,
+                steps,
+                128,
+                resnet_lr(steps),
+                |cfg| {
+                    cfg.n_train = 5120;
+                    cfg.n_test = 1024;
+                    cfg.eval_every = (steps / 3).max(1);
+                },
+            )?;
+            metrics.push(if out.diverged { f64::NAN } else { out.final_metric });
+        }
+        table.row(vec![
+            format!("ResNet-{depth}"),
+            pct_or_nan(metrics[0], metrics[0].is_nan()),
+            pct_or_nan(metrics[1], metrics[1].is_nan()),
+            paper::delta(metrics[0], metrics[1]),
+            pct_or_nan(metrics[2], metrics[2].is_nan()),
+            pct_or_nan(metrics[3], metrics[3].is_nan()),
+        ]);
+    }
+
+    table.print();
+    table.save(paper::out_dir(bench).join("table1.md"))?;
+    println!("curves per run under runs/{bench}/*/curve.csv (Fig. 6/A2 analogues)");
+    Ok(())
+}

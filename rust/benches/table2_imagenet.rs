@@ -1,0 +1,73 @@
+//! **Paper Table 2** — ImageNet-1k validation accuracy with ResNet-18/50:
+//! FP32 / S2FP8 / FP8 / FP8+LS(10k)+Ex / FP8+LS(100k)+Ex+SR.
+//!
+//! Scaled reproduction: the 100-class ImageNet proxy (harder, lower-SNR
+//! synthetic images) with ResNet-14-w8. "Ex" = first/last layer kept in
+//! FP32 (a separate artifact: `resnet14-c100-ex_fp8`), "SR" = stochastic
+//! rounding in the FP8 truncation (`..._fp8sr`). The shape under test:
+//! vanilla FP8 fails; the Ex(+SR) + big-loss-scale recipes recover most
+//! of it; S2FP8 matches FP32 with no recipe at all.
+//!
+//! Emits Fig. 6 (top-1 + loss curves, FP32 vs S2FP8) data as CSV.
+
+use s2fp8::bench::paper::{self, resnet_lr, Row};
+use s2fp8::bench::report::{pct_or_nan, Table};
+use s2fp8::config::experiment::DatasetKind;
+use s2fp8::coordinator::loss_scale::LossScalePolicy;
+use s2fp8::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let bench = "table2_imagenet";
+    let steps = paper::steps(400);
+    let rt = Runtime::cpu()?;
+
+    let rows = [
+        Row::new("FP32", "resnet14-c100_fp32", LossScalePolicy::None),
+        Row::new("S2FP8", "resnet14-c100_s2fp8", LossScalePolicy::None),
+        Row::new("FP8", "resnet14-c100_fp8", LossScalePolicy::None),
+        Row::new("FP8+LS(10k)+Ex", "resnet14-c100-ex_fp8", LossScalePolicy::Constant(10_000.0)),
+        Row::new(
+            "FP8+LS(100k)+Ex+SR",
+            "resnet14-c100-ex_fp8sr",
+            LossScalePolicy::Constant(100_000.0),
+        ),
+    ];
+
+    let mut metrics = Vec::new();
+    for row in &rows {
+        let out = paper::run_row(
+            &rt,
+            bench,
+            row,
+            DatasetKind::Image,
+            steps,
+            128,
+            resnet_lr(steps),
+            |cfg| {
+                cfg.classes = 100;
+                cfg.n_train = 8192;
+                cfg.n_test = 2000;
+                cfg.eval_every = (steps / 3).max(1); // Fig. 6 curve points
+            },
+        )?;
+        metrics.push(if out.diverged { f64::NAN } else { out.final_metric });
+    }
+
+    let mut table = Table::new(
+        &format!("Table 2 — 100-class ImageNet-proxy top-1 % ({steps} steps, ResNet-14-w8)"),
+        &["Imagenet-proxy", "FP32", "S2FP8", "Δ", "FP8", "FP8+LS(10k)+Ex", "FP8+LS(100k)+Ex+SR"],
+    );
+    table.row(vec![
+        "ResNet-14".into(),
+        pct_or_nan(metrics[0], metrics[0].is_nan()),
+        pct_or_nan(metrics[1], metrics[1].is_nan()),
+        paper::delta(metrics[0], metrics[1]),
+        pct_or_nan(metrics[2], metrics[2].is_nan()),
+        pct_or_nan(metrics[3], metrics[3].is_nan()),
+        pct_or_nan(metrics[4], metrics[4].is_nan()),
+    ]);
+    table.print();
+    table.save(paper::out_dir(bench).join("table2.md"))?;
+    println!("Fig. 6 curves (top-1/loss vs step): runs/{bench}/*/curve.csv");
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! **Paper Table A1 + Fig. A1** — exact regeneration from the format
+//! library: the format-comparison table (bits, min/max, epsilon, range)
+//! and FP8's representable-value density per binade. These reproduce the
+//! paper *exactly* (they are properties of the formats, not experiments).
+//!
+//! Also verifies the printed values against the paper's numbers and emits
+//! `runs/tablea1_formats/{tablea1.md,figa1.csv}`.
+
+use s2fp8::bench::paper;
+use s2fp8::bench::report::Table;
+use s2fp8::formats::analysis;
+
+fn main() -> anyhow::Result<()> {
+    let bench = "tablea1_formats";
+
+    let mut t = Table::new(
+        "Table A1 — floating-point formats (exact regeneration)",
+        &[
+            "Format", "Bits", "s/e/m", "Min subnormal", "Min normal", "Max normal",
+            "Machine eps", "Range",
+        ],
+    );
+    for r in analysis::table_a1_rows() {
+        t.row(vec![
+            r.format.clone(),
+            r.bits.to_string(),
+            r.sem.clone(),
+            r.min_subnormal.clone(),
+            r.min_normal.clone(),
+            r.max_normal.clone(),
+            r.epsilon.clone(),
+            r.range.clone(),
+        ]);
+    }
+    t.print();
+    t.save(paper::out_dir(bench).join("tablea1.md"))?;
+
+    // verify against the paper's printed values
+    let rows = analysis::table_a1_rows();
+    let get = |name: &str| rows.iter().find(|r| r.format == name).unwrap();
+    assert_eq!(get("FP8").sem, "1/5/2");
+    assert_eq!(get("FP8").min_subnormal, "2^-16");
+    assert_eq!(get("FP8").min_normal, "2^-14");
+    assert_eq!(get("FP8").epsilon, "2^-3");
+    assert_eq!(get("FP8").range, "2^32");
+    assert_eq!(get("IEEE-FP16").range, "2^40");
+    assert_eq!(get("IEEE-FP16").epsilon, "2^-11");
+    assert_eq!(get("BF16").range, "2^261");
+    assert_eq!(get("BF16").epsilon, "2^-8");
+    assert_eq!(get("IEEE-FP32").range, "2^277");
+    println!("Table A1 values match the paper exactly ✓");
+
+    let mut fig = Table::new(
+        "Fig. A1 — FP8 number density per binade [2^e, 2^(e+1))",
+        &["e", "representable values", "density bar"],
+    );
+    let mut csv = String::from("e,count\n");
+    for (e, c) in analysis::fp8_binade_density() {
+        fig.row(vec![e.to_string(), c.to_string(), "#".repeat(c)]);
+        csv.push_str(&format!("{e},{c}\n"));
+    }
+    fig.print();
+    std::fs::create_dir_all(paper::out_dir(bench))?;
+    std::fs::write(paper::out_dir(bench).join("figa1.csv"), csv)?;
+
+    // Fig. A1's annotations: density 4 per binade (2 mantissa bits),
+    // denormals from 2^-16, normal range to (1-2^-3)·2^16
+    let d = analysis::fp8_binade_density();
+    assert!(d.iter().filter(|(e, _)| (-14..=15).contains(e)).all(|(_, c)| *c == 4));
+    assert_eq!(d.first().unwrap(), &(-16, 1));
+    assert_eq!(d.iter().map(|(_, c)| c).sum::<usize>(), 123);
+    println!("Fig. A1 density checks pass ✓");
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! **Paper Table A2** — the grand summary: FP32 / BF16 / FP8 /
+//! FP8+recipes / S2FP8 across ResNet-CIFAR, ResNet-ImageNet, NCF and
+//! Transformer.
+//!
+//! This bench runs the BF16 variants (the column Tables 1–4 don't cover)
+//! plus the FP32/S2FP8/FP8 anchors for each family at a reduced scale,
+//! and assembles the A2-shaped table. For the full-scale per-family
+//! numbers, run the dedicated table benches and consult EXPERIMENTS.md.
+
+use s2fp8::bench::paper::{self, resnet_lr, Row};
+use s2fp8::bench::report::{f3, pct_or_nan, Table};
+use s2fp8::config::experiment::DatasetKind;
+use s2fp8::coordinator::loss_scale::LossScalePolicy;
+use s2fp8::coordinator::trainer::LrSchedule;
+use s2fp8::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let bench = "tablea2_summary";
+    let rt = Runtime::cpu()?;
+
+    let mut table = Table::new(
+        "Table A2 — FP32 vs BF16 vs FP8 vs FP8+recipe vs S2FP8",
+        &["Model", "Dataset", "Metric", "FP32", "BF16", "FP8", "FP8+recipe", "S2FP8"],
+    );
+
+    // ---- ResNet-20 / synthetic CIFAR (top-1 %) ---------------------------
+    {
+        let steps = paper::steps(300);
+        let mut get = |label: &str, artifact: &str, policy: LossScalePolicy| {
+            paper::run_row(&rt, bench, &Row::new(label, artifact, policy),
+                DatasetKind::Image, steps, 128, resnet_lr(steps), |cfg| {
+                    cfg.n_train = 5120;
+                    cfg.n_test = 1024;
+                })
+        };
+        let fp32 = get("cifar-fp32", "resnet20_fp32", LossScalePolicy::None)?;
+        let bf16 = get("cifar-bf16", "resnet20_bf16", LossScalePolicy::None)?;
+        let fp8 = get("cifar-fp8", "resnet20_fp8", LossScalePolicy::None)?;
+        let fp8ls = get("cifar-fp8ls", "resnet20_fp8", LossScalePolicy::Constant(100.0))?;
+        let s2 = get("cifar-s2fp8", "resnet20_s2fp8", LossScalePolicy::None)?;
+        table.row(vec![
+            "ResNet-20".into(),
+            "CIFAR-10 (synthetic)".into(),
+            "top-1 %".into(),
+            pct_or_nan(fp32.final_metric, fp32.diverged),
+            pct_or_nan(bf16.final_metric, bf16.diverged),
+            pct_or_nan(fp8.final_metric, fp8.diverged),
+            format!("{} (LS=100)", pct_or_nan(fp8ls.final_metric, fp8ls.diverged)),
+            pct_or_nan(s2.final_metric, s2.diverged),
+        ]);
+    }
+
+    // ---- NCF / synthetic MovieLens (HR@10) -------------------------------
+    {
+        let steps = paper::steps(400);
+        let mut get = |label: &str, artifact: &str| {
+            paper::run_row(&rt, bench, &Row::new(label, artifact, LossScalePolicy::None),
+                DatasetKind::Cf, steps, 256, LrSchedule::Constant(5e-4), |_| {})
+        };
+        let fp32 = get("ncf-fp32", "ncf_fp32")?;
+        let bf16 = get("ncf-bf16", "ncf_bf16")?;
+        let fp8 = get("ncf-fp8", "ncf_fp8")?;
+        let s2 = get("ncf-s2fp8", "ncf_s2fp8")?;
+        table.row(vec![
+            "NCF".into(),
+            "MovieLens-1M (synthetic)".into(),
+            "HR@10".into(),
+            f3(fp32.final_metric),
+            f3(bf16.final_metric),
+            f3(fp8.final_metric),
+            "—".into(),
+            f3(s2.final_metric),
+        ]);
+    }
+
+    // ---- Transformer tiny / synthetic En-Vi (BLEU) -----------------------
+    {
+        let steps = paper::steps(600);
+        let mut get = |label: &str, artifact: &str, policy: LossScalePolicy| {
+            paper::run_row(&rt, bench, &Row::new(label, artifact, policy),
+                DatasetKind::Translation, steps, 64,
+                LrSchedule::WarmupInvSqrt { peak: 1e-3, warmup: steps / 4 }, |cfg| {
+                    cfg.n_train = 4096;
+                    cfg.n_test = 512;
+                })
+        };
+        let fp32 = get("tx-fp32", "transformer_fp32", LossScalePolicy::None)?;
+        let bf16 = get("tx-bf16", "transformer_bf16", LossScalePolicy::None)?;
+        let fp8 = get("tx-fp8", "transformer_fp8", LossScalePolicy::None)?;
+        let fp8ls = get(
+            "tx-fp8ls",
+            "transformer_fp8",
+            LossScalePolicy::Exponential {
+                init: 2.0,
+                factor: 2.0,
+                interval: (steps / 7).max(1),
+                max: 4096.0,
+            },
+        )?;
+        let s2 = get("tx-s2fp8", "transformer_s2fp8", LossScalePolicy::None)?;
+        let b = |o: &s2fp8::coordinator::runner::ExperimentOutcome| {
+            if o.diverged { "NaN".to_string() } else { format!("{:.1}", o.final_metric) }
+        };
+        table.row(vec![
+            "Transformer-tiny".into(),
+            "En-Vi (synthetic)".into(),
+            "BLEU".into(),
+            b(&fp32),
+            b(&bf16),
+            b(&fp8),
+            format!("{} (LS=exp)", b(&fp8ls)),
+            b(&s2),
+        ]);
+    }
+
+    table.print();
+    table.save(paper::out_dir(bench).join("tablea2.md"))?;
+    Ok(())
+}

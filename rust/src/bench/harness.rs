@@ -1,0 +1,120 @@
+//! Timing harness: warmup, fixed-count or time-budgeted iterations,
+//! robust statistics. Used by the `perf_hotpath` bench and by the
+//! experiment benches for step-latency reporting.
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// optional throughput basis (elements/bytes per iteration)
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// e.g. elements/second when `work_per_iter` is set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.mean.as_secs_f64())
+    }
+
+    pub fn summary(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:7.2} G/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:7.2} M/s", t / 1e6),
+            Some(t) => format!("  {t:9.0} /s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<38} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p99  x{}{}",
+            self.name, self.mean, self.p50, self.p99, self.iters, tp
+        )
+    }
+}
+
+/// Run `f` with warmup then measure. `min_iters` iterations or `budget`
+/// of wall time, whichever is larger (at least 1).
+pub fn bench_fn(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    budget: Duration,
+    work_per_iter: Option<f64>,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || (start.elapsed() < budget && samples.len() < 10_000) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() >= min_iters && start.elapsed() >= budget {
+            break;
+        }
+    }
+    summarize(name, &mut samples, work_per_iter)
+}
+
+fn summarize(name: &str, samples: &mut [Duration], work_per_iter: Option<f64>) -> BenchResult {
+    samples.sort_unstable();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        p50: pct(0.50),
+        p99: pct(0.99),
+        min: samples[0],
+        max: samples[n - 1],
+        work_per_iter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_at_least_min_iters() {
+        let mut count = 0usize;
+        let r = bench_fn("noop", 2, 25, Duration::from_millis(0), None, || {
+            count += 1;
+        });
+        assert!(r.iters >= 25);
+        assert_eq!(count, r.iters + 2); // warmup included in count
+        assert!(r.p50 <= r.p99);
+        assert!(r.min <= r.p50);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = bench_fn(
+            "sleepy",
+            0,
+            3,
+            Duration::from_millis(0),
+            Some(1000.0),
+            || std::thread::sleep(Duration::from_millis(1)),
+        );
+        let tp = r.throughput().unwrap();
+        assert!(tp > 100_000.0 && tp < 1_100_000.0, "{tp}");
+    }
+
+    #[test]
+    fn summary_renders() {
+        let r = bench_fn("x", 0, 2, Duration::from_millis(0), Some(1e6), || {});
+        let s = r.summary();
+        assert!(s.contains('x') && s.contains("mean"));
+    }
+}

@@ -1,0 +1,12 @@
+//! A from-scratch micro/macro-benchmark harness (criterion is not in the
+//! offline vendor set). [`harness`] provides warmup + timed iterations
+//! with mean/p50/p99 statistics; [`report`] renders the paper-style
+//! markdown tables the `cargo bench` targets print and save under
+//! `runs/`.
+
+pub mod harness;
+pub mod paper;
+pub mod report;
+
+pub use harness::{bench_fn, BenchResult};
+pub use report::Table;

@@ -1,0 +1,96 @@
+//! Shared plumbing for the paper-reproduction bench targets
+//! (`rust/benches/table*.rs`, `fig*.rs`): environment-tunable run scales,
+//! row runners, and output-directory conventions.
+//!
+//! Scale knobs (env):
+//! * `S2FP8_BENCH_STEPS`  — steps per training run (default per-bench)
+//! * `S2FP8_BENCH_FAST=1` — ~4× shorter runs for smoke iterations
+//! * `S2FP8_ARTIFACTS`    — artifact dir (default `artifacts`)
+
+use crate::config::experiment::{DatasetKind, ExperimentConfig};
+use crate::coordinator::loss_scale::LossScalePolicy;
+use crate::coordinator::runner::{quick_config, run_experiment, ExperimentOutcome};
+use crate::coordinator::trainer::LrSchedule;
+use crate::runtime::Runtime;
+
+/// Steps for a bench, honoring the env overrides.
+pub fn steps(default: usize) -> usize {
+    if let Ok(s) = std::env::var("S2FP8_BENCH_STEPS") {
+        if let Ok(v) = s.parse() {
+            return v;
+        }
+    }
+    if std::env::var("S2FP8_BENCH_FAST").as_deref() == Ok("1") {
+        (default / 4).max(40)
+    } else {
+        default
+    }
+}
+
+/// Output dir for a bench's tables/curves.
+pub fn out_dir(bench: &str) -> std::path::PathBuf {
+    std::path::PathBuf::from("runs").join(bench)
+}
+
+/// One comparison row: a named (artifact, loss-scale) training run.
+pub struct Row {
+    pub label: String,
+    pub artifact: String,
+    pub policy: LossScalePolicy,
+}
+
+impl Row {
+    pub fn new(label: &str, artifact: &str, policy: LossScalePolicy) -> Self {
+        Row { label: label.to_string(), artifact: artifact.to_string(), policy }
+    }
+}
+
+/// Standard ResNet piecewise schedule scaled to `steps` (paper §4.2:
+/// decade drops late in training).
+pub fn resnet_lr(steps: usize) -> LrSchedule {
+    LrSchedule::Piecewise {
+        base: 0.1,
+        boundaries: vec![steps * 6 / 10, steps * 8 / 10],
+        decay: 10.0,
+    }
+}
+
+/// Run one row and log progress.
+pub fn run_row(
+    rt: &Runtime,
+    bench: &str,
+    row: &Row,
+    dataset: DatasetKind,
+    steps: usize,
+    batch: usize,
+    lr: LrSchedule,
+    tweak: impl FnOnce(&mut ExperimentConfig),
+) -> anyhow::Result<ExperimentOutcome> {
+    let mut cfg = quick_config(
+        &format!("{bench}-{}", row.label.replace([' ', '(', ')', '+', ','], "_")),
+        &row.artifact,
+        dataset,
+        steps,
+        batch,
+        lr,
+        row.policy.clone(),
+    );
+    cfg.out_dir = out_dir(bench).to_string_lossy().into_owned();
+    tweak(&mut cfg);
+    eprintln!("[{bench}] {} ({} / {:?}, {} steps)…", row.label, row.artifact, row.policy, steps);
+    let out = run_experiment(rt, &cfg)?;
+    eprintln!(
+        "[{bench}] {} → metric {:.4} (diverged: {}, overflows: {}, {:.0}s)",
+        row.label, out.final_metric, out.diverged, out.n_overflows, out.wall_secs
+    );
+    Ok(out)
+}
+
+/// Paper-style delta column: FP32 − variant (Table 1/2 convention).
+pub fn delta(fp32: f64, variant: f64) -> String {
+    if variant.is_nan() {
+        "—".to_string()
+    } else {
+        format!("{:.1}", 100.0 * (fp32 - variant))
+    }
+}

@@ -1,0 +1,129 @@
+//! Markdown table rendering + persistence for the paper-reproduction
+//! benches: each `cargo bench` target prints its table(s) to stdout in the
+//! paper's row/column shape and saves them (plus any curves) under
+//! `runs/<bench>/`.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A simple column-aligned markdown table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = width[i] - c.chars().count();
+                s.push(' ');
+                s.push_str(c);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("\n{}", self.to_markdown());
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_markdown().as_bytes())
+    }
+}
+
+/// Format helpers matching the paper's number style.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}", 100.0 * v)
+}
+
+pub fn pct_or_nan(v: f64, diverged: bool) -> String {
+    if diverged {
+        "NaN".to_string()
+    } else {
+        pct(v)
+    }
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Table 1", &["CIFAR-10", "FP32", "S2FP8"]);
+        t.row(vec!["ResNet-20".into(), "91.5".into(), "91.1".into()]);
+        t.row(vec!["ResNet-50".into(), "93.0".into(), "93.2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Table 1"));
+        assert!(md.contains("| ResNet-20 | 91.5 | 91.1  |") || md.contains("| ResNet-20 | 91.5 | 91.1 |"));
+        let lines: Vec<&str> = md.lines().collect();
+        // header, separator, 2 rows after title + blank
+        assert_eq!(lines.len(), 2 + 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn pct_formatting() {
+        assert_eq!(pct(0.915), "91.5");
+        assert_eq!(pct_or_nan(0.5, true), "NaN");
+        assert_eq!(f3(0.6664), "0.666");
+    }
+}

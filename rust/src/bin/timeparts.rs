@@ -1,0 +1,19 @@
+//! Profiling helper (§Perf/L2): times the HLO-text parse and the XLA
+//! compile of one artifact separately — the tool behind the compile-time
+//! iteration log in EXPERIMENTS.md.
+//!
+//! Usage: `cargo run --release --bin timeparts <artifact_name>`
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).expect("usage: timeparts <artifact_name>");
+    let path = format!("artifacts/{name}.hlo.txt");
+    let t = std::time::Instant::now();
+    let proto = xla::HloModuleProto::from_text_file(&path)?;
+    println!("parse   {:?}", t.elapsed());
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let client = xla::PjRtClient::cpu()?;
+    let t = std::time::Instant::now();
+    let _exe = client.compile(&comp)?;
+    println!("compile {:?}", t.elapsed());
+    Ok(())
+}

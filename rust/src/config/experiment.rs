@@ -1,0 +1,195 @@
+//! Typed experiment configuration consumed by the CLI (`s2fp8 train`) and
+//! by the bench harness. Loaded from TOML files (`configs/*.toml`) with
+//! CLI-flag overrides.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::loss_scale::LossScalePolicy;
+use crate::coordinator::trainer::{LrSchedule, TrainOptions};
+
+use super::toml::TomlDoc;
+
+/// Which dataset family an experiment trains on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DatasetKind {
+    Image,
+    Translation,
+    Cf,
+    /// in-memory separable vectors (quickstart MLP)
+    Vector,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "image" | "cifar" => DatasetKind::Image,
+            "translation" => DatasetKind::Translation,
+            "cf" | "ncf" => DatasetKind::Cf,
+            "vector" => DatasetKind::Vector,
+            other => bail!("unknown dataset kind '{other}'"),
+        })
+    }
+}
+
+/// One experiment = one train artifact + dataset + schedule + eval plan.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// artifact base, e.g. "resnet20_s2fp8" (expands to `_train`, `_eval`…)
+    pub artifact: String,
+    pub artifacts_dir: String,
+    pub dataset: DatasetKind,
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: LrSchedule,
+    pub loss_scale: LossScalePolicy,
+    pub seed: u64,
+    pub log_every: usize,
+    pub stats_every: usize,
+    pub eval_every: usize,
+    /// dataset sizing
+    pub n_train: usize,
+    pub n_test: usize,
+    pub classes: usize,
+    pub out_dir: String,
+    pub checkpoint_compress: bool,
+}
+
+impl ExperimentConfig {
+    pub fn train_artifact(&self) -> String {
+        format!("{}_train", self.artifact)
+    }
+
+    pub fn eval_artifact(&self) -> String {
+        format!("{}_eval", self.artifact)
+    }
+
+    pub fn decode_artifact(&self) -> String {
+        format!("{}_decode", self.artifact)
+    }
+
+    pub fn train_options(&self) -> TrainOptions {
+        TrainOptions {
+            steps: self.steps,
+            lr: self.lr.clone(),
+            loss_scale: self.loss_scale.clone(),
+            log_every: self.log_every,
+            seed: self.seed,
+            stats_every: self.stats_every,
+            divergence_patience: 20,
+        }
+    }
+
+    /// Parse from a TOML document (see `configs/` for examples).
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let name = doc.str_or("", "name", "experiment").to_string();
+        let artifact = doc
+            .get("", "artifact")
+            .and_then(|v| v.as_str())
+            .context("config needs a root `artifact = \"model_format\"` key")?
+            .to_string();
+        let dataset = DatasetKind::parse(doc.str_or("dataset", "kind", "image"))?;
+
+        let lr = match doc.str_or("schedule", "kind", "constant") {
+            "constant" => LrSchedule::Constant(doc.f32_or("schedule", "lr", 0.1)),
+            "piecewise" => LrSchedule::Piecewise {
+                base: doc.f32_or("schedule", "lr", 0.1),
+                boundaries: doc.usize_array("schedule", "boundaries").unwrap_or_default(),
+                decay: doc.f32_or("schedule", "decay", 10.0),
+            },
+            "warmup_invsqrt" => LrSchedule::WarmupInvSqrt {
+                peak: doc.f32_or("schedule", "lr", 1e-3),
+                warmup: doc.usize_or("schedule", "warmup", 400),
+            },
+            other => bail!("unknown schedule kind '{other}'"),
+        };
+        let loss_scale = LossScalePolicy::parse(doc.str_or("train", "loss_scale", "none"))
+            .context("bad loss_scale")?;
+
+        Ok(ExperimentConfig {
+            name,
+            artifact,
+            artifacts_dir: doc.str_or("", "artifacts_dir", "artifacts").to_string(),
+            dataset,
+            steps: doc.usize_or("train", "steps", 300),
+            batch: doc.usize_or("train", "batch", 128),
+            lr,
+            loss_scale,
+            seed: doc.usize_or("train", "seed", 2020) as u64,
+            log_every: doc.usize_or("train", "log_every", 20),
+            stats_every: doc.usize_or("train", "stats_every", 0),
+            eval_every: doc.usize_or("train", "eval_every", 0),
+            n_train: doc.usize_or("dataset", "n_train", 5120),
+            n_test: doc.usize_or("dataset", "n_test", 1024),
+            classes: doc.usize_or("dataset", "classes", 10),
+            out_dir: doc.str_or("", "out_dir", "runs").to_string(),
+            checkpoint_compress: doc.bool_or("train", "checkpoint_compress", true),
+        })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let doc = TomlDoc::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_toml(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "resnet20-cifar-s2fp8"
+artifact = "resnet20_s2fp8"
+
+[dataset]
+kind = "image"
+n_train = 5120
+classes = 10
+
+[train]
+steps = 600
+batch = 128
+loss_scale = "none"
+stats_every = 50
+
+[schedule]
+kind = "piecewise"
+lr = 0.1
+boundaries = [300, 450]
+decay = 10.0
+"#;
+
+    #[test]
+    fn full_roundtrip() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.name, "resnet20-cifar-s2fp8");
+        assert_eq!(cfg.train_artifact(), "resnet20_s2fp8_train");
+        assert_eq!(cfg.eval_artifact(), "resnet20_s2fp8_eval");
+        assert_eq!(cfg.dataset, DatasetKind::Image);
+        assert_eq!(cfg.steps, 600);
+        assert!(matches!(cfg.lr, LrSchedule::Piecewise { ref boundaries, .. }
+            if boundaries == &[300, 450]));
+        assert!(matches!(cfg.loss_scale, LossScalePolicy::None));
+        let opts = cfg.train_options();
+        assert_eq!(opts.stats_every, 50);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let doc = TomlDoc::parse("name = \"x\"").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn loss_scale_parsing() {
+        let doc = TomlDoc::parse(
+            "artifact = \"m_fp8\"\n[train]\nloss_scale = \"constant:100\"\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.loss_scale, LossScalePolicy::Constant(100.0));
+    }
+}

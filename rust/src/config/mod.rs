@@ -1,0 +1,9 @@
+//! Experiment configuration: a from-scratch TOML-subset parser ([`toml`])
+//! and the typed experiment schema ([`experiment`]) the CLI and benches
+//! consume. Config files live in `configs/*.toml`.
+
+pub mod experiment;
+pub mod toml;
+
+pub use experiment::ExperimentConfig;
+pub use toml::TomlValue;

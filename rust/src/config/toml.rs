@@ -1,0 +1,263 @@
+//! A TOML-subset parser (in-tree stand-in for the `toml` crate).
+//!
+//! Supported: `[table]` / `[table.sub]` headers, `key = value` with
+//! strings (basic, `"..."`), integers, floats, booleans, and homogeneous
+//! inline arrays (`[1, 2, 3]`, `["a", "b"]`). Comments (`#`) and blank
+//! lines. Enough for experiment configs; unsupported syntax errors out
+//! loudly with line numbers rather than mis-parsing.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<f32> {
+        self.as_f64().map(|f| f as f32)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `table.key` → value (root keys live under `""`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        doc.tables.insert(current.clone(), BTreeMap::new());
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unclosed table header"))?;
+                if name.is_empty() || name.contains('[') {
+                    return Err(err("bad table name"));
+                }
+                current = name.trim().to_string();
+                doc.tables.entry(current.clone()).or_default();
+            } else {
+                let (key, value) =
+                    line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+                let key = key.trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let value = parse_value(value.trim()).map_err(|m| err(&m))?;
+                doc.tables.get_mut(&current).unwrap().insert(key.to_string(), value);
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Lookup `table.key` (or root key with `table = ""`).
+    pub fn get(&self, table: &str, key: &str) -> Option<&TomlValue> {
+        self.tables.get(table)?.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, table: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(table, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, table: &str, key: &str, default: usize) -> usize {
+        self.get(table, key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, table: &str, key: &str, default: f32) -> f32 {
+        self.get(table, key).and_then(|v| v.as_f32()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, table: &str, key: &str, default: bool) -> bool {
+        self.get(table, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn usize_array(&self, table: &str, key: &str) -> Option<Vec<usize>> {
+        self.get(table, key)?
+            .as_array()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Option<Vec<_>>>()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a string literal would break this; experiment configs
+    // don't use '#' in strings, and a mis-split fails parse loudly anyway
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote (escapes unsupported)".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "table1"            # root key
+steps = 600
+lr = 0.1
+verbose = true
+
+[dataset]
+classes = 10
+n_train = 5_120
+strength = 1.2
+boundaries = [300, 450]
+formats = ["fp32", "s2fp8"]
+
+[train.schedule]
+kind = "piecewise"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str_or("", "name", "?"), "table1");
+        assert_eq!(d.usize_or("", "steps", 0), 600);
+        assert_eq!(d.f32_or("", "lr", 0.0), 0.1);
+        assert!(d.bool_or("", "verbose", false));
+        assert_eq!(d.usize_or("dataset", "n_train", 0), 5120);
+        assert_eq!(d.usize_array("dataset", "boundaries").unwrap(), vec![300, 450]);
+        assert_eq!(
+            d.get("dataset", "formats").unwrap().as_array().unwrap()[1].as_str(),
+            Some("s2fp8")
+        );
+        assert_eq!(d.str_or("train.schedule", "kind", "?"), "piecewise");
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.usize_or("x", "y", 42), 42);
+        assert_eq!(d.str_or("", "name", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("a = 1\nbroken line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = TomlDoc::parse("[unclosed\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = TomlDoc::parse("k = \"unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn comments_and_ints_with_underscores() {
+        let d = TomlDoc::parse("n = 1_000_000 # a million\ns = \"a # not comment\"").unwrap();
+        assert_eq!(d.get("", "n").unwrap().as_i64(), Some(1_000_000));
+        assert_eq!(d.get("", "s").unwrap().as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn float_coercion() {
+        let d = TomlDoc::parse("a = 2\nb = 2.5").unwrap();
+        assert_eq!(d.get("", "a").unwrap().as_f64(), Some(2.0));
+        assert_eq!(d.get("", "b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(d.get("", "b").unwrap().as_i64(), None);
+    }
+}

@@ -1,0 +1,199 @@
+//! Evaluation drivers: bind an eval/decode executable's param/state inputs
+//! to the trainer's current persistent values (by manifest name) and sweep
+//! a test set, producing the paper's metrics.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::synth_cf::CfDataset;
+use crate::data::synth_translation::{TranslationDataset, EOS};
+use crate::metrics::{bleu, classification, ranking};
+use crate::runtime::{Executable, HostValue, Role, Runtime};
+use crate::tensor::Tensor;
+
+use super::trainer::Trainer;
+
+/// Binds eval-program inputs to trainer state + per-call batch tensors.
+pub struct Evaluator {
+    pub exe: Rc<Executable>,
+    /// (input index, persistent-slot name) for param/state inputs
+    bindings: Vec<(usize, String)>,
+    batch_idx: Vec<usize>,
+}
+
+impl Evaluator {
+    pub fn new(rt: &Runtime, dir: impl AsRef<std::path::Path>, name: &str) -> Result<Self> {
+        let exe = rt.load(dir, name)?;
+        let man = &exe.manifest;
+        let mut bindings = Vec::new();
+        for (i, spec) in man.inputs.iter().enumerate() {
+            if matches!(spec.role, Role::Param | Role::State) {
+                bindings.push((i, spec.name.clone()));
+            }
+        }
+        let batch_idx = man.input_indices(Role::Batch);
+        if bindings.len() + batch_idx.len() != man.inputs.len() {
+            bail!("{name}: eval manifest has inputs that are neither state nor batch");
+        }
+        Ok(Evaluator { exe, bindings, batch_idx })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.exe.manifest.inputs[self.batch_idx[0]].shape[0]
+    }
+
+    /// Run on one batch, reading model state from `trainer`.
+    pub fn run(&self, trainer: &Trainer, batch: &[HostValue]) -> Result<HostValue> {
+        if batch.len() != self.batch_idx.len() {
+            bail!("expected {} batch tensors, got {}", self.batch_idx.len(), batch.len());
+        }
+        let man = &self.exe.manifest;
+        let mut inputs: Vec<HostValue> = Vec::with_capacity(man.inputs.len());
+        let mut bind_cursor = 0usize;
+        let mut batch_cursor = 0usize;
+        for i in 0..man.inputs.len() {
+            if bind_cursor < self.bindings.len() && self.bindings[bind_cursor].0 == i {
+                let name = &self.bindings[bind_cursor].1;
+                inputs.push(
+                    trainer
+                        .persistent_host(name)
+                        .with_context(|| format!("binding eval input {name}"))?,
+                );
+                bind_cursor += 1;
+            } else {
+                inputs.push(batch[batch_cursor].clone());
+                batch_cursor += 1;
+                debug_assert_eq!(self.batch_idx[batch_cursor - 1], i);
+            }
+        }
+        self.exe.run1(&inputs)
+    }
+}
+
+/// Classification accuracy + validation loss over a test split
+/// (x: (N,…) f32 images, y: labels). The eval program's batch is fixed;
+/// the tail partial batch is padded and masked out of the metrics.
+pub fn eval_classification(
+    trainer: &Trainer,
+    ev: &Evaluator,
+    xs: &Tensor,
+    ys: &[i32],
+) -> Result<(f64, f64)> {
+    let b = ev.batch_size();
+    let n = ys.len();
+    let row: usize = xs.shape()[1..].iter().product();
+    let mut shape = xs.shape().to_vec();
+    shape[0] = b;
+    let mut correct_weighted = 0.0f64;
+    let mut xent_weighted = 0.0f64;
+    let mut counted = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let take = (n - i).min(b);
+        let mut chunk = Vec::with_capacity(b * row);
+        chunk.extend_from_slice(&xs.data()[i * row..(i + take) * row]);
+        chunk.resize(b * row, 0.0); // pad
+        let batch_x = HostValue::f32(shape.clone(), chunk);
+        // eval manifests keep the full batch spec (sorted: x then y); the
+        // label slot is unused by the graph but must be fed (keep_unused)
+        let out = if ev.batch_idx.len() == 2 {
+            let dummy_y = HostValue::i32(vec![b], vec![0; b]);
+            ev.run(trainer, &[batch_x, dummy_y])?
+        } else {
+            ev.run(trainer, &[batch_x])?
+        };
+        let logits = out.as_f32()?;
+        let valid = Tensor::new(
+            vec![take, logits.shape()[1]],
+            logits.data()[..take * logits.shape()[1]].to_vec(),
+        );
+        let labels = &ys[i..i + take];
+        correct_weighted += classification::top1_accuracy(&valid, labels) * take as f64;
+        xent_weighted += classification::xent(&valid, labels) * take as f64;
+        counted += take;
+        i += take;
+    }
+    Ok((correct_weighted / counted as f64, xent_weighted / counted as f64))
+}
+
+/// Greedy-decode the test split and compute corpus BLEU (paper Table 3).
+pub fn eval_transformer_bleu(
+    trainer: &Trainer,
+    decode: &Evaluator,
+    data: &TranslationDataset,
+    max_sentences: usize,
+) -> Result<f64> {
+    let b = decode.batch_size();
+    let t = data.cfg.seq_len;
+    let n = data.n_test().min(max_sentences);
+    let mut pairs: Vec<(Vec<i32>, Vec<i32>)> = Vec::with_capacity(n);
+    let mut i = 0usize;
+    while i < n {
+        let take = (n - i).min(b);
+        let mut src = Vec::with_capacity(b * t);
+        for j in 0..take {
+            src.extend_from_slice(data.test_row(i + j).0);
+        }
+        src.resize(b * t, 0);
+        let out = decode.run(trainer, &[HostValue::i32(vec![b, t], src)])?;
+        let tokens = out.as_i32()?;
+        for j in 0..take {
+            let hyp = tokens[j * t..(j + 1) * t].to_vec();
+            let rf = data.test_row(i + j).1.to_vec();
+            pairs.push((hyp, rf));
+        }
+        i += take;
+    }
+    Ok(bleu::corpus_bleu(&pairs, Some(EOS)))
+}
+
+/// NCF ranking eval: paper protocol (1 positive + 99 negatives per user)
+/// → (HR@k, NDCG@k).
+pub fn eval_ncf(
+    trainer: &Trainer,
+    ev: &Evaluator,
+    data: &CfDataset,
+    k: usize,
+) -> Result<(f64, f64)> {
+    let b = ev.batch_size();
+    let per_user = 1 + data.cfg.eval_negatives;
+    let mut scores_per_user: Vec<Vec<f32>> = Vec::with_capacity(data.eval.len());
+
+    // flatten (user, item) pairs: positive first, then negatives
+    let mut users: Vec<i32> = Vec::new();
+    let mut items: Vec<i32> = Vec::new();
+    for (u, (pos, negs)) in data.eval.iter().enumerate() {
+        users.push(u as i32);
+        items.push(*pos);
+        for &ng in negs {
+            users.push(u as i32);
+            items.push(ng);
+        }
+    }
+    let total = users.len();
+    let mut flat_scores = Vec::with_capacity(total);
+    let mut i = 0usize;
+    while i < total {
+        let take = (total - i).min(b);
+        let mut bu = users[i..i + take].to_vec();
+        let mut bi = items[i..i + take].to_vec();
+        bu.resize(b, 0);
+        bi.resize(b, 0);
+        let labels = HostValue::f32(vec![b], vec![0.0; b]);
+        // eval batch order follows manifest names: item, label, user (sorted)
+        let out = ev.run(
+            trainer,
+            &[HostValue::i32(vec![b], bi), labels, HostValue::i32(vec![b], bu)],
+        )?;
+        flat_scores.extend_from_slice(&out.as_f32()?.data()[..take]);
+        i += take;
+    }
+    for chunk in flat_scores.chunks_exact(per_user) {
+        scores_per_user.push(chunk.to_vec());
+    }
+    Ok((
+        ranking::hit_ratio_at(&scores_per_user, k),
+        ranking::ndcg_at(&scores_per_user, k),
+    ))
+}

@@ -1,0 +1,252 @@
+//! Loss-scaling controller — the machinery the FP8 baselines need and the
+//! paper's S2FP8 makes unnecessary (§3.1: "The issue with loss scaling is
+//! that it requires user interaction … tedious empirical tuning is required
+//! to find the correct loss scaling schedule").
+//!
+//! The AOT train step takes the current scale as an *input* and reports a
+//! `grad_finite` flag; this controller implements the schedules the paper
+//! compares against:
+//!
+//! * [`LossScalePolicy::None`] — scale pinned at 1 (FP32 / S2FP8 runs).
+//! * [`LossScalePolicy::Constant`] — the Table 1 recipe (LS = 100) and the
+//!   Table 2 recipe (LS = 10k/100k).
+//! * [`LossScalePolicy::Exponential`] — scale grows by a factor every
+//!   `interval` steps (the "exp" schedule of Table 3).
+//! * [`LossScalePolicy::Dynamic`] — back-off/growth automaton
+//!   (Micikevicius et al. 2018): halve on overflow, double after
+//!   `growth_interval` clean steps. This is the strongest baseline
+//!   controller; S2FP8 runs simply never engage it.
+
+/// Schedule selection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LossScalePolicy {
+    None,
+    Constant(f32),
+    Exponential { init: f32, factor: f32, interval: usize, max: f32 },
+    Dynamic { init: f32, growth_factor: f32, backoff_factor: f32, growth_interval: usize, max: f32 },
+}
+
+impl LossScalePolicy {
+    /// Parse "none" | "constant:100" | "exp:1,2,500[,1e6]" |
+    /// "dynamic[:init]" from config/CLI.
+    pub fn parse(s: &str) -> Option<Self> {
+        let (head, rest) = match s.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (s, None),
+        };
+        match head {
+            "none" | "off" => Some(LossScalePolicy::None),
+            "constant" | "const" => Some(LossScalePolicy::Constant(rest?.parse().ok()?)),
+            "exp" | "exponential" => {
+                let parts: Vec<&str> = rest?.split(',').collect();
+                if parts.len() < 3 {
+                    return None;
+                }
+                Some(LossScalePolicy::Exponential {
+                    init: parts[0].parse().ok()?,
+                    factor: parts[1].parse().ok()?,
+                    interval: parts[2].parse().ok()?,
+                    max: parts.get(3).and_then(|p| p.parse().ok()).unwrap_or(1e9),
+                })
+            }
+            "dynamic" => {
+                let init = rest.map(|r| r.parse().ok()).unwrap_or(Some(65536.0))?;
+                Some(LossScalePolicy::Dynamic {
+                    init,
+                    growth_factor: 2.0,
+                    backoff_factor: 0.5,
+                    growth_interval: 200,
+                    max: 1e9,
+                })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Stateful controller; drive with [`LossScaleController::scale_for_step`]
+/// then [`LossScaleController::observe`].
+#[derive(Debug, Clone)]
+pub struct LossScaleController {
+    policy: LossScalePolicy,
+    scale: f32,
+    good_steps: usize,
+    step: usize,
+    /// count of overflow (skipped) steps — reported in EXPERIMENTS.md
+    pub n_overflows: usize,
+    /// count of scale changes — the "user interaction" S2FP8 removes
+    pub n_adjustments: usize,
+}
+
+impl LossScaleController {
+    pub fn new(policy: LossScalePolicy) -> Self {
+        let scale = match &policy {
+            LossScalePolicy::None => 1.0,
+            LossScalePolicy::Constant(c) => *c,
+            LossScalePolicy::Exponential { init, .. } => *init,
+            LossScalePolicy::Dynamic { init, .. } => *init,
+        };
+        LossScaleController { policy, scale, good_steps: 0, step: 0, n_overflows: 0, n_adjustments: 0 }
+    }
+
+    /// The scale the upcoming step should use.
+    pub fn scale_for_step(&self) -> f32 {
+        self.scale
+    }
+
+    /// Report the step's outcome; updates the schedule state. Returns
+    /// `true` if the step was applied (finite gradients), `false` if it
+    /// was skipped by the train step.
+    pub fn observe(&mut self, grad_finite: bool) -> bool {
+        self.step += 1;
+        match self.policy.clone() {
+            LossScalePolicy::None | LossScalePolicy::Constant(_) => {
+                if !grad_finite {
+                    self.n_overflows += 1;
+                }
+            }
+            LossScalePolicy::Exponential { factor, interval, max, .. } => {
+                if !grad_finite {
+                    self.n_overflows += 1;
+                }
+                if self.step % interval == 0 {
+                    let next = (self.scale * factor).min(max);
+                    if next != self.scale {
+                        self.scale = next;
+                        self.n_adjustments += 1;
+                    }
+                }
+            }
+            LossScalePolicy::Dynamic {
+                growth_factor,
+                backoff_factor,
+                growth_interval,
+                max,
+                ..
+            } => {
+                if grad_finite {
+                    self.good_steps += 1;
+                    if self.good_steps >= growth_interval {
+                        let next = (self.scale * growth_factor).min(max);
+                        if next != self.scale {
+                            self.scale = next;
+                            self.n_adjustments += 1;
+                        }
+                        self.good_steps = 0;
+                    }
+                } else {
+                    self.n_overflows += 1;
+                    self.good_steps = 0;
+                    let next = (self.scale * backoff_factor).max(1.0);
+                    if next != self.scale {
+                        self.scale = next;
+                        self.n_adjustments += 1;
+                    }
+                }
+            }
+        }
+        grad_finite
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(LossScalePolicy::parse("none"), Some(LossScalePolicy::None));
+        assert_eq!(
+            LossScalePolicy::parse("constant:100"),
+            Some(LossScalePolicy::Constant(100.0))
+        );
+        assert!(matches!(
+            LossScalePolicy::parse("exp:1,2,500").unwrap(),
+            LossScalePolicy::Exponential { init, factor, interval, .. }
+                if init == 1.0 && factor == 2.0 && interval == 500
+        ));
+        assert!(matches!(
+            LossScalePolicy::parse("dynamic:1024").unwrap(),
+            LossScalePolicy::Dynamic { init, .. } if init == 1024.0
+        ));
+        assert_eq!(LossScalePolicy::parse("bogus"), None);
+        assert_eq!(LossScalePolicy::parse("exp:1,2"), None);
+    }
+
+    #[test]
+    fn none_and_constant_never_change() {
+        let mut c = LossScaleController::new(LossScalePolicy::Constant(100.0));
+        for i in 0..100 {
+            assert_eq!(c.scale_for_step(), 100.0);
+            c.observe(i % 7 != 0);
+        }
+        assert_eq!(c.n_adjustments, 0);
+        assert!(c.n_overflows > 0);
+    }
+
+    #[test]
+    fn exponential_grows_on_schedule() {
+        let mut c = LossScaleController::new(LossScalePolicy::Exponential {
+            init: 1.0,
+            factor: 2.0,
+            interval: 10,
+            max: 8.0,
+        });
+        for _ in 0..10 {
+            c.observe(true);
+        }
+        assert_eq!(c.scale_for_step(), 2.0);
+        for _ in 0..30 {
+            c.observe(true);
+        }
+        assert_eq!(c.scale_for_step(), 8.0, "capped at max");
+        assert_eq!(c.n_adjustments, 3);
+    }
+
+    #[test]
+    fn dynamic_backs_off_on_overflow_and_regrows() {
+        let mut c = LossScaleController::new(LossScalePolicy::Dynamic {
+            init: 1024.0,
+            growth_factor: 2.0,
+            backoff_factor: 0.5,
+            growth_interval: 5,
+            max: 1e9,
+        });
+        // overflow → halve
+        assert!(!c.observe(false));
+        assert_eq!(c.scale_for_step(), 512.0);
+        // two overflows in a row keep halving
+        c.observe(false);
+        assert_eq!(c.scale_for_step(), 256.0);
+        // 5 clean steps → double
+        for _ in 0..5 {
+            c.observe(true);
+        }
+        assert_eq!(c.scale_for_step(), 512.0);
+        // growth counter resets on overflow
+        for _ in 0..4 {
+            c.observe(true);
+        }
+        c.observe(false);
+        assert_eq!(c.scale_for_step(), 256.0);
+        for _ in 0..4 {
+            c.observe(true);
+        }
+        assert_eq!(c.scale_for_step(), 256.0, "needs a full clean interval");
+    }
+
+    #[test]
+    fn dynamic_floor_at_one() {
+        let mut c = LossScaleController::new(LossScalePolicy::Dynamic {
+            init: 2.0,
+            growth_factor: 2.0,
+            backoff_factor: 0.5,
+            growth_interval: 100,
+            max: 1e9,
+        });
+        for _ in 0..10 {
+            c.observe(false);
+        }
+        assert_eq!(c.scale_for_step(), 1.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! The Layer-3 training coordinator.
+//!
+//! Owns everything the paper's training recipes need at runtime:
+//!
+//! * [`trainer`] — the epoch/step loop over an AOT train-step executable,
+//!   with manifest-driven slot binding, persistent-state carry, learning-
+//!   rate schedules and metric logging.
+//! * [`loss_scale`] — the loss-scaling controller state machine
+//!   (constant / exponential / dynamic back-off) that the FP8 baselines
+//!   require and S2FP8 eliminates (the paper's central usability claim).
+//! * [`stats`] — α/β/μ/m statistics tracking across training (Figs. 1/5).
+//! * [`eval`] — evaluation drivers: classification accuracy, seq2seq
+//!   greedy-decode → BLEU, NCF ranking → HR/NDCG.
+//! * [`checkpoint`] — binary checkpoints of the persistent slots, with
+//!   optional S2FP8 compression (the paper's 4× memory claim in practice).
+
+pub mod checkpoint;
+pub mod runner;
+pub mod eval;
+pub mod loss_scale;
+pub mod stats;
+pub mod trainer;
+
+pub use loss_scale::{LossScaleController, LossScalePolicy};
+pub use runner::{run_experiment, ExperimentOutcome};
+pub use trainer::{LrSchedule, StepOutputs, TrainOptions, Trainer};

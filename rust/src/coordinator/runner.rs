@@ -1,0 +1,352 @@
+//! End-to-end experiment runner: dataset synthesis → training loop with
+//! loss-scale control → periodic + final evaluation → curves/stats/
+//! checkpoints. This is the single entry point the CLI, the examples and
+//! every paper-table bench drive.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::experiment::{DatasetKind, ExperimentConfig};
+use crate::data::batcher::Batcher;
+use crate::data::synth_cf::{CfCfg, CfDataset};
+use crate::data::synth_image::{ImageDataset, ImageDatasetCfg};
+use crate::data::synth_translation::{TranslationCfg, TranslationDataset};
+use crate::metrics::curve::Curve;
+use crate::runtime::{Artifact, HostValue, Runtime};
+use crate::util::rng::{Pcg32, Rng};
+
+use super::eval::{self, Evaluator};
+use super::loss_scale::LossScaleController;
+use super::stats::StatsLog;
+use super::trainer::Trainer;
+
+/// Everything a paper-table bench needs from one run.
+#[derive(Debug)]
+pub struct ExperimentOutcome {
+    pub name: String,
+    pub artifact: String,
+    /// columns: loss, lr, loss_scale, grad_finite, metric, metric2
+    /// (metric columns are NaN between eval points)
+    pub curve: Curve,
+    pub stats: StatsLog,
+    pub diverged: bool,
+    /// top-1 accuracy / BLEU / HR@10 depending on the task
+    pub final_metric: f64,
+    /// val cross-entropy / (unused) / NDCG@10
+    pub final_metric2: f64,
+    pub n_overflows: usize,
+    pub n_scale_adjustments: usize,
+    pub steps_run: usize,
+    pub wall_secs: f64,
+    pub param_count: usize,
+    pub profile: String,
+}
+
+enum Task {
+    Image(ImageDataset),
+    Translation(TranslationDataset),
+    Cf(CfDataset),
+    Vector { d_in: usize, classes: usize },
+}
+
+impl Task {
+    fn build(cfg: &ExperimentConfig, trainer: &Trainer) -> Result<Task> {
+        Ok(match cfg.dataset {
+            DatasetKind::Image => {
+                let dcfg = if cfg.classes > 10 {
+                    ImageDatasetCfg {
+                        classes: cfg.classes,
+                        ..ImageDatasetCfg::imagenet_proxy(cfg.n_train, cfg.n_test, 33)
+                    }
+                } else {
+                    ImageDatasetCfg::cifar_like(cfg.n_train, cfg.n_test, 33)
+                };
+                Task::Image(ImageDataset::generate(dcfg))
+            }
+            DatasetKind::Translation => {
+                let man = &trainer.exe.manifest;
+                let vocab = man.meta.at(&["hp", "vocab"]).as_usize().unwrap_or(64);
+                let seq = man.meta.at(&["hp", "seq_len"]).as_usize().unwrap_or(16);
+                Task::Translation(TranslationDataset::generate(TranslationCfg {
+                    vocab,
+                    seq_len: seq,
+                    n_train: cfg.n_train,
+                    n_test: cfg.n_test,
+                    ..Default::default()
+                }))
+            }
+            DatasetKind::Cf => {
+                let man = &trainer.exe.manifest;
+                let n_users = man.meta.at(&["hp", "n_users"]).as_usize().unwrap_or(512);
+                let n_items = man.meta.at(&["hp", "n_items"]).as_usize().unwrap_or(1024);
+                Task::Cf(CfDataset::generate(CfCfg { n_users, n_items, ..Default::default() }))
+            }
+            DatasetKind::Vector => {
+                let man = &trainer.exe.manifest;
+                let d_in = man.inputs[man.input_index("batch/x")?].shape[1];
+                let classes = cfg.classes;
+                Task::Vector { d_in, classes }
+            }
+        })
+    }
+
+    /// Build one training batch in manifest `batch/*` slot order.
+    fn batch(&self, _trainer: &Trainer, idx: &[usize], rng: &mut Pcg32) -> Vec<HostValue> {
+        let b = idx.len();
+        match self {
+            Task::Image(d) => {
+                let x = d.train_x.gather_rows(idx);
+                let y: Vec<i32> = idx.iter().map(|&i| d.train_y[i]).collect();
+                vec![HostValue::F32(x), HostValue::i32(vec![b], y)]
+            }
+            Task::Translation(d) => {
+                let t = d.cfg.seq_len;
+                let mut src = Vec::with_capacity(b * t);
+                let mut tgt_in = Vec::with_capacity(b * t);
+                let mut tgt_out = Vec::with_capacity(b * t);
+                for &i in idx {
+                    let (s, g) = d.train_row(i);
+                    src.extend_from_slice(s);
+                    tgt_in.extend(TranslationDataset::shift_right(g));
+                    tgt_out.extend_from_slice(g);
+                }
+                vec![
+                    HostValue::i32(vec![b, t], src),
+                    HostValue::i32(vec![b, t], tgt_in),
+                    HostValue::i32(vec![b, t], tgt_out),
+                ]
+            }
+            Task::Cf(d) => {
+                // slots sorted: batch/item, batch/label, batch/user
+                let mut item = Vec::with_capacity(b);
+                let mut label = Vec::with_capacity(b);
+                let mut user = Vec::with_capacity(b);
+                for &i in idx {
+                    let it = d.train[i];
+                    item.push(it.item);
+                    label.push(it.label);
+                    user.push(it.user);
+                }
+                vec![
+                    HostValue::i32(vec![b], item),
+                    HostValue::f32(vec![b], label),
+                    HostValue::i32(vec![b], user),
+                ]
+            }
+            Task::Vector { d_in, classes } => {
+                let mut x = Vec::with_capacity(b * d_in);
+                let mut y = Vec::with_capacity(b);
+                for _ in 0..b {
+                    let label = rng.next_below(*classes as u64) as usize;
+                    for j in 0..*d_in {
+                        let c = if j % classes == label { 2.0 } else { 0.0 };
+                        x.push(c + 0.5 * rng.next_normal());
+                    }
+                    y.push(label as i32);
+                }
+                vec![HostValue::f32(vec![b, *d_in], x), HostValue::i32(vec![b], y)]
+            }
+        }
+    }
+
+    fn n_train(&self) -> usize {
+        match self {
+            Task::Image(d) => d.n_train(),
+            Task::Translation(d) => d.n_train(),
+            Task::Cf(d) => d.n_train(),
+            Task::Vector { .. } => usize::MAX / 2, // generated on the fly
+        }
+    }
+
+    /// Final (and periodic) evaluation → (metric, metric2).
+    fn evaluate(
+        &self,
+        rt: &Runtime,
+        cfg: &ExperimentConfig,
+        trainer: &Trainer,
+    ) -> Result<(f64, f64)> {
+        match self {
+            Task::Image(d) => {
+                let ev = Evaluator::new(rt, &cfg.artifacts_dir, &cfg.eval_artifact())?;
+                eval::eval_classification(trainer, &ev, &d.test_x, &d.test_y)
+            }
+            Task::Translation(d) => {
+                let dec = Evaluator::new(rt, &cfg.artifacts_dir, &cfg.decode_artifact())?;
+                let bleu = eval::eval_transformer_bleu(trainer, &dec, d, 256)?;
+                Ok((bleu, 0.0))
+            }
+            Task::Cf(d) => {
+                let ev = Evaluator::new(rt, &cfg.artifacts_dir, &cfg.eval_artifact())?;
+                eval::eval_ncf(trainer, &ev, d, 10)
+            }
+            Task::Vector { .. } => Ok((f64::NAN, f64::NAN)), // loss curve is the signal
+        }
+    }
+}
+
+/// Run one experiment end-to-end.
+pub fn run_experiment(rt: &Runtime, cfg: &ExperimentConfig) -> Result<ExperimentOutcome> {
+    let artifact = Artifact::load(&cfg.artifacts_dir, &cfg.train_artifact())?;
+    let batch = artifact
+        .manifest
+        .meta_usize("batch")
+        .context("train manifest missing meta.batch")?;
+    if batch != cfg.batch {
+        crate::log_warn!(
+            "{}: artifact batch {} (config said {}); using artifact's",
+            cfg.name,
+            batch,
+            cfg.batch
+        );
+    }
+    let mut trainer = Trainer::new(rt, &artifact)?;
+    let task = Task::build(cfg, &trainer)?;
+    if task.n_train() < batch {
+        bail!("dataset smaller than one batch");
+    }
+
+    crate::log_info!(
+        "experiment {}: artifact={} params={} steps={} dataset_n={}",
+        cfg.name,
+        cfg.train_artifact(),
+        trainer.param_count(),
+        cfg.steps,
+        task.n_train().min(1 << 40)
+    );
+
+    let mut controller = LossScaleController::new(cfg.loss_scale.clone());
+    let mut curve =
+        Curve::new(&["loss", "lr", "loss_scale", "grad_finite", "metric", "metric2"]);
+    let mut stats = StatsLog::new(
+        trainer.exe.manifest.site_stat_names.clone(),
+        trainer.exe.manifest.grad_stat_names.clone(),
+    );
+    let mut batcher = if matches!(task, Task::Vector { .. }) {
+        None
+    } else {
+        Some(Batcher::new(task.n_train(), batch, cfg.seed))
+    };
+    let mut rng = Pcg32::new(cfg.seed, 0xDA7A);
+
+    let wall = std::time::Instant::now();
+    let mut diverged = false;
+    let mut bad_streak = 0usize;
+    let mut steps_run = 0usize;
+
+    for step in 1..=cfg.steps {
+        let idx_buf: Vec<usize> = match &mut batcher {
+            Some(ba) => ba.next_batch().to_vec(),
+            None => (0..batch).collect(),
+        };
+        let batch_vals = task.batch(&trainer, &idx_buf, &mut rng);
+        let scale = controller.scale_for_step();
+        let lr = cfg.lr.at(step - 1);
+        let capture = cfg.stats_every > 0 && step % cfg.stats_every == 0;
+        let out = trainer.step(&batch_vals, scale, lr, step, capture)?;
+        controller.observe(out.grad_finite);
+        steps_run = step;
+
+        if capture {
+            stats.record(step, out.site_stats.as_ref(), out.grad_stats.as_ref());
+        }
+
+        let eval_now = cfg.eval_every > 0 && step % cfg.eval_every == 0;
+        let log_now = step % cfg.log_every == 0 || step == cfg.steps || eval_now;
+        if log_now {
+            let (m, m2) = if eval_now && out.loss.is_finite() {
+                task.evaluate(rt, cfg, &trainer)?
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            curve.push(
+                step,
+                &[
+                    out.loss as f64,
+                    lr as f64,
+                    scale as f64,
+                    if out.grad_finite { 1.0 } else { 0.0 },
+                    m,
+                    m2,
+                ],
+            );
+            crate::log_debug!(
+                "{} step {step}: loss={:.4} scale={scale} lr={lr:.4}{}",
+                cfg.name,
+                out.loss,
+                if m.is_nan() { String::new() } else { format!(" metric={m:.4}") }
+            );
+        }
+
+        if !out.loss.is_finite() {
+            bad_streak += 1;
+            if bad_streak >= 20 {
+                diverged = true;
+                crate::log_warn!("{}: diverged at step {step}", cfg.name);
+                break;
+            }
+        } else {
+            bad_streak = 0;
+        }
+    }
+
+    let (final_metric, final_metric2) =
+        if diverged { (f64::NAN, f64::NAN) } else { task.evaluate(rt, cfg, &trainer)? };
+
+    // persist run outputs
+    let run_dir = std::path::Path::new(&cfg.out_dir).join(&cfg.name);
+    curve.save_csv(run_dir.join("curve.csv")).ok();
+    if !stats.is_empty() {
+        stats.save_csv(run_dir.join("stats.csv")).ok();
+    }
+    if !diverged {
+        let snap = trainer.persistent_snapshot()?;
+        super::checkpoint::save(run_dir.join("final.s2ck"), &snap, cfg.checkpoint_compress).ok();
+    }
+
+    Ok(ExperimentOutcome {
+        name: cfg.name.clone(),
+        artifact: cfg.artifact.clone(),
+        curve,
+        stats,
+        diverged,
+        final_metric,
+        final_metric2,
+        n_overflows: controller.n_overflows,
+        n_scale_adjustments: controller.n_adjustments,
+        steps_run,
+        wall_secs: wall.elapsed().as_secs_f64(),
+        param_count: trainer.param_count(),
+        profile: trainer.profiler.report(),
+    })
+}
+
+/// Convenience: build a config programmatically (benches).
+#[allow(clippy::too_many_arguments)]
+pub fn quick_config(
+    name: &str,
+    artifact: &str,
+    dataset: DatasetKind,
+    steps: usize,
+    batch: usize,
+    lr: super::trainer::LrSchedule,
+    loss_scale: super::loss_scale::LossScalePolicy,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.to_string(),
+        artifact: artifact.to_string(),
+        artifacts_dir: std::env::var("S2FP8_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        dataset,
+        steps,
+        batch,
+        lr,
+        loss_scale,
+        seed: 2020,
+        log_every: 20,
+        stats_every: 0,
+        eval_every: 0,
+        n_train: 5120,
+        n_test: 1024,
+        classes: 10,
+        out_dir: "runs".to_string(),
+        checkpoint_compress: true,
+    }
+}

@@ -1,0 +1,153 @@
+//! Tensor-statistics tracking across training — the data behind the
+//! paper's Fig. 1 (how much tensor mass falls outside FP8's window) and
+//! Fig. 5 (evolution of μ, m, α, β as the network "learns the tensor
+//! distributions", §3.3).
+//!
+//! Each record is a matrix `[n_sites, 6]` of
+//! `[μ, m, α, β, frac_below_fp8, frac_above_fp8]` rows produced by the
+//! train step's aux outputs (sites = forward quantization sites; grads =
+//! per-parameter gradient tensors).
+
+use crate::tensor::Tensor;
+use std::io::Write;
+use std::path::Path;
+
+pub const STAT_COLS: [&str; 6] = ["mu", "m", "alpha", "beta", "below_fp8", "above_fp8"];
+
+/// One captured step: step number + per-site stat rows.
+#[derive(Debug, Clone)]
+pub struct StatsRecord {
+    pub step: usize,
+    /// (n_sites, 6) site stats, row-major
+    pub site: Option<Tensor>,
+    /// (n_params, 6) gradient stats
+    pub grad: Option<Tensor>,
+}
+
+/// Accumulated statistics over a run.
+#[derive(Debug, Clone, Default)]
+pub struct StatsLog {
+    pub site_names: Vec<String>,
+    pub grad_names: Vec<String>,
+    pub records: Vec<StatsRecord>,
+}
+
+impl StatsLog {
+    pub fn new(site_names: Vec<String>, grad_names: Vec<String>) -> Self {
+        StatsLog { site_names, grad_names, records: Vec::new() }
+    }
+
+    pub fn record(&mut self, step: usize, site: Option<&Tensor>, grad: Option<&Tensor>) {
+        if let Some(s) = site {
+            debug_assert_eq!(s.shape()[1], 6);
+        }
+        self.records.push(StatsRecord { step, site: site.cloned(), grad: grad.cloned() });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Time series of one statistic for one named site:
+    /// returns (steps, values).
+    pub fn series(&self, site: &str, stat: &str) -> (Vec<usize>, Vec<f32>) {
+        let stat_idx = STAT_COLS.iter().position(|s| *s == stat).expect("unknown stat");
+        let (from_grad, row) = match self.site_names.iter().position(|n| n == site) {
+            Some(r) => (false, r),
+            None => (
+                true,
+                self.grad_names.iter().position(|n| n == site).expect("unknown site"),
+            ),
+        };
+        let mut steps = Vec::new();
+        let mut vals = Vec::new();
+        for rec in &self.records {
+            let t = if from_grad { rec.grad.as_ref() } else { rec.site.as_ref() };
+            if let Some(t) = t {
+                steps.push(rec.step);
+                vals.push(t.data()[row * 6 + stat_idx]);
+            }
+        }
+        (steps, vals)
+    }
+
+    /// CSV dump: one row per (step, site) with the six statistics —
+    /// the Fig. 1/Fig. 5 data files referenced from EXPERIMENTS.md.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,kind,site,mu,m,alpha,beta,below_fp8,above_fp8\n");
+        for rec in &self.records {
+            let mut emit = |kind: &str, names: &[String], t: &Tensor| {
+                for (row, name) in names.iter().enumerate() {
+                    let d = &t.data()[row * 6..row * 6 + 6];
+                    s.push_str(&format!(
+                        "{},{},{},{},{},{},{},{},{}\n",
+                        rec.step, kind, name, d[0], d[1], d[2], d[3], d[4], d[5]
+                    ));
+                }
+            };
+            if let Some(t) = &rec.site {
+                emit("site", &self.site_names, t);
+            }
+            if let Some(t) = &rec.grad {
+                emit("grad", &self.grad_names, t);
+            }
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_with_two_records() -> StatsLog {
+        let mut log = StatsLog::new(
+            vec!["conv1/x".into(), "conv1/w".into()],
+            vec!["params/conv1/w".into()],
+        );
+        let site0 = Tensor::new(vec![2, 6], vec![
+            -8.0, -5.0, 5.0, 40.0, 0.1, 0.0, // conv1/x
+            -3.0, -1.0, 7.5, 22.5, 0.0, 0.0, // conv1/w
+        ]);
+        let grad0 = Tensor::new(vec![1, 6], vec![-21.0, -18.0, 5.0, 105.0, 0.9, 0.0]);
+        log.record(10, Some(&site0), Some(&grad0));
+        let site1 = site0.map(|v| v + 1.0);
+        let grad1 = grad0.map(|v| v + 1.0);
+        log.record(20, Some(&site1), Some(&grad1));
+        log
+    }
+
+    #[test]
+    fn series_extraction() {
+        let log = log_with_two_records();
+        let (steps, alphas) = log.series("conv1/w", "alpha");
+        assert_eq!(steps, vec![10, 20]);
+        assert_eq!(alphas, vec![7.5, 8.5]);
+        // grad site resolves through grad_names
+        let (_, mus) = log.series("params/conv1/w", "mu");
+        assert_eq!(mus, vec![-21.0, -20.0]);
+    }
+
+    #[test]
+    fn csv_contains_all_rows() {
+        let log = log_with_two_records();
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 1 + 2 * 3);
+        assert!(csv.contains("site,conv1/x"));
+        assert!(csv.contains("grad,params/conv1/w"));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown site")]
+    fn unknown_site_panics() {
+        log_with_two_records().series("nope", "alpha");
+    }
+}

@@ -1,0 +1,418 @@
+//! The training loop driver.
+//!
+//! A [`Trainer`] binds an AOT train-step executable's manifest slots to
+//! runtime state:
+//!
+//! * **persistent slots** (params / optimizer state / BN state) live as
+//!   `xla::Literal`s and are *moved* from step outputs to the next step's
+//!   inputs — zero-copy carry on the hot loop;
+//! * **batch slots** are filled per step by a caller-supplied provider;
+//! * **scalar slots** (`loss_scale`, `lr`, `step`, `seed`) are driven by
+//!   the [`LossScaleController`], the [`LrSchedule`] and the step counter.
+//!
+//! [`Trainer::train`] runs the full loop with loss-curve recording,
+//! divergence detection (the paper's FP8 columns read "NaN" — we detect
+//! and report instead of crashing), and optional α/β statistics capture
+//! (Figs. 1/5).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::curve::Curve;
+use crate::runtime::{Artifact, HostValue, Role, Runtime};
+use crate::tensor::Tensor;
+use crate::util::timer::Profiler;
+
+use super::loss_scale::{LossScaleController, LossScalePolicy};
+use super::stats::StatsLog;
+
+/// Learning-rate schedules used by the paper's recipes.
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Constant(f32),
+    /// ResNet recipe: `base`, divided by `decay` at each boundary step.
+    Piecewise { base: f32, boundaries: Vec<usize>, decay: f32 },
+    /// Transformer recipe: linear warmup to `peak`, then inverse-sqrt.
+    WarmupInvSqrt { peak: f32, warmup: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match self {
+            LrSchedule::Constant(lr) => *lr,
+            LrSchedule::Piecewise { base, boundaries, decay } => {
+                let passed = boundaries.iter().filter(|&&b| step >= b).count() as i32;
+                base / decay.powi(passed)
+            }
+            LrSchedule::WarmupInvSqrt { peak, warmup } => {
+                let s = step.max(1) as f32;
+                let w = (*warmup).max(1) as f32;
+                peak * (s / w).min((w / s).sqrt())
+            }
+        }
+    }
+}
+
+/// Options for a full training run.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub lr: LrSchedule,
+    pub loss_scale: LossScalePolicy,
+    /// record train loss every n steps (also the console cadence)
+    pub log_every: usize,
+    pub seed: u64,
+    /// capture site/grad statistics every n steps (0 = off)
+    pub stats_every: usize,
+    /// consecutive non-finite losses before declaring divergence
+    pub divergence_patience: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            steps: 100,
+            lr: LrSchedule::Constant(0.1),
+            loss_scale: LossScalePolicy::None,
+            log_every: 20,
+            seed: 2020,
+            stats_every: 0,
+            divergence_patience: 20,
+        }
+    }
+}
+
+/// Per-step outputs surfaced to callers.
+#[derive(Debug, Clone)]
+pub struct StepOutputs {
+    pub loss: f32,
+    pub grad_finite: bool,
+    pub site_stats: Option<Tensor>,
+    pub grad_stats: Option<Tensor>,
+}
+
+/// Result of a full [`Trainer::train`] run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub curve: Curve,
+    pub stats: StatsLog,
+    pub diverged: bool,
+    pub final_loss: f32,
+    pub n_overflows: usize,
+    pub n_scale_adjustments: usize,
+    pub steps_run: usize,
+    pub wall_secs: f64,
+}
+
+pub struct Trainer {
+    pub exe: Rc<crate::runtime::Executable>,
+    persistent: Vec<xla::Literal>,
+    pers_names: Vec<String>,
+    pers_in_idx: Vec<usize>,
+    carry_out_idx: Vec<usize>,
+    batch_in_idx: Vec<usize>,
+    idx_loss_scale: usize,
+    idx_lr: usize,
+    idx_step: usize,
+    idx_seed: usize,
+    out_loss: usize,
+    out_flag: usize,
+    out_site_stats: Option<usize>,
+    out_grad_stats: Option<usize>,
+    pub profiler: Profiler,
+}
+
+impl Trainer {
+    /// Compile the artifact and load its initial state.
+    pub fn new(rt: &Runtime, artifact: &Artifact) -> Result<Self> {
+        let exe = rt.compile(artifact)?;
+        let man = &exe.manifest;
+        if man.kind != "train_step" {
+            bail!("{} is a {} artifact, not a train_step", man.name, man.kind);
+        }
+        let carry = man.carry_map()?;
+        let pers_in_idx: Vec<usize> = carry.iter().map(|&(i, _)| i).collect();
+        let carry_out_idx: Vec<usize> = carry.iter().map(|&(_, o)| o).collect();
+        let pers_names =
+            pers_in_idx.iter().map(|&i| man.inputs[i].name.clone()).collect::<Vec<_>>();
+        let batch_in_idx = man.input_indices(Role::Batch);
+
+        let init_host = artifact.load_init()?;
+        if init_host.len() != pers_in_idx.len() {
+            bail!("init.bin slot count mismatch");
+        }
+        let persistent = init_host
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<Vec<_>>>()
+            .context("converting init state")?;
+
+        Ok(Trainer {
+            idx_loss_scale: man.input_index("loss_scale")?,
+            idx_lr: man.input_index("lr")?,
+            idx_step: man.input_index("step")?,
+            idx_seed: man.input_index("seed")?,
+            out_loss: man.output_index("loss")?,
+            out_flag: man.output_index("grad_finite")?,
+            out_site_stats: man.output_index("site_stats").ok(),
+            out_grad_stats: man.output_index("grad_stats").ok(),
+            exe,
+            persistent,
+            pers_names,
+            pers_in_idx,
+            carry_out_idx,
+            batch_in_idx,
+            profiler: Profiler::new(),
+        })
+    }
+
+    /// Names of the batch slots, in feed order (callers build providers
+    /// against this).
+    pub fn batch_slot_names(&self) -> Vec<&str> {
+        self.batch_in_idx.iter().map(|&i| self.exe.manifest.inputs[i].name.as_str()).collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.exe
+            .manifest
+            .inputs
+            .iter()
+            .filter(|s| s.role == Role::Param)
+            .map(|s| s.element_count())
+            .sum()
+    }
+
+    /// One optimization step. `batch` must match [`Self::batch_slot_names`]
+    /// order; `capture_stats` additionally fetches the aux statistics.
+    pub fn step(
+        &mut self,
+        batch: &[HostValue],
+        loss_scale: f32,
+        lr: f32,
+        step_num: usize,
+        capture_stats: bool,
+    ) -> Result<StepOutputs> {
+        if batch.len() != self.batch_in_idx.len() {
+            bail!("expected {} batch tensors, got {}", self.batch_in_idx.len(), batch.len());
+        }
+        let man = self.exe.manifest.clone();
+
+        // --- assemble input literals in manifest order ---
+        let t_prep = std::time::Instant::now();
+        let batch_lits: Vec<xla::Literal> = batch
+            .iter()
+            .zip(self.batch_in_idx.iter())
+            .map(|(v, &i)| {
+                v.check_spec(&man.inputs[i])?;
+                v.to_literal()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let scalar_ls = HostValue::scalar_f32(loss_scale).to_literal()?;
+        let scalar_lr = HostValue::scalar_f32(lr).to_literal()?;
+        let scalar_step = HostValue::scalar_f32(step_num as f32).to_literal()?;
+        let scalar_seed = HostValue::scalar_i32(step_num as i32).to_literal()?;
+
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(man.inputs.len());
+        let mut pers_cursor = 0usize;
+        let mut batch_cursor = 0usize;
+        for i in 0..man.inputs.len() {
+            if pers_cursor < self.pers_in_idx.len() && self.pers_in_idx[pers_cursor] == i {
+                refs.push(&self.persistent[pers_cursor]);
+                pers_cursor += 1;
+            } else if batch_cursor < self.batch_in_idx.len()
+                && self.batch_in_idx[batch_cursor] == i
+            {
+                refs.push(&batch_lits[batch_cursor]);
+                batch_cursor += 1;
+            } else if i == self.idx_loss_scale {
+                refs.push(&scalar_ls);
+            } else if i == self.idx_lr {
+                refs.push(&scalar_lr);
+            } else if i == self.idx_step {
+                refs.push(&scalar_step);
+            } else if i == self.idx_seed {
+                refs.push(&scalar_seed);
+            } else {
+                bail!("input slot {i} ({}) has no binding", man.inputs[i].name);
+            }
+        }
+        self.profiler.add("prep", t_prep.elapsed());
+
+        // --- execute ---
+        let t_exec = std::time::Instant::now();
+        let mut outs = self.exe.run_literals(&refs)?;
+        self.profiler.add("device", t_exec.elapsed());
+
+        // --- extract scalars / stats, then carry persistent state ---
+        let t_post = std::time::Instant::now();
+        let loss = HostValue::from_literal(&outs[self.out_loss])?.item_f32()?;
+        let finite = HostValue::from_literal(&outs[self.out_flag])?.item_f32()? > 0.5;
+        let fetch_stats = |idx: Option<usize>, outs: &[xla::Literal]| -> Result<Option<Tensor>> {
+            match idx {
+                Some(i) if capture_stats => {
+                    Ok(Some(HostValue::from_literal(&outs[i])?.as_f32()?.clone()))
+                }
+                _ => Ok(None),
+            }
+        };
+        let site_stats = fetch_stats(self.out_site_stats, &outs)?;
+        let grad_stats = fetch_stats(self.out_grad_stats, &outs)?;
+
+        // move output literals into the persistent slots (zero-copy carry);
+        // indices are taken in descending order so swap_remove stays valid
+        let mut order: Vec<(usize, usize)> = self
+            .carry_out_idx
+            .iter()
+            .enumerate()
+            .map(|(slot, &oi)| (oi, slot))
+            .collect();
+        order.sort_by(|a, b| b.0.cmp(&a.0));
+        for (oi, slot) in order {
+            self.persistent[slot] = outs.swap_remove(oi);
+        }
+        self.profiler.add("post", t_post.elapsed());
+
+        Ok(StepOutputs { loss, grad_finite: finite, site_stats, grad_stats })
+    }
+
+    /// Current value of a persistent slot by manifest name.
+    pub fn persistent_host(&self, name: &str) -> Result<HostValue> {
+        let slot = self
+            .pers_names
+            .iter()
+            .position(|n| n == name)
+            .with_context(|| format!("no persistent slot '{name}'"))?;
+        HostValue::from_literal(&self.persistent[slot])
+    }
+
+    /// All persistent slots as (name, value) pairs (checkpointing).
+    pub fn persistent_snapshot(&self) -> Result<Vec<(String, HostValue)>> {
+        self.pers_names
+            .iter()
+            .zip(self.persistent.iter())
+            .map(|(n, l)| Ok((n.clone(), HostValue::from_literal(l)?)))
+            .collect()
+    }
+
+    /// Restore persistent slots from a checkpoint snapshot.
+    pub fn restore_persistent(&mut self, snapshot: &[(String, HostValue)]) -> Result<()> {
+        for (name, value) in snapshot {
+            let slot = self
+                .pers_names
+                .iter()
+                .position(|n| n == name)
+                .with_context(|| format!("checkpoint slot '{name}' unknown"))?;
+            self.persistent[slot] = value.to_literal()?;
+        }
+        Ok(())
+    }
+
+    /// Run a full training loop. `provider(step)` supplies batches in
+    /// [`Self::batch_slot_names`] order.
+    pub fn train(
+        &mut self,
+        opts: &TrainOptions,
+        mut provider: impl FnMut(usize) -> Vec<HostValue>,
+        mut on_log: impl FnMut(usize, &StepOutputs),
+    ) -> Result<TrainReport> {
+        let mut controller = LossScaleController::new(opts.loss_scale.clone());
+        let mut curve = Curve::new(&["loss", "lr", "loss_scale", "grad_finite"]);
+        let mut stats = StatsLog::new(
+            self.exe.manifest.site_stat_names.clone(),
+            self.exe.manifest.grad_stat_names.clone(),
+        );
+        let wall = std::time::Instant::now();
+        let mut bad_streak = 0usize;
+        let mut diverged = false;
+        let mut last_loss = f32::NAN;
+        let mut steps_run = 0usize;
+
+        for step in 1..=opts.steps {
+            let t_data = std::time::Instant::now();
+            let batch = provider(step - 1);
+            self.profiler.add("data", t_data.elapsed());
+
+            let scale = controller.scale_for_step();
+            let lr = opts.lr.at(step - 1);
+            let capture = opts.stats_every > 0 && step % opts.stats_every == 0;
+            let out = self.step(&batch, scale, lr, step, capture)?;
+            controller.observe(out.grad_finite);
+            steps_run = step;
+            last_loss = out.loss;
+
+            if capture {
+                stats.record(step, out.site_stats.as_ref(), out.grad_stats.as_ref());
+            }
+            if step % opts.log_every == 0 || step == opts.steps {
+                curve.push(
+                    step,
+                    &[
+                        out.loss as f64,
+                        lr as f64,
+                        scale as f64,
+                        if out.grad_finite { 1.0 } else { 0.0 },
+                    ],
+                );
+                on_log(step, &out);
+            }
+
+            // divergence detection (the paper's "NaN" table entries)
+            if !out.loss.is_finite() {
+                bad_streak += 1;
+                if bad_streak >= opts.divergence_patience {
+                    diverged = true;
+                    crate::log_warn!(
+                        "{}: diverged at step {step} (loss non-finite for {bad_streak} steps)",
+                        self.exe.manifest.name
+                    );
+                    break;
+                }
+            } else {
+                bad_streak = 0;
+            }
+        }
+
+        Ok(TrainReport {
+            curve,
+            stats,
+            diverged,
+            final_loss: last_loss,
+            n_overflows: controller.n_overflows,
+            n_scale_adjustments: controller.n_adjustments,
+            steps_run,
+            wall_secs: wall.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedules() {
+        let c = LrSchedule::Constant(0.1);
+        assert_eq!(c.at(0), 0.1);
+        assert_eq!(c.at(1000), 0.1);
+
+        let p = LrSchedule::Piecewise { base: 0.1, boundaries: vec![100, 200], decay: 10.0 };
+        assert_eq!(p.at(0), 0.1);
+        assert_eq!(p.at(99), 0.1);
+        assert!((p.at(100) - 0.01).abs() < 1e-9);
+        assert!((p.at(250) - 0.001).abs() < 1e-9);
+
+        let w = LrSchedule::WarmupInvSqrt { peak: 1.0, warmup: 100 };
+        assert!(w.at(0) < 0.05);
+        assert!((w.at(100) - 1.0).abs() < 1e-6);
+        assert!((w.at(400) - 0.5).abs() < 1e-6); // sqrt(100/400)
+        assert!(w.at(50) < w.at(100));
+    }
+
+    #[test]
+    fn default_options_sane() {
+        let o = TrainOptions::default();
+        assert!(o.steps > 0 && o.divergence_patience > 0);
+        assert!(matches!(o.loss_scale, LossScalePolicy::None));
+    }
+}

@@ -1,0 +1,100 @@
+//! Epoch shuffling + batch assembly.
+//!
+//! A [`Batcher`] yields shuffled index windows per epoch (dropping the
+//! ragged tail, like the reference training loops); model-specific code
+//! gathers rows into the manifest's `batch/*` slots.
+
+use crate::util::rng::{Pcg32, Rng};
+
+/// Shuffled fixed-size batch index iterator, reshuffling every epoch.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    n: usize,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Pcg32,
+    pub epoch: usize,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        assert!(batch <= n, "batch {batch} larger than dataset {n}");
+        let mut b = Batcher {
+            n,
+            batch,
+            order: (0..n).collect(),
+            cursor: 0,
+            rng: Pcg32::new(seed, 0xBA7C),
+            epoch: 0,
+        };
+        b.rng.shuffle(&mut b.order);
+        b
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Number of batches per epoch (tail dropped).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n / self.batch
+    }
+
+    /// Next batch of indices; reshuffles on epoch boundary.
+    pub fn next_batch(&mut self) -> &[usize] {
+        if self.cursor + self.batch > self.n {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let out = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_dataset_each_epoch() {
+        let mut b = Batcher::new(100, 10, 3);
+        let mut seen = vec![0usize; 100];
+        for _ in 0..10 {
+            for &i in b.next_batch().to_vec().iter() {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each index exactly once per epoch");
+        assert_eq!(b.epoch, 0);
+        b.next_batch();
+        assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn ragged_tail_dropped() {
+        let mut b = Batcher::new(105, 10, 3);
+        assert_eq!(b.batches_per_epoch(), 10);
+        for _ in 0..10 {
+            b.next_batch();
+        }
+        assert_eq!(b.epoch, 0);
+        b.next_batch(); // 11th rolls the epoch
+        assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn different_epochs_have_different_order() {
+        let mut b = Batcher::new(64, 64, 7);
+        let e0: Vec<usize> = b.next_batch().to_vec();
+        let e1: Vec<usize> = b.next_batch().to_vec();
+        assert_ne!(e0, e1);
+        let mut s0 = e0.clone();
+        let mut s1 = e1.clone();
+        s0.sort_unstable();
+        s1.sort_unstable();
+        assert_eq!(s0, s1);
+    }
+}

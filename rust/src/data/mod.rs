@@ -1,0 +1,22 @@
+//! Synthetic datasets standing in for the paper's data (offline image — no
+//! CIFAR/ImageNet/IWSLT/MovieLens downloads; DESIGN.md "Substitutions").
+//!
+//! Every generator is deterministic given a seed, produces class/structure
+//! that the corresponding paper model can actually learn, and exposes the
+//! tensor statistics that make low-precision training interesting (inputs
+//! normalized like image pipelines, long-tailed gradients, etc.).
+//!
+//! * [`synth_image`] — class-structured images (CIFAR-shaped and the
+//!   100-class ImageNet proxy).
+//! * [`synth_translation`] — sequence-transduction corpus (reversal +
+//!   affine token grammar) for the Transformer/BLEU pipeline.
+//! * [`synth_cf`] — latent-factor implicit feedback for NCF (HR/NDCG, the
+//!   1-positive-vs-99-negatives protocol).
+//! * [`batcher`] — epoch shuffling + batch assembly into manifest order.
+//! * [`prefetch`] — double-buffered background batch production.
+
+pub mod batcher;
+pub mod prefetch;
+pub mod synth_cf;
+pub mod synth_image;
+pub mod synth_translation;

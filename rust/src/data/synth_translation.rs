@@ -1,0 +1,188 @@
+//! Synthetic sequence-transduction corpus (the IWSLT'15 En-Vi stand-in).
+//!
+//! Source sentences are random token sequences; the "translation" is a
+//! deterministic grammar: the sequence is **reversed** and each token is
+//! mapped through an affine permutation of the vocabulary
+//! (`t ↦ ((t−R)·k + b) mod (V−R) + R` with k coprime to V−R, R = reserved
+//! specials). A transformer must therefore learn (a) a token-level mapping
+//! (embedding→output alignment) and (b) a position-level reversal (uses
+//! attention) — enough structure that training quality differences between
+//! numeric formats show up in BLEU, while remaining learnable by the
+//! paper's Transformer-tiny in minutes on CPU.
+//!
+//! Token ids: 0 = PAD, 1 = BOS, 2 = EOS (match python models/transformer).
+
+use crate::util::rng::{Pcg32, Rng};
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const RESERVED: i32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct TranslationCfg {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    /// affine map multiplier (must be coprime with vocab-RESERVED)
+    pub map_mul: i32,
+    pub map_add: i32,
+    pub seed: u64,
+}
+
+impl Default for TranslationCfg {
+    fn default() -> Self {
+        Self {
+            vocab: 64,
+            seq_len: 16,
+            n_train: 4096,
+            n_test: 512,
+            map_mul: 7,
+            map_add: 3,
+            seed: 11,
+        }
+    }
+}
+
+/// Materialized corpus: token matrices (N, T).
+pub struct TranslationDataset {
+    pub cfg: TranslationCfg,
+    pub train_src: Vec<i32>,
+    pub train_tgt: Vec<i32>,
+    pub test_src: Vec<i32>,
+    pub test_tgt: Vec<i32>,
+}
+
+impl TranslationCfg {
+    /// The ground-truth grammar: reverse + affine token map.
+    pub fn translate(&self, src: &[i32]) -> Vec<i32> {
+        let m = (self.vocab as i32) - RESERVED;
+        src.iter()
+            .rev()
+            .map(|&t| ((t - RESERVED) * self.map_mul + self.map_add).rem_euclid(m) + RESERVED)
+            .collect()
+    }
+}
+
+fn gen_split(cfg: &TranslationCfg, n: usize, rng: &mut Pcg32) -> (Vec<i32>, Vec<i32>) {
+    let t = cfg.seq_len;
+    let mut src = Vec::with_capacity(n * t);
+    let mut tgt = Vec::with_capacity(n * t);
+    for _ in 0..n {
+        let s: Vec<i32> = (0..t)
+            .map(|_| RESERVED + rng.next_below((cfg.vocab as i32 - RESERVED) as u64) as i32)
+            .collect();
+        let g = cfg.translate(&s);
+        src.extend_from_slice(&s);
+        tgt.extend_from_slice(&g);
+    }
+    (src, tgt)
+}
+
+impl TranslationDataset {
+    pub fn generate(cfg: TranslationCfg) -> Self {
+        assert!(gcd(cfg.map_mul as u64, (cfg.vocab as i32 - RESERVED) as u64) == 1);
+        let mut rng = Pcg32::new(cfg.seed, 0x7A57);
+        let (train_src, train_tgt) = gen_split(&cfg, cfg.n_train, &mut rng);
+        let (test_src, test_tgt) = gen_split(&cfg, cfg.n_test, &mut rng);
+        TranslationDataset { cfg, train_src, train_tgt, test_src, test_tgt }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_src.len() / self.cfg.seq_len
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_src.len() / self.cfg.seq_len
+    }
+
+    /// The decoder input for teacher forcing: `[BOS, tgt[..T-1]]`.
+    pub fn shift_right(tgt_row: &[i32]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(tgt_row.len());
+        out.push(BOS);
+        out.extend_from_slice(&tgt_row[..tgt_row.len() - 1]);
+        out
+    }
+
+    pub fn train_row(&self, i: usize) -> (&[i32], &[i32]) {
+        let t = self.cfg.seq_len;
+        (&self.train_src[i * t..(i + 1) * t], &self.train_tgt[i * t..(i + 1) * t])
+    }
+
+    pub fn test_row(&self, i: usize) -> (&[i32], &[i32]) {
+        let t = self.cfg.seq_len;
+        (&self.test_src[i * t..(i + 1) * t], &self.test_tgt[i * t..(i + 1) * t])
+    }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_is_bijective_per_position() {
+        let cfg = TranslationCfg::default();
+        let m = cfg.vocab as i32 - RESERVED;
+        let mut seen = vec![false; m as usize];
+        for t in RESERVED..cfg.vocab as i32 {
+            let out = cfg.translate(&[t]);
+            let v = out[0] - RESERVED;
+            assert!((0..m).contains(&v));
+            assert!(!seen[v as usize], "collision at {t}");
+            seen[v as usize] = true;
+        }
+    }
+
+    #[test]
+    fn translate_reverses() {
+        let cfg = TranslationCfg::default();
+        let src = vec![3, 4, 5, 6];
+        let tgt = cfg.translate(&src);
+        let tgt_rev_src: Vec<i32> = src.iter().rev().cloned().collect();
+        // position i of tgt is the mapping of src[T-1-i]
+        for (i, &t) in tgt.iter().enumerate() {
+            let expect = ((tgt_rev_src[i] - RESERVED) * cfg.map_mul + cfg.map_add)
+                .rem_euclid(cfg.vocab as i32 - RESERVED)
+                + RESERVED;
+            assert_eq!(t, expect);
+        }
+    }
+
+    #[test]
+    fn tokens_in_range_and_no_specials() {
+        let d = TranslationDataset::generate(TranslationCfg::default());
+        for &t in d.train_src.iter().chain(d.train_tgt.iter()) {
+            assert!((RESERVED..d.cfg.vocab as i32).contains(&t));
+        }
+    }
+
+    #[test]
+    fn shift_right_is_bos_prefixed() {
+        let row = vec![10, 11, 12, 13];
+        assert_eq!(TranslationDataset::shift_right(&row), vec![BOS, 10, 11, 12]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = TranslationDataset::generate(TranslationCfg::default());
+        let b = TranslationDataset::generate(TranslationCfg::default());
+        assert_eq!(a.train_src, b.train_src);
+    }
+
+    #[test]
+    fn rows_accessors() {
+        let d = TranslationDataset::generate(TranslationCfg::default());
+        let (s, t) = d.train_row(5);
+        assert_eq!(s.len(), d.cfg.seq_len);
+        assert_eq!(t, d.cfg.translate(s).as_slice());
+    }
+}

@@ -1,0 +1,348 @@
+//! Format introspection and measurement:
+//!
+//! * [`table_a1_rows`] — regenerates paper Table A1 from the format
+//!   definitions (exact).
+//! * [`fp8_binade_density`] — regenerates Fig. A1 (number of representable
+//!   FP8 values between consecutive powers of two) by enumeration.
+//! * [`quantization_error`] — SQNR / relative-error measurement of any
+//!   format on any tensor, used by the Fig. 3 bench (impact of α/β) and by
+//!   the perf benches.
+//! * [`HardwareCost`] — the §5 hardware cost model: extra ops/bytes for the
+//!   S2FP8 statistics unit and exponent-shift/mantissa-squeeze circuitry
+//!   relative to a plain FP8 datapath.
+
+use super::{fp8, s2fp8, FormatKind, NumericFormat};
+
+/// One row of Table A1 (formatted strings, so benches print exactly the
+/// paper's table shape).
+#[derive(Debug, Clone)]
+pub struct TableA1Row {
+    pub format: String,
+    pub bits: u32,
+    pub sem: String,
+    pub min_subnormal: String,
+    pub min_normal: String,
+    pub max_normal: String,
+    pub epsilon: String,
+    pub range: String,
+}
+
+fn pow2_str(x: f64) -> String {
+    let l = x.log2();
+    let r = l.round();
+    if (l - r).abs() < 0.02 {
+        format!("2^{}", r as i64)
+    } else {
+        // e.g. FP32/BF16 max normal ≈ 2^128: paper prints the approx power.
+        format!("≈2^{}", l.ceil() as i64)
+    }
+}
+
+/// Regenerate Table A1.
+pub fn table_a1_rows() -> Vec<TableA1Row> {
+    NumericFormat::all()
+        .into_iter()
+        .map(|f| TableA1Row {
+            format: f.name.to_string(),
+            bits: f.bits,
+            sem: format!("{}/{}/{}", f.sign_bits, f.exp_bits, f.mant_bits),
+            min_subnormal: pow2_str(f.min_subnormal),
+            min_normal: pow2_str(f.min_normal),
+            max_normal: pow2_str(f.max_normal),
+            epsilon: pow2_str(f.epsilon),
+            range: format!("2^{}", f.log2_range().round() as i64),
+        })
+        .collect()
+}
+
+/// Fig. A1: representable-value density of FP8 per binade
+/// `[2^e, 2^(e+1))`, by exhaustive enumeration of the 256 codes.
+/// Returns `(e, count)` pairs for positive finite values.
+pub fn fp8_binade_density() -> Vec<(i32, usize)> {
+    let mut counts = std::collections::BTreeMap::new();
+    for v in fp8::all_finite_values() {
+        if v > 0.0 {
+            let e = v.log2().floor() as i32;
+            *counts.entry(e).or_insert(0usize) += 1;
+        }
+    }
+    counts.into_iter().collect()
+}
+
+/// Quantization-error measurement of a format on a tensor.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantError {
+    /// Mean relative error over non-zero elements.
+    pub mean_rel: f64,
+    /// Max relative error.
+    pub max_rel: f64,
+    /// Signal-to-quantization-noise ratio in dB (10·log10 Σx² / Σ(x−x̂)²).
+    pub sqnr_db: f64,
+    /// Fraction of non-zero inputs flushed to exactly zero (underflow).
+    pub underflow_frac: f64,
+    /// Fraction of inputs saturated to the format max.
+    pub saturate_frac: f64,
+}
+
+/// Measure quantization error of `fmt` on `xs`.
+pub fn quantization_error(fmt: FormatKind, xs: &[f32]) -> QuantError {
+    let q = fmt.truncate_tensor(xs);
+    quantization_error_of(xs, &q, fmt)
+}
+
+/// Error of a precomputed quantization `q` of `xs`.
+pub fn quantization_error_of(xs: &[f32], q: &[f32], fmt: FormatKind) -> QuantError {
+    assert_eq!(xs.len(), q.len());
+    let mut sig = 0.0f64;
+    let mut noise = 0.0f64;
+    let mut rel_sum = 0.0f64;
+    let mut rel_max = 0.0f64;
+    let mut n_nonzero = 0usize;
+    let mut n_under = 0usize;
+    let mut n_sat = 0usize;
+    let max_mag = match fmt {
+        FormatKind::Fp8 => fp8::MAX_NORMAL as f64,
+        FormatKind::Fp16 => super::fp16::MAX_NORMAL as f64,
+        _ => f64::INFINITY,
+    };
+    for (&x, &y) in xs.iter().zip(q.iter()) {
+        let (x, y) = (x as f64, y as f64);
+        sig += x * x;
+        noise += (x - y) * (x - y);
+        if x != 0.0 {
+            n_nonzero += 1;
+            let r = (x - y).abs() / x.abs();
+            rel_sum += r;
+            rel_max = rel_max.max(r);
+            if y == 0.0 {
+                n_under += 1;
+            }
+            if y.abs() >= max_mag {
+                n_sat += 1;
+            }
+        }
+    }
+    let n = n_nonzero.max(1) as f64;
+    QuantError {
+        mean_rel: rel_sum / n,
+        max_rel: rel_max,
+        sqnr_db: if noise > 0.0 { 10.0 * (sig / noise).log10() } else { f64::INFINITY },
+        underflow_frac: n_under as f64 / n,
+        saturate_frac: n_sat as f64 / n,
+    }
+}
+
+/// Histogram of `log2|x|` (non-zero elements) — the Fig. 1 visualization
+/// of where a tensor's mass sits relative to FP8's representable window.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// Inclusive lower edge of the first bin (log2 magnitude).
+    pub lo: f32,
+    /// Bin width in log2 units.
+    pub width: f32,
+    pub counts: Vec<usize>,
+    pub n_zero: usize,
+    /// Fraction of non-zero mass below FP8's min subnormal (2^-16).
+    pub below_fp8: f64,
+    /// Fraction above FP8's max normal.
+    pub above_fp8: f64,
+}
+
+pub fn log_histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> LogHistogram {
+    let width = (hi - lo) / bins as f32;
+    let mut counts = vec![0usize; bins];
+    let mut n_zero = 0usize;
+    let mut below = 0usize;
+    let mut above = 0usize;
+    let mut n = 0usize;
+    for &x in xs {
+        if x == 0.0 || !x.is_finite() {
+            n_zero += 1;
+            continue;
+        }
+        n += 1;
+        let l = x.abs().log2();
+        if l < -16.0 {
+            below += 1;
+        }
+        if l > 16.0 {
+            above += 1;
+        }
+        let b = ((l - lo) / width).floor();
+        if b >= 0.0 && (b as usize) < bins {
+            counts[b as usize] += 1;
+        }
+    }
+    let n = n.max(1) as f64;
+    LogHistogram {
+        lo,
+        width,
+        counts,
+        n_zero,
+        below_fp8: below as f64 / n,
+        above_fp8: above as f64 / n,
+    }
+}
+
+/// §5 hardware cost model: per-tensor-element operation counts for the
+/// extra S2FP8 circuitry, relative to a plain FP8 convert unit. The paper
+/// argues the overhead "affects neither data throughput nor compute speed";
+/// this model quantifies it so the claim is checkable.
+#[derive(Debug, Clone, Copy)]
+pub struct HardwareCost {
+    /// Reduction ops per element for the statistics pass (Eq. 3): one
+    /// exponent-extract + one add (for μ) + one max (for m).
+    pub stats_ops_per_elem: f64,
+    /// Element-wise ops for apply-(α,β): exponent add (shift) + mantissa
+    /// multiply (squeeze).
+    pub apply_ops_per_elem: f64,
+    /// Extra bytes per tensor for the statistics (two scalars; the paper
+    /// suggests they could be stored in 8-bit).
+    pub stats_bytes_per_tensor: f64,
+    /// Relative memory footprint vs FP32 storage.
+    pub memory_ratio_vs_fp32: f64,
+}
+
+pub fn s2fp8_hardware_cost(tensor_elems: usize, stats_in_fp8: bool) -> HardwareCost {
+    let stats_bytes = if stats_in_fp8 { 2.0 } else { 8.0 };
+    HardwareCost {
+        stats_ops_per_elem: 3.0,
+        apply_ops_per_elem: 2.0,
+        stats_bytes_per_tensor: stats_bytes,
+        memory_ratio_vs_fp32: (tensor_elems as f64 + stats_bytes) / (4.0 * tensor_elems as f64),
+    }
+}
+
+/// Fig. 3 data: sweep a lognormal tensor family through the S2FP8
+/// transform, reporting (σ of log2|X|, α, β, mean-rel-error FP8,
+/// mean-rel-error S2FP8) — the "impact of the shifted and squeezed
+/// transformation".
+pub fn fig3_sweep(
+    center_log2: f32,
+    sigmas: &[f32],
+    n: usize,
+    seed: u64,
+) -> Vec<(f32, f32, f32, f64, f64)> {
+    use crate::util::rng::{Pcg32, Rng};
+    sigmas
+        .iter()
+        .map(|&sigma| {
+            let mut rng = Pcg32::new(seed, sigma.to_bits() as u64);
+            let xs: Vec<f32> = (0..n)
+                .map(|_| {
+                    let l = center_log2 + sigma * rng.next_normal();
+                    let s = if rng.next_f32() < 0.5 { -1.0 } else { 1.0 };
+                    s * (l as f64).exp2() as f32
+                })
+                .collect();
+            let codec = s2fp8::S2fp8Codec::fit(&xs);
+            let e_fp8 = quantization_error(FormatKind::Fp8, &xs);
+            let e_s2 = quantization_error(FormatKind::S2fp8, &xs);
+            (sigma, codec.alpha, codec.beta, e_fp8.mean_rel, e_s2.mean_rel)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_a1_matches_paper_strings() {
+        let rows = table_a1_rows();
+        let fp8 = rows.iter().find(|r| r.format == "FP8").unwrap();
+        assert_eq!(fp8.sem, "1/5/2");
+        assert_eq!(fp8.min_subnormal, "2^-16");
+        assert_eq!(fp8.min_normal, "2^-14");
+        assert_eq!(fp8.epsilon, "2^-3");
+        assert_eq!(fp8.range, "2^32");
+        let fp32 = rows.iter().find(|r| r.format == "IEEE-FP32").unwrap();
+        assert_eq!(fp32.range, "2^277");
+        assert_eq!(fp32.epsilon, "2^-24");
+    }
+
+    #[test]
+    fn fig_a1_density_is_4_per_binade_except_denormals() {
+        let d = fp8_binade_density();
+        // Binades from 2^-14 to 2^15 hold 4 values each (2 mantissa bits);
+        // the denormal binades hold fewer.
+        for &(e, c) in &d {
+            if (-14..=14).contains(&e) {
+                assert_eq!(c, 4, "binade {e}");
+            }
+        }
+        // top binade [2^15, 2^16): 4 values (2^15·{1,1.25,1.5,1.75})
+        assert_eq!(d.iter().find(|(e, _)| *e == 15).unwrap().1, 4);
+        // denormal binades: [2^-16,2^-15) has 1 (2^-16), [2^-15,2^-14) has 2.
+        assert_eq!(d.iter().find(|(e, _)| *e == -16).unwrap().1, 1);
+        assert_eq!(d.iter().find(|(e, _)| *e == -15).unwrap().1, 2);
+        // total positive finite values: 30·4 + 3 = 123
+        let total: usize = d.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 123);
+    }
+
+    #[test]
+    fn quant_error_fp8_epsilon_bound_in_range() {
+        // Uniform in [1, 2): all in range, rel err ≤ eps = 2^-3 (paper's
+        // machine-epsilon convention = max RNE relative error).
+        let xs: Vec<f32> = (0..1000).map(|i| 1.0 + i as f32 / 1000.0).collect();
+        let e = quantization_error(FormatKind::Fp8, &xs);
+        assert!(e.max_rel <= 0.125 + 1e-6, "max rel {}", e.max_rel);
+        assert_eq!(e.underflow_frac, 0.0);
+        assert_eq!(e.saturate_frac, 0.0);
+    }
+
+    #[test]
+    fn quant_error_detects_underflow_and_saturation() {
+        let xs = vec![1e-9f32, 1e-9, 1e9, 1.0];
+        let e = quantization_error(FormatKind::Fp8, &xs);
+        assert!((e.underflow_frac - 0.5).abs() < 1e-9);
+        assert!((e.saturate_frac - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn s2fp8_sqnr_beats_fp8_on_shifted_tensor() {
+        use crate::util::rng::{Pcg32, Rng};
+        let mut rng = Pcg32::new(1, 1);
+        let xs: Vec<f32> = (0..4096).map(|_| rng.next_lognormal(-14.0, 2.0)).collect();
+        let e8 = quantization_error(FormatKind::Fp8, &xs);
+        let es2 = quantization_error(FormatKind::S2fp8, &xs);
+        assert!(
+            es2.sqnr_db > e8.sqnr_db + 10.0,
+            "S2FP8 {} dB should beat FP8 {} dB by >10dB",
+            es2.sqnr_db,
+            e8.sqnr_db
+        );
+    }
+
+    #[test]
+    fn log_histogram_masses() {
+        let xs = vec![2.0f32.powi(-20); 50]
+            .into_iter()
+            .chain(vec![1.0f32; 50])
+            .chain(vec![0.0f32; 10])
+            .collect::<Vec<_>>();
+        let h = log_histogram(&xs, -32.0, 32.0, 64);
+        assert_eq!(h.n_zero, 10);
+        assert!((h.below_fp8 - 0.5).abs() < 1e-9);
+        assert_eq!(h.above_fp8, 0.0);
+        assert_eq!(h.counts.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn fig3_sweep_s2fp8_dominates() {
+        // Across widths, S2FP8 error stays below FP8's for off-center
+        // tensors (center 2^-20 is outside FP8's window).
+        for (sigma, alpha, _beta, e8, es2) in fig3_sweep(-20.0, &[0.5, 1.0, 2.0, 4.0], 2048, 7) {
+            assert!(es2 < e8, "sigma {sigma}: s2fp8 {es2} vs fp8 {e8}");
+            assert!(alpha > 0.0);
+        }
+    }
+
+    #[test]
+    fn hardware_cost_memory_ratio_approaches_quarter() {
+        let c = s2fp8_hardware_cost(1_000_000, true);
+        assert!((c.memory_ratio_vs_fp32 - 0.25).abs() < 1e-4);
+        assert_eq!(c.stats_bytes_per_tensor, 2.0);
+    }
+}

@@ -1,0 +1,80 @@
+//! BF16 (1/8/7, shares FP32's exponent range) — the 16-bit comparison point
+//! of Tables A1/A2. Kalamkar et al. 2019 attribute bfloat16's out-of-the-box
+//! success to its FP32-sized exponent; S2FP8 recovers the same property for
+//! 8 bits by learning α/β instead of spending exponent bits.
+
+/// Truncate an f32 to BF16 precision with round-to-nearest-even.
+#[inline]
+pub fn truncate(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let bits = x.to_bits();
+    // RNE on the low 16 bits: add 0x7FFF + lsb-of-kept-part, then mask.
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb) & 0xFFFF_0000;
+    f32::from_bits(rounded)
+}
+
+/// Encode to the 16-bit payload (high half of the rounded f32).
+#[inline]
+pub fn encode(x: f32) -> u16 {
+    (truncate(x).to_bits() >> 16) as u16
+}
+
+/// Decode a BF16 payload to f32 (exact).
+#[inline]
+pub fn decode(code: u16) -> f32 {
+    f32::from_bits((code as u32) << 16)
+}
+
+/// Machine epsilon, `2^-8`.
+pub const EPSILON: f32 = 1.0 / 256.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, 1.0078125 /* 1+2^-7 */] {
+            assert_eq!(truncate(v), v, "{v} should be representable");
+            assert_eq!(decode(encode(v)), v);
+        }
+    }
+
+    #[test]
+    fn rne_ties() {
+        // 1 + 2^-8 is exactly between 1.0 and 1+2^-7 → ties to even (1.0).
+        let tie = 1.0 + EPSILON;
+        assert_eq!(truncate(tie), 1.0);
+        // 1 + 3·2^-8 ties between 1+2^-7 and 1+2^-6 → even is 1+2^-6.
+        let tie2 = 1.0 + 3.0 * EPSILON;
+        assert_eq!(truncate(tie2), 1.0 + 4.0 * EPSILON);
+    }
+
+    #[test]
+    fn exponent_range_matches_f32() {
+        // BF16 keeps FP32's exponent: huge/tiny values survive.
+        assert!((truncate(1e38) - 1e38).abs() / 1e38 < EPSILON as f32 * 1.01);
+        assert!(truncate(1e-38) != 0.0);
+    }
+
+    #[test]
+    fn rounding_error_bounded() {
+        let mut x = 1e-6f32;
+        while x < 1e6 {
+            let e = (truncate(x) - x).abs() / x;
+            assert!(e <= EPSILON + 1e-9, "rel err {e} at {x}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn nan_and_overflow() {
+        assert!(truncate(f32::NAN).is_nan());
+        // Values whose rounding overflows the f32 exponent go to +inf,
+        // matching hardware bf16 conversions.
+        assert_eq!(truncate(f32::MAX), f32::INFINITY);
+    }
+}

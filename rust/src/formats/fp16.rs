@@ -1,0 +1,148 @@
+//! IEEE FP16 (1/5/10) — Table A1's half-precision row. Same 5-bit exponent
+//! as FP8 E5M2 (so the same narrow [2^-14, 2^16) normal range that forces
+//! loss scaling in Micikevicius et al. 2018), but 10 mantissa bits.
+
+/// Exponent bias.
+pub const BIAS: i32 = 15;
+/// Largest finite value, `(2 − 2^-10) · 2^15` = 65504.
+pub const MAX_NORMAL: f32 = 65504.0;
+/// Smallest positive normal, `2^-14`.
+pub const MIN_NORMAL: f32 = 6.103515625e-05;
+/// Smallest positive denormal, `2^-24`.
+pub const MIN_POSITIVE: f32 = 5.960464477539063e-08;
+/// Machine epsilon, `2^-11`.
+pub const EPSILON: f32 = 4.8828125e-04;
+
+/// Truncate an f32 to FP16 precision (RNE, saturating like our FP8 —
+/// consistent truncation semantics across the format zoo).
+pub fn truncate(x: f32) -> f32 {
+    if x.is_nan() || x == 0.0 {
+        return x;
+    }
+    let sign = if x.is_sign_negative() { -1.0 } else { 1.0 };
+    let abs = x.abs();
+    if abs > MAX_NORMAL {
+        return sign * MAX_NORMAL;
+    }
+    if abs < MIN_POSITIVE / 2.0 {
+        return sign * 0.0;
+    }
+    let e = ((abs.to_bits() >> 23) & 0xFF) as i32 - 127;
+    let eff = e.max(-(BIAS - 1));
+    let scale = exp2i(eff - 10);
+    let y = (abs / scale).round_ties_even() * scale;
+    if y > MAX_NORMAL {
+        sign * MAX_NORMAL
+    } else {
+        sign * y
+    }
+}
+
+#[inline]
+fn exp2i(e: i32) -> f32 {
+    // 2^e for e ≥ −126 (normal); e−10 ≥ −24−10 = −34 is always normal here?
+    // No: eff−10 can reach −24; −24 ≥ −126 so still a normal f32. Fine.
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// Encode to the 16-bit IEEE half payload.
+pub fn encode(x: f32) -> u16 {
+    let y = truncate(x);
+    if y.is_nan() {
+        return 0x7E00;
+    }
+    let sign = ((y.to_bits() >> 31) as u16) << 15;
+    let abs = y.abs();
+    if abs == 0.0 {
+        return sign;
+    }
+    let e = ((abs.to_bits() >> 23) & 0xFF) as i32 - 127;
+    if e < -14 {
+        // denormal: m = abs / 2^-24
+        let m = (abs / MIN_POSITIVE).round() as u16;
+        sign | m
+    } else {
+        let e_field = (e + BIAS) as u16;
+        let m = ((abs.to_bits() >> 13) & 0x3FF) as u16;
+        sign | (e_field << 10) | m
+    }
+}
+
+/// Decode an IEEE half payload to f32 (exact).
+pub fn decode(code: u16) -> f32 {
+    let sign = if code & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((code >> 10) & 0x1F) as i32;
+    let m = (code & 0x3FF) as f32;
+    match e {
+        0 => sign * m * MIN_POSITIVE,
+        31 => {
+            if m == 0.0 {
+                sign * f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        }
+        _ => sign * (1.0 + m / 1024.0) * exp2i(e - BIAS),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_consistent() {
+        assert_eq!(MIN_NORMAL, 2.0f32.powi(-14));
+        assert_eq!(MIN_POSITIVE, 2.0f32.powi(-24));
+        assert_eq!(EPSILON, 2.0f32.powi(-11));
+        assert_eq!(MAX_NORMAL, (2.0 - 2.0f32.powi(-10)) * 2.0f32.powi(15));
+    }
+
+    #[test]
+    fn roundtrip_representables() {
+        for v in [1.0f32, -1.0, 0.5, 1.0 + 2.0 * EPSILON, 1024.0, MIN_NORMAL, MAX_NORMAL] {
+            assert_eq!(truncate(v), v);
+            assert_eq!(decode(encode(v)), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn denormals() {
+        assert_eq!(truncate(MIN_POSITIVE), MIN_POSITIVE);
+        assert_eq!(truncate(MIN_POSITIVE * 0.4), 0.0);
+        assert_eq!(decode(encode(3.0 * MIN_POSITIVE)), 3.0 * MIN_POSITIVE);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(truncate(1e9), MAX_NORMAL);
+        assert_eq!(truncate(-1e9), -MAX_NORMAL);
+    }
+
+    #[test]
+    fn rounding_error_bounded() {
+        let mut x = 1e-4f32;
+        while x < 6e4 {
+            let e = (truncate(x) - x).abs() / x;
+            assert!(e <= EPSILON + 1e-9, "rel err {e} at {x}");
+            x *= 1.171;
+        }
+    }
+
+    #[test]
+    fn all_codes_decode_encode_roundtrip() {
+        for c in 0u32..=0xFFFF {
+            let c = c as u16;
+            let v = decode(c);
+            if v.is_nan() {
+                continue;
+            }
+            if v.is_infinite() {
+                assert_eq!(decode(encode(v)).abs(), MAX_NORMAL);
+                continue;
+            }
+            let rt = decode(encode(v));
+            assert_eq!(rt.to_bits(), v.to_bits(), "code {c:#06x} ({v}) → {rt}");
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Software implementations of the numeric formats studied by the paper.
+//!
+//! * [`fp8`] — IEEE-like FP8 **E5M2** (1 sign / 5 exponent / 2 mantissa,
+//!   bias 15), the paper's FP8: bit-exact encode/decode, round-to-nearest-
+//!   even truncation (paper §4.1), stochastic-rounding truncation
+//!   (the Wang et al. / Mellempudi et al. baseline), saturation semantics.
+//! * [`s2fp8`] — the paper's contribution: the Shifted-and-Squeezed
+//!   transform (Eq. 1–5). Statistics (μ, m), factors (α, β), tensor
+//!   round-trip truncation, and a packed compressed representation
+//!   (N bytes + 2 f32 statistics) for checkpoint/memory use.
+//! * [`bf16`] / [`fp16`] — the 16-bit comparison points of Tables A1/A2.
+//! * [`traits`] — the [`traits::NumericFormat`] abstraction shared by the
+//!   analysis and bench code.
+//! * [`analysis`] — format introspection: Table A1 rows, Fig. A1 binade
+//!   densities, quantization-error measurement, and the §5 hardware cost
+//!   model.
+
+pub mod analysis;
+pub mod bf16;
+pub mod fp16;
+pub mod fp8;
+pub mod s2fp8;
+pub mod traits;
+
+pub use traits::{FormatKind, NumericFormat};

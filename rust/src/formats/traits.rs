@@ -1,0 +1,196 @@
+//! The [`NumericFormat`] abstraction tying the format zoo together for the
+//! analysis/bench code (Table A1, Fig. A1, error sweeps).
+
+use super::{bf16, fp16, fp8, s2fp8};
+
+/// Which format (paper Table A1 + S2FP8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FormatKind {
+    Fp32,
+    Fp16,
+    Bf16,
+    Fp8,
+    S2fp8,
+}
+
+impl FormatKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FormatKind::Fp32 => "fp32",
+            FormatKind::Fp16 => "fp16",
+            FormatKind::Bf16 => "bf16",
+            FormatKind::Fp8 => "fp8",
+            FormatKind::S2fp8 => "s2fp8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" | "f32" => Some(FormatKind::Fp32),
+            "fp16" | "f16" => Some(FormatKind::Fp16),
+            "bf16" => Some(FormatKind::Bf16),
+            "fp8" | "f8" | "e5m2" => Some(FormatKind::Fp8),
+            "s2fp8" => Some(FormatKind::S2fp8),
+            _ => None,
+        }
+    }
+
+    /// All element-wise formats (S2FP8 needs per-tensor statistics, so it
+    /// participates through [`truncate_tensor`] instead).
+    pub fn elementwise() -> &'static [FormatKind] {
+        &[FormatKind::Fp32, FormatKind::Fp16, FormatKind::Bf16, FormatKind::Fp8]
+    }
+
+    /// Element-wise truncation (identity for FP32; panics for S2FP8 —
+    /// use [`truncate_tensor`]).
+    pub fn truncate(&self, x: f32) -> f32 {
+        match self {
+            FormatKind::Fp32 => x,
+            FormatKind::Fp16 => fp16::truncate(x),
+            FormatKind::Bf16 => bf16::truncate(x),
+            FormatKind::Fp8 => fp8::truncate(x),
+            FormatKind::S2fp8 => panic!("S2FP8 is a tensor format; use truncate_tensor"),
+        }
+    }
+
+    /// Tensor truncation (fits α/β for S2FP8; element-wise otherwise).
+    pub fn truncate_tensor(&self, xs: &[f32]) -> Vec<f32> {
+        match self {
+            FormatKind::S2fp8 => s2fp8::truncate_tensor(xs).0,
+            _ => xs.iter().map(|&x| self.truncate(x)).collect(),
+        }
+    }
+
+    /// Storage bits per element.
+    pub fn bits(&self) -> u32 {
+        match self {
+            FormatKind::Fp32 => 32,
+            FormatKind::Fp16 | FormatKind::Bf16 => 16,
+            FormatKind::Fp8 | FormatKind::S2fp8 => 8,
+        }
+    }
+}
+
+/// Static description of a floating-point format (Table A1 row).
+#[derive(Debug, Clone, Copy)]
+pub struct NumericFormat {
+    pub kind: FormatKind,
+    pub name: &'static str,
+    pub bits: u32,
+    pub sign_bits: u32,
+    pub exp_bits: u32,
+    pub mant_bits: u32,
+    /// Smallest positive denormal.
+    pub min_subnormal: f64,
+    /// Smallest positive normal.
+    pub min_normal: f64,
+    /// Largest finite value (approx. max normal, as the paper labels it).
+    pub max_normal: f64,
+    /// Machine epsilon (max relative RNE error bound × 2).
+    pub epsilon: f64,
+}
+
+impl NumericFormat {
+    /// log2 of the dynamic range `max_normal / min_subnormal` — the paper's
+    /// "Range" column (e.g. FP8 → 2^32).
+    pub fn log2_range(&self) -> f64 {
+        (self.max_normal / self.min_subnormal).log2()
+    }
+
+    pub fn all() -> Vec<NumericFormat> {
+        vec![
+            NumericFormat {
+                kind: FormatKind::Fp32,
+                name: "IEEE-FP32",
+                bits: 32,
+                sign_bits: 1,
+                exp_bits: 8,
+                mant_bits: 23,
+                min_subnormal: 2f64.powi(-149),
+                min_normal: 2f64.powi(-126),
+                max_normal: f32::MAX as f64,
+                epsilon: 2f64.powi(-24),
+            },
+            NumericFormat {
+                kind: FormatKind::Fp16,
+                name: "IEEE-FP16",
+                bits: 16,
+                sign_bits: 1,
+                exp_bits: 5,
+                mant_bits: 10,
+                min_subnormal: 2f64.powi(-24),
+                min_normal: 2f64.powi(-14),
+                max_normal: fp16::MAX_NORMAL as f64,
+                epsilon: 2f64.powi(-11),
+            },
+            NumericFormat {
+                kind: FormatKind::Bf16,
+                name: "BF16",
+                bits: 16,
+                sign_bits: 1,
+                exp_bits: 8,
+                mant_bits: 7,
+                min_subnormal: 2f64.powi(-133),
+                min_normal: 2f64.powi(-126),
+                max_normal: 3.3895314e38,
+                epsilon: 2f64.powi(-8),
+            },
+            NumericFormat {
+                kind: FormatKind::Fp8,
+                name: "FP8",
+                bits: 8,
+                sign_bits: 1,
+                exp_bits: 5,
+                mant_bits: 2,
+                min_subnormal: 2f64.powi(-16),
+                min_normal: 2f64.powi(-14),
+                max_normal: fp8::MAX_NORMAL as f64,
+                epsilon: 2f64.powi(-3),
+            },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(FormatKind::parse("s2fp8"), Some(FormatKind::S2fp8));
+        assert_eq!(FormatKind::parse("FP8"), Some(FormatKind::Fp8));
+        assert_eq!(FormatKind::parse("e5m2"), Some(FormatKind::Fp8));
+        assert_eq!(FormatKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn table_a1_ranges_match_paper() {
+        // Paper Table A1 "Range" column: FP32→2^277, FP16→2^40, BF16→2^261,
+        // FP8→2^32 (log2(max_normal / min_subnormal), rounded).
+        let by_name: std::collections::HashMap<_, _> =
+            NumericFormat::all().into_iter().map(|f| (f.name, f)).collect();
+        assert_eq!(by_name["IEEE-FP32"].log2_range().round() as i32, 277);
+        assert_eq!(by_name["IEEE-FP16"].log2_range().round() as i32, 40);
+        assert_eq!(by_name["BF16"].log2_range().round() as i32, 261);
+        assert_eq!(by_name["FP8"].log2_range().round() as i32, 32);
+    }
+
+    #[test]
+    fn elementwise_truncation_dispatch() {
+        assert_eq!(FormatKind::Fp32.truncate(1.2345), 1.2345);
+        assert_eq!(FormatKind::Fp8.truncate(1.3), 1.25);
+        assert_eq!(FormatKind::Bf16.truncate(1.0), 1.0);
+    }
+
+    #[test]
+    fn tensor_truncation_s2fp8_beats_fp8_on_small_tensors() {
+        let xs: Vec<f32> = (1..100).map(|i| i as f32 * 1e-8).collect();
+        let fp8_out = FormatKind::Fp8.truncate_tensor(&xs);
+        let s2_out = FormatKind::S2fp8.truncate_tensor(&xs);
+        assert!(fp8_out.iter().all(|&v| v == 0.0), "FP8 flushes 1e-8-scale tensors");
+        // α>1 expands the spread, so the far tail may still flush; the bulk
+        // of the tensor must survive (vs 0% under vanilla FP8).
+        let survived = s2_out.iter().filter(|&&v| v != 0.0).count();
+        assert!(survived * 10 >= s2_out.len() * 8, "S2FP8 preserved only {survived}/99");
+    }
+}

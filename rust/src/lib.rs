@@ -1,0 +1,54 @@
+//! # S2FP8 — Shifted and Squeezed 8-bit Floating Point Training
+//!
+//! Reproduction of *"Shifted and Squeezed 8-bit Floating Point format for
+//! Low-Precision Training of Deep Neural Networks"* (Cambier et al.,
+//! ICLR 2020) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build-time python): Pallas kernels for the S2FP8
+//!   truncation (paper Eq. 5) and the quantized GEMM, lowered with
+//!   `interpret=True` so they compile to plain HLO.
+//! * **Layer 2** (build-time python): JAX forward/backward graphs for the
+//!   paper's model zoo (ResNet, Transformer, NCF, MLP), with quantization
+//!   inserted around every matmul/conv in both passes (paper §4.1),
+//!   AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **Layer 3** (this crate): the runtime coordinator. Loads the HLO
+//!   artifacts via PJRT ([`runtime`]), owns the training loop, dynamic
+//!   loss-scaling, dataset synthesis, metrics, checkpoints and the bench
+//!   harness that regenerates every table and figure of the paper
+//!   ([`coordinator`], [`data`], [`metrics`], [`bench`]).
+//!
+//! The numeric formats themselves (bit-exact FP8 E5M2 with RNE and
+//! stochastic rounding, the S2FP8 shift/squeeze transform, BF16, FP16) are
+//! implemented in [`formats`] and cross-validated bit-for-bit against the
+//! python reference via golden files (see `rust/tests/golden_formats.rs`).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use s2fp8::formats::{fp8, s2fp8::S2fp8Codec};
+//!
+//! // Plain FP8 E5M2 truncation (round-to-nearest-even, saturating):
+//! assert_eq!(fp8::truncate(1.3), 1.25);
+//!
+//! // The paper's tensor transform: compute (alpha, beta), squeeze+shift,
+//! // truncate to FP8, undo the transform.
+//! let x = vec![1e-6_f32, 2e-6, -3e-6, 4e-6];
+//! let codec = S2fp8Codec::fit(&x);
+//! let y = codec.truncate_vec(&x);
+//! for (a, b) in x.iter().zip(y.iter()) {
+//!     assert!((a - b).abs() / a.abs().max(1e-12) < 0.1);
+//! }
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod formats;
+pub mod metrics;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based, matching the `xla` crate style).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,251 @@
+//! `s2fp8` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `train --config configs/<x>.toml [overrides]` — run a full training
+//!   experiment (dataset synthesis → AOT train loop → eval → curves/
+//!   checkpoints under `runs/<name>/`).
+//! * `list-artifacts [--dir artifacts]` — inventory of AOT programs.
+//! * `analyze-format` — regenerate paper Table A1 + Fig. A1 from the
+//!   format library, plus the §5 hardware cost model.
+//! * `quantize --format <f> --values a,b,c` — inspect the formats on
+//!   concrete numbers (α/β, round-trips, errors).
+//!
+//! Everything heavier (the per-table experiment harnesses) lives in
+//! `cargo bench --bench <table…>`; see DESIGN.md's experiment index.
+
+use anyhow::{bail, Context, Result};
+
+use s2fp8::bench::report::Table;
+use s2fp8::config::experiment::ExperimentConfig;
+use s2fp8::coordinator::loss_scale::LossScalePolicy;
+use s2fp8::coordinator::runner;
+use s2fp8::formats::{analysis, s2fp8 as s2, FormatKind};
+use s2fp8::runtime::{Artifact, Runtime};
+use s2fp8::util::argparse::{ArgError, Command, Parsed};
+use s2fp8::util::logging;
+
+fn main() {
+    logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "list-artifacts" => cmd_list(rest),
+        "analyze-format" => cmd_analyze(rest),
+        "quantize" => cmd_quantize(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `s2fp8 help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "s2fp8 — Shifted and Squeezed FP8 training coordinator (ICLR 2020 reproduction)\n\n\
+         subcommands:\n  \
+         train --config <toml> [--steps N] [--loss-scale P] [--name S]\n  \
+         list-artifacts [--dir artifacts]\n  \
+         analyze-format\n  \
+         quantize --format <fp8|s2fp8|bf16|fp16> --values 1.3,-2e-6,...\n"
+    );
+}
+
+fn handle_help(spec: &Command, r: Result<Parsed, ArgError>) -> Result<Parsed> {
+    match r {
+        Err(ArgError::HelpRequested) => {
+            print!("{}", spec.help_text());
+            std::process::exit(0);
+        }
+        other => Ok(other?),
+    }
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let spec = Command::new("train", "run a training experiment from a config file")
+        .opt_required("config", "path to configs/<experiment>.toml")
+        .opt_optional("steps", "override train.steps")
+        .opt_optional("loss-scale", "override loss scale policy (e.g. constant:100, dynamic)")
+        .opt_optional("name", "override experiment name (run output dir)")
+        .opt_optional("stats-every", "capture α/β statistics every N steps")
+        .opt_optional("eval-every", "evaluate every N steps (curve points)")
+        .flag("verbose", "debug logging");
+    let p = handle_help(&spec, spec.parse(args))?;
+    if p.flag("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    let mut cfg = ExperimentConfig::load(p.str("config"))?;
+    if let Some(s) = p.get("steps") {
+        cfg.steps = s.parse().context("--steps")?;
+    }
+    if let Some(ls) = p.get("loss-scale") {
+        cfg.loss_scale = LossScalePolicy::parse(ls).context("--loss-scale")?;
+    }
+    if let Some(n) = p.get("name") {
+        cfg.name = n.to_string();
+    }
+    if let Some(se) = p.get("stats-every") {
+        cfg.stats_every = se.parse().context("--stats-every")?;
+    }
+    if let Some(ee) = p.get("eval-every") {
+        cfg.eval_every = ee.parse().context("--eval-every")?;
+    }
+
+    let rt = Runtime::cpu()?;
+    let out = runner::run_experiment(&rt, &cfg)?;
+    println!("\n=== {} ===", out.name);
+    println!("artifact        : {}", out.artifact);
+    println!("parameters      : {}", out.param_count);
+    println!("steps run       : {}", out.steps_run);
+    println!("wall time       : {:.1}s", out.wall_secs);
+    println!("diverged        : {}", out.diverged);
+    println!("final loss      : {:.4}", out.curve.last("loss").unwrap_or(f64::NAN));
+    println!("final metric    : {:.4}", out.final_metric);
+    println!("final metric2   : {:.4}", out.final_metric2);
+    println!("overflows       : {}", out.n_overflows);
+    println!("scale adjusts   : {}", out.n_scale_adjustments);
+    println!("\nstep-time breakdown:\n{}", out.profile);
+    println!("outputs under runs/{}/", out.name);
+    Ok(())
+}
+
+fn cmd_list(args: &[String]) -> Result<()> {
+    let spec = Command::new("list-artifacts", "inventory of AOT programs")
+        .opt("dir", "artifacts", "artifact directory");
+    let p = handle_help(&spec, spec.parse(args))?;
+    let dir = p.str("dir");
+    let names = Artifact::list(dir)?;
+    let mut t = Table::new(
+        &format!("AOT artifacts in {dir}"),
+        &["name", "kind", "model", "format", "batch", "params", "hlo KiB"],
+    );
+    for name in names {
+        let a = Artifact::load(dir, &name)?;
+        let hlo_kib = std::fs::metadata(&a.hlo_path).map(|m| m.len() / 1024).unwrap_or(0);
+        t.row(vec![
+            name,
+            a.manifest.kind.clone(),
+            a.manifest.meta_str("model").unwrap_or("-").to_string(),
+            a.manifest
+                .meta_str("fmt_tag")
+                .or(a.manifest.meta_str("format"))
+                .unwrap_or("-")
+                .to_string(),
+            a.manifest.meta_usize("batch").map(|b| b.to_string()).unwrap_or("-".into()),
+            a.param_count().to_string(),
+            hlo_kib.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_analyze(_args: &[String]) -> Result<()> {
+    // Table A1
+    let mut t = Table::new(
+        "Table A1 — floating point formats (regenerated from the format library)",
+        &[
+            "Format", "Bits", "s/e/m", "Min subnormal", "Min normal", "Max normal",
+            "Machine eps", "Range",
+        ],
+    );
+    for r in analysis::table_a1_rows() {
+        t.row(vec![
+            r.format,
+            r.bits.to_string(),
+            r.sem,
+            r.min_subnormal,
+            r.min_normal,
+            r.max_normal,
+            r.epsilon,
+            r.range,
+        ]);
+    }
+    t.print();
+
+    // Fig A1
+    let mut f = Table::new(
+        "Fig. A1 — FP8 representable-value density per binade [2^e, 2^(e+1))",
+        &["e", "values", "note"],
+    );
+    for (e, c) in analysis::fp8_binade_density() {
+        let note = match e {
+            -16 | -15 => "denormal",
+            15 => "top binade (max 57344)",
+            _ => "",
+        };
+        f.row(vec![e.to_string(), c.to_string(), note.to_string()]);
+    }
+    f.print();
+
+    // §5 hardware cost
+    let cost = analysis::s2fp8_hardware_cost(1 << 20, true);
+    println!("§5 hardware cost model (1M-element tensor, FP8 statistics):");
+    println!(
+        "  stats pass      : {:.1} ops/element (exp-extract + add + max)",
+        cost.stats_ops_per_elem
+    );
+    println!(
+        "  shift/squeeze   : {:.1} ops/element (exponent add, mantissa scale)",
+        cost.apply_ops_per_elem
+    );
+    println!("  stats overhead  : {} bytes/tensor", cost.stats_bytes_per_tensor);
+    println!("  memory vs FP32  : {:.4}× (the paper's ≈4× reduction)", cost.memory_ratio_vs_fp32);
+    Ok(())
+}
+
+fn cmd_quantize(args: &[String]) -> Result<()> {
+    let spec = Command::new("quantize", "inspect format behaviour on concrete values")
+        .opt("format", "s2fp8", "fp8 | s2fp8 | bf16 | fp16")
+        .opt_required("values", "comma-separated f32 values (one tensor)");
+    let p = handle_help(&spec, spec.parse(args))?;
+    let fmt = FormatKind::parse(p.str("format")).context("bad --format")?;
+    let xs: Vec<f32> = p
+        .str("values")
+        .split(',')
+        .map(|s| s.trim().parse::<f32>().map_err(|e| anyhow::anyhow!("'{s}': {e}")))
+        .collect::<Result<_>>()?;
+    if fmt == FormatKind::S2fp8 {
+        let stats = s2::stats(&xs);
+        let codec = s2::S2fp8Codec::fit(&xs);
+        if let Some(st) = stats {
+            println!("μ = {:.4}  m = {:.4}  (over {} non-zero)", st.mu, st.max, st.n_nonzero);
+        }
+        println!("α = {:.4}  β = {:.4}", codec.alpha, codec.beta);
+    }
+    let out = fmt.truncate_tensor(&xs);
+    let mut t =
+        Table::new(&format!("{} round-trip", fmt.name()), &["input", "output", "rel err"]);
+    for (a, b) in xs.iter().zip(out.iter()) {
+        let rel = if *a != 0.0 { (a - b).abs() / a.abs() } else { 0.0 };
+        t.row(vec![format!("{a:e}"), format!("{b:e}"), format!("{rel:.4}")]);
+    }
+    t.print();
+    let e = analysis::quantization_error_of(&xs, &out, fmt);
+    println!(
+        "mean rel {:.4}  max rel {:.4}  sqnr {:.1} dB  underflow {:.0}%  saturate {:.0}%",
+        e.mean_rel,
+        e.max_rel,
+        e.sqnr_db,
+        100.0 * e.underflow_frac,
+        100.0 * e.saturate_frac
+    );
+    Ok(())
+}

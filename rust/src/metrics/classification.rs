@@ -1,0 +1,93 @@
+//! Top-1 / top-k classification accuracy from logits (paper Tables 1–2).
+
+use crate::tensor::Tensor;
+
+/// Top-1 accuracy of rank-2 logits (B, C) against integer labels.
+pub fn top1_accuracy(logits: &Tensor, labels: &[i32]) -> f64 {
+    assert_eq!(logits.shape()[0], labels.len());
+    let preds = logits.argmax_rows();
+    let correct =
+        preds.iter().zip(labels.iter()).filter(|(p, l)| **p as i32 == **l).count();
+    correct as f64 / labels.len() as f64
+}
+
+/// Top-k accuracy.
+pub fn topk_accuracy(logits: &Tensor, labels: &[i32], k: usize) -> f64 {
+    assert_eq!(logits.shape().len(), 2);
+    let (b, c) = (logits.shape()[0], logits.shape()[1]);
+    assert!(k <= c);
+    let mut correct = 0usize;
+    for i in 0..b {
+        let row = logits.row(i);
+        let target = labels[i] as usize;
+        let target_v = row[target];
+        // rank of target = number of strictly-greater entries
+        let rank = row.iter().filter(|&&v| v > target_v).count();
+        if rank < k {
+            correct += 1;
+        }
+    }
+    correct as f64 / b as f64
+}
+
+/// Mean softmax cross-entropy of logits against labels (validation loss,
+/// Figs. 6/A2's right panels).
+pub fn xent(logits: &Tensor, labels: &[i32]) -> f64 {
+    let (b, c) = (logits.shape()[0], logits.shape()[1]);
+    let mut total = 0.0f64;
+    for i in 0..b {
+        let row = logits.row(i);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let logsum: f64 = row.iter().map(|&v| ((v as f64) - max).exp()).sum::<f64>().ln() + max;
+        total += logsum - row[labels[i] as usize] as f64;
+        debug_assert!(labels[i] >= 0 && (labels[i] as usize) < c);
+    }
+    total / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Tensor {
+        Tensor::new(
+            vec![3, 4],
+            vec![
+                0.1, 2.0, 0.3, 0.0, // pred 1
+                5.0, 1.0, 1.0, 1.0, // pred 0
+                0.0, 0.0, 0.1, 3.0, // pred 3
+            ],
+        )
+    }
+
+    #[test]
+    fn top1() {
+        assert_eq!(top1_accuracy(&logits(), &[1, 0, 3]), 1.0);
+        assert!((top1_accuracy(&logits(), &[1, 0, 0]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_is_monotone_in_k() {
+        let l = logits();
+        let labels = [2, 1, 0];
+        let a1 = topk_accuracy(&l, &labels, 1);
+        let a2 = topk_accuracy(&l, &labels, 2);
+        let a4 = topk_accuracy(&l, &labels, 4);
+        assert!(a1 <= a2 && a2 <= a4);
+        assert_eq!(a4, 1.0);
+    }
+
+    #[test]
+    fn xent_matches_hand_computed() {
+        let l = Tensor::new(vec![1, 2], vec![0.0, 0.0]);
+        // uniform logits over 2 classes → ln 2
+        assert!((xent(&l, &[0]) - 2.0f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn xent_decreases_with_confidence() {
+        let weak = Tensor::new(vec![1, 2], vec![1.0, 0.0]);
+        let strong = Tensor::new(vec![1, 2], vec![5.0, 0.0]);
+        assert!(xent(&strong, &[0]) < xent(&weak, &[0]));
+    }
+}

@@ -1,0 +1,128 @@
+//! Training-curve recording: per-step/per-eval scalar series written as
+//! CSV — the data behind Figs. 6, 7, 8, A2 (and §Perf breakdowns).
+
+use std::io::Write;
+use std::path::Path;
+
+/// A named set of aligned scalar columns indexed by step.
+#[derive(Debug, Clone, Default)]
+pub struct Curve {
+    pub columns: Vec<String>,
+    pub rows: Vec<(usize, Vec<f64>)>,
+}
+
+impl Curve {
+    pub fn new(columns: &[&str]) -> Self {
+        Curve { columns: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, step: usize, values: &[f64]) {
+        assert_eq!(values.len(), self.columns.len(), "column count mismatch");
+        self.rows.push((step, values.to_vec()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Last value of a column.
+    pub fn last(&self, col: &str) -> Option<f64> {
+        let idx = self.columns.iter().position(|c| c == col)?;
+        self.rows.last().map(|(_, v)| v[idx])
+    }
+
+    /// Column values as a vec.
+    pub fn column(&self, col: &str) -> Vec<f64> {
+        let idx = self.columns.iter().position(|c| c == col).expect("unknown column");
+        self.rows.iter().map(|(_, v)| v[idx]).collect()
+    }
+
+    /// Render CSV (header `step,<cols>`).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step");
+        for c in &self.columns {
+            s.push(',');
+            s.push_str(c);
+        }
+        s.push('\n');
+        for (step, vals) in &self.rows {
+            s.push_str(&step.to_string());
+            for v in vals {
+                s.push(',');
+                s.push_str(&format!("{v}"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    /// Parse back from CSV (tests, report tooling).
+    pub fn from_csv(text: &str) -> Option<Self> {
+        let mut lines = text.lines();
+        let header = lines.next()?;
+        let mut cols = header.split(',');
+        if cols.next()? != "step" {
+            return None;
+        }
+        let columns: Vec<String> = cols.map(String::from).collect();
+        let mut rows = Vec::new();
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut parts = line.split(',');
+            let step: usize = parts.next()?.parse().ok()?;
+            let vals: Vec<f64> = parts.map(|p| p.parse().unwrap_or(f64::NAN)).collect();
+            if vals.len() != columns.len() {
+                return None;
+            }
+            rows.push((step, vals));
+        }
+        Some(Curve { columns, rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_query() {
+        let mut c = Curve::new(&["loss", "acc"]);
+        c.push(0, &[2.3, 0.1]);
+        c.push(10, &[1.1, 0.5]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.last("acc"), Some(0.5));
+        assert_eq!(c.column("loss"), vec![2.3, 1.1]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut c = Curve::new(&["loss"]);
+        c.push(1, &[0.5]);
+        c.push(2, &[0.25]);
+        let text = c.to_csv();
+        let back = Curve::from_csv(&text).unwrap();
+        assert_eq!(back.columns, c.columns);
+        assert_eq!(back.rows, c.rows);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn wrong_arity_panics() {
+        let mut c = Curve::new(&["a", "b"]);
+        c.push(0, &[1.0]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation metrics computed in rust (the serving side of the paper's
+//! evaluation): top-1 accuracy, corpus BLEU (paper Table 3), HR@K/NDCG@K
+//! (paper Table 4), and training-curve recording (Figs. 6–8, A2).
+
+pub mod bleu;
+pub mod classification;
+pub mod curve;
+pub mod ranking;

@@ -1,0 +1,95 @@
+//! Ranking metrics for NCF (paper §4.4 / Table 4 / Fig. 8): Hit Ratio @ K
+//! and NDCG @ K under the 1-positive-vs-N-negatives protocol of
+//! He et al. 2017.
+
+/// Rank of the positive among (positive + negatives), 0-based.
+/// `scores[0]` is the positive's score. Ties with negatives count half
+/// (the standard expected-rank convention) — quantized scoring produces
+/// exact ties, and counting them fully against the positive would report
+/// below-chance HR for an unbiased scorer.
+pub fn rank_of_positive(scores: &[f32]) -> usize {
+    let pos = scores[0];
+    let better = scores[1..].iter().filter(|&&s| s > pos).count();
+    let ties = scores[1..].iter().filter(|&&s| s == pos).count();
+    better + ties / 2
+}
+
+/// HR@K over a batch of score vectors (each vector: positive first).
+pub fn hit_ratio_at(scores_per_user: &[Vec<f32>], k: usize) -> f64 {
+    let hits = scores_per_user.iter().filter(|s| rank_of_positive(s) < k).count();
+    hits as f64 / scores_per_user.len().max(1) as f64
+}
+
+/// NDCG@K: 1/log2(rank+2) if the positive is in the top-K else 0
+/// (single-relevant-item form used by the NCF paper).
+pub fn ndcg_at(scores_per_user: &[Vec<f32>], k: usize) -> f64 {
+    let total: f64 = scores_per_user
+        .iter()
+        .map(|s| {
+            let r = rank_of_positive(s);
+            if r < k {
+                1.0 / ((r as f64 + 2.0).log2())
+            } else {
+                0.0
+            }
+        })
+        .sum();
+    total / scores_per_user.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_counts_better_negatives() {
+        assert_eq!(rank_of_positive(&[5.0, 1.0, 2.0, 3.0]), 0);
+        assert_eq!(rank_of_positive(&[2.5, 1.0, 9.0, 3.0]), 2);
+        // a single tie rounds down to rank 0 (expected-rank convention)
+        assert_eq!(rank_of_positive(&[2.0, 2.0]), 0);
+        assert_eq!(rank_of_positive(&[2.0, 2.0, 2.0]), 1);
+        assert_eq!(rank_of_positive(&[2.0, 3.0, 2.0]), 1 + 0);
+    }
+
+    #[test]
+    fn hr_and_ndcg_perfect() {
+        let scores = vec![vec![9.0, 1.0, 2.0], vec![8.0, 0.5, 0.1]];
+        assert_eq!(hit_ratio_at(&scores, 10), 1.0);
+        assert!((ndcg_at(&scores, 10) - 1.0).abs() < 1e-12); // rank 0 → 1/log2(2)=1
+    }
+
+    #[test]
+    fn hr_at_k_boundary() {
+        // positive ranked exactly k-th (0-based k-1) is a hit; k-th+1 is not
+        let mut v = vec![0.0f32; 11];
+        v[0] = 5.0;
+        for (i, x) in v.iter_mut().enumerate().skip(1) {
+            *x = 10.0 + i as f32;
+        } // 10 better negatives → rank 10
+        assert_eq!(hit_ratio_at(&[v.clone()], 10), 0.0);
+        assert_eq!(hit_ratio_at(&[v], 11), 1.0);
+    }
+
+    #[test]
+    fn ndcg_discounts_by_rank() {
+        let rank0 = vec![vec![9.0, 1.0, 1.0]];
+        let rank1 = vec![vec![5.0, 9.0, 1.0]];
+        let rank2 = vec![vec![5.0, 9.0, 8.0]];
+        let n0 = ndcg_at(&rank0, 10);
+        let n1 = ndcg_at(&rank1, 10);
+        let n2 = ndcg_at(&rank2, 10);
+        assert!(n0 > n1 && n1 > n2);
+        assert!((n1 - 1.0 / 3.0f64.log2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_scores_hr10_near_expected() {
+        use crate::util::rng::{Pcg32, Rng};
+        let mut rng = Pcg32::new(5, 0);
+        let users: Vec<Vec<f32>> =
+            (0..4000).map(|_| (0..100).map(|_| rng.next_f32()).collect()).collect();
+        let hr = hit_ratio_at(&users, 10);
+        // uniform scores → P(rank < 10 of 100) = 0.1
+        assert!((hr - 0.1).abs() < 0.02, "hr {hr}");
+    }
+}

@@ -1,0 +1,187 @@
+//! Artifact discovery & loading: `<dir>/<name>.hlo.txt`,
+//! `<name>.manifest.json`, and (train steps) `<name>.init.bin` — the
+//! initial (params, opt_state, model_state) leaves concatenated in
+//! manifest input order, so the rust trainer starts from exactly the
+//! initialization the python recipe produced.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::literal::HostValue;
+use super::manifest::{Dtype, Manifest, Role};
+
+/// One loadable AOT program.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub manifest: Manifest,
+    pub hlo_path: PathBuf,
+    pub init_path: Option<PathBuf>,
+}
+
+impl Artifact {
+    /// Load `<dir>/<name>.{hlo.txt,manifest.json[,init.bin]}`.
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let dir = dir.as_ref();
+        let man_path = dir.join(format!("{name}.manifest.json"));
+        let hlo_path = dir.join(format!("{name}.hlo.txt"));
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {}", man_path.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        if !hlo_path.exists() {
+            bail!("missing HLO file {}", hlo_path.display());
+        }
+        let init_path = {
+            let p = dir.join(format!("{name}.init.bin"));
+            p.exists().then_some(p)
+        };
+        Ok(Artifact { manifest, hlo_path, init_path })
+    }
+
+    /// All artifact names in a directory (from `index.json` if present,
+    /// otherwise by scanning for manifests).
+    pub fn list(dir: impl AsRef<Path>) -> Result<Vec<String>> {
+        let dir = dir.as_ref();
+        let index = dir.join("index.json");
+        if index.exists() {
+            let j = crate::util::json::Json::parse(&std::fs::read_to_string(&index)?)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            return Ok(j
+                .get("artifacts")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect());
+        }
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+            let path = entry?.path();
+            if let Some(fname) = path.file_name().and_then(|s| s.to_str()) {
+                if let Some(stem) = fname.strip_suffix(".manifest.json") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Parse the persistent-input initial values from `init.bin`:
+    /// the param/opt/state leaves, in manifest input order.
+    pub fn load_init(&self) -> Result<Vec<HostValue>> {
+        let path = self
+            .init_path
+            .as_ref()
+            .with_context(|| format!("artifact {} has no init.bin", self.manifest.name))?;
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        for spec in self.manifest.inputs.iter().filter(|s| s.role.is_persistent()) {
+            let len = spec.byte_len();
+            if off + len > bytes.len() {
+                bail!(
+                    "init.bin too short for {}: need {} at offset {}, have {}",
+                    spec.name,
+                    len,
+                    off,
+                    bytes.len()
+                );
+            }
+            let chunk = &bytes[off..off + len];
+            let v = match spec.dtype {
+                Dtype::F32 => {
+                    HostValue::F32(crate::tensor::Tensor::from_bytes(spec.shape.clone(), chunk))
+                }
+                Dtype::I32 => {
+                    let data = chunk
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    HostValue::i32(spec.shape.clone(), data)
+                }
+            };
+            out.push(v);
+            off += len;
+        }
+        if off != bytes.len() {
+            bail!(
+                "init.bin for {} has {} trailing bytes (layout drift between aot.py and manifest?)",
+                self.manifest.name,
+                bytes.len() - off
+            );
+        }
+        Ok(out)
+    }
+
+    /// Convenience: specs of the persistent inputs, in order.
+    pub fn persistent_specs(&self) -> Vec<&super::manifest::TensorSpec> {
+        self.manifest.inputs.iter().filter(|s| s.role.is_persistent()).collect()
+    }
+
+    /// Number of trainable parameters (for logging / README claims).
+    pub fn param_count(&self) -> usize {
+        self.manifest
+            .inputs
+            .iter()
+            .filter(|s| s.role == Role::Param)
+            .map(|s| s.element_count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_artifact(dir: &Path, name: &str) {
+        let manifest = format!(
+            r#"{{"name":"{name}","kind":"train_step",
+            "inputs":[
+              {{"name":"params/w","shape":[2,2],"dtype":"f32","role":"param"}},
+              {{"name":"opt/w","shape":[2,2],"dtype":"f32","role":"opt"}},
+              {{"name":"batch/x","shape":[1,2],"dtype":"f32","role":"batch"}}],
+            "outputs":[
+              {{"name":"loss","shape":[],"dtype":"f32","role":"loss"}},
+              {{"name":"opt/w","shape":[2,2],"dtype":"f32","role":"opt"}},
+              {{"name":"params/w","shape":[2,2],"dtype":"f32","role":"param"}}],
+            "stats_sites":{{"site_stats":[],"grad_stats":[]}},
+            "meta":{{"model":"toy","batch":1}}}}"#
+        );
+        std::fs::write(dir.join(format!("{name}.manifest.json")), manifest).unwrap();
+        std::fs::write(dir.join(format!("{name}.hlo.txt")), "HloModule fake").unwrap();
+        let mut bin = Vec::new();
+        for v in [1.0f32, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0] {
+            bin.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(dir.join(format!("{name}.init.bin")), bin).unwrap();
+    }
+
+    #[test]
+    fn load_and_init_roundtrip() {
+        let dir = std::env::temp_dir().join("s2fp8_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fake_artifact(&dir, "toy_train");
+        let a = Artifact::load(&dir, "toy_train").unwrap();
+        assert_eq!(a.manifest.name, "toy_train");
+        assert_eq!(a.param_count(), 4);
+        let init = a.load_init().unwrap();
+        assert_eq!(init.len(), 2);
+        assert_eq!(init[0].as_f32().unwrap().data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(init[1].as_f32().unwrap().data(), &[0.0; 4]);
+        let names = Artifact::list(&dir).unwrap();
+        assert!(names.contains(&"toy_train".to_string()));
+        let map = a.manifest.carry_map().unwrap();
+        assert_eq!(map, vec![(0, 2), (1, 1)]);
+    }
+
+    #[test]
+    fn truncated_init_bin_is_detected() {
+        let dir = std::env::temp_dir().join("s2fp8_artifact_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fake_artifact(&dir, "toy2_train");
+        std::fs::write(dir.join("toy2_train.init.bin"), [0u8; 12]).unwrap();
+        let a = Artifact::load(&dir, "toy2_train").unwrap();
+        assert!(a.load_init().is_err());
+    }
+}

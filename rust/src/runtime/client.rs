@@ -1,0 +1,67 @@
+//! PJRT client wrapper with a compile cache.
+//!
+//! One [`Runtime`] per process; compiling an HLO module with XLA is
+//! expensive (hundreds of ms for the ResNet train steps), so compiled
+//! executables are cached by artifact name. `PjRtClient` is `Rc`-based
+//! (not `Send`), so the runtime lives on the coordinator thread; worker
+//! threads only produce batches (see `data::prefetch`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::artifact::Artifact;
+use super::executable::Executable;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log_debug!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact (cached by name).
+    pub fn compile(&self, artifact: &Artifact) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(&artifact.manifest.name) {
+            return Ok(exe.clone());
+        }
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&artifact.hlo_path)
+            .with_context(|| format!("parsing {}", artifact.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", artifact.manifest.name))?;
+        crate::log_info!(
+            "compiled {} in {:.2}s",
+            artifact.manifest.name,
+            t.elapsed().as_secs_f64()
+        );
+        let exe = Rc::new(Executable::new(exe, artifact.manifest.clone()));
+        self.cache.borrow_mut().insert(artifact.manifest.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Load + compile by name from an artifact directory.
+    pub fn load(&self, dir: impl AsRef<std::path::Path>, name: &str) -> Result<Rc<Executable>> {
+        let artifact = Artifact::load(dir, name)?;
+        self.compile(&artifact)
+    }
+}

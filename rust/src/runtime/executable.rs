@@ -1,0 +1,87 @@
+//! A compiled AOT program with manifest-aware typed I/O.
+//!
+//! `aot.py` lowers with `return_tuple=True`, so every program returns one
+//! tuple literal; [`Executable::run`] decomposes it into the manifest's
+//! output slots and validates shapes. Inputs are validated against the
+//! manifest before execution — a mismatch is a coordinator bug, caught
+//! here with names instead of an opaque XLA shape error.
+
+use anyhow::{bail, Context, Result};
+
+use super::literal::HostValue;
+use super::manifest::Manifest;
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+impl Executable {
+    pub(super) fn new(exe: xla::PjRtLoadedExecutable, manifest: Manifest) -> Self {
+        Executable { exe, manifest }
+    }
+
+    /// Execute with host values; returns outputs in manifest order.
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        let lits = self.to_input_literals(inputs)?;
+        let outs = self.run_literals(&lits)?;
+        outs.iter().map(HostValue::from_literal).collect()
+    }
+
+    /// Validate + convert inputs (callers that keep literals resident
+    /// across steps use this once per changed slot).
+    pub fn to_input_literals(&self, inputs: &[HostValue]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest lists {}",
+                self.manifest.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        inputs
+            .iter()
+            .zip(self.manifest.inputs.iter())
+            .map(|(v, spec)| {
+                v.check_spec(spec)
+                    .with_context(|| format!("in {}", self.manifest.name))?;
+                v.to_literal()
+            })
+            .collect()
+    }
+
+    /// Execute with prepared literals; returns the decomposed output tuple
+    /// as literals, in manifest order. This is the hot path — see
+    /// `coordinator::Trainer` for the literal-reuse strategy.
+    pub fn run_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.manifest.name))?;
+        let tuple = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.manifest.name))?;
+        let outs = tuple.to_tuple().context("decomposing output tuple")?;
+        if outs.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: program returned {} outputs, manifest lists {}",
+                self.manifest.name,
+                outs.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Convenience for single-output programs (kernels, eval steps).
+    pub fn run1(&self, inputs: &[HostValue]) -> Result<HostValue> {
+        let mut outs = self.run(inputs)?;
+        if outs.len() != 1 {
+            bail!("{}: expected 1 output, got {}", self.manifest.name, outs.len());
+        }
+        Ok(outs.pop().unwrap())
+    }
+}

@@ -1,0 +1,175 @@
+//! Host tensors crossing the PJRT boundary.
+//!
+//! [`HostValue`] is the coordinator's currency: an f32 [`Tensor`] or an i32
+//! array. Conversions to/from `xla::Literal` are exact byte copies
+//! (row-major little-endian on both sides).
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Dtype, TensorSpec};
+
+/// A host-side tensor of one of the supported runtime dtypes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostValue {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        HostValue::F32(Tensor::new(shape, data))
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::I32 { shape, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostValue::F32(Tensor::scalar(v))
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostValue::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => t.shape(),
+            HostValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostValue::F32(_) => Dtype::F32,
+            HostValue::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            _ => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Scalar extraction for loss/flag outputs.
+    pub fn item_f32(&self) -> Result<f32> {
+        let t = self.as_f32()?;
+        if t.len() != 1 {
+            bail!("item_f32 on tensor of shape {:?}", t.shape());
+        }
+        Ok(t.data()[0])
+    }
+
+    /// Check against a manifest slot.
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() || self.dtype() != spec.dtype {
+            bail!(
+                "value shape {:?}/{:?} does not match spec '{}' {:?}/{:?}",
+                self.shape(),
+                self.dtype(),
+                spec.name,
+                spec.shape,
+                spec.dtype
+            );
+        }
+        Ok(())
+    }
+
+    /// Convert to an `xla::Literal`.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, Vec<u8>) = match self {
+            HostValue::F32(t) => (xla::ElementType::F32, t.to_bytes()),
+            HostValue::I32 { data, .. } => {
+                let mut b = Vec::with_capacity(data.len() * 4);
+                for v in data {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+                (xla::ElementType::S32, b)
+            }
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, self.shape(), &bytes)
+            .context("creating literal")
+    }
+
+    /// Read an `xla::Literal` back into a host value.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match lit.ty().context("literal type")? {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>().context("literal data")?;
+                Ok(HostValue::f32(dims, data))
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>().context("literal data")?;
+                Ok(HostValue::i32(dims, data))
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let v = HostValue::f32(vec![2, 3], vec![1., -2., 3.5, 0., 5., 6.]);
+        let lit = v.to_literal().unwrap();
+        let back = HostValue::from_literal(&lit).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let v = HostValue::i32(vec![4], vec![1, -7, 0, 42]);
+        let lit = v.to_literal().unwrap();
+        let back = HostValue::from_literal(&lit).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn scalar_roundtrip_and_item() {
+        let v = HostValue::scalar_f32(3.25);
+        let lit = v.to_literal().unwrap();
+        let back = HostValue::from_literal(&lit).unwrap();
+        assert_eq!(back.item_f32().unwrap(), 3.25);
+        assert_eq!(back.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn spec_check() {
+        use super::super::manifest::Role;
+        let v = HostValue::f32(vec![2], vec![0.0, 1.0]);
+        let good = TensorSpec {
+            name: "x".into(),
+            shape: vec![2],
+            dtype: Dtype::F32,
+            role: Role::Batch,
+        };
+        let bad = TensorSpec {
+            name: "x".into(),
+            shape: vec![3],
+            dtype: Dtype::F32,
+            role: Role::Batch,
+        };
+        assert!(v.check_spec(&good).is_ok());
+        assert!(v.check_spec(&bad).is_err());
+    }
+}

@@ -1,0 +1,326 @@
+//! The L2→L3 artifact contract (parsed from `*.manifest.json`).
+//!
+//! A manifest records the *flattened* input and output layout of a lowered
+//! program: jax flattens pytrees in canonical order (dict keys sorted), and
+//! `aot.py` writes one entry per leaf with a slash-separated name, its
+//! shape/dtype, and a [`Role`] that tells the trainer which runtime slot
+//! the leaf belongs to (persistent param/opt/state vs per-step batch vs
+//! scalar knobs).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Element type of a tensor crossing the runtime boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// What a tensor slot means to the trainer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Trainable parameter (persistent across steps, checkpointed).
+    Param,
+    /// Optimizer state (persistent).
+    Opt,
+    /// Model state, e.g. BatchNorm running stats (persistent).
+    State,
+    /// Per-step data input.
+    Batch,
+    /// Per-step scalar knob (loss_scale, lr, step, seed).
+    Scalar,
+    /// Scalar training loss output.
+    Loss,
+    /// Gradient-health flag output (1.0 = all finite).
+    Flag,
+    /// Auxiliary statistics output (site_stats / grad_stats).
+    Aux,
+    /// Eval outputs.
+    Logits,
+    Tokens,
+    Out,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "param" => Role::Param,
+            "opt" => Role::Opt,
+            "state" => Role::State,
+            "batch" => Role::Batch,
+            "scalar" => Role::Scalar,
+            "loss" => Role::Loss,
+            "flag" => Role::Flag,
+            "aux" => Role::Aux,
+            "logits" => Role::Logits,
+            "tokens" => Role::Tokens,
+            "out" => Role::Out,
+            other => bail!("unknown role '{other}'"),
+        })
+    }
+
+    /// Persistent slots are carried from one step's outputs into the next
+    /// step's inputs (params, optimizer state, model state).
+    pub fn is_persistent(&self) -> bool {
+        matches!(self, Role::Param | Role::Opt | Role::State)
+    }
+}
+
+/// One flattened tensor slot.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub role: Role,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j.get("name").as_str().context("spec missing name")?.to_string();
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .context("spec missing shape")?
+            .iter()
+            .map(|v| v.as_usize().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.get("dtype").as_str().context("spec missing dtype")?)?;
+        let role = Role::parse(j.get("role").as_str().context("spec missing role")?)?;
+        Ok(TensorSpec { name, shape, dtype, role })
+    }
+}
+
+/// Parsed manifest of one AOT program.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub site_stat_names: Vec<String>,
+    pub grad_stat_names: Vec<String>,
+    pub meta: Json,
+}
+
+impl Manifest {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let name = j.get("name").as_str().context("manifest missing name")?.to_string();
+        let kind = j.get("kind").as_str().context("manifest missing kind")?.to_string();
+        let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .as_arr()
+                .with_context(|| format!("manifest missing {key}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let names = |path: &[&str]| -> Vec<String> {
+            j.at(path)
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect()
+        };
+        Ok(Manifest {
+            name,
+            kind,
+            inputs: parse_specs("inputs")?,
+            outputs: parse_specs("outputs")?,
+            site_stat_names: names(&["stats_sites", "site_stats"]),
+            grad_stat_names: names(&["stats_sites", "grad_stats"]),
+            meta: j.get("meta").clone(),
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Indices of inputs with the given role, in manifest order.
+    pub fn input_indices(&self, role: Role) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn output_indices(&self, role: Role) -> Vec<usize> {
+        self.outputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Index of a uniquely-named input (scalars: "loss_scale", "lr", ...).
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("input '{name}' not in manifest {}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("output '{name}' not in manifest {}", self.name))
+    }
+
+    /// For every persistent input, the output index holding its next-step
+    /// value (matched by name — input order is (params, opt, state, …)
+    /// while outputs follow jax's sorted-key flattening, so the orders
+    /// differ). Also validates shapes/dtypes. Returns pairs of
+    /// (input index, output index).
+    pub fn carry_map(&self) -> Result<Vec<(usize, usize)>> {
+        let mut map = Vec::new();
+        for (ii, is) in self.inputs.iter().enumerate() {
+            if !is.role.is_persistent() {
+                continue;
+            }
+            let oi = self
+                .outputs
+                .iter()
+                .position(|os| os.role.is_persistent() && os.name == is.name)
+                .with_context(|| {
+                    format!("manifest {}: no output carries input '{}'", self.name, is.name)
+                })?;
+            let os = &self.outputs[oi];
+            if os.shape != is.shape || os.dtype != is.dtype {
+                bail!(
+                    "manifest {}: carry mismatch for '{}': {:?} vs {:?}",
+                    self.name,
+                    is.name,
+                    is.shape,
+                    os.shape
+                );
+            }
+            map.push((ii, oi));
+        }
+        let n_out = self.outputs.iter().filter(|s| s.role.is_persistent()).count();
+        if n_out != map.len() {
+            bail!(
+                "manifest {}: {} persistent outputs but {} carried inputs",
+                self.name,
+                n_out,
+                map.len()
+            );
+        }
+        Ok(map)
+    }
+
+    /// Meta accessor helpers.
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).as_str()
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).as_usize()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "mlp_s2fp8_train", "kind": "train_step",
+      "inputs": [
+        {"name":"params/fc0/b","shape":[128],"dtype":"f32","role":"param"},
+        {"name":"params/fc0/w","shape":[256,128],"dtype":"f32","role":"param"},
+        {"name":"opt/fc0/b","shape":[128],"dtype":"f32","role":"opt"},
+        {"name":"opt/fc0/w","shape":[256,128],"dtype":"f32","role":"opt"},
+        {"name":"batch/x","shape":[64,256],"dtype":"f32","role":"batch"},
+        {"name":"batch/y","shape":[64],"dtype":"i32","role":"batch"},
+        {"name":"loss_scale","shape":[],"dtype":"f32","role":"scalar"},
+        {"name":"lr","shape":[],"dtype":"f32","role":"scalar"},
+        {"name":"step","shape":[],"dtype":"f32","role":"scalar"},
+        {"name":"seed","shape":[],"dtype":"i32","role":"scalar"}
+      ],
+      "outputs": [
+        {"name":"grad_finite","shape":[],"dtype":"f32","role":"flag"},
+        {"name":"loss","shape":[],"dtype":"f32","role":"loss"},
+        {"name":"opt/fc0/b","shape":[128],"dtype":"f32","role":"opt"},
+        {"name":"opt/fc0/w","shape":[256,128],"dtype":"f32","role":"opt"},
+        {"name":"params/fc0/b","shape":[128],"dtype":"f32","role":"param"},
+        {"name":"params/fc0/w","shape":[256,128],"dtype":"f32","role":"param"}
+      ],
+      "stats_sites": {"site_stats": ["fc0/a"], "grad_stats": ["fc0/w"]},
+      "meta": {"model": "mlp", "format": "s2fp8", "batch": 64}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "mlp_s2fp8_train");
+        assert_eq!(m.inputs.len(), 10);
+        assert_eq!(m.input_indices(Role::Param), vec![0, 1]);
+        assert_eq!(m.input_indices(Role::Batch), vec![4, 5]);
+        assert_eq!(m.input_index("loss_scale").unwrap(), 6);
+        assert_eq!(m.output_index("loss").unwrap(), 1);
+        assert_eq!(m.meta_str("format"), Some("s2fp8"));
+        assert_eq!(m.meta_usize("batch"), Some(64));
+        assert_eq!(m.site_stat_names, vec!["fc0/a"]);
+    }
+
+    #[test]
+    fn carry_map_matches_by_name_across_orderings() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        // persistent inputs [params/b, params/w, opt/b, opt/w] map onto the
+        // alphabetically-flattened outputs [.., opt/b, opt/w, params/b,
+        // params/w] by NAME, not by position.
+        let map = m.carry_map().unwrap();
+        assert_eq!(map, vec![(0, 4), (1, 5), (2, 2), (3, 3)]);
+    }
+
+    #[test]
+    fn carry_map_rejects_shape_mismatch() {
+        let bad = SAMPLE.replace(
+            r#"{"name":"params/fc0/b","shape":[128],"dtype":"f32","role":"param"},
+        {"name":"params/fc0/w","shape":[256,128],"dtype":"f32","role":"param"}
+      ]"#,
+            r#"{"name":"params/fc0/b","shape":[64],"dtype":"f32","role":"param"},
+        {"name":"params/fc0/w","shape":[256,128],"dtype":"f32","role":"param"}
+      ]"#,
+        );
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.carry_map().is_err());
+    }
+
+    #[test]
+    fn spec_byte_len() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.inputs[1].element_count(), 256 * 128);
+        assert_eq!(m.inputs[1].byte_len(), 256 * 128 * 4);
+        assert_eq!(m.inputs[6].element_count(), 1); // scalar
+    }
+}

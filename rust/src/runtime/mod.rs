@@ -1,0 +1,25 @@
+//! Layer-3 runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `*.manifest.json`) produced by `python/compile/aot.py` and executes them
+//! on the PJRT CPU client via the `xla` crate. Python never runs here.
+//!
+//! * [`manifest`] — the L2→L3 contract: flattened input/output tensor
+//!   layout, roles, statistics-site names, model metadata.
+//! * [`artifact`] — artifact discovery and loading (HLO text + manifest +
+//!   initial-parameter binary).
+//! * [`literal`] — [`HostValue`] (host tensor, f32 or i32) ⇄ `xla::Literal`
+//!   conversion.
+//! * [`client`] — the PJRT client wrapper ([`client::Runtime`]) with its
+//!   compile cache.
+//! * [`executable`] — a compiled program with manifest-aware typed I/O.
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+pub mod literal;
+pub mod manifest;
+
+pub use artifact::Artifact;
+pub use client::Runtime;
+pub use executable::Executable;
+pub use literal::HostValue;
+pub use manifest::{Dtype, Manifest, Role, TensorSpec};

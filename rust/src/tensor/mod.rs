@@ -1,0 +1,220 @@
+//! Host-side tensor: a flat row-major `f32` buffer plus a shape. This is
+//! deliberately minimal — all heavy math runs inside the AOT-compiled XLA
+//! executables; the coordinator only needs to build batches, slice
+//! checkpoints and compute metrics.
+
+use crate::util::rng::Rng;
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn filled(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    /// Standard-normal tensor (reproducible).
+    pub fn randn(shape: Vec<usize>, rng: &mut impl Rng) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: (0..n).map(|_| rng.next_normal()).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Scalar extraction (singleton tensors of any rank).
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on tensor of shape {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Gather rows of the leading dimension into a new tensor (batching).
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        assert!(!self.shape.is_empty());
+        let row: usize = self.shape[1..].iter().product();
+        let mut out = Vec::with_capacity(idx.len() * row);
+        for &i in idx {
+            out.extend_from_slice(&self.data[i * row..(i + 1) * row]);
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = idx.len();
+        Tensor::new(shape, out)
+    }
+
+    /// Argmax along the last axis of a rank-2 tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape.len(), 2);
+        (0..self.shape[0])
+            .map(|i| {
+                let r = self.row(i);
+                let mut best = 0;
+                for (j, &v) in r.iter().enumerate() {
+                    if v > r[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64) as f32
+    }
+
+    /// Max |x|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+    }
+
+    /// True if any element is NaN or infinite.
+    pub fn has_nonfinite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// Raw little-endian bytes (for PJRT literal creation / checkpoints).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for &v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(shape: Vec<usize>, bytes: &[u8]) -> Self {
+        assert_eq!(bytes.len() % 4, 0);
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Self::new(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn construction_and_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn gather_rows_batches() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|i| i as f32).collect());
+        let b = t.gather_rows(&[3, 0]);
+        assert_eq!(b.shape(), &[2, 2]);
+        assert_eq!(b.data(), &[6., 7., 0., 1.]);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.3, 2.0, -1.0, 1.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut rng = Pcg32::new(1, 1);
+        let t = Tensor::randn(vec![3, 5], &mut rng);
+        let b = t.to_bytes();
+        let t2 = Tensor::from_bytes(vec![3, 5], &b);
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let t = Tensor::new(vec![3], vec![1.0, -4.0, 3.0]);
+        assert_eq!(t.mean(), 0.0);
+        assert_eq!(t.abs_max(), 4.0);
+        assert!(!t.has_nonfinite());
+        let t2 = Tensor::new(vec![2], vec![f32::NAN, 0.0]);
+        assert!(t2.has_nonfinite());
+    }
+
+    #[test]
+    fn reshape_and_item() {
+        let t = Tensor::scalar(7.0);
+        assert_eq!(t.item(), 7.0);
+        let t = Tensor::zeros(vec![2, 6]).reshape(vec![3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+    }
+}

@@ -1,0 +1,289 @@
+//! Declarative command-line argument parsing (in-tree stand-in for `clap`,
+//! which is not in the offline vendor set).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults and required markers, positional arguments, and generated
+//! `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option/flag.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub required: bool,
+    pub is_flag: bool,
+}
+
+/// A (sub)command parser.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown option '--{0}'")]
+    Unknown(String),
+    #[error("option '--{0}' requires a value")]
+    MissingValue(String),
+    #[error("missing required option '--{0}'")]
+    MissingRequired(String),
+    #[error("missing positional argument <{0}>")]
+    MissingPositional(String),
+    #[error("invalid value for '--{key}': {msg}")]
+    Invalid { key: String, msg: String },
+    #[error("unknown subcommand '{0}'")]
+    UnknownSubcommand(String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// `--key <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            required: false,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Required `--key <value>` option.
+    pub fn opt_required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, required: true, is_flag: false });
+        self
+    }
+
+    /// Optional `--key <value>` with no default (absent ⇒ `None`).
+    pub fn opt_optional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, required: false, is_flag: false });
+        self
+    }
+
+    /// Boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, required: false, is_flag: true });
+        self
+    }
+
+    /// Positional argument (required, in declaration order).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = write!(s, "\nusage: {}", self.name);
+        for (p, _) in &self.positionals {
+            let _ = write!(s, " <{p}>");
+        }
+        let _ = writeln!(s, " [options]\n");
+        if !self.positionals.is_empty() {
+            let _ = writeln!(s, "positionals:");
+            for (p, h) in &self.positionals {
+                let _ = writeln!(s, "  <{p:<18}> {h}");
+            }
+        }
+        let _ = writeln!(s, "options:");
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("--{}", o.name)
+            } else if let Some(d) = &o.default {
+                format!("--{} <v={d}>", o.name)
+            } else if o.required {
+                format!("--{} <v, required>", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let _ = writeln!(s, "  {left:<28} {}", o.help);
+        }
+        let _ = writeln!(s, "  {:<28} show this help", "--help");
+        s
+    }
+
+    /// Parse a raw argument list (excluding the command name itself).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, ArgError> {
+        let mut out = Parsed::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.name.to_string(), d.clone());
+            }
+            if o.is_flag {
+                out.flags.insert(o.name.to_string(), false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(ArgError::HelpRequested);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| ArgError::Unknown(key.clone()))?;
+                if spec.is_flag {
+                    out.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i).cloned().ok_or(ArgError::MissingValue(key.clone()))?
+                        }
+                    };
+                    out.values.insert(key, val);
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if o.required && !out.values.contains_key(o.name) {
+                return Err(ArgError::MissingRequired(o.name.to_string()));
+            }
+        }
+        if out.positionals.len() < self.positionals.len() {
+            return Err(ArgError::MissingPositional(
+                self.positionals[out.positionals.len()].0.to_string(),
+            ));
+        }
+        Ok(out)
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> &str {
+        self.get(key).unwrap_or_else(|| panic!("option --{key} not declared/set"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        *self.flags.get(key).unwrap_or(&false)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, key: &str) -> Result<T, ArgError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(key).ok_or_else(|| ArgError::MissingRequired(key.to_string()))?;
+        raw.parse::<T>().map_err(|e| ArgError::Invalid { key: key.to_string(), msg: e.to_string() })
+    }
+
+    pub fn usize(&self, key: &str) -> usize {
+        self.parse_num(key).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn u64(&self, key: &str) -> u64 {
+        self.parse_num(key).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn f32(&self, key: &str) -> f32 {
+        self.parse_num(key).unwrap_or_else(|e| panic!("{e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .opt("steps", "100", "number of steps")
+            .opt("format", "s2fp8", "numeric format")
+            .opt_required("config", "config path")
+            .flag("verbose", "chatty")
+            .positional("model", "model name")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let p = cmd().parse(&sv(&["mlp", "--config", "c.toml", "--steps=250"])).unwrap();
+        assert_eq!(p.positional(0), Some("mlp"));
+        assert_eq!(p.usize("steps"), 250);
+        assert_eq!(p.str("format"), "s2fp8");
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn flags_and_equals_syntax() {
+        let p = cmd().parse(&sv(&["m", "--verbose", "--config=c", "--format", "fp8"])).unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.str("format"), "fp8");
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        let e = cmd().parse(&sv(&["m"])).unwrap_err();
+        assert!(matches!(e, ArgError::MissingRequired(k) if k == "config"));
+    }
+
+    #[test]
+    fn missing_positional_is_error() {
+        let e = cmd().parse(&sv(&["--config", "c"])).unwrap_err();
+        assert!(matches!(e, ArgError::MissingPositional(k) if k == "model"));
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        let e = cmd().parse(&sv(&["m", "--config", "c", "--nope"])).unwrap_err();
+        assert!(matches!(e, ArgError::Unknown(k) if k == "nope"));
+    }
+
+    #[test]
+    fn help_requested() {
+        let e = cmd().parse(&sv(&["--help"])).unwrap_err();
+        assert!(matches!(e, ArgError::HelpRequested));
+        let txt = cmd().help_text();
+        assert!(txt.contains("--steps"));
+        assert!(txt.contains("<model"));
+    }
+
+    #[test]
+    fn numeric_parse_error_reported() {
+        let p = cmd().parse(&sv(&["m", "--config", "c", "--steps", "abc"])).unwrap();
+        assert!(p.parse_num::<usize>("steps").is_err());
+    }
+}

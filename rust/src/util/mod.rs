@@ -1,0 +1,19 @@
+//! General-purpose substrates built in-tree (the build environment is
+//! offline: no `rand`, `serde`, `clap`, `log` facade wiring, or `proptest`).
+//!
+//! Everything here is deliberately small, dependency-free and unit-tested:
+//!
+//! * [`rng`] — deterministic PRNGs (SplitMix64, PCG32) + distributions.
+//! * [`json`] — a complete JSON parser/writer (artifact manifests).
+//! * [`argparse`] — declarative CLI argument parsing.
+//! * [`logging`] — leveled, timestamped stderr logging.
+//! * [`timer`] — monotonic stopwatch + simple profiling scopes.
+//! * [`prop`] — a miniature property-based testing framework with
+//!   shrinking (stand-in for `proptest`).
+
+pub mod argparse;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod timer;

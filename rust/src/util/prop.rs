@@ -1,0 +1,270 @@
+//! A miniature property-based testing framework (in-tree stand-in for
+//! `proptest`, which is not in the offline vendor set).
+//!
+//! Design: a [`Gen<T>`] produces random values from a [`Pcg32`]; a property
+//! is a `Fn(&T) -> Result<(), String>`. The runner draws `cases` inputs,
+//! and on the first failure greedily shrinks using the generator's
+//! [`Gen::shrink`] candidates until a local minimum is reached, then panics
+//! with the minimal counterexample and the seed needed to replay it.
+//!
+//! Used heavily by `rust/tests/prop_formats.rs` and
+//! `rust/tests/prop_coordinator.rs` for format/coordinator invariants.
+
+use crate::util::rng::{Pcg32, Rng};
+
+/// A generator of random values with optional shrinking.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Pcg32) -> T;
+
+    /// Candidate simplifications of `value` (smaller-is-simpler).
+    fn shrink(&self, _value: &T) -> Vec<T> {
+        Vec::new()
+    }
+}
+
+/// Generator from plain closures (no shrinking).
+pub struct FnGen<F>(pub F);
+
+impl<T, F: Fn(&mut Pcg32) -> T> Gen<T> for FnGen<F> {
+    fn generate(&self, rng: &mut Pcg32) -> T {
+        (self.0)(rng)
+    }
+}
+
+/// Uniform `f32` in `[lo, hi)`, shrinking towards 0 and the bounds.
+pub struct F32Range {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen<f32> for F32Range {
+    fn generate(&self, rng: &mut Pcg32) -> f32 {
+        rng.next_range_f32(self.lo, self.hi)
+    }
+
+    fn shrink(&self, value: &f32) -> Vec<f32> {
+        let mut c = Vec::new();
+        for cand in [0.0f32, self.lo, *value / 2.0, value.trunc()] {
+            if cand != *value && cand >= self.lo && cand < self.hi {
+                c.push(cand);
+            }
+        }
+        c
+    }
+}
+
+/// "Interesting" f32s for numeric-format testing: uniform over a wide
+/// log-magnitude range plus special values, both signs.
+pub struct F32WideLog {
+    /// log2 magnitude range, e.g. (-40, 40).
+    pub log2_lo: f32,
+    pub log2_hi: f32,
+    /// include zeros / denormal-ish / extreme specials
+    pub specials: bool,
+}
+
+impl Default for F32WideLog {
+    fn default() -> Self {
+        Self { log2_lo: -40.0, log2_hi: 40.0, specials: true }
+    }
+}
+
+impl Gen<f32> for F32WideLog {
+    fn generate(&self, rng: &mut Pcg32) -> f32 {
+        if self.specials && rng.next_f32() < 0.05 {
+            let specials = [
+                0.0f32,
+                -0.0,
+                1.0,
+                -1.0,
+                f32::MIN_POSITIVE,
+                2.0f32.powi(-16),
+                2.0f32.powi(-14),
+                57344.0,
+                -57344.0,
+                65536.0,
+                3.0e38,
+            ];
+            return specials[rng.next_below(specials.len() as u64) as usize];
+        }
+        let e = rng.next_range_f32(self.log2_lo, self.log2_hi);
+        let sign = if rng.next_f32() < 0.5 { -1.0 } else { 1.0 };
+        sign * (e as f64).exp2() as f32
+    }
+
+    fn shrink(&self, value: &f32) -> Vec<f32> {
+        let mut c = vec![];
+        if *value != 0.0 {
+            c.push(0.0);
+            c.push(*value / 2.0);
+            if value.abs() > 1.0 {
+                c.push(value.signum());
+            }
+        }
+        c
+    }
+}
+
+/// Vector generator with element-wise and length-wise shrinking.
+pub struct VecGen<G> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecGen<G> {
+    fn generate(&self, rng: &mut Pcg32) -> Vec<T> {
+        let len =
+            self.min_len + rng.next_below((self.max_len - self.min_len + 1) as u64) as usize;
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, value: &Vec<T>) -> Vec<Vec<T>> {
+        let mut c = Vec::new();
+        // halve the vector
+        if value.len() > self.min_len {
+            let half = value.len().max(1) / 2;
+            if half >= self.min_len {
+                c.push(value[..half].to_vec());
+            }
+            let mut minus_one = value.clone();
+            minus_one.pop();
+            c.push(minus_one);
+        }
+        // shrink a single element (first few positions only, keeps it cheap)
+        for i in 0..value.len().min(4) {
+            for cand in self.elem.shrink(&value[i]) {
+                let mut v = value.clone();
+                v[i] = cand;
+                c.push(v);
+            }
+        }
+        c
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed overridable for replay via S2FP8_PROP_SEED.
+        let seed = std::env::var("S2FP8_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED_2020);
+        Self { cases: 256, seed, max_shrink_steps: 500 }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panic with a shrunk
+/// counterexample on failure.
+pub fn check<T: Clone + std::fmt::Debug>(
+    name: &str,
+    gen: &dyn Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    check_with(Config::default(), name, gen, prop)
+}
+
+pub fn check_with<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    name: &str,
+    gen: &dyn Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg32::new(cfg.seed, 0xC0FFEE);
+    for case in 0..cfg.cases {
+        let input = gen.generate(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // shrink greedily
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in gen.shrink(&best) {
+                    steps += 1;
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}, replay with \
+                 S2FP8_PROP_SEED={seed}):\n  counterexample: {best:?}\n  reason: {best_msg}",
+                seed = cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is nonneg", &F32WideLog::default(), |x: &f32| {
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative abs".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample")]
+    fn failing_property_reports_counterexample() {
+        check("all values below 1", &F32Range { lo: 0.0, hi: 100.0 }, |x: &f32| {
+            if *x < 1.0 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 1"))
+            }
+        });
+    }
+
+    #[test]
+    fn vec_gen_respects_length_bounds() {
+        let g = VecGen { elem: F32Range { lo: -1.0, hi: 1.0 }, min_len: 2, max_len: 9 };
+        let mut rng = Pcg32::new(3, 3);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!((2..=9).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn shrinking_reaches_small_cases() {
+        // The minimal failing vec for "len < 3" has exactly len 3 after
+        // shrinking from whatever was generated.
+        let g = VecGen { elem: F32Range { lo: 0.0, hi: 1.0 }, min_len: 0, max_len: 64 };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("short vectors only", &g, |v: &Vec<f32>| {
+                if v.len() < 3 {
+                    Ok(())
+                } else {
+                    Err(format!("len {}", v.len()))
+                }
+            });
+        }));
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // counterexample should have shrunk to exactly 3 elements
+        assert!(msg.contains("counterexample"), "{msg}");
+        let n_commas = msg.split("counterexample: [").nth(1).unwrap()
+            .split(']').next().unwrap()
+            .matches(',').count();
+        assert!(n_commas <= 3, "should shrink close to minimal: {msg}");
+    }
+}

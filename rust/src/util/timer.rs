@@ -1,0 +1,108 @@
+//! Monotonic stopwatch + lightweight accumulating profiler used by the
+//! trainer to attribute step time (data / host-quant / device / metrics),
+//! feeding the §Perf breakdown in EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named durations; `report()` renders a sorted breakdown.
+#[derive(Debug, Default, Clone)]
+pub struct Profiler {
+    buckets: BTreeMap<&'static str, (Duration, u64)>,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn scope<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        let e = self.buckets.entry(name).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, name: &str) -> Duration {
+        self.buckets.get(name).map(|(d, _)| *d).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.buckets.get(name).map(|(_, c)| *c).unwrap_or(0)
+    }
+
+    /// Render a human-readable breakdown sorted by total time (descending).
+    pub fn report(&self) -> String {
+        let grand: f64 = self.buckets.values().map(|(d, _)| d.as_secs_f64()).sum();
+        let mut rows: Vec<_> = self.buckets.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.cmp(&a.1 .0));
+        let mut s = String::new();
+        for (name, (d, c)) in rows {
+            let secs = d.as_secs_f64();
+            let pct = if grand > 0.0 { 100.0 * secs / grand } else { 0.0 };
+            let per = if *c > 0 { secs / *c as f64 * 1e3 } else { 0.0 };
+            s.push_str(&format!(
+                "  {name:<24} {secs:>9.3}s  {pct:>5.1}%  x{c:<7} {per:>9.3} ms/call\n"
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiler_accumulates() {
+        let mut p = Profiler::new();
+        p.add("a", Duration::from_millis(5));
+        p.add("a", Duration::from_millis(7));
+        p.add("b", Duration::from_millis(1));
+        assert_eq!(p.count("a"), 2);
+        assert!(p.total("a") >= Duration::from_millis(12));
+        let rep = p.report();
+        assert!(rep.contains('a') && rep.contains('b'));
+    }
+
+    #[test]
+    fn scope_returns_value() {
+        let mut p = Profiler::new();
+        let v = p.scope("work", || 21 * 2);
+        assert_eq!(v, 42);
+        assert_eq!(p.count("work"), 1);
+    }
+}

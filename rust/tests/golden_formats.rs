@@ -1,0 +1,164 @@
+//! Cross-language golden tests: `python -m compile.golden` (run by
+//! `make artifacts`) dumps test vectors computed by the jnp reference;
+//! the rust format library must reproduce them — **bit-exactly** for the
+//! FP8/BF16/FP16 truncations and stochastic rounding (shared exact
+//! algorithm), and to tight tolerance for the S2FP8 pow path (libm ulps;
+//! DESIGN.md "Numerics decisions").
+
+use s2fp8::formats::{bf16, fp16, fp8, s2fp8 as s2};
+
+fn golden_dir() -> std::path::PathBuf {
+    let dir = std::env::var("S2FP8_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = std::path::PathBuf::from(dir).join("golden");
+    assert!(
+        p.join("fp8_pairs.bin").exists(),
+        "golden files not built — run `make artifacts` (looked in {})",
+        p.display()
+    );
+    p
+}
+
+fn read_f32s(path: &std::path::Path) -> Vec<f32> {
+    let bytes = std::fs::read(path).unwrap();
+    let n = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    let data: Vec<f32> = bytes[4..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    assert!(data.len() % n == 0);
+    data
+}
+
+fn check_pairs(file: &str, f: impl Fn(f32) -> f32) {
+    let data = read_f32s(&golden_dir().join(file));
+    assert_eq!(data.len() % 2, 0);
+    let mut checked = 0usize;
+    for pair in data.chunks_exact(2) {
+        let (x, want) = (pair[0], pair[1]);
+        let got = f(x);
+        if want.is_nan() {
+            assert!(got.is_nan(), "{file}: input {x}: want NaN got {got}");
+        } else {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "{file}: input {x} ({:#010x}): rust {got} vs python {want}",
+                x.to_bits()
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked > 3000, "{file}: suspiciously few vectors ({checked})");
+}
+
+#[test]
+fn fp8_truncation_bit_exact_vs_python() {
+    check_pairs("fp8_pairs.bin", fp8::truncate);
+}
+
+#[test]
+fn fp8_arith_path_bit_exact_vs_python() {
+    check_pairs("fp8_pairs.bin", fp8::truncate_arith);
+}
+
+#[test]
+fn bf16_truncation_bit_exact_vs_python() {
+    check_pairs("bf16_pairs.bin", bf16::truncate);
+}
+
+#[test]
+fn fp16_truncation_bit_exact_vs_python() {
+    check_pairs("fp16_pairs.bin", fp16::truncate);
+}
+
+#[test]
+fn fp8_stochastic_rounding_bit_exact_vs_python() {
+    let data = read_f32s(&golden_dir().join("fp8_sr.bin"));
+    assert_eq!(data.len() % 3, 0);
+    for tri in data.chunks_exact(3) {
+        let (x, u, want) = (tri[0], tri[1], tri[2]);
+        let got = fp8::truncate_stochastic(x, u);
+        if want.is_nan() {
+            assert!(got.is_nan());
+        } else {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "SR input {x} u {u}: rust {got} vs python {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn s2fp8_tensors_match_python_stats_and_values() {
+    let bytes = std::fs::read(golden_dir().join("s2fp8_tensors.bin")).unwrap();
+    let mut pos = 0usize;
+    let u32at = |bytes: &[u8], p: &mut usize| {
+        let v = u32::from_le_bytes(bytes[*p..*p + 4].try_into().unwrap());
+        *p += 4;
+        v
+    };
+    let f32at = |bytes: &[u8], p: &mut usize| {
+        let v = f32::from_le_bytes(bytes[*p..*p + 4].try_into().unwrap());
+        *p += 4;
+        v
+    };
+    let n_tensors = u32at(&bytes, &mut pos) as usize;
+    assert!(n_tensors >= 4);
+    for t in 0..n_tensors {
+        let len = u32at(&bytes, &mut pos) as usize;
+        let py_mu = f32at(&bytes, &mut pos);
+        let py_m = f32at(&bytes, &mut pos);
+        let py_alpha = f32at(&bytes, &mut pos);
+        let py_beta = f32at(&bytes, &mut pos);
+        let mut xs = Vec::with_capacity(len);
+        let mut want = Vec::with_capacity(len);
+        for _ in 0..len {
+            xs.push(f32at(&bytes, &mut pos));
+            want.push(f32at(&bytes, &mut pos));
+        }
+
+        // statistics agree tightly
+        let codec = s2::S2fp8Codec::fit(&xs);
+        if let Some(st) = s2::stats(&xs) {
+            assert!((st.mu - py_mu).abs() < 2e-4 * py_mu.abs().max(1.0), "tensor {t} μ");
+            assert!((st.max - py_m).abs() < 1e-5 * py_m.abs().max(1.0), "tensor {t} m");
+        }
+        assert!(
+            (codec.alpha - py_alpha).abs() < 2e-3 * py_alpha.abs().max(1.0),
+            "tensor {t} α: rust {} python {py_alpha}",
+            codec.alpha
+        );
+        assert!(
+            (codec.beta - py_beta).abs() < 2e-3 * py_beta.abs().max(1.0),
+            "tensor {t} β: rust {} python {py_beta}",
+            codec.beta
+        );
+
+        // values agree to pow-path tolerance; elements at the flush
+        // boundary (α amplifies libm ulps) may differ in zero-pattern for
+        // at most a tiny fraction
+        let (got, _) = s2::truncate_tensor(&xs);
+        let mut zero_mismatch = 0usize;
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            match (*g == 0.0, *w == 0.0) {
+                (true, true) => {}
+                (false, false) => {
+                    let rel = (g - w).abs() / w.abs();
+                    assert!(
+                        rel < 5e-3,
+                        "tensor {t} elem {i}: input {} rust {g} python {w} rel {rel}",
+                        xs[i]
+                    );
+                }
+                _ => zero_mismatch += 1,
+            }
+        }
+        assert!(
+            zero_mismatch * 100 <= len,
+            "tensor {t}: {zero_mismatch}/{len} zero-pattern mismatches"
+        );
+    }
+    assert_eq!(pos, bytes.len(), "trailing golden bytes");
+}

@@ -1,0 +1,182 @@
+//! Integration tests: load real AOT artifacts and execute them on the PJRT
+//! CPU client, validating numerics against the rust format library.
+//!
+//! Requires `make artifacts` to have populated `artifacts/` (the tests
+//! fail loudly with instructions otherwise).
+
+use s2fp8::formats::{fp8, s2fp8 as s2};
+use s2fp8::runtime::{Artifact, HostValue, Role, Runtime};
+use s2fp8::util::rng::{Pcg32, Rng};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    let dir = std::env::var("S2FP8_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = std::path::PathBuf::from(dir);
+    assert!(
+        p.join("index.json").exists(),
+        "artifacts not built — run `make artifacts` first (looked in {})",
+        p.display()
+    );
+    p
+}
+
+#[test]
+fn kernel_fp8_quant_matches_rust_bit_exactly() {
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&dir, "kernel_fp8_quant").unwrap();
+
+    let n = exe.manifest.inputs[0].element_count();
+    let mut rng = Pcg32::new(42, 0);
+    let xs: Vec<f32> = (0..n)
+        .map(|_| {
+            let l = rng.next_range_f32(-40.0, 20.0);
+            let s = if rng.next_f32() < 0.5 { -1.0 } else { 1.0 };
+            s * (l as f64).exp2() as f32
+        })
+        .collect();
+
+    let out = exe.run1(&[HostValue::f32(vec![n], xs.clone())]).unwrap();
+    let got = out.as_f32().unwrap().data();
+    for (i, (&x, &y)) in xs.iter().zip(got.iter()).enumerate() {
+        let expect = fp8::truncate(x);
+        assert_eq!(
+            expect.to_bits(),
+            y.to_bits(),
+            "elem {i}: input {x}, pallas-kernel-via-PJRT {y}, rust {expect}"
+        );
+    }
+}
+
+#[test]
+fn kernel_s2fp8_quant_matches_rust_codec() {
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&dir, "kernel_s2fp8_quant").unwrap();
+
+    let n = exe.manifest.inputs[0].element_count();
+    let mut rng = Pcg32::new(7, 1);
+    // tensor far outside FP8's window — the regime S2FP8 exists for
+    let xs: Vec<f32> = (0..n).map(|_| rng.next_lognormal(-15.0, 2.0)).collect();
+
+    let out = exe.run1(&[HostValue::f32(vec![n], xs.clone())]).unwrap();
+    let got = out.as_f32().unwrap().data();
+    let (expect, codec) = s2::truncate_tensor(&xs);
+    assert!(codec.beta > 0.0);
+    let mut worst = 0.0f32;
+    for (&y, &e) in got.iter().zip(expect.iter()) {
+        assert_eq!(e == 0.0, y == 0.0);
+        if e != 0.0 {
+            worst = worst.max((y - e).abs() / e.abs());
+        }
+    }
+    // pow/exp2 cross-language tolerance (DESIGN.md "Numerics decisions")
+    assert!(worst < 2e-4, "worst rel deviation rust-vs-kernel {worst}");
+}
+
+#[test]
+fn kernel_qmatmul_runs_and_matches_quantized_reference() {
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&dir, "kernel_qmatmul").unwrap();
+    let (m, k) = (exe.manifest.inputs[0].shape[0], exe.manifest.inputs[0].shape[1]);
+    let n = exe.manifest.inputs[1].shape[1];
+
+    let mut rng = Pcg32::new(3, 3);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal()).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.next_normal()).collect();
+    let out = exe
+        .run1(&[HostValue::f32(vec![m, k], a.clone()), HostValue::f32(vec![k, n], b.clone())])
+        .unwrap();
+    let got = out.as_f32().unwrap();
+    assert_eq!(got.shape(), &[m, n]);
+
+    // reference: truncate operands in rust, matmul in f64 for clean accum
+    let qa: Vec<f32> = a.iter().map(|&v| fp8::truncate(v)).collect();
+    let qb: Vec<f32> = b.iter().map(|&v| fp8::truncate(v)).collect();
+    for i in 0..m {
+        for j in [0usize, n / 2, n - 1] {
+            let mut acc = 0.0f64;
+            for l in 0..k {
+                acc += qa[i * k + l] as f64 * qb[l * n + j] as f64;
+            }
+            let gotv = got.data()[i * n + j];
+            assert!(
+                (gotv as f64 - acc).abs() < 1e-3 * acc.abs().max(1.0),
+                "({i},{j}): kernel {gotv} vs reference {acc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mlp_train_step_executes_and_learns() {
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let art = Artifact::load(&dir, "mlp_s2fp8_train").unwrap();
+    let exe = rt.compile(&art).unwrap();
+    let man = &exe.manifest;
+
+    // persistent inputs from init.bin
+    let mut persistent = art.load_init().unwrap();
+    let pers_idx: Vec<usize> = man
+        .inputs
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.role.is_persistent())
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(persistent.len(), pers_idx.len());
+
+    // synthetic separable data
+    let batch = man.meta_usize("batch").unwrap();
+    let d_in = man.inputs[man.input_index("batch/x").unwrap()].shape[1];
+    let mut rng = Pcg32::new(2020, 0);
+
+    let carry = man.carry_map().unwrap();
+    let mut losses = Vec::new();
+    for step in 1..=30 {
+        let mut x = Vec::with_capacity(batch * d_in);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let label = rng.next_below(10) as usize;
+            for j in 0..d_in {
+                let centered = if j % 10 == label { 2.0 } else { 0.0 };
+                x.push(centered + 0.3 * rng.next_normal());
+            }
+            y.push(label as i32);
+        }
+        // assemble inputs in manifest order
+        let mut inputs: Vec<HostValue> = Vec::with_capacity(man.inputs.len());
+        let mut p_iter = persistent.iter().cloned();
+        for spec in &man.inputs {
+            let v = match (spec.role, spec.name.as_str()) {
+                (Role::Param | Role::Opt | Role::State, _) => p_iter.next().unwrap(),
+                (Role::Batch, "batch/x") => HostValue::f32(vec![batch, d_in], x.clone()),
+                (Role::Batch, "batch/y") => HostValue::i32(vec![batch], y.clone()),
+                (Role::Scalar, "loss_scale") => HostValue::scalar_f32(1.0),
+                (Role::Scalar, "lr") => HostValue::scalar_f32(0.05),
+                (Role::Scalar, "step") => HostValue::scalar_f32(step as f32),
+                (Role::Scalar, "seed") => HostValue::scalar_i32(step),
+                other => panic!("unexpected input {other:?}"),
+            };
+            inputs.push(v);
+        }
+        let outs = exe.run(&inputs).unwrap();
+        let loss = outs[man.output_index("loss").unwrap()].item_f32().unwrap();
+        let finite = outs[man.output_index("grad_finite").unwrap()].item_f32().unwrap();
+        assert_eq!(finite, 1.0, "gradients must be finite at step {step}");
+        assert!(loss.is_finite());
+        losses.push(loss);
+        // carry persistent outputs into next step's inputs
+        for (slot, &(ii, oi)) in carry.iter().enumerate() {
+            assert_eq!(pers_idx[slot], ii);
+            persistent[slot] = outs[oi].clone();
+        }
+    }
+    let first = losses[..5].iter().sum::<f32>() / 5.0;
+    let last = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first * 0.7,
+        "S2FP8 training should reduce loss: first≈{first:.3} last≈{last:.3} ({losses:?})"
+    );
+}

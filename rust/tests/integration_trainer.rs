@@ -1,0 +1,207 @@
+//! Integration tests of the full coordinator stack on real artifacts:
+//! Trainer slot binding, checkpoint save/restore determinism, the
+//! Evaluator, and the loss-scaling plumbing end to end.
+
+use s2fp8::config::experiment::DatasetKind;
+use s2fp8::coordinator::loss_scale::LossScalePolicy;
+use s2fp8::coordinator::runner::{self, quick_config};
+use s2fp8::coordinator::trainer::{LrSchedule, Trainer};
+use s2fp8::coordinator::{checkpoint, eval::Evaluator};
+use s2fp8::runtime::{Artifact, HostValue, Runtime};
+use s2fp8::util::rng::{Pcg32, Rng};
+
+fn artifacts_dir() -> String {
+    let dir = std::env::var("S2FP8_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    assert!(
+        std::path::Path::new(&dir).join("index.json").exists(),
+        "artifacts not built — run `make artifacts`"
+    );
+    dir
+}
+
+fn mlp_batch(trainer: &Trainer, rng: &mut Pcg32) -> Vec<HostValue> {
+    let man = &trainer.exe.manifest;
+    let b = man.meta_usize("batch").unwrap();
+    let d = man.inputs[man.input_index("batch/x").unwrap()].shape[1];
+    let mut x = Vec::with_capacity(b * d);
+    let mut y = Vec::with_capacity(b);
+    for _ in 0..b {
+        let label = rng.next_below(10) as usize;
+        for j in 0..d {
+            x.push(if j % 10 == label { 2.0 } else { 0.0 } + 0.4 * rng.next_normal());
+        }
+        y.push(label as i32);
+    }
+    vec![HostValue::f32(vec![b, d], x), HostValue::i32(vec![b], y)]
+}
+
+#[test]
+fn trainer_is_deterministic_given_seed() {
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let art = Artifact::load(&dir, "mlp_s2fp8_train").unwrap();
+
+    let run = |rt: &Runtime| -> Vec<f32> {
+        let mut tr = Trainer::new(rt, &art).unwrap();
+        let mut rng = Pcg32::new(99, 0);
+        (1..=8)
+            .map(|s| {
+                let b = mlp_batch(&tr, &mut rng);
+                tr.step(&b, 1.0, 0.05, s, false).unwrap().loss
+            })
+            .collect()
+    };
+    let a = run(&rt);
+    let b = run(&rt);
+    assert_eq!(a, b, "same seed ⇒ bitwise-identical loss trajectory");
+}
+
+#[test]
+fn checkpoint_restore_resumes_exactly() {
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let art = Artifact::load(&dir, "mlp_s2fp8_train").unwrap();
+
+    // train 5 steps, snapshot, train 3 more → reference
+    let mut tr = Trainer::new(&rt, &art).unwrap();
+    let mut rng = Pcg32::new(7, 7);
+    let batches: Vec<Vec<HostValue>> = (0..8).map(|_| mlp_batch(&tr, &mut rng)).collect();
+    for (i, b) in batches[..5].iter().enumerate() {
+        tr.step(b, 1.0, 0.05, i + 1, false).unwrap();
+    }
+    let snap = tr.persistent_snapshot().unwrap();
+    let reference: Vec<f32> = batches[5..]
+        .iter()
+        .enumerate()
+        .map(|(i, b)| tr.step(b, 1.0, 0.05, i + 6, false).unwrap().loss)
+        .collect();
+
+    // roundtrip through a raw checkpoint file and resume
+    let path = std::env::temp_dir().join("s2fp8_it_ckpt.s2ck");
+    checkpoint::save(&path, &snap, false).unwrap();
+    let loaded = checkpoint::load(&path).unwrap();
+    let mut tr2 = Trainer::new(&rt, &art).unwrap();
+    tr2.restore_persistent(&loaded).unwrap();
+    let resumed: Vec<f32> = batches[5..]
+        .iter()
+        .enumerate()
+        .map(|(i, b)| tr2.step(b, 1.0, 0.05, i + 6, false).unwrap().loss)
+        .collect();
+    assert_eq!(reference, resumed, "raw checkpoint restore must be exact");
+}
+
+#[test]
+fn loss_scale_input_reaches_the_graph() {
+    // With FP32 (no quantization) the scaled loss gradient is unscaled
+    // exactly, so two different scales give identical first-step losses
+    // AND identical next-step params; with a *huge* scale the FP32 grads
+    // overflow to Inf and the step is skipped (grad_finite = 0).
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let art = Artifact::load(&dir, "mlp_fp32_train").unwrap();
+
+    let mut tr = Trainer::new(&rt, &art).unwrap();
+    let mut rng = Pcg32::new(3, 1);
+    let b = mlp_batch(&tr, &mut rng);
+    let out = tr.step(&b, 1.0, 0.05, 1, false).unwrap();
+    assert!(out.grad_finite);
+
+    let mut tr2 = Trainer::new(&rt, &art).unwrap();
+    let out2 = tr2.step(&b, 1024.0, 0.05, 1, false).unwrap();
+    assert!(out2.grad_finite);
+    assert_eq!(out.loss, out2.loss, "reported loss is unscaled");
+
+    let mut tr3 = Trainer::new(&rt, &art).unwrap();
+    // gradients are scale · ∂loss/∂θ, and ∂loss/∂w ≈ |x|·|softmax err|/B,
+    // so blow up the inputs to push scale·grad past f32::MAX: the overflow
+    // regime the dynamic controller watches for
+    let big: Vec<HostValue> = b
+        .iter()
+        .map(|v| match v {
+            HostValue::F32(t) => HostValue::F32(t.map(|x| x * 1e4)),
+            other => other.clone(),
+        })
+        .collect();
+    let out3 = tr3.step(&big, f32::MAX, 0.05, 1, false).unwrap();
+    assert!(!out3.grad_finite, "f32::MAX scale on 1e4-magnified inputs must overflow");
+    // skipped step: params unchanged
+    let p0 = tr3.persistent_host("params/fc0/w").unwrap();
+    let fresh = Trainer::new(&rt, &art).unwrap();
+    let pfresh = fresh.persistent_host("params/fc0/w").unwrap();
+    assert_eq!(p0, pfresh, "overflow step must not touch params");
+}
+
+#[test]
+fn evaluator_binds_trainer_state() {
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let art = Artifact::load(&dir, "mlp_s2fp8_train").unwrap();
+    let mut tr = Trainer::new(&rt, &art).unwrap();
+    let ev = Evaluator::new(&rt, &dir, "mlp_s2fp8_eval").unwrap();
+
+    let b = ev.batch_size();
+    let d = ev.exe.manifest.inputs[ev.exe.manifest.input_index("batch/x").unwrap()].shape[1];
+    let mut rng = Pcg32::new(1, 2);
+
+    // accuracy before vs after a few hundred steps of training
+    let make_eval_batch = |rng: &mut Pcg32| {
+        let mut x = Vec::with_capacity(b * d);
+        let mut y = Vec::with_capacity(b);
+        for _ in 0..b {
+            let label = rng.next_below(10) as usize;
+            for j in 0..d {
+                x.push(if j % 10 == label { 2.0 } else { 0.0 } + 0.4 * rng.next_normal());
+            }
+            y.push(label as i32);
+        }
+        (x, y)
+    };
+    let acc = |tr: &Trainer, rng: &mut Pcg32| -> f64 {
+        let (x, y) = make_eval_batch(rng);
+        let out = ev
+            .run(tr, &[
+                HostValue::f32(vec![b, d], x),
+                HostValue::i32(vec![b], y.clone()),
+            ])
+            .unwrap();
+        let logits = out.as_f32().unwrap().clone();
+        s2fp8::metrics::classification::top1_accuracy(&logits, &y)
+    };
+
+    let acc_before = acc(&tr, &mut rng);
+    let mut trng = Pcg32::new(5, 5);
+    for s in 1..=120 {
+        let batch = mlp_batch(&tr, &mut trng);
+        tr.step(&batch, 1.0, 0.05, s, false).unwrap();
+    }
+    let acc_after = acc(&tr, &mut rng);
+    assert!(
+        acc_after > acc_before + 0.4,
+        "training must lift eval accuracy: {acc_before:.3} → {acc_after:.3}"
+    );
+    assert!(acc_after > 0.85, "S2FP8 MLP should solve the synthetic task ({acc_after:.3})");
+}
+
+#[test]
+fn runner_end_to_end_on_vector_task() {
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = quick_config(
+        "it-runner-mlp",
+        "mlp_s2fp8",
+        DatasetKind::Vector,
+        60,
+        64,
+        LrSchedule::Constant(0.05),
+        LossScalePolicy::None,
+    );
+    cfg.out_dir = std::env::temp_dir().join("s2fp8_runs").to_string_lossy().into_owned();
+    let out = runner::run_experiment(&rt, &cfg).unwrap();
+    assert!(!out.diverged);
+    assert_eq!(out.steps_run, 60);
+    let losses = out.curve.column("loss");
+    assert!(losses.last().unwrap() < &0.5, "loss should fall: {losses:?}");
+    // artifacts written
+    let run_dir = std::path::Path::new(&cfg.out_dir).join(&cfg.name);
+    assert!(run_dir.join("curve.csv").exists());
+    assert!(run_dir.join("final.s2ck").exists());
+}

@@ -1,0 +1,202 @@
+//! Property-based tests of coordinator invariants: the loss-scale
+//! controller state machine, batcher coverage, checkpoint round-trips and
+//! curve bookkeeping — the "proptest on coordinator invariants" suite
+//! (via the in-tree mini framework; proptest is not vendored offline).
+
+use s2fp8::coordinator::checkpoint;
+use s2fp8::coordinator::loss_scale::{LossScaleController, LossScalePolicy};
+use s2fp8::data::batcher::Batcher;
+use s2fp8::runtime::HostValue;
+use s2fp8::tensor::Tensor;
+use s2fp8::util::prop::{check, Config, FnGen};
+use s2fp8::util::rng::{Pcg32, Rng};
+
+/// Random overflow patterns drive the dynamic controller; invariants:
+/// scale stays in [1, max], halves exactly on overflow, never grows
+/// without a full clean interval.
+#[test]
+fn prop_dynamic_loss_scale_invariants() {
+    let gen = FnGen(|rng: &mut Pcg32| {
+        let n = 50 + rng.next_below(400) as usize;
+        let p_overflow = rng.next_f32() * 0.3;
+        (0..n).map(|_| rng.next_f32() > p_overflow).collect::<Vec<bool>>()
+    });
+    check("dynamic loss-scale invariants", &gen, |pattern: &Vec<bool>| {
+        let max = 65536.0f32;
+        let growth_interval = 7usize;
+        let mut c = LossScaleController::new(LossScalePolicy::Dynamic {
+            init: 1024.0,
+            growth_factor: 2.0,
+            backoff_factor: 0.5,
+            growth_interval,
+            max,
+        });
+        let mut clean_run = 0usize;
+        for (i, &finite) in pattern.iter().enumerate() {
+            let before = c.scale_for_step();
+            if !(1.0..=max).contains(&before) {
+                return Err(format!("step {i}: scale {before} out of [1, max]"));
+            }
+            c.observe(finite);
+            let after = c.scale_for_step();
+            if !finite {
+                clean_run = 0;
+                let expect = (before * 0.5).max(1.0);
+                if after != expect {
+                    return Err(format!("step {i}: overflow {before} → {after}, want {expect}"));
+                }
+            } else {
+                clean_run += 1;
+                if clean_run >= growth_interval {
+                    let expect = (before * 2.0).min(max);
+                    if after != expect {
+                        return Err(format!("step {i}: growth {before} → {after}, want {expect}"));
+                    }
+                    clean_run = 0;
+                } else if after != before {
+                    return Err(format!("step {i}: scale changed mid-interval"));
+                }
+            }
+        }
+        let overflows = pattern.iter().filter(|f| !**f).count();
+        if c.n_overflows != overflows {
+            return Err(format!("counted {} overflows, want {overflows}", c.n_overflows));
+        }
+        Ok(())
+    });
+}
+
+/// Exponential schedule: scale is a deterministic function of step count
+/// regardless of gradient health.
+#[test]
+fn prop_exponential_schedule_deterministic() {
+    let gen = FnGen(|rng: &mut Pcg32| {
+        (0..200).map(|_| rng.next_f32() > 0.2).collect::<Vec<bool>>()
+    });
+    check("exp schedule ignores overflows", &gen, |pattern: &Vec<bool>| {
+        let mk = || {
+            LossScaleController::new(LossScalePolicy::Exponential {
+                init: 2.0,
+                factor: 2.0,
+                interval: 13,
+                max: 4096.0,
+            })
+        };
+        let mut a = mk();
+        let mut b = mk();
+        for &f in pattern {
+            a.observe(f);
+            b.observe(true); // all-clean twin
+            if a.scale_for_step() != b.scale_for_step() {
+                return Err("scale depended on gradient health".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Batcher: over any epoch, every index appears exactly once (tail-drop
+/// aside), and consecutive epochs reshuffle.
+#[test]
+fn prop_batcher_exact_cover() {
+    let gen = FnGen(|rng: &mut Pcg32| {
+        let batch = 1 + rng.next_below(64) as usize;
+        let n = batch * (1 + rng.next_below(20) as usize) + rng.next_below(batch as u64) as usize;
+        (n, batch, rng.next_u64())
+    });
+    check("batcher covers epoch exactly once", &gen, |&(n, batch, seed): &(usize, usize, u64)| {
+        let mut b = Batcher::new(n, batch, seed);
+        let mut seen = vec![0usize; n];
+        for _ in 0..b.batches_per_epoch() {
+            for &i in b.next_batch() {
+                if i >= n {
+                    return Err(format!("index {i} out of range {n}"));
+                }
+                seen[i] += 1;
+            }
+        }
+        if seen.iter().any(|&c| c > 1) {
+            return Err("index repeated within an epoch".into());
+        }
+        let covered = seen.iter().filter(|&&c| c == 1).count();
+        if covered != b.batches_per_epoch() * batch {
+            return Err("wrong coverage count".into());
+        }
+        Ok(())
+    });
+}
+
+/// Checkpoint: raw serialization round-trips arbitrary slot sets exactly.
+#[test]
+fn prop_checkpoint_raw_roundtrip() {
+    let gen = FnGen(|rng: &mut Pcg32| {
+        let n_slots = 1 + rng.next_below(6) as usize;
+        (0..n_slots)
+            .map(|i| {
+                let rank = rng.next_below(3) as usize + 1;
+                let shape: Vec<usize> =
+                    (0..rank).map(|_| 1 + rng.next_below(8) as usize).collect();
+                let count: usize = shape.iter().product();
+                if rng.next_f32() < 0.3 {
+                    let data: Vec<i32> =
+                        (0..count).map(|_| rng.next_u32() as i32).collect();
+                    (format!("slot{i}"), HostValue::i32(shape, data))
+                } else {
+                    let data: Vec<f32> = (0..count).map(|_| rng.next_normal()).collect();
+                    (format!("slot{i}"), HostValue::F32(Tensor::new(shape, data)))
+                }
+            })
+            .collect::<Vec<_>>()
+    });
+    check_cfg_small("checkpoint raw roundtrip", &gen, |slots: &Vec<(String, HostValue)>| {
+        let bytes = checkpoint::serialize(slots, false);
+        let back = checkpoint::deserialize(&bytes).map_err(|e| e.to_string())?;
+        if &back == slots {
+            Ok(())
+        } else {
+            Err("roundtrip mismatch".into())
+        }
+    });
+}
+
+/// Checkpoint: compressed serialization is strictly smaller for large f32
+/// tensors and decodes to finite values with matching shapes.
+#[test]
+fn prop_checkpoint_compressed_wellformed() {
+    let gen = FnGen(|rng: &mut Pcg32| {
+        let n = 128 + rng.next_below(2048) as usize;
+        let scale = (rng.next_range_f32(-20.0, 10.0) as f64).exp2() as f32;
+        let data: Vec<f32> = (0..n).map(|_| scale * rng.next_normal()).collect();
+        vec![("w".to_string(), HostValue::F32(Tensor::new(vec![n], data)))]
+    });
+    check_cfg_small("checkpoint s2fp8 compression", &gen, |slots: &Vec<(String, HostValue)>| {
+        let raw = checkpoint::serialize(slots, false);
+        let comp = checkpoint::serialize(slots, true);
+        if comp.len() >= raw.len() {
+            return Err(format!("no size win: {} vs {}", comp.len(), raw.len()));
+        }
+        let back = checkpoint::deserialize(&comp).map_err(|e| e.to_string())?;
+        let orig = slots[0].1.as_f32().unwrap();
+        let rec = back[0].1.as_f32().unwrap();
+        if rec.shape() != orig.shape() {
+            return Err("shape changed".into());
+        }
+        if rec.data().iter().any(|v| !v.is_finite()) {
+            return Err("non-finite after decompress".into());
+        }
+        Ok(())
+    });
+}
+
+fn check_cfg_small<T: Clone + std::fmt::Debug>(
+    name: &str,
+    gen: &dyn s2fp8::util::prop::Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    s2fp8::util::prop::check_with(
+        Config { cases: 64, ..Config::default() },
+        name,
+        gen,
+        prop,
+    );
+}

@@ -1,0 +1,255 @@
+//! Property-based tests of the numeric-format invariants, using the
+//! in-tree mini property framework (`util::prop`).
+
+use s2fp8::formats::{bf16, fp16, fp8, s2fp8 as s2, FormatKind};
+use s2fp8::util::prop::{check, F32WideLog, VecGen};
+
+#[test]
+fn prop_fp8_truncation_is_idempotent() {
+    check("fp8 idempotent", &F32WideLog::default(), |&x: &f32| {
+        let once = fp8::truncate(x);
+        let twice = fp8::truncate(once);
+        if once.is_nan() && twice.is_nan() {
+            return Ok(());
+        }
+        if once.to_bits() == twice.to_bits() {
+            Ok(())
+        } else {
+            Err(format!("{x} → {once} → {twice}"))
+        }
+    });
+}
+
+#[test]
+fn prop_fp8_sign_symmetric() {
+    check("fp8 sign symmetry", &F32WideLog::default(), |&x: &f32| {
+        let a = fp8::truncate(x);
+        let b = fp8::truncate(-x);
+        if a.is_nan() && b.is_nan() {
+            return Ok(());
+        }
+        if (-a).to_bits() == b.to_bits() {
+            Ok(())
+        } else {
+            Err(format!("t({x})={a} but t({}) = {b}", -x))
+        }
+    });
+}
+
+#[test]
+fn prop_fp8_monotone() {
+    // truncation is monotone non-decreasing
+    let g = VecGen { elem: F32WideLog::default(), min_len: 2, max_len: 2 };
+    check("fp8 monotone", &g, |v: &Vec<f32>| {
+        let (a, b) = (v[0], v[1]);
+        if a.is_nan() || b.is_nan() {
+            return Ok(());
+        }
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        if fp8::truncate(lo) <= fp8::truncate(hi) {
+            Ok(())
+        } else {
+            Err(format!("t({lo})={} > t({hi})={}", fp8::truncate(lo), fp8::truncate(hi)))
+        }
+    });
+}
+
+#[test]
+fn prop_fp8_error_bound() {
+    check("fp8 relative error ≤ 2^-3 in range", &F32WideLog::default(), |&x: &f32| {
+        let ax = x.abs();
+        if !(fp8::MIN_NORMAL..=fp8::MAX_NORMAL).contains(&ax) {
+            return Ok(()); // out of normal range: saturation/denormal regime
+        }
+        let y = fp8::truncate(x);
+        let rel = (y - x).abs() / ax;
+        if rel <= fp8::EPSILON + 1e-7 {
+            Ok(())
+        } else {
+            Err(format!("rel err {rel} at {x} (→{y})"))
+        }
+    });
+}
+
+#[test]
+fn prop_fp8_output_is_representable() {
+    check("fp8 output on grid", &F32WideLog::default(), |&x: &f32| {
+        let y = fp8::truncate(x);
+        if y.is_nan() {
+            return if x.is_nan() { Ok(()) } else { Err("NaN from non-NaN".into()) };
+        }
+        // encode∘decode must be identity on outputs
+        let rt = fp8::decode(fp8::encode(y));
+        if rt.to_bits() == y.to_bits() {
+            Ok(())
+        } else {
+            Err(format!("{x} → {y} not representable (rt {rt})"))
+        }
+    });
+}
+
+#[test]
+fn prop_fp8_rounds_to_nearest() {
+    // |t(x) − x| must not exceed the distance to either neighbouring grid
+    // point: compare against decrement/increment of the code
+    check("fp8 nearest", &F32WideLog { log2_lo: -16.0, log2_hi: 15.9, specials: false },
+        |&x: &f32| {
+            let y = fp8::truncate(x);
+            let err = (y - x).abs();
+            // check every representable value is no closer
+            for v in fp8::all_finite_values() {
+                if (v - x).abs() + 1e-12 < err {
+                    return Err(format!("{v} closer to {x} than chosen {y}"));
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_bf16_and_fp16_idempotent() {
+    check("bf16/fp16 idempotent", &F32WideLog::default(), |&x: &f32| {
+        let b1 = bf16::truncate(x);
+        let h1 = fp16::truncate(x);
+        if (b1.is_nan() || b1.to_bits() == bf16::truncate(b1).to_bits())
+            && (h1.is_nan() || h1.to_bits() == fp16::truncate(h1).to_bits())
+        {
+            Ok(())
+        } else {
+            Err(format!("x={x} bf16 {b1} fp16 {h1}"))
+        }
+    });
+}
+
+#[test]
+fn prop_s2fp8_eq2_invariants() {
+    // after fitting, squeezed log-magnitudes have max == 15 and mean == 0
+    let g = VecGen {
+        elem: F32WideLog { log2_lo: -30.0, log2_hi: 25.0, specials: false },
+        min_len: 4,
+        max_len: 400,
+    };
+    check("s2fp8 Eq.2", &g, |xs: &Vec<f32>| {
+        let codec = s2::S2fp8Codec::fit(xs);
+        let logs: Vec<f64> = xs
+            .iter()
+            .filter(|x| **x != 0.0)
+            .map(|&x| codec.squeeze(x).abs().log2() as f64)
+            .collect();
+        if logs.is_empty() {
+            return Ok(());
+        }
+        let max = logs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mean = logs.iter().sum::<f64>() / logs.len() as f64;
+        // α is capped for degenerate spreads — the max-at-15 target only
+        // binds when the cap is inactive
+        let capped = (codec.alpha - s2::TARGET_MAX_LOG2 / s2::MIN_SPREAD).abs() < 1.0;
+        if !capped && (max - 15.0).abs() > 0.01 {
+            return Err(format!("max log2|Y| = {max}"));
+        }
+        if mean.abs() > 0.05 {
+            return Err(format!("mean log2|Y| = {mean}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_s2fp8_preserves_zero_sign_and_order_of_magnitude() {
+    let g = VecGen {
+        elem: F32WideLog { log2_lo: -24.0, log2_hi: 20.0, specials: true },
+        min_len: 2,
+        max_len: 200,
+    };
+    check("s2fp8 basic sanity", &g, |xs: &Vec<f32>| {
+        let xs: Vec<f32> = xs.iter().map(|x| if x.is_nan() { 0.0 } else { *x }).collect();
+        let (out, _) = s2::truncate_tensor(&xs);
+        for (a, b) in xs.iter().zip(out.iter()) {
+            if *a == 0.0 && *b != 0.0 {
+                return Err(format!("zero became {b}"));
+            }
+            if *a != 0.0 && *b != 0.0 && a.signum() != b.signum() {
+                return Err(format!("sign flip {a} → {b}"));
+            }
+            if !b.is_finite() {
+                return Err(format!("non-finite output {b} from {a}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_s2fp8_bulk_relative_error() {
+    // median relative error over a lognormal tensor stays small wherever
+    // the tensor is centered (the paper's whole point)
+    use s2fp8::util::rng::{Pcg32, Rng};
+    for (center, sigma) in
+        [(-20.0f32, 1.0f32), (-12.0, 2.0), (0.0, 3.0), (14.0, 1.5), (-30.0, 0.5)]
+    {
+        let mut rng = Pcg32::new((center.to_bits() ^ sigma.to_bits()) as u64, 1);
+        let xs: Vec<f32> = (0..2048)
+            .map(|_| {
+                let l = center + sigma * rng.next_normal();
+                let s = if rng.next_f32() < 0.5 { -1.0 } else { 1.0 };
+                s * (l as f64).exp2() as f32
+            })
+            .collect();
+        let (out, _) = s2::truncate_tensor(&xs);
+        let mut rels: Vec<f32> = xs
+            .iter()
+            .zip(out.iter())
+            .filter(|(a, _)| **a != 0.0)
+            .map(|(a, b)| (a - b).abs() / a.abs())
+            .collect();
+        rels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = rels[rels.len() / 2];
+        assert!(
+            median < 0.07,
+            "center {center} sigma {sigma}: median rel err {median}"
+        );
+        // vanilla FP8 comparison: S2FP8 must never be (much) worse
+        let fp8_out = FormatKind::Fp8.truncate_tensor(&xs);
+        let fp8_med = {
+            let mut r: Vec<f32> = xs
+                .iter()
+                .zip(fp8_out.iter())
+                .filter(|(a, _)| **a != 0.0)
+                .map(|(a, b)| (a - b).abs() / a.abs())
+                .collect();
+            r.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            r[r.len() / 2]
+        };
+        assert!(
+            median <= fp8_med + 0.05,
+            "center {center}: s2fp8 median {median} worse than fp8 {fp8_med}"
+        );
+    }
+}
+
+#[test]
+fn prop_compress_roundtrip_never_catastrophic() {
+    let g = VecGen {
+        elem: F32WideLog { log2_lo: -20.0, log2_hi: 16.0, specials: false },
+        min_len: 8,
+        max_len: 512,
+    };
+    check("s2fp8 compress/decompress", &g, |xs: &Vec<f32>| {
+        let c = s2::compress(xs);
+        if c.codes.len() != xs.len() {
+            return Err("length".into());
+        }
+        let back = s2::decompress(&c);
+        let n_bad = xs
+            .iter()
+            .zip(back.iter())
+            .filter(|(a, b)| **a != 0.0 && ((*a - *b).abs() / a.abs()) > 0.5)
+            .count();
+        // only the extreme squeezed tail may degrade
+        if n_bad * 5 <= xs.len() {
+            Ok(())
+        } else {
+            Err(format!("{n_bad}/{} elements off by >50%", xs.len()))
+        }
+    });
+}
