@@ -1,0 +1,126 @@
+//! §Perf bench — serving throughput and tail latency vs micro-batch size.
+//!
+//! Drives the batched inference engine (host NCF backend, S2FP8-compressed
+//! checkpoint) with concurrent closed-loop clients at batch caps 1/8/32,
+//! reporting requests/sec and p50/p99 latency per configuration, and
+//! emitting `runs/perf_serve/BENCH_serve.json` so the perf trajectory
+//! tracks serving alongside the training hot paths.
+//!
+//! Scale knobs: `S2FP8_BENCH_FAST=1` (quarter-size run).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use s2fp8::bench::paper;
+use s2fp8::bench::report::Table;
+use s2fp8::coordinator::checkpoint;
+use s2fp8::runtime::HostValue;
+use s2fp8::serve::{
+    backend::HostBackend,
+    engine::{Engine, ServeConfig},
+    model::{synth_ncf_slots, HostModel, ModelKind, NcfDims},
+    registry::WeightStore,
+    BatchPolicy,
+};
+use s2fp8::util::json::Json;
+use s2fp8::util::rng::{Pcg32, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let bench = "perf_serve";
+    let fast = std::env::var("S2FP8_BENCH_FAST").as_deref() == Ok("1");
+    let requests: usize = if fast { 2_000 } else { 8_000 };
+    let clients = 16usize;
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(4);
+
+    // one compressed checkpoint shared by every configuration
+    let dims = NcfDims::default();
+    let path = paper::out_dir(bench).join("ncf_synth.s2ck");
+    checkpoint::save(&path, &synth_ncf_slots(&dims, 2020), true)?;
+    let store = Arc::new(WeightStore::open(&path)?);
+    let model = Arc::new(HostModel::from_store(ModelKind::Ncf, &store)?);
+
+    let mut table = Table::new(
+        &format!(
+            "Serving throughput vs micro-batch size ({requests} requests, {clients} clients, \
+             {workers} workers, host NCF backend)"
+        ),
+        &["max batch", "req/s", "p50", "p99", "mean batch fill", "padding %"],
+    );
+    let mut rows_json = Vec::new();
+
+    for &max_batch in &[1usize, 8, 32] {
+        let backend = Arc::new(HostBackend::new(model.clone(), max_batch));
+        let cfg = ServeConfig {
+            workers,
+            queue_capacity: 4096,
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_micros(if max_batch == 1 { 0 } else { 500 }),
+            },
+        };
+        let engine = Arc::new(Engine::start(backend, cfg)?);
+        let wall = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let engine = engine.clone();
+                let (nu, ni) = (dims.n_users as u64, dims.n_items as u64);
+                let share = requests / clients;
+                s.spawn(move || {
+                    let mut rng = Pcg32::new(max_batch as u64, c as u64);
+                    for _ in 0..share {
+                        let f = vec![
+                            HostValue::scalar_i32(rng.next_below(nu) as i32),
+                            HostValue::scalar_i32(rng.next_below(ni) as i32),
+                        ];
+                        engine.predict(f).expect("request failed");
+                    }
+                });
+            }
+        });
+        let secs = wall.elapsed().as_secs_f64();
+        let m = engine.metrics();
+        let done = m.completed.load(std::sync::atomic::Ordering::Relaxed);
+        let rps = done as f64 / secs;
+        let live = m.batched_rows.load(std::sync::atomic::Ordering::Relaxed);
+        let pad = m.padded_rows.load(std::sync::atomic::Ordering::Relaxed);
+        let pad_pct = 100.0 * pad as f64 / (live + pad).max(1) as f64;
+        println!(
+            "batch ≤ {max_batch:>2}: {rps:>8.0} req/s  p50 {:>9.3?}  p99 {:>9.3?}  \
+             fill {:.1}  padding {pad_pct:.1}%",
+            m.latency.quantile(0.50),
+            m.latency.quantile(0.99),
+            m.mean_batch_fill(),
+        );
+        table.row(vec![
+            max_batch.to_string(),
+            format!("{rps:.0}"),
+            format!("{:.3?}", m.latency.quantile(0.50)),
+            format!("{:.3?}", m.latency.quantile(0.99)),
+            format!("{:.1}", m.mean_batch_fill()),
+            format!("{pad_pct:.1}"),
+        ]);
+        let mut row = match m.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        row.insert("max_batch".to_string(), Json::num(max_batch as f64));
+        row.insert("wall_secs".to_string(), Json::num(secs));
+        rows_json.push(Json::Obj(row));
+    }
+
+    table.print();
+    table.save(paper::out_dir(bench).join("serve.md"))?;
+
+    let record = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("backend", Json::str("host/ncf")),
+        ("workers", Json::num(workers as f64)),
+        ("clients", Json::num(clients as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    let json_path = paper::out_dir(bench).join("BENCH_serve.json");
+    std::fs::write(&json_path, record.to_string_pretty())?;
+    println!("wrote {}", json_path.display());
+    Ok(())
+}

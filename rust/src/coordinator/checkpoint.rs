@@ -116,8 +116,62 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Deserialize a checkpoint produced by [`serialize`].
-pub fn deserialize(bytes: &[u8]) -> Result<Vec<(String, HostValue)>> {
+/// One checkpoint entry as stored on disk, with S2FP8 decode *deferred*.
+///
+/// The serving registry ([`crate::serve::registry`]) keeps these around and
+/// decompresses per tensor on first access, so loading a model for serving
+/// pays decode cost only for the tensors an executable actually binds.
+#[derive(Debug, Clone)]
+pub enum RawPayload {
+    /// Exact bytes, already materialized (raw f32 / i32 entries).
+    Raw(HostValue),
+    /// S2FP8-compressed f32 tensor: (α, β) + one FP8 code per element.
+    S2fp8 { shape: Vec<usize>, data: s2fp8::Compressed },
+}
+
+impl RawPayload {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            RawPayload::Raw(v) => v.shape(),
+            RawPayload::S2fp8 { shape, .. } => shape,
+        }
+    }
+
+    pub fn is_compressed(&self) -> bool {
+        matches!(self, RawPayload::S2fp8 { .. })
+    }
+
+    /// Bytes this entry occupies on disk (payload only, header excluded).
+    pub fn stored_bytes(&self) -> usize {
+        match self {
+            RawPayload::Raw(v) => v.element_count() * 4,
+            RawPayload::S2fp8 { data, .. } => data.codes.len() + 8,
+        }
+    }
+
+    /// Materialize the host value (the S2FP8 decode happens here).
+    pub fn decode(&self) -> HostValue {
+        match self {
+            RawPayload::Raw(v) => v.clone(),
+            RawPayload::S2fp8 { shape, data } => {
+                HostValue::F32(Tensor::new(shape.clone(), s2fp8::decompress(data)))
+            }
+        }
+    }
+
+    /// Consuming variant of [`RawPayload::decode`] (no clone for raw entries).
+    pub fn into_host(self) -> HostValue {
+        match self {
+            RawPayload::Raw(v) => v,
+            RawPayload::S2fp8 { shape, data } => {
+                HostValue::F32(Tensor::new(shape, s2fp8::decompress(&data)))
+            }
+        }
+    }
+}
+
+/// Deserialize a checkpoint without decompressing S2FP8 payloads.
+pub fn deserialize_raw(bytes: &[u8]) -> Result<Vec<(String, RawPayload)>> {
     let mut r = Reader { buf: bytes, pos: 0 };
     if r.take(4)? != MAGIC {
         bail!("not a S2CK checkpoint");
@@ -142,7 +196,7 @@ pub fn deserialize(bytes: &[u8]) -> Result<Vec<(String, HostValue)>> {
         let value = match (encoding, dtype) {
             (0, 0) => {
                 let bytes = r.take(count * 4)?;
-                HostValue::F32(Tensor::from_bytes(shape, bytes))
+                RawPayload::Raw(HostValue::F32(Tensor::from_bytes(shape, bytes)))
             }
             (0, 1) => {
                 let bytes = r.take(count * 4)?;
@@ -150,17 +204,19 @@ pub fn deserialize(bytes: &[u8]) -> Result<Vec<(String, HostValue)>> {
                     .chunks_exact(4)
                     .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect();
-                HostValue::i32(shape, data)
+                RawPayload::Raw(HostValue::i32(shape, data))
             }
             (1, 0) => {
                 let alpha = r.f32()?;
                 let beta = r.f32()?;
                 let codes = r.take(count)?.to_vec();
-                let c = s2fp8::Compressed {
-                    codec: s2fp8::S2fp8Codec { alpha, beta },
-                    codes,
-                };
-                HostValue::F32(Tensor::new(shape, s2fp8::decompress(&c)))
+                RawPayload::S2fp8 {
+                    shape,
+                    data: s2fp8::Compressed {
+                        codec: s2fp8::S2fp8Codec { alpha, beta },
+                        codes,
+                    },
+                }
             }
             other => bail!("unknown encoding/dtype {other:?}"),
         };
@@ -170,6 +226,12 @@ pub fn deserialize(bytes: &[u8]) -> Result<Vec<(String, HostValue)>> {
         bail!("{} trailing bytes in checkpoint", bytes.len() - r.pos);
     }
     Ok(out)
+}
+
+/// Deserialize a checkpoint produced by [`serialize`], decompressing
+/// every entry eagerly (the trainer's restore path).
+pub fn deserialize(bytes: &[u8]) -> Result<Vec<(String, HostValue)>> {
+    Ok(deserialize_raw(bytes)?.into_iter().map(|(n, p)| (n, p.into_host())).collect())
 }
 
 pub fn save(path: impl AsRef<Path>, slots: &[(String, HostValue)], compress: bool) -> Result<()> {
@@ -188,6 +250,15 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, HostValue)>> {
         .with_context(|| format!("opening {}", path.as_ref().display()))?
         .read_to_end(&mut bytes)?;
     deserialize(&bytes)
+}
+
+/// Load a checkpoint keeping S2FP8 entries compressed (serving registry).
+pub fn load_raw(path: impl AsRef<Path>) -> Result<Vec<(String, RawPayload)>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(&path)
+        .with_context(|| format!("opening {}", path.as_ref().display()))?
+        .read_to_end(&mut bytes)?;
+    deserialize_raw(&bytes)
 }
 
 #[cfg(test)]
@@ -268,6 +339,25 @@ mod tests {
         assert!(deserialize(&bytes[..bytes.len() - 3]).is_err());
         bytes[0] = b'X';
         assert!(deserialize(&bytes).is_err());
+    }
+
+    #[test]
+    fn raw_deserialize_defers_s2fp8_decode() {
+        let slots = sample_slots();
+        let bytes = serialize(&slots, true);
+        let raw = deserialize_raw(&bytes).unwrap();
+        // the big f32 tensor stays compressed; small/i32 entries are raw
+        assert!(raw[0].1.is_compressed());
+        assert!(!raw[1].1.is_compressed());
+        assert!(!raw[2].1.is_compressed());
+        assert_eq!(raw[0].1.shape(), &[3, 3, 8, 16]);
+        assert_eq!(raw[0].1.stored_bytes(), 3 * 3 * 8 * 16 + 8); // 1 B/elem + α,β
+        // decoding the raw view matches the eager path exactly
+        let eager = deserialize(&bytes).unwrap();
+        for ((n1, p), (n2, v)) in raw.iter().zip(eager.iter()) {
+            assert_eq!(n1, n2);
+            assert_eq!(&p.decode(), v);
+        }
     }
 
     #[test]

@@ -22,6 +22,21 @@
 //! implemented in [`formats`] and cross-validated bit-for-bit against the
 //! python reference via golden files (see `rust/tests/golden_formats.rs`).
 //!
+//! ## Serving
+//!
+//! Beyond training, the crate serves trained models online: [`serve`] is a
+//! multi-threaded batched inference engine over S2FP8-compressed
+//! checkpoints. A [`serve::WeightStore`] keeps checkpoint tensors
+//! compressed in memory (the paper's ≈4× reduction at deployment time)
+//! and decodes each tensor lazily, once, on first bind; concurrent
+//! prediction requests flow through a bounded queue into a dynamic
+//! micro-batcher (max-batch / max-wait policy, zero-padding to the AOT
+//! executable's fixed batch dimension), execute on a worker pool, and
+//! scatter back one result row per request, with p50/p95/p99 latency and
+//! throughput metrics built in. `examples/serve_demo.rs` drives ≥1000
+//! concurrent NCF requests end-to-end; `cargo run --release --bin serve`
+//! is the CLI entry point.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -47,6 +62,7 @@ pub mod data;
 pub mod formats;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

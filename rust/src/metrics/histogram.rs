@@ -1,0 +1,179 @@
+//! Lock-free log-bucketed latency histogram for the serving metrics
+//! (p50/p95/p99 without storing samples). Buckets are half-octave
+//! (√2-spaced) in microseconds: ~±19% worst-case quantile error, 130
+//! `AtomicU64`s total, `record()` is a couple of atomic adds — safe to call
+//! from every serving worker on every request.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Two sub-buckets per power of two of microseconds + a zero bucket covers
+/// the full `u64` range.
+const N_BUCKETS: usize = 130;
+
+/// Concurrent latency histogram. All methods take `&self`.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+    max_micros: AtomicU64,
+}
+
+fn bucket_index(micros: u64) -> usize {
+    if micros == 0 {
+        return 0;
+    }
+    let l = 63 - micros.leading_zeros() as usize;
+    let half = usize::from(l > 0 && micros >= 3u64 << (l - 1));
+    1 + 2 * l + half
+}
+
+/// Exclusive upper bound of a bucket, in microseconds (the value quantiles
+/// report).
+fn bucket_upper(idx: usize) -> u64 {
+    if idx == 0 {
+        return 0;
+    }
+    let l = (idx - 1) / 2;
+    if (idx - 1) % 2 == 0 {
+        if l == 0 {
+            1
+        } else {
+            3u64 << (l - 1)
+        }
+    } else {
+        2u64 << l
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+            max_micros: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let micros = d.as_micros().min(u64::MAX as u128) as u64;
+        self.buckets[bucket_index(micros)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+        self.max_micros.fetch_max(micros, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_micros.load(Ordering::Relaxed) / n)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_micros.load(Ordering::Relaxed))
+    }
+
+    /// Quantile estimate (bucket upper bound), `q` in `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(bucket_upper(i));
+            }
+        }
+        self.max()
+    }
+
+    /// `"p50 1.2ms  p95 3.1ms  p99 4.8ms  mean 1.4ms  max 9.2ms  (n=1000)"`
+    pub fn summary(&self) -> String {
+        format!(
+            "p50 {:.3?}  p95 {:.3?}  p99 {:.3?}  mean {:.3?}  max {:.3?}  (n={})",
+            self.quantile(0.50),
+            self.quantile(0.95),
+            self.quantile(0.99),
+            self.mean(),
+            self.max(),
+            self.count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_consistent() {
+        // every value maps into a bucket whose (inclusive) upper bound is
+        // ≥ the value and whose predecessor's upper bound is ≤ the value
+        for &m in &[0u64, 1, 2, 3, 4, 5, 7, 8, 100, 1000, 1 << 20, u64::MAX / 2] {
+            let idx = bucket_index(m);
+            assert!(idx < N_BUCKETS, "idx {idx} for {m}");
+            assert!(bucket_upper(idx) >= m, "{m}: upper bound");
+            if idx > 0 {
+                assert!(bucket_upper(idx - 1) <= m, "{m}: lower bound");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_bracket_the_data() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.50);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
+        // √2 buckets: p50 of uniform [1,1000]µs lands within a bucket of 500µs
+        assert!(p50 >= Duration::from_micros(500) && p50 <= Duration::from_micros(1024));
+        assert!(h.mean() >= Duration::from_micros(400));
+        assert_eq!(h.max(), Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert!(h.summary().contains("n=0"));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..250u64 {
+                        h.record(Duration::from_micros(t * 250 + i));
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 1000);
+    }
+}

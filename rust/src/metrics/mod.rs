@@ -1,8 +1,13 @@
 //! Evaluation metrics computed in rust (the serving side of the paper's
 //! evaluation): top-1 accuracy, corpus BLEU (paper Table 3), HR@K/NDCG@K
-//! (paper Table 4), and training-curve recording (Figs. 6–8, A2).
+//! (paper Table 4), training-curve recording (Figs. 6–8, A2), and the
+//! lock-free latency histogram backing the online-serving metrics
+//! ([`crate::serve::metrics`]).
 
 pub mod bleu;
 pub mod classification;
 pub mod curve;
+pub mod histogram;
 pub mod ranking;
+
+pub use histogram::LatencyHistogram;

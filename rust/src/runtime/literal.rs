@@ -26,6 +26,19 @@ impl HostValue {
         HostValue::I32 { shape, data }
     }
 
+    /// Fallible constructors for externally-supplied payloads (serving
+    /// requests): shape mismatches become errors, not worker panics.
+    pub fn try_f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        Ok(HostValue::F32(Tensor::try_new(shape, data)?))
+    }
+
+    pub fn try_i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("shape {shape:?} does not match data length {}", data.len());
+        }
+        Ok(HostValue::I32 { shape, data })
+    }
+
     pub fn scalar_f32(v: f32) -> Self {
         HostValue::F32(Tensor::scalar(v))
     }

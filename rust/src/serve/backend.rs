@@ -1,0 +1,394 @@
+//! Execution backends for the serving engine.
+//!
+//! The PJRT client is `Rc`-based (`!Send`), so executables cannot be
+//! shared across worker threads. A [`Backend`] is therefore a `Send +
+//! Sync` *factory*: each worker calls [`Backend::make_runner`] on its own
+//! thread and drives the (thread-local) [`BatchRunner`] it gets back.
+//!
+//! * [`HostBackend`] — the pure-rust [`HostModel`](super::model::HostModel)
+//!   forward pass; no artifacts or PJRT needed, bitwise-deterministic rows
+//!   (the integration tests' reference).
+//! * [`RuntimeBackend`] — an AOT eval executable through
+//!   [`runtime`](crate::runtime): one `Runtime` (PJRT client) + compile per
+//!   worker, param/state inputs bound once from the registry's
+//!   (lazily-decoded) weights, batch inputs fed per micro-batch.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Artifact, Dtype, Executable, HostValue, Role, Runtime};
+
+use super::batcher::split_rows;
+use super::model::HostModel;
+use super::registry::WeightStore;
+
+/// One per-example input slot of a served model (leading batch dim
+/// stripped from the executable's spec).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// Shape/dtype/arity validation of one example against the specs — the
+/// request-path gate that turns malformed payloads into submit-time errors
+/// instead of worker panics.
+pub fn check_features(specs: &[FeatureSpec], features: &[HostValue]) -> Result<()> {
+    if features.len() != specs.len() {
+        bail!(
+            "request has {} feature tensors, model expects {} ({:?})",
+            features.len(),
+            specs.len(),
+            specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>()
+        );
+    }
+    for (v, spec) in features.iter().zip(specs.iter()) {
+        if v.dtype() != spec.dtype {
+            bail!("feature '{}': dtype {:?}, expected {:?}", spec.name, v.dtype(), spec.dtype);
+        }
+        if v.shape() != spec.shape.as_slice() {
+            bail!(
+                "feature '{}': shape {:?}, expected {:?} (per-example, no batch dim)",
+                spec.name,
+                v.shape(),
+                spec.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Thread-local executor of stacked micro-batches.
+pub trait BatchRunner {
+    /// `inputs` are stacked to the backend's fixed batch dim; return one
+    /// output row per live (non-padding) request, `0..n`.
+    fn run(&mut self, inputs: &[HostValue], n: usize) -> Result<Vec<Vec<f32>>>;
+}
+
+/// Shared, thread-safe description of a served model + runner factory.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> String;
+
+    /// The fixed batch dimension micro-batches are padded to.
+    fn batch_dim(&self) -> usize;
+
+    fn feature_specs(&self) -> &[FeatureSpec];
+
+    /// Request-path validation (shape/dtype plus backend semantics such as
+    /// embedding-id ranges).
+    fn validate(&self, features: &[HostValue]) -> Result<()> {
+        check_features(self.feature_specs(), features)
+    }
+
+    /// Build this worker thread's runner. May be expensive (PJRT client +
+    /// XLA compile for [`RuntimeBackend`]); called once per worker.
+    fn make_runner(&self) -> Result<Box<dyn BatchRunner>>;
+}
+
+// ---------------------------------------------------------------------------
+// host backend
+// ---------------------------------------------------------------------------
+
+/// Serve a [`HostModel`] on plain CPU rust — no PJRT required.
+pub struct HostBackend {
+    model: Arc<HostModel>,
+    batch_dim: usize,
+    specs: Vec<FeatureSpec>,
+}
+
+impl HostBackend {
+    pub fn new(model: Arc<HostModel>, batch_dim: usize) -> Self {
+        let specs = model.feature_specs();
+        HostBackend { model, batch_dim: batch_dim.max(1), specs }
+    }
+
+    pub fn model(&self) -> &Arc<HostModel> {
+        &self.model
+    }
+}
+
+struct HostRunner {
+    model: Arc<HostModel>,
+}
+
+impl BatchRunner for HostRunner {
+    fn run(&mut self, inputs: &[HostValue], n: usize) -> Result<Vec<Vec<f32>>> {
+        self.model.run_rows(inputs, n)
+    }
+}
+
+impl Backend for HostBackend {
+    fn name(&self) -> String {
+        match self.model.as_ref() {
+            HostModel::Mlp(_) => "host/mlp".into(),
+            HostModel::Ncf(_) => "host/ncf".into(),
+        }
+    }
+
+    fn batch_dim(&self) -> usize {
+        self.batch_dim
+    }
+
+    fn feature_specs(&self) -> &[FeatureSpec] {
+        &self.specs
+    }
+
+    fn validate(&self, features: &[HostValue]) -> Result<()> {
+        check_features(&self.specs, features)?;
+        self.model.validate_example(features)
+    }
+
+    fn make_runner(&self) -> Result<Box<dyn BatchRunner>> {
+        Ok(Box::new(HostRunner { model: self.model.clone() }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT runtime backend
+// ---------------------------------------------------------------------------
+
+/// Custom request-path validation (semantics the manifest cannot express,
+/// e.g. embedding-id ranges).
+pub type Validator = Box<dyn Fn(&[HostValue]) -> Result<()> + Send + Sync>;
+
+/// Serve an AOT eval executable, weights bound from a [`WeightStore`].
+///
+/// Note on validation: the manifest gives shapes and dtypes only, so by
+/// default this backend cannot range-check embedding ids the way
+/// [`HostBackend`] does (XLA gathers clamp out-of-range indices instead of
+/// failing). Attach domain checks with [`RuntimeBackend::with_validator`].
+pub struct RuntimeBackend {
+    dir: PathBuf,
+    artifact: String,
+    weights: Arc<WeightStore>,
+    batch_dim: usize,
+    specs: Vec<FeatureSpec>,
+    /// (input index, weight name) for param/state slots.
+    bound: Vec<(usize, String)>,
+    batch_idx: Vec<usize>,
+    out_idx: usize,
+    validator: Option<Validator>,
+}
+
+impl RuntimeBackend {
+    /// Parse the artifact's manifest (no compile yet) and check every
+    /// persistent input resolves — by name and shape — against the weight
+    /// store. This decodes exactly the tensors this executable binds.
+    pub fn new(
+        dir: impl Into<PathBuf>,
+        artifact: &str,
+        weights: Arc<WeightStore>,
+    ) -> Result<Self> {
+        let dir = dir.into();
+        let art = Artifact::load(&dir, artifact)?;
+        let man = &art.manifest;
+        let mut bound = Vec::new();
+        let mut batch_idx = Vec::new();
+        for (i, spec) in man.inputs.iter().enumerate() {
+            match spec.role {
+                Role::Param | Role::State => {
+                    let w = weights
+                        .get(&spec.name)
+                        .with_context(|| format!("binding {artifact} input '{}'", spec.name))?;
+                    if w.shape() != spec.shape.as_slice() || w.dtype() != spec.dtype {
+                        bail!(
+                            "checkpoint tensor '{}' is {:?}/{:?}, executable wants {:?}/{:?}",
+                            spec.name,
+                            w.shape(),
+                            w.dtype(),
+                            spec.shape,
+                            spec.dtype
+                        );
+                    }
+                    bound.push((i, spec.name.clone()));
+                }
+                Role::Batch => batch_idx.push(i),
+                other => bail!(
+                    "{artifact}: input '{}' has role {other:?} — only param/state/batch \
+                     inputs can be served (use an eval artifact, not a train step)",
+                    spec.name
+                ),
+            }
+        }
+        if batch_idx.is_empty() {
+            bail!("{artifact}: no batch inputs to feed requests into");
+        }
+        let batch_dim = man.inputs[batch_idx[0]].shape.first().copied().unwrap_or(0);
+        if batch_dim == 0 {
+            bail!("{artifact}: batch input '{}' has no leading dim", man.inputs[batch_idx[0]].name);
+        }
+        let mut specs = Vec::with_capacity(batch_idx.len());
+        for &i in &batch_idx {
+            let s = &man.inputs[i];
+            if s.shape.first() != Some(&batch_dim) {
+                bail!(
+                    "{artifact}: batch inputs disagree on the batch dim ({:?} vs {batch_dim})",
+                    s.shape
+                );
+            }
+            specs.push(FeatureSpec {
+                name: s.name.clone(),
+                shape: s.shape[1..].to_vec(),
+                dtype: s.dtype,
+            });
+        }
+        // result slot: an explicit out/logits output, or the single output
+        // of a one-output program — anything else is ambiguous, so refuse
+        // rather than silently serving an arbitrary tensor
+        let out_slots = man.output_indices(Role::Out);
+        let logit_slots = man.output_indices(Role::Logits);
+        let out_idx = match out_slots.first().or_else(|| logit_slots.first()) {
+            Some(&i) => i,
+            None if man.outputs.len() == 1 => 0,
+            None => bail!(
+                "{artifact}: {} outputs but none has role out/logits — cannot tell which \
+                 tensor to serve",
+                man.outputs.len()
+            ),
+        };
+        Ok(RuntimeBackend {
+            dir,
+            artifact: artifact.to_string(),
+            weights,
+            batch_dim,
+            specs,
+            bound,
+            batch_idx,
+            out_idx,
+            validator: None,
+        })
+    }
+
+    /// Add semantic request validation (runs after the shape/dtype check,
+    /// before a request is accepted into the queue).
+    pub fn with_validator(
+        mut self,
+        v: impl Fn(&[HostValue]) -> Result<()> + Send + Sync + 'static,
+    ) -> Self {
+        self.validator = Some(Box::new(v));
+        self
+    }
+}
+
+struct RuntimeRunner {
+    exe: Rc<Executable>,
+    /// Keeps the PJRT client alive for the executable's lifetime.
+    _rt: Runtime,
+    /// Prebound persistent-input literals, by input index.
+    bound: Vec<(usize, xla::Literal)>,
+    batch_idx: Vec<usize>,
+    out_idx: usize,
+}
+
+impl BatchRunner for RuntimeRunner {
+    fn run(&mut self, inputs: &[HostValue], n: usize) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.batch_idx.len() {
+            bail!("expected {} stacked inputs, got {}", self.batch_idx.len(), inputs.len());
+        }
+        let man = &self.exe.manifest;
+        let batch_lits: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(self.batch_idx.iter())
+            .map(|(v, &i)| {
+                v.check_spec(&man.inputs[i])?;
+                v.to_literal()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(man.inputs.len());
+        let mut b_cursor = 0usize;
+        let mut p_cursor = 0usize;
+        for i in 0..man.inputs.len() {
+            if p_cursor < self.bound.len() && self.bound[p_cursor].0 == i {
+                refs.push(&self.bound[p_cursor].1);
+                p_cursor += 1;
+            } else {
+                refs.push(&batch_lits[b_cursor]);
+                b_cursor += 1;
+                debug_assert_eq!(self.batch_idx[b_cursor - 1], i);
+            }
+        }
+        let outs = self.exe.run_literals(&refs)?;
+        let out = HostValue::from_literal(&outs[self.out_idx])?;
+        split_rows(out.as_f32()?, n)
+    }
+}
+
+impl Backend for RuntimeBackend {
+    fn name(&self) -> String {
+        format!("runtime/{}", self.artifact)
+    }
+
+    fn batch_dim(&self) -> usize {
+        self.batch_dim
+    }
+
+    fn feature_specs(&self) -> &[FeatureSpec] {
+        &self.specs
+    }
+
+    fn validate(&self, features: &[HostValue]) -> Result<()> {
+        check_features(&self.specs, features)?;
+        match &self.validator {
+            Some(v) => v(features),
+            None => Ok(()),
+        }
+    }
+
+    fn make_runner(&self) -> Result<Box<dyn BatchRunner>> {
+        let rt = Runtime::cpu()?;
+        let exe = rt.load(&self.dir, &self.artifact)?;
+        let bound = self
+            .bound
+            .iter()
+            .map(|(i, name)| Ok((*i, self.weights.get(name)?.to_literal()?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Box::new(RuntimeRunner {
+            exe,
+            _rt: rt,
+            bound,
+            batch_idx: self.batch_idx.clone(),
+            out_idx: self.out_idx,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::model::{synth_mlp_slots, HostModel, ModelKind};
+
+    #[test]
+    fn check_features_gates_arity_dtype_and_shape() {
+        let specs = vec![
+            FeatureSpec { name: "user".into(), shape: vec![], dtype: Dtype::I32 },
+            FeatureSpec { name: "item".into(), shape: vec![], dtype: Dtype::I32 },
+        ];
+        let good = vec![HostValue::scalar_i32(1), HostValue::scalar_i32(2)];
+        assert!(check_features(&specs, &good).is_ok());
+        assert!(check_features(&specs, &good[..1]).is_err());
+        let bad_dtype = vec![HostValue::scalar_f32(1.0), HostValue::scalar_i32(2)];
+        assert!(check_features(&specs, &bad_dtype).is_err());
+        let bad_shape = vec![HostValue::i32(vec![2], vec![1, 1]), HostValue::scalar_i32(2)];
+        assert!(check_features(&specs, &bad_shape).is_err());
+    }
+
+    #[test]
+    fn host_backend_round_trip() {
+        let store = WeightStore::from_slots(&synth_mlp_slots(&[6, 4, 2], 1));
+        let model = Arc::new(HostModel::from_store(ModelKind::Mlp, &store).unwrap());
+        let be = HostBackend::new(model.clone(), 8);
+        assert_eq!(be.batch_dim(), 8);
+        assert_eq!(be.name(), "host/mlp");
+        assert_eq!(be.feature_specs().len(), 1);
+        let mut runner = be.make_runner().unwrap();
+        let x = HostValue::f32(vec![8, 6], vec![0.5; 48]);
+        let rows = runner.run(&[x], 2).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), 2);
+        assert_eq!(rows[0], rows[1]); // identical inputs ⇒ identical rows
+    }
+}

@@ -1,0 +1,209 @@
+//! Dynamic micro-batching: coalescing policy plus the stack/pad/scatter
+//! plumbing between per-request examples and the executable's fixed batch
+//! dimension.
+//!
+//! The AOT executables are compiled for one batch size, so a micro-batch
+//! of `n` requests is **stacked** into `(B, …)` tensors and **padded** with
+//! zero rows up to `B` (zero is a valid embedding id and a harmless f32
+//! feature; padded rows are computed and then discarded). Results are
+//! **scattered** back one row per request — callers only ever see their own
+//! row. See DESIGN.md "Serving" for the policy rationale.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Dtype, HostValue};
+use crate::tensor::Tensor;
+
+use super::backend::FeatureSpec;
+use super::queue::{BoundedQueue, Request};
+
+/// When to close a micro-batch: whichever of the two limits is hit first.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Upper bound on requests per batch (≤ the executable's batch dim).
+    pub max_batch: usize,
+    /// How long to hold an under-full batch open waiting for more arrivals.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(2000) }
+    }
+}
+
+/// Pulls coalesced request batches off the submission queue.
+pub struct MicroBatcher {
+    queue: Arc<BoundedQueue<Request>>,
+    policy: BatchPolicy,
+}
+
+impl MicroBatcher {
+    pub fn new(queue: Arc<BoundedQueue<Request>>, policy: BatchPolicy) -> Self {
+        MicroBatcher { queue, policy }
+    }
+
+    /// Next micro-batch (blocking); `None` when the queue is closed and
+    /// drained — the worker's signal to exit.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        self.queue.pop_batch(self.policy.max_batch, self.policy.max_wait)
+    }
+}
+
+/// Stack `n ≤ fixed_b` per-example feature sets into model inputs of
+/// leading dimension `fixed_b`, zero-padding rows `n..fixed_b`. Examples
+/// are validated against `specs` slot by slot — a malformed example is an
+/// error here, never a panic in a worker.
+pub fn stack_and_pad(
+    examples: &[&[HostValue]],
+    specs: &[FeatureSpec],
+    fixed_b: usize,
+) -> Result<Vec<HostValue>> {
+    let n = examples.len();
+    if n == 0 {
+        bail!("empty micro-batch");
+    }
+    if n > fixed_b {
+        bail!("micro-batch of {n} exceeds executable batch dim {fixed_b}");
+    }
+    let mut out = Vec::with_capacity(specs.len());
+    for (s, spec) in specs.iter().enumerate() {
+        let row: usize = spec.shape.iter().product();
+        let mut shape = Vec::with_capacity(spec.shape.len() + 1);
+        shape.push(fixed_b);
+        shape.extend_from_slice(&spec.shape);
+        match spec.dtype {
+            Dtype::F32 => {
+                let mut data = Vec::with_capacity(fixed_b * row);
+                for (i, ex) in examples.iter().enumerate() {
+                    let v = slot(ex, s, spec, i)?;
+                    let t = v.as_f32().with_context(|| ctx(spec, i))?;
+                    check_shape(t.shape(), spec, i)?;
+                    data.extend_from_slice(t.data());
+                }
+                data.resize(fixed_b * row, 0.0);
+                out.push(HostValue::try_f32(shape, data)?);
+            }
+            Dtype::I32 => {
+                let mut data = Vec::with_capacity(fixed_b * row);
+                for (i, ex) in examples.iter().enumerate() {
+                    let v = slot(ex, s, spec, i)?;
+                    check_shape(v.shape(), spec, i)?;
+                    data.extend_from_slice(v.as_i32().with_context(|| ctx(spec, i))?);
+                }
+                data.resize(fixed_b * row, 0);
+                out.push(HostValue::try_i32(shape, data)?);
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn slot<'a>(
+    ex: &'a [HostValue],
+    s: usize,
+    spec: &FeatureSpec,
+    i: usize,
+) -> Result<&'a HostValue> {
+    ex.get(s).with_context(|| format!("example {i} missing feature slot '{}'", spec.name))
+}
+
+fn check_shape(got: &[usize], spec: &FeatureSpec, i: usize) -> Result<()> {
+    if got != spec.shape.as_slice() {
+        bail!(
+            "example {i}, feature '{}': shape {:?} does not match spec {:?}",
+            spec.name,
+            got,
+            spec.shape
+        );
+    }
+    Ok(())
+}
+
+fn ctx(spec: &FeatureSpec, i: usize) -> String {
+    format!("example {i}, feature '{}'", spec.name)
+}
+
+/// Scatter a batched output back to per-request rows: row `i` of the
+/// leading dimension, for the first `n` (non-padding) rows.
+pub fn split_rows(out: &Tensor, n: usize) -> Result<Vec<Vec<f32>>> {
+    if out.shape().is_empty() {
+        bail!("batched output is a scalar — no leading batch dimension to scatter");
+    }
+    let b = out.shape()[0];
+    if n > b {
+        bail!("cannot scatter {n} rows from a batch-{b} output");
+    }
+    let row: usize = out.shape()[1..].iter().product();
+    Ok((0..n).map(|i| out.data()[i * row..(i + 1) * row].to_vec()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FeatureSpec> {
+        vec![
+            FeatureSpec { name: "user".into(), shape: vec![], dtype: Dtype::I32 },
+            FeatureSpec { name: "x".into(), shape: vec![3], dtype: Dtype::F32 },
+        ]
+    }
+
+    fn example(u: i32, x: [f32; 3]) -> Vec<HostValue> {
+        vec![HostValue::scalar_i32(u), HostValue::f32(vec![3], x.to_vec())]
+    }
+
+    #[test]
+    fn stacks_and_zero_pads_to_the_fixed_dim() {
+        let e1 = example(4, [1.0, 2.0, 3.0]);
+        let e2 = example(9, [4.0, 5.0, 6.0]);
+        let got = stack_and_pad(&[&e1, &e2], &specs(), 4).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].shape(), &[4]);
+        assert_eq!(got[0].as_i32().unwrap(), &[4, 9, 0, 0]);
+        assert_eq!(got[1].shape(), &[4, 3]);
+        assert_eq!(
+            got[1].as_f32().unwrap().data(),
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_examples() {
+        let good = example(1, [1.0, 2.0, 3.0]);
+        // wrong arity
+        let short = vec![HostValue::scalar_i32(1)];
+        assert!(stack_and_pad(&[&short], &specs(), 4).is_err());
+        // wrong dtype in slot 0
+        let wrong_dtype =
+            vec![HostValue::scalar_f32(1.0), HostValue::f32(vec![3], vec![0.0; 3])];
+        assert!(stack_and_pad(&[&wrong_dtype], &specs(), 4).is_err());
+        // wrong shape in slot 1
+        let wrong_shape =
+            vec![HostValue::scalar_i32(1), HostValue::f32(vec![2], vec![0.0; 2])];
+        assert!(stack_and_pad(&[&good, &wrong_shape], &specs(), 4).is_err());
+        // overfull batch
+        let refs: Vec<&[HostValue]> = (0..5).map(|_| good.as_slice()).collect();
+        assert!(stack_and_pad(&refs, &specs(), 4).is_err());
+    }
+
+    #[test]
+    fn split_rows_scatters_only_live_rows() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|i| i as f32).collect());
+        let rows = split_rows(&t, 3).unwrap();
+        assert_eq!(rows, vec![vec![0.0, 1.0], vec![2.0, 3.0], vec![4.0, 5.0]]);
+        // rank-1 output: one scalar per row
+        let t1 = Tensor::new(vec![3], vec![7.0, 8.0, 9.0]);
+        assert_eq!(split_rows(&t1, 2).unwrap(), vec![vec![7.0], vec![8.0]]);
+        assert!(split_rows(&t1, 4).is_err());
+    }
+
+    #[test]
+    fn default_policy_is_sane() {
+        let p = BatchPolicy::default();
+        assert!(p.max_batch >= 1 && p.max_wait > Duration::ZERO);
+    }
+}

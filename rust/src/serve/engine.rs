@@ -1,0 +1,397 @@
+//! The serving engine: submission front door, worker pool, lifecycle.
+//!
+//! ```text
+//!   clients ──submit()──▶ BoundedQueue ──MicroBatcher──▶ worker 0..N
+//!                │  ▲                                      │
+//!            validate  backpressure                 stack+pad → run →
+//!                │  (queue full ⇒ shed)             scatter → fulfill
+//!                ▼
+//!             Ticket ◀──────────── Response ───────────────┘
+//! ```
+//!
+//! Requests are validated at the door (shape/dtype/id-range — malformed
+//! payloads never reach a worker), coalesced by the micro-batcher, padded
+//! to the executable's fixed batch dimension, executed on a worker-local
+//! [`BatchRunner`](super::backend::BatchRunner), and scattered back one
+//! row per ticket. Shutdown is graceful: the queue closes, workers drain
+//! what was accepted, every outstanding ticket resolves (with its result
+//! or an error — never a hang).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::HostValue;
+
+use super::backend::Backend;
+use super::batcher::{stack_and_pad, BatchPolicy, MicroBatcher};
+use super::metrics::ServeMetrics;
+use super::queue::{oneshot, BoundedQueue, PushError, Request, Response, Ticket};
+
+/// Engine sizing knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads (each with its own runner — see `backend`).
+    pub workers: usize,
+    /// Submission-queue capacity: the backpressure bound.
+    pub queue_capacity: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 2, queue_capacity: 1024, policy: BatchPolicy::default() }
+    }
+}
+
+/// A running inference engine. Cheap to share behind an `Arc`; dropping
+/// (or calling [`Engine::shutdown`]) closes the queue and joins workers.
+pub struct Engine {
+    queue: Arc<BoundedQueue<Request>>,
+    metrics: Arc<ServeMetrics>,
+    backend: Arc<dyn Backend>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Engine {
+    /// Spawn the worker pool. Fails fast (and cleans up) if any worker
+    /// cannot build its runner — e.g. a missing artifact or a checkpoint
+    /// tensor the executable needs.
+    pub fn start(backend: Arc<dyn Backend>, cfg: ServeConfig) -> Result<Engine> {
+        if cfg.workers == 0 {
+            bail!("serve engine needs at least one worker");
+        }
+        let mut policy = cfg.policy;
+        policy.max_batch = policy.max_batch.clamp(1, backend.batch_dim());
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+        let metrics = Arc::new(ServeMetrics::new());
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let batcher = MicroBatcher::new(queue.clone(), policy);
+            let backend = backend.clone();
+            let metrics = metrics.clone();
+            let ready = ready_tx.clone();
+            let queue = queue.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-worker-{w}"))
+                .spawn(move || {
+                    // Last-resort fail-fast: if this worker unwinds, close
+                    // the queue so producers error out instead of feeding a
+                    // possibly-empty pool forever.
+                    let _guard = CloseOnPanic(queue);
+                    match backend.make_runner() {
+                        Ok(mut runner) => {
+                            let _ = ready.send(Ok(()));
+                            // release the sender so a sibling's init panic
+                            // disconnects the channel instead of deadlocking
+                            // Engine::start
+                            drop(ready);
+                            worker_loop(&batcher, backend.as_ref(), &mut *runner, &metrics);
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                        }
+                    }
+                })
+                .context("spawning serve worker")?;
+            workers.push(handle);
+        }
+        drop(ready_tx);
+        let mut engine =
+            Engine { queue, metrics, backend, workers, next_id: AtomicU64::new(0) };
+        for _ in 0..engine.workers.len() {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    engine.shutdown_inner();
+                    return Err(e.context("serve worker failed to initialize"));
+                }
+                Err(_) => {
+                    engine.shutdown_inner();
+                    bail!("serve worker died during initialization");
+                }
+            }
+        }
+        crate::log_info!(
+            "serving {} with {} workers (batch ≤ {}, wait ≤ {:?}, queue {})",
+            engine.backend.name(),
+            engine.workers.len(),
+            policy.max_batch,
+            policy.max_wait,
+            engine.queue.capacity()
+        );
+        Ok(engine)
+    }
+
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        self.metrics.clone()
+    }
+
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
+    }
+
+    /// Current submission-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    fn make_request(&self, features: Vec<HostValue>) -> Result<(Request, Ticket)> {
+        self.backend
+            .validate(&features)
+            .map_err(|e| anyhow!("rejected malformed request: {e:#}"))?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (responder, ticket) = oneshot(id);
+        Ok((Request { id, features, enqueued: Instant::now(), responder }, ticket))
+    }
+
+    /// Count the request before the push so a fast worker's decrement can
+    /// never be observed ahead of the increment (no negative gauge).
+    fn count_accepted(&self) {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn uncount_accepted(&self) {
+        self.metrics.submitted.fetch_sub(1, Ordering::Relaxed);
+        self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Enqueue a request, blocking while the queue is full.
+    pub fn submit(&self, features: Vec<HostValue>) -> Result<Ticket> {
+        let (req, ticket) = self.make_request(features)?;
+        self.count_accepted();
+        match self.queue.push(req) {
+            Ok(()) => Ok(ticket),
+            Err(PushError::Closed(_)) => {
+                self.uncount_accepted();
+                bail!("serve engine is shut down")
+            }
+            Err(PushError::Full(_)) => unreachable!("blocking push never reports Full"),
+        }
+    }
+
+    /// Enqueue without blocking: a full queue is an immediate error (load
+    /// shedding — callers retry or drop).
+    pub fn try_submit(&self, features: Vec<HostValue>) -> Result<Ticket> {
+        let (req, ticket) = self.make_request(features)?;
+        self.count_accepted();
+        match self.queue.try_push(req) {
+            Ok(()) => Ok(ticket),
+            Err(PushError::Full(_)) => {
+                self.uncount_accepted();
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                bail!(
+                    "backpressure: queue full ({} pending requests)",
+                    self.queue.capacity()
+                );
+            }
+            Err(PushError::Closed(_)) => {
+                self.uncount_accepted();
+                bail!("serve engine is shut down")
+            }
+        }
+    }
+
+    /// Submit + wait: the blocking request path.
+    pub fn predict(&self, features: Vec<HostValue>) -> Result<Response> {
+        self.submit(features)?.wait()
+    }
+
+    /// Graceful shutdown: stop accepting, drain accepted requests, join
+    /// the pool. Every outstanding ticket is resolved.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // If a worker died, requests may still sit in the queue; resolve
+        // their tickets with an error instead of leaving waiters hanging.
+        while let Some(batch) = self.queue.pop_batch(64, std::time::Duration::ZERO) {
+            for req in batch {
+                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.record_done(req.enqueued.elapsed(), false);
+                req.responder
+                    .fulfill(Err(anyhow!("request {} abandoned: no live workers", req.id)));
+            }
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Closes the submission queue if the owning worker thread unwinds, so a
+/// dying pool fails producers fast instead of accepting requests nobody
+/// will ever serve.
+struct CloseOnPanic(Arc<BoundedQueue<Request>>);
+
+impl Drop for CloseOnPanic {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            crate::log_error!("serve worker panicked — closing the submission queue");
+            self.0.close();
+        }
+    }
+}
+
+fn worker_loop(
+    batcher: &MicroBatcher,
+    backend: &dyn Backend,
+    runner: &mut dyn super::backend::BatchRunner,
+    metrics: &ServeMetrics,
+) {
+    while let Some(batch) = batcher.next_batch() {
+        metrics.queue_depth.fetch_sub(batch.len() as i64, Ordering::Relaxed);
+        let n = batch.len();
+        let fixed_b = backend.batch_dim();
+        let t = Instant::now();
+        let examples: Vec<&[HostValue]> = batch.iter().map(|r| r.features.as_slice()).collect();
+        // Contain panics from the runner (e.g. inside the xla bindings):
+        // the batch fails, its tickets resolve, the worker lives on.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            stack_and_pad(&examples, backend.feature_specs(), fixed_b)
+                .and_then(|inputs| runner.run(&inputs, n))
+        }))
+        .unwrap_or_else(|p| {
+            Err(anyhow!("worker panicked during execution: {}", panic_msg(p.as_ref())))
+        });
+        let exec = t.elapsed();
+        match result {
+            Ok(rows) if rows.len() == n => {
+                metrics.record_batch(n, fixed_b - n, exec);
+                for (req, output) in batch.into_iter().zip(rows) {
+                    let latency = req.enqueued.elapsed();
+                    metrics.record_done(latency, true);
+                    req.responder.fulfill(Ok(Response { id: req.id, output, latency }));
+                }
+            }
+            Ok(rows) => {
+                metrics.record_batch(n, fixed_b - n, exec);
+                let msg = format!("runner returned {} rows for a batch of {n}", rows.len());
+                crate::log_error!("{}: {msg}", backend.name());
+                fail_batch(batch, &msg, metrics);
+            }
+            Err(e) => {
+                metrics.record_batch(n, fixed_b - n, exec);
+                let msg = format!("batch execution failed: {e:#}");
+                crate::log_error!("{}: {msg}", backend.name());
+                fail_batch(batch, &msg, metrics);
+            }
+        }
+    }
+}
+
+fn fail_batch(batch: Vec<Request>, msg: &str, metrics: &ServeMetrics) {
+    for req in batch {
+        metrics.record_done(req.enqueued.elapsed(), false);
+        req.responder.fulfill(Err(anyhow!("{msg}")));
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::backend::HostBackend;
+    use crate::serve::model::{synth_ncf_slots, HostModel, ModelKind, NcfDims};
+    use crate::serve::registry::WeightStore;
+    use std::time::Duration;
+
+    fn ncf_engine(workers: usize, max_batch: usize) -> (Engine, Arc<HostModel>) {
+        let dims = NcfDims { n_users: 64, n_items: 128, ..NcfDims::default() };
+        let store = WeightStore::from_slots(&synth_ncf_slots(&dims, 3));
+        let model = Arc::new(HostModel::from_store(ModelKind::Ncf, &store).unwrap());
+        let backend = Arc::new(HostBackend::new(model.clone(), max_batch));
+        let cfg = ServeConfig {
+            workers,
+            queue_capacity: 256,
+            policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(500) },
+        };
+        (Engine::start(backend, cfg).unwrap(), model)
+    }
+
+    fn pair(u: i32, i: i32) -> Vec<HostValue> {
+        vec![HostValue::scalar_i32(u), HostValue::scalar_i32(i)]
+    }
+
+    #[test]
+    fn serves_concurrent_requests_matching_the_reference() {
+        let (engine, model) = ncf_engine(2, 8);
+        let engine = Arc::new(engine);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let engine = engine.clone();
+                let model = model.clone();
+                s.spawn(move || {
+                    for i in 0..25 {
+                        let (u, it) = ((t * 13 + i) % 64, (t * 7 + i * 3) % 128);
+                        let resp = engine.predict(pair(u, it)).unwrap();
+                        let want = model.score_one(&pair(u, it)).unwrap();
+                        assert_eq!(resp.output[0].to_bits(), want[0].to_bits());
+                    }
+                });
+            }
+        });
+        let m = engine.metrics();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 100);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.latency.count(), 100);
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected_at_submit() {
+        let (engine, _) = ncf_engine(1, 4);
+        // wrong arity
+        assert!(engine.predict(vec![HostValue::scalar_i32(1)]).is_err());
+        // wrong dtype
+        assert!(engine
+            .predict(vec![HostValue::scalar_f32(1.0), HostValue::scalar_i32(1)])
+            .is_err());
+        // id out of range
+        let err = engine.predict(pair(1000, 0)).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // the engine is still healthy afterwards
+        assert!(engine.predict(pair(1, 1)).is_ok());
+    }
+
+    #[test]
+    fn shutdown_resolves_all_tickets() {
+        let (engine, _) = ncf_engine(1, 4);
+        let tickets: Vec<_> = (0..20).map(|i| engine.submit(pair(i % 64, i % 128)).unwrap()).collect();
+        engine.shutdown();
+        // graceful: accepted requests were drained, every ticket resolved
+        for t in tickets {
+            t.wait_timeout(Duration::from_secs(5)).unwrap();
+        }
+    }
+
+    #[test]
+    fn submitting_after_shutdown_fails_cleanly() {
+        let (engine, _) = ncf_engine(1, 4);
+        let engine = Arc::new(engine);
+        engine.queue.close();
+        let err = engine.predict(pair(0, 0)).unwrap_err().to_string();
+        assert!(err.contains("shut down"), "{err}");
+    }
+}

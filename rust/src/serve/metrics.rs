@@ -1,0 +1,175 @@
+//! Serving observability: request/batch counters, queue-depth gauge, and
+//! latency histograms (p50/p95/p99), built on
+//! [`metrics::histogram::LatencyHistogram`](crate::metrics::histogram).
+//! One [`ServeMetrics`] is shared by the engine, all workers and all
+//! producers; every field is atomic, so reading a snapshot never blocks
+//! the serving path.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::metrics::histogram::LatencyHistogram;
+use crate::util::json::Json;
+
+#[derive(Debug)]
+pub struct ServeMetrics {
+    /// End-to-end request latency (submit → response).
+    pub latency: LatencyHistogram,
+    /// Per-micro-batch execution time (stack + run + scatter).
+    pub batch_exec: LatencyHistogram,
+    /// Accepted into the queue.
+    pub submitted: AtomicU64,
+    /// Completed successfully.
+    pub completed: AtomicU64,
+    /// Completed with an execution error.
+    pub failed: AtomicU64,
+    /// Shed at submit time (queue full — backpressure).
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    /// Live (request) rows executed.
+    pub batched_rows: AtomicU64,
+    /// Padding rows executed and discarded.
+    pub padded_rows: AtomicU64,
+    /// Requests currently queued (gauge: +1 on accept, −1 on dequeue).
+    pub queue_depth: AtomicI64,
+    started: Instant,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        ServeMetrics {
+            latency: LatencyHistogram::new(),
+            batch_exec: LatencyHistogram::new(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_rows: AtomicU64::new(0),
+            padded_rows: AtomicU64::new(0),
+            queue_depth: AtomicI64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_batch(&self, live_rows: usize, padded_rows: usize, exec: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_rows.fetch_add(live_rows as u64, Ordering::Relaxed);
+        self.padded_rows.fetch_add(padded_rows as u64, Ordering::Relaxed);
+        self.batch_exec.record(exec);
+    }
+
+    pub fn record_done(&self, latency: Duration, ok: bool) {
+        self.latency.record(latency);
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Completed requests per second of uptime.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.uptime().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.completed.load(Ordering::Relaxed) as f64 / secs
+    }
+
+    /// Mean live rows per executed batch (batching effectiveness).
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_rows.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Human-readable multi-line summary (CLI / demo output).
+    pub fn summary(&self) -> String {
+        let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let (sub, ok, fail, rej) = (
+            get(&self.submitted),
+            get(&self.completed),
+            get(&self.failed),
+            get(&self.rejected),
+        );
+        let (batches, live, pad) =
+            (get(&self.batches), get(&self.batched_rows), get(&self.padded_rows));
+        let pad_pct = if live + pad > 0 { 100.0 * pad as f64 / (live + pad) as f64 } else { 0.0 };
+        format!(
+            "requests  : {sub} submitted, {ok} ok, {fail} failed, {rej} rejected (backpressure)\n\
+             batches   : {batches} executed, {:.1} rows/batch mean, {pad_pct:.1}% padding\n\
+             queue     : depth {}\n\
+             latency   : {}\n\
+             batch exec: {}\n\
+             throughput: {:.0} req/s over {:.2}s",
+            self.mean_batch_fill(),
+            self.queue_depth.load(Ordering::Relaxed),
+            self.latency.summary(),
+            self.batch_exec.summary(),
+            self.throughput_rps(),
+            self.uptime().as_secs_f64(),
+        )
+    }
+
+    /// Structured snapshot (the `BENCH_serve.json` rows).
+    pub fn to_json(&self) -> Json {
+        let get = |c: &AtomicU64| c.load(Ordering::Relaxed) as f64;
+        let us = |d: Duration| d.as_micros() as f64;
+        Json::obj(vec![
+            ("submitted", Json::num(get(&self.submitted))),
+            ("completed", Json::num(get(&self.completed))),
+            ("failed", Json::num(get(&self.failed))),
+            ("rejected", Json::num(get(&self.rejected))),
+            ("batches", Json::num(get(&self.batches))),
+            ("batched_rows", Json::num(get(&self.batched_rows))),
+            ("padded_rows", Json::num(get(&self.padded_rows))),
+            ("mean_batch_fill", Json::num(self.mean_batch_fill())),
+            ("rps", Json::num(self.throughput_rps())),
+            ("p50_us", Json::num(us(self.latency.quantile(0.50)))),
+            ("p95_us", Json::num(us(self.latency.quantile(0.95)))),
+            ("p99_us", Json::num(us(self.latency.quantile(0.99)))),
+            ("mean_us", Json::num(us(self.latency.mean()))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_summary() {
+        let m = ServeMetrics::new();
+        m.submitted.fetch_add(10, Ordering::Relaxed);
+        m.queue_depth.fetch_add(10, Ordering::Relaxed);
+        m.record_batch(8, 24, Duration::from_micros(500));
+        m.queue_depth.fetch_sub(8, Ordering::Relaxed);
+        for _ in 0..8 {
+            m.record_done(Duration::from_millis(2), true);
+        }
+        m.record_done(Duration::from_millis(5), false);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 8);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.latency.count(), 9);
+        assert!((m.mean_batch_fill() - 8.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("10 submitted") && s.contains("8 ok"), "{s}");
+        assert!(s.contains("75.0% padding"), "{s}");
+        let j = m.to_json();
+        assert_eq!(j.get("completed").as_usize(), Some(8));
+        assert!(j.get("p99_us").as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,64 @@
+//! Online inference serving over S2FP8-compressed checkpoints.
+//!
+//! This is the deployment story for the paper's format: training produced
+//! an S2FP8-compressed checkpoint (≈4× smaller, `coordinator::checkpoint`);
+//! this subsystem turns it back into answered prediction requests:
+//!
+//! * [`registry`] — checkpoint → [`registry::WeightStore`]: tensors stay
+//!   S2FP8-compressed in memory and decode **lazily, once per tensor**
+//!   into a shared cache (never per request); [`registry::ModelRegistry`]
+//!   names multiple stores in one process.
+//! * [`queue`] — the request envelope, one-shot completion tickets, and a
+//!   bounded submission queue whose capacity is the backpressure bound.
+//! * [`batcher`] — the dynamic micro-batcher: coalesce up to `max_batch`
+//!   requests or wait at most `max_wait`, stack examples and zero-pad to
+//!   the executable's fixed batch dimension, scatter result rows back per
+//!   request.
+//! * [`backend`] — execution strategies: [`backend::HostBackend`] (pure
+//!   rust NCF/MLP forward pass, bitwise-deterministic rows) and
+//!   [`backend::RuntimeBackend`] (AOT eval executables through PJRT; one
+//!   client per worker because `PjRtClient` is `Rc`-based).
+//! * [`engine`] — the worker pool: submit-time validation, graceful
+//!   shutdown, load shedding when the queue is full.
+//! * [`metrics`] — latency histograms (p50/p95/p99), throughput counters
+//!   and the queue-depth gauge.
+//!
+//! See DESIGN.md "Serving" for the batching-policy rationale, and
+//! `examples/serve_demo.rs` / `rust/benches/perf_serve.rs` for end-to-end
+//! usage.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use s2fp8::serve::{
+//!     backend::HostBackend,
+//!     engine::{Engine, ServeConfig},
+//!     model::{HostModel, ModelKind},
+//!     registry::WeightStore,
+//! };
+//! use s2fp8::runtime::HostValue;
+//!
+//! let store = WeightStore::open("runs/ncf/final.s2ck").unwrap(); // stays compressed
+//! let model = Arc::new(HostModel::from_store(ModelKind::Ncf, &store).unwrap());
+//! let engine =
+//!     Engine::start(Arc::new(HostBackend::new(model, 32)), ServeConfig::default()).unwrap();
+//! let resp = engine
+//!     .predict(vec![HostValue::scalar_i32(7), HostValue::scalar_i32(42)])
+//!     .unwrap();
+//! println!("score = {}", resp.output[0]);
+//! ```
+
+pub mod backend;
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod queue;
+pub mod registry;
+
+pub use backend::{Backend, BatchRunner, FeatureSpec, HostBackend, RuntimeBackend, Validator};
+pub use batcher::BatchPolicy;
+pub use engine::{Engine, ServeConfig};
+pub use metrics::ServeMetrics;
+pub use model::{HostModel, ModelKind};
+pub use queue::{Response, Ticket};
+pub use registry::{ModelRegistry, WeightStore};

@@ -1,0 +1,476 @@
+//! Host-side reference models rebuilt from checkpoint weights.
+//!
+//! These mirror the Layer-2 model zoo's inference math (`models/mlp.py`,
+//! `models/ncf.py`) in plain rust so a serving engine can run without PJRT
+//! or AOT artifacts — and so batched execution is **bitwise identical** to
+//! unbatched: every row is computed by the same scalar loop on the same
+//! per-row slices, independent of which other requests share the batch.
+//! Per the paper (§5) and `nn.dense_apply(quantize_out=False)`, serving
+//! consumes the final-layer outputs straight from the f32 accumulator;
+//! the S2FP8 quantization noise lives in the (compressed) weights.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Dtype, HostValue};
+use crate::tensor::Tensor;
+use crate::util::rng::{Pcg32, Rng};
+
+use super::backend::FeatureSpec;
+use super::registry::WeightStore;
+
+/// Which host model family to rebuild from a checkpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Mlp,
+    Ncf,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "mlp" => Ok(ModelKind::Mlp),
+            "ncf" => Ok(ModelKind::Ncf),
+            other => bail!("unknown model kind '{other}' (expected mlp|ncf)"),
+        }
+    }
+}
+
+/// A dense layer `y = x·W (+ b)`, row-major `W: (d_in, d_out)`.
+struct Dense {
+    w: Tensor,
+    b: Option<Vec<f32>>,
+}
+
+impl Dense {
+    fn from_store(store: &WeightStore, prefix: &str) -> Result<Self> {
+        let w = store.get(&format!("{prefix}/w"))?.as_f32()?.clone();
+        if w.shape().len() != 2 {
+            bail!("{prefix}/w: expected rank-2 weight, got {:?}", w.shape());
+        }
+        let b_name = format!("{prefix}/b");
+        let b = if store.contains(&b_name) {
+            Some(store.get(&b_name)?.as_f32()?.data().to_vec())
+        } else {
+            None
+        };
+        if let Some(b) = &b {
+            if b.len() != w.shape()[1] {
+                bail!("{prefix}: bias length {} vs d_out {}", b.len(), w.shape()[1]);
+            }
+        }
+        Ok(Dense { w, b })
+    }
+
+    fn d_in(&self) -> usize {
+        self.w.shape()[0]
+    }
+
+    fn d_out(&self) -> usize {
+        self.w.shape()[1]
+    }
+
+    /// One row, deterministic accumulation order (j outer, k inner).
+    fn forward_row(&self, x: &[f32]) -> Vec<f32> {
+        let (d_in, d_out) = (self.d_in(), self.d_out());
+        debug_assert_eq!(x.len(), d_in);
+        let wd = self.w.data();
+        let mut y = Vec::with_capacity(d_out);
+        for j in 0..d_out {
+            let mut acc = self.b.as_ref().map_or(0.0, |b| b[j]);
+            for (k, &xv) in x.iter().enumerate() {
+                acc += xv * wd[k * d_out + j];
+            }
+            y.push(acc);
+        }
+        y
+    }
+}
+
+fn relu(h: &mut [f32]) {
+    for v in h {
+        *v = v.max(0.0);
+    }
+}
+
+/// Quickstart MLP classifier: `fc0..fcN` Dense→ReLU stack, logits out.
+pub struct MlpModel {
+    layers: Vec<Dense>,
+}
+
+impl MlpModel {
+    pub fn from_store(store: &WeightStore) -> Result<Self> {
+        let mut layers = Vec::new();
+        while store.contains(&format!("params/fc{}/w", layers.len())) {
+            let d = Dense::from_store(store, &format!("params/fc{}", layers.len()))?;
+            if let Some(prev) = layers.last() {
+                if prev.d_out() != d.d_in() {
+                    bail!(
+                        "fc{} input dim {} does not chain from fc{} output dim {}",
+                        layers.len(),
+                        d.d_in(),
+                        layers.len() - 1,
+                        prev.d_out()
+                    );
+                }
+            }
+            layers.push(d);
+        }
+        if layers.is_empty() {
+            bail!("no params/fc0/w in checkpoint {} — not an MLP model", store.source);
+        }
+        Ok(MlpModel { layers })
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.layers[0].d_in()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.layers.last().unwrap().d_out()
+    }
+
+    pub fn forward_row(&self, x: &[f32]) -> Vec<f32> {
+        let mut h = self.layers[0].forward_row(x);
+        for layer in &self.layers[1..] {
+            relu(&mut h);
+            h = layer.forward_row(&h);
+        }
+        h
+    }
+}
+
+/// NeuMF scorer (paper §4.4): GMF (element-wise product of embeddings) ∥
+/// MLP tower on a second embedding pair, Dense head → 1 logit.
+pub struct NcfModel {
+    gmf_user: Tensor,
+    gmf_item: Tensor,
+    mlp_user: Tensor,
+    mlp_item: Tensor,
+    mlp: Vec<Dense>,
+    head: Dense,
+}
+
+impl NcfModel {
+    pub fn from_store(store: &WeightStore) -> Result<Self> {
+        let table = |name: &str| -> Result<Tensor> {
+            let t = store
+                .get(&format!("params/{name}/table"))
+                .with_context(|| format!("NCF checkpoint missing embedding '{name}'"))?
+                .as_f32()?
+                .clone();
+            if t.shape().len() != 2 {
+                bail!("{name}: embedding table must be rank 2, got {:?}", t.shape());
+            }
+            Ok(t)
+        };
+        let (gmf_user, gmf_item) = (table("gmf_user")?, table("gmf_item")?);
+        let (mlp_user, mlp_item) = (table("mlp_user")?, table("mlp_item")?);
+        if gmf_user.shape()[1] != gmf_item.shape()[1] {
+            bail!("GMF user/item factor dims differ");
+        }
+        if gmf_user.shape()[0] != mlp_user.shape()[0]
+            || gmf_item.shape()[0] != mlp_item.shape()[0]
+        {
+            bail!("GMF and MLP embedding vocab sizes differ");
+        }
+        let mut mlp = Vec::new();
+        while store.contains(&format!("params/mlp{}/w", mlp.len())) {
+            mlp.push(Dense::from_store(store, &format!("params/mlp{}", mlp.len()))?);
+        }
+        if mlp.is_empty() {
+            bail!("no params/mlp0/w in checkpoint {} — not an NCF model", store.source);
+        }
+        if mlp[0].d_in() != mlp_user.shape()[1] + mlp_item.shape()[1] {
+            bail!("mlp0 input dim does not match concatenated MLP embeddings");
+        }
+        let head = Dense::from_store(store, "params/head")?;
+        if head.d_in() != gmf_user.shape()[1] + mlp.last().unwrap().d_out() {
+            bail!("head input dim does not match [gmf, mlp] concat");
+        }
+        if head.d_out() != 1 {
+            bail!("NCF head must produce one logit, got {}", head.d_out());
+        }
+        Ok(NcfModel { gmf_user, gmf_item, mlp_user, mlp_item, mlp, head })
+    }
+
+    pub fn n_users(&self) -> usize {
+        self.gmf_user.shape()[0]
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.gmf_item.shape()[0]
+    }
+
+    /// Score one (user, item) pair. Ids must be pre-validated in range.
+    pub fn score_row(&self, user: usize, item: usize) -> f32 {
+        let gu = self.gmf_user.row(user);
+        let gi = self.gmf_item.row(item);
+        let mu = self.mlp_user.row(user);
+        let mi = self.mlp_item.row(item);
+        let mut h = Vec::with_capacity(mu.len() + mi.len());
+        h.extend_from_slice(mu);
+        h.extend_from_slice(mi);
+        for layer in &self.mlp {
+            h = layer.forward_row(&h);
+            relu(&mut h);
+        }
+        let mut both = Vec::with_capacity(gu.len() + h.len());
+        both.extend(gu.iter().zip(gi.iter()).map(|(a, b)| a * b));
+        both.extend_from_slice(&h);
+        self.head.forward_row(&both)[0]
+    }
+}
+
+/// A servable host model: feature specs + deterministic row execution.
+pub enum HostModel {
+    Mlp(MlpModel),
+    Ncf(NcfModel),
+}
+
+impl HostModel {
+    pub fn from_store(kind: ModelKind, store: &WeightStore) -> Result<Self> {
+        Ok(match kind {
+            ModelKind::Mlp => HostModel::Mlp(MlpModel::from_store(store)?),
+            ModelKind::Ncf => HostModel::Ncf(NcfModel::from_store(store)?),
+        })
+    }
+
+    /// Per-example input slots (no batch dim), in submission order.
+    pub fn feature_specs(&self) -> Vec<FeatureSpec> {
+        match self {
+            HostModel::Mlp(m) => vec![FeatureSpec {
+                name: "x".into(),
+                shape: vec![m.d_in()],
+                dtype: Dtype::F32,
+            }],
+            HostModel::Ncf(_) => vec![
+                FeatureSpec { name: "user".into(), shape: vec![], dtype: Dtype::I32 },
+                FeatureSpec { name: "item".into(), shape: vec![], dtype: Dtype::I32 },
+            ],
+        }
+    }
+
+    /// Semantic validation beyond shapes/dtypes: embedding ids in range.
+    pub fn validate_example(&self, features: &[HostValue]) -> Result<()> {
+        let want = self.feature_specs().len();
+        if features.len() != want {
+            bail!("expected {want} feature tensors, got {}", features.len());
+        }
+        if let HostModel::Ncf(m) = self {
+            let user = *features[0].as_i32()?.first().context("empty user tensor")?;
+            let item = *features[1].as_i32()?.first().context("empty item tensor")?;
+            if user < 0 || user as usize >= m.n_users() {
+                bail!("user id {user} out of range 0..{}", m.n_users());
+            }
+            if item < 0 || item as usize >= m.n_items() {
+                bail!("item id {item} out of range 0..{}", m.n_items());
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute rows `0..n` of stacked (and possibly padded) inputs.
+    /// Row `i` here is bit-for-bit [`Self::score_one`] on example `i`.
+    pub fn run_rows(&self, inputs: &[HostValue], n: usize) -> Result<Vec<Vec<f32>>> {
+        match self {
+            HostModel::Mlp(m) => {
+                let x = inputs[0].as_f32()?;
+                if x.shape().len() != 2 || x.shape()[0] < n {
+                    bail!("mlp: bad stacked input shape {:?} for n={n}", x.shape());
+                }
+                Ok((0..n).map(|i| m.forward_row(x.row(i))).collect())
+            }
+            HostModel::Ncf(m) => {
+                let users = inputs[0].as_i32()?;
+                let items = inputs[1].as_i32()?;
+                if users.len() < n || items.len() < n {
+                    bail!("ncf: stacked ids shorter than n={n}");
+                }
+                let mut out = Vec::with_capacity(n);
+                for i in 0..n {
+                    let (u, it) = (users[i], items[i]);
+                    if u < 0
+                        || u as usize >= m.n_users()
+                        || it < 0
+                        || it as usize >= m.n_items()
+                    {
+                        bail!("ncf row {i}: id ({u}, {it}) out of range");
+                    }
+                    out.push(vec![m.score_row(u as usize, it as usize)]);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Unbatched single-example execution (the bitwise reference path).
+    pub fn score_one(&self, features: &[HostValue]) -> Result<Vec<f32>> {
+        self.validate_example(features)?;
+        match self {
+            HostModel::Mlp(m) => {
+                let x = features[0].as_f32()?;
+                if x.len() != m.d_in() {
+                    bail!("mlp input has {} features, expected {}", x.len(), m.d_in());
+                }
+                Ok(m.forward_row(x.data()))
+            }
+            HostModel::Ncf(m) => {
+                let u = features[0].as_i32()?[0] as usize;
+                let it = features[1].as_i32()?[0] as usize;
+                Ok(vec![m.score_row(u, it)])
+            }
+        }
+    }
+
+    pub fn out_width(&self) -> usize {
+        match self {
+            HostModel::Mlp(m) => m.n_classes(),
+            HostModel::Ncf(_) => 1,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// synthetic weights (demo / tests / benches: a servable checkpoint without
+// running a training job first)
+// ---------------------------------------------------------------------------
+
+/// NCF dimensions matching the Layer-2 recipe (`models/ncf.py::Config`).
+#[derive(Debug, Clone)]
+pub struct NcfDims {
+    pub n_users: usize,
+    pub n_items: usize,
+    pub factors: usize,
+    pub mlp_dim: usize,
+    pub mlp_layers: Vec<usize>,
+}
+
+impl Default for NcfDims {
+    fn default() -> Self {
+        NcfDims { n_users: 512, n_items: 1024, factors: 8, mlp_dim: 16, mlp_layers: vec![32, 16, 8] }
+    }
+}
+
+fn glorot(rng: &mut Pcg32, d_in: usize, d_out: usize) -> HostValue {
+    let lim = (6.0 / (d_in + d_out) as f32).sqrt();
+    HostValue::f32(
+        vec![d_in, d_out],
+        (0..d_in * d_out).map(|_| rng.next_range_f32(-lim, lim)).collect(),
+    )
+}
+
+fn embedding(rng: &mut Pcg32, vocab: usize, dim: usize, std: f32) -> HostValue {
+    HostValue::f32(vec![vocab, dim], (0..vocab * dim).map(|_| std * rng.next_normal()).collect())
+}
+
+/// Synthetic NCF checkpoint slots, named exactly like the flattened
+/// Layer-2 manifest (`params/gmf_user/table`, `params/mlp0/w`, …).
+pub fn synth_ncf_slots(dims: &NcfDims, seed: u64) -> Vec<(String, HostValue)> {
+    let mut rng = Pcg32::new(seed, 0x5E27E);
+    let mut slots = vec![
+        ("params/gmf_user/table".to_string(), embedding(&mut rng, dims.n_users, dims.factors, 0.05)),
+        ("params/gmf_item/table".to_string(), embedding(&mut rng, dims.n_items, dims.factors, 0.05)),
+        ("params/mlp_user/table".to_string(), embedding(&mut rng, dims.n_users, dims.mlp_dim, 0.05)),
+        ("params/mlp_item/table".to_string(), embedding(&mut rng, dims.n_items, dims.mlp_dim, 0.05)),
+    ];
+    let mut d = 2 * dims.mlp_dim;
+    for (i, &w) in dims.mlp_layers.iter().enumerate() {
+        slots.push((format!("params/mlp{i}/w"), glorot(&mut rng, d, w)));
+        slots.push((format!("params/mlp{i}/b"), HostValue::f32(vec![w], vec![0.0; w])));
+        d = w;
+    }
+    slots.push(("params/head/w".to_string(), glorot(&mut rng, dims.factors + d, 1)));
+    slots.push(("params/head/b".to_string(), HostValue::f32(vec![1], vec![0.0])));
+    slots
+}
+
+/// Synthetic MLP checkpoint slots (`params/fc{i}/{w,b}`).
+pub fn synth_mlp_slots(dims: &[usize], seed: u64) -> Vec<(String, HostValue)> {
+    assert!(dims.len() >= 2, "need at least input and output dims");
+    let mut rng = Pcg32::new(seed, 0x317);
+    let mut slots = Vec::new();
+    for i in 0..dims.len() - 1 {
+        slots.push((format!("params/fc{i}/w"), glorot(&mut rng, dims[i], dims[i + 1])));
+        slots.push((
+            format!("params/fc{i}/b"),
+            HostValue::f32(vec![dims[i + 1]], vec![0.0; dims[i + 1]]),
+        ));
+    }
+    slots
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ncf_model() -> HostModel {
+        let dims = NcfDims { n_users: 20, n_items: 30, ..NcfDims::default() };
+        let store = WeightStore::from_slots(&synth_ncf_slots(&dims, 1));
+        HostModel::from_store(ModelKind::Ncf, &store).unwrap()
+    }
+
+    #[test]
+    fn ncf_rebuilds_and_scores() {
+        let m = ncf_model();
+        let s = m.score_one(&[HostValue::scalar_i32(3), HostValue::scalar_i32(7)]).unwrap();
+        assert_eq!(s.len(), 1);
+        assert!(s[0].is_finite());
+        // different pair ⇒ (almost surely) different score
+        let s2 = m.score_one(&[HostValue::scalar_i32(4), HostValue::scalar_i32(8)]).unwrap();
+        assert_ne!(s[0].to_bits(), s2[0].to_bits());
+    }
+
+    #[test]
+    fn batched_rows_are_bitwise_identical_to_single_scores() {
+        let m = ncf_model();
+        let users = HostValue::i32(vec![4], vec![1, 5, 9, 0]); // last row = padding
+        let items = HostValue::i32(vec![4], vec![2, 6, 10, 0]);
+        let rows = m.run_rows(&[users, items], 3).unwrap();
+        for (i, (u, it)) in [(1, 2), (5, 6), (9, 10)].iter().enumerate() {
+            let single = m
+                .score_one(&[HostValue::scalar_i32(*u), HostValue::scalar_i32(*it)])
+                .unwrap();
+            assert_eq!(rows[i][0].to_bits(), single[0].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn mlp_rebuilds_and_matches_rowwise() {
+        let store = WeightStore::from_slots(&synth_mlp_slots(&[12, 8, 4], 2));
+        let m = HostModel::from_store(ModelKind::Mlp, &store).unwrap();
+        assert_eq!(m.out_width(), 4);
+        let mut rng = Pcg32::new(9, 9);
+        let x1: Vec<f32> = (0..12).map(|_| rng.next_normal()).collect();
+        let x2: Vec<f32> = (0..12).map(|_| rng.next_normal()).collect();
+        let mut stacked = x1.clone();
+        stacked.extend_from_slice(&x2);
+        stacked.extend_from_slice(&[0.0; 12]); // padding row
+        let rows = m
+            .run_rows(&[HostValue::f32(vec![3, 12], stacked)], 2)
+            .unwrap();
+        let s1 = m.score_one(&[HostValue::f32(vec![12], x1)]).unwrap();
+        let s2 = m.score_one(&[HostValue::f32(vec![12], x2)]).unwrap();
+        assert_eq!(rows[0], s1);
+        assert_eq!(rows[1], s2);
+    }
+
+    #[test]
+    fn out_of_range_ids_are_rejected() {
+        let m = ncf_model();
+        let err = m
+            .score_one(&[HostValue::scalar_i32(999), HostValue::scalar_i32(0)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(m
+            .validate_example(&[HostValue::scalar_i32(0), HostValue::scalar_i32(-1)])
+            .is_err());
+    }
+
+    #[test]
+    fn wrong_checkpoint_kind_is_a_clear_error() {
+        let store = WeightStore::from_slots(&synth_mlp_slots(&[4, 2], 3));
+        let err = HostModel::from_store(ModelKind::Ncf, &store).unwrap_err().to_string();
+        assert!(err.contains("gmf_user"), "{err}");
+    }
+}

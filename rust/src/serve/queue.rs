@@ -1,0 +1,340 @@
+//! Request envelope, completion handoff, and the bounded submission queue.
+//!
+//! Everything here is built on `std::sync` (the vendor set has no
+//! `crossbeam`/`tokio`): the queue is a `Mutex<VecDeque>` with two
+//! condvars (`not_empty` for workers, `not_full` for producers), and the
+//! per-request completion channel is a one-shot `Mutex<Option<…>>` +
+//! condvar pair. Capacity is the backpressure mechanism — when the queue
+//! is full, [`BoundedQueue::try_push`] fails immediately (load shedding)
+//! and [`BoundedQueue::push`] blocks the producer.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::runtime::HostValue;
+
+/// One prediction request travelling through the engine.
+pub struct Request {
+    pub id: u64,
+    /// Per-example feature tensors (no batch dimension), in the order of
+    /// the backend's feature specs.
+    pub features: Vec<HostValue>,
+    pub enqueued: Instant,
+    pub responder: Responder,
+}
+
+/// Completed prediction for one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// One output row (e.g. a single NCF score, or the MLP's class logits).
+    pub output: Vec<f32>,
+    /// End-to-end latency: submit → fulfilled (queue wait + execution).
+    pub latency: Duration,
+}
+
+struct Slot {
+    state: Mutex<Option<Result<Response>>>,
+    cv: Condvar,
+}
+
+/// Client half of the completion channel: blocks until a worker fulfills
+/// (or drops) the paired [`Responder`].
+pub struct Ticket {
+    pub id: u64,
+    slot: Arc<Slot>,
+}
+
+/// Worker half: delivers exactly one result. Dropping an unfulfilled
+/// responder (worker panic, engine teardown) delivers an error, so tickets
+/// never hang on a lost request.
+pub struct Responder {
+    id: u64,
+    slot: Arc<Slot>,
+    done: bool,
+}
+
+/// Create a linked (worker, client) completion pair.
+pub fn oneshot(id: u64) -> (Responder, Ticket) {
+    let slot = Arc::new(Slot { state: Mutex::new(None), cv: Condvar::new() });
+    (Responder { id, slot: slot.clone(), done: false }, Ticket { id, slot })
+}
+
+impl Responder {
+    pub fn fulfill(mut self, result: Result<Response>) {
+        self.deliver(result);
+    }
+
+    fn deliver(&mut self, result: Result<Response>) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        let mut g = self.slot.state.lock().unwrap();
+        if g.is_none() {
+            *g = Some(result);
+        }
+        self.slot.cv.notify_all();
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        if !self.done {
+            let id = self.id;
+            self.deliver(Err(anyhow::anyhow!(
+                "request {id} dropped before execution (engine shut down or worker died)"
+            )));
+        }
+    }
+}
+
+impl Ticket {
+    /// Block until the paired responder delivers.
+    pub fn wait(self) -> Result<Response> {
+        let mut g = self.slot.state.lock().unwrap();
+        while g.is_none() {
+            g = self.slot.cv.wait(g).unwrap();
+        }
+        g.take().unwrap()
+    }
+
+    /// Block up to `timeout`; `Err` if the deadline passes first.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Response> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.slot.state.lock().unwrap();
+        while g.is_none() {
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("request {} timed out after {timeout:?}", self.id);
+            }
+            let (g2, _) = self.slot.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+        g.take().unwrap()
+    }
+}
+
+/// Why a push was refused.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue at capacity (backpressure — shed or retry).
+    Full(T),
+    /// Queue closed (engine shutting down).
+    Closed(T),
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPSC/MPMC queue with close semantics: after [`close`], pushes
+/// fail but consumers drain the remaining items before seeing `None`
+/// (graceful shutdown never drops accepted requests).
+///
+/// [`close`]: BoundedQueue::close
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be positive");
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current number of queued items (the queue-depth gauge).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Non-blocking push; fails fast when full (backpressure signal).
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: waits for space (or for the queue to close).
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed(item));
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Pop a micro-batch: blocks for the first item, then keeps collecting
+    /// until `max_n` items are in hand or `max_wait` has elapsed since the
+    /// first item was taken (the batching policy's max-wait knob). Returns
+    /// `None` only when the queue is closed *and* fully drained.
+    pub fn pop_batch(&self, max_n: usize, max_wait: Duration) -> Option<Vec<T>> {
+        let max_n = max_n.max(1);
+        let mut g = self.inner.lock().unwrap();
+        // wait for the first item
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+        let mut out = Vec::with_capacity(max_n.min(g.items.len()));
+        out.push(g.items.pop_front().unwrap());
+        let deadline = Instant::now() + max_wait;
+        while out.len() < max_n {
+            if let Some(item) = g.items.pop_front() {
+                out.push(item);
+                continue;
+            }
+            if g.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g2, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+            if timeout.timed_out() && g.items.is_empty() {
+                break;
+            }
+        }
+        drop(g);
+        self.not_full.notify_all();
+        Some(out)
+    }
+
+    /// Close the queue: producers fail from now on; consumers drain what
+    /// was already accepted.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn pop_batch_respects_max_n_and_drains() {
+        let q = BoundedQueue::new(16);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(q.depth(), 5);
+        let b1 = q.pop_batch(3, Duration::ZERO).unwrap();
+        assert_eq!(b1, vec![0, 1, 2]);
+        let b2 = q.pop_batch(3, Duration::ZERO).unwrap();
+        assert_eq!(b2, vec![3, 4]);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn try_push_sheds_when_full_and_fails_when_closed() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert!(matches!(q.try_push(3), Err(PushError::Full(3))));
+        q.close();
+        assert!(matches!(q.try_push(4), Err(PushError::Closed(4))));
+        // accepted items still drain after close…
+        assert_eq!(q.pop_batch(8, Duration::ZERO).unwrap(), vec![1, 2]);
+        // …then consumers see end-of-stream
+        assert!(q.pop_batch(8, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn blocked_pop_wakes_on_close() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_batch(4, Duration::from_millis(1)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(10).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(11));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop_batch(1, Duration::ZERO).unwrap(), vec![10]);
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop_batch(1, Duration::ZERO).unwrap(), vec![11]);
+    }
+
+    #[test]
+    fn pop_batch_coalesces_items_arriving_within_the_wait_window() {
+        let q = Arc::new(BoundedQueue::new(16));
+        q.try_push(1).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.try_push(2).unwrap();
+        });
+        let b = q.pop_batch(4, Duration::from_millis(200));
+        h.join().unwrap();
+        // the second item arrived well inside the window, so it coalesced
+        assert_eq!(b.unwrap(), vec![1, 2], "late item should join the batch");
+    }
+
+    #[test]
+    fn ticket_resolves_on_fulfill_and_on_drop() {
+        let (r, t) = oneshot(7);
+        r.fulfill(Ok(Response { id: 7, output: vec![1.0], latency: Duration::ZERO }));
+        let resp = t.wait().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.output, vec![1.0]);
+
+        let (r, t) = oneshot(8);
+        drop(r); // lost request ⇒ error, not a hang
+        assert!(t.wait().unwrap_err().to_string().contains("dropped"));
+
+        let (_r, t) = oneshot(9);
+        assert!(t.wait_timeout(Duration::from_millis(5)).unwrap_err().to_string().contains("timed out"));
+    }
+}

@@ -1,0 +1,245 @@
+//! Checkpoint-backed weight storage for serving.
+//!
+//! A [`WeightStore`] wraps one S2CK checkpoint kept in its on-disk form:
+//! S2FP8 entries stay compressed (1 byte/element + α, β) until a tensor is
+//! first requested, then decode once into a per-tensor cache
+//! (`OnceLock`) shared by every worker thread. Decompression is therefore
+//! **per tensor, per process** — never per request — and a store serving
+//! only one executable decodes only the tensors that executable binds.
+//!
+//! A [`ModelRegistry`] maps model names to shared stores so one serving
+//! process can host several models/checkpoints side by side.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::checkpoint::{self, RawPayload};
+use crate::runtime::HostValue;
+
+struct LazySlot {
+    raw: RawPayload,
+    cache: OnceLock<HostValue>,
+}
+
+/// One checkpoint's tensors, decoded lazily and cached per tensor.
+pub struct WeightStore {
+    slots: BTreeMap<String, LazySlot>,
+    decoded: AtomicUsize,
+    /// Where the weights came from (path, or `"<memory>"`).
+    pub source: String,
+}
+
+impl WeightStore {
+    /// Open a checkpoint file without decompressing anything yet.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let entries = checkpoint::load_raw(&path)?;
+        Ok(Self::from_raw(entries, path.as_ref().display().to_string()))
+    }
+
+    /// Wrap already-parsed raw checkpoint entries.
+    pub fn from_raw(entries: Vec<(String, RawPayload)>, source: impl Into<String>) -> Self {
+        WeightStore {
+            slots: entries
+                .into_iter()
+                .map(|(name, raw)| (name, LazySlot { raw, cache: OnceLock::new() }))
+                .collect(),
+            decoded: AtomicUsize::new(0),
+            source: source.into(),
+        }
+    }
+
+    /// Wrap in-memory host values (tests, synthetic models): no
+    /// compression involved, every entry is immediately available.
+    pub fn from_slots(slots: &[(String, HostValue)]) -> Self {
+        Self::from_raw(
+            slots.iter().map(|(n, v)| (n.clone(), RawPayload::Raw(v.clone()))).collect(),
+            "<memory>",
+        )
+    }
+
+    /// Fetch a tensor by checkpoint name, decoding (once) if it is still
+    /// compressed. Concurrent first accesses are safe: `OnceLock` decides
+    /// the winner and everyone shares the same decoded value.
+    pub fn get(&self, name: &str) -> Result<&HostValue> {
+        let slot = self.slots.get(name).with_context(|| {
+            format!(
+                "weight '{name}' not in checkpoint {} ({} tensors: {:?}…)",
+                self.source,
+                self.slots.len(),
+                self.slots.keys().take(4).collect::<Vec<_>>()
+            )
+        })?;
+        Ok(slot.cache.get_or_init(|| {
+            if slot.raw.is_compressed() {
+                self.decoded.fetch_add(1, Ordering::Relaxed);
+            }
+            slot.raw.decode()
+        }))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.slots.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.slots.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// How many compressed tensors have been decompressed so far (should
+    /// stay flat under request load — decode is per tensor, not per
+    /// request).
+    pub fn decoded_tensors(&self) -> usize {
+        self.decoded.load(Ordering::Relaxed)
+    }
+
+    /// Number of entries stored S2FP8-compressed.
+    pub fn compressed_entries(&self) -> usize {
+        self.slots.values().filter(|s| s.raw.is_compressed()).count()
+    }
+
+    /// (stored bytes, decoded-f32 bytes): the paper's ≈4× memory claim as
+    /// it applies to this checkpoint.
+    pub fn memory_footprint(&self) -> (usize, usize) {
+        let stored = self.slots.values().map(|s| s.raw.stored_bytes()).sum();
+        let full = self
+            .slots
+            .values()
+            .map(|s| s.raw.shape().iter().product::<usize>() * 4)
+            .sum();
+        (stored, full)
+    }
+}
+
+/// Named models available to a serving process.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Arc<WeightStore>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&self, name: impl Into<String>, store: Arc<WeightStore>) {
+        self.models.write().unwrap().insert(name.into(), store);
+    }
+
+    /// Load a checkpoint from disk and register it under `name`.
+    pub fn open_checkpoint(
+        &self,
+        name: impl Into<String>,
+        path: impl AsRef<Path>,
+    ) -> Result<Arc<WeightStore>> {
+        let store = Arc::new(WeightStore::open(path)?);
+        self.insert(name, store.clone());
+        Ok(store)
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<WeightStore>> {
+        let g = self.models.read().unwrap();
+        match g.get(name) {
+            Some(s) => Ok(s.clone()),
+            None => {
+                let have: Vec<String> = g.keys().cloned().collect();
+                anyhow::bail!("model '{name}' not registered (have: {have:?})")
+            }
+        }
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::checkpoint::{deserialize_raw, serialize};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg32;
+
+    fn compressed_store() -> WeightStore {
+        let mut rng = Pcg32::new(5, 5);
+        let slots = vec![
+            (
+                "params/fc0/w".to_string(),
+                HostValue::F32(Tensor::randn(vec![16, 32], &mut rng).map(|v| v * 0.1)),
+            ),
+            (
+                "params/fc1/w".to_string(),
+                HostValue::F32(Tensor::randn(vec![32, 8], &mut rng).map(|v| v * 0.1)),
+            ),
+            ("params/fc0/b".to_string(), HostValue::f32(vec![32], vec![0.0; 32])),
+        ];
+        let bytes = serialize(&slots, true);
+        WeightStore::from_raw(deserialize_raw(&bytes).unwrap(), "<test>")
+    }
+
+    #[test]
+    fn decode_is_lazy_and_cached_per_tensor() {
+        let s = compressed_store();
+        assert_eq!(s.compressed_entries(), 2); // the two big matrices
+        assert_eq!(s.decoded_tensors(), 0, "opening must not decode");
+        let w0 = s.get("params/fc0/w").unwrap() as *const HostValue;
+        assert_eq!(s.decoded_tensors(), 1);
+        // repeated access hits the cache: same pointer, same counter
+        let w0_again = s.get("params/fc0/w").unwrap() as *const HostValue;
+        assert_eq!(w0, w0_again);
+        assert_eq!(s.decoded_tensors(), 1);
+        s.get("params/fc1/w").unwrap();
+        assert_eq!(s.decoded_tensors(), 2);
+    }
+
+    #[test]
+    fn missing_weight_is_a_helpful_error() {
+        let s = compressed_store();
+        let err = s.get("params/nope").unwrap_err().to_string();
+        assert!(err.contains("params/nope") && err.contains("<test>"), "{err}");
+    }
+
+    #[test]
+    fn footprint_reflects_compression() {
+        let s = compressed_store();
+        let (stored, full) = s.memory_footprint();
+        assert!(stored < full / 2, "stored {stored} vs full {full}");
+        assert_eq!(full, (16 * 32 + 32 * 8 + 32) * 4);
+    }
+
+    #[test]
+    fn registry_round_trip() {
+        let reg = ModelRegistry::new();
+        reg.insert("ncf", Arc::new(compressed_store()));
+        assert_eq!(reg.names(), vec!["ncf".to_string()]);
+        let s = reg.get("ncf").unwrap();
+        assert!(s.contains("params/fc0/w"));
+        assert!(reg.get("mlp").is_err());
+    }
+
+    #[test]
+    fn concurrent_first_access_decodes_once() {
+        let s = Arc::new(compressed_store());
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let s = s.clone();
+                scope.spawn(move || {
+                    let v = s.get("params/fc0/w").unwrap();
+                    assert_eq!(v.shape(), &[16, 32]);
+                });
+            }
+        });
+        assert_eq!(s.decoded_tensors(), 1);
+    }
+}

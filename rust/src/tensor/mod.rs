@@ -5,6 +5,17 @@
 
 use crate::util::rng::Rng;
 
+/// Shape/data-length mismatch from the fallible constructors. The serving
+/// path ([`crate::serve`]) builds tensors from untrusted request payloads
+/// and must reject malformed ones instead of aborting a worker thread, so
+/// this is a typed error rather than a panic.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("shape {shape:?} does not match data length {len}")]
+pub struct ShapeError {
+    pub shape: Vec<usize>,
+    pub len: usize,
+}
+
 /// Row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -13,14 +24,19 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// Fallible constructor: verifies `shape` describes exactly
+    /// `data.len()` elements. Use this on any path fed by external input
+    /// (serving requests, checkpoint bytes); [`Tensor::new`] is the
+    /// panicking shorthand for internally-constructed tensors.
+    pub fn try_new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self, ShapeError> {
+        if shape.iter().product::<usize>() != data.len() {
+            return Err(ShapeError { shape, len: data.len() });
+        }
+        Ok(Self { shape, data })
+    }
+
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
-        assert_eq!(
-            shape.iter().product::<usize>(),
-            data.len(),
-            "shape {shape:?} does not match data length {}",
-            data.len()
-        );
-        Self { shape, data }
+        Self::try_new(shape, data).unwrap_or_else(|e| panic!("{e}"))
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
@@ -175,6 +191,15 @@ mod tests {
     #[should_panic(expected = "does not match")]
     fn bad_shape_panics() {
         Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn try_new_rejects_mismatch_without_panicking() {
+        let err = Tensor::try_new(vec![2, 2], vec![1.0; 5]).unwrap_err();
+        assert_eq!(err, ShapeError { shape: vec![2, 2], len: 5 });
+        assert!(err.to_string().contains("does not match"));
+        let ok = Tensor::try_new(vec![2, 2], vec![1.0; 4]).unwrap();
+        assert_eq!(ok.shape(), &[2, 2]);
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Integration tests for the serving engine: checkpoint → registry →
+//! batched execution, asserting the acceptance criterion that batched
+//! results are **bitwise identical** to unbatched single-request
+//! execution. Runs entirely on the host backend (no artifacts / PJRT).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use s2fp8::coordinator::checkpoint;
+use s2fp8::runtime::HostValue;
+use s2fp8::serve::{
+    backend::HostBackend,
+    engine::{Engine, ServeConfig},
+    model::{synth_ncf_slots, HostModel, ModelKind, NcfDims},
+    registry::WeightStore,
+    BatchPolicy,
+};
+use s2fp8::util::rng::{Pcg32, Rng};
+
+fn dims() -> NcfDims {
+    NcfDims { n_users: 128, n_items: 256, ..NcfDims::default() }
+}
+
+/// Build an S2FP8-compressed checkpoint on disk and open it for serving.
+fn compressed_store(name: &str) -> Arc<WeightStore> {
+    let path = std::env::temp_dir().join("s2fp8_serve_it").join(format!("{name}.s2ck"));
+    checkpoint::save(&path, &synth_ncf_slots(&dims(), 11), true).unwrap();
+    Arc::new(WeightStore::open(&path).unwrap())
+}
+
+fn engine(store: &Arc<WeightStore>, workers: usize, max_batch: usize) -> (Engine, Arc<HostModel>) {
+    let model = Arc::new(HostModel::from_store(ModelKind::Ncf, store).unwrap());
+    let backend = Arc::new(HostBackend::new(model.clone(), max_batch));
+    let cfg = ServeConfig {
+        workers,
+        queue_capacity: 2048,
+        policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(800) },
+    };
+    (Engine::start(backend, cfg).unwrap(), model)
+}
+
+fn pair(u: i32, i: i32) -> Vec<HostValue> {
+    vec![HostValue::scalar_i32(u), HostValue::scalar_i32(i)]
+}
+
+#[test]
+fn batched_execution_is_bitwise_identical_to_unbatched() {
+    let store = compressed_store("bitwise");
+    let (engine, model) = engine(&store, 3, 32);
+    let engine = Arc::new(engine);
+
+    // unbatched reference scores, computed up front
+    let d = dims();
+    let mut rng = Pcg32::new(42, 0);
+    let pairs: Vec<(i32, i32)> = (0..400)
+        .map(|_| {
+            (rng.next_below(d.n_users as u64) as i32, rng.next_below(d.n_items as u64) as i32)
+        })
+        .collect();
+    let reference: Vec<f32> =
+        pairs.iter().map(|&(u, i)| model.score_one(&pair(u, i)).unwrap()[0]).collect();
+
+    // same requests through the concurrent micro-batching engine: batches
+    // form with whatever mix of requests is in flight, so bitwise equality
+    // here proves padding/scatter never leak across rows.
+    std::thread::scope(|s| {
+        for chunk in pairs.chunks(100).zip(reference.chunks(100)) {
+            let engine = engine.clone();
+            s.spawn(move || {
+                let (ps, want) = chunk;
+                for (&(u, i), &w) in ps.iter().zip(want.iter()) {
+                    let got = engine.predict(pair(u, i)).unwrap().output[0];
+                    assert_eq!(got.to_bits(), w.to_bits(), "({u},{i}): {got} vs {w}");
+                }
+            });
+        }
+    });
+
+    let m = engine.metrics();
+    assert_eq!(m.completed.load(std::sync::atomic::Ordering::Relaxed), 400);
+    assert_eq!(m.failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+    // concurrency actually coalesced: fewer batches than requests
+    let batches = m.batches.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches <= 400, "batches {batches}");
+    assert_eq!(
+        m.batched_rows.load(std::sync::atomic::Ordering::Relaxed),
+        400,
+        "every live row accounted for"
+    );
+}
+
+#[test]
+fn compressed_and_raw_checkpoints_serve_close_scores() {
+    let d = dims();
+    let slots = synth_ncf_slots(&d, 11);
+    let base = std::env::temp_dir().join("s2fp8_serve_it");
+    let raw_path = base.join("raw.s2ck");
+    checkpoint::save(&raw_path, &slots, false).unwrap();
+    let raw = HostModel::from_store(ModelKind::Ncf, &WeightStore::open(&raw_path).unwrap()).unwrap();
+    let comp_store = compressed_store("lossy");
+    let comp = HostModel::from_store(ModelKind::Ncf, &comp_store).unwrap();
+
+    let mut rng = Pcg32::new(1, 1);
+    let mut total = 0.0f64;
+    for _ in 0..200 {
+        let p = pair(
+            rng.next_below(d.n_users as u64) as i32,
+            rng.next_below(d.n_items as u64) as i32,
+        );
+        let a = raw.score_one(&p).unwrap()[0];
+        let b = comp.score_one(&p).unwrap()[0];
+        assert!(b.is_finite());
+        total += (a - b).abs() as f64;
+    }
+    // compression is lossy by exactly one S2FP8 truncation of the weights:
+    // scores drift, but stay close on average
+    assert!(total / 200.0 < 0.25, "mean |Δscore| {} too large", total / 200.0);
+}
+
+#[test]
+fn registry_decode_is_lazy_and_bounded_by_model_tensors() {
+    let store = compressed_store("lazy");
+    assert_eq!(store.decoded_tensors(), 0, "open must not decode");
+    let (engine, _) = engine(&store, 2, 16);
+    let after_bind = store.decoded_tensors();
+    assert!(after_bind <= store.compressed_entries());
+    for i in 0..50 {
+        engine.predict(pair(i % 128, i % 256)).unwrap();
+    }
+    // serving 50 requests decodes nothing new: cache is per tensor
+    assert_eq!(store.decoded_tensors(), after_bind);
+    engine.shutdown();
+}
+
+#[test]
+fn malformed_requests_never_reach_workers() {
+    let store = compressed_store("malformed");
+    let (engine, _) = engine(&store, 1, 8);
+    assert!(engine.predict(vec![]).is_err());
+    assert!(engine.predict(vec![HostValue::scalar_i32(1)]).is_err());
+    assert!(engine
+        .predict(vec![HostValue::f32(vec![2], vec![0.0; 2]), HostValue::scalar_i32(1)])
+        .is_err());
+    assert!(engine.predict(pair(-1, 0)).is_err());
+    assert!(engine.predict(pair(0, 100_000)).is_err());
+    // no batch was ever executed for the garbage…
+    assert_eq!(engine.metrics().failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+    // …and the engine still serves
+    assert!(engine.predict(pair(5, 5)).is_ok());
+}
+
+#[test]
+fn graceful_shutdown_completes_accepted_requests() {
+    let store = compressed_store("shutdown");
+    let (engine, _) = engine(&store, 2, 8);
+    let tickets: Vec<_> = (0..64).map(|i| engine.submit(pair(i % 128, i % 256)).unwrap()).collect();
+    engine.shutdown();
+    for t in tickets {
+        let r = t.wait_timeout(Duration::from_secs(10)).unwrap();
+        assert!(r.output[0].is_finite());
+    }
+}

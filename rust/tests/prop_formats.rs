@@ -253,3 +253,100 @@ fn prop_compress_roundtrip_never_catastrophic() {
         }
     });
 }
+
+#[test]
+fn prop_compress_roundtrip_degenerate_tensors_never_panic() {
+    // Wide log-magnitude range WITH specials (±0, extremes) and tiny
+    // vectors included: the codec must never panic, never turn a finite
+    // value into NaN, preserve signs and exact zeros, and keep every
+    // non-flushed value within the format's log-space error bound. The
+    // squeezed-space quantization error is ≤ ~0.17 octaves in FP8's
+    // normal range and ≤ ~1.0 octaves in its denormal range; unsqueezing
+    // divides by α, hence the 1.2/α bound (plus slack for the f32
+    // pow/exp2 round-trips at extreme β).
+    let g = VecGen {
+        elem: F32WideLog { log2_lo: -40.0, log2_hi: 40.0, specials: true },
+        min_len: 0,
+        max_len: 64,
+    };
+    check("s2fp8 compress/decompress degenerate", &g, |xs: &Vec<f32>| {
+        let c = s2::compress(xs);
+        if c.codes.len() != xs.len() {
+            return Err(format!("{} codes for {} elements", c.codes.len(), xs.len()));
+        }
+        let back = s2::decompress(&c);
+        let bound = 1.2 / c.codec.alpha + 0.02;
+        for (i, (&a, &b)) in xs.iter().zip(back.iter()).enumerate() {
+            if a == 0.0 {
+                if b != 0.0 {
+                    return Err(format!("elem {i}: zero → {b}"));
+                }
+                continue;
+            }
+            if !a.is_finite() {
+                continue; // NaN propagates, ±Inf saturates — covered below
+            }
+            if b.is_nan() || b.is_infinite() {
+                return Err(format!("elem {i}: finite {a} → non-finite {b}"));
+            }
+            if b == 0.0 {
+                continue; // deep-tail flush-to-zero is inherent to FP8
+            }
+            if a.signum() != b.signum() {
+                return Err(format!("elem {i}: sign flip {a} → {b}"));
+            }
+            let dl = (b.abs().log2() - a.abs().log2()).abs();
+            if dl > bound {
+                return Err(format!(
+                    "elem {i}: {a} → {b}, |Δlog2| = {dl} > {bound} (α = {})",
+                    c.codec.alpha
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn compress_roundtrip_named_degenerate_cases() {
+    // all-zero tensor: identity codec, exact round-trip
+    let zeros = [0.0f32, -0.0, 0.0, 0.0];
+    let c = s2::compress(&zeros);
+    assert_eq!(c.codec, s2::S2fp8Codec::identity());
+    for b in s2::decompress(&c) {
+        assert_eq!(b, 0.0);
+    }
+
+    // empty tensor
+    let c = s2::compress(&[]);
+    assert!(c.codes.is_empty() && s2::decompress(&c).is_empty());
+
+    // single element
+    let c = s2::compress(&[0.37f32]);
+    let b = s2::decompress(&c)[0];
+    assert!((b - 0.37).abs() / 0.37 < 0.05, "0.37 → {b}");
+
+    // all-equal magnitudes: spread clamps at MIN_SPREAD, α is huge, and
+    // the round-trip must still recover the value to FP8-like accuracy
+    let equal = [2.5e-7f32, -2.5e-7, 2.5e-7, 2.5e-7];
+    let c = s2::compress(&equal);
+    assert!(c.codec.alpha <= s2::TARGET_MAX_LOG2 / s2::MIN_SPREAD + 1.0);
+    for (a, b) in equal.iter().zip(s2::decompress(&c).iter()) {
+        assert!((a - b).abs() / a.abs() < 0.05, "{a} → {b}");
+        assert_eq!(a.signum(), b.signum());
+    }
+
+    // specials mixed with finite values: no panic, sane per-element results
+    let mixed = [0.0f32, -0.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0, -1e-30];
+    let c = s2::compress(&mixed);
+    let back = s2::decompress(&c);
+    assert_eq!(back[0], 0.0);
+    assert_eq!(back[1], 0.0);
+    assert!(back[2].is_nan(), "NaN must propagate, got {}", back[2]);
+    // ±Inf saturates through FP8's finite max to a finite value, sign kept
+    assert!(back[3].is_finite() && back[3] > 0.0, "+Inf → {}", back[3]);
+    assert!(back[4].is_finite() && back[4] < 0.0, "-Inf → {}", back[4]);
+    // the finite elements (which alone defined the fit) survive
+    assert!((back[5] - 1.0).abs() < 0.2, "1.0 → {}", back[5]);
+    assert!(back[6] < 0.0 && back[6].is_finite(), "-1e-30 → {}", back[6]);
+}
