@@ -55,9 +55,9 @@ fn main() -> anyhow::Result<()> {
     );
     let model = Arc::new(HostModel::from_store(ModelKind::Ncf, &store)?);
     println!(
-        "model bound: {} of {} compressed tensors decoded (once each, cached)\n",
+        "model bound: owns its decoded weights; store cache still holds {} decodes \
+         (packed bytes stay the only resident copy)\n",
         store.decoded_tensors(),
-        store.compressed_entries()
     );
 
     // ---- 3. serve concurrent traffic -------------------------------------

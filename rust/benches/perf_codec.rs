@@ -1,0 +1,111 @@
+//! §Perf bench — codec encode/decode throughput for every format in the
+//! zoo, at 1K / 1M / 16M elements, through the unified `Codec` trait
+//! (true packed payloads, chunk-parallel encode, buffer-reusing decode).
+//! Emits `runs/perf_codec/{codec.md,BENCH_codec.json}` so the perf
+//! trajectory tracks the format layer alongside the training hot paths
+//! (`perf_hotpath`) and serving (`perf_serve`).
+//!
+//! GB/s is measured on the f32 side (4 × elements bytes per pass) — the
+//! number to compare against memory bandwidth.
+//!
+//! Scale knobs: `S2FP8_BENCH_FAST=1` drops the 16M-element tier.
+
+use std::time::Duration;
+
+use s2fp8::bench::harness::bench_fn;
+use s2fp8::bench::paper;
+use s2fp8::bench::report::Table;
+use s2fp8::formats::FormatKind;
+use s2fp8::util::json::Json;
+use s2fp8::util::rng::{Pcg32, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let bench = "perf_codec";
+    let fast = std::env::var("S2FP8_BENCH_FAST").as_deref() == Ok("1");
+    let sizes: &[usize] =
+        if fast { &[1 << 10, 1 << 20] } else { &[1 << 10, 1 << 20, 1 << 24] };
+    let budget = Duration::from_millis(250);
+
+    let mut table = Table::new(
+        "Codec throughput (GB/s of f32 processed; encode is chunk-parallel)",
+        &["format", "elements", "encode GB/s", "decode GB/s", "packed B/elem", "size vs fp32"],
+    );
+    let mut rows = Vec::new();
+
+    for &kind in FormatKind::all() {
+        let codec = kind.codec();
+        for &n in sizes {
+            let mut rng = Pcg32::new(2026, n as u64);
+            let xs: Vec<f32> =
+                (0..n).map(|_| rng.next_lognormal(-6.0, 4.0)).collect();
+            let f32_bytes = (n * 4) as f64;
+
+            let enc = bench_fn(
+                &format!("{} encode {n}", kind.name()),
+                1,
+                3,
+                budget,
+                Some(f32_bytes),
+                || {
+                    std::hint::black_box(codec.encode(&xs));
+                },
+            );
+
+            let qt = codec.encode(&xs);
+            let mut buf: Vec<f32> = Vec::with_capacity(n);
+            let dec = bench_fn(
+                &format!("{} decode {n}", kind.name()),
+                1,
+                3,
+                budget,
+                Some(f32_bytes),
+                || {
+                    codec.decode_into(&qt, &mut buf).expect("kind matches");
+                    std::hint::black_box(&buf);
+                },
+            );
+
+            let enc_gbs = enc.throughput().unwrap_or(0.0) / 1e9;
+            let dec_gbs = dec.throughput().unwrap_or(0.0) / 1e9;
+            let ratio = qt.stored_bytes() as f64 / (n as f64 * 4.0);
+            println!(
+                "{:<10} {:>10}  enc {enc_gbs:>7.2} GB/s  dec {dec_gbs:>7.2} GB/s  \
+                 {:.2}× fp32 size",
+                kind.name(),
+                n,
+                ratio
+            );
+            table.row(vec![
+                kind.name().to_string(),
+                n.to_string(),
+                format!("{enc_gbs:.2}"),
+                format!("{dec_gbs:.2}"),
+                format!("{}", qt.bytes_per_element()),
+                format!("{ratio:.3}"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("format", Json::str(kind.name())),
+                ("elements", Json::num(n as f64)),
+                ("encode_gbs", Json::num(enc_gbs)),
+                ("decode_gbs", Json::num(dec_gbs)),
+                ("packed_bytes", Json::num(qt.stored_bytes() as f64)),
+                ("ratio_vs_fp32", Json::num(ratio)),
+                ("encode_iters", Json::num(enc.iters as f64)),
+                ("decode_iters", Json::num(dec.iters as f64)),
+            ]));
+        }
+    }
+
+    table.print();
+    table.save(paper::out_dir(bench).join("codec.md"))?;
+
+    let record = Json::obj(vec![
+        ("bench", Json::str("codec")),
+        ("basis", Json::str("f32_bytes")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let json_path = paper::out_dir(bench).join("BENCH_codec.json");
+    std::fs::write(&json_path, record.to_string_pretty())?;
+    println!("wrote {}", json_path.display());
+    Ok(())
+}

@@ -24,6 +24,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use s2fp8::coordinator::checkpoint;
+use s2fp8::formats::FormatKind;
 use s2fp8::runtime::{Dtype, HostValue};
 use s2fp8::serve::{
     backend::{Backend, FeatureSpec, HostBackend, RuntimeBackend},
@@ -48,7 +49,12 @@ fn main() {
 fn run(args: &[String]) -> Result<()> {
     let spec = Command::new("serve", "batched inference over an S2FP8-compressed checkpoint")
         .opt_optional("checkpoint", "path to a .s2ck checkpoint (omit with --synth)")
-        .flag("synth", "synthesize + S2FP8-compress a checkpoint instead of loading one")
+        .flag("synth", "synthesize + compress a checkpoint instead of loading one")
+        .opt(
+            "ckpt-format",
+            "s2fp8",
+            "storage format for --synth: fp32 | fp16 | bf16 | fp8 | fp8-e4m3 | s2fp8 | s2fp8-sr",
+        )
         .opt("model", "ncf", "host model family: ncf | mlp")
         .opt("backend", "host", "execution backend: host | runtime")
         .opt_optional("artifact", "AOT eval artifact name (runtime backend)")
@@ -80,10 +86,17 @@ fn run(args: &[String]) -> Result<()> {
             ModelKind::Ncf => synth_ncf_slots(&NcfDims::default(), p.u64("seed")),
             ModelKind::Mlp => synth_mlp_slots(&[256, 128, 64, 10], p.u64("seed")),
         };
+        let fmt = FormatKind::parse(p.str("ckpt-format"))
+            .with_context(|| format!("bad --ckpt-format '{}'", p.str("ckpt-format")))?;
         let path = std::path::PathBuf::from("runs/serve-cli")
             .join(format!("synth_{}.s2ck", p.str("model")));
-        checkpoint::save(&path, &slots, true)?;
-        println!("synthesized checkpoint → {} ({} tensors)", path.display(), slots.len());
+        checkpoint::save_as(&path, &slots, Some(fmt))?;
+        println!(
+            "synthesized checkpoint ({} weights) → {} ({} tensors)",
+            fmt.name(),
+            path.display(),
+            slots.len()
+        );
         registry.open_checkpoint(p.str("model"), &path)?
     } else {
         let path = p.get("checkpoint").context("--checkpoint or --synth required")?;

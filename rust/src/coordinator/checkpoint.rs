@@ -1,35 +1,39 @@
 //! Binary checkpoints of the trainer's persistent slots.
 //!
-//! Format (little-endian):
+//! Current format, version 2 (little-endian):
 //! ```text
-//!   magic "S2CK" | version u32 | n_entries u32
-//!   per entry: name_len u32 | name utf-8 | encoding u8 | dtype u8
-//!              | rank u32 | dims u64[rank] | payload
+//!   magic "S2CK" | version u32 = 2 | n_entries u32
+//!   per entry: name_len u32 | name utf-8 | dtype u8
+//!              dtype 0 (f32): a framed formats::QuantizedTensor
+//!                             ("S2QT" framing — kind, shape, α/β, payload)
+//!              dtype 1 (i32): rank u32 | dims u64[rank] | i32 payload
 //! ```
-//! `encoding` 0 = raw (f32/i32 bytes); 1 = **S2FP8-compressed** (f32 only):
-//! α f32, β f32, then one FP8 code byte per element — the paper's format
-//! used for what it is, 8 bits per stored weight (≈4× smaller checkpoints,
-//! Fig. 2 / §5). Compression is lossy by exactly one S2FP8 truncation;
-//! round-trip error is the format's quantization error, tested below.
+//! Every f32 tensor is stored as a [`QuantizedTensor`] — FP32-packed when
+//! uncompressed, or any 8/16-bit format when compression is requested
+//! ([`serialize_as`]). S2FP8 is the default compressed format: one FP8
+//! code byte per stored weight plus (α, β), the paper's ≈4× smaller
+//! checkpoints (Fig. 2 / §5), lossy by exactly one S2FP8 truncation.
+//!
+//! **Versioning:** readers accept v1 (the legacy raw/S2FP8 layout, kept
+//! readable via a golden fixture in `tests/checkpoint_format.rs`) and v2,
+//! and reject anything else with a clear error instead of a garbled
+//! deserialize. Writers always emit v2.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::formats::s2fp8;
-use crate::runtime::HostValue;
+use crate::formats::{FormatKind, QuantizedTensor};
+use crate::runtime::{Dtype, HostValue};
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 4] = b"S2CK";
-const VERSION: u32 = 1;
-
-/// Checkpoint payload encoding.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Encoding {
-    Raw,
-    S2fp8,
-}
+const VERSION: u32 = 2;
+/// f32 tensors at or below this element count always stay FP32-packed:
+/// the 8-byte statistics overhead isn't worth it, and scalars like BN
+/// counters need exactness.
+const COMPRESS_MIN_ELEMS: usize = 64;
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -40,10 +44,15 @@ fn put_u64(buf: &mut Vec<u8>, v: u64) {
 }
 
 /// Serialize named slots. `compress` selects S2FP8 encoding for f32
-/// tensors with more than 64 elements (tiny tensors stay raw — the 8-byte
-/// statistics overhead isn't worth it, and scalars like BN counters need
-/// exactness).
+/// tensors with more than 64 elements (see `COMPRESS_MIN_ELEMS`).
 pub fn serialize(slots: &[(String, HostValue)], compress: bool) -> Vec<u8> {
+    serialize_as(slots, if compress { Some(FormatKind::S2fp8) } else { None })
+}
+
+/// Serialize with an explicit storage format for large f32 tensors
+/// (`None` / `Some(Fp32)` → uncompressed). Any [`FormatKind`] works —
+/// checkpoints are generic over the codec layer.
+pub fn serialize_as(slots: &[(String, HostValue)], format: Option<FormatKind>) -> Vec<u8> {
     let mut buf = Vec::new();
     buf.extend_from_slice(MAGIC);
     put_u32(&mut buf, VERSION);
@@ -53,24 +62,14 @@ pub fn serialize(slots: &[(String, HostValue)], compress: bool) -> Vec<u8> {
         buf.extend_from_slice(name.as_bytes());
         match value {
             HostValue::F32(t) => {
-                let use_s2 = compress && t.len() > 64;
-                buf.push(if use_s2 { 1 } else { 0 });
                 buf.push(0); // dtype f32
-                put_u32(&mut buf, t.shape().len() as u32);
-                for &d in t.shape() {
-                    put_u64(&mut buf, d as u64);
-                }
-                if use_s2 {
-                    let c = s2fp8::compress(t.data());
-                    buf.extend_from_slice(&c.codec.alpha.to_le_bytes());
-                    buf.extend_from_slice(&c.codec.beta.to_le_bytes());
-                    buf.extend_from_slice(&c.codes);
-                } else {
-                    buf.extend_from_slice(&t.to_bytes());
-                }
+                let kind = match format {
+                    Some(k) if t.len() > COMPRESS_MIN_ELEMS => k,
+                    _ => FormatKind::Fp32,
+                };
+                t.quantize(kind).write_to(&mut buf);
             }
             HostValue::I32 { shape, data } => {
-                buf.push(0);
                 buf.push(1); // dtype i32
                 put_u32(&mut buf, shape.len() as u32);
                 for &d in shape {
@@ -92,7 +91,9 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
+        // `n` can be derived from on-disk lengths; avoid `pos + n`, which
+        // could overflow (and panic) on a crafted value.
+        if n > self.buf.len() - self.pos {
             bail!("checkpoint truncated at offset {}", self.pos);
         }
         let s = &self.buf[self.pos..self.pos + n];
@@ -114,48 +115,73 @@ impl<'a> Reader<'a> {
         let b = self.take(4)?;
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
+
+    fn rest(&self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+
+    fn advance(&mut self, n: usize) {
+        self.pos += n;
+    }
 }
 
-/// One checkpoint entry as stored on disk, with S2FP8 decode *deferred*.
+/// One checkpoint entry as stored on disk, with packed-format decode
+/// *deferred*.
 ///
 /// The serving registry ([`crate::serve::registry`]) keeps these around and
-/// decompresses per tensor on first access, so loading a model for serving
+/// decodes per tensor on first access, so loading a model for serving
 /// pays decode cost only for the tensors an executable actually binds.
 #[derive(Debug, Clone)]
 pub enum RawPayload {
-    /// Exact bytes, already materialized (raw f32 / i32 entries).
+    /// Exact host value, already materialized (i32 entries, in-memory
+    /// stores).
     Raw(HostValue),
-    /// S2FP8-compressed f32 tensor: (α, β) + one FP8 code per element.
-    S2fp8 { shape: Vec<usize>, data: s2fp8::Compressed },
+    /// A packed f32 tensor in any codec format (FP32 = uncompressed).
+    Quantized(QuantizedTensor),
 }
 
 impl RawPayload {
     pub fn shape(&self) -> &[usize] {
         match self {
             RawPayload::Raw(v) => v.shape(),
-            RawPayload::S2fp8 { shape, .. } => shape,
+            RawPayload::Quantized(qt) => qt.shape(),
         }
     }
 
-    pub fn is_compressed(&self) -> bool {
-        matches!(self, RawPayload::S2fp8 { .. })
+    /// Shape and dtype without decoding anything.
+    pub fn spec(&self) -> (&[usize], Dtype) {
+        match self {
+            RawPayload::Raw(v) => (v.shape(), v.dtype()),
+            RawPayload::Quantized(qt) => (qt.shape(), Dtype::F32),
+        }
     }
 
-    /// Bytes this entry occupies on disk (payload only, header excluded).
+    /// True when the entry is stored below 32 bits/element.
+    pub fn is_compressed(&self) -> bool {
+        matches!(self, RawPayload::Quantized(qt) if qt.kind() != FormatKind::Fp32)
+    }
+
+    /// The storage format of a packed entry (`None` for raw host values).
+    pub fn stored_format(&self) -> Option<FormatKind> {
+        match self {
+            RawPayload::Raw(_) => None,
+            RawPayload::Quantized(qt) => Some(qt.kind()),
+        }
+    }
+
+    /// Bytes this entry occupies on disk (payload + α/β, headers excluded).
     pub fn stored_bytes(&self) -> usize {
         match self {
             RawPayload::Raw(v) => v.element_count() * 4,
-            RawPayload::S2fp8 { data, .. } => data.codes.len() + 8,
+            RawPayload::Quantized(qt) => qt.stored_bytes(),
         }
     }
 
-    /// Materialize the host value (the S2FP8 decode happens here).
+    /// Materialize the host value (the packed decode happens here).
     pub fn decode(&self) -> HostValue {
         match self {
             RawPayload::Raw(v) => v.clone(),
-            RawPayload::S2fp8 { shape, data } => {
-                HostValue::F32(Tensor::new(shape.clone(), s2fp8::decompress(data)))
-            }
+            RawPayload::Quantized(qt) => HostValue::F32(Tensor::from_quantized(qt)),
         }
     }
 
@@ -163,64 +189,109 @@ impl RawPayload {
     pub fn into_host(self) -> HostValue {
         match self {
             RawPayload::Raw(v) => v,
-            RawPayload::S2fp8 { shape, data } => {
-                HostValue::F32(Tensor::new(shape, s2fp8::decompress(&data)))
-            }
+            RawPayload::Quantized(qt) => HostValue::F32(Tensor::from_quantized(&qt)),
         }
     }
 }
 
-/// Deserialize a checkpoint without decompressing S2FP8 payloads.
+/// Element count of an on-disk shape, rejecting products that overflow
+/// (corrupt/crafted dims) instead of wrapping or panicking.
+fn checked_count(shape: &[usize]) -> Result<usize> {
+    shape
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .and_then(|c| c.checked_mul(4).map(|_| c))
+        .with_context(|| format!("corrupt checkpoint: shape {shape:?} overflows"))
+}
+
+fn entry_v1(r: &mut Reader) -> Result<(String, RawPayload)> {
+    let name_len = r.u32()? as usize;
+    let name = String::from_utf8(r.take(name_len)?.to_vec()).context("bad name")?;
+    let encoding = r.take(1)?[0];
+    let dtype = r.take(1)?[0];
+    let rank = r.u32()? as usize;
+    let mut shape = Vec::with_capacity(rank.min(64));
+    for _ in 0..rank {
+        shape.push(r.u64()? as usize);
+    }
+    let count = checked_count(&shape)?;
+    let value = match (encoding, dtype) {
+        (0, 0) => {
+            let bytes = r.take(count * 4)?;
+            RawPayload::Raw(HostValue::F32(Tensor::from_bytes(shape, bytes)))
+        }
+        (0, 1) => {
+            let bytes = r.take(count * 4)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            RawPayload::Raw(HostValue::i32(shape, data))
+        }
+        (1, 0) => {
+            let alpha = r.f32()?;
+            let beta = r.f32()?;
+            let codes = r.take(count)?.to_vec();
+            let qt = QuantizedTensor::from_parts(
+                FormatKind::S2fp8,
+                shape,
+                codes,
+                Some((alpha, beta)),
+            )?;
+            RawPayload::Quantized(qt)
+        }
+        other => bail!("unknown encoding/dtype {other:?}"),
+    };
+    Ok((name, value))
+}
+
+fn entry_v2(r: &mut Reader) -> Result<(String, RawPayload)> {
+    let name_len = r.u32()? as usize;
+    let name = String::from_utf8(r.take(name_len)?.to_vec()).context("bad name")?;
+    let dtype = r.take(1)?[0];
+    let value = match dtype {
+        0 => {
+            let (qt, used) = QuantizedTensor::from_slice(r.rest())
+                .with_context(|| format!("entry '{name}'"))?;
+            r.advance(used);
+            RawPayload::Quantized(qt)
+        }
+        1 => {
+            let rank = r.u32()? as usize;
+            let mut shape = Vec::with_capacity(rank.min(64));
+            for _ in 0..rank {
+                shape.push(r.u64()? as usize);
+            }
+            let count = checked_count(&shape)?;
+            let bytes = r.take(count * 4)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            RawPayload::Raw(HostValue::i32(shape, data))
+        }
+        other => bail!("entry '{name}': unknown dtype byte {other}"),
+    };
+    Ok((name, value))
+}
+
+/// Deserialize a checkpoint without decoding packed payloads.
 pub fn deserialize_raw(bytes: &[u8]) -> Result<Vec<(String, RawPayload)>> {
     let mut r = Reader { buf: bytes, pos: 0 };
     if r.take(4)? != MAGIC {
         bail!("not a S2CK checkpoint");
     }
     let version = r.u32()?;
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
+    if version != 1 && version != VERSION {
+        bail!(
+            "unsupported checkpoint version {version} (this build reads v1–v{VERSION}); \
+             re-save the checkpoint with a compatible build"
+        );
     }
     let n = r.u32()? as usize;
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
-        let name_len = r.u32()? as usize;
-        let name = String::from_utf8(r.take(name_len)?.to_vec()).context("bad name")?;
-        let encoding = r.take(1)?[0];
-        let dtype = r.take(1)?[0];
-        let rank = r.u32()? as usize;
-        let mut shape = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            shape.push(r.u64()? as usize);
-        }
-        let count: usize = shape.iter().product();
-        let value = match (encoding, dtype) {
-            (0, 0) => {
-                let bytes = r.take(count * 4)?;
-                RawPayload::Raw(HostValue::F32(Tensor::from_bytes(shape, bytes)))
-            }
-            (0, 1) => {
-                let bytes = r.take(count * 4)?;
-                let data = bytes
-                    .chunks_exact(4)
-                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect();
-                RawPayload::Raw(HostValue::i32(shape, data))
-            }
-            (1, 0) => {
-                let alpha = r.f32()?;
-                let beta = r.f32()?;
-                let codes = r.take(count)?.to_vec();
-                RawPayload::S2fp8 {
-                    shape,
-                    data: s2fp8::Compressed {
-                        codec: s2fp8::S2fp8Codec { alpha, beta },
-                        codes,
-                    },
-                }
-            }
-            other => bail!("unknown encoding/dtype {other:?}"),
-        };
-        out.push((name, value));
+        out.push(if version == 1 { entry_v1(&mut r)? } else { entry_v2(&mut r)? });
     }
     if r.pos != bytes.len() {
         bail!("{} trailing bytes in checkpoint", bytes.len() - r.pos);
@@ -228,19 +299,28 @@ pub fn deserialize_raw(bytes: &[u8]) -> Result<Vec<(String, RawPayload)>> {
     Ok(out)
 }
 
-/// Deserialize a checkpoint produced by [`serialize`], decompressing
+/// Deserialize a checkpoint produced by [`serialize`], decoding
 /// every entry eagerly (the trainer's restore path).
 pub fn deserialize(bytes: &[u8]) -> Result<Vec<(String, HostValue)>> {
     Ok(deserialize_raw(bytes)?.into_iter().map(|(n, p)| (n, p.into_host())).collect())
 }
 
 pub fn save(path: impl AsRef<Path>, slots: &[(String, HostValue)], compress: bool) -> Result<()> {
+    save_as(path, slots, if compress { Some(FormatKind::S2fp8) } else { None })
+}
+
+/// [`save`] with an explicit storage format (see [`serialize_as`]).
+pub fn save_as(
+    path: impl AsRef<Path>,
+    slots: &[(String, HostValue)],
+    format: Option<FormatKind>,
+) -> Result<()> {
     if let Some(parent) = path.as_ref().parent() {
         std::fs::create_dir_all(parent)?;
     }
     let mut f = std::fs::File::create(&path)
         .with_context(|| format!("creating {}", path.as_ref().display()))?;
-    f.write_all(&serialize(slots, compress))?;
+    f.write_all(&serialize_as(slots, format))?;
     Ok(())
 }
 
@@ -252,7 +332,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, HostValue)>> {
     deserialize(&bytes)
 }
 
-/// Load a checkpoint keeping S2FP8 entries compressed (serving registry).
+/// Load a checkpoint keeping packed entries packed (serving registry).
 pub fn load_raw(path: impl AsRef<Path>) -> Result<Vec<(String, RawPayload)>> {
     let mut bytes = Vec::new();
     std::fs::File::open(&path)
@@ -333,6 +413,41 @@ mod tests {
     }
 
     #[test]
+    fn any_codec_format_works_as_checkpoint_storage() {
+        let slots = sample_slots();
+        let orig = slots[0].1.as_f32().unwrap();
+        for kind in [FormatKind::Fp16, FormatKind::Bf16, FormatKind::S2fp8Sr] {
+            let bytes = serialize_as(&slots, Some(kind));
+            let raw = deserialize_raw(&bytes).unwrap();
+            assert_eq!(raw[0].1.stored_format(), Some(kind), "{}", kind.name());
+            assert_eq!(
+                raw[0].1.stored_bytes(),
+                orig.len() * (kind.bits() as usize / 8)
+                    + if kind.uses_tensor_stats() { 8 } else { 0 }
+            );
+            // round-trip accuracy: tight per-element for the 16-bit
+            // formats; statistical for stochastic rounding (whose deep
+            // tail can land a grid step away by design)
+            let rec = raw[0].1.decode();
+            let rec = rec.as_f32().unwrap();
+            let mut rel_sum = 0.0f64;
+            let mut n = 0usize;
+            for (a, b) in orig.data().iter().zip(rec.data().iter()) {
+                if *a != 0.0 && *b != 0.0 {
+                    let rel = ((a - b).abs() / a.abs()) as f64;
+                    if !kind.uses_tensor_stats() {
+                        assert!(rel < 0.2, "{}: {a} vs {b}", kind.name());
+                    }
+                    rel_sum += rel;
+                    n += 1;
+                }
+            }
+            let mean_rel = rel_sum / n.max(1) as f64;
+            assert!(mean_rel < 0.1, "{}: mean rel err {mean_rel}", kind.name());
+        }
+    }
+
+    #[test]
     fn corrupt_magic_and_truncation_detected() {
         let slots = sample_slots();
         let mut bytes = serialize(&slots, false);
@@ -342,14 +457,28 @@ mod tests {
     }
 
     #[test]
+    fn unknown_version_is_rejected_with_a_clear_error() {
+        let slots = sample_slots();
+        let mut bytes = serialize(&slots, false);
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let err = deserialize(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+        let err = deserialize_raw(&bytes).unwrap_err().to_string();
+        assert!(err.contains("unsupported checkpoint version"), "{err}");
+    }
+
+    #[test]
     fn raw_deserialize_defers_s2fp8_decode() {
         let slots = sample_slots();
         let bytes = serialize(&slots, true);
         let raw = deserialize_raw(&bytes).unwrap();
-        // the big f32 tensor stays compressed; small/i32 entries are raw
+        // the big f32 tensor stays compressed; small/i32 entries are not
         assert!(raw[0].1.is_compressed());
         assert!(!raw[1].1.is_compressed());
         assert!(!raw[2].1.is_compressed());
+        assert_eq!(raw[0].1.stored_format(), Some(FormatKind::S2fp8));
+        assert_eq!(raw[1].1.stored_format(), Some(FormatKind::Fp32));
+        assert_eq!(raw[2].1.stored_format(), None);
         assert_eq!(raw[0].1.shape(), &[3, 3, 8, 16]);
         assert_eq!(raw[0].1.stored_bytes(), 3 * 3 * 8 * 16 + 8); // 1 B/elem + α,β
         // decoding the raw view matches the eager path exactly

@@ -11,7 +11,7 @@
 //!   S2FP8 statistics unit and exponent-shift/mantissa-squeeze circuitry
 //!   relative to a plain FP8 datapath.
 
-use super::{fp8, s2fp8, FormatKind, NumericFormat};
+use super::{fp8, fp8e4m3, s2fp8, FormatKind, NumericFormat};
 
 /// One row of Table A1 (formatted strings, so benches print exactly the
 /// paper's table shape).
@@ -102,6 +102,7 @@ pub fn quantization_error_of(xs: &[f32], q: &[f32], fmt: FormatKind) -> QuantErr
     let mut n_sat = 0usize;
     let max_mag = match fmt {
         FormatKind::Fp8 => fp8::MAX_NORMAL as f64,
+        FormatKind::Fp8E4m3 => fp8e4m3::MAX_NORMAL as f64,
         FormatKind::Fp16 => super::fp16::MAX_NORMAL as f64,
         _ => f64::INFINITY,
     };
@@ -130,6 +131,47 @@ pub fn quantization_error_of(xs: &[f32], q: &[f32], fmt: FormatKind) -> QuantErr
         underflow_frac: n_under as f64 / n,
         saturate_frac: n_sat as f64 / n,
     }
+}
+
+/// One row of a generic multi-format sweep: quantization error plus the
+/// *true packed* storage cost of a format on a tensor (measured through
+/// the [`crate::formats::Codec`] trait, not estimated from bit widths).
+#[derive(Debug, Clone)]
+pub struct CodecSweepRow {
+    pub kind: FormatKind,
+    pub err: QuantError,
+    /// Packed bytes at rest (payload + α/β statistics where present).
+    pub stored_bytes: usize,
+    /// The same tensor's FP32 footprint.
+    pub fp32_bytes: usize,
+}
+
+impl CodecSweepRow {
+    /// Storage relative to FP32 (e.g. ≈0.25 for the 8-bit formats).
+    pub fn storage_ratio(&self) -> f64 {
+        self.stored_bytes as f64 / (self.fp32_bytes as f64).max(1.0)
+    }
+}
+
+/// Sweep a tensor through every requested format generically: encode to
+/// packed bytes, decode back, measure the error. This is how the benches
+/// and CLI compare formats — adding a [`FormatKind`] automatically adds it
+/// to every sweep.
+pub fn codec_sweep(kinds: &[FormatKind], xs: &[f32]) -> Vec<CodecSweepRow> {
+    kinds
+        .iter()
+        .map(|&kind| {
+            let codec = kind.codec();
+            let qt = codec.encode(xs);
+            let back = qt.decode();
+            CodecSweepRow {
+                kind,
+                err: quantization_error_of(xs, &back, kind),
+                stored_bytes: qt.stored_bytes(),
+                fp32_bytes: xs.len() * 4,
+            }
+        })
+        .collect()
 }
 
 /// Histogram of `log2|x|` (non-zero elements) — the Fig. 1 visualization
@@ -337,6 +379,28 @@ mod tests {
             assert!(es2 < e8, "sigma {sigma}: s2fp8 {es2} vs fp8 {e8}");
             assert!(alpha > 0.0);
         }
+    }
+
+    #[test]
+    fn codec_sweep_is_generic_over_every_format() {
+        use crate::util::rng::{Pcg32, Rng};
+        let mut rng = Pcg32::new(8, 8);
+        let xs: Vec<f32> = (0..2048).map(|_| rng.next_lognormal(-12.0, 2.0)).collect();
+        let rows = codec_sweep(FormatKind::all(), &xs);
+        assert_eq!(rows.len(), FormatKind::all().len());
+        let by_kind = |k: FormatKind| rows.iter().find(|r| r.kind == k).unwrap();
+        // fp32 is lossless and full-size
+        assert_eq!(by_kind(FormatKind::Fp32).err.max_rel, 0.0);
+        assert_eq!(by_kind(FormatKind::Fp32).stored_bytes, xs.len() * 4);
+        // 8-bit formats actually pack to ~a quarter of fp32
+        for k in [FormatKind::Fp8, FormatKind::Fp8E4m3, FormatKind::S2fp8, FormatKind::S2fp8Sr] {
+            let r = by_kind(k);
+            assert!(r.storage_ratio() < 0.26, "{}: ratio {}", k.name(), r.storage_ratio());
+        }
+        // on a tensor centered at 2^-12, S2FP8 beats both fixed FP8s
+        let s2 = by_kind(FormatKind::S2fp8).err.sqnr_db;
+        assert!(s2 > by_kind(FormatKind::Fp8).err.sqnr_db);
+        assert!(s2 > by_kind(FormatKind::Fp8E4m3).err.sqnr_db);
     }
 
     #[test]

@@ -1,0 +1,847 @@
+//! The unified codec layer: **every numeric format is a [`Codec`] that
+//! packs tensors into [`QuantizedTensor`]s** — real byte payloads (1
+//! byte/element for the FP8 family and S2FP8, 2 for FP16/BF16, 4 for
+//! FP32), per-tensor transform statistics (α, β) where the format needs
+//! them, and a versioned on-disk framing. This is the single currency the
+//! checkpoint writer, the serving weight store and the format benches all
+//! trade in; the paper's 4× memory claim falls out of the payload actually
+//! being one byte per element rather than a simulated `Vec<f32>`.
+//!
+//! Obtain a codec with [`FormatKind::codec`] and go through the trait:
+//!
+//! ```
+//! use s2fp8::formats::FormatKind;
+//!
+//! let xs = vec![1.0e-6f32, 2.0e-6, -3.3e-6];
+//! let codec = FormatKind::S2fp8.codec();
+//! let qt = codec.encode(&xs);
+//! assert_eq!(qt.payload().len(), xs.len()); // truly 1 byte per element
+//! let back = codec.decode(&qt).unwrap();
+//! for (a, b) in xs.iter().zip(back.iter()) {
+//!     assert!((a - b).abs() / a.abs() < 0.15);
+//! }
+//! ```
+//!
+//! Encoding of large tensors is chunk-parallel across the host cores;
+//! decoding offers [`Codec::decode_into`] / [`QuantizedTensor::decode_into`]
+//! so repeated decodes (weight rebinding, benches) reuse one buffer. The
+//! stochastic-rounding S2FP8 variant derives its per-element randomness
+//! from a stateless hash of the element index, so its output is
+//! bit-deterministic regardless of how the encode was chunked or threaded.
+//!
+//! To add a new format: implement the element conversions in a sibling
+//! module, add a [`FormatKind`] variant (name/parse/bits), give it a
+//! `Codec` impl here, and register the on-disk tag in `kind_tag` /
+//! `kind_from_tag`. Everything downstream — checkpoints, serving,
+//! analysis sweeps, the perf benches — picks the format up through the
+//! trait. See DESIGN.md "Codec API".
+
+use super::traits::FormatKind;
+use super::{bf16, fp16, fp8, fp8e4m3, s2fp8};
+
+/// Framing magic for a serialized [`QuantizedTensor`].
+pub const QT_MAGIC: &[u8; 4] = b"S2QT";
+/// Current framing version ([`QuantizedTensor::to_bytes`] writes this;
+/// readers reject anything newer with [`CodecError::UnsupportedVersion`]).
+pub const QT_VERSION: u8 = 1;
+
+/// Typed errors of the codec layer. Nothing here panics on untrusted
+/// input: malformed framing, wrong-format decodes and shape mismatches
+/// all surface as values.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum CodecError {
+    #[error("not a quantized tensor (bad magic; expected \"S2QT\")")]
+    BadMagic,
+    #[error("unsupported quantized-tensor version {0} (this build reads v1)")]
+    UnsupportedVersion(u8),
+    #[error("unknown format tag {0} in quantized tensor")]
+    UnknownTag(u8),
+    #[error("quantized tensor truncated: need {need} more bytes at offset {at}")]
+    Truncated { at: usize, need: usize },
+    #[error("payload of {got} bytes does not match shape {shape:?} at {bpe} B/element")]
+    PayloadMismatch { shape: Vec<usize>, bpe: usize, got: usize },
+    #[error("shape {shape:?} does not hold {elems} elements")]
+    ShapeMismatch { shape: Vec<usize>, elems: usize },
+    #[error("α/β statistics {0}")]
+    BadStats(&'static str),
+    #[error("tensor holds {tensor} data but the codec expects {codec}")]
+    WrongKind { tensor: &'static str, codec: &'static str },
+    #[error("{0} trailing bytes after quantized tensor")]
+    TrailingBytes(usize),
+}
+
+/// A tensor packed into a numeric format's true byte representation.
+///
+/// Owns the packed `Vec<u8>` payload (`kind.bits()/8` bytes per element,
+/// little-endian for multi-byte formats), the logical shape, and — for the
+/// S2FP8 family — the fitted per-tensor (α, β). Self-describing: decoding
+/// needs no external state beyond this struct.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedTensor {
+    kind: FormatKind,
+    shape: Vec<usize>,
+    payload: Vec<u8>,
+    /// (α, β) of the shift/squeeze transform; `Some` iff
+    /// `kind.uses_tensor_stats()` (enforced by every constructor).
+    s2: Option<(f32, f32)>,
+}
+
+impl QuantizedTensor {
+    /// Internal rank-1 constructor for codec encodes (invariants upheld by
+    /// the callers: payload length and stats presence always match).
+    fn flat(kind: FormatKind, elems: usize, payload: Vec<u8>, s2: Option<(f32, f32)>) -> Self {
+        debug_assert_eq!(payload.len(), elems * bytes_per_element(kind));
+        debug_assert_eq!(s2.is_some(), kind.uses_tensor_stats());
+        QuantizedTensor { kind, shape: vec![elems], payload, s2 }
+    }
+
+    /// Validating constructor from raw parts (checkpoint readers, tests).
+    pub fn from_parts(
+        kind: FormatKind,
+        shape: Vec<usize>,
+        payload: Vec<u8>,
+        s2: Option<(f32, f32)>,
+    ) -> Result<Self, CodecError> {
+        let elems = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .ok_or_else(|| CodecError::ShapeMismatch { shape: shape.clone(), elems: usize::MAX })?;
+        let bpe = bytes_per_element(kind);
+        if elems.checked_mul(bpe) != Some(payload.len()) {
+            return Err(CodecError::PayloadMismatch { shape, bpe, got: payload.len() });
+        }
+        match (kind.uses_tensor_stats(), s2.is_some()) {
+            (true, false) => return Err(CodecError::BadStats("missing for an S2FP8 tensor")),
+            (false, true) => return Err(CodecError::BadStats("present for an element-wise format")),
+            _ => {}
+        }
+        Ok(QuantizedTensor { kind, shape, payload, s2 })
+    }
+
+    pub fn kind(&self) -> FormatKind {
+        self.kind
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.payload.len() / bytes_per_element(self.kind)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.payload.is_empty()
+    }
+
+    /// The packed code bytes (e.g. one FP8 code per element for S2FP8).
+    pub fn payload(&self) -> &[u8] {
+        &self.payload
+    }
+
+    /// Packed bytes per element of this tensor's format.
+    pub fn bytes_per_element(&self) -> usize {
+        bytes_per_element(self.kind)
+    }
+
+    /// Fitted (α, β) for the S2FP8 family; `None` for element-wise formats.
+    pub fn s2_params(&self) -> Option<(f32, f32)> {
+        self.s2
+    }
+
+    /// Bytes this tensor occupies at rest: payload plus the 8-byte (α, β)
+    /// statistics where present (framing/header bytes excluded).
+    pub fn stored_bytes(&self) -> usize {
+        self.payload.len() + if self.s2.is_some() { 8 } else { 0 }
+    }
+
+    /// Re-shape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self, CodecError> {
+        let elems = self.len();
+        if shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d)) != Some(elems) {
+            return Err(CodecError::ShapeMismatch { shape, elems });
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Decode to f32 (allocating). See [`QuantizedTensor::decode_into`].
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Decode into `out`, reusing its allocation (resized to fit, every
+    /// element overwritten). The tensor is self-describing, so this never
+    /// fails; chunk-parallel for large tensors.
+    pub fn decode_into(&self, out: &mut Vec<f32>) {
+        let n = self.len();
+        // Every decode arm overwrites all of out[0..n]; resize only
+        // zero-fills newly grown tail elements, so buffer reuse pays no
+        // per-decode fill.
+        out.resize(n, 0.0);
+        match self.kind {
+            FormatKind::Fp32 => decode_chunked(&self.payload, 4, out, &|p, o| {
+                for (c, y) in p.chunks_exact(4).zip(o.iter_mut()) {
+                    *y = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }),
+            FormatKind::Fp16 => decode_chunked(&self.payload, 2, out, &|p, o| {
+                for (c, y) in p.chunks_exact(2).zip(o.iter_mut()) {
+                    *y = fp16::decode(u16::from_le_bytes([c[0], c[1]]));
+                }
+            }),
+            FormatKind::Bf16 => decode_chunked(&self.payload, 2, out, &|p, o| {
+                for (c, y) in p.chunks_exact(2).zip(o.iter_mut()) {
+                    *y = bf16::decode(u16::from_le_bytes([c[0], c[1]]));
+                }
+            }),
+            FormatKind::Fp8 => decode_chunked(&self.payload, 1, out, &|p, o| {
+                for (&b, y) in p.iter().zip(o.iter_mut()) {
+                    *y = fp8::decode_lut(b);
+                }
+            }),
+            FormatKind::Fp8E4m3 => decode_chunked(&self.payload, 1, out, &|p, o| {
+                for (&b, y) in p.iter().zip(o.iter_mut()) {
+                    *y = fp8e4m3::decode_lut(b);
+                }
+            }),
+            FormatKind::S2fp8 | FormatKind::S2fp8Sr => {
+                let (alpha, beta) = self.s2.expect("constructors enforce α/β for S2FP8");
+                let c = s2fp8::S2fp8Codec { alpha, beta };
+                decode_chunked(&self.payload, 1, out, &|p, o| {
+                    for (&b, y) in p.iter().zip(o.iter_mut()) {
+                        *y = c.unsqueeze(fp8::decode_lut(b));
+                    }
+                });
+            }
+        }
+    }
+
+    // ---- versioned on-disk framing ---------------------------------------
+    //
+    //   magic "S2QT" | version u8 | kind tag u8 | flags u8 (bit0: has α/β)
+    //   | rank u32 | dims u64[rank] | [α f32, β f32] | payload_len u64
+    //   | payload bytes
+    //
+    // All integers little-endian. Readers reject unknown versions/tags
+    // instead of guessing.
+
+    /// Append the framed tensor to `buf`.
+    pub fn write_to(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(QT_MAGIC);
+        buf.push(QT_VERSION);
+        buf.push(kind_tag(self.kind));
+        buf.push(u8::from(self.s2.is_some()));
+        buf.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for &d in &self.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        if let Some((a, b)) = self.s2 {
+            buf.extend_from_slice(&a.to_le_bytes());
+            buf.extend_from_slice(&b.to_le_bytes());
+        }
+        buf.extend_from_slice(&(self.payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&self.payload);
+    }
+
+    /// The framed byte representation.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(32 + 8 * self.shape.len() + self.payload.len());
+        self.write_to(&mut buf);
+        buf
+    }
+
+    /// Parse one framed tensor from the front of `buf`, returning it and
+    /// the number of bytes consumed (checkpoint entries embed tensors
+    /// back to back).
+    pub fn from_slice(buf: &[u8]) -> Result<(Self, usize), CodecError> {
+        fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], CodecError> {
+            // `n` comes straight off the wire (e.g. payload_len) — compare
+            // against the remainder instead of computing `pos + n`, which
+            // could overflow and panic on a crafted length.
+            if n > buf.len() - *pos {
+                return Err(CodecError::Truncated { at: *pos, need: n - (buf.len() - *pos) });
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        }
+        fn take_f32(buf: &[u8], pos: &mut usize) -> Result<f32, CodecError> {
+            let b = take(buf, pos, 4)?;
+            Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        }
+        let mut pos = 0usize;
+        if take(buf, &mut pos, 4)? != QT_MAGIC {
+            return Err(CodecError::BadMagic);
+        }
+        let version = take(buf, &mut pos, 1)?[0];
+        if version != QT_VERSION {
+            return Err(CodecError::UnsupportedVersion(version));
+        }
+        let kind = kind_from_tag(take(buf, &mut pos, 1)?[0])?;
+        let has_s2 = take(buf, &mut pos, 1)?[0] != 0;
+        let rank_b = take(buf, &mut pos, 4)?;
+        let rank = u32::from_le_bytes([rank_b[0], rank_b[1], rank_b[2], rank_b[3]]) as usize;
+        let mut shape = Vec::with_capacity(rank.min(64));
+        for _ in 0..rank {
+            let d = take(buf, &mut pos, 8)?;
+            shape.push(u64::from_le_bytes(d.try_into().unwrap()) as usize);
+        }
+        let s2 = if has_s2 {
+            Some((take_f32(buf, &mut pos)?, take_f32(buf, &mut pos)?))
+        } else {
+            None
+        };
+        let l = take(buf, &mut pos, 8)?;
+        let payload_len = u64::from_le_bytes(l.try_into().unwrap()) as usize;
+        let payload = take(buf, &mut pos, payload_len)?.to_vec();
+        let qt = QuantizedTensor::from_parts(kind, shape, payload, s2)?;
+        Ok((qt, pos))
+    }
+
+    /// Parse a framed tensor that must span `buf` exactly.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self, CodecError> {
+        let (qt, used) = Self::from_slice(buf)?;
+        if used != buf.len() {
+            return Err(CodecError::TrailingBytes(buf.len() - used));
+        }
+        Ok(qt)
+    }
+}
+
+/// The format interface every numeric format implements: pack a tensor of
+/// f32s into true byte storage and back. Get one via [`FormatKind::codec`].
+pub trait Codec: Send + Sync {
+    /// Which format this codec implements.
+    fn kind(&self) -> FormatKind;
+
+    /// Pack a flat tensor (rank-1 result; [`QuantizedTensor::reshape`] to
+    /// restore structure). Chunk-parallel for large inputs.
+    fn encode(&self, xs: &[f32]) -> QuantizedTensor;
+
+    /// Element-wise round-trip through the format. `None` for formats that
+    /// need per-tensor statistics (the S2FP8 family) — no panicking
+    /// special case.
+    fn truncate(&self, x: f32) -> Option<f32>;
+
+    /// Decode a packed tensor (allocating).
+    fn decode(&self, qt: &QuantizedTensor) -> Result<Vec<f32>, CodecError> {
+        let mut out = Vec::new();
+        self.decode_into(qt, &mut out)?;
+        Ok(out)
+    }
+
+    /// Decode into a caller-owned buffer, reusing its allocation. Fails
+    /// (without panicking) if `qt` holds a different format's data.
+    fn decode_into(&self, qt: &QuantizedTensor, out: &mut Vec<f32>) -> Result<(), CodecError> {
+        if qt.kind() != self.kind() {
+            return Err(CodecError::WrongKind {
+                tensor: qt.kind().name(),
+                codec: self.kind().name(),
+            });
+        }
+        qt.decode_into(out);
+        Ok(())
+    }
+}
+
+/// Packed bytes per element of a format.
+pub(crate) fn bytes_per_element(kind: FormatKind) -> usize {
+    (kind.bits() / 8) as usize
+}
+
+/// Stable on-disk tag of each format (framing byte; never reordered).
+fn kind_tag(kind: FormatKind) -> u8 {
+    match kind {
+        FormatKind::Fp32 => 0,
+        FormatKind::Fp16 => 1,
+        FormatKind::Bf16 => 2,
+        FormatKind::Fp8 => 3,
+        FormatKind::Fp8E4m3 => 4,
+        FormatKind::S2fp8 => 5,
+        FormatKind::S2fp8Sr => 6,
+    }
+}
+
+fn kind_from_tag(tag: u8) -> Result<FormatKind, CodecError> {
+    Ok(match tag {
+        0 => FormatKind::Fp32,
+        1 => FormatKind::Fp16,
+        2 => FormatKind::Bf16,
+        3 => FormatKind::Fp8,
+        4 => FormatKind::Fp8E4m3,
+        5 => FormatKind::S2fp8,
+        6 => FormatKind::S2fp8Sr,
+        other => return Err(CodecError::UnknownTag(other)),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// chunk-parallel encode/decode plumbing
+// ---------------------------------------------------------------------------
+
+/// Elements below this stay on the calling thread.
+const PAR_MIN_ELEMS: usize = 1 << 16;
+
+fn worker_count(n: usize) -> usize {
+    if n < PAR_MIN_ELEMS {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    hw.min(n.div_ceil(PAR_MIN_ELEMS)).min(16)
+}
+
+/// Run `enc(base_element_index, input_chunk, output_chunk)` over contiguous
+/// chunks, in parallel for large tensors. `enc` gets the chunk's absolute
+/// element offset so index-keyed encoders (stochastic rounding) stay
+/// deterministic under any chunking.
+fn encode_chunked(
+    xs: &[f32],
+    bpe: usize,
+    enc: &(impl Fn(usize, &[f32], &mut [u8]) + Sync),
+) -> Vec<u8> {
+    let mut out = vec![0u8; xs.len() * bpe];
+    let workers = worker_count(xs.len());
+    if workers <= 1 {
+        enc(0, xs, &mut out);
+        return out;
+    }
+    let per = xs.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest_x = xs;
+        let mut rest_o = out.as_mut_slice();
+        let mut base = 0usize;
+        while !rest_x.is_empty() {
+            let take = per.min(rest_x.len());
+            let (cx, rx) = rest_x.split_at(take);
+            let (co, ro) = rest_o.split_at_mut(take * bpe);
+            rest_x = rx;
+            rest_o = ro;
+            s.spawn(move || enc(base, cx, co));
+            base += take;
+        }
+    });
+    out
+}
+
+/// Parallel counterpart for decode: `dec(payload_chunk, output_chunk)`.
+fn decode_chunked(
+    payload: &[u8],
+    bpe: usize,
+    out: &mut [f32],
+    dec: &(impl Fn(&[u8], &mut [f32]) + Sync),
+) {
+    let workers = worker_count(out.len());
+    if workers <= 1 {
+        dec(payload, out);
+        return;
+    }
+    let per = out.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest_p = payload;
+        let mut rest_o = out;
+        while !rest_o.is_empty() {
+            let take = per.min(rest_o.len());
+            let (cp, rp) = rest_p.split_at(take * bpe);
+            let (co, ro) = rest_o.split_at_mut(take);
+            rest_p = rp;
+            rest_o = ro;
+            s.spawn(move || dec(cp, co));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// the codec zoo
+// ---------------------------------------------------------------------------
+
+/// FP32 pass-through (payload = little-endian f32 bytes, bit-exact).
+pub struct Fp32Codec;
+
+impl Codec for Fp32Codec {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Fp32
+    }
+
+    fn truncate(&self, x: f32) -> Option<f32> {
+        Some(x)
+    }
+
+    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
+        let payload = encode_chunked(xs, 4, &|_, c, o| {
+            for (x, b) in c.iter().zip(o.chunks_exact_mut(4)) {
+                b.copy_from_slice(&x.to_le_bytes());
+            }
+        });
+        QuantizedTensor::flat(FormatKind::Fp32, xs.len(), payload, None)
+    }
+}
+
+/// IEEE FP16 (2 bytes/element).
+pub struct Fp16Codec;
+
+impl Codec for Fp16Codec {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Fp16
+    }
+
+    fn truncate(&self, x: f32) -> Option<f32> {
+        Some(fp16::truncate(x))
+    }
+
+    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
+        let payload = encode_chunked(xs, 2, &|_, c, o| {
+            for (x, b) in c.iter().zip(o.chunks_exact_mut(2)) {
+                b.copy_from_slice(&fp16::encode(*x).to_le_bytes());
+            }
+        });
+        QuantizedTensor::flat(FormatKind::Fp16, xs.len(), payload, None)
+    }
+}
+
+/// BF16 (2 bytes/element).
+pub struct Bf16Codec;
+
+impl Codec for Bf16Codec {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Bf16
+    }
+
+    fn truncate(&self, x: f32) -> Option<f32> {
+        Some(bf16::truncate(x))
+    }
+
+    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
+        let payload = encode_chunked(xs, 2, &|_, c, o| {
+            for (x, b) in c.iter().zip(o.chunks_exact_mut(2)) {
+                b.copy_from_slice(&bf16::encode(*x).to_le_bytes());
+            }
+        });
+        QuantizedTensor::flat(FormatKind::Bf16, xs.len(), payload, None)
+    }
+}
+
+/// FP8 E5M2 (1 byte/element), the paper's FP8.
+pub struct Fp8E5m2Codec;
+
+impl Codec for Fp8E5m2Codec {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Fp8
+    }
+
+    fn truncate(&self, x: f32) -> Option<f32> {
+        Some(fp8::truncate(x))
+    }
+
+    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
+        let payload = encode_chunked(xs, 1, &|_, c, o| {
+            for (x, b) in c.iter().zip(o.iter_mut()) {
+                *b = fp8::encode_fast(*x);
+            }
+        });
+        QuantizedTensor::flat(FormatKind::Fp8, xs.len(), payload, None)
+    }
+}
+
+/// FP8 E4M3 (1 byte/element), the precision-heavy half of the FP8 pair.
+pub struct Fp8E4m3Codec;
+
+impl Codec for Fp8E4m3Codec {
+    fn kind(&self) -> FormatKind {
+        FormatKind::Fp8E4m3
+    }
+
+    fn truncate(&self, x: f32) -> Option<f32> {
+        Some(fp8e4m3::truncate(x))
+    }
+
+    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
+        let payload = encode_chunked(xs, 1, &|_, c, o| {
+            for (x, b) in c.iter().zip(o.iter_mut()) {
+                *b = fp8e4m3::encode(*x);
+            }
+        });
+        QuantizedTensor::flat(FormatKind::Fp8E4m3, xs.len(), payload, None)
+    }
+}
+
+/// S2FP8 with round-to-nearest-even (the paper's format): fit (α, β) on
+/// the tensor (Eq. 3–4), squeeze, store one FP8 code per element.
+pub struct S2fp8RneCodec;
+
+impl Codec for S2fp8RneCodec {
+    fn kind(&self) -> FormatKind {
+        FormatKind::S2fp8
+    }
+
+    fn truncate(&self, _x: f32) -> Option<f32> {
+        None // needs per-tensor statistics
+    }
+
+    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
+        // The statistics pass stays sequential so the fitted (α, β) are
+        // bit-identical to `s2fp8::truncate_tensor`'s.
+        let c = s2fp8::S2fp8Codec::fit(xs);
+        let payload = encode_chunked(xs, 1, &|_, ch, o| {
+            for (x, b) in ch.iter().zip(o.iter_mut()) {
+                *b = fp8::encode_fast(c.squeeze(*x));
+            }
+        });
+        QuantizedTensor::flat(FormatKind::S2fp8, xs.len(), payload, Some((c.alpha, c.beta)))
+    }
+}
+
+/// S2FP8 with stochastic rounding in the squeezed domain — the
+/// Wang et al. 2018 rounding regime applied on top of the shift/squeeze
+/// transform. Per-element randomness is a stateless hash of (seed,
+/// element index): encodes are reproducible and thread-count-independent.
+pub struct S2fp8SrCodec {
+    pub seed: u64,
+}
+
+impl Default for S2fp8SrCodec {
+    fn default() -> Self {
+        S2fp8SrCodec { seed: 0x5EED_2020 }
+    }
+}
+
+/// Uniform in [0, 1) from a splitmix64-style finalizer over (seed, index).
+#[inline]
+fn sr_u01(seed: u64, i: u64) -> f32 {
+    let mut z = seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    ((z >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+}
+
+impl Codec for S2fp8SrCodec {
+    fn kind(&self) -> FormatKind {
+        FormatKind::S2fp8Sr
+    }
+
+    fn truncate(&self, _x: f32) -> Option<f32> {
+        None // needs per-tensor statistics (and an element index)
+    }
+
+    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
+        let c = s2fp8::S2fp8Codec::fit(xs);
+        let seed = self.seed;
+        let payload = encode_chunked(xs, 1, &|base, ch, o| {
+            for (i, (x, b)) in ch.iter().zip(o.iter_mut()).enumerate() {
+                let u = sr_u01(seed, (base + i) as u64);
+                *b = fp8::encode(fp8::truncate_stochastic(c.squeeze(*x), u));
+            }
+        });
+        QuantizedTensor::flat(FormatKind::S2fp8Sr, xs.len(), payload, Some((c.alpha, c.beta)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg32, Rng};
+
+    fn lognormal(n: usize, mu: f32, sigma: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed, 0);
+        (0..n)
+            .map(|_| {
+                rng.next_lognormal(mu, sigma) * if rng.next_f32() < 0.5 { -1.0 } else { 1.0 }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_codec_reports_its_kind_and_payload_width() {
+        for &kind in FormatKind::all() {
+            let c = kind.codec();
+            assert_eq!(c.kind(), kind);
+            let qt = c.encode(&[1.0, -2.0, 0.5]);
+            assert_eq!(qt.kind(), kind);
+            assert_eq!(qt.payload().len(), 3 * (kind.bits() as usize / 8), "{}", kind.name());
+            assert_eq!(qt.len(), 3);
+            assert_eq!(qt.shape(), &[3]);
+            assert_eq!(qt.s2_params().is_some(), kind.uses_tensor_stats());
+        }
+    }
+
+    #[test]
+    fn fp32_codec_is_bit_exact() {
+        let xs = vec![0.0f32, -0.0, 1.5, -3.25e-30, f32::NAN, f32::INFINITY, f32::MIN_POSITIVE];
+        let c = FormatKind::Fp32.codec();
+        let qt = c.encode(&xs);
+        let back = c.decode(&qt).unwrap();
+        for (a, b) in xs.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_into_reuses_the_buffer() {
+        let xs = lognormal(1000, -3.0, 2.0, 9);
+        let c = FormatKind::S2fp8.codec();
+        let qt = c.encode(&xs);
+        let mut buf = vec![7.0f32; 5000]; // stale, oversized
+        c.decode_into(&qt, &mut buf).unwrap();
+        assert_eq!(buf.len(), 1000);
+        assert_eq!(buf, c.decode(&qt).unwrap());
+        // and a second decode into the same buffer is fine
+        c.decode_into(&qt, &mut buf).unwrap();
+        assert_eq!(buf.len(), 1000);
+    }
+
+    #[test]
+    fn wrong_kind_decode_is_an_error_not_a_panic() {
+        let qt = FormatKind::Fp8.codec().encode(&[1.0, 2.0]);
+        let err = FormatKind::Bf16.codec().decode(&qt).unwrap_err();
+        assert_eq!(
+            err,
+            CodecError::WrongKind { tensor: "fp8", codec: "bf16" },
+            "got {err}"
+        );
+    }
+
+    #[test]
+    fn chunk_parallel_encode_matches_sequential() {
+        // Above the parallel threshold, results must equal a sequential
+        // re-encode of the same data (fp8 + both s2fp8 variants).
+        let xs = lognormal((PAR_MIN_ELEMS * 3) + 17, -6.0, 4.0, 4);
+        for &kind in &[FormatKind::Fp8, FormatKind::S2fp8, FormatKind::S2fp8Sr] {
+            let qt = kind.codec().encode(&xs);
+            // sequential reference via 1-chunk encode on slices below the
+            // threshold, stitched together
+            match kind {
+                FormatKind::Fp8 => {
+                    for (i, &x) in xs.iter().enumerate() {
+                        assert_eq!(qt.payload()[i], fp8::encode_fast(x), "elem {i}");
+                    }
+                }
+                FormatKind::S2fp8 | FormatKind::S2fp8Sr => {
+                    let c = s2fp8::S2fp8Codec::fit(&xs);
+                    let (alpha, beta) = qt.s2_params().unwrap();
+                    assert_eq!((alpha, beta), (c.alpha, c.beta));
+                    for (i, &x) in xs.iter().enumerate() {
+                        let want = if kind == FormatKind::S2fp8 {
+                            fp8::encode_fast(c.squeeze(x))
+                        } else {
+                            let u = sr_u01(0x5EED_2020, i as u64);
+                            fp8::encode(fp8::truncate_stochastic(c.squeeze(x), u))
+                        };
+                        assert_eq!(qt.payload()[i], want, "{} elem {i}", kind.name());
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn sr_codec_is_deterministic_and_lands_on_neighbours() {
+        let xs = lognormal(4096, -2.0, 2.0, 11);
+        let c = FormatKind::S2fp8Sr.codec();
+        let a = c.encode(&xs);
+        let b = c.encode(&xs);
+        assert_eq!(a, b, "SR encode must be reproducible");
+        // SR rounds the squeezed value to one of its two neighbouring grid
+        // points, RNE to the nearest: the chosen FP8 codes can differ by
+        // at most one magnitude step, and never in sign. (FP8 code bytes
+        // order magnitudes monotonically within a sign, so "one grid step"
+        // is exactly "adjacent code integers".)
+        let qr = FormatKind::S2fp8.codec().encode(&xs);
+        assert_eq!(a.s2_params(), qr.s2_params(), "same fitted α/β");
+        let mut moved = 0usize;
+        for (i, (ca, cr)) in a.payload().iter().zip(qr.payload().iter()).enumerate() {
+            assert_eq!(ca & 0x80, cr & 0x80, "elem {i}: sign changed");
+            let (ma, mr) = ((ca & 0x7F) as i32, (cr & 0x7F) as i32);
+            assert!((ma - mr).abs() <= 1, "elem {i}: SR code {ca:#04x} vs RNE {cr:#04x}");
+            if ma != mr {
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "stochastic rounding never deviated from RNE on 4096 samples");
+    }
+
+    #[test]
+    fn framing_roundtrip_and_rejections() {
+        let xs = lognormal(257, -10.0, 3.0, 5);
+        let qt = FormatKind::S2fp8
+            .codec()
+            .encode(&xs)
+            .reshape(vec![257, 1])
+            .unwrap();
+        let bytes = qt.to_bytes();
+        assert_eq!(QuantizedTensor::from_bytes(&bytes).unwrap(), qt);
+
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert_eq!(QuantizedTensor::from_bytes(&bad).unwrap_err(), CodecError::BadMagic);
+
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert_eq!(
+            QuantizedTensor::from_bytes(&bad).unwrap_err(),
+            CodecError::UnsupportedVersion(99)
+        );
+
+        let mut bad = bytes.clone();
+        bad[5] = 0xEE;
+        assert_eq!(QuantizedTensor::from_bytes(&bad).unwrap_err(), CodecError::UnknownTag(0xEE));
+
+        assert!(matches!(
+            QuantizedTensor::from_bytes(&bytes[..bytes.len() - 3]).unwrap_err(),
+            CodecError::Truncated { .. }
+        ));
+
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert_eq!(
+            QuantizedTensor::from_bytes(&trailing).unwrap_err(),
+            CodecError::TrailingBytes(1)
+        );
+    }
+
+    #[test]
+    fn from_parts_validates_invariants() {
+        // payload length must match shape × bytes/element
+        assert!(matches!(
+            QuantizedTensor::from_parts(FormatKind::Fp8, vec![4], vec![0u8; 3], None),
+            Err(CodecError::PayloadMismatch { .. })
+        ));
+        // s2fp8 requires α/β …
+        assert!(matches!(
+            QuantizedTensor::from_parts(FormatKind::S2fp8, vec![2], vec![0u8; 2], None),
+            Err(CodecError::BadStats(_))
+        ));
+        // … and element-wise formats must not carry them
+        assert!(matches!(
+            QuantizedTensor::from_parts(FormatKind::Fp16, vec![1], vec![0u8; 2], Some((1.0, 0.0))),
+            Err(CodecError::BadStats(_))
+        ));
+        // empty tensors are fine
+        let qt = QuantizedTensor::from_parts(FormatKind::Bf16, vec![0], vec![], None).unwrap();
+        assert!(qt.is_empty());
+        assert!(qt.decode().is_empty());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let qt = FormatKind::Fp16.codec().encode(&[1.0; 6]).reshape(vec![2, 3]).unwrap();
+        assert_eq!(qt.shape(), &[2, 3]);
+        assert!(matches!(
+            qt.reshape(vec![4, 2]),
+            Err(CodecError::ShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn stored_bytes_reflect_true_packing() {
+        let xs = lognormal(1000, -6.0, 3.0, 3);
+        assert_eq!(FormatKind::Fp32.codec().encode(&xs).stored_bytes(), 4000);
+        assert_eq!(FormatKind::Bf16.codec().encode(&xs).stored_bytes(), 2000);
+        assert_eq!(FormatKind::Fp8E4m3.codec().encode(&xs).stored_bytes(), 1000);
+        assert_eq!(FormatKind::S2fp8.codec().encode(&xs).stored_bytes(), 1008); // + α,β
+    }
+}

@@ -1,0 +1,237 @@
+//! FP8 **E4M3**: 1 sign bit, 4 exponent bits (bias 7), 3 mantissa bits —
+//! the second format of the FP8 pair standardized by Micikevicius et al.
+//! (*FP8 Formats for Deep Learning*, 2022) and adopted by OCP. Where E5M2
+//! ([`super::fp8`]) spends bits on range, E4M3 spends them on precision:
+//! one extra mantissa bit (ε = 2^-4 vs 2^-3) against a far narrower
+//! window (`2^-9 ..= 448` vs `2^-16 ..= 57344`).
+//!
+//! Layout of a code byte: `s eeee mmm`.
+//!
+//! * exponent field 1..=15 → normal: `(1 + m/8) · 2^(e-7)`, except the
+//!   all-ones pattern `S.1111.111` which is NaN (E4M3 has **no
+//!   infinities** — the standard reclaims them for one extra binade, so
+//!   the top exponent runs to `(1 + 6/8)·2^8 = 448`).
+//! * exponent field 0 → denormal: `(m/8) · 2^-6`, multiples of `2^-9`.
+//!
+//! Truncation semantics match the rest of the zoo (`fp8`, `fp16`): RNE,
+//! saturation to ±448 above the max normal (E4M3 has no ±Inf to overflow
+//! to, so saturation is what the standard's conversions do anyway), NaN
+//! propagation, exact ±0.
+
+/// Exponent bias.
+pub const BIAS: i32 = 7;
+/// Number of mantissa bits.
+pub const MANT_BITS: u32 = 3;
+/// Smallest positive (denormal) value, `2^-9`.
+pub const MIN_POSITIVE: f32 = 1.0 / 512.0;
+/// Smallest positive normal value, `2^-6`.
+pub const MIN_NORMAL: f32 = 1.0 / 64.0;
+/// Largest finite value, `(1 + 6/8) · 2^8` (the `m = 7` slot is NaN).
+pub const MAX_NORMAL: f32 = 448.0;
+/// Machine epsilon, `2^-4` (max relative RNE error, Table A1 convention).
+pub const EPSILON: f32 = 0.0625;
+/// The quiet-NaN code (`0 1111 111`).
+pub const CODE_NAN: u8 = 0x7F;
+
+/// Exact `2^e` as f32 for exponents in normal f32 range.
+#[inline]
+fn exp2i(e: i32) -> f32 {
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// Decode an FP8 E4M3 byte to the exact f32 it denotes.
+#[inline]
+pub fn decode(code: u8) -> f32 {
+    let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((code >> MANT_BITS) & 0x0F) as i32;
+    let m = (code & 0x07) as f32;
+    if code & 0x7F == CODE_NAN {
+        return f32::NAN;
+    }
+    match e {
+        0 => sign * (m / 8.0) * MIN_NORMAL, // denormal (incl. ±0)
+        _ => sign * (1.0 + m / 8.0) * exp2i(e - BIAS),
+    }
+}
+
+/// Encode an f32 into the nearest E4M3 code (RNE, saturating to ±448;
+/// NaN → [`CODE_NAN`] with sign dropped).
+#[inline]
+pub fn encode(x: f32) -> u8 {
+    if x.is_nan() {
+        return CODE_NAN;
+    }
+    let sign = ((x.to_bits() >> 31) as u8) << 7;
+    let abs = x.abs();
+    if abs > MAX_NORMAL {
+        return sign | 0x7E; // saturate (Inf included; E4M3 has no Inf code)
+    }
+    if abs < MIN_POSITIVE / 2.0 {
+        return sign; // below the even-tie at 2^-10 everything rounds to ±0
+    }
+    // Round onto the E4M3 grid with exact f32 arithmetic (|x| ≥ 2^-10 is
+    // far above f32's subnormal range, so the exponent bits are usable).
+    let e = ((abs.to_bits() >> 23) & 0xFF) as i32 - 127;
+    let eff = e.max(-(BIAS - 1)); // clamp to min normal exponent −6
+    let scale = exp2i(eff - MANT_BITS as i32); // grid step, ≥ 2^-9
+    let y = (abs / scale).round_ties_even() * scale;
+    if y == 0.0 {
+        return sign; // tie at 2^-10 rounds to even (0)
+    }
+    if y > MAX_NORMAL {
+        return sign | 0x7E;
+    }
+    let yb = y.to_bits();
+    let ye = ((yb >> 23) & 0xFF) as i32 - 127;
+    if ye < -(BIAS - 1) {
+        // denormal: y = m/8 · 2^-6 with m in 1..=7
+        let m = (y / MIN_POSITIVE).round() as u8;
+        sign | m
+    } else {
+        let e_field = (ye + BIAS) as u8; // 1..=15
+        let m = ((yb >> (23 - MANT_BITS)) & 0x07) as u8;
+        sign | (e_field << MANT_BITS) | m
+    }
+}
+
+/// 256-entry decode lookup table (hot decode path).
+#[inline]
+pub fn decode_lut(code: u8) -> f32 {
+    static LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0.0f32; 256];
+        for (c, slot) in t.iter_mut().enumerate() {
+            *slot = decode(c as u8);
+        }
+        t
+    })[code as usize]
+}
+
+/// Truncate to E4M3 precision: `decode(encode(x))` (RNE, saturating).
+#[inline]
+pub fn truncate(x: f32) -> f32 {
+    decode_lut(encode(x))
+}
+
+/// Every *finite* representable value, ascending (format introspection).
+pub fn all_finite_values() -> Vec<f32> {
+    let mut vals: Vec<f32> = (0u16..=255)
+        .map(|c| decode(c as u8))
+        .filter(|v| v.is_finite())
+        .collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.dedup(); // +0 and −0 collapse
+    vals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_known_codes() {
+        assert_eq!(decode(0x00), 0.0);
+        assert_eq!(decode(0x80), 0.0);
+        assert!(decode(0x80).is_sign_negative());
+        assert_eq!(decode(0x01), MIN_POSITIVE); // 2^-9
+        assert_eq!(decode(0x07), 7.0 * MIN_POSITIVE);
+        assert_eq!(decode(0x08), MIN_NORMAL); // e=1, m=0 → 2^-6
+        assert_eq!(decode(0b0_0111_000), 1.0);
+        assert_eq!(decode(0b0_0111_010), 1.25);
+        assert_eq!(decode(0x7E), MAX_NORMAL);
+        assert_eq!(decode(0xFE), -MAX_NORMAL);
+        assert!(decode(CODE_NAN).is_nan());
+        assert!(decode(0xFF).is_nan()); // sign bit does not rescue NaN
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_codes() {
+        for c in 0u16..=255 {
+            let c = c as u8;
+            let v = decode(c);
+            if v.is_nan() {
+                assert_eq!(encode(v), CODE_NAN);
+                continue;
+            }
+            let back = encode(v);
+            assert_eq!(decode(back), v, "code {c:#04x} value {v} → {back:#04x}");
+            if v == 0.0 {
+                assert_eq!(back & 0x80, c & 0x80); // sign of zero preserved
+            } else {
+                assert_eq!(back, c, "code {c:#04x} should re-encode to itself");
+            }
+        }
+    }
+
+    #[test]
+    fn value_count_and_ordering() {
+        let vals = all_finite_values();
+        // 2 signs × (14 full binades × 8 + 7 top-binade + 7 denormals) + zero
+        assert_eq!(vals.len(), 2 * (14 * 8 + 7 + 7) + 1);
+        assert_eq!(*vals.first().unwrap(), -MAX_NORMAL);
+        assert_eq!(*vals.last().unwrap(), MAX_NORMAL);
+        for w in vals.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn truncate_rne_and_examples() {
+        assert_eq!(truncate(1.3), 1.25);
+        assert_eq!(truncate(3.14159), 3.25);
+        // midpoint 1.0625 between 1.0 (even) and 1.125 → 1.0
+        assert_eq!(truncate(1.0625), 1.0);
+        // midpoint 1.1875 between 1.125 and 1.25 (even) → 1.25
+        assert_eq!(truncate(1.1875), 1.25);
+        assert_eq!(truncate(0.4375), 0.4375); // exactly representable
+    }
+
+    #[test]
+    fn saturation_no_inf_and_nan() {
+        assert_eq!(truncate(449.0), MAX_NORMAL);
+        assert_eq!(truncate(1e9), MAX_NORMAL);
+        assert_eq!(truncate(f32::INFINITY), MAX_NORMAL);
+        assert_eq!(truncate(f32::NEG_INFINITY), -MAX_NORMAL);
+        assert!(truncate(f32::NAN).is_nan());
+        // 448..464 rounds back down to 448 (the NaN slot is never produced)
+        assert_eq!(truncate(460.0), MAX_NORMAL);
+    }
+
+    #[test]
+    fn underflow_denormals_and_signed_zero() {
+        assert_eq!(truncate(MIN_POSITIVE), MIN_POSITIVE);
+        assert_eq!(truncate(MIN_POSITIVE / 2.0), 0.0); // tie to even → 0
+        assert_eq!(truncate(MIN_POSITIVE * 0.51), MIN_POSITIVE);
+        assert_eq!(truncate(2.6 * MIN_POSITIVE), 3.0 * MIN_POSITIVE);
+        assert_eq!(truncate(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(truncate(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn epsilon_bound_and_monotonicity() {
+        let mut prev = f32::NEG_INFINITY;
+        let mut x = 1e-4f32;
+        while x < 500.0 {
+            let y = truncate(x);
+            if (MIN_NORMAL..=MAX_NORMAL).contains(&x) {
+                assert!((y - x).abs() / x <= EPSILON + 1e-7, "rel err at {x} → {y}");
+            }
+            assert!(y >= prev, "non-monotone at {x}: {y} < {prev}");
+            prev = y;
+            x *= 1.0173;
+        }
+    }
+
+    #[test]
+    fn decode_lut_matches_decode() {
+        for c in 0u16..=255 {
+            let c = c as u8;
+            let (a, b) = (decode(c), decode_lut(c));
+            if a.is_nan() {
+                assert!(b.is_nan());
+            } else {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+}

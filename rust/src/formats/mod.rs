@@ -1,25 +1,39 @@
-//! Software implementations of the numeric formats studied by the paper.
+//! Software implementations of the numeric formats studied by the paper,
+//! unified behind one packed-tensor codec API.
 //!
-//! * [`fp8`] — IEEE-like FP8 **E5M2** (1 sign / 5 exponent / 2 mantissa,
-//!   bias 15), the paper's FP8: bit-exact encode/decode, round-to-nearest-
-//!   even truncation (paper §4.1), stochastic-rounding truncation
-//!   (the Wang et al. / Mellempudi et al. baseline), saturation semantics.
+//! * [`codec`] — **the format currency**: the [`Codec`] trait
+//!   (`encode`/`decode`/`decode_into`, chunk-parallel for large tensors)
+//!   and [`QuantizedTensor`], a tensor packed into its true byte
+//!   representation (1 byte/element for the FP8 family and S2FP8, 2 for
+//!   FP16/BF16) with per-tensor (α, β) where needed and a versioned
+//!   on-disk framing. Checkpoints, the serving weight store and the
+//!   format benches all trade in this type.
+//! * [`fp8`] — IEEE-like FP8 **E5M2** (1/5/2, bias 15), the paper's FP8:
+//!   bit-exact encode/decode, round-to-nearest-even truncation (paper
+//!   §4.1), stochastic-rounding truncation (the Wang et al. /
+//!   Mellempudi et al. baseline), saturation semantics.
+//! * [`fp8e4m3`] — FP8 **E4M3** (1/4/3, bias 7, no infinities), the
+//!   precision-heavy half of the standardized FP8 pair (Micikevicius
+//!   et al., *FP8 Formats for Deep Learning*).
 //! * [`s2fp8`] — the paper's contribution: the Shifted-and-Squeezed
 //!   transform (Eq. 1–5). Statistics (μ, m), factors (α, β), tensor
-//!   round-trip truncation, and a packed compressed representation
-//!   (N bytes + 2 f32 statistics) for checkpoint/memory use.
+//!   round-trip truncation, and packed compression via the codec layer.
 //! * [`bf16`] / [`fp16`] — the 16-bit comparison points of Tables A1/A2.
-//! * [`traits`] — the [`traits::NumericFormat`] abstraction shared by the
-//!   analysis and bench code.
+//! * [`traits`] — [`FormatKind`] (names, config/CLI parsing, storage
+//!   width, [`FormatKind::codec`]) and the static [`NumericFormat`]
+//!   metadata behind Table A1.
 //! * [`analysis`] — format introspection: Table A1 rows, Fig. A1 binade
-//!   densities, quantization-error measurement, and the §5 hardware cost
-//!   model.
+//!   densities, quantization-error measurement, generic multi-format
+//!   codec sweeps, and the §5 hardware cost model.
 
 pub mod analysis;
 pub mod bf16;
+pub mod codec;
 pub mod fp16;
 pub mod fp8;
+pub mod fp8e4m3;
 pub mod s2fp8;
 pub mod traits;
 
+pub use codec::{Codec, CodecError, QuantizedTensor};
 pub use traits::{FormatKind, NumericFormat};

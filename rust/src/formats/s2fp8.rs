@@ -28,9 +28,12 @@
 //! ```
 //!
 //! [`S2fp8Codec`] holds fitted statistics; [`compress`]/[`decompress`] give
-//! the packed byte representation (used for checkpoint compression,
-//! demonstrating the paper's 4× memory claim).
+//! the packed byte representation as a [`QuantizedTensor`] (one FP8 code
+//! byte per element + the two statistics — the storage format behind the
+//! paper's 4× memory claim, shared with checkpoints and serving through
+//! [`super::codec`]).
 
+use super::codec::{Codec, CodecError, QuantizedTensor, S2fp8RneCodec};
 use super::fp8;
 
 /// Tensor statistics of Eq. 3 (computed over non-zero elements).
@@ -170,24 +173,22 @@ pub fn truncate_tensor_inplace(xs: &mut [f32]) -> S2fp8Codec {
     codec
 }
 
-/// Packed S2FP8 tensor: N FP8 codes + the two statistics — the storage
-/// format of paper Fig. 2 (8 bits/element + O(1) overhead).
-#[derive(Debug, Clone, PartialEq)]
-pub struct Compressed {
-    pub codec: S2fp8Codec,
-    pub codes: Vec<u8>,
+/// Compress a tensor to packed S2FP8 (fit + squeeze + FP8-encode): one
+/// code byte per element plus (α, β) — the storage format of paper Fig. 2
+/// (8 bits/element + O(1) overhead). Convenience for
+/// `FormatKind::S2fp8.codec().encode(xs)`.
+pub fn compress(xs: &[f32]) -> QuantizedTensor {
+    S2fp8RneCodec.encode(xs)
 }
 
-/// Compress a tensor to S2FP8 (fit + squeeze + FP8-encode).
-pub fn compress(xs: &[f32]) -> Compressed {
-    let codec = S2fp8Codec::fit(xs);
-    let codes = xs.iter().map(|&x| fp8::encode(codec.squeeze(x))).collect();
-    Compressed { codec, codes }
-}
-
-/// Decompress back to f32 (FP8-decode + unsqueeze).
-pub fn decompress(c: &Compressed) -> Vec<f32> {
-    c.codes.iter().map(|&b| c.codec.unsqueeze(fp8::decode(b))).collect()
+/// Decompress a packed S2FP8 tensor back to f32 (FP8-decode + unsqueeze).
+/// Rejects tensors packed by a different format instead of misreading
+/// their bytes.
+pub fn decompress(qt: &QuantizedTensor) -> Result<Vec<f32>, CodecError> {
+    if !qt.kind().uses_tensor_stats() {
+        return Err(CodecError::WrongKind { tensor: qt.kind().name(), codec: "s2fp8" });
+    }
+    Ok(qt.decode())
 }
 
 #[inline]
@@ -346,11 +347,19 @@ mod tests {
             .map(|_| rng.next_lognormal(-12.0, 3.0) * if rng.next_f32() < 0.5 { -1.0 } else { 1.0 })
             .collect();
         let c = compress(&xs);
-        assert_eq!(c.codes.len(), xs.len()); // 1 byte per element (4× vs f32)
-        let back = decompress(&c);
+        assert_eq!(c.payload().len(), xs.len()); // 1 byte per element (4× vs f32)
+        assert!(c.s2_params().is_some());
+        let back = decompress(&c).unwrap();
         for (a, b) in xs.iter().zip(back.iter()) {
             assert!(rel_err(*a, *b) < 0.15, "{a} → {b}");
         }
+    }
+
+    #[test]
+    fn decompress_rejects_foreign_payloads() {
+        use crate::formats::FormatKind;
+        let qt = FormatKind::Fp8.codec().encode(&[1.0, 2.0]);
+        assert!(decompress(&qt).is_err());
     }
 
     #[test]

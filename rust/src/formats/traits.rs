@@ -1,16 +1,31 @@
-//! The [`NumericFormat`] abstraction tying the format zoo together for the
-//! analysis/bench code (Table A1, Fig. A1, error sweeps).
+//! [`FormatKind`] — the name of every format in the zoo, and the place the
+//! zoo is tied together: each kind parses from config/CLI strings, reports
+//! its storage width, and hands out its [`Codec`] for packed encode/decode.
+//! [`NumericFormat`] carries the static Table A1 metadata.
 
-use super::{bf16, fp16, fp8, s2fp8};
+use super::codec::{
+    Bf16Codec, Codec, Fp16Codec, Fp32Codec, Fp8E4m3Codec, Fp8E5m2Codec, S2fp8RneCodec,
+    S2fp8SrCodec,
+};
+use super::{bf16, fp16, fp8, fp8e4m3, s2fp8};
 
-/// Which format (paper Table A1 + S2FP8).
+/// Which format (paper Table A1 + the S2FP8 family + the E4M3 half of the
+/// standardized FP8 pair).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FormatKind {
     Fp32,
     Fp16,
     Bf16,
+    /// FP8 E5M2 (1/5/2) — the paper's FP8.
     Fp8,
+    /// FP8 E4M3 (1/4/3) — Micikevicius et al., *FP8 Formats for Deep
+    /// Learning*.
+    Fp8E4m3,
+    /// The paper's Shifted-and-Squeezed FP8 (per-tensor α/β + E5M2 codes).
     S2fp8,
+    /// S2FP8 with stochastic rounding in the squeezed domain (the
+    /// Wang et al. 2018 rounding regime as a pluggable variant).
+    S2fp8Sr,
 }
 
 impl FormatKind {
@@ -20,7 +35,9 @@ impl FormatKind {
             FormatKind::Fp16 => "fp16",
             FormatKind::Bf16 => "bf16",
             FormatKind::Fp8 => "fp8",
+            FormatKind::Fp8E4m3 => "fp8-e4m3",
             FormatKind::S2fp8 => "s2fp8",
+            FormatKind::S2fp8Sr => "s2fp8-sr",
         }
     }
 
@@ -29,35 +46,89 @@ impl FormatKind {
             "fp32" | "f32" => Some(FormatKind::Fp32),
             "fp16" | "f16" => Some(FormatKind::Fp16),
             "bf16" => Some(FormatKind::Bf16),
-            "fp8" | "f8" | "e5m2" => Some(FormatKind::Fp8),
+            "fp8" | "f8" | "e5m2" | "fp8-e5m2" | "fp8e5m2" => Some(FormatKind::Fp8),
+            "e4m3" | "fp8-e4m3" | "fp8e4m3" => Some(FormatKind::Fp8E4m3),
             "s2fp8" => Some(FormatKind::S2fp8),
+            "s2fp8-sr" | "s2fp8sr" => Some(FormatKind::S2fp8Sr),
             _ => None,
         }
     }
 
-    /// All element-wise formats (S2FP8 needs per-tensor statistics, so it
-    /// participates through [`truncate_tensor`] instead).
-    pub fn elementwise() -> &'static [FormatKind] {
-        &[FormatKind::Fp32, FormatKind::Fp16, FormatKind::Bf16, FormatKind::Fp8]
+    /// Every format, in Table A1 order then the S2FP8 family — the sweep
+    /// set for the codec benches and property tests.
+    pub fn all() -> &'static [FormatKind] {
+        &[
+            FormatKind::Fp32,
+            FormatKind::Fp16,
+            FormatKind::Bf16,
+            FormatKind::Fp8,
+            FormatKind::Fp8E4m3,
+            FormatKind::S2fp8,
+            FormatKind::S2fp8Sr,
+        ]
     }
 
-    /// Element-wise truncation (identity for FP32; panics for S2FP8 —
-    /// use [`truncate_tensor`]).
-    pub fn truncate(&self, x: f32) -> f32 {
+    /// All element-wise formats (the S2FP8 family needs per-tensor
+    /// statistics, so it participates through [`FormatKind::codec`] /
+    /// [`FormatKind::truncate_tensor`] instead).
+    pub fn elementwise() -> &'static [FormatKind] {
+        &[
+            FormatKind::Fp32,
+            FormatKind::Fp16,
+            FormatKind::Bf16,
+            FormatKind::Fp8,
+            FormatKind::Fp8E4m3,
+        ]
+    }
+
+    /// True for formats whose encoding carries fitted per-tensor (α, β).
+    pub fn uses_tensor_stats(&self) -> bool {
+        matches!(self, FormatKind::S2fp8 | FormatKind::S2fp8Sr)
+    }
+
+    /// The packed-tensor codec for this format.
+    pub fn codec(&self) -> Box<dyn Codec> {
         match self {
-            FormatKind::Fp32 => x,
-            FormatKind::Fp16 => fp16::truncate(x),
-            FormatKind::Bf16 => bf16::truncate(x),
-            FormatKind::Fp8 => fp8::truncate(x),
-            FormatKind::S2fp8 => panic!("S2FP8 is a tensor format; use truncate_tensor"),
+            FormatKind::Fp32 => Box::new(Fp32Codec),
+            FormatKind::Fp16 => Box::new(Fp16Codec),
+            FormatKind::Bf16 => Box::new(Bf16Codec),
+            FormatKind::Fp8 => Box::new(Fp8E5m2Codec),
+            FormatKind::Fp8E4m3 => Box::new(Fp8E4m3Codec),
+            FormatKind::S2fp8 => Box::new(S2fp8RneCodec),
+            FormatKind::S2fp8Sr => Box::new(S2fp8SrCodec::default()),
         }
     }
 
-    /// Tensor truncation (fits α/β for S2FP8; element-wise otherwise).
+    /// Element-wise truncation (identity for FP32). `None` for the S2FP8
+    /// family, which has no element-wise form — use
+    /// [`FormatKind::truncate_tensor`] or the codec. Never panics.
+    pub fn truncate(&self, x: f32) -> Option<f32> {
+        match self {
+            FormatKind::Fp32 => Some(x),
+            FormatKind::Fp16 => Some(fp16::truncate(x)),
+            FormatKind::Bf16 => Some(bf16::truncate(x)),
+            FormatKind::Fp8 => Some(fp8::truncate(x)),
+            FormatKind::Fp8E4m3 => Some(fp8e4m3::truncate(x)),
+            FormatKind::S2fp8 | FormatKind::S2fp8Sr => None,
+        }
+    }
+
+    /// Tensor truncation: round-trip a tensor through the format (fits
+    /// α/β for the S2FP8 family; element-wise otherwise). Bitwise
+    /// equivalent to `decode(encode(xs))` through [`FormatKind::codec`]
+    /// for every kind (pinned by `tests/prop_formats.rs`).
     pub fn truncate_tensor(&self, xs: &[f32]) -> Vec<f32> {
         match self {
             FormatKind::S2fp8 => s2fp8::truncate_tensor(xs).0,
-            _ => xs.iter().map(|&x| self.truncate(x)).collect(),
+            FormatKind::S2fp8Sr => {
+                let c = self.codec();
+                let qt = c.encode(xs);
+                c.decode(&qt).expect("codec decodes its own encoding")
+            }
+            _ => xs
+                .iter()
+                .map(|&x| self.truncate(x).expect("element-wise format"))
+                .collect(),
         }
     }
 
@@ -66,7 +137,7 @@ impl FormatKind {
         match self {
             FormatKind::Fp32 => 32,
             FormatKind::Fp16 | FormatKind::Bf16 => 16,
-            FormatKind::Fp8 | FormatKind::S2fp8 => 8,
+            FormatKind::Fp8 | FormatKind::Fp8E4m3 | FormatKind::S2fp8 | FormatKind::S2fp8Sr => 8,
         }
     }
 }
@@ -147,6 +218,18 @@ impl NumericFormat {
                 max_normal: fp8::MAX_NORMAL as f64,
                 epsilon: 2f64.powi(-3),
             },
+            NumericFormat {
+                kind: FormatKind::Fp8E4m3,
+                name: "FP8-E4M3",
+                bits: 8,
+                sign_bits: 1,
+                exp_bits: 4,
+                mant_bits: 3,
+                min_subnormal: 2f64.powi(-9),
+                min_normal: 2f64.powi(-6),
+                max_normal: fp8e4m3::MAX_NORMAL as f64,
+                epsilon: 2f64.powi(-4),
+            },
         ]
     }
 }
@@ -160,26 +243,42 @@ mod tests {
         assert_eq!(FormatKind::parse("s2fp8"), Some(FormatKind::S2fp8));
         assert_eq!(FormatKind::parse("FP8"), Some(FormatKind::Fp8));
         assert_eq!(FormatKind::parse("e5m2"), Some(FormatKind::Fp8));
+        assert_eq!(FormatKind::parse("e4m3"), Some(FormatKind::Fp8E4m3));
+        assert_eq!(FormatKind::parse("FP8-E4M3"), Some(FormatKind::Fp8E4m3));
+        assert_eq!(FormatKind::parse("s2fp8-sr"), Some(FormatKind::S2fp8Sr));
         assert_eq!(FormatKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn names_roundtrip_through_parse() {
+        for &kind in FormatKind::all() {
+            assert_eq!(FormatKind::parse(kind.name()), Some(kind), "{}", kind.name());
+        }
     }
 
     #[test]
     fn table_a1_ranges_match_paper() {
         // Paper Table A1 "Range" column: FP32→2^277, FP16→2^40, BF16→2^261,
-        // FP8→2^32 (log2(max_normal / min_subnormal), rounded).
+        // FP8→2^32 (log2(max_normal / min_subnormal), rounded). E4M3 is not
+        // in the paper; its range follows from the OCP definition.
         let by_name: std::collections::HashMap<_, _> =
             NumericFormat::all().into_iter().map(|f| (f.name, f)).collect();
         assert_eq!(by_name["IEEE-FP32"].log2_range().round() as i32, 277);
         assert_eq!(by_name["IEEE-FP16"].log2_range().round() as i32, 40);
         assert_eq!(by_name["BF16"].log2_range().round() as i32, 261);
         assert_eq!(by_name["FP8"].log2_range().round() as i32, 32);
+        assert_eq!(by_name["FP8-E4M3"].log2_range().round() as i32, 18);
     }
 
     #[test]
     fn elementwise_truncation_dispatch() {
-        assert_eq!(FormatKind::Fp32.truncate(1.2345), 1.2345);
-        assert_eq!(FormatKind::Fp8.truncate(1.3), 1.25);
-        assert_eq!(FormatKind::Bf16.truncate(1.0), 1.0);
+        assert_eq!(FormatKind::Fp32.truncate(1.2345), Some(1.2345));
+        assert_eq!(FormatKind::Fp8.truncate(1.3), Some(1.25));
+        assert_eq!(FormatKind::Fp8E4m3.truncate(1.3), Some(1.25));
+        assert_eq!(FormatKind::Bf16.truncate(1.0), Some(1.0));
+        // the tensor formats have no element-wise form — and no panic
+        assert_eq!(FormatKind::S2fp8.truncate(1.0), None);
+        assert_eq!(FormatKind::S2fp8Sr.truncate(1.0), None);
     }
 
     #[test]
@@ -192,5 +291,23 @@ mod tests {
         // of the tensor must survive (vs 0% under vanilla FP8).
         let survived = s2_out.iter().filter(|&&v| v != 0.0).count();
         assert!(survived * 10 >= s2_out.len() * 8, "S2FP8 preserved only {survived}/99");
+    }
+
+    #[test]
+    fn e4m3_flushes_where_s2fp8_survives() {
+        // ~1e-5-scale magnitudes sit below E4M3's 2^-10 ≈ 9.8e-4 flush
+        // threshold, so vanilla E4M3 zeroes them; S2FP8 recovers them.
+        let xs: Vec<f32> = (1..50).map(|i| i as f32 * 2e-6).collect();
+        let e4 = FormatKind::Fp8E4m3.truncate_tensor(&xs);
+        assert!(e4.iter().all(|&v| v == 0.0), "E4M3 flushes 1e-5-scale tensors");
+        let s2 = FormatKind::S2fp8.truncate_tensor(&xs);
+        assert!(s2.iter().filter(|&&v| v != 0.0).count() * 10 >= s2.len() * 8);
+    }
+
+    #[test]
+    fn every_kind_hands_out_a_matching_codec() {
+        for &kind in FormatKind::all() {
+            assert_eq!(kind.codec().kind(), kind);
+        }
     }
 }

@@ -17,10 +17,27 @@
 //!   harness that regenerates every table and figure of the paper
 //!   ([`coordinator`], [`data`], [`metrics`], [`bench`]).
 //!
-//! The numeric formats themselves (bit-exact FP8 E5M2 with RNE and
-//! stochastic rounding, the S2FP8 shift/squeeze transform, BF16, FP16) are
-//! implemented in [`formats`] and cross-validated bit-for-bit against the
-//! python reference via golden files (see `rust/tests/golden_formats.rs`).
+//! ## Formats: one codec API
+//!
+//! The numeric formats (bit-exact FP8 E5M2 with RNE and stochastic
+//! rounding, FP8 E4M3, the S2FP8 shift/squeeze transform and its
+//! stochastic-rounding variant, BF16, FP16) are implemented in [`formats`]
+//! and cross-validated bit-for-bit against the python reference via golden
+//! files (see `rust/tests/golden_formats.rs`). Every format is exposed
+//! through a single abstraction: [`formats::FormatKind`] names it (and
+//! parses it from config/CLI strings), and [`formats::FormatKind::codec`]
+//! hands out its [`formats::Codec`], which packs tensors into
+//! [`formats::QuantizedTensor`]s — true byte payloads
+//! (1 byte/element for the FP8 family and S2FP8, 2 for FP16/BF16), fitted
+//! per-tensor (α, β) where the format needs them, and a versioned on-disk
+//! framing. Checkpoints ([`coordinator::checkpoint`]), the serving weight
+//! store ([`serve::WeightStore`]) and the analysis/bench sweeps
+//! ([`formats::analysis::codec_sweep`], `benches/perf_codec.rs`) all trade
+//! in this one currency, so adding a format is implementing a codec — not
+//! forking a storage path. Chunk-parallel encode and buffer-reusing
+//! `decode_into` keep both directions at memory bandwidth; nothing in the
+//! public format API panics on valid input (tensor-statistics formats
+//! return `None` from element-wise truncation instead).
 //!
 //! ## Serving
 //!
@@ -40,7 +57,7 @@
 //! ## Quick start
 //!
 //! ```no_run
-//! use s2fp8::formats::{fp8, s2fp8::S2fp8Codec};
+//! use s2fp8::formats::{fp8, s2fp8::S2fp8Codec, FormatKind};
 //!
 //! // Plain FP8 E5M2 truncation (round-to-nearest-even, saturating):
 //! assert_eq!(fp8::truncate(1.3), 1.25);
@@ -53,6 +70,13 @@
 //! for (a, b) in x.iter().zip(y.iter()) {
 //!     assert!((a - b).abs() / a.abs().max(1e-12) < 0.1);
 //! }
+//!
+//! // The same transform as packed storage — 1 byte/element + (α, β),
+//! // the paper's 4× memory claim as an actual byte payload:
+//! let packed = FormatKind::S2fp8.codec().encode(&x);
+//! assert_eq!(packed.payload().len(), x.len());
+//! let restored = packed.decode();
+//! # let _ = restored;
 //! ```
 
 pub mod bench;

@@ -213,7 +213,7 @@ fn cmd_analyze(_args: &[String]) -> Result<()> {
 
 fn cmd_quantize(args: &[String]) -> Result<()> {
     let spec = Command::new("quantize", "inspect format behaviour on concrete values")
-        .opt("format", "s2fp8", "fp8 | s2fp8 | bf16 | fp16")
+        .opt("format", "s2fp8", "fp32 | fp16 | bf16 | fp8 | fp8-e4m3 | s2fp8 | s2fp8-sr")
         .opt_required("values", "comma-separated f32 values (one tensor)");
     let p = handle_help(&spec, spec.parse(args))?;
     let fmt = FormatKind::parse(p.str("format")).context("bad --format")?;
@@ -222,7 +222,7 @@ fn cmd_quantize(args: &[String]) -> Result<()> {
         .split(',')
         .map(|s| s.trim().parse::<f32>().map_err(|e| anyhow::anyhow!("'{s}': {e}")))
         .collect::<Result<_>>()?;
-    if fmt == FormatKind::S2fp8 {
+    if fmt.uses_tensor_stats() {
         let stats = s2::stats(&xs);
         let codec = s2::S2fp8Codec::fit(&xs);
         if let Some(st) = stats {
@@ -230,6 +230,14 @@ fn cmd_quantize(args: &[String]) -> Result<()> {
         }
         println!("α = {:.4}  β = {:.4}", codec.alpha, codec.beta);
     }
+    let packed = fmt.codec().encode(&xs);
+    println!(
+        "packed: {} elements → {} bytes ({} B/element{})",
+        xs.len(),
+        packed.stored_bytes(),
+        fmt.bits() / 8,
+        if fmt.uses_tensor_stats() { " + 8 B of α/β" } else { "" },
+    );
     let out = fmt.truncate_tensor(&xs);
     let mut t =
         Table::new(&format!("{} round-trip", fmt.name()), &["input", "output", "rel err"]);

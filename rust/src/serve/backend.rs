@@ -176,8 +176,10 @@ pub struct RuntimeBackend {
 
 impl RuntimeBackend {
     /// Parse the artifact's manifest (no compile yet) and check every
-    /// persistent input resolves — by name and shape — against the weight
-    /// store. This decodes exactly the tensors this executable binds.
+    /// persistent input resolves — by name, shape and dtype — against the
+    /// weight store's *metadata*: nothing is decoded here. The packed
+    /// payloads decode lazily (once, shared) when the first worker binds
+    /// them in [`Backend::make_runner`].
     pub fn new(
         dir: impl Into<PathBuf>,
         artifact: &str,
@@ -191,15 +193,18 @@ impl RuntimeBackend {
         for (i, spec) in man.inputs.iter().enumerate() {
             match spec.role {
                 Role::Param | Role::State => {
-                    let w = weights
-                        .get(&spec.name)
-                        .with_context(|| format!("binding {artifact} input '{}'", spec.name))?;
-                    if w.shape() != spec.shape.as_slice() || w.dtype() != spec.dtype {
+                    let (shape, dtype) = weights.spec_of(&spec.name).with_context(|| {
+                        format!(
+                            "binding {artifact} input '{}': not in checkpoint {}",
+                            spec.name, weights.source
+                        )
+                    })?;
+                    if shape != spec.shape.as_slice() || dtype != spec.dtype {
                         bail!(
                             "checkpoint tensor '{}' is {:?}/{:?}, executable wants {:?}/{:?}",
                             spec.name,
-                            w.shape(),
-                            w.dtype(),
+                            shape,
+                            dtype,
                             spec.shape,
                             spec.dtype
                         );

@@ -35,6 +35,16 @@ impl ModelKind {
     }
 }
 
+/// Take an owned f32 tensor out of the store *without* populating its
+/// shared decode cache: the model keeps the only decoded copy, the store
+/// keeps only the packed bytes (see `WeightStore::materialize`).
+fn owned_f32(store: &WeightStore, name: &str) -> Result<Tensor> {
+    match store.materialize(name)? {
+        HostValue::F32(t) => Ok(t),
+        other => bail!("weight '{name}': expected f32, got {:?}", other.dtype()),
+    }
+}
+
 /// A dense layer `y = x·W (+ b)`, row-major `W: (d_in, d_out)`.
 struct Dense {
     w: Tensor,
@@ -43,13 +53,13 @@ struct Dense {
 
 impl Dense {
     fn from_store(store: &WeightStore, prefix: &str) -> Result<Self> {
-        let w = store.get(&format!("{prefix}/w"))?.as_f32()?.clone();
+        let w = owned_f32(store, &format!("{prefix}/w"))?;
         if w.shape().len() != 2 {
             bail!("{prefix}/w: expected rank-2 weight, got {:?}", w.shape());
         }
         let b_name = format!("{prefix}/b");
         let b = if store.contains(&b_name) {
-            Some(store.get(&b_name)?.as_f32()?.data().to_vec())
+            Some(owned_f32(store, &b_name)?.into_data())
         } else {
             None
         };
@@ -153,11 +163,8 @@ pub struct NcfModel {
 impl NcfModel {
     pub fn from_store(store: &WeightStore) -> Result<Self> {
         let table = |name: &str| -> Result<Tensor> {
-            let t = store
-                .get(&format!("params/{name}/table"))
-                .with_context(|| format!("NCF checkpoint missing embedding '{name}'"))?
-                .as_f32()?
-                .clone();
+            let t = owned_f32(store, &format!("params/{name}/table"))
+                .with_context(|| format!("NCF checkpoint missing embedding '{name}'"))?;
             if t.shape().len() != 2 {
                 bail!("{name}: embedding table must be rank 2, got {:?}", t.shape());
             }
@@ -452,6 +459,20 @@ mod tests {
         let s2 = m.score_one(&[HostValue::f32(vec![12], x2)]).unwrap();
         assert_eq!(rows[0], s1);
         assert_eq!(rows[1], s2);
+    }
+
+    #[test]
+    fn building_a_model_leaves_the_store_cache_empty() {
+        use crate::coordinator::checkpoint::{deserialize_raw, serialize};
+        let slots = synth_mlp_slots(&[12, 8, 4], 5);
+        let bytes = serialize(&slots, true);
+        let store = WeightStore::from_raw(deserialize_raw(&bytes).unwrap(), "<test>");
+        assert!(store.compressed_entries() > 0);
+        let m = HostModel::from_store(ModelKind::Mlp, &store).unwrap();
+        assert_eq!(m.out_width(), 4);
+        // the model owns its decoded weights; the store's shared cache
+        // stays empty, so the packed bytes remain the only resident copy
+        assert_eq!(store.decoded_tensors(), 0);
     }
 
     #[test]

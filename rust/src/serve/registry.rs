@@ -1,11 +1,16 @@
 //! Checkpoint-backed weight storage for serving.
 //!
 //! A [`WeightStore`] wraps one S2CK checkpoint kept in its on-disk form:
-//! S2FP8 entries stay compressed (1 byte/element + α, β) until a tensor is
-//! first requested, then decode once into a per-tensor cache
+//! packed entries ([`crate::formats::QuantizedTensor`] — S2FP8 at 1
+//! byte/element + α, β, or any other codec format) stay packed until a
+//! tensor is first requested, then decode once into a per-tensor cache
 //! (`OnceLock`) shared by every worker thread. Decompression is therefore
 //! **per tensor, per process** — never per request — and a store serving
 //! only one executable decodes only the tensors that executable binds.
+//! Shape/dtype metadata is readable without decoding
+//! ([`WeightStore::spec_of`]), and consumers that keep their own copy of
+//! the weights can [`WeightStore::materialize`] a tensor without
+//! populating the shared cache (no double-resident decoded copies).
 //!
 //! A [`ModelRegistry`] maps model names to shared stores so one serving
 //! process can host several models/checkpoints side by side.
@@ -18,7 +23,8 @@ use std::sync::{Arc, OnceLock, RwLock};
 use anyhow::{Context, Result};
 
 use crate::coordinator::checkpoint::{self, RawPayload};
-use crate::runtime::HostValue;
+use crate::formats::FormatKind;
+use crate::runtime::{Dtype, HostValue};
 
 struct LazySlot {
     raw: RawPayload,
@@ -34,7 +40,7 @@ pub struct WeightStore {
 }
 
 impl WeightStore {
-    /// Open a checkpoint file without decompressing anything yet.
+    /// Open a checkpoint file without decoding anything yet.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
         let entries = checkpoint::load_raw(&path)?;
         Ok(Self::from_raw(entries, path.as_ref().display().to_string()))
@@ -61,24 +67,52 @@ impl WeightStore {
         )
     }
 
-    /// Fetch a tensor by checkpoint name, decoding (once) if it is still
-    /// compressed. Concurrent first accesses are safe: `OnceLock` decides
-    /// the winner and everyone shares the same decoded value.
-    pub fn get(&self, name: &str) -> Result<&HostValue> {
-        let slot = self.slots.get(name).with_context(|| {
+    fn slot(&self, name: &str) -> Result<&LazySlot> {
+        self.slots.get(name).with_context(|| {
             format!(
                 "weight '{name}' not in checkpoint {} ({} tensors: {:?}…)",
                 self.source,
                 self.slots.len(),
                 self.slots.keys().take(4).collect::<Vec<_>>()
             )
-        })?;
+        })
+    }
+
+    /// Fetch a tensor by checkpoint name, decoding (once) if it is still
+    /// packed. Concurrent first accesses are safe: `OnceLock` decides
+    /// the winner and everyone shares the same decoded value.
+    pub fn get(&self, name: &str) -> Result<&HostValue> {
+        let slot = self.slot(name)?;
         Ok(slot.cache.get_or_init(|| {
             if slot.raw.is_compressed() {
                 self.decoded.fetch_add(1, Ordering::Relaxed);
             }
             slot.raw.decode()
         }))
+    }
+
+    /// Owned decode of one tensor **without** populating the shared cache
+    /// — for consumers that keep their own copy of the weights (host
+    /// models): the packed entry stays the only resident form, instead of
+    /// packed + cached + copied.
+    pub fn materialize(&self, name: &str) -> Result<HostValue> {
+        let slot = self.slot(name)?;
+        Ok(match slot.cache.get() {
+            Some(v) => v.clone(), // already decoded for someone else
+            None => slot.raw.decode(),
+        })
+    }
+
+    /// Shape and dtype of a tensor *without decoding it* — binding-time
+    /// validation reads this, so opening a model for serving touches no
+    /// payload bytes.
+    pub fn spec_of(&self, name: &str) -> Option<(&[usize], Dtype)> {
+        self.slots.get(name).map(|s| s.raw.spec())
+    }
+
+    /// Storage format of an entry (`None` for in-memory raw values).
+    pub fn stored_format(&self, name: &str) -> Option<FormatKind> {
+        self.slots.get(name).and_then(|s| s.raw.stored_format())
     }
 
     pub fn contains(&self, name: &str) -> bool {
@@ -97,14 +131,14 @@ impl WeightStore {
         self.slots.is_empty()
     }
 
-    /// How many compressed tensors have been decompressed so far (should
-    /// stay flat under request load — decode is per tensor, not per
-    /// request).
+    /// How many compressed tensors have been decoded into the shared
+    /// cache so far (should stay flat under request load — decode is per
+    /// tensor, not per request).
     pub fn decoded_tensors(&self) -> usize {
         self.decoded.load(Ordering::Relaxed)
     }
 
-    /// Number of entries stored S2FP8-compressed.
+    /// Number of entries stored below 32 bits/element.
     pub fn compressed_entries(&self) -> usize {
         self.slots.values().filter(|s| s.raw.is_compressed()).count()
     }
@@ -201,6 +235,33 @@ mod tests {
         assert_eq!(s.decoded_tensors(), 1);
         s.get("params/fc1/w").unwrap();
         assert_eq!(s.decoded_tensors(), 2);
+    }
+
+    #[test]
+    fn spec_of_answers_without_decoding() {
+        let s = compressed_store();
+        let (shape, dtype) = s.spec_of("params/fc0/w").unwrap();
+        assert_eq!(shape, &[16, 32]);
+        assert_eq!(dtype, Dtype::F32);
+        assert_eq!(s.stored_format("params/fc0/w"), Some(FormatKind::S2fp8));
+        assert_eq!(s.stored_format("params/fc0/b"), Some(FormatKind::Fp32));
+        assert!(s.spec_of("params/nope").is_none());
+        assert_eq!(s.decoded_tensors(), 0, "spec queries must not decode");
+    }
+
+    #[test]
+    fn materialize_does_not_populate_the_cache() {
+        let s = compressed_store();
+        let v = s.materialize("params/fc0/w").unwrap();
+        assert_eq!(v.shape(), &[16, 32]);
+        assert_eq!(s.decoded_tensors(), 0, "materialize bypasses the shared cache");
+        // but it reuses an existing cached decode when one exists
+        let cached = s.get("params/fc0/w").unwrap().clone();
+        assert_eq!(s.decoded_tensors(), 1);
+        assert_eq!(s.materialize("params/fc0/w").unwrap(), cached);
+        assert_eq!(s.decoded_tensors(), 1);
+        // both paths agree on the decoded values
+        assert_eq!(v, cached);
     }
 
     #[test]

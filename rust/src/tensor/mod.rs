@@ -3,6 +3,7 @@
 //! executables; the coordinator only needs to build batches, slice
 //! checkpoints and compute metrics.
 
+use crate::formats::{FormatKind, QuantizedTensor};
 use crate::util::rng::Rng;
 
 /// Shape/data-length mismatch from the fallible constructors. The serving
@@ -155,6 +156,24 @@ impl Tensor {
         self.data.iter().any(|x| !x.is_finite())
     }
 
+    /// Pack into `kind`'s true byte representation, shape preserved — the
+    /// checkpoint writer's and weight store's currency (see
+    /// [`crate::formats::codec`]).
+    pub fn quantize(&self, kind: FormatKind) -> QuantizedTensor {
+        kind.codec()
+            .encode(&self.data)
+            .reshape(self.shape.clone())
+            .expect("encode preserves the element count")
+    }
+
+    /// Rebuild an f32 tensor from a packed one (lossy by exactly the
+    /// format's quantization, identity for FP32 payloads).
+    pub fn from_quantized(qt: &QuantizedTensor) -> Tensor {
+        let mut data = Vec::new();
+        qt.decode_into(&mut data);
+        Tensor { shape: qt.shape().to_vec(), data }
+    }
+
     /// Raw little-endian bytes (for PJRT literal creation / checkpoints).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.data.len() * 4);
@@ -223,6 +242,27 @@ mod tests {
         let b = t.to_bytes();
         let t2 = Tensor::from_bytes(vec![3, 5], &b);
         assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn quantize_roundtrip() {
+        let mut rng = Pcg32::new(6, 6);
+        let t = Tensor::randn(vec![4, 8], &mut rng).map(|v| v * 0.01);
+        // fp32 packing is bit-exact
+        let q32 = t.quantize(FormatKind::Fp32);
+        assert_eq!(q32.shape(), &[4, 8]);
+        assert_eq!(Tensor::from_quantized(&q32), t);
+        // s2fp8 packs to one byte per element and round-trips within the
+        // format's error
+        let q8 = t.quantize(FormatKind::S2fp8);
+        assert_eq!(q8.payload().len(), 32);
+        let back = Tensor::from_quantized(&q8);
+        assert_eq!(back.shape(), t.shape());
+        for (a, b) in t.data().iter().zip(back.data().iter()) {
+            if *a != 0.0 && *b != 0.0 {
+                assert!((a - b).abs() / a.abs() < 0.2, "{a} vs {b}");
+            }
+        }
     }
 
     #[test]

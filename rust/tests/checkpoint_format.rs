@@ -1,0 +1,115 @@
+//! Checkpoint format guarantees:
+//!
+//! * the **v1 golden fixture** (`tests/fixtures/ckpt_v1.s2ck`, byte-exact
+//!   legacy layout) keeps loading — old checkpoints outlive the format
+//!   migration to packed `QuantizedTensor` entries (v2);
+//! * unknown versions are rejected with a clear error, not a garbled
+//!   deserialize;
+//! * the **size regression gate**: an S2FP8 checkpoint of the reference
+//!   NCF model must stay ≤ 0.30× its FP32 serialized size (the paper's
+//!   ≈4× claim, enforced in CI).
+
+use s2fp8::coordinator::checkpoint::{self, deserialize, deserialize_raw, serialize};
+use s2fp8::formats::FormatKind;
+use s2fp8::runtime::HostValue;
+use s2fp8::serve::model::{synth_ncf_slots, NcfDims};
+
+/// v1 checkpoint written by the pre-codec layout (see the fixture's
+/// generator note in CHANGES.md): one s2fp8 entry with the identity
+/// transform (α=1, β=0), one raw f32 entry, one i32 entry.
+const V1_FIXTURE: &[u8] = include_bytes!("fixtures/ckpt_v1.s2ck");
+
+#[test]
+fn golden_v1_fixture_loads() {
+    let entries = deserialize(V1_FIXTURE).unwrap();
+    assert_eq!(entries.len(), 3);
+
+    // entry 0: s2fp8-packed [2,4] tensor with α=1, β=0 ⇒ values decode to
+    // (within a pow/exp2 ulp) the plain FP8 values of the stored codes
+    let (name, value) = &entries[0];
+    assert_eq!(name, "params/w");
+    let t = value.as_f32().unwrap();
+    assert_eq!(t.shape(), &[2, 4]);
+    let want = [1.0f32, 1.25, 1.5, 1.75, -2.0, 0.0, 57344.0, 1.0 / 65536.0];
+    for (i, (got, want)) in t.data().iter().zip(want.iter()).enumerate() {
+        if *want == 0.0 {
+            assert_eq!(*got, 0.0, "elem {i}");
+        } else {
+            let rel = (got - want).abs() / want.abs();
+            assert!(rel < 1e-6, "elem {i}: {got} vs {want} (rel {rel})");
+        }
+    }
+
+    // entry 1: raw f32 — exact
+    assert_eq!(entries[1].0, "state/bias");
+    assert_eq!(entries[1].1, HostValue::f32(vec![3], vec![0.5, -1.25, 3.0]));
+
+    // entry 2: i32 — exact
+    assert_eq!(entries[2].0, "meta/step");
+    assert_eq!(entries[2].1, HostValue::i32(vec![1], vec![1234]));
+}
+
+#[test]
+fn golden_v1_fixture_loads_raw_with_deferred_decode() {
+    let raw = deserialize_raw(V1_FIXTURE).unwrap();
+    assert!(raw[0].1.is_compressed());
+    assert_eq!(raw[0].1.stored_format(), Some(FormatKind::S2fp8));
+    assert_eq!(raw[0].1.shape(), &[2, 4]);
+    assert_eq!(raw[0].1.stored_bytes(), 8 + 8); // 8 codes + α,β
+    assert!(!raw[1].1.is_compressed());
+    assert!(!raw[2].1.is_compressed());
+}
+
+#[test]
+fn v1_and_v2_decode_paths_agree() {
+    // round-trip the decoded v1 fixture through the v2 writer: the values
+    // must survive exactly (fp32 re-pack of already-quantized data)
+    let entries = deserialize(V1_FIXTURE).unwrap();
+    let v2 = serialize(&entries, false);
+    assert_eq!(deserialize(&v2).unwrap(), entries);
+}
+
+#[test]
+fn unknown_versions_are_rejected_not_misparsed() {
+    for bad_version in [0u32, 3, 7, 99] {
+        let mut bytes = V1_FIXTURE.to_vec();
+        bytes[4..8].copy_from_slice(&bad_version.to_le_bytes());
+        let err = deserialize(&bytes).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("version {bad_version}")),
+            "v{bad_version}: {err}"
+        );
+        assert!(err.contains("unsupported checkpoint version"), "{err}");
+    }
+}
+
+/// Reference model for the CI size gate.
+fn reference_slots() -> Vec<(String, HostValue)> {
+    synth_ncf_slots(&NcfDims::default(), 7)
+}
+
+#[test]
+fn size_regression_s2fp8_checkpoint_at_most_030x_fp32() {
+    let slots = reference_slots();
+    let fp32 = serialize(&slots, false).len();
+    let s2 = serialize(&slots, true).len();
+    let ratio = s2 as f64 / fp32 as f64;
+    assert!(
+        ratio <= 0.30,
+        "S2FP8 checkpoint is {s2} B vs {fp32} B fp32 — ratio {ratio:.3} > 0.30"
+    );
+}
+
+#[test]
+fn size_regression_resident_weight_store_at_most_030x() {
+    use s2fp8::serve::registry::WeightStore;
+    let slots = reference_slots();
+    let bytes = checkpoint::serialize(&slots, true);
+    let store = WeightStore::from_raw(deserialize_raw(&bytes).unwrap(), "<mem>");
+    let (stored, full) = store.memory_footprint();
+    let ratio = stored as f64 / full as f64;
+    assert!(
+        ratio <= 0.30,
+        "resident store is {stored} B vs {full} B decoded — ratio {ratio:.3} > 0.30"
+    );
+}

@@ -1,8 +1,21 @@
 //! Property-based tests of the numeric-format invariants, using the
 //! in-tree mini property framework (`util::prop`).
+//!
+//! The packed-roundtrip block pins the codec layer to the truncation
+//! semantics: for **every** `FormatKind`, `decode(encode(xs))` through the
+//! `Codec` trait is bitwise identical to `truncate_tensor(xs)` — including
+//! ±0, NaN, ±Inf, denormals and empty tensors — so the packed byte
+//! payloads used by checkpoints and serving quantize exactly like the
+//! training simulation.
 
-use s2fp8::formats::{bf16, fp16, fp8, s2fp8 as s2, FormatKind};
+use s2fp8::formats::{bf16, fp16, fp8, s2fp8 as s2, CodecError, FormatKind, QuantizedTensor};
 use s2fp8::util::prop::{check, F32WideLog, VecGen};
+
+/// Bitwise equality with NaN ≡ NaN (payload bits of a NaN are not
+/// significant; e.g. the fp16 encoder canonicalizes them).
+fn bits_eq(a: f32, b: f32) -> bool {
+    (a.is_nan() && b.is_nan()) || a.to_bits() == b.to_bits()
+}
 
 #[test]
 fn prop_fp8_truncation_is_idempotent() {
@@ -236,10 +249,10 @@ fn prop_compress_roundtrip_never_catastrophic() {
     };
     check("s2fp8 compress/decompress", &g, |xs: &Vec<f32>| {
         let c = s2::compress(xs);
-        if c.codes.len() != xs.len() {
+        if c.payload().len() != xs.len() {
             return Err("length".into());
         }
-        let back = s2::decompress(&c);
+        let back = s2::decompress(&c).map_err(|e| e.to_string())?;
         let n_bad = xs
             .iter()
             .zip(back.iter())
@@ -271,11 +284,12 @@ fn prop_compress_roundtrip_degenerate_tensors_never_panic() {
     };
     check("s2fp8 compress/decompress degenerate", &g, |xs: &Vec<f32>| {
         let c = s2::compress(xs);
-        if c.codes.len() != xs.len() {
-            return Err(format!("{} codes for {} elements", c.codes.len(), xs.len()));
+        if c.payload().len() != xs.len() {
+            return Err(format!("{} codes for {} elements", c.payload().len(), xs.len()));
         }
-        let back = s2::decompress(&c);
-        let bound = 1.2 / c.codec.alpha + 0.02;
+        let back = s2::decompress(&c).map_err(|e| e.to_string())?;
+        let (alpha, _beta) = c.s2_params().expect("s2fp8 tensors carry α/β");
+        let bound = 1.2 / alpha + 0.02;
         for (i, (&a, &b)) in xs.iter().zip(back.iter()).enumerate() {
             if a == 0.0 {
                 if b != 0.0 {
@@ -298,8 +312,7 @@ fn prop_compress_roundtrip_degenerate_tensors_never_panic() {
             let dl = (b.abs().log2() - a.abs().log2()).abs();
             if dl > bound {
                 return Err(format!(
-                    "elem {i}: {a} → {b}, |Δlog2| = {dl} > {bound} (α = {})",
-                    c.codec.alpha
+                    "elem {i}: {a} → {b}, |Δlog2| = {dl} > {bound} (α = {alpha})"
                 ));
             }
         }
@@ -312,26 +325,26 @@ fn compress_roundtrip_named_degenerate_cases() {
     // all-zero tensor: identity codec, exact round-trip
     let zeros = [0.0f32, -0.0, 0.0, 0.0];
     let c = s2::compress(&zeros);
-    assert_eq!(c.codec, s2::S2fp8Codec::identity());
-    for b in s2::decompress(&c) {
+    assert_eq!(c.s2_params(), Some((1.0, 0.0))); // identity (α=1, β=0)
+    for b in s2::decompress(&c).unwrap() {
         assert_eq!(b, 0.0);
     }
 
     // empty tensor
     let c = s2::compress(&[]);
-    assert!(c.codes.is_empty() && s2::decompress(&c).is_empty());
+    assert!(c.payload().is_empty() && s2::decompress(&c).unwrap().is_empty());
 
     // single element
     let c = s2::compress(&[0.37f32]);
-    let b = s2::decompress(&c)[0];
+    let b = s2::decompress(&c).unwrap()[0];
     assert!((b - 0.37).abs() / 0.37 < 0.05, "0.37 → {b}");
 
     // all-equal magnitudes: spread clamps at MIN_SPREAD, α is huge, and
     // the round-trip must still recover the value to FP8-like accuracy
     let equal = [2.5e-7f32, -2.5e-7, 2.5e-7, 2.5e-7];
     let c = s2::compress(&equal);
-    assert!(c.codec.alpha <= s2::TARGET_MAX_LOG2 / s2::MIN_SPREAD + 1.0);
-    for (a, b) in equal.iter().zip(s2::decompress(&c).iter()) {
+    assert!(c.s2_params().unwrap().0 <= s2::TARGET_MAX_LOG2 / s2::MIN_SPREAD + 1.0);
+    for (a, b) in equal.iter().zip(s2::decompress(&c).unwrap().iter()) {
         assert!((a - b).abs() / a.abs() < 0.05, "{a} → {b}");
         assert_eq!(a.signum(), b.signum());
     }
@@ -339,7 +352,7 @@ fn compress_roundtrip_named_degenerate_cases() {
     // specials mixed with finite values: no panic, sane per-element results
     let mixed = [0.0f32, -0.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0, -1e-30];
     let c = s2::compress(&mixed);
-    let back = s2::decompress(&c);
+    let back = s2::decompress(&c).unwrap();
     assert_eq!(back[0], 0.0);
     assert_eq!(back[1], 0.0);
     assert!(back[2].is_nan(), "NaN must propagate, got {}", back[2]);
@@ -349,4 +362,190 @@ fn compress_roundtrip_named_degenerate_cases() {
     // the finite elements (which alone defined the fit) survive
     assert!((back[5] - 1.0).abs() < 0.2, "1.0 → {}", back[5]);
     assert!(back[6] < 0.0 && back[6].is_finite(), "-1e-30 → {}", back[6]);
+}
+
+// ---------------------------------------------------------------------------
+// packed codec layer: decode(encode(xs)) ≡ truncate_tensor(xs), bitwise,
+// for every format — plus framing and buffer-reuse invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_packed_roundtrip_matches_truncate_tensor_for_every_format() {
+    // specials: true ⇒ ±0, NaN, ±Inf and denormal-scale magnitudes are in
+    // the stream; min_len 0 covers empty tensors.
+    let g = VecGen {
+        elem: F32WideLog { log2_lo: -40.0, log2_hi: 40.0, specials: true },
+        min_len: 0,
+        max_len: 300,
+    };
+    for &kind in FormatKind::all() {
+        let codec = kind.codec();
+        check(
+            &format!("packed roundtrip == truncate_tensor [{}]", kind.name()),
+            &g,
+            |xs: &Vec<f32>| {
+                let qt = codec.encode(xs);
+                let bpe = (kind.bits() / 8) as usize;
+                if qt.payload().len() != xs.len() * bpe {
+                    return Err(format!(
+                        "payload {} bytes for {} elements at {bpe} B/elem",
+                        qt.payload().len(),
+                        xs.len()
+                    ));
+                }
+                let got = codec.decode(&qt).map_err(|e| e.to_string())?;
+                let want = kind.truncate_tensor(xs);
+                if got.len() != want.len() {
+                    return Err(format!("{} decoded vs {} truncated", got.len(), want.len()));
+                }
+                for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                    if !bits_eq(*g, *w) {
+                        return Err(format!(
+                            "elem {i}: input {} ({:#010x}) packed {} ({:#010x}) vs truncated {} ({:#010x})",
+                            xs[i],
+                            xs[i].to_bits(),
+                            g,
+                            g.to_bits(),
+                            w,
+                            w.to_bits()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn packed_roundtrip_matches_truncate_tensor_on_named_specials() {
+    // NaN / ±Inf are not in the generator's special pool — pin them (plus
+    // ±0, denormals of every format, and saturation magnitudes) here.
+    let specials = vec![
+        0.0f32,
+        -0.0,
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        1.0e-45, // f32 min subnormal
+        2.0f32.powi(-16),  // fp8 e5m2 min denormal
+        2.0f32.powi(-17),  // fp8 e5m2 flush tie
+        2.0f32.powi(-9),   // e4m3 min denormal
+        -2.0f32.powi(-10), // e4m3 flush tie
+        2.0f32.powi(-24),  // fp16 min denormal
+        57344.0,
+        -57345.0,
+        448.0,
+        449.0,
+        65504.0,
+        3.0e38,
+        -3.0e38,
+        1.0,
+        -1.3,
+    ];
+    for &kind in FormatKind::all() {
+        let codec = kind.codec();
+        let qt = codec.encode(&specials);
+        let got = codec.decode(&qt).unwrap();
+        let want = kind.truncate_tensor(&specials);
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                bits_eq(*g, *w),
+                "{} elem {i} (input {}): packed {} ({:#010x}) vs truncated {} ({:#010x})",
+                kind.name(),
+                specials[i],
+                g,
+                g.to_bits(),
+                w,
+                w.to_bits()
+            );
+        }
+        // empty tensors round-trip too
+        let empty = codec.encode(&[]);
+        assert!(empty.payload().is_empty());
+        assert!(codec.decode(&empty).unwrap().is_empty());
+        assert!(kind.truncate_tensor(&[]).is_empty());
+    }
+}
+
+#[test]
+fn prop_quantized_tensor_framing_roundtrips_bitwise() {
+    let g = VecGen {
+        elem: F32WideLog { log2_lo: -30.0, log2_hi: 30.0, specials: true },
+        min_len: 0,
+        max_len: 200,
+    };
+    for &kind in FormatKind::all() {
+        let codec = kind.codec();
+        check(
+            &format!("S2QT framing roundtrip [{}]", kind.name()),
+            &g,
+            |xs: &Vec<f32>| {
+                let qt = codec.encode(xs);
+                let back = QuantizedTensor::from_bytes(&qt.to_bytes())
+                    .map_err(|e| e.to_string())?;
+                if back != qt {
+                    return Err(format!("reparsed tensor differs: {back:?} vs {qt:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_decode_into_agrees_with_decode_under_buffer_reuse() {
+    let g = VecGen {
+        elem: F32WideLog { log2_lo: -20.0, log2_hi: 20.0, specials: true },
+        min_len: 0,
+        max_len: 128,
+    };
+    // one shared buffer across all cases and formats: reuse must never
+    // leak stale elements between decodes
+    let buf = std::cell::RefCell::new(Vec::<f32>::new());
+    for &kind in FormatKind::all() {
+        let codec = kind.codec();
+        check(
+            &format!("decode_into buffer reuse [{}]", kind.name()),
+            &g,
+            |xs: &Vec<f32>| {
+                let qt = codec.encode(xs);
+                let fresh = codec.decode(&qt).map_err(|e| e.to_string())?;
+                let mut buf = buf.borrow_mut();
+                codec.decode_into(&qt, &mut buf).map_err(|e| e.to_string())?;
+                if buf.len() != fresh.len() {
+                    return Err(format!("reused buffer {} vs fresh {}", buf.len(), fresh.len()));
+                }
+                for (i, (a, b)) in buf.iter().zip(fresh.iter()).enumerate() {
+                    if !bits_eq(*a, *b) {
+                        return Err(format!("elem {i}: reused {a} vs fresh {b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn codec_layer_rejects_mismatches_without_panicking() {
+    // decoding another format's bytes is an error value, not a panic
+    let qt = FormatKind::S2fp8.codec().encode(&[1.0, 2.0, 3.0]);
+    for &kind in FormatKind::all() {
+        if kind == FormatKind::S2fp8 {
+            continue;
+        }
+        match kind.codec().decode(&qt) {
+            Err(CodecError::WrongKind { .. }) => {}
+            other => panic!("{}: expected WrongKind, got {other:?}", kind.name()),
+        }
+    }
+    // element-wise truncation of tensor formats is None, not a panic
+    assert_eq!(FormatKind::S2fp8.truncate(1.0), None);
+    assert_eq!(FormatKind::S2fp8Sr.truncate(1.0), None);
+    for &kind in FormatKind::elementwise() {
+        assert!(kind.truncate(1.0).is_some(), "{}", kind.name());
+    }
 }
