@@ -1,0 +1,169 @@
+//! §Perf bench — ring all-reduce throughput and wire-byte accounting for
+//! the distributed gradient exchange, FP32 vs S2FP8 wire, across worker
+//! counts and gradient sizes. Emits
+//! `runs/perf_allreduce/{allreduce.md,BENCH_allreduce.json}` and
+//! **asserts the S2FP8 wire moves ≥ 3.5× fewer bytes than FP32** (the
+//! paper's 4× claim as a regression gate, minus framing overhead) — CI
+//! uploads the JSON as an artifact.
+//!
+//! One "step" = encode each worker's chunk gradients, all-gather the
+//! packed bundles around the ring, and run the deterministic chunk
+//! reduce on every rank — the full exchange path of `dist::train`, minus
+//! the model. Each step also pays ring construction + thread spawn (the
+//! in-process stand-in for per-step transport setup), so `steps_per_sec`
+//! at the small tiers is dominated by that fixed cost — read it as a
+//! trajectory, not an absolute exchange throughput; the wire-byte ratio
+//! gate is exact either way.
+//!
+//! Scale knobs: `S2FP8_BENCH_FAST=1` drops the largest tier.
+
+use std::time::Duration;
+
+use s2fp8::bench::harness::bench_fn;
+use s2fp8::bench::paper;
+use s2fp8::bench::report::Table;
+use s2fp8::dist::{reduce_chunks, ring, ChunkGrad, WireFormat};
+use s2fp8::metrics::comm::CommCounters;
+use s2fp8::tensor::Tensor;
+use s2fp8::util::json::Json;
+use s2fp8::util::rng::{Pcg32, Rng};
+
+/// Gradient slot layout of one chunk: a big weight matrix, a small one,
+/// and a bias — shaped like a real model's slot mix.
+fn chunk_grads(elems: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg32::new(seed, 0xA11);
+    let big = elems * 8 / 10;
+    let small = elems - big - elems / 100 - 1;
+    [big, small, elems / 100 + 1]
+        .iter()
+        .map(|&n| Tensor::randn(vec![n], &mut rng).map(|v| v * 0.02))
+        .collect()
+}
+
+/// One full exchange: encode per-chunk grads, ring all-gather, reduce on
+/// every rank. Returns per-step wire bytes (once counters settle).
+fn allreduce_step(
+    workers: usize,
+    chunks: usize,
+    grads: &[Vec<Tensor>],
+    wire: WireFormat,
+    counters: &CommCounters,
+) {
+    let nodes = ring::<Vec<ChunkGrad>>(workers);
+    let cpw = chunks / workers;
+    std::thread::scope(|s| {
+        for node in nodes {
+            let handle_grads = grads;
+            s.spawn(move || {
+                let rank = node.rank();
+                let bundle: Vec<ChunkGrad> = (0..cpw)
+                    .map(|local| {
+                        let c = rank * cpw + local;
+                        ChunkGrad::encode(c, 8, 1.0, &handle_grads[c], wire).unwrap()
+                    })
+                    .collect();
+                let gathered = node
+                    .all_gather(bundle, |msg| {
+                        let w: usize = msg.iter().map(|c| c.wire_bytes()).sum();
+                        let f: usize = msg.iter().map(|c| c.f32_wire_bytes()).sum();
+                        counters.record_send(w as u64, f as u64);
+                    })
+                    .unwrap();
+                let all: Vec<ChunkGrad> = gathered.into_iter().flatten().collect();
+                let red = reduce_chunks(&all, chunks).unwrap();
+                std::hint::black_box(red);
+            });
+        }
+    });
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = "perf_allreduce";
+    let fast = std::env::var("S2FP8_BENCH_FAST").as_deref() == Ok("1");
+    let sizes: &[usize] = if fast { &[1 << 12, 1 << 16] } else { &[1 << 12, 1 << 16, 1 << 20] };
+    let budget = Duration::from_millis(200);
+    let chunks = 8usize;
+    // warmup iterations also bump the wire counters — the bytes/step
+    // divisor below must count them
+    const WARMUP: usize = 1;
+
+    let mut table = Table::new(
+        "Ring all-reduce (encode + all-gather + reduce on every rank)",
+        &["wire", "workers", "elems/chunk", "steps/s", "wire KiB/step", "vs fp32 wire"],
+    );
+    let mut rows = Vec::new();
+    let mut worst_ratio = f64::INFINITY;
+
+    for &elems in sizes {
+        let grads: Vec<Vec<Tensor>> =
+            (0..chunks).map(|c| chunk_grads(elems, c as u64)).collect();
+        for workers in [2usize, 4] {
+            let mut per_step: [f64; 2] = [0.0, 0.0];
+            for (wi, wire) in [WireFormat::Fp32, WireFormat::S2fp8].into_iter().enumerate() {
+                let counters = CommCounters::new();
+                let result = bench_fn(
+                    &format!("{} w{workers} {elems}", wire.name()),
+                    WARMUP,
+                    3,
+                    budget,
+                    Some((elems * chunks * 4) as f64),
+                    || allreduce_step(workers, chunks, &grads, wire, &counters),
+                );
+                let steps = result.iters + WARMUP;
+                let bytes_per_step = counters.wire_bytes() as f64 / steps as f64;
+                per_step[wi] = bytes_per_step;
+                let steps_per_sec = 1.0 / result.mean.as_secs_f64();
+                let ratio = if wi == 1 { per_step[0] / bytes_per_step } else { 1.0 };
+                println!(
+                    "{:<6} w{workers} {elems:>8} elems/chunk  {steps_per_sec:>8.1} steps/s  \
+                     {:>9.1} KiB/step  {ratio:.2}× smaller",
+                    wire.name(),
+                    bytes_per_step / 1024.0
+                );
+                table.row(vec![
+                    wire.name().to_string(),
+                    workers.to_string(),
+                    elems.to_string(),
+                    format!("{steps_per_sec:.1}"),
+                    format!("{:.1}", bytes_per_step / 1024.0),
+                    format!("{ratio:.3}"),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("wire", Json::str(wire.name())),
+                    ("workers", Json::num(workers as f64)),
+                    ("elems_per_chunk", Json::num(elems as f64)),
+                    ("chunks", Json::num(chunks as f64)),
+                    ("steps_per_sec", Json::num(steps_per_sec)),
+                    ("wire_bytes_per_step", Json::num(bytes_per_step)),
+                    ("ratio_vs_fp32", Json::num(ratio)),
+                ]));
+                if wi == 1 {
+                    worst_ratio = worst_ratio.min(ratio);
+                }
+            }
+        }
+    }
+
+    table.print();
+    table.save(paper::out_dir(bench).join("allreduce.md"))?;
+
+    let record = Json::obj(vec![
+        ("bench", Json::str("allreduce")),
+        ("compression_worst", Json::num(worst_ratio)),
+        ("compression_required", Json::num(3.5)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let json_path = paper::out_dir(bench).join("BENCH_allreduce.json");
+    std::fs::write(&json_path, record.to_string_pretty())?;
+    println!("wrote {}", json_path.display());
+
+    // The paper's 4× wire claim as a hard gate (framing + α/β overhead
+    // costs a few %, hence 3.5×). CI uploads the JSON above either way;
+    // a regression fails the job here.
+    anyhow::ensure!(
+        worst_ratio >= 3.5,
+        "S2FP8 wire compression regressed: worst {worst_ratio:.2}× < required 3.5×"
+    );
+    println!("compression gate passed: worst S2FP8 wire ratio {worst_ratio:.2}× ≥ 3.5×");
+    Ok(())
+}

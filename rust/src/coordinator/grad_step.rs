@@ -1,0 +1,66 @@
+//! The **GradStep seam**: a training step split into its two phases —
+//! *compute* (forward + backward over a shard of examples, producing
+//! summed gradients) and *apply* (fold a fully-reduced mean gradient into
+//! the parameters).
+//!
+//! Single-worker training runs the phases back to back; data-parallel
+//! training ([`crate::dist`]) inserts a gradient all-reduce between them.
+//! Everything the distributed coordinator needs from a model is this
+//! trait, so the same worker loop drives any replica implementation:
+//!
+//! * [`super::host_trainer`] — pure-rust MLP and NCF replicas (no
+//!   artifacts/PJRT; per-row math bitwise-independent of batch
+//!   composition, the property the equivalence tests in
+//!   `tests/integration_dist.rs` are built on);
+//! * the AOT [`super::Trainer`] exposes the same two-phase shape at the
+//!   executable level ([`super::Trainer::step_compute`] /
+//!   [`super::Trainer::commit`]). Its `train_step` artifacts fuse the
+//!   gradient apply into the graph, so it cannot hand raw gradients to an
+//!   all-reduce today; a grad-outputting artifact implements this trait
+//!   without touching the coordinator.
+//!
+//! ## Determinism contract
+//!
+//! [`GradStep::compute`] must be a pure function of (parameters, batch):
+//! the same shard on the same replica state yields bitwise-identical
+//! gradients no matter which worker runs it or what else is in flight.
+//! Gradients are **summed** over the shard's examples (not averaged), in
+//! example order, so the reduce can divide once by the *global* batch
+//! size; `loss_sum` is the f64 fold of per-example losses in the same
+//! order.
+
+use anyhow::Result;
+
+use crate::runtime::HostValue;
+use crate::tensor::Tensor;
+
+/// Output of one compute phase over a shard of examples.
+#[derive(Debug, Clone)]
+pub struct ShardGrad {
+    /// Σ per-example loss over the shard (f64 fold in example order).
+    pub loss_sum: f64,
+    /// Number of examples the sums cover.
+    pub n_examples: usize,
+    /// Per-slot summed gradients, in [`GradStep::grad_slots`] order.
+    pub grads: Vec<Tensor>,
+}
+
+/// A model replica that can run the two training phases separately.
+pub trait GradStep {
+    /// Gradient slots as (name, shape), in a fixed order that every
+    /// replica of the same model agrees on — the wire layout of the
+    /// distributed gradient exchange.
+    fn grad_slots(&self) -> Vec<(String, Vec<usize>)>;
+
+    /// Phase 1: forward + backward over a shard. Must not modify
+    /// parameters; see the module docs for the determinism contract.
+    fn compute(&mut self, batch: &[HostValue]) -> Result<ShardGrad>;
+
+    /// Phase 2: apply fully-reduced **mean** gradients (one tensor per
+    /// slot, [`GradStep::grad_slots`] order/shapes) with plain SGD.
+    fn apply(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()>;
+
+    /// Snapshot of the current parameters as (name, tensor) pairs —
+    /// replica-sync checks, equivalence tests and checkpointing.
+    fn params(&self) -> Vec<(String, Tensor)>;
+}

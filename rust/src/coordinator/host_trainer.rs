@@ -1,0 +1,798 @@
+//! Pure-rust **host training replicas**: MLP and NCF forward + backward +
+//! SGD with no artifacts or PJRT — the first training path in the crate
+//! that runs everywhere the tests run. Both implement the
+//! [`GradStep`](super::grad_step::GradStep) seam, so the distributed
+//! coordinator ([`crate::dist`]) drives them identically at any worker
+//! count.
+//!
+//! Determinism is the whole point of this module, and it comes from the
+//! same discipline as the serving host models (`serve::model`): every
+//! example is computed by a scalar per-row loop whose arithmetic depends
+//! only on (parameters, example), never on batch composition or thread
+//! count. Shard gradients are f64 accumulations over examples *in shard
+//! order*, rounded to f32 once per slot — so a shard's gradient is one
+//! fixed bit pattern no matter which worker computes it, which is what
+//! makes multi-worker training bitwise-reproducible (see DESIGN.md
+//! "Distributed training").
+//!
+//! The model math mirrors the Layer-2 zoo: the MLP is the quickstart
+//! Dense→ReLU stack with softmax cross-entropy; the NCF replica is the
+//! NeuMF scorer (GMF ⊙ + MLP tower → head logit) with binary
+//! cross-entropy, matching `serve::model::NcfModel`'s forward exactly
+//! (dense-then-ReLU per tower layer, f32 accumulators, j-outer/k-inner
+//! loops).
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostValue;
+use crate::serve::model::{synth_mlp_slots, synth_ncf_slots, NcfDims};
+use crate::tensor::Tensor;
+
+use super::grad_step::{GradStep, ShardGrad};
+
+/// `y = x·W + b` for one row, deterministic accumulation order (j outer,
+/// k inner) — bit-identical to `serve::model`'s Dense forward.
+fn dense_fwd(w: &Tensor, b: &[f32], x: &[f32]) -> Vec<f32> {
+    let (d_in, d_out) = (w.shape()[0], w.shape()[1]);
+    debug_assert_eq!(x.len(), d_in);
+    debug_assert_eq!(b.len(), d_out);
+    let wd = w.data();
+    let mut y = Vec::with_capacity(d_out);
+    for j in 0..d_out {
+        let mut acc = b[j];
+        for (k, &xv) in x.iter().enumerate() {
+            acc += xv * wd[k * d_out + j];
+        }
+        y.push(acc);
+    }
+    y
+}
+
+/// `dx = W·delta` for one row (backprop through a dense layer).
+fn dense_bwd_input(w: &Tensor, delta: &[f32]) -> Vec<f32> {
+    let (d_in, d_out) = (w.shape()[0], w.shape()[1]);
+    debug_assert_eq!(delta.len(), d_out);
+    let wd = w.data();
+    let mut dx = Vec::with_capacity(d_in);
+    for k in 0..d_in {
+        let mut acc = 0.0f32;
+        for (j, &dj) in delta.iter().enumerate() {
+            acc += wd[k * d_out + j] * dj;
+        }
+        dx.push(acc);
+    }
+    dx
+}
+
+/// Accumulate one example's dense-layer gradients: `gW += h ⊗ delta`,
+/// `gb += delta` (f64 accumulators, f32 products).
+fn dense_accumulate(gw: &mut [f64], gb: &mut [f64], h_in: &[f32], delta: &[f32]) {
+    let d_out = delta.len();
+    for (k, &hk) in h_in.iter().enumerate() {
+        let row = &mut gw[k * d_out..(k + 1) * d_out];
+        for (g, &dj) in row.iter_mut().zip(delta.iter()) {
+            *g += (hk * dj) as f64;
+        }
+    }
+    for (g, &dj) in gb.iter_mut().zip(delta.iter()) {
+        *g += dj as f64;
+    }
+}
+
+fn relu(h: &mut [f32]) {
+    for v in h {
+        *v = v.max(0.0);
+    }
+}
+
+/// Zero the entries of `delta` where the pre-activation was not positive
+/// (ReLU uses the `> 0` mask everywhere, matching the forward's `max`).
+fn relu_mask(delta: &mut [f32], pre: &[f32]) {
+    for (d, &a) in delta.iter_mut().zip(pre.iter()) {
+        if a <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// SGD: `p -= lr · g`, with shape validation against the slot name.
+fn sgd_apply(name: &str, param: &mut Tensor, grad: &Tensor, lr: f32) -> Result<()> {
+    if grad.shape() != param.shape() {
+        bail!(
+            "gradient for '{name}' has shape {:?}, parameter is {:?}",
+            grad.shape(),
+            param.shape()
+        );
+    }
+    for (p, &g) in param.data_mut().iter_mut().zip(grad.data().iter()) {
+        *p -= lr * g;
+    }
+    Ok(())
+}
+
+fn find_slot<'a>(slots: &'a [(String, HostValue)], name: &str) -> Option<&'a HostValue> {
+    slots.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+}
+
+fn take_f32(slots: &[(String, HostValue)], name: &str) -> Result<Tensor> {
+    let v = find_slot(slots, name).with_context(|| format!("missing slot '{name}'"))?;
+    Ok(v.as_f32().with_context(|| format!("slot '{name}' is not f32"))?.clone())
+}
+
+// ---------------------------------------------------------------------------
+// MLP replica
+// ---------------------------------------------------------------------------
+
+/// Trainable MLP classifier: `fc0..fcN` Dense→ReLU stack, softmax
+/// cross-entropy on the final logits. Batch layout: `[x (B, d_in) f32,
+/// y (B) i32]`.
+pub struct HostMlpTrainer {
+    ws: Vec<Tensor>,
+    bs: Vec<Tensor>,
+}
+
+impl HostMlpTrainer {
+    /// Deterministic synthetic initialization (glorot weights, zero
+    /// biases — `serve::model::synth_mlp_slots` with the same seed gives
+    /// the same bits).
+    pub fn new(dims: &[usize], seed: u64) -> Self {
+        Self::from_slots(&synth_mlp_slots(dims, seed)).expect("synthetic slots are well-formed")
+    }
+
+    /// Rebuild from checkpoint-style slots (`params/fc{i}/{w,b}`).
+    pub fn from_slots(slots: &[(String, HostValue)]) -> Result<Self> {
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        while find_slot(slots, &format!("params/fc{}/w", ws.len())).is_some() {
+            let i = ws.len();
+            let w = take_f32(slots, &format!("params/fc{i}/w"))?;
+            let b = take_f32(slots, &format!("params/fc{i}/b"))?;
+            if w.shape().len() != 2 {
+                bail!("params/fc{i}/w must be rank 2, got {:?}", w.shape());
+            }
+            if b.shape() != [w.shape()[1]].as_slice() {
+                bail!("params/fc{i}/b shape {:?} vs d_out {}", b.shape(), w.shape()[1]);
+            }
+            if let Some(prev) = ws.last() {
+                if prev.shape()[1] != w.shape()[0] {
+                    bail!("fc{i} input dim {} does not chain from fc{}", w.shape()[0], i - 1);
+                }
+            }
+            ws.push(w);
+            bs.push(b);
+        }
+        if ws.is_empty() {
+            bail!("no params/fc0/w slot — not an MLP parameter set");
+        }
+        Ok(HostMlpTrainer { ws, bs })
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.ws[0].shape()[0]
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.ws.last().unwrap().shape()[1]
+    }
+}
+
+impl GradStep for HostMlpTrainer {
+    fn grad_slots(&self) -> Vec<(String, Vec<usize>)> {
+        let mut out = Vec::with_capacity(2 * self.ws.len());
+        for (i, (w, b)) in self.ws.iter().zip(self.bs.iter()).enumerate() {
+            out.push((format!("params/fc{i}/w"), w.shape().to_vec()));
+            out.push((format!("params/fc{i}/b"), b.shape().to_vec()));
+        }
+        out
+    }
+
+    fn compute(&mut self, batch: &[HostValue]) -> Result<ShardGrad> {
+        if batch.len() != 2 {
+            bail!("mlp batch is [x, y], got {} tensors", batch.len());
+        }
+        let x = batch[0].as_f32().context("mlp batch/x")?;
+        let y = batch[1].as_i32().context("mlp batch/y")?;
+        let nl = self.ws.len();
+        let n_classes = self.n_classes();
+        if x.shape().len() != 2 || x.shape()[1] != self.d_in() {
+            bail!("mlp batch/x shape {:?}, expected (B, {})", x.shape(), self.d_in());
+        }
+        let n = x.shape()[0];
+        if y.len() != n {
+            bail!("mlp batch/y has {} labels for {} rows", y.len(), n);
+        }
+
+        let mut acc: Vec<Vec<f64>> = self
+            .ws
+            .iter()
+            .zip(self.bs.iter())
+            .flat_map(|(w, b)| [vec![0.0f64; w.len()], vec![0.0f64; b.len()]])
+            .collect();
+        let mut loss_sum = 0.0f64;
+
+        for i in 0..n {
+            let label = y[i];
+            if label < 0 || label as usize >= n_classes {
+                bail!("row {i}: label {label} out of range 0..{n_classes}");
+            }
+            let label = label as usize;
+
+            // forward, caching each layer's input and pre-activation
+            let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
+            let mut pre: Vec<Vec<f32>> = Vec::with_capacity(nl);
+            let mut h: Vec<f32> = x.row(i).to_vec();
+            for l in 0..nl {
+                let a = dense_fwd(&self.ws[l], self.bs[l].data(), &h);
+                acts.push(std::mem::take(&mut h));
+                if l + 1 < nl {
+                    h = a.clone();
+                    relu(&mut h);
+                }
+                pre.push(a);
+            }
+
+            // softmax cross-entropy (stable) and its logit gradient
+            let logits = &pre[nl - 1];
+            let m = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let exps: Vec<f32> = logits.iter().map(|&v| (v - m).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            loss_sum += (z.ln() - (logits[label] - m)) as f64;
+            let mut delta: Vec<f32> = exps.iter().map(|&e| e / z).collect();
+            delta[label] -= 1.0;
+
+            // backward
+            for l in (0..nl).rev() {
+                {
+                    let (gw, rest) = acc[2 * l..].split_first_mut().unwrap();
+                    dense_accumulate(gw, &mut rest[0], &acts[l], &delta);
+                }
+                if l > 0 {
+                    let mut dx = dense_bwd_input(&self.ws[l], &delta);
+                    relu_mask(&mut dx, &pre[l - 1]);
+                    delta = dx;
+                }
+            }
+        }
+
+        let grads = acc
+            .into_iter()
+            .zip(self.grad_slots())
+            .map(|(a, (_, shape))| Tensor::new(shape, a.into_iter().map(|v| v as f32).collect()))
+            .collect();
+        Ok(ShardGrad { loss_sum, n_examples: n, grads })
+    }
+
+    fn apply(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()> {
+        if mean_grads.len() != 2 * self.ws.len() {
+            bail!("mlp apply: {} grads for {} slots", mean_grads.len(), 2 * self.ws.len());
+        }
+        for l in 0..self.ws.len() {
+            sgd_apply(&format!("params/fc{l}/w"), &mut self.ws[l], &mean_grads[2 * l], lr)?;
+            sgd_apply(&format!("params/fc{l}/b"), &mut self.bs[l], &mean_grads[2 * l + 1], lr)?;
+        }
+        Ok(())
+    }
+
+    fn params(&self) -> Vec<(String, Tensor)> {
+        let mut out = Vec::with_capacity(2 * self.ws.len());
+        for (i, (w, b)) in self.ws.iter().zip(self.bs.iter()).enumerate() {
+            out.push((format!("params/fc{i}/w"), w.clone()));
+            out.push((format!("params/fc{i}/b"), b.clone()));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NCF replica
+// ---------------------------------------------------------------------------
+
+/// Trainable NeuMF scorer (paper §4.4): GMF element-wise product ∥ MLP
+/// tower on a second embedding pair → Dense head → one logit, binary
+/// cross-entropy. Batch layout: `[user (B) i32, item (B) i32,
+/// label (B) f32]` with labels in `[0, 1]`.
+pub struct HostNcfTrainer {
+    gmf_user: Tensor,
+    gmf_item: Tensor,
+    mlp_user: Tensor,
+    mlp_item: Tensor,
+    mlp_w: Vec<Tensor>,
+    mlp_b: Vec<Tensor>,
+    head_w: Tensor,
+    head_b: Tensor,
+}
+
+impl HostNcfTrainer {
+    /// Deterministic synthetic initialization
+    /// (`serve::model::synth_ncf_slots`).
+    pub fn new(dims: &NcfDims, seed: u64) -> Self {
+        Self::from_slots(&synth_ncf_slots(dims, seed)).expect("synthetic slots are well-formed")
+    }
+
+    /// Rebuild from checkpoint-style slots (the `params/*` names the
+    /// Layer-2 manifest and `synth_ncf_slots` use).
+    pub fn from_slots(slots: &[(String, HostValue)]) -> Result<Self> {
+        let table = |name: &str| -> Result<Tensor> {
+            let t = take_f32(slots, &format!("params/{name}/table"))?;
+            if t.shape().len() != 2 {
+                bail!("{name}: embedding table must be rank 2, got {:?}", t.shape());
+            }
+            Ok(t)
+        };
+        let (gmf_user, gmf_item) = (table("gmf_user")?, table("gmf_item")?);
+        let (mlp_user, mlp_item) = (table("mlp_user")?, table("mlp_item")?);
+        if gmf_user.shape()[1] != gmf_item.shape()[1] {
+            bail!("GMF user/item factor dims differ");
+        }
+        if gmf_user.shape()[0] != mlp_user.shape()[0] || gmf_item.shape()[0] != mlp_item.shape()[0]
+        {
+            bail!("GMF and MLP embedding vocab sizes differ");
+        }
+        let mut mlp_w = Vec::new();
+        let mut mlp_b = Vec::new();
+        while find_slot(slots, &format!("params/mlp{}/w", mlp_w.len())).is_some() {
+            let i = mlp_w.len();
+            let w = take_f32(slots, &format!("params/mlp{i}/w"))?;
+            let b = take_f32(slots, &format!("params/mlp{i}/b"))?;
+            if w.shape().len() != 2 || b.shape() != [w.shape()[1]].as_slice() {
+                bail!("params/mlp{i} has inconsistent shapes");
+            }
+            mlp_w.push(w);
+            mlp_b.push(b);
+        }
+        if mlp_w.is_empty() {
+            bail!("no params/mlp0/w slot — not an NCF parameter set");
+        }
+        if mlp_w[0].shape()[0] != mlp_user.shape()[1] + mlp_item.shape()[1] {
+            bail!("mlp0 input dim does not match concatenated MLP embeddings");
+        }
+        let head_w = take_f32(slots, "params/head/w")?;
+        let head_b = take_f32(slots, "params/head/b")?;
+        if head_w.shape() != [gmf_user.shape()[1] + mlp_w.last().unwrap().shape()[1], 1].as_slice()
+        {
+            bail!("head input dim does not match [gmf, mlp] concat");
+        }
+        if head_b.shape() != [1].as_slice() {
+            bail!("NCF head must produce one logit");
+        }
+        Ok(HostNcfTrainer { gmf_user, gmf_item, mlp_user, mlp_item, mlp_w, mlp_b, head_w, head_b })
+    }
+
+    pub fn n_users(&self) -> usize {
+        self.gmf_user.shape()[0]
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.gmf_item.shape()[0]
+    }
+
+    fn slot_tensors(&self) -> Vec<(String, &Tensor)> {
+        let mut out = vec![
+            ("params/gmf_user/table".to_string(), &self.gmf_user),
+            ("params/gmf_item/table".to_string(), &self.gmf_item),
+            ("params/mlp_user/table".to_string(), &self.mlp_user),
+            ("params/mlp_item/table".to_string(), &self.mlp_item),
+        ];
+        for (i, (w, b)) in self.mlp_w.iter().zip(self.mlp_b.iter()).enumerate() {
+            out.push((format!("params/mlp{i}/w"), w));
+            out.push((format!("params/mlp{i}/b"), b));
+        }
+        out.push(("params/head/w".to_string(), &self.head_w));
+        out.push(("params/head/b".to_string(), &self.head_b));
+        out
+    }
+}
+
+impl GradStep for HostNcfTrainer {
+    fn grad_slots(&self) -> Vec<(String, Vec<usize>)> {
+        self.slot_tensors().into_iter().map(|(n, t)| (n, t.shape().to_vec())).collect()
+    }
+
+    fn compute(&mut self, batch: &[HostValue]) -> Result<ShardGrad> {
+        if batch.len() != 3 {
+            bail!("ncf batch is [user, item, label], got {} tensors", batch.len());
+        }
+        let users = batch[0].as_i32().context("ncf batch/user")?;
+        let items = batch[1].as_i32().context("ncf batch/item")?;
+        let labels = batch[2].as_f32().context("ncf batch/label")?;
+        let n = users.len();
+        if items.len() != n || labels.len() != n {
+            bail!(
+                "ncf batch arity mismatch: {n} users, {} items, {} labels",
+                items.len(),
+                labels.len()
+            );
+        }
+        let f = self.gmf_user.shape()[1];
+        // the two MLP embedding widths may differ — each table gets its
+        // own row stride
+        let mu_w = self.mlp_user.shape()[1];
+        let mi_w = self.mlp_item.shape()[1];
+        let nt = self.mlp_w.len();
+
+        let slots = self.grad_slots();
+        let mut acc: Vec<Vec<f64>> = slots
+            .iter()
+            .map(|(_, shape)| vec![0.0f64; shape.iter().product()])
+            .collect();
+        // slot layout: [gmf_user, gmf_item, mlp_user, mlp_item,
+        //               mlp0/w, mlp0/b, …, head/w, head/b]
+        let head_w_slot = 4 + 2 * nt;
+        let mut loss_sum = 0.0f64;
+
+        for i in 0..n {
+            let (u, it, yv) = (users[i], items[i], labels.data()[i]);
+            if u < 0 || u as usize >= self.n_users() {
+                bail!("row {i}: user id {u} out of range 0..{}", self.n_users());
+            }
+            if it < 0 || it as usize >= self.n_items() {
+                bail!("row {i}: item id {it} out of range 0..{}", self.n_items());
+            }
+            if !(0.0..=1.0).contains(&yv) {
+                bail!("row {i}: label {yv} outside [0, 1]");
+            }
+            let (u, it) = (u as usize, it as usize);
+
+            // forward (mirrors serve::model::NcfModel::score_row)
+            let gu = self.gmf_user.row(u);
+            let gi = self.gmf_item.row(it);
+            let mut h: Vec<f32> = Vec::with_capacity(mu_w + mi_w);
+            h.extend_from_slice(self.mlp_user.row(u));
+            h.extend_from_slice(self.mlp_item.row(it));
+            let mut tower_in: Vec<Vec<f32>> = Vec::with_capacity(nt);
+            let mut tower_pre: Vec<Vec<f32>> = Vec::with_capacity(nt);
+            for l in 0..nt {
+                let a = dense_fwd(&self.mlp_w[l], self.mlp_b[l].data(), &h);
+                tower_in.push(std::mem::take(&mut h));
+                h = a.clone();
+                relu(&mut h);
+                tower_pre.push(a);
+            }
+            let mut both: Vec<f32> = Vec::with_capacity(f + h.len());
+            both.extend(gu.iter().zip(gi.iter()).map(|(a, b)| a * b));
+            both.extend_from_slice(&h);
+            let s = dense_fwd(&self.head_w, self.head_b.data(), &both)[0];
+
+            // stable BCE-with-logits and its gradient
+            loss_sum += (s.max(0.0) - s * yv + (-s.abs()).exp().ln_1p()) as f64;
+            let sig = 1.0 / (1.0 + (-s).exp());
+            let d = sig - yv;
+
+            // backward: head
+            {
+                let (gw, rest) = acc[head_w_slot..].split_first_mut().unwrap();
+                dense_accumulate(gw, &mut rest[0], &both, &[d]);
+            }
+            let dboth: Vec<f32> = self.head_w.data().iter().map(|&w| w * d).collect();
+            let (dgmf, dh) = dboth.split_at(f);
+
+            // GMF embedding rows
+            for (k, &dg) in dgmf.iter().enumerate() {
+                acc[0][u * f + k] += (dg * gi[k]) as f64;
+                acc[1][it * f + k] += (dg * gu[k]) as f64;
+            }
+
+            // MLP tower
+            let mut delta: Vec<f32> = dh.to_vec();
+            for l in (0..nt).rev() {
+                relu_mask(&mut delta, &tower_pre[l]);
+                {
+                    let (gw, rest) = acc[4 + 2 * l..].split_first_mut().unwrap();
+                    dense_accumulate(gw, &mut rest[0], &tower_in[l], &delta);
+                }
+                delta = dense_bwd_input(&self.mlp_w[l], &delta);
+            }
+
+            // MLP embedding rows
+            let (du, di) = delta.split_at(mu_w);
+            for (k, &v) in du.iter().enumerate() {
+                acc[2][u * mu_w + k] += v as f64;
+            }
+            for (k, &v) in di.iter().enumerate() {
+                acc[3][it * mi_w + k] += v as f64;
+            }
+        }
+
+        let grads = acc
+            .into_iter()
+            .zip(slots)
+            .map(|(a, (_, shape))| Tensor::new(shape, a.into_iter().map(|v| v as f32).collect()))
+            .collect();
+        Ok(ShardGrad { loss_sum, n_examples: n, grads })
+    }
+
+    fn apply(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()> {
+        let nt = self.mlp_w.len();
+        if mean_grads.len() != 6 + 2 * nt {
+            bail!("ncf apply: {} grads for {} slots", mean_grads.len(), 6 + 2 * nt);
+        }
+        sgd_apply("params/gmf_user/table", &mut self.gmf_user, &mean_grads[0], lr)?;
+        sgd_apply("params/gmf_item/table", &mut self.gmf_item, &mean_grads[1], lr)?;
+        sgd_apply("params/mlp_user/table", &mut self.mlp_user, &mean_grads[2], lr)?;
+        sgd_apply("params/mlp_item/table", &mut self.mlp_item, &mean_grads[3], lr)?;
+        for l in 0..nt {
+            sgd_apply(&format!("params/mlp{l}/w"), &mut self.mlp_w[l], &mean_grads[4 + 2 * l], lr)?;
+            sgd_apply(&format!("params/mlp{l}/b"), &mut self.mlp_b[l], &mean_grads[5 + 2 * l], lr)?;
+        }
+        sgd_apply("params/head/w", &mut self.head_w, &mean_grads[4 + 2 * nt], lr)?;
+        sgd_apply("params/head/b", &mut self.head_b, &mean_grads[5 + 2 * nt], lr)?;
+        Ok(())
+    }
+
+    fn params(&self) -> Vec<(String, Tensor)> {
+        self.slot_tensors().into_iter().map(|(n, t)| (n, t.clone())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_vector;
+    use crate::util::rng::{Pcg32, Rng};
+
+    fn mlp_batch(rng: &mut Pcg32, b: usize, d: usize, classes: usize) -> Vec<HostValue> {
+        synth_vector::batch(rng, b, d, classes)
+    }
+
+    fn ncf_batch(rng: &mut Pcg32, b: usize, users: usize, items: usize) -> Vec<HostValue> {
+        let mut u = Vec::with_capacity(b);
+        let mut it = Vec::with_capacity(b);
+        let mut y = Vec::with_capacity(b);
+        for _ in 0..b {
+            u.push(rng.next_below(users as u64) as i32);
+            it.push(rng.next_below(items as u64) as i32);
+            y.push(if rng.next_f32() < 0.5 { 1.0 } else { 0.0 });
+        }
+        vec![
+            HostValue::i32(vec![b], u),
+            HostValue::i32(vec![b], it),
+            HostValue::f32(vec![b], y),
+        ]
+    }
+
+    /// Finite-difference gradient check through the GradStep surface:
+    /// nudge one parameter via `apply` with a one-hot "gradient" at
+    /// lr = 1 (so `apply(±ε·e)` moves the parameter by ∓ε), and compare
+    /// the loss slope against `compute`'s analytic gradient. A small
+    /// failure allowance absorbs f32 noise and examples that straddle a
+    /// ReLU kink; real backward bugs fail on a large fraction of indices.
+    fn grad_check<R: GradStep>(replica: &mut R, batch: &[HostValue]) {
+        let eps = 1e-3f32;
+        let slots = replica.grad_slots();
+        let analytic = replica.compute(batch).unwrap();
+        let (mut bad, mut total, mut nonzero) = (0usize, 0usize, 0usize);
+        for (si, (name, shape)) in slots.iter().enumerate() {
+            let elems: usize = shape.iter().product();
+            for idx in 0..elems {
+                let nudge = |r: &mut R, delta: f32| {
+                    let gs: Vec<Tensor> = slots
+                        .iter()
+                        .enumerate()
+                        .map(|(sj, (_, sh))| {
+                            let mut t = Tensor::zeros(sh.clone());
+                            if sj == si {
+                                t.data_mut()[idx] = -delta;
+                            }
+                            t
+                        })
+                        .collect();
+                    r.apply(&gs, 1.0).unwrap();
+                };
+                nudge(&mut *replica, eps);
+                let up = replica.compute(batch).unwrap().loss_sum;
+                nudge(&mut *replica, -2.0 * eps);
+                let down = replica.compute(batch).unwrap().loss_sum;
+                nudge(&mut *replica, eps); // restore
+                let num = ((up - down) / (2.0 * eps as f64)) as f32;
+                let ana = analytic.grads[si].data()[idx];
+                total += 1;
+                if ana != 0.0 || num.abs() > 1e-3 {
+                    nonzero += 1;
+                }
+                if (num - ana).abs() > 0.05 * ana.abs().max(0.2) {
+                    bad += 1;
+                    eprintln!("{name}[{idx}]: numeric {num} vs analytic {ana}");
+                }
+            }
+        }
+        assert!(nonzero * 4 >= total, "gradcheck degenerate: {nonzero}/{total} nonzero");
+        assert!(bad * 50 <= total, "gradcheck: {bad}/{total} mismatches");
+    }
+
+    #[test]
+    fn mlp_gradients_match_finite_differences() {
+        let mut t = HostMlpTrainer::new(&[6, 5, 3], 11);
+        let mut rng = Pcg32::new(5, 5);
+        let batch = mlp_batch(&mut rng, 4, 6, 3);
+        grad_check(&mut t, &batch);
+    }
+
+    #[test]
+    fn ncf_gradients_match_finite_differences() {
+        let dims = NcfDims {
+            n_users: 5,
+            n_items: 6,
+            factors: 3,
+            mlp_dim: 3,
+            mlp_layers: vec![4, 3],
+        };
+        let mut t = HostNcfTrainer::new(&dims, 3);
+        let mut rng = Pcg32::new(8, 2);
+        let batch = ncf_batch(&mut rng, 4, 5, 6);
+        grad_check(&mut t, &batch);
+    }
+
+    #[test]
+    fn ncf_gradients_with_asymmetric_mlp_embedding_widths() {
+        // mlp_user and mlp_item tables with *different* factor dims —
+        // the backward must stride each table by its own width.
+        let mut rng = Pcg32::new(41, 0);
+        let (users, items, factors) = (4usize, 5usize, 2usize);
+        let (mu_w, mi_w, hidden) = (3usize, 2usize, 4usize);
+        let t = |shape: Vec<usize>, rng: &mut Pcg32| {
+            HostValue::F32(crate::tensor::Tensor::randn(shape, rng).map(|v| v * 0.3))
+        };
+        let slots = vec![
+            ("params/gmf_user/table".to_string(), t(vec![users, factors], &mut rng)),
+            ("params/gmf_item/table".to_string(), t(vec![items, factors], &mut rng)),
+            ("params/mlp_user/table".to_string(), t(vec![users, mu_w], &mut rng)),
+            ("params/mlp_item/table".to_string(), t(vec![items, mi_w], &mut rng)),
+            ("params/mlp0/w".to_string(), t(vec![mu_w + mi_w, hidden], &mut rng)),
+            ("params/mlp0/b".to_string(), t(vec![hidden], &mut rng)),
+            ("params/head/w".to_string(), t(vec![factors + hidden, 1], &mut rng)),
+            ("params/head/b".to_string(), t(vec![1], &mut rng)),
+        ];
+        let mut model = HostNcfTrainer::from_slots(&slots).unwrap();
+        let mut rng = Pcg32::new(6, 6);
+        let batch = ncf_batch(&mut rng, 5, users, items);
+        grad_check(&mut model, &batch);
+    }
+
+    #[test]
+    fn compute_is_bitwise_deterministic_and_pure() {
+        let mut t = HostMlpTrainer::new(&[8, 6, 4], 2);
+        let mut rng = Pcg32::new(1, 1);
+        let batch = mlp_batch(&mut rng, 5, 8, 4);
+        let p0 = t.params();
+        let a = t.compute(&batch).unwrap();
+        let b = t.compute(&batch).unwrap();
+        assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits());
+        for (ga, gb) in a.grads.iter().zip(b.grads.iter()) {
+            for (x, y) in ga.data().iter().zip(gb.data().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // compute must not have touched the parameters
+        for ((_, x), (_, y)) in p0.iter().zip(t.params().iter()) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn shard_sums_concatenate_to_the_full_batch() {
+        // Gradients are per-example sums, so two half-shards must add up
+        // to the full batch (to f64-accumulation noise).
+        let mut t = HostMlpTrainer::new(&[6, 4, 3], 9);
+        let mut rng = Pcg32::new(4, 4);
+        let full = mlp_batch(&mut rng, 6, 6, 3);
+        let x = full[0].as_f32().unwrap();
+        let y = full[1].as_i32().unwrap();
+        let half = |lo: usize, hi: usize| -> Vec<HostValue> {
+            let d = x.shape()[1];
+            vec![
+                HostValue::f32(vec![hi - lo, d], x.data()[lo * d..hi * d].to_vec()),
+                HostValue::i32(vec![hi - lo], y[lo..hi].to_vec()),
+            ]
+        };
+        let whole = t.compute(&full).unwrap();
+        let a = t.compute(&half(0, 3)).unwrap();
+        let b = t.compute(&half(3, 6)).unwrap();
+        assert_eq!(whole.n_examples, a.n_examples + b.n_examples);
+        assert!((whole.loss_sum - (a.loss_sum + b.loss_sum)).abs() < 1e-6);
+        for (w, (ga, gb)) in whole.grads.iter().zip(a.grads.iter().zip(b.grads.iter())) {
+            for ((&wv, &av), &bv) in w.data().iter().zip(ga.data()).zip(gb.data()) {
+                assert!(
+                    (wv - (av + bv)).abs() <= 1e-5 * wv.abs().max(1.0),
+                    "{wv} vs {av}+{bv}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_training_learns_both_models() {
+        // MLP on the separable vector task
+        let mut t = HostMlpTrainer::new(&[20, 16, 10], 1);
+        let mut rng = Pcg32::new(7, 0);
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for step in 0..60 {
+            let batch = mlp_batch(&mut rng, 16, 20, 10);
+            let sg = t.compute(&batch).unwrap();
+            let inv = 1.0 / sg.n_examples as f64;
+            let mean: Vec<Tensor> = sg
+                .grads
+                .iter()
+                .map(|g| g.map(|v| (v as f64 * inv) as f32))
+                .collect();
+            t.apply(&mean, 0.1).unwrap();
+            let l = sg.loss_sum * inv;
+            if step == 0 {
+                first = l;
+            }
+            last = l;
+        }
+        assert!(last < 0.6 * first, "mlp loss should fall: {first:.3} → {last:.3}");
+
+        // NCF on random labels still reduces BCE below ln 2 by fitting bias
+        let dims = NcfDims { n_users: 30, n_items: 40, ..NcfDims::default() };
+        let mut t = HostNcfTrainer::new(&dims, 1);
+        let mut rng = Pcg32::new(9, 0);
+        let mut losses = Vec::new();
+        for _ in 0..40 {
+            let batch = ncf_batch(&mut rng, 16, 30, 40);
+            let sg = t.compute(&batch).unwrap();
+            let inv = 1.0 / sg.n_examples as f64;
+            let mean: Vec<Tensor> =
+                sg.grads.iter().map(|g| g.map(|v| (v as f64 * inv) as f32)).collect();
+            t.apply(&mean, 0.1).unwrap();
+            losses.push(sg.loss_sum * inv);
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn malformed_batches_are_rejected() {
+        let mut t = HostMlpTrainer::new(&[4, 3], 1);
+        // wrong arity
+        assert!(t.compute(&[HostValue::f32(vec![1, 4], vec![0.0; 4])]).is_err());
+        // label out of range
+        let bad = vec![
+            HostValue::f32(vec![1, 4], vec![0.0; 4]),
+            HostValue::i32(vec![1], vec![7]),
+        ];
+        assert!(t.compute(&bad).is_err());
+        // wrong feature width
+        let bad = vec![
+            HostValue::f32(vec![1, 5], vec![0.0; 5]),
+            HostValue::i32(vec![1], vec![0]),
+        ];
+        assert!(t.compute(&bad).is_err());
+
+        let dims = NcfDims { n_users: 4, n_items: 4, ..NcfDims::default() };
+        let mut t = HostNcfTrainer::new(&dims, 1);
+        let bad = vec![
+            HostValue::i32(vec![1], vec![9]),
+            HostValue::i32(vec![1], vec![0]),
+            HostValue::f32(vec![1], vec![1.0]),
+        ];
+        assert!(t.compute(&bad).is_err(), "user id out of range must fail");
+        let bad = vec![
+            HostValue::i32(vec![1], vec![0]),
+            HostValue::i32(vec![1], vec![0]),
+            HostValue::f32(vec![1], vec![2.0]),
+        ];
+        assert!(t.compute(&bad).is_err(), "label outside [0,1] must fail");
+    }
+
+    #[test]
+    fn params_roundtrip_through_slots() {
+        let t = HostMlpTrainer::new(&[5, 4, 2], 6);
+        let slots: Vec<(String, HostValue)> =
+            t.params().into_iter().map(|(n, p)| (n, HostValue::F32(p))).collect();
+        let t2 = HostMlpTrainer::from_slots(&slots).unwrap();
+        for ((na, a), (nb, b)) in t.params().iter().zip(t2.params().iter()) {
+            assert_eq!(na, nb);
+            assert_eq!(a, b);
+        }
+        let dims = NcfDims { n_users: 6, n_items: 7, ..NcfDims::default() };
+        let t = HostNcfTrainer::new(&dims, 6);
+        let slots: Vec<(String, HostValue)> =
+            t.params().into_iter().map(|(n, p)| (n, HostValue::F32(p))).collect();
+        let t2 = HostNcfTrainer::from_slots(&slots).unwrap();
+        for ((na, a), (nb, b)) in t.params().iter().zip(t2.params().iter()) {
+            assert_eq!(na, nb);
+            assert_eq!(a, b);
+        }
+    }
+}

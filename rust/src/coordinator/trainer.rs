@@ -92,6 +92,27 @@ pub struct StepOutputs {
     pub grad_stats: Option<Tensor>,
 }
 
+/// A step whose compute phase ran but whose state updates are not yet
+/// applied (see [`Trainer::step_compute`]). Holds the program's output
+/// literals; [`Trainer::commit`] consumes it to perform the carry, and
+/// dropping it abandons the step (persistent state keeps its pre-step
+/// values — the "skip this step" primitive).
+pub struct PendingStep {
+    /// Loss/flag/statistics extracted from the run.
+    pub outputs: StepOutputs,
+    outs: Vec<xla::Literal>,
+}
+
+impl PendingStep {
+    pub fn loss(&self) -> f32 {
+        self.outputs.loss
+    }
+
+    pub fn grad_finite(&self) -> bool {
+        self.outputs.grad_finite
+    }
+}
+
 /// Result of a full [`Trainer::train`] run.
 #[derive(Debug)]
 pub struct TrainReport {
@@ -185,6 +206,10 @@ impl Trainer {
 
     /// One optimization step. `batch` must match [`Self::batch_slot_names`]
     /// order; `capture_stats` additionally fetches the aux statistics.
+    ///
+    /// Equivalent to [`Self::step_compute`] followed by [`Self::commit`] —
+    /// the two-phase form the distributed path builds on (compute a step,
+    /// exchange/inspect, then apply).
     pub fn step(
         &mut self,
         batch: &[HostValue],
@@ -193,6 +218,30 @@ impl Trainer {
         step_num: usize,
         capture_stats: bool,
     ) -> Result<StepOutputs> {
+        let pending = self.step_compute(batch, loss_scale, lr, step_num, capture_stats)?;
+        self.commit(pending)
+    }
+
+    /// **Compute phase** of a step: execute the train-step program and
+    /// extract its outputs, but do *not* touch the persistent state — the
+    /// parameters/optimizer state still hold their pre-step values until
+    /// [`Self::commit`] runs (or the [`PendingStep`] is dropped, which
+    /// abandons the step entirely).
+    ///
+    /// This is the `GradStep` seam at the executable level (see
+    /// [`super::grad_step`]): the AOT `train_step` artifacts fuse the
+    /// gradient *application* into the graph, so the split exposed here is
+    /// computed-vs-committed rather than grad-vs-apply. Host replicas
+    /// ([`super::host_trainer`]) expose the full gradient seam; a future
+    /// grad-outputting artifact slots into the same two-phase shape.
+    pub fn step_compute(
+        &mut self,
+        batch: &[HostValue],
+        loss_scale: f32,
+        lr: f32,
+        step_num: usize,
+        capture_stats: bool,
+    ) -> Result<PendingStep> {
         if batch.len() != self.batch_in_idx.len() {
             bail!("expected {} batch tensors, got {}", self.batch_in_idx.len(), batch.len());
         }
@@ -241,10 +290,10 @@ impl Trainer {
 
         // --- execute ---
         let t_exec = std::time::Instant::now();
-        let mut outs = self.exe.run_literals(&refs)?;
+        let outs = self.exe.run_literals(&refs)?;
         self.profiler.add("device", t_exec.elapsed());
 
-        // --- extract scalars / stats, then carry persistent state ---
+        // --- extract scalars / stats (persistent state untouched) ---
         let t_post = std::time::Instant::now();
         let loss = HostValue::from_literal(&outs[self.out_loss])?.item_f32()?;
         let finite = HostValue::from_literal(&outs[self.out_flag])?.item_f32()? > 0.5;
@@ -258,8 +307,20 @@ impl Trainer {
         };
         let site_stats = fetch_stats(self.out_site_stats, &outs)?;
         let grad_stats = fetch_stats(self.out_grad_stats, &outs)?;
+        self.profiler.add("post", t_post.elapsed());
 
-        // move output literals into the persistent slots (zero-copy carry);
+        Ok(PendingStep {
+            outputs: StepOutputs { loss, grad_finite: finite, site_stats, grad_stats },
+            outs,
+        })
+    }
+
+    /// **Apply phase** of a step: move the carried output literals into
+    /// the persistent slots (zero-copy), making the pending step's
+    /// parameter/optimizer updates visible to the next step.
+    pub fn commit(&mut self, pending: PendingStep) -> Result<StepOutputs> {
+        let PendingStep { outputs, mut outs } = pending;
+        let t_post = std::time::Instant::now();
         // indices are taken in descending order so swap_remove stays valid
         let mut order: Vec<(usize, usize)> = self
             .carry_out_idx
@@ -272,8 +333,7 @@ impl Trainer {
             self.persistent[slot] = outs.swap_remove(oi);
         }
         self.profiler.add("post", t_post.elapsed());
-
-        Ok(StepOutputs { loss, grad_finite: finite, site_stats, grad_stats })
+        Ok(outputs)
     }
 
     /// Current value of a persistent slot by manifest name.

@@ -12,11 +12,18 @@
 //!   affine token grammar) for the Transformer/BLEU pipeline.
 //! * [`synth_cf`] — latent-factor implicit feedback for NCF (HR/NDCG, the
 //!   1-positive-vs-99-negatives protocol).
+//! * [`synth_vector`] — the separable class-pattern vector task (the
+//!   quickstart MLP's data; shared by the dist equivalence fixtures).
 //! * [`batcher`] — epoch shuffling + batch assembly into manifest order.
+//! * [`sharded`] — deterministic chunked sharding of the batch stream for
+//!   data-parallel training (worker shards partition the single-worker
+//!   stream exactly).
 //! * [`prefetch`] — double-buffered background batch production.
 
 pub mod batcher;
 pub mod prefetch;
+pub mod sharded;
+pub mod synth_vector;
 pub mod synth_cf;
 pub mod synth_image;
 pub mod synth_translation;

@@ -1,0 +1,125 @@
+//! Deterministic batch sharding for data-parallel training.
+//!
+//! A [`ShardedBatcher`] wraps the epoch-shuffling [`Batcher`] and splits
+//! every global batch into a **fixed number of contiguous chunks** — the
+//! reduce granularity of the distributed gradient exchange
+//! ([`crate::dist`]). Two invariants make multi-worker training bitwise
+//! reproducible:
+//!
+//! * **Same stream everywhere.** Every worker constructs its own
+//!   `ShardedBatcher` with the same (n, batch, chunks, seed) and pulls
+//!   the identical global index stream; no coordination, no skew.
+//! * **Chunks partition the global batch exactly.** Chunk `c` of step `s`
+//!   is the contiguous slice `[c·B/C, (c+1)·B/C)` of the step's global
+//!   batch, so concatenating the chunks reproduces the single-worker
+//!   batch byte for byte — which worker *computes* a chunk is the only
+//!   thing the worker count changes.
+
+use anyhow::{bail, Result};
+
+use super::batcher::Batcher;
+
+/// Epoch-shuffled global batches pre-split into fixed contiguous chunks.
+#[derive(Debug, Clone)]
+pub struct ShardedBatcher {
+    inner: Batcher,
+    chunks: usize,
+    chunk_size: usize,
+}
+
+impl ShardedBatcher {
+    /// `global_batch` must divide into `chunks` equal, non-empty chunks
+    /// (the fixed reduce granularity; see DESIGN.md "Distributed
+    /// training").
+    pub fn new(n: usize, global_batch: usize, chunks: usize, seed: u64) -> Result<Self> {
+        if chunks == 0 {
+            bail!("chunks must be >= 1");
+        }
+        if global_batch == 0 || global_batch % chunks != 0 {
+            bail!("global batch {global_batch} is not divisible into {chunks} equal chunks");
+        }
+        if global_batch > n {
+            bail!("global batch {global_batch} larger than dataset {n}");
+        }
+        Ok(ShardedBatcher {
+            inner: Batcher::new(n, global_batch, seed),
+            chunks,
+            chunk_size: global_batch / chunks,
+        })
+    }
+
+    pub fn chunks(&self) -> usize {
+        self.chunks
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    pub fn global_batch(&self) -> usize {
+        self.inner.batch_size()
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.inner.epoch
+    }
+
+    /// The next global batch as `chunks` contiguous index slices
+    /// (chunk index = position). Reshuffles on epoch boundaries exactly
+    /// like the underlying [`Batcher`].
+    pub fn next_chunks(&mut self) -> Vec<Vec<usize>> {
+        self.inner
+            .next_batch()
+            .chunks(self.chunk_size)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_partition_the_single_worker_stream_exactly() {
+        let mut plain = Batcher::new(100, 20, 42);
+        let mut sharded = ShardedBatcher::new(100, 20, 4, 42).unwrap();
+        for step in 0..15 {
+            let reference = plain.next_batch().to_vec();
+            let chunks = sharded.next_chunks();
+            assert_eq!(chunks.len(), 4);
+            assert!(chunks.iter().all(|c| c.len() == 5));
+            let concat: Vec<usize> = chunks.concat();
+            assert_eq!(concat, reference, "step {step}");
+        }
+        assert_eq!(sharded.epoch(), 2);
+    }
+
+    #[test]
+    fn identically_seeded_instances_agree() {
+        let mut a = ShardedBatcher::new(64, 16, 8, 7).unwrap();
+        let mut b = ShardedBatcher::new(64, 16, 8, 7).unwrap();
+        for _ in 0..10 {
+            assert_eq!(a.next_chunks(), b.next_chunks());
+        }
+    }
+
+    #[test]
+    fn one_chunk_degenerates_to_the_plain_batcher() {
+        let mut plain = Batcher::new(30, 10, 3);
+        let mut sharded = ShardedBatcher::new(30, 10, 1, 3).unwrap();
+        for _ in 0..5 {
+            assert_eq!(sharded.next_chunks(), vec![plain.next_batch().to_vec()]);
+        }
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        assert!(ShardedBatcher::new(100, 20, 0, 1).is_err(), "zero chunks");
+        assert!(ShardedBatcher::new(100, 20, 3, 1).is_err(), "20 % 3 != 0");
+        assert!(ShardedBatcher::new(100, 0, 1, 1).is_err(), "empty batch");
+        assert!(ShardedBatcher::new(10, 20, 2, 1).is_err(), "batch > dataset");
+        let ok = ShardedBatcher::new(100, 20, 20, 1).unwrap();
+        assert_eq!(ok.chunk_size(), 1);
+    }
+}

@@ -1,0 +1,415 @@
+//! The **data-parallel training coordinator**: N worker threads, each
+//! owning a full model replica ([`GradStep`]), drive disjoint shards of
+//! every global batch through the compute phase, exchange packed chunk
+//! gradients over the ring, reduce identically, and apply the same mean
+//! gradient — so replicas stay bitwise in sync without ever shipping
+//! parameters.
+//!
+//! Determinism recipe (each ingredient is load-bearing; see DESIGN.md
+//! "Distributed training"):
+//!
+//! 1. every worker builds its replica from the same factory and its
+//!    batch stream from the same [`ShardedBatcher`] seed;
+//! 2. the global batch is cut into [`DistOptions::chunks`] fixed chunks;
+//!    a worker computes the contiguous chunk range it owns — worker
+//!    count changes *who computes a chunk*, never the chunk itself;
+//! 3. chunk gradients cross the wire as packed [`ChunkGrad`]s (FP32 or
+//!    S2FP8 payloads) and **every** rank — including a single-worker
+//!    run — reduces the same decoded bytes in chunk-index order.
+//!
+//! Consequences, pinned by `tests/integration_dist.rs`: FP32-wire runs
+//! are bitwise identical at any worker count dividing `chunks` (and
+//! identical to the single-worker run); S2FP8-wire runs are bitwise
+//! identical to *each other* across worker counts, and track the FP32
+//! curve within the wire-noise bound while moving ≤ ¼ of the bytes.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::grad_step::GradStep;
+use crate::coordinator::trainer::LrSchedule;
+use crate::data::sharded::ShardedBatcher;
+use crate::metrics::comm::{CommCounters, CommReport};
+use crate::metrics::curve::Curve;
+use crate::runtime::HostValue;
+use crate::tensor::Tensor;
+
+use super::ring::{ring, RingError, RingNode};
+use super::wire::{reduce_chunks, ChunkGrad, WireFormat};
+
+/// Configuration of a distributed run.
+#[derive(Debug, Clone)]
+pub struct DistOptions {
+    /// Worker threads (each owns a full replica). Must divide `chunks`.
+    pub workers: usize,
+    /// Gradient wire format.
+    pub wire: WireFormat,
+    /// Fixed reduce granularity: chunks per global batch. Changing this
+    /// changes the arithmetic; changing `workers` does not.
+    pub chunks: usize,
+    /// Global batch size (split into `chunks` equal chunks).
+    pub global_batch: usize,
+    /// Dataset size the batcher shuffles over.
+    pub n_examples: usize,
+    pub steps: usize,
+    pub lr: LrSchedule,
+    pub seed: u64,
+    /// Console cadence for rank 0 (0 = silent); the loss curve records
+    /// every step regardless.
+    pub log_every: usize,
+    /// Consecutive non-finite **losses** before declaring divergence and
+    /// stopping gracefully (every rank sees the same reduced loss, so
+    /// all break on the same step). Note the stricter gradient rule:
+    /// non-finite *gradients* never reach the wire — they abort the run
+    /// with a [`WireError::NonFinite`](super::wire::WireError) instead,
+    /// because a NaN update would corrupt every replica at once. The
+    /// patience path covers the finite-gradients/non-finite-loss regime.
+    pub divergence_patience: usize,
+}
+
+impl DistOptions {
+    /// Sensible defaults for a small host-model run; override fields as
+    /// needed.
+    pub fn new(workers: usize, wire: WireFormat) -> Self {
+        DistOptions {
+            workers,
+            wire,
+            chunks: 4,
+            global_batch: 32,
+            n_examples: 1024,
+            steps: 50,
+            lr: LrSchedule::Constant(0.05),
+            seed: 2020,
+            log_every: 0,
+            divergence_patience: 10,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.chunks == 0 || self.chunks % self.workers != 0 {
+            bail!(
+                "workers ({}) must divide chunks ({}) so every worker owns an equal chunk range",
+                self.workers,
+                self.chunks
+            );
+        }
+        if self.steps == 0 {
+            bail!("steps must be >= 1");
+        }
+        // batch/chunk divisibility is validated by ShardedBatcher::new
+        Ok(())
+    }
+}
+
+/// Result of a distributed run (rank 0's view; all ranks are verified
+/// bitwise identical before this is returned).
+#[derive(Debug)]
+pub struct DistReport {
+    /// Per-step `["loss", "lr"]` curve (loss = mean over the global
+    /// batch, identical on every rank).
+    pub curve: Curve,
+    /// Final parameters (replica-sync–checked across all workers).
+    pub final_params: Vec<(String, Tensor)>,
+    /// Gradient-exchange traffic totals.
+    pub comm: CommReport,
+    pub steps_run: usize,
+    pub diverged: bool,
+    pub wall_secs: f64,
+}
+
+struct WorkerOut {
+    rank: usize,
+    curve: Curve,
+    params: Vec<(String, Tensor)>,
+    steps_run: usize,
+    diverged: bool,
+}
+
+/// Run data-parallel training: `make_replica(rank)` builds each worker's
+/// replica (all must initialize identically), `provider(step, indices)`
+/// materializes the batch tensors for one chunk's example indices (must
+/// be a pure function of its arguments).
+pub fn train<R, MF, BP>(opts: &DistOptions, make_replica: MF, provider: BP) -> Result<DistReport>
+where
+    R: GradStep,
+    MF: Fn(usize) -> Result<R> + Sync,
+    BP: Fn(usize, &[usize]) -> Result<Vec<HostValue>> + Sync,
+{
+    opts.validate()?;
+    // surface bad batch geometry before spawning anything
+    ShardedBatcher::new(opts.n_examples, opts.global_batch, opts.chunks, opts.seed)?;
+
+    let counters = CommCounters::new();
+    let wall = Instant::now();
+    let nodes = ring::<Vec<ChunkGrad>>(opts.workers);
+
+    let results: Vec<Result<WorkerOut>> = std::thread::scope(|s| {
+        let handles: Vec<_> = nodes
+            .into_iter()
+            .map(|node| {
+                let (make, prov, ctr) = (&make_replica, &provider, &counters);
+                s.spawn(move || worker_loop(opts, node, make, prov, ctr))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("worker thread panicked"))))
+            .collect()
+    });
+
+    // Prefer a root-cause error over the ring-disconnect noise the other
+    // workers see when one of them fails.
+    let mut outs = Vec::with_capacity(results.len());
+    let mut errs = Vec::new();
+    for r in results {
+        match r {
+            Ok(o) => outs.push(o),
+            Err(e) => errs.push(e),
+        }
+    }
+    if let Some(e) = errs
+        .into_iter()
+        .reduce(|best, e| if is_disconnect(&best) && !is_disconnect(&e) { e } else { best })
+    {
+        return Err(e);
+    }
+
+    outs.sort_by_key(|o| o.rank);
+    let rank0 = outs.remove(0);
+    for o in &outs {
+        if !curves_bitwise_eq(&rank0.curve, &o.curve) {
+            bail!("replica desync: rank {} loss curve differs from rank 0", o.rank);
+        }
+        if !params_bitwise_eq(&rank0.params, &o.params) {
+            bail!("replica desync: rank {} parameters differ from rank 0", o.rank);
+        }
+    }
+
+    Ok(DistReport {
+        comm: counters.report(rank0.steps_run),
+        curve: rank0.curve,
+        final_params: rank0.params,
+        steps_run: rank0.steps_run,
+        diverged: rank0.diverged,
+        wall_secs: wall.elapsed().as_secs_f64(),
+    })
+}
+
+fn worker_loop<R: GradStep>(
+    opts: &DistOptions,
+    node: RingNode<Vec<ChunkGrad>>,
+    make_replica: &(impl Fn(usize) -> Result<R> + Sync),
+    provider: &(impl Fn(usize, &[usize]) -> Result<Vec<HostValue>> + Sync),
+    counters: &CommCounters,
+) -> Result<WorkerOut> {
+    let rank = node.rank();
+    let mut replica =
+        make_replica(rank).with_context(|| format!("building replica for rank {rank}"))?;
+    let slots = replica.grad_slots();
+    let mut batcher =
+        ShardedBatcher::new(opts.n_examples, opts.global_batch, opts.chunks, opts.seed)?;
+    let chunks_per_worker = opts.chunks / opts.workers;
+    let first_chunk = rank * chunks_per_worker;
+
+    let mut curve = Curve::new(&["loss", "lr"]);
+    let mut bundle: Vec<ChunkGrad> =
+        (0..chunks_per_worker).map(|_| ChunkGrad::empty(opts.wire)).collect();
+    let mut bad_streak = 0usize;
+    let mut diverged = false;
+    let mut steps_run = 0usize;
+
+    for step in 1..=opts.steps {
+        let chunk_indices = batcher.next_chunks();
+        let lr = opts.lr.at(step - 1);
+
+        // compute phase over this worker's chunk range
+        for (local, msg) in bundle.iter_mut().enumerate() {
+            let chunk = first_chunk + local;
+            let batch = provider(step - 1, &chunk_indices[chunk])
+                .with_context(|| format!("building batch for step {step} chunk {chunk}"))?;
+            let sg = replica
+                .compute(&batch)
+                .with_context(|| format!("compute at step {step} chunk {chunk}"))?;
+            if sg.grads.len() != slots.len() {
+                bail!("replica produced {} grads for {} slots", sg.grads.len(), slots.len());
+            }
+            msg.encode_into(chunk, sg.n_examples, sg.loss_sum, &sg.grads, opts.wire)
+                .with_context(|| format!("encoding wire gradients at step {step}"))?;
+        }
+
+        // exchange: ring all-gather of packed bundles (clones cross the
+        // "wire"; our own bundle comes back in slot `rank` so its
+        // buffers are reclaimed below — steady state allocates nothing)
+        let mut gathered = node.all_gather(std::mem::take(&mut bundle), |msg| {
+            let wire: usize = msg.iter().map(|c| c.wire_bytes()).sum();
+            let f32eq: usize = msg.iter().map(|c| c.f32_wire_bytes()).sum();
+            counters.record_send(wire as u64, f32eq as u64);
+        })?;
+
+        // reduce + apply phases (identical on every rank)
+        let red = reduce_chunks(gathered.iter().flatten(), opts.chunks)?;
+        bundle = std::mem::take(&mut gathered[rank]);
+        let mut shaped = Vec::with_capacity(slots.len());
+        for (g, (name, shape)) in red.grads.into_iter().zip(slots.iter()) {
+            if g.len() != shape.iter().product::<usize>() {
+                bail!("reduced grad for '{name}' has {} elements, slot is {shape:?}", g.len());
+            }
+            shaped.push(g.reshape(shape.clone()));
+        }
+        replica.apply(&shaped, lr).with_context(|| format!("apply at step {step}"))?;
+
+        curve.push(step, &[red.loss_mean, lr as f64]);
+        steps_run = step;
+        if rank == 0 && opts.log_every > 0 && step % opts.log_every == 0 {
+            crate::log_info!(
+                "dist step {step}/{}: loss {:.5} (wire {}, workers {})",
+                opts.steps,
+                red.loss_mean,
+                opts.wire.name(),
+                opts.workers
+            );
+        }
+
+        // Divergence is detected from the reduced loss, which every rank
+        // computes identically — so all ranks break on the same step and
+        // the ring never blocks on a departed worker.
+        if !red.loss_mean.is_finite() {
+            bad_streak += 1;
+            if bad_streak >= opts.divergence_patience {
+                diverged = true;
+                break;
+            }
+        } else {
+            bad_streak = 0;
+        }
+    }
+
+    Ok(WorkerOut { rank, curve, params: replica.params(), steps_run, diverged })
+}
+
+fn is_disconnect(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.downcast_ref::<RingError>().is_some())
+}
+
+fn curves_bitwise_eq(a: &Curve, b: &Curve) -> bool {
+    a.columns == b.columns
+        && a.rows.len() == b.rows.len()
+        && a.rows.iter().zip(b.rows.iter()).all(|((sa, va), (sb, vb))| {
+            sa == sb
+                && va.len() == vb.len()
+                && va.iter().zip(vb.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+        })
+}
+
+fn params_bitwise_eq(a: &[(String, Tensor)], b: &[(String, Tensor)]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b.iter()).all(|((na, ta), (nb, tb))| {
+            na == nb
+                && ta.shape() == tb.shape()
+                && ta
+                    .data()
+                    .iter()
+                    .zip(tb.data().iter())
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::host_trainer::HostMlpTrainer;
+    use crate::data::synth_vector;
+
+    fn run(workers: usize, wire: WireFormat, steps: usize) -> DistReport {
+        let (x, y) = synth_vector::dataset(256, 12, 4, 5);
+        let mut opts = DistOptions::new(workers, wire);
+        opts.chunks = 4;
+        opts.global_batch = 16;
+        opts.n_examples = 256;
+        opts.steps = steps;
+        opts.lr = LrSchedule::Constant(0.08);
+        train(
+            &opts,
+            |_rank| Ok(HostMlpTrainer::new(&[12, 10, 4], 77)),
+            |_step, idx| {
+                let xb = x.gather_rows(idx);
+                let yb: Vec<i32> = idx.iter().map(|&i| y[i]).collect();
+                let n = idx.len();
+                Ok(vec![HostValue::F32(xb), HostValue::i32(vec![n], yb)])
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn options_validation() {
+        let mut o = DistOptions::new(3, WireFormat::Fp32);
+        o.chunks = 4;
+        assert!(o.validate().is_err(), "3 workers cannot divide 4 chunks");
+        o.workers = 0;
+        assert!(o.validate().is_err());
+        o.workers = 2;
+        assert!(o.validate().is_ok());
+        o.steps = 0;
+        assert!(o.validate().is_err());
+    }
+
+    #[test]
+    fn two_workers_match_one_bitwise_on_fp32_wire() {
+        let a = run(1, WireFormat::Fp32, 8);
+        let b = run(2, WireFormat::Fp32, 8);
+        assert!(curves_bitwise_eq(&a.curve, &b.curve), "loss curves diverged");
+        assert!(params_bitwise_eq(&a.final_params, &b.final_params));
+        assert_eq!(a.comm.wire_bytes, 0, "single worker exchanges nothing");
+        assert!(b.comm.wire_bytes > 0);
+        // 2 workers × (2−1) messages × 8 steps
+        assert_eq!(b.comm.messages, 16);
+    }
+
+    #[test]
+    fn loss_decreases_under_both_wires() {
+        for wire in [WireFormat::Fp32, WireFormat::S2fp8] {
+            let r = run(2, wire, 40);
+            let losses = r.curve.column("loss");
+            assert!(!r.diverged);
+            assert!(losses.iter().all(|l| l.is_finite()));
+            assert!(
+                losses.last().unwrap() < &(losses[0] * 0.7),
+                "{}: {losses:?}",
+                wire.name()
+            );
+        }
+    }
+
+    #[test]
+    fn provider_errors_surface_not_deadlock() {
+        let mut opts = DistOptions::new(2, WireFormat::Fp32);
+        opts.chunks = 2;
+        opts.global_batch = 8;
+        opts.n_examples = 64;
+        opts.steps = 3;
+        let err = train(
+            &opts,
+            |_rank| Ok(HostMlpTrainer::new(&[4, 2], 1)),
+            |_step, _idx| -> Result<Vec<HostValue>> { bail!("no data today") },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("no data today"), "{err:#}");
+    }
+
+    #[test]
+    fn replica_factory_errors_surface() {
+        let opts = DistOptions::new(2, WireFormat::Fp32);
+        let err = train(
+            &opts,
+            |rank| -> Result<HostMlpTrainer> { bail!("rank {rank} has no replica") },
+            |_step, _idx| Ok(vec![]),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("no replica"), "{err:#}");
+    }
+}

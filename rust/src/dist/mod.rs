@@ -1,0 +1,43 @@
+//! **Data-parallel training** with an S2FP8-compressed gradient
+//! all-reduce — the paper's 4× compression applied where multi-worker
+//! training actually spends bandwidth.
+//!
+//! N in-process workers (threads) each own a full model replica behind
+//! the [`GradStep`](crate::coordinator::grad_step::GradStep) seam and a
+//! shard of every global batch ([`crate::data::sharded`]). Per step:
+//!
+//! 1. **compute** — each worker runs forward+backward over the
+//!    contiguous batch chunks it owns, producing per-chunk summed
+//!    gradients;
+//! 2. **exchange** — chunk gradients cross the ring ([`ring`]) as packed
+//!    [`QuantizedTensor`](crate::formats::QuantizedTensor) payloads
+//!    ([`wire`]): FP32 for the exactness baseline, S2FP8 for the
+//!    compressed wire (encode once at the source; forwarding never
+//!    re-quantizes);
+//! 3. **reduce + apply** — every rank decodes the same chunk set and
+//!    folds it in fixed chunk-index order with f64 accumulation
+//!    ([`wire::reduce_chunks`]), then applies the identical mean
+//!    gradient, keeping replicas bitwise in sync without ever shipping
+//!    parameters.
+//!
+//! Because the reduce order is a property of the *data layout* (chunk
+//! indices) rather than of ranks, the worker count is arithmetically
+//! invisible: FP32-wire runs are bitwise identical at workers ∈ {1, 2,
+//! 4, …}, and S2FP8-wire runs are bitwise identical to each other while
+//! staying within the wire-noise bound of the FP32 curve — at ≤ ¼ the
+//! exchanged bytes. `tests/integration_dist.rs` and
+//! `tests/prop_allreduce.rs` pin all of this; DESIGN.md "Distributed
+//! training" has the argument.
+//!
+//! Entry points: [`coordinator::train`] (drive any
+//! [`GradStep`](crate::coordinator::grad_step::GradStep) replica),
+//! `cargo run --bin train_dist` (host MLP/NCF models on synthetic data),
+//! `cargo bench --bench perf_allreduce` (wire throughput + compression).
+
+pub mod coordinator;
+pub mod ring;
+pub mod wire;
+
+pub use coordinator::{train, DistOptions, DistReport};
+pub use ring::{ring, RingError, RingNode};
+pub use wire::{reduce_chunks, ChunkGrad, Reduced, WireError, WireFormat};

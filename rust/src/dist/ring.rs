@@ -1,0 +1,173 @@
+//! In-process **ring topology**: N worker threads connected in a cycle by
+//! channels, with the all-gather primitive the gradient exchange runs on.
+//!
+//! Each node owns the receiving end of the link from its predecessor and
+//! a sender to its successor. [`RingNode::all_gather`] circulates every
+//! node's contribution around the ring in `N − 1` store-and-forward
+//! rounds — the classic ring all-gather schedule, so per-node traffic is
+//! `(N − 1)` messages per step regardless of N. Channels are buffered, so
+//! the uniform send-then-receive schedule cannot deadlock; a crashed
+//! worker drops its channel ends and the disconnection cascades around
+//! the ring as [`RingError::Disconnected`] instead of hanging the fleet.
+//!
+//! The ring carries **whole messages** (the packed
+//! [`ChunkGrad`](super::wire::ChunkGrad) bundles); reduction happens
+//! *after* the gather, locally and identically on every node
+//! ([`super::wire::reduce_chunks`]). A reduce-scatter ring would
+//! accumulate partial sums in rank order — an order that changes with N —
+//! so gather-then-reduce is what keeps training bitwise independent of
+//! the worker count.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Ring communication failure (a neighbour's thread died).
+#[derive(Debug, thiserror::Error)]
+pub enum RingError {
+    #[error("ring neighbour of rank {0} disconnected")]
+    Disconnected(usize),
+}
+
+/// One worker's endpoints in the ring.
+pub struct RingNode<T> {
+    rank: usize,
+    n: usize,
+    tx_next: Sender<T>,
+    rx_prev: Receiver<T>,
+}
+
+/// Build an N-node ring; element `r` of the result belongs to rank `r`.
+pub fn ring<T: Send>(n: usize) -> Vec<RingNode<T>> {
+    assert!(n >= 1, "a ring needs at least one node");
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        // link i: from rank i-1 (mod n) into rank i
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(Some(rx));
+    }
+    (0..n)
+        .map(|r| RingNode {
+            rank: r,
+            n,
+            tx_next: txs[(r + 1) % n].clone(),
+            rx_prev: rxs[r].take().expect("each rx taken once"),
+        })
+        .collect()
+}
+
+impl<T: Send> RingNode<T> {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // a ring always has ≥ 1 node
+    }
+
+    /// Send one message to the successor rank.
+    pub fn send_next(&self, msg: T) -> Result<(), RingError> {
+        self.tx_next.send(msg).map_err(|_| RingError::Disconnected(self.rank))
+    }
+
+    /// Receive one message from the predecessor rank (blocking).
+    pub fn recv_prev(&self) -> Result<T, RingError> {
+        self.rx_prev.recv().map_err(|_| RingError::Disconnected(self.rank))
+    }
+
+    /// Ring all-gather: contribute `mine` and return all `n`
+    /// contributions indexed by **origin rank** — identical on every
+    /// node. `on_send` fires once per transmitted message (wire
+    /// accounting). For `n == 1` this is the identity: no messages, no
+    /// callbacks, no clones.
+    ///
+    /// Slot `rank` of the result is the caller's *original* `mine`
+    /// (clones are what cross the wire), so a steady-state caller can
+    /// reclaim it afterwards and keep reusing its buffers.
+    pub fn all_gather(&self, mine: T, mut on_send: impl FnMut(&T)) -> Result<Vec<T>, RingError>
+    where
+        T: Clone,
+    {
+        let n = self.n;
+        let rounds = n - 1;
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut current = if rounds > 0 { Some(mine.clone()) } else { None };
+        out[self.rank] = Some(mine);
+        for round in 0..rounds {
+            let msg = current.take().expect("message in flight each round");
+            on_send(&msg);
+            self.send_next(msg)?;
+            let got = self.recv_prev()?;
+            // after `round + 1` hops, the message we just received
+            // originated `round + 1` ranks behind us
+            let origin = (self.rank + n - round - 1) % n;
+            if round + 1 < rounds {
+                current = Some(got.clone());
+            }
+            out[origin] = Some(got);
+        }
+        Ok(out.into_iter().map(|o| o.expect("every origin delivered")).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_gathers_itself_without_sending() {
+        let mut nodes = ring::<u32>(1);
+        let node = nodes.remove(0);
+        let mut sends = 0usize;
+        let out = node.all_gather(7, |_| sends += 1).unwrap();
+        assert_eq!(out, vec![7]);
+        assert_eq!(sends, 0);
+        assert_eq!(node.len(), 1);
+        assert!(!node.is_empty());
+    }
+
+    #[test]
+    fn all_nodes_gather_every_contribution_in_rank_order() {
+        for n in [2usize, 3, 5, 8] {
+            let nodes = ring::<usize>(n);
+            let outs: Vec<(usize, Vec<usize>, usize)> = std::thread::scope(|s| {
+                let handles: Vec<_> = nodes
+                    .into_iter()
+                    .map(|node| {
+                        s.spawn(move || {
+                            let mut sends = 0usize;
+                            let rank = node.rank();
+                            let got = node.all_gather(rank * 100, |_| sends += 1).unwrap();
+                            (rank, got, sends)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let want: Vec<usize> = (0..n).map(|r| r * 100).collect();
+            for (rank, got, sends) in outs {
+                assert_eq!(got, want, "rank {rank} of {n}");
+                assert_eq!(sends, n - 1, "rank {rank} of {n} message count");
+            }
+        }
+    }
+
+    #[test]
+    fn dead_neighbour_cascades_as_disconnect_not_deadlock() {
+        let mut nodes = ring::<u8>(3);
+        let c = nodes.pop().unwrap();
+        let b = nodes.pop().unwrap();
+        let a = nodes.pop().unwrap();
+        drop(b); // rank 1 dies before the exchange
+        let res = std::thread::scope(|s| {
+            let ha = s.spawn(move || a.all_gather(0, |_| {}));
+            let hc = s.spawn(move || c.all_gather(2, |_| {}));
+            (ha.join().unwrap(), hc.join().unwrap())
+        });
+        assert!(res.0.is_err() || res.1.is_err(), "at least one side must observe the death");
+    }
+}

@@ -1,0 +1,434 @@
+//! The gradient **wire format** and the deterministic chunk reduce.
+//!
+//! Each worker packs every batch chunk it owns into a [`ChunkGrad`]: the
+//! chunk's summed gradients encoded as packed [`QuantizedTensor`]s
+//! (FP32 for the exactness baseline, S2FP8 for the paper's 4×-compressed
+//! wire), plus the chunk's example count and f64 loss sum. After the
+//! ring all-gather every worker holds the same full chunk set and runs
+//! [`reduce_chunks`]: decode each tensor, accumulate in f64 **in chunk
+//! index order** — an order fixed by the data layout, not by ranks — and
+//! round once. Because chunk boundaries do not move when the worker
+//! count changes, the reduce consumes byte-identical inputs in an
+//! identical order at any worker count, which is what makes FP32-wire
+//! multi-worker training bitwise equal to single-worker training (and
+//! S2FP8-wire training bitwise equal across worker counts; see DESIGN.md
+//! "Distributed training").
+//!
+//! Payload hygiene: a gradient with NaN/Inf never gets on the wire
+//! ([`ChunkGrad::encode_into`] rejects it), and a decoded wire tensor
+//! containing non-finite values fails the reduce — both as typed
+//! [`WireError`]s, mirroring the codec layer's no-panic rule.
+
+use crate::formats::{CodecError, FormatKind, QuantizedTensor};
+use crate::tensor::Tensor;
+
+/// Which format gradient payloads use on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFormat {
+    /// Bit-exact f32 payloads — the equivalence baseline.
+    Fp32,
+    /// Per-chunk, per-slot S2FP8 (fitted α/β per tensor): 1 byte/element.
+    S2fp8,
+}
+
+impl WireFormat {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireFormat::Fp32 => "fp32",
+            WireFormat::S2fp8 => "s2fp8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" | "f32" => Some(WireFormat::Fp32),
+            "s2fp8" => Some(WireFormat::S2fp8),
+            _ => None,
+        }
+    }
+
+    /// The codec kind backing this wire.
+    pub fn kind(&self) -> FormatKind {
+        match self {
+            WireFormat::Fp32 => FormatKind::Fp32,
+            WireFormat::S2fp8 => FormatKind::S2fp8,
+        }
+    }
+}
+
+/// Typed errors of the gradient wire.
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("gradient slot {slot} of chunk {chunk} contains non-finite values")]
+    NonFinite { chunk: usize, slot: usize },
+    #[error("decoded wire payload of chunk {chunk} slot {slot} is non-finite")]
+    CorruptPayload { chunk: usize, slot: usize },
+    #[error("chunk set is not exactly 0..{expected}: got indices {got:?}")]
+    BadChunkSet { expected: usize, got: Vec<usize> },
+    #[error("chunk {chunk} carries {got} gradient slots, expected {expected}")]
+    SlotArity { chunk: usize, got: usize, expected: usize },
+    #[error("chunk {chunk} slot {slot} has {got} elements, expected {expected}")]
+    SlotLen { chunk: usize, slot: usize, got: usize, expected: usize },
+    #[error("reduce over zero examples")]
+    NoExamples,
+    #[error(transparent)]
+    Codec(#[from] CodecError),
+}
+
+/// Fixed per-message header bytes: chunk index u64 | example count u64 |
+/// loss sum f64 (accounting only — the in-process transport moves the
+/// struct itself; these are the bytes a socket transport would frame).
+pub const CHUNK_HEADER_BYTES: usize = 24;
+
+/// Elements decoded per scratch refill during the reduce — bounds the
+/// reduce's working set regardless of tensor size (uses
+/// [`QuantizedTensor::decode_range`] chunk views).
+const REDUCE_SCRATCH_ELEMS: usize = 8192;
+
+/// One batch chunk's contribution to the all-reduce.
+#[derive(Debug, Clone)]
+pub struct ChunkGrad {
+    /// Global chunk index (the reduce folds in this order).
+    pub chunk: usize,
+    /// Examples the sums cover.
+    pub n_examples: usize,
+    /// Σ per-example loss over the chunk.
+    pub loss_sum: f64,
+    /// Per-slot summed gradients, packed flat in the wire format.
+    pub tensors: Vec<QuantizedTensor>,
+}
+
+impl ChunkGrad {
+    /// An empty contribution whose buffers [`Self::encode_into`] will
+    /// fill and thereafter reuse (steady state: zero allocations per
+    /// step).
+    pub fn empty(wire: WireFormat) -> Self {
+        ChunkGrad {
+            chunk: 0,
+            n_examples: 0,
+            loss_sum: 0.0,
+            tensors: vec![QuantizedTensor::empty(wire.kind())],
+        }
+    }
+
+    /// Pack a chunk's summed gradients for the wire, reusing this
+    /// message's buffers. Rejects non-finite gradients — NaN/Inf must
+    /// fail loudly at the source rank, not spread to every replica.
+    pub fn encode_into(
+        &mut self,
+        chunk: usize,
+        n_examples: usize,
+        loss_sum: f64,
+        grads: &[Tensor],
+        wire: WireFormat,
+    ) -> Result<(), WireError> {
+        for (slot, g) in grads.iter().enumerate() {
+            if g.has_nonfinite() {
+                return Err(WireError::NonFinite { chunk, slot });
+            }
+        }
+        let codec = wire.kind().codec();
+        self.tensors.resize_with(grads.len(), || QuantizedTensor::empty(wire.kind()));
+        for (qt, g) in self.tensors.iter_mut().zip(grads.iter()) {
+            codec.encode_into(g.data(), qt);
+        }
+        self.chunk = chunk;
+        self.n_examples = n_examples;
+        self.loss_sum = loss_sum;
+        Ok(())
+    }
+
+    /// Allocating convenience over [`Self::encode_into`].
+    pub fn encode(
+        chunk: usize,
+        n_examples: usize,
+        loss_sum: f64,
+        grads: &[Tensor],
+        wire: WireFormat,
+    ) -> Result<Self, WireError> {
+        let mut out = Self::empty(wire);
+        out.encode_into(chunk, n_examples, loss_sum, grads, wire)?;
+        Ok(out)
+    }
+
+    /// Bytes this message occupies on the wire (header + framed tensors).
+    pub fn wire_bytes(&self) -> usize {
+        CHUNK_HEADER_BYTES + self.tensors.iter().map(|t| t.framed_bytes()).sum::<usize>()
+    }
+
+    /// What this message would occupy with FP32 payloads — the
+    /// compression-ratio denominator (frame layout comes from the codec
+    /// layer's [`QuantizedTensor::framed_bytes_for`], not a local copy).
+    pub fn f32_wire_bytes(&self) -> usize {
+        CHUNK_HEADER_BYTES
+            + self
+                .tensors
+                .iter()
+                .map(|t| {
+                    QuantizedTensor::framed_bytes_for(FormatKind::Fp32, t.shape().len(), t.len())
+                })
+                .sum::<usize>()
+    }
+}
+
+/// A fully-reduced step: mean gradients (flat, one per slot) and the mean
+/// loss over the global batch.
+#[derive(Debug, Clone)]
+pub struct Reduced {
+    pub grads: Vec<Tensor>,
+    pub loss_mean: f64,
+    pub n_examples: usize,
+}
+
+/// Deterministic all-reduce completion: validate that `chunks` is exactly
+/// the set `0..expected_chunks`, then for every slot accumulate the
+/// decoded chunk tensors in **chunk index order** into f64, divide by the
+/// total example count, and round to f32 once.
+///
+/// The fold order depends only on the chunk indices — never on which
+/// rank computed or delivered a chunk — so every replica that runs this
+/// over the same chunk set produces bitwise-identical gradients, at any
+/// worker count (the property `tests/prop_allreduce.rs` pins). Takes any
+/// iterator of chunk refs so callers can feed an all-gather result
+/// without flattening it into an owned `Vec` first.
+pub fn reduce_chunks<'a>(
+    chunks: impl IntoIterator<Item = &'a ChunkGrad>,
+    expected_chunks: usize,
+) -> Result<Reduced, WireError> {
+    let mut order: Vec<&ChunkGrad> = chunks.into_iter().collect();
+    order.sort_by_key(|c| c.chunk);
+    let got: Vec<usize> = order.iter().map(|c| c.chunk).collect();
+    if order.is_empty()
+        || got.len() != expected_chunks
+        || got.iter().enumerate().any(|(i, &c)| c != i)
+    {
+        return Err(WireError::BadChunkSet { expected: expected_chunks, got });
+    }
+
+    let slots = order[0].tensors.len();
+    let lens: Vec<usize> = order[0].tensors.iter().map(|t| t.len()).collect();
+    for cg in &order {
+        if cg.tensors.len() != slots {
+            return Err(WireError::SlotArity {
+                chunk: cg.chunk,
+                got: cg.tensors.len(),
+                expected: slots,
+            });
+        }
+        for (slot, t) in cg.tensors.iter().enumerate() {
+            if t.len() != lens[slot] {
+                return Err(WireError::SlotLen {
+                    chunk: cg.chunk,
+                    slot,
+                    got: t.len(),
+                    expected: lens[slot],
+                });
+            }
+        }
+    }
+
+    let mut loss = 0.0f64;
+    let mut n = 0usize;
+    let mut acc: Vec<Vec<f64>> = lens.iter().map(|&l| vec![0.0f64; l]).collect();
+    let mut scratch = vec![0.0f32; REDUCE_SCRATCH_ELEMS];
+    for cg in &order {
+        loss += cg.loss_sum;
+        n += cg.n_examples;
+        for (slot, t) in cg.tensors.iter().enumerate() {
+            let len = lens[slot];
+            let mut start = 0usize;
+            while start < len {
+                let take = REDUCE_SCRATCH_ELEMS.min(len - start);
+                let view = &mut scratch[..take];
+                t.decode_range(start, view);
+                for (a, &v) in acc[slot][start..start + take].iter_mut().zip(view.iter()) {
+                    if !v.is_finite() {
+                        return Err(WireError::CorruptPayload { chunk: cg.chunk, slot });
+                    }
+                    *a += v as f64;
+                }
+                start += take;
+            }
+        }
+    }
+    if n == 0 {
+        return Err(WireError::NoExamples);
+    }
+
+    let inv = 1.0 / n as f64;
+    let grads = acc
+        .into_iter()
+        .map(|a| {
+            let data: Vec<f32> = a.into_iter().map(|v| (v * inv) as f32).collect();
+            let len = data.len();
+            Tensor::new(vec![len], data)
+        })
+        .collect();
+    Ok(Reduced { grads, loss_mean: loss * inv, n_examples: n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg32, Rng};
+
+    fn grad(shape: Vec<usize>, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed, 0xD1);
+        Tensor::randn(shape, &mut rng).map(|v| v * 0.1)
+    }
+
+    #[test]
+    fn wire_format_parses() {
+        assert_eq!(WireFormat::parse("fp32"), Some(WireFormat::Fp32));
+        assert_eq!(WireFormat::parse("S2FP8"), Some(WireFormat::S2fp8));
+        assert_eq!(WireFormat::parse("bf16"), None);
+        for w in [WireFormat::Fp32, WireFormat::S2fp8] {
+            assert_eq!(WireFormat::parse(w.name()), Some(w));
+        }
+    }
+
+    #[test]
+    fn fp32_wire_reduce_is_the_exact_mean() {
+        let gs: Vec<Vec<Tensor>> =
+            (0..3).map(|c| vec![grad(vec![7], c), grad(vec![2, 3], c + 10)]).collect();
+        let chunks: Vec<ChunkGrad> = gs
+            .iter()
+            .enumerate()
+            .map(|(c, g)| ChunkGrad::encode(c, 4, c as f64 + 0.5, g, WireFormat::Fp32).unwrap())
+            .collect();
+        let red = reduce_chunks(&chunks, 3).unwrap();
+        assert_eq!(red.n_examples, 12);
+        assert!((red.loss_mean - (0.5 + 1.5 + 2.5) / 12.0).abs() < 1e-12);
+        for slot in 0..2 {
+            let len = gs[0][slot].len();
+            for i in 0..len {
+                let mut a = 0.0f64;
+                for g in &gs {
+                    a += g[slot].data()[i] as f64;
+                }
+                let want = (a / 12.0) as f32;
+                assert_eq!(red.grads[slot].data()[i].to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_is_independent_of_delivery_order() {
+        let gs: Vec<Vec<Tensor>> = (0..4).map(|c| vec![grad(vec![33], c)]).collect();
+        let mut chunks: Vec<ChunkGrad> = gs
+            .iter()
+            .enumerate()
+            .map(|(c, g)| ChunkGrad::encode(c, 2, 1.0, g, WireFormat::S2fp8).unwrap())
+            .collect();
+        let a = reduce_chunks(&chunks, 4).unwrap();
+        chunks.reverse();
+        chunks.swap(0, 2);
+        let b = reduce_chunks(&chunks, 4).unwrap();
+        for (x, y) in a.grads[0].data().iter().zip(b.grads[0].data().iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.loss_mean.to_bits(), b.loss_mean.to_bits());
+    }
+
+    #[test]
+    fn encode_into_reuses_buffers_bitwise() {
+        let mut msg = ChunkGrad::empty(WireFormat::S2fp8);
+        for seed in 0..3u64 {
+            let g = vec![grad(vec![64], seed), grad(vec![5], seed + 7)];
+            msg.encode_into(seed as usize, 8, 1.0, &g, WireFormat::S2fp8).unwrap();
+            let fresh = ChunkGrad::encode(seed as usize, 8, 1.0, &g, WireFormat::S2fp8).unwrap();
+            assert_eq!(msg.tensors, fresh.tensors);
+            assert_eq!(msg.wire_bytes(), fresh.wire_bytes());
+        }
+    }
+
+    #[test]
+    fn nonfinite_gradients_never_reach_the_wire() {
+        let mut bad = grad(vec![9], 1);
+        bad.data_mut()[4] = f32::NAN;
+        let err = ChunkGrad::encode(0, 1, 0.0, &[bad], WireFormat::Fp32).unwrap_err();
+        assert!(matches!(err, WireError::NonFinite { chunk: 0, slot: 0 }), "{err}");
+        let mut inf = grad(vec![9], 2);
+        inf.data_mut()[0] = f32::INFINITY;
+        let r = ChunkGrad::encode(1, 1, 0.0, &[grad(vec![3], 3), inf], WireFormat::S2fp8);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn corrupt_fp32_payload_fails_the_reduce() {
+        // A NaN smuggled into raw payload bytes (bypassing encode's gate)
+        // must still be caught at decode time.
+        let qt = QuantizedTensor::from_parts(
+            FormatKind::Fp32,
+            vec![2],
+            [1.0f32.to_le_bytes(), f32::NAN.to_le_bytes()].concat(),
+            None,
+        )
+        .unwrap();
+        let chunks = [ChunkGrad { chunk: 0, n_examples: 1, loss_sum: 0.0, tensors: vec![qt] }];
+        let err = reduce_chunks(&chunks, 1).unwrap_err();
+        assert!(matches!(err, WireError::CorruptPayload { chunk: 0, slot: 0 }), "{err}");
+    }
+
+    #[test]
+    fn malformed_chunk_sets_are_rejected() {
+        let g = vec![grad(vec![4], 1)];
+        let c0 = ChunkGrad::encode(0, 1, 0.0, &g, WireFormat::Fp32).unwrap();
+        let c2 = ChunkGrad::encode(2, 1, 0.0, &g, WireFormat::Fp32).unwrap();
+        // missing index 1
+        assert!(matches!(
+            reduce_chunks(&[c0.clone(), c2], 3).unwrap_err(),
+            WireError::BadChunkSet { .. }
+        ));
+        // duplicate index
+        assert!(matches!(
+            reduce_chunks(&[c0.clone(), c0.clone()], 2).unwrap_err(),
+            WireError::BadChunkSet { .. }
+        ));
+        // wrong count
+        assert!(matches!(
+            reduce_chunks(&[c0.clone()], 2).unwrap_err(),
+            WireError::BadChunkSet { .. }
+        ));
+        // empty set
+        assert!(matches!(reduce_chunks(&[], 0).unwrap_err(), WireError::BadChunkSet { .. }));
+        // slot arity mismatch
+        let pair = [grad(vec![4], 2), grad(vec![4], 3)];
+        let two = ChunkGrad::encode(1, 1, 0.0, &pair, WireFormat::Fp32).unwrap();
+        assert!(matches!(
+            reduce_chunks(&[c0.clone(), two], 2).unwrap_err(),
+            WireError::SlotArity { .. }
+        ));
+        // slot length mismatch
+        let longer = ChunkGrad::encode(1, 1, 0.0, &[grad(vec![5], 2)], WireFormat::Fp32).unwrap();
+        assert!(matches!(
+            reduce_chunks(&[c0, longer], 2).unwrap_err(),
+            WireError::SlotLen { .. }
+        ));
+    }
+
+    #[test]
+    fn empty_slots_and_zero_examples() {
+        // zero-length tensors reduce fine as long as examples exist
+        let empty = Tensor::new(vec![0], vec![]);
+        let c = ChunkGrad::encode(0, 3, 1.5, &[empty], WireFormat::S2fp8).unwrap();
+        let red = reduce_chunks(&[c], 1).unwrap();
+        assert_eq!(red.grads[0].len(), 0);
+        assert!((red.loss_mean - 0.5).abs() < 1e-12);
+        // zero examples is an error, not a division by zero
+        let c = ChunkGrad::encode(0, 0, 0.0, &[Tensor::new(vec![0], vec![])], WireFormat::Fp32)
+            .unwrap();
+        assert!(matches!(reduce_chunks(&[c], 1).unwrap_err(), WireError::NoExamples));
+    }
+
+    #[test]
+    fn wire_bytes_accounting_is_exact_for_fp32_and_compresses_for_s2fp8() {
+        let g = vec![grad(vec![1024], 5), grad(vec![32], 6)];
+        let f = ChunkGrad::encode(0, 8, 0.0, &g, WireFormat::Fp32).unwrap();
+        assert_eq!(f.wire_bytes(), f.f32_wire_bytes());
+        let s = ChunkGrad::encode(0, 8, 0.0, &g, WireFormat::S2fp8).unwrap();
+        assert_eq!(s.f32_wire_bytes(), f.wire_bytes());
+        let ratio = f.wire_bytes() as f64 / s.wire_bytes() as f64;
+        assert!(ratio > 3.5, "s2fp8 wire should compress ≥3.5×, got {ratio:.2}");
+    }
+}

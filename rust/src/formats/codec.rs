@@ -87,12 +87,24 @@ pub struct QuantizedTensor {
 }
 
 impl QuantizedTensor {
-    /// Internal rank-1 constructor for codec encodes (invariants upheld by
-    /// the callers: payload length and stats presence always match).
-    fn flat(kind: FormatKind, elems: usize, payload: Vec<u8>, s2: Option<(f32, f32)>) -> Self {
-        debug_assert_eq!(payload.len(), elems * bytes_per_element(kind));
+    /// An empty scratch tensor of `kind` — the starting point for
+    /// [`Codec::encode_into`], which refills it (payload allocation
+    /// reused) on every call. The (α, β) placeholder is the identity.
+    pub fn empty(kind: FormatKind) -> Self {
+        let s2 = kind.uses_tensor_stats().then_some((1.0, 0.0));
+        QuantizedTensor { kind, shape: vec![0], payload: Vec::new(), s2 }
+    }
+
+    /// Internal post-encode fixup: the payload has just been written by a
+    /// codec, so only the metadata needs to agree with it (invariants
+    /// upheld by the codec impls in this module).
+    fn set_flat(&mut self, kind: FormatKind, elems: usize, s2: Option<(f32, f32)>) {
+        debug_assert_eq!(self.payload.len(), elems * bytes_per_element(kind));
         debug_assert_eq!(s2.is_some(), kind.uses_tensor_stats());
-        QuantizedTensor { kind, shape: vec![elems], payload, s2 }
+        self.kind = kind;
+        self.shape.clear();
+        self.shape.push(elems);
+        self.s2 = s2;
     }
 
     /// Validating constructor from raw parts (checkpoint readers, tests).
@@ -182,40 +194,60 @@ impl QuantizedTensor {
         // zero-fills newly grown tail elements, so buffer reuse pays no
         // per-decode fill.
         out.resize(n, 0.0);
+        let bpe = bytes_per_element(self.kind);
+        decode_chunked(&self.payload, bpe, out, &|p, o| self.decode_payload(p, o));
+    }
+
+    /// Decode elements `[start, start + out.len())` into `out` — the
+    /// chunk-view primitive behind streaming consumers (the distributed
+    /// gradient reduce accumulates large wire tensors through a small
+    /// reusable scratch instead of materializing each one in full).
+    ///
+    /// Panics if the range runs past the tensor (an internal-caller
+    /// contract, like slice indexing).
+    pub fn decode_range(&self, start: usize, out: &mut [f32]) {
+        let bpe = bytes_per_element(self.kind);
+        let end = start + out.len();
+        assert!(end <= self.len(), "decode_range {start}..{end} past len {}", self.len());
+        self.decode_payload(&self.payload[start * bpe..end * bpe], out);
+    }
+
+    /// Sequential element decode of one payload slice (shared by the
+    /// chunk-parallel [`Self::decode_into`] and [`Self::decode_range`];
+    /// no per-element state, so any chunking gives identical bits).
+    fn decode_payload(&self, p: &[u8], o: &mut [f32]) {
         match self.kind {
-            FormatKind::Fp32 => decode_chunked(&self.payload, 4, out, &|p, o| {
+            FormatKind::Fp32 => {
                 for (c, y) in p.chunks_exact(4).zip(o.iter_mut()) {
                     *y = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
                 }
-            }),
-            FormatKind::Fp16 => decode_chunked(&self.payload, 2, out, &|p, o| {
+            }
+            FormatKind::Fp16 => {
                 for (c, y) in p.chunks_exact(2).zip(o.iter_mut()) {
                     *y = fp16::decode(u16::from_le_bytes([c[0], c[1]]));
                 }
-            }),
-            FormatKind::Bf16 => decode_chunked(&self.payload, 2, out, &|p, o| {
+            }
+            FormatKind::Bf16 => {
                 for (c, y) in p.chunks_exact(2).zip(o.iter_mut()) {
                     *y = bf16::decode(u16::from_le_bytes([c[0], c[1]]));
                 }
-            }),
-            FormatKind::Fp8 => decode_chunked(&self.payload, 1, out, &|p, o| {
+            }
+            FormatKind::Fp8 => {
                 for (&b, y) in p.iter().zip(o.iter_mut()) {
                     *y = fp8::decode_lut(b);
                 }
-            }),
-            FormatKind::Fp8E4m3 => decode_chunked(&self.payload, 1, out, &|p, o| {
+            }
+            FormatKind::Fp8E4m3 => {
                 for (&b, y) in p.iter().zip(o.iter_mut()) {
                     *y = fp8e4m3::decode_lut(b);
                 }
-            }),
+            }
             FormatKind::S2fp8 | FormatKind::S2fp8Sr => {
                 let (alpha, beta) = self.s2.expect("constructors enforce α/β for S2FP8");
                 let c = s2fp8::S2fp8Codec { alpha, beta };
-                decode_chunked(&self.payload, 1, out, &|p, o| {
-                    for (&b, y) in p.iter().zip(o.iter_mut()) {
-                        *y = c.unsqueeze(fp8::decode_lut(b));
-                    }
-                });
+                for (&b, y) in p.iter().zip(o.iter_mut()) {
+                    *y = c.unsqueeze(fp8::decode_lut(b));
+                }
             }
         }
     }
@@ -245,6 +277,25 @@ impl QuantizedTensor {
         }
         buf.extend_from_slice(&(self.payload.len() as u64).to_le_bytes());
         buf.extend_from_slice(&self.payload);
+    }
+
+    /// Exact number of bytes [`Self::write_to`] appends — wire/size
+    /// accounting without materializing the frame.
+    pub fn framed_bytes(&self) -> usize {
+        Self::framed_bytes_for(self.kind, self.shape.len(), self.len())
+    }
+
+    /// Frame size a `kind` tensor of `rank` dims and `elems` elements
+    /// serializes to — size planning for tensors that do not exist yet
+    /// (e.g. the FP32-equivalent denominator of a wire-compression
+    /// ratio). The single source of truth for the S2QT frame layout,
+    /// kept in lockstep with [`Self::write_to`].
+    pub fn framed_bytes_for(kind: FormatKind, rank: usize, elems: usize) -> usize {
+        // magic 4 + version 1 + tag 1 + flags 1 + rank u32 + dims 8·rank
+        // + optional (α, β) 8 + payload_len u64 + payload
+        19 + 8 * rank
+            + if kind.uses_tensor_stats() { 8 } else { 0 }
+            + elems * bytes_per_element(kind)
     }
 
     /// The framed byte representation.
@@ -318,9 +369,22 @@ pub trait Codec: Send + Sync {
     /// Which format this codec implements.
     fn kind(&self) -> FormatKind;
 
+    /// Pack a flat tensor into `out`, reusing its payload allocation —
+    /// the steady-state encode for per-step producers (the distributed
+    /// gradient wire re-encodes the same slots every step and pays zero
+    /// allocations after the first). `out` is completely overwritten
+    /// (kind, flat shape, payload, α/β); start from
+    /// [`QuantizedTensor::empty`]. Chunk-parallel for large inputs.
+    fn encode_into(&self, xs: &[f32], out: &mut QuantizedTensor);
+
     /// Pack a flat tensor (rank-1 result; [`QuantizedTensor::reshape`] to
-    /// restore structure). Chunk-parallel for large inputs.
-    fn encode(&self, xs: &[f32]) -> QuantizedTensor;
+    /// restore structure). Allocating convenience over
+    /// [`Codec::encode_into`].
+    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
+        let mut out = QuantizedTensor::empty(self.kind());
+        self.encode_into(xs, &mut out);
+        out
+    }
 
     /// Element-wise round-trip through the format. `None` for formats that
     /// need per-tensor statistics (the S2FP8 family) — no panicking
@@ -395,19 +459,31 @@ fn worker_count(n: usize) -> usize {
 }
 
 /// Run `enc(base_element_index, input_chunk, output_chunk)` over contiguous
-/// chunks, in parallel for large tensors. `enc` gets the chunk's absolute
-/// element offset so index-keyed encoders (stochastic rounding) stay
-/// deterministic under any chunking.
+/// chunks, in parallel for large tensors, writing the packed bytes into
+/// `out` (cleared and resized — the allocation is reused across calls).
+/// `enc` gets the chunk's absolute element offset so index-keyed encoders
+/// (stochastic rounding) stay deterministic under any chunking.
 fn encode_chunked(
     xs: &[f32],
     bpe: usize,
+    out: &mut Vec<u8>,
     enc: &(impl Fn(usize, &[f32], &mut [u8]) + Sync),
-) -> Vec<u8> {
-    let mut out = vec![0u8; xs.len() * bpe];
+) {
+    // Every encode arm overwrites all of out[0..n*bpe], so the resize
+    // fill value is never observed. Steady-state same-size re-encodes
+    // (the per-step gradient wire) must pay neither a memset nor a
+    // realloc: only clear when capacity actually grows (skipping the
+    // copy of stale bytes across the realloc), otherwise truncate or
+    // zero-fill just the grown tail.
+    let need = xs.len() * bpe;
+    if out.capacity() < need {
+        out.clear();
+    }
+    out.resize(need, 0u8);
     let workers = worker_count(xs.len());
     if workers <= 1 {
-        enc(0, xs, &mut out);
-        return out;
+        enc(0, xs, out);
+        return;
     }
     let per = xs.len().div_ceil(workers);
     std::thread::scope(|s| {
@@ -424,7 +500,6 @@ fn encode_chunked(
             base += take;
         }
     });
-    out
 }
 
 /// Parallel counterpart for decode: `dec(payload_chunk, output_chunk)`.
@@ -470,13 +545,13 @@ impl Codec for Fp32Codec {
         Some(x)
     }
 
-    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
-        let payload = encode_chunked(xs, 4, &|_, c, o| {
+    fn encode_into(&self, xs: &[f32], out: &mut QuantizedTensor) {
+        encode_chunked(xs, 4, &mut out.payload, &|_, c, o| {
             for (x, b) in c.iter().zip(o.chunks_exact_mut(4)) {
                 b.copy_from_slice(&x.to_le_bytes());
             }
         });
-        QuantizedTensor::flat(FormatKind::Fp32, xs.len(), payload, None)
+        out.set_flat(FormatKind::Fp32, xs.len(), None);
     }
 }
 
@@ -492,13 +567,13 @@ impl Codec for Fp16Codec {
         Some(fp16::truncate(x))
     }
 
-    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
-        let payload = encode_chunked(xs, 2, &|_, c, o| {
+    fn encode_into(&self, xs: &[f32], out: &mut QuantizedTensor) {
+        encode_chunked(xs, 2, &mut out.payload, &|_, c, o| {
             for (x, b) in c.iter().zip(o.chunks_exact_mut(2)) {
                 b.copy_from_slice(&fp16::encode(*x).to_le_bytes());
             }
         });
-        QuantizedTensor::flat(FormatKind::Fp16, xs.len(), payload, None)
+        out.set_flat(FormatKind::Fp16, xs.len(), None);
     }
 }
 
@@ -514,13 +589,13 @@ impl Codec for Bf16Codec {
         Some(bf16::truncate(x))
     }
 
-    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
-        let payload = encode_chunked(xs, 2, &|_, c, o| {
+    fn encode_into(&self, xs: &[f32], out: &mut QuantizedTensor) {
+        encode_chunked(xs, 2, &mut out.payload, &|_, c, o| {
             for (x, b) in c.iter().zip(o.chunks_exact_mut(2)) {
                 b.copy_from_slice(&bf16::encode(*x).to_le_bytes());
             }
         });
-        QuantizedTensor::flat(FormatKind::Bf16, xs.len(), payload, None)
+        out.set_flat(FormatKind::Bf16, xs.len(), None);
     }
 }
 
@@ -536,13 +611,13 @@ impl Codec for Fp8E5m2Codec {
         Some(fp8::truncate(x))
     }
 
-    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
-        let payload = encode_chunked(xs, 1, &|_, c, o| {
+    fn encode_into(&self, xs: &[f32], out: &mut QuantizedTensor) {
+        encode_chunked(xs, 1, &mut out.payload, &|_, c, o| {
             for (x, b) in c.iter().zip(o.iter_mut()) {
                 *b = fp8::encode_fast(*x);
             }
         });
-        QuantizedTensor::flat(FormatKind::Fp8, xs.len(), payload, None)
+        out.set_flat(FormatKind::Fp8, xs.len(), None);
     }
 }
 
@@ -558,13 +633,13 @@ impl Codec for Fp8E4m3Codec {
         Some(fp8e4m3::truncate(x))
     }
 
-    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
-        let payload = encode_chunked(xs, 1, &|_, c, o| {
+    fn encode_into(&self, xs: &[f32], out: &mut QuantizedTensor) {
+        encode_chunked(xs, 1, &mut out.payload, &|_, c, o| {
             for (x, b) in c.iter().zip(o.iter_mut()) {
                 *b = fp8e4m3::encode(*x);
             }
         });
-        QuantizedTensor::flat(FormatKind::Fp8E4m3, xs.len(), payload, None)
+        out.set_flat(FormatKind::Fp8E4m3, xs.len(), None);
     }
 }
 
@@ -581,16 +656,16 @@ impl Codec for S2fp8RneCodec {
         None // needs per-tensor statistics
     }
 
-    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
+    fn encode_into(&self, xs: &[f32], out: &mut QuantizedTensor) {
         // The statistics pass stays sequential so the fitted (α, β) are
         // bit-identical to `s2fp8::truncate_tensor`'s.
         let c = s2fp8::S2fp8Codec::fit(xs);
-        let payload = encode_chunked(xs, 1, &|_, ch, o| {
+        encode_chunked(xs, 1, &mut out.payload, &|_, ch, o| {
             for (x, b) in ch.iter().zip(o.iter_mut()) {
                 *b = fp8::encode_fast(c.squeeze(*x));
             }
         });
-        QuantizedTensor::flat(FormatKind::S2fp8, xs.len(), payload, Some((c.alpha, c.beta)))
+        out.set_flat(FormatKind::S2fp8, xs.len(), Some((c.alpha, c.beta)));
     }
 }
 
@@ -627,16 +702,16 @@ impl Codec for S2fp8SrCodec {
         None // needs per-tensor statistics (and an element index)
     }
 
-    fn encode(&self, xs: &[f32]) -> QuantizedTensor {
+    fn encode_into(&self, xs: &[f32], out: &mut QuantizedTensor) {
         let c = s2fp8::S2fp8Codec::fit(xs);
         let seed = self.seed;
-        let payload = encode_chunked(xs, 1, &|base, ch, o| {
+        encode_chunked(xs, 1, &mut out.payload, &|base, ch, o| {
             for (i, (x, b)) in ch.iter().zip(o.iter_mut()).enumerate() {
                 let u = sr_u01(seed, (base + i) as u64);
                 *b = fp8::encode(fp8::truncate_stochastic(c.squeeze(*x), u));
             }
         });
-        QuantizedTensor::flat(FormatKind::S2fp8Sr, xs.len(), payload, Some((c.alpha, c.beta)))
+        out.set_flat(FormatKind::S2fp8Sr, xs.len(), Some((c.alpha, c.beta)));
     }
 }
 
@@ -843,5 +918,62 @@ mod tests {
         assert_eq!(FormatKind::Bf16.codec().encode(&xs).stored_bytes(), 2000);
         assert_eq!(FormatKind::Fp8E4m3.codec().encode(&xs).stored_bytes(), 1000);
         assert_eq!(FormatKind::S2fp8.codec().encode(&xs).stored_bytes(), 1008); // + α,β
+    }
+
+    #[test]
+    fn encode_into_reuses_and_matches_encode() {
+        // Re-encoding different tensors into one scratch must give the
+        // same bits as fresh encodes, for every format — including the
+        // shrink case (big payload followed by a small one).
+        for &kind in FormatKind::all() {
+            let c = kind.codec();
+            let mut scratch = QuantizedTensor::empty(kind);
+            for seed in [1u64, 2, 3] {
+                let n = [2000usize, 37, 0][seed as usize - 1];
+                let xs = lognormal(n, -4.0, 3.0, seed);
+                c.encode_into(&xs, &mut scratch);
+                assert_eq!(scratch, c.encode(&xs), "{} n={n}", kind.name());
+                assert_eq!(scratch.len(), n);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_range_matches_full_decode() {
+        let xs = lognormal(513, -8.0, 4.0, 21);
+        for &kind in FormatKind::all() {
+            let qt = kind.codec().encode(&xs);
+            let full = qt.decode();
+            let mut buf = vec![0.0f32; 100];
+            for start in [0usize, 1, 413, 511] {
+                let take = buf.len().min(qt.len() - start);
+                qt.decode_range(start, &mut buf[..take]);
+                for (i, (&a, &b)) in buf[..take].iter().zip(full[start..].iter()).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{} elem {}", kind.name(), start + i);
+                }
+            }
+            // empty range at the end is fine
+            qt.decode_range(qt.len(), &mut []);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "decode_range")]
+    fn decode_range_rejects_overrun() {
+        let qt = FormatKind::Fp8.codec().encode(&[1.0, 2.0]);
+        let mut buf = [0.0f32; 3];
+        qt.decode_range(0, &mut buf);
+    }
+
+    #[test]
+    fn framed_bytes_is_exact() {
+        for &kind in FormatKind::all() {
+            let qt = kind.codec().encode(&lognormal(97, -3.0, 2.0, 8));
+            assert_eq!(qt.framed_bytes(), qt.to_bytes().len(), "{}", kind.name());
+            let shaped = qt.clone().reshape(vec![97, 1]).unwrap();
+            assert_eq!(shaped.framed_bytes(), shaped.to_bytes().len());
+        }
+        let empty = QuantizedTensor::empty(FormatKind::S2fp8);
+        assert_eq!(empty.framed_bytes(), empty.to_bytes().len());
     }
 }

@@ -39,6 +39,21 @@
 //! public format API panics on valid input (tensor-statistics formats
 //! return `None` from element-wise truncation instead).
 //!
+//! ## Distributed training
+//!
+//! [`dist`] scales training across N in-process data-parallel workers,
+//! with the packed [`formats::QuantizedTensor`] as the **gradient wire
+//! format**: each worker computes summed gradients for the fixed batch
+//! chunks it owns, the chunks circulate a deterministic ring all-gather
+//! (S2FP8 payloads move ≤ ¼ of the FP32 bytes), and every rank reduces
+//! the identical chunk set in fixed chunk-index order with f64
+//! accumulation — so replicas stay bitwise in sync and the worker count
+//! is arithmetically invisible (FP32-wire runs are bitwise identical at
+//! any worker count; `tests/integration_dist.rs`). The seam it drives,
+//! [`coordinator::grad_step::GradStep`], splits a step into compute and
+//! apply phases; [`coordinator::host_trainer`] provides pure-rust MLP
+//! and NCF replicas so the whole path runs without AOT artifacts.
+//!
 //! ## Serving
 //!
 //! Beyond training, the crate serves trained models online: [`serve`] is a
@@ -83,6 +98,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod formats;
 pub mod metrics;
 pub mod runtime;

@@ -1,0 +1,123 @@
+//! Communication accounting for distributed training: lock-free per-step
+//! wire-byte counters shared by all workers, and the derived
+//! [`CommReport`] (bytes/step, compression ratio vs an FP32 wire) that
+//! the dist tests, the `train_dist` CLI and `benches/perf_allreduce.rs`
+//! report against the paper's 4× claim.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared atomic counters; workers record every ring message they send.
+#[derive(Debug, Default)]
+pub struct CommCounters {
+    wire_bytes: AtomicU64,
+    f32_equiv_bytes: AtomicU64,
+    messages: AtomicU64,
+}
+
+impl CommCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sent message: its actual framed wire bytes and what the
+    /// same tensors would have cost on an FP32 wire.
+    pub fn record_send(&self, wire_bytes: u64, f32_equiv_bytes: u64) {
+        self.wire_bytes.fetch_add(wire_bytes, Ordering::Relaxed);
+        self.f32_equiv_bytes.fetch_add(f32_equiv_bytes, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        self.wire_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot into a report over `steps` training steps.
+    pub fn report(&self, steps: usize) -> CommReport {
+        CommReport {
+            steps,
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            f32_equiv_bytes: self.f32_equiv_bytes.load(Ordering::Relaxed),
+            messages: self.messages.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Summary of a run's gradient-exchange traffic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CommReport {
+    pub steps: usize,
+    /// Total bytes that crossed the wire (framed quantized tensors +
+    /// chunk headers).
+    pub wire_bytes: u64,
+    /// What the same exchanges would have cost with FP32 payloads.
+    pub f32_equiv_bytes: u64,
+    /// Ring messages sent (each worker sends `workers − 1` per step).
+    pub messages: u64,
+}
+
+impl CommReport {
+    pub fn bytes_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.wire_bytes as f64 / self.steps as f64
+        }
+    }
+
+    /// FP32-equivalent bytes ÷ actual wire bytes (≈4 for an S2FP8 wire,
+    /// exactly 1 for FP32). `None` when nothing was exchanged (a
+    /// single-worker run has no wire).
+    pub fn compression_ratio(&self) -> Option<f64> {
+        if self.wire_bytes == 0 {
+            None
+        } else {
+            Some(self.f32_equiv_bytes as f64 / self.wire_bytes as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_report() {
+        let c = CommCounters::new();
+        c.record_send(100, 400);
+        c.record_send(50, 200);
+        let r = c.report(3);
+        assert_eq!(r.wire_bytes, 150);
+        assert_eq!(r.f32_equiv_bytes, 600);
+        assert_eq!(r.messages, 2);
+        assert!((r.bytes_per_step() - 50.0).abs() < 1e-9);
+        assert!((r.compression_ratio().unwrap() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn silent_wire_has_no_ratio() {
+        let r = CommCounters::new().report(10);
+        assert_eq!(r.compression_ratio(), None);
+        assert_eq!(r.bytes_per_step(), 0.0);
+        assert_eq!(CommCounters::new().report(0).bytes_per_step(), 0.0);
+    }
+
+    #[test]
+    fn counters_are_shared_across_threads() {
+        let c = CommCounters::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        c.record_send(1, 4);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.wire_bytes(), 400);
+        assert_eq!(c.messages(), 400);
+    }
+}

@@ -1,13 +1,17 @@
 //! Evaluation metrics computed in rust (the serving side of the paper's
 //! evaluation): top-1 accuracy, corpus BLEU (paper Table 3), HR@K/NDCG@K
-//! (paper Table 4), training-curve recording (Figs. 6–8, A2), and the
+//! (paper Table 4), training-curve recording (Figs. 6–8, A2), the
 //! lock-free latency histogram backing the online-serving metrics
-//! ([`crate::serve::metrics`]).
+//! ([`crate::serve::metrics`]), and the distributed-training
+//! communication counters ([`comm`]: per-step wire bytes + compression
+//! ratio of the gradient exchange).
 
 pub mod bleu;
 pub mod classification;
+pub mod comm;
 pub mod curve;
 pub mod histogram;
 pub mod ranking;
 
+pub use comm::{CommCounters, CommReport};
 pub use histogram::LatencyHistogram;

@@ -1,0 +1,259 @@
+//! Equivalence suite for distributed data-parallel training
+//! (`src/dist/`), on the two host model configs (MLP and NCF):
+//!
+//! * **FP32 wire**: `workers = 1` vs `workers ∈ {2, 4}` produce
+//!   bitwise-identical loss curves and final parameters — the worker
+//!   count must be arithmetically invisible.
+//! * **S2FP8 wire**: runs are bitwise identical to *each other* across
+//!   worker counts (same chunk quantization everywhere), never diverge,
+//!   converge, track the FP32-wire curve within the wire-noise bound
+//!   (DESIGN.md "Distributed training": 2e-2 per-step relative, ~10×
+//!   headroom over the measured ≈2e-3), and move ≤ 0.30× of the FP32
+//!   wire's bytes.
+//!
+//! `DIST_WORKERS` (comma-separated, default `1,2,4`) selects the worker
+//! counts — the CI matrix runs each value; counts that do not divide the
+//! chunk count are skipped.
+
+use s2fp8::coordinator::host_trainer::{HostMlpTrainer, HostNcfTrainer};
+use s2fp8::coordinator::trainer::LrSchedule;
+use s2fp8::data::synth_cf::{CfCfg, CfDataset};
+use s2fp8::data::synth_vector;
+use s2fp8::dist::{train, DistOptions, DistReport, WireFormat};
+use s2fp8::runtime::HostValue;
+use s2fp8::serve::model::NcfDims;
+
+const CHUNKS: usize = 4;
+/// Per-step relative deviation allowed between S2FP8- and FP32-wire loss
+/// curves (DESIGN.md "Distributed training").
+const WIRE_NOISE_BOUND: f64 = 2e-2;
+
+fn worker_counts() -> Vec<usize> {
+    let raw = std::env::var("DIST_WORKERS").unwrap_or_else(|_| "1,2,4".into());
+    let mut counts: Vec<usize> = raw
+        .split(',')
+        .filter_map(|s| s.trim().parse::<usize>().ok())
+        .filter(|&w| w >= 1 && CHUNKS % w == 0)
+        .collect();
+    counts.push(1); // the single-worker baseline always participates
+    counts.sort_unstable();
+    counts.dedup();
+    counts
+}
+
+fn assert_bitwise_equal(a: &DistReport, b: &DistReport, what: &str) {
+    let (la, lb) = (a.curve.column("loss"), b.curve.column("loss"));
+    assert_eq!(la.len(), lb.len(), "{what}: curve lengths differ");
+    for (step, (x, y)) in la.iter().zip(lb.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: loss diverges at recorded step {step}: {x} vs {y}"
+        );
+    }
+    assert_eq!(a.final_params.len(), b.final_params.len());
+    for ((na, ta), (nb, tb)) in a.final_params.iter().zip(b.final_params.iter()) {
+        assert_eq!(na, nb, "{what}: param order differs");
+        assert_eq!(ta.shape(), tb.shape(), "{what}: {na} shape differs");
+        for (i, (x, y)) in ta.data().iter().zip(tb.data().iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: {na}[{i}]: {x} vs {y}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MLP fixture: separable vector task
+// ---------------------------------------------------------------------------
+
+fn run_mlp(workers: usize, wire: WireFormat) -> DistReport {
+    let (n, d, classes) = (512usize, 32usize, 10usize);
+    let (x, y) = synth_vector::dataset(n, d, classes, 33);
+
+    let mut opts = DistOptions::new(workers, wire);
+    opts.chunks = CHUNKS;
+    opts.global_batch = 32;
+    opts.n_examples = n;
+    opts.steps = 50;
+    opts.lr = LrSchedule::Constant(0.08);
+    opts.seed = 44;
+    train(
+        &opts,
+        |_rank| Ok(HostMlpTrainer::new(&[d, 32, classes], 7)),
+        |_step, idx| {
+            let xb = x.gather_rows(idx);
+            let yb: Vec<i32> = idx.iter().map(|&i| y[i]).collect();
+            let rows = idx.len();
+            Ok(vec![HostValue::F32(xb), HostValue::i32(vec![rows], yb)])
+        },
+    )
+    .expect("mlp dist run")
+}
+
+// ---------------------------------------------------------------------------
+// NCF fixture: synthetic implicit feedback
+// ---------------------------------------------------------------------------
+
+fn run_ncf(workers: usize, wire: WireFormat) -> DistReport {
+    let cfg = CfCfg {
+        n_users: 64,
+        n_items: 96,
+        pos_per_user: 6,
+        neg_per_pos: 3,
+        eval_negatives: 10,
+        seed: 21,
+        ..CfCfg::default()
+    };
+    let data = CfDataset::generate(cfg.clone());
+    let dims = NcfDims {
+        n_users: cfg.n_users,
+        n_items: cfg.n_items,
+        factors: 8,
+        mlp_dim: 8,
+        mlp_layers: vec![16, 8],
+    };
+
+    let mut opts = DistOptions::new(workers, wire);
+    opts.chunks = CHUNKS;
+    opts.global_batch = 32;
+    opts.n_examples = data.n_train();
+    opts.steps = 40;
+    opts.lr = LrSchedule::Constant(0.1);
+    opts.seed = 9;
+    train(
+        &opts,
+        |_rank| Ok(HostNcfTrainer::new(&dims, 13)),
+        |_step, idx| {
+            let rows = idx.len();
+            let mut u = Vec::with_capacity(rows);
+            let mut it = Vec::with_capacity(rows);
+            let mut lb = Vec::with_capacity(rows);
+            for &i in idx {
+                let ex = &data.train[i];
+                u.push(ex.user);
+                it.push(ex.item);
+                lb.push(ex.label);
+            }
+            Ok(vec![
+                HostValue::i32(vec![rows], u),
+                HostValue::i32(vec![rows], it),
+                HostValue::f32(vec![rows], lb),
+            ])
+        },
+    )
+    .expect("ncf dist run")
+}
+
+// ---------------------------------------------------------------------------
+// equivalence: FP32 wire is bitwise worker-count-invariant
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mlp_fp32_wire_is_bitwise_equal_across_worker_counts() {
+    let base = run_mlp(1, WireFormat::Fp32);
+    assert_eq!(base.comm.wire_bytes, 0, "one worker exchanges nothing");
+    let losses = base.curve.column("loss");
+    assert!(losses[0] > 1.5, "softmax CE should start near ln 10: {}", losses[0]);
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.6),
+        "training must converge: {losses:?}"
+    );
+    for w in worker_counts() {
+        if w == 1 {
+            continue;
+        }
+        let multi = run_mlp(w, WireFormat::Fp32);
+        assert_bitwise_equal(&base, &multi, &format!("mlp fp32 wire, {w} workers"));
+        // ring all-gather traffic: every worker sends (w−1) bundles/step
+        assert_eq!(multi.comm.messages, (w * (w - 1) * multi.steps_run) as u64);
+    }
+}
+
+#[test]
+fn ncf_fp32_wire_is_bitwise_equal_across_worker_counts() {
+    let base = run_ncf(1, WireFormat::Fp32);
+    let losses = base.curve.column("loss");
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(losses[0] > 0.4 && losses[0] < 1.5, "BCE should start near ln 2: {}", losses[0]);
+    for w in worker_counts() {
+        if w == 1 {
+            continue;
+        }
+        let multi = run_ncf(w, WireFormat::Fp32);
+        assert_bitwise_equal(&base, &multi, &format!("ncf fp32 wire, {w} workers"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// S2FP8 wire: worker-count-invariant, convergent, compressed
+// ---------------------------------------------------------------------------
+
+#[test]
+fn s2fp8_wire_is_bitwise_equal_across_worker_counts() {
+    // Chunk quantization happens at fixed chunk boundaries, so even the
+    // lossy wire is bitwise worker-count-invariant.
+    let base = run_mlp(1, WireFormat::S2fp8);
+    for w in worker_counts() {
+        if w == 1 {
+            continue;
+        }
+        let multi = run_mlp(w, WireFormat::S2fp8);
+        assert_bitwise_equal(&base, &multi, &format!("mlp s2fp8 wire, {w} workers"));
+    }
+}
+
+#[test]
+fn s2fp8_wire_converges_within_bound_and_compresses_the_exchange() {
+    // Always exercised at 2 workers so the wire actually carries bytes,
+    // independent of the DIST_WORKERS matrix value.
+    let fp32 = run_mlp(2, WireFormat::Fp32);
+    let s2 = run_mlp(2, WireFormat::S2fp8);
+    assert!(!s2.diverged, "s2fp8 wire must not diverge");
+
+    let (lf, ls) = (fp32.curve.column("loss"), s2.curve.column("loss"));
+    assert_eq!(lf.len(), ls.len());
+    // step 1's loss is computed before any quantized update → identical
+    assert_eq!(lf[0].to_bits(), ls[0].to_bits(), "pre-update loss must match exactly");
+    let mut worst = 0.0f64;
+    for (step, (f, s)) in lf.iter().zip(ls.iter()).enumerate() {
+        assert!(s.is_finite(), "s2fp8 loss non-finite at recorded step {step}");
+        worst = worst.max((s - f).abs() / f.abs().max(1e-9));
+    }
+    assert!(
+        worst <= WIRE_NOISE_BOUND,
+        "s2fp8 wire drifted {worst:.4} rel from fp32 wire (bound {WIRE_NOISE_BOUND})"
+    );
+    assert!(
+        ls.last().unwrap() < &(ls[0] * 0.6),
+        "s2fp8-wire training must converge: {ls:?}"
+    );
+
+    // the acceptance gate: measured wire bytes ≤ 0.30× of FP32
+    let ratio = s2.comm.wire_bytes as f64 / fp32.comm.wire_bytes as f64;
+    assert!(
+        ratio <= 0.30,
+        "s2fp8 wire moved {ratio:.3}× of fp32's bytes (need ≤ 0.30): {} vs {}",
+        s2.comm.wire_bytes,
+        fp32.comm.wire_bytes
+    );
+    assert!(
+        s2.comm.compression_ratio().unwrap() >= 3.5,
+        "compression ratio {:?} below 3.5×",
+        s2.comm.compression_ratio()
+    );
+}
+
+#[test]
+fn ncf_s2fp8_wire_tracks_fp32_and_compresses() {
+    let fp32 = run_ncf(2, WireFormat::Fp32);
+    let s2 = run_ncf(2, WireFormat::S2fp8);
+    assert!(!s2.diverged);
+    let (lf, ls) = (fp32.curve.column("loss"), s2.curve.column("loss"));
+    let mut worst = 0.0f64;
+    for (f, s) in lf.iter().zip(ls.iter()) {
+        assert!(s.is_finite());
+        worst = worst.max((s - f).abs() / f.abs().max(1e-9));
+    }
+    assert!(worst <= WIRE_NOISE_BOUND, "ncf s2fp8 drift {worst:.4} > {WIRE_NOISE_BOUND}");
+    let ratio = s2.comm.wire_bytes as f64 / fp32.comm.wire_bytes as f64;
+    assert!(ratio <= 0.30, "ncf wire ratio {ratio:.3} > 0.30");
+}

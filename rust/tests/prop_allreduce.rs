@@ -1,0 +1,254 @@
+//! Property tests for the distributed gradient all-reduce
+//! (`src/dist/{wire,ring}.rs`), via the in-tree `util::prop` framework:
+//!
+//! * FP32 wire is an **exact** deterministic sum: the reduce equals the
+//!   f64 reference fold for any chunk count and tensor length (empty
+//!   tensors and `len < workers` included), and is invariant to chunk
+//!   delivery order — the permutation the ring's rotation actually
+//!   produces.
+//! * Running the real ring all-gather at any worker count that divides
+//!   the chunk count yields that same bitwise result on **every** rank.
+//! * S2FP8-wire reduce equals decode-then-f64-sum of the same packed
+//!   chunks — the reduce adds no arithmetic beyond the codec.
+//! * NaN/Inf payloads are rejected at encode time and (for bytes that
+//!   sneak past it) at reduce time.
+
+use s2fp8::dist::{reduce_chunks, ring, ChunkGrad, WireFormat};
+use s2fp8::formats::{FormatKind, QuantizedTensor};
+use s2fp8::tensor::Tensor;
+use s2fp8::util::prop::{check_with, Config, FnGen};
+use s2fp8::util::rng::{Pcg32, Rng};
+
+/// A generated all-reduce instance: per-chunk, per-slot gradient values.
+#[derive(Debug, Clone)]
+struct Instance {
+    /// `grads[chunk][slot]` — every chunk has the same slot lengths.
+    grads: Vec<Vec<Vec<f32>>>,
+    n_per_chunk: usize,
+}
+
+impl Instance {
+    fn chunks(&self) -> usize {
+        self.grads.len()
+    }
+
+    fn encode(&self, wire: WireFormat) -> Vec<ChunkGrad> {
+        self.grads
+            .iter()
+            .enumerate()
+            .map(|(c, slots)| {
+                let ts: Vec<Tensor> = slots
+                    .iter()
+                    .map(|v| Tensor::new(vec![v.len()], v.clone()))
+                    .collect();
+                ChunkGrad::encode(c, self.n_per_chunk, 0.1 * c as f64, &ts, wire).unwrap()
+            })
+            .collect()
+    }
+}
+
+fn gen_instance(rng: &mut Pcg32) -> Instance {
+    let chunks = 1 + rng.next_below(8) as usize;
+    let slots = 1 + rng.next_below(3) as usize;
+    // lengths include 0 and 1 — smaller than any worker count
+    let lens: Vec<usize> = (0..slots).map(|_| rng.next_below(40) as usize).collect();
+    let grads = (0..chunks)
+        .map(|_| {
+            lens.iter()
+                .map(|&l| {
+                    (0..l)
+                        .map(|_| {
+                            let e = rng.next_range_f32(-12.0, 6.0);
+                            let sign = if rng.next_f32() < 0.5 { -1.0 } else { 1.0 };
+                            sign * (e as f64).exp2() as f32
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    Instance { grads, n_per_chunk: 1 + rng.next_below(7) as usize }
+}
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, ..Config::default() }
+}
+
+/// The specification: f64 fold in chunk-index order over the *decoded*
+/// per-chunk values, divided by the total example count, rounded once.
+fn reference_mean(decoded: &[Vec<Vec<f32>>], n_total: usize) -> Vec<Vec<f32>> {
+    let slots = decoded[0].len();
+    (0..slots)
+        .map(|s| {
+            let len = decoded[0][s].len();
+            (0..len)
+                .map(|i| {
+                    let mut a = 0.0f64;
+                    for chunk in decoded {
+                        a += chunk[s][i] as f64;
+                    }
+                    (a * (1.0 / n_total as f64)) as f32
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn fp32_wire_reduce_is_the_exact_f64_fold() {
+    check_with(cfg(128), "fp32 reduce == f64 reference", &FnGen(gen_instance), |inst| {
+        let chunks = inst.encode(WireFormat::Fp32);
+        let red = reduce_chunks(&chunks, inst.chunks()).map_err(|e| e.to_string())?;
+        let n_total = inst.n_per_chunk * inst.chunks();
+        if red.n_examples != n_total {
+            return Err(format!("n_examples {} != {n_total}", red.n_examples));
+        }
+        let want = reference_mean(&inst.grads, n_total);
+        for (slot, w) in want.iter().enumerate() {
+            for (i, (&x, got)) in w.iter().zip(red.grads[slot].data()).enumerate() {
+                if x.to_bits() != got.to_bits() {
+                    return Err(format!("slot {slot}[{i}]: {got} != reference {x}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reduce_is_invariant_to_chunk_delivery_order() {
+    check_with(cfg(128), "reduce permutation invariance", &FnGen(gen_instance), |inst| {
+        for wire in [WireFormat::Fp32, WireFormat::S2fp8] {
+            let mut chunks = inst.encode(wire);
+            let a = reduce_chunks(&chunks, inst.chunks()).map_err(|e| e.to_string())?;
+            // rotate + swap: the delivery orders different ranks see
+            chunks.rotate_left(inst.chunks() / 2);
+            if chunks.len() >= 2 {
+                chunks.swap(0, chunks.len() - 1);
+            }
+            let b = reduce_chunks(&chunks, inst.chunks()).map_err(|e| e.to_string())?;
+            for (slot, (ga, gb)) in a.grads.iter().zip(b.grads.iter()).enumerate() {
+                for (i, (x, y)) in ga.data().iter().zip(gb.data().iter()).enumerate() {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("{} slot {slot}[{i}]: {x} != {y}", wire.name()));
+                    }
+                }
+            }
+            if a.loss_mean.to_bits() != b.loss_mean.to_bits() {
+                return Err("loss fold depends on delivery order".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ring_all_gather_reduces_identically_on_every_rank_at_any_worker_count() {
+    check_with(cfg(48), "ring == direct reduce", &FnGen(gen_instance), |inst| {
+        let direct = reduce_chunks(&inst.encode(WireFormat::S2fp8), inst.chunks())
+            .map_err(|e| e.to_string())?;
+        for workers in 1..=inst.chunks() {
+            if inst.chunks() % workers != 0 {
+                continue;
+            }
+            let cpw = inst.chunks() / workers;
+            let all_encoded = inst.encode(WireFormat::S2fp8);
+            let nodes = ring::<Vec<ChunkGrad>>(workers);
+            let per_rank: Vec<Vec<Tensor>> = std::thread::scope(|s| {
+                let handles: Vec<_> = nodes
+                    .into_iter()
+                    .map(|node| {
+                        let enc = &all_encoded;
+                        s.spawn(move || {
+                            let rank = node.rank();
+                            let mine: Vec<ChunkGrad> =
+                                enc[rank * cpw..(rank + 1) * cpw].to_vec();
+                            let gathered = node.all_gather(mine, |_| {}).unwrap();
+                            let all: Vec<ChunkGrad> =
+                                gathered.into_iter().flatten().collect();
+                            reduce_chunks(&all, enc.len()).unwrap().grads
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (rank, grads) in per_rank.iter().enumerate() {
+                for (slot, (g, d)) in grads.iter().zip(direct.grads.iter()).enumerate() {
+                    for (i, (x, y)) in g.data().iter().zip(d.data().iter()).enumerate() {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!(
+                                "workers={workers} rank {rank} slot {slot}[{i}]: {x} != {y}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn s2fp8_wire_reduce_equals_decode_then_sum_of_the_packed_chunks() {
+    check_with(cfg(128), "s2fp8 reduce == decode+sum", &FnGen(gen_instance), |inst| {
+        let chunks = inst.encode(WireFormat::S2fp8);
+        let red = reduce_chunks(&chunks, inst.chunks()).map_err(|e| e.to_string())?;
+        let n_total = inst.n_per_chunk * inst.chunks();
+        let decoded: Vec<Vec<Vec<f32>>> = chunks
+            .iter()
+            .map(|c| c.tensors.iter().map(|t| t.decode()).collect())
+            .collect();
+        let want = reference_mean(&decoded, n_total);
+        for (slot, w) in want.iter().enumerate() {
+            for (i, (&x, got)) in w.iter().zip(red.grads[slot].data()).enumerate() {
+                if x.to_bits() != got.to_bits() {
+                    return Err(format!("slot {slot}[{i}]: {got} != decode+sum {x}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nonfinite_values_are_rejected_at_encode_and_reduce() {
+    check_with(cfg(64), "NaN/Inf rejection", &FnGen(gen_instance), |inst| {
+        // pick a deterministic position to poison (skip all-empty draws)
+        let Some((chunk, slot, idx)) = inst.grads.iter().enumerate().find_map(|(c, slots)| {
+            slots.iter().enumerate().find_map(|(s, v)| {
+                if v.is_empty() {
+                    None
+                } else {
+                    Some((c, s, v.len() / 2))
+                }
+            })
+        }) else {
+            return Ok(()); // every slot empty — nothing to poison
+        };
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut poisoned = inst.clone();
+            poisoned.grads[chunk][slot][idx] = bad;
+            for wire in [WireFormat::Fp32, WireFormat::S2fp8] {
+                let ts: Vec<Tensor> = poisoned.grads[chunk]
+                    .iter()
+                    .map(|v| Tensor::new(vec![v.len()], v.clone()))
+                    .collect();
+                if ChunkGrad::encode(chunk, 1, 0.0, &ts, wire).is_ok() {
+                    return Err(format!("{} encode accepted {bad}", wire.name()));
+                }
+            }
+            // bytes that bypass encode's gate must fail the reduce
+            // (fp32 payloads round-trip bit-exactly, NaN included)
+            let mut chunks = inst.encode(WireFormat::Fp32);
+            let mut payload = chunks[chunk].tensors[slot].payload().to_vec();
+            payload[idx * 4..(idx + 1) * 4].copy_from_slice(&bad.to_le_bytes());
+            let elems = payload.len() / 4;
+            chunks[chunk].tensors[slot] =
+                QuantizedTensor::from_parts(FormatKind::Fp32, vec![elems], payload, None).unwrap();
+            if reduce_chunks(&chunks, inst.chunks()).is_ok() {
+                return Err(format!("reduce accepted a smuggled {bad}"));
+            }
+        }
+        Ok(())
+    });
+}
