@@ -16,11 +16,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use s2fp8::coordinator::checkpoint;
+use s2fp8::models::{self, synth_ncf_slots, HostModel, ModelKind, NcfDims};
 use s2fp8::runtime::HostValue;
 use s2fp8::serve::{
     backend::HostBackend,
     engine::{Engine, ServeConfig},
-    model::{synth_ncf_slots, HostModel, ModelKind, NcfDims},
     registry::ModelRegistry,
     BatchPolicy,
 };
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
         store.compressed_entries(),
         store.decoded_tensors()
     );
-    let model = Arc::new(HostModel::from_store(ModelKind::Ncf, &store)?);
+    let model: Arc<dyn HostModel> = Arc::from(models::from_store(ModelKind::Ncf, &store)?);
     println!(
         "model bound: owns its decoded weights; store cache still holds {} decodes \
          (packed bytes stay the only resident copy)\n",

@@ -1,0 +1,108 @@
+//! §Perf bench — host model zoo throughput: forward (`run_rows`) and
+//! backward (`backward`) examples/sec for every zoo workload × quant
+//! mode (FP32 vs S2FP8-staged forward). Emits
+//! `runs/perf_hostmodels/{hostmodels.md,BENCH_hostmodels.json}`; CI
+//! uploads the JSON as an artifact next to the other perf benches.
+//!
+//! The forward benches drive exactly the serving path (stacked inputs →
+//! per-row logits), the backward benches exactly the training compute
+//! phase, so the numbers are the real per-replica costs behind
+//! `bin/serve` and `bin/train_dist`.
+//!
+//! Scale knobs: `S2FP8_BENCH_FAST=1` (shorter budgets).
+
+use std::time::Duration;
+
+use s2fp8::bench::harness::bench_fn;
+use s2fp8::bench::paper;
+use s2fp8::bench::report::Table;
+use s2fp8::models::{zoo, HostModel, QuantMode};
+use s2fp8::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let bench = "perf_hostmodels";
+    let fast = std::env::var("S2FP8_BENCH_FAST").as_deref() == Ok("1");
+    let budget = Duration::from_millis(if fast { 120 } else { 400 });
+    let batch_rows = 64usize;
+
+    let mut table = Table::new(
+        "Host model zoo: examples/sec (forward = serving path, backward = training compute)",
+        &["model", "quant", "params", "fwd rows/s", "bwd rows/s"],
+    );
+    let mut rows_json = Vec::new();
+
+    for &name in zoo::names() {
+        for quant in [QuantMode::None, QuantMode::parse("s2fp8").unwrap()] {
+            let wl = zoo::workload(name, 7, quant)?;
+            let replica = wl.replica()?;
+            let idx: Vec<usize> = (0..batch_rows).collect();
+            let batch = wl.batch(0, &idx)?;
+            let n_features = replica.feature_specs().len();
+            let fwd_inputs = &batch[..n_features];
+            let n_params: usize = replica
+                .param_slots()
+                .iter()
+                .map(|(_, s)| s.iter().product::<usize>())
+                .sum();
+
+            let fwd = bench_fn(
+                &format!("{name}/{} fwd", quant.name()),
+                1,
+                3,
+                budget,
+                Some(batch_rows as f64),
+                || {
+                    let rows = replica.run_rows(fwd_inputs, batch_rows).unwrap();
+                    std::hint::black_box(rows);
+                },
+            );
+            let bwd = bench_fn(
+                &format!("{name}/{} bwd", quant.name()),
+                1,
+                3,
+                budget,
+                Some(batch_rows as f64),
+                || {
+                    let sg = replica.backward(&batch).unwrap();
+                    std::hint::black_box(sg);
+                },
+            );
+            let fwd_rps = fwd.throughput().unwrap_or(0.0);
+            let bwd_rps = bwd.throughput().unwrap_or(0.0);
+            println!(
+                "{name:<12} {:<6} {n_params:>8} params  fwd {fwd_rps:>10.0} rows/s  \
+                 bwd {bwd_rps:>10.0} rows/s",
+                quant.name()
+            );
+            table.row(vec![
+                name.to_string(),
+                quant.name().to_string(),
+                n_params.to_string(),
+                format!("{fwd_rps:.0}"),
+                format!("{bwd_rps:.0}"),
+            ]);
+            rows_json.push(Json::obj(vec![
+                ("model", Json::str(name)),
+                ("quant", Json::str(quant.name())),
+                ("params", Json::num(n_params as f64)),
+                ("batch_rows", Json::num(batch_rows as f64)),
+                ("fwd_rows_per_sec", Json::num(fwd_rps)),
+                ("bwd_rows_per_sec", Json::num(bwd_rps)),
+                ("fwd_p50_us", Json::num(fwd.p50.as_secs_f64() * 1e6)),
+                ("bwd_p50_us", Json::num(bwd.p50.as_secs_f64() * 1e6)),
+            ]));
+        }
+    }
+
+    table.print();
+    table.save(paper::out_dir(bench).join("hostmodels.md"))?;
+
+    let record = Json::obj(vec![
+        ("bench", Json::str("hostmodels")),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    let json_path = paper::out_dir(bench).join("BENCH_hostmodels.json");
+    std::fs::write(&json_path, record.to_string_pretty())?;
+    println!("wrote {}", json_path.display());
+    Ok(())
+}

@@ -14,11 +14,11 @@ use std::time::Duration;
 use s2fp8::bench::paper;
 use s2fp8::bench::report::Table;
 use s2fp8::coordinator::checkpoint;
+use s2fp8::models::{self, synth_ncf_slots, HostModel, ModelKind, NcfDims};
 use s2fp8::runtime::HostValue;
 use s2fp8::serve::{
     backend::HostBackend,
     engine::{Engine, ServeConfig},
-    model::{synth_ncf_slots, HostModel, ModelKind, NcfDims},
     registry::WeightStore,
     BatchPolicy,
 };
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     let path = paper::out_dir(bench).join("ncf_synth.s2ck");
     checkpoint::save(&path, &synth_ncf_slots(&dims, 2020), true)?;
     let store = Arc::new(WeightStore::open(&path)?);
-    let model = Arc::new(HostModel::from_store(ModelKind::Ncf, &store)?);
+    let model: Arc<dyn HostModel> = Arc::from(models::from_store(ModelKind::Ncf, &store)?);
 
     let mut table = Table::new(
         &format!(

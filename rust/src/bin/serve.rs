@@ -25,11 +25,14 @@ use anyhow::{bail, Context, Result};
 
 use s2fp8::coordinator::checkpoint;
 use s2fp8::formats::FormatKind;
+use s2fp8::models::{
+    self, synth_mlp_slots, synth_ncf_slots, synth_transformer_slots, HostModel, ModelKind,
+    NcfDims, TransformerDims,
+};
 use s2fp8::runtime::{Dtype, HostValue};
 use s2fp8::serve::{
     backend::{Backend, FeatureSpec, HostBackend, RuntimeBackend},
     engine::{Engine, ServeConfig},
-    model::{synth_mlp_slots, synth_ncf_slots, HostModel, ModelKind, NcfDims},
     registry::{ModelRegistry, WeightStore},
     BatchPolicy,
 };
@@ -55,7 +58,7 @@ fn run(args: &[String]) -> Result<()> {
             "s2fp8",
             "storage format for --synth: fp32 | fp16 | bf16 | fp8 | fp8-e4m3 | s2fp8 | s2fp8-sr",
         )
-        .opt("model", "ncf", "host model family: ncf | mlp")
+        .opt("model", "ncf", "host model family: ncf | mlp | transformer")
         .opt("backend", "host", "execution backend: host | runtime")
         .opt_optional("artifact", "AOT eval artifact name (runtime backend)")
         .opt("artifacts-dir", "artifacts", "artifact directory (runtime backend)")
@@ -85,6 +88,9 @@ fn run(args: &[String]) -> Result<()> {
         let slots = match kind {
             ModelKind::Ncf => synth_ncf_slots(&NcfDims::default(), p.u64("seed")),
             ModelKind::Mlp => synth_mlp_slots(&[256, 128, 64, 10], p.u64("seed")),
+            ModelKind::Transformer => {
+                synth_transformer_slots(&TransformerDims::default(), p.u64("seed"))
+            }
         };
         let fmt = FormatKind::parse(p.str("ckpt-format"))
             .with_context(|| format!("bad --ckpt-format '{}'", p.str("ckpt-format")))?;
@@ -117,7 +123,7 @@ fn run(args: &[String]) -> Result<()> {
     let max_batch: usize = p.usize("max-batch");
     let backend: Arc<dyn Backend> = match p.str("backend") {
         "host" => {
-            let model = Arc::new(HostModel::from_store(kind, &store)?);
+            let model: Arc<dyn HostModel> = Arc::from(models::from_store(kind, &store)?);
             Arc::new(HostBackend::new(model, max_batch))
         }
         "runtime" => {
@@ -126,7 +132,7 @@ fn run(args: &[String]) -> Result<()> {
             // the manifest only carries shapes, so attach the id-range
             // checks the host backend does natively
             let specs = be.feature_specs().to_vec();
-            let (n_users, n_items) = id_bounds(&store);
+            let (n_users, n_items, _vocab) = id_bounds(&store);
             Arc::new(be.with_validator(move |features| {
                 for (v, spec) in features.iter().zip(specs.iter()) {
                     if spec.dtype != Dtype::I32 {
@@ -218,20 +224,22 @@ fn run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Embedding-id bounds for synthetic requests, read off the checkpoint.
-fn id_bounds(store: &WeightStore) -> (usize, usize) {
+/// Embedding-id/token bounds for synthetic requests, read off the
+/// checkpoint: (n_users, n_items, vocab).
+fn id_bounds(store: &WeightStore) -> (usize, usize, usize) {
     let dim0 = |name: &str| store.get(name).ok().map(|v| v.shape()[0]);
     (
         dim0("params/gmf_user/table").unwrap_or(512),
         dim0("params/gmf_item/table").unwrap_or(1024),
+        dim0("params/src_emb/table").unwrap_or(64),
     )
 }
 
 /// Build one random example matching the backend's feature specs; spec
-/// names choose the distribution (user/item ids vs dense features).
+/// names choose the distribution (user/item/token ids vs dense features).
 fn synth_example(
     specs: &[FeatureSpec],
-    (n_users, n_items): (usize, usize),
+    (n_users, n_items, vocab): (usize, usize, usize),
     rng: &mut Pcg32,
 ) -> Vec<HostValue> {
     specs
@@ -244,6 +252,8 @@ fn synth_example(
                         n_users
                     } else if spec.name.contains("item") {
                         n_items
+                    } else if spec.name.contains("src") {
+                        vocab
                     } else {
                         1 // e.g. unused eval label slots
                     };

@@ -1,7 +1,8 @@
 //! `train_dist` — data-parallel host training over the S2FP8-compressed
-//! gradient wire. Runs entirely on the pure-rust replicas (no artifacts
-//! or PJRT): an MLP on the separable vector task, or NCF on the
-//! synthetic implicit-feedback dataset.
+//! gradient wire. Runs entirely on the pure-rust model zoo
+//! (`s2fp8::models`, no artifacts or PJRT): an MLP on the separable
+//! vector task, NCF on the synthetic implicit-feedback dataset, or the
+//! host Transformer on the synthetic translation corpus.
 //!
 //! ```text
 //! # 4 workers, paper wire: gradients cross the ring as packed S2FP8
@@ -9,20 +10,19 @@
 //!
 //! # exactness baseline: FP32 wire is bitwise equal to --workers 1
 //! cargo run --release --bin train_dist -- --model ncf --workers 2 --wire fp32
+//!
+//! # the full paper regime: quantized forward AND compressed wire
+//! cargo run --release --bin train_dist -- --model transformer --quant s2fp8 --wire s2fp8
 //! ```
 //!
 //! Writes `curve.csv` and `dist.json` (loss curve, wire bytes,
-//! compression ratio) under `--out`.
+//! compression ratio, eval metrics) under `--out`.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-use s2fp8::coordinator::host_trainer::{HostMlpTrainer, HostNcfTrainer};
 use s2fp8::coordinator::trainer::LrSchedule;
-use s2fp8::data::synth_cf::{CfCfg, CfDataset};
-use s2fp8::data::synth_vector;
-use s2fp8::dist::{DistOptions, DistReport, WireFormat};
-use s2fp8::runtime::HostValue;
-use s2fp8::serve::model::NcfDims;
+use s2fp8::dist::{DistOptions, WireFormat};
+use s2fp8::models::{zoo, QuantMode};
 use s2fp8::util::argparse::{ArgError, Command};
 use s2fp8::util::json::Json;
 use s2fp8::util::logging;
@@ -38,9 +38,14 @@ fn main() {
 
 fn run(args: &[String]) -> Result<()> {
     let spec = Command::new("train_dist", "data-parallel training with a compressed gradient wire")
-        .opt("model", "mlp", "replica family: mlp | ncf")
+        .opt("model", "mlp", "zoo workload: mlp | ncf | transformer")
         .opt("workers", "2", "data-parallel worker threads (must divide --chunks)")
         .opt("wire", "s2fp8", "gradient wire format: fp32 | s2fp8")
+        .opt(
+            "quant",
+            "none",
+            "forward weight quantization: none | s2fp8 | s2fp8-sr | fp8 | fp8-e4m3 | bf16 | fp16",
+        )
         .opt("chunks", "8", "fixed reduce granularity (chunks per global batch)")
         .opt("batch", "64", "global batch size, split across workers")
         .opt("steps", "120", "training steps")
@@ -58,7 +63,12 @@ fn run(args: &[String]) -> Result<()> {
 
     let wire = WireFormat::parse(p.str("wire"))
         .with_context(|| format!("bad --wire '{}' (fp32 | s2fp8)", p.str("wire")))?;
+    let quant = QuantMode::parse(p.str("quant"))
+        .with_context(|| format!("bad --quant '{}' (none or a format name)", p.str("quant")))?;
     let seed = p.u64("seed");
+    let model = p.str("model");
+    let wl = zoo::workload(model, seed, quant)?;
+
     let mut opts = DistOptions::new(p.usize("workers"), wire);
     opts.chunks = p.usize("chunks");
     opts.global_batch = p.usize("batch");
@@ -66,19 +76,17 @@ fn run(args: &[String]) -> Result<()> {
     opts.lr = LrSchedule::Constant(p.f32("lr"));
     opts.seed = seed;
     opts.log_every = p.usize("log-every");
+    opts.n_examples = wl.n_examples;
 
-    let model = p.str("model");
-    let report = match model {
-        "mlp" => run_mlp(&mut opts, seed)?,
-        "ncf" => run_ncf(&mut opts, seed)?,
-        other => bail!("unknown --model '{other}' (mlp | ncf)"),
-    };
+    let report =
+        s2fp8::dist::train(&opts, |_rank| wl.replica(), |step, idx| wl.batch(step, idx))?;
 
     let losses = report.curve.column("loss");
     println!(
-        "{model} × {} workers, {} wire: loss {:.4} → {:.4} over {} steps ({:.2}s){}",
+        "{model} × {} workers, {} wire, {} quant: loss {:.4} → {:.4} over {} steps ({:.2}s){}",
         opts.workers,
         wire.name(),
+        quant.name(),
         losses.first().copied().unwrap_or(f64::NAN),
         losses.last().copied().unwrap_or(f64::NAN),
         report.steps_run,
@@ -94,18 +102,28 @@ fn run(args: &[String]) -> Result<()> {
         ),
         None => println!("wire: silent (single worker exchanges no gradients)"),
     }
+    let metrics = wl.eval_params(&report.final_params)?;
+    for (name, value) in &metrics {
+        println!("eval {name}: {value:.4}");
+    }
 
     let out = std::path::PathBuf::from(p.str("out")).join(format!(
-        "{model}_w{}_{}",
+        "{model}_w{}_{}_{}",
         opts.workers,
-        wire.name()
+        wire.name(),
+        quant.name()
     ));
     std::fs::create_dir_all(&out)?;
     report.curve.save_csv(out.join("curve.csv"))?;
+    let mut eval_obj = std::collections::BTreeMap::new();
+    for (name, value) in &metrics {
+        eval_obj.insert(name.clone(), Json::num(*value));
+    }
     let record = Json::obj(vec![
         ("model", Json::str(model)),
         ("workers", Json::num(opts.workers as f64)),
         ("wire", Json::str(wire.name())),
+        ("quant", Json::str(quant.name())),
         ("chunks", Json::num(opts.chunks as f64)),
         ("global_batch", Json::num(opts.global_batch as f64)),
         ("steps_run", Json::num(report.steps_run as f64)),
@@ -118,64 +136,11 @@ fn run(args: &[String]) -> Result<()> {
             "compression_vs_fp32",
             Json::num(report.comm.compression_ratio().unwrap_or(1.0)),
         ),
+        ("eval", Json::Obj(eval_obj)),
         ("wall_secs", Json::num(report.wall_secs)),
     ]);
     let json_path = out.join("dist.json");
     std::fs::write(&json_path, record.to_string_pretty())?;
     println!("wrote {} and curve.csv", json_path.display());
     Ok(())
-}
-
-/// Separable vector task (the quickstart MLP's synthetic data,
-/// `data::synth_vector`): class pattern + noise, deterministic in the
-/// seed.
-fn run_mlp(opts: &mut DistOptions, seed: u64) -> Result<DistReport> {
-    let (n, d, classes) = (4096usize, 32usize, 10usize);
-    opts.n_examples = n;
-    let (x, y) = synth_vector::dataset(n, d, classes, seed);
-    s2fp8::dist::train(
-        opts,
-        |_rank| Ok(HostMlpTrainer::new(&[d, 64, classes], seed)),
-        |_step, idx| {
-            let xb = x.gather_rows(idx);
-            let yb: Vec<i32> = idx.iter().map(|&i| y[i]).collect();
-            let rows = idx.len();
-            Ok(vec![HostValue::F32(xb), HostValue::i32(vec![rows], yb)])
-        },
-    )
-}
-
-/// NCF on the synthetic implicit-feedback dataset (`data::synth_cf`).
-fn run_ncf(opts: &mut DistOptions, seed: u64) -> Result<DistReport> {
-    let cfg = CfCfg { n_users: 128, n_items: 256, seed, ..CfCfg::default() };
-    let data = CfDataset::generate(cfg.clone());
-    opts.n_examples = data.n_train();
-    let dims = NcfDims {
-        n_users: cfg.n_users,
-        n_items: cfg.n_items,
-        factors: 8,
-        mlp_dim: 16,
-        mlp_layers: vec![32, 16, 8],
-    };
-    s2fp8::dist::train(
-        opts,
-        move |_rank| Ok(HostNcfTrainer::new(&dims, seed)),
-        |_step, idx| {
-            let mut u = Vec::with_capacity(idx.len());
-            let mut it = Vec::with_capacity(idx.len());
-            let mut lb = Vec::with_capacity(idx.len());
-            for &i in idx {
-                let ex = &data.train[i];
-                u.push(ex.user);
-                it.push(ex.item);
-                lb.push(ex.label);
-            }
-            let rows = idx.len();
-            Ok(vec![
-                HostValue::i32(vec![rows], u),
-                HostValue::i32(vec![rows], it),
-                HostValue::f32(vec![rows], lb),
-            ])
-        },
-    )
 }

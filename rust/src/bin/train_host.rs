@@ -1,0 +1,121 @@
+//! `train_host` — single-replica host training over the model zoo
+//! (`s2fp8::models`): the simplest way to train any zoo workload (MLP,
+//! NCF, or the host Transformer) with no artifacts, PJRT, or worker
+//! fan-out, and to A/B a quantized forward against FP32.
+//!
+//! Internally this is `dist::train` pinned to one worker and one chunk —
+//! the same step machinery as the distributed runs. Note the chunk count
+//! is part of the arithmetic (each chunk's gradient sum rounds to f32
+//! once), so a `train_host` curve is bitwise comparable to
+//! `train_dist --chunks 1`, not to runs at the dist default `--chunks 8`.
+//!
+//! ```text
+//! # the paper's Fig. 2 regime on the host Transformer: FP32 master
+//! # weights, S2FP8-quantized forward, BLEU eval at the end
+//! cargo run --release --bin train_host -- --model transformer --quant s2fp8
+//!
+//! # FP32 baseline for the same run
+//! cargo run --release --bin train_host -- --model transformer
+//! ```
+//!
+//! Writes `curve.csv` and `train_host.json` (loss curve + eval metrics:
+//! accuracy / HR@10+NDCG@10 / BLEU+token accuracy) under `--out`.
+
+use anyhow::{Context, Result};
+
+use s2fp8::coordinator::trainer::LrSchedule;
+use s2fp8::dist::{DistOptions, WireFormat};
+use s2fp8::models::{zoo, QuantMode};
+use s2fp8::util::argparse::{ArgError, Command};
+use s2fp8::util::json::Json;
+use s2fp8::util::logging;
+
+fn main() {
+    logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let spec = Command::new("train_host", "single-replica training over the host model zoo")
+        .opt("model", "mlp", "zoo workload: mlp | ncf | transformer")
+        .opt(
+            "quant",
+            "none",
+            "forward weight quantization: none | s2fp8 | s2fp8-sr | fp8 | fp8-e4m3 | bf16 | fp16",
+        )
+        .opt("batch", "32", "batch size")
+        .opt("steps", "200", "training steps")
+        .opt("lr", "0.1", "SGD learning rate")
+        .opt("seed", "2020", "init + data seed")
+        .opt("log-every", "20", "console cadence (steps)")
+        .opt("out", "runs/train_host", "output directory");
+    let p = match spec.parse(args) {
+        Err(ArgError::HelpRequested) => {
+            print!("{}", spec.help_text());
+            return Ok(());
+        }
+        other => other?,
+    };
+
+    let quant = QuantMode::parse(p.str("quant"))
+        .with_context(|| format!("bad --quant '{}' (none or a format name)", p.str("quant")))?;
+    let seed = p.u64("seed");
+    let model = p.str("model");
+    let wl = zoo::workload(model, seed, quant)?;
+
+    // one worker, one chunk: the plain SGD loop through the same step
+    // arithmetic as the distributed runs
+    let mut opts = DistOptions::new(1, WireFormat::Fp32);
+    opts.chunks = 1;
+    opts.global_batch = p.usize("batch");
+    opts.steps = p.usize("steps");
+    opts.lr = LrSchedule::Constant(p.f32("lr"));
+    opts.seed = seed;
+    opts.log_every = p.usize("log-every");
+    opts.n_examples = wl.n_examples;
+
+    let report =
+        s2fp8::dist::train(&opts, |_rank| wl.replica(), |step, idx| wl.batch(step, idx))?;
+
+    let losses = report.curve.column("loss");
+    println!(
+        "{model} ({} quant): loss {:.4} → {:.4} over {} steps ({:.2}s){}",
+        quant.name(),
+        losses.first().copied().unwrap_or(f64::NAN),
+        losses.last().copied().unwrap_or(f64::NAN),
+        report.steps_run,
+        report.wall_secs,
+        if report.diverged { "  [DIVERGED]" } else { "" },
+    );
+    let metrics = wl.eval_params(&report.final_params)?;
+    for (name, value) in &metrics {
+        println!("eval {name}: {value:.4}");
+    }
+
+    let out = std::path::PathBuf::from(p.str("out"))
+        .join(format!("{model}_{}", quant.name()));
+    std::fs::create_dir_all(&out)?;
+    report.curve.save_csv(out.join("curve.csv"))?;
+    let mut eval_obj = std::collections::BTreeMap::new();
+    for (name, value) in &metrics {
+        eval_obj.insert(name.clone(), Json::num(*value));
+    }
+    let record = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("quant", Json::str(quant.name())),
+        ("batch", Json::num(opts.global_batch as f64)),
+        ("steps_run", Json::num(report.steps_run as f64)),
+        ("diverged", Json::Bool(report.diverged)),
+        ("final_loss", Json::num(losses.last().copied().unwrap_or(f64::NAN))),
+        ("eval", Json::Obj(eval_obj)),
+        ("wall_secs", Json::num(report.wall_secs)),
+    ]);
+    let json_path = out.join("train_host.json");
+    std::fs::write(&json_path, record.to_string_pretty())?;
+    println!("wrote {} and curve.csv", json_path.display());
+    Ok(())
+}

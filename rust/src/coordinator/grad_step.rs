@@ -8,10 +8,12 @@
 //! Everything the distributed coordinator needs from a model is this
 //! trait, so the same worker loop drives any replica implementation:
 //!
-//! * [`super::host_trainer`] — pure-rust MLP and NCF replicas (no
-//!   artifacts/PJRT; per-row math bitwise-independent of batch
-//!   composition, the property the equivalence tests in
-//!   `tests/integration_dist.rs` are built on);
+//! * every [`crate::models`] zoo model (MLP, NCF, Transformer) — the
+//!   blanket impl at the bottom of this module maps the trait onto
+//!   [`HostModel`](crate::models::HostModel)'s backward/SGD surface, so
+//!   any host model is a distributed replica for free (per-row math
+//!   bitwise-independent of batch composition, the property the
+//!   equivalence tests in `tests/integration_dist.rs` are built on);
 //! * the AOT [`super::Trainer`] exposes the same two-phase shape at the
 //!   executable level ([`super::Trainer::step_compute`] /
 //!   [`super::Trainer::commit`]). Its `train_step` artifacts fuse the
@@ -63,4 +65,27 @@ pub trait GradStep {
     /// Snapshot of the current parameters as (name, tensor) pairs —
     /// replica-sync checks, equivalence tests and checkpointing.
     fn params(&self) -> Vec<(String, Tensor)>;
+}
+
+/// Every zoo model is a distributed training replica: the two-phase
+/// seam is exactly the [`HostModel`](crate::models::HostModel) surface
+/// (`backward` = compute, `sgd_step` = apply), so `dist::train` drives
+/// any host model — including `Box<dyn HostModel>` for runtime model
+/// selection — without per-model adapters.
+impl<M: crate::models::HostModel> GradStep for M {
+    fn grad_slots(&self) -> Vec<(String, Vec<usize>)> {
+        self.param_slots()
+    }
+
+    fn compute(&mut self, batch: &[HostValue]) -> Result<ShardGrad> {
+        crate::models::HostModel::backward(self, batch)
+    }
+
+    fn apply(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()> {
+        self.sgd_step(mean_grads, lr)
+    }
+
+    fn params(&self) -> Vec<(String, Tensor)> {
+        crate::models::HostModel::params(self)
+    }
 }

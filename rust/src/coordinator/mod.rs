@@ -15,14 +15,13 @@
 //!   optional S2FP8 compression (the paper's 4× memory claim in practice).
 //! * [`grad_step`] — the compute/apply **GradStep seam** a training step
 //!   is split into, so data-parallel training ([`crate::dist`]) can
-//!   insert a gradient all-reduce between the phases.
-//! * [`host_trainer`] — pure-rust MLP/NCF training replicas implementing
-//!   that seam (no artifacts/PJRT needed; the equivalence-test and
-//!   multi-worker reference path).
+//!   insert a gradient all-reduce between the phases. Every
+//!   [`crate::models`] zoo model implements it through a blanket impl
+//!   (the pure-rust replicas formerly in `coordinator/host_trainer.rs`
+//!   now live in the zoo).
 
 pub mod checkpoint;
 pub mod grad_step;
-pub mod host_trainer;
 pub mod runner;
 pub mod eval;
 pub mod loss_scale;
@@ -30,7 +29,6 @@ pub mod stats;
 pub mod trainer;
 
 pub use grad_step::{GradStep, ShardGrad};
-pub use host_trainer::{HostMlpTrainer, HostNcfTrainer};
 pub use loss_scale::{LossScaleController, LossScalePolicy};
 pub use runner::{run_experiment, ExperimentOutcome};
 pub use trainer::{LrSchedule, PendingStep, StepOutputs, TrainOptions, Trainer};

@@ -232,7 +232,7 @@ impl Trainer {
     /// [`super::grad_step`]): the AOT `train_step` artifacts fuse the
     /// gradient *application* into the graph, so the split exposed here is
     /// computed-vs-committed rather than grad-vs-apply. Host replicas
-    /// ([`super::host_trainer`]) expose the full gradient seam; a future
+    /// ([`crate::models`]) expose the full gradient seam; a future
     /// grad-outputting artifact slots into the same two-phase shape.
     pub fn step_compute(
         &mut self,

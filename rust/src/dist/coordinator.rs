@@ -321,8 +321,8 @@ fn params_bitwise_eq(a: &[(String, Tensor)], b: &[(String, Tensor)]) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::host_trainer::HostMlpTrainer;
     use crate::data::synth_vector;
+    use crate::models::MlpModel;
 
     fn run(workers: usize, wire: WireFormat, steps: usize) -> DistReport {
         let (x, y) = synth_vector::dataset(256, 12, 4, 5);
@@ -334,7 +334,7 @@ mod tests {
         opts.lr = LrSchedule::Constant(0.08);
         train(
             &opts,
-            |_rank| Ok(HostMlpTrainer::new(&[12, 10, 4], 77)),
+            |_rank| Ok(MlpModel::new(&[12, 10, 4], 77)),
             |_step, idx| {
                 let xb = x.gather_rows(idx);
                 let yb: Vec<i32> = idx.iter().map(|&i| y[i]).collect();
@@ -394,7 +394,7 @@ mod tests {
         opts.steps = 3;
         let err = train(
             &opts,
-            |_rank| Ok(HostMlpTrainer::new(&[4, 2], 1)),
+            |_rank| Ok(MlpModel::new(&[4, 2], 1)),
             |_step, _idx| -> Result<Vec<HostValue>> { bail!("no data today") },
         )
         .unwrap_err();
@@ -406,7 +406,7 @@ mod tests {
         let opts = DistOptions::new(2, WireFormat::Fp32);
         let err = train(
             &opts,
-            |rank| -> Result<HostMlpTrainer> { bail!("rank {rank} has no replica") },
+            |rank| -> Result<MlpModel> { bail!("rank {rank} has no replica") },
             |_step, _idx| Ok(vec![]),
         )
         .unwrap_err();

@@ -30,8 +30,10 @@
 //! training" has the argument.
 //!
 //! Entry points: [`coordinator::train`] (drive any
-//! [`GradStep`](crate::coordinator::grad_step::GradStep) replica),
-//! `cargo run --bin train_dist` (host MLP/NCF models on synthetic data),
+//! [`GradStep`](crate::coordinator::grad_step::GradStep) replica —
+//! every [`crate::models`] zoo model qualifies via the blanket impl),
+//! `cargo run --bin train_dist` (host MLP/NCF/Transformer workloads on
+//! synthetic data, with `--quant` forward quantization),
 //! `cargo bench --bench perf_allreduce` (wire throughput + compression).
 
 pub mod coordinator;

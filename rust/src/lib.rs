@@ -51,8 +51,23 @@
 //! is arithmetically invisible (FP32-wire runs are bitwise identical at
 //! any worker count; `tests/integration_dist.rs`). The seam it drives,
 //! [`coordinator::grad_step::GradStep`], splits a step into compute and
-//! apply phases; [`coordinator::host_trainer`] provides pure-rust MLP
-//! and NCF replicas so the whole path runs without AOT artifacts.
+//! apply phases; every [`models`] zoo model implements it for free.
+//!
+//! ## Host model zoo
+//!
+//! [`models`] is the crate's pure-rust model zoo — MLP, NCF and a host
+//! Transformer (multi-head attention, layernorm, FFN, full
+//! finite-difference-checked backward) — behind one
+//! [`models::HostModel`] trait: named FP32 parameters, deterministic
+//! per-row forward, summed shard gradients, SGD. Training
+//! ([`dist`]), serving ([`serve`]) and the CLI workloads
+//! ([`models::zoo`]) all dispatch through the trait, so each model's
+//! forward math exists exactly once and batched serving is bitwise
+//! identical to the training-path forward. A [`models::QuantMode`] hook
+//! routes the forward through any [`formats::FormatKind`] codec (FP32
+//! master weights, quantized forward — the paper's Fig. 2 regime), so
+//! formats can be A/B'd on any host model, including over the S2FP8
+//! gradient wire.
 //!
 //! ## Serving
 //!
@@ -101,6 +116,7 @@ pub mod data;
 pub mod dist;
 pub mod formats;
 pub mod metrics;
+pub mod models;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

@@ -1,0 +1,66 @@
+//! Finite-difference gradient checking for zoo models — shared test
+//! support for the per-model unit tests and `tests/prop_models.rs`.
+//!
+//! The check drives only the public [`HostModel`] surface: nudge one
+//! parameter through [`HostModel::sgd_step`] with a one-hot "gradient"
+//! at `lr = 1` (so `sgd_step(±ε·e)` moves the parameter by `∓ε`), and
+//! compare the centered-difference slope of
+//! [`HostModel::backward`]'s f64 `loss_sum` against its analytic
+//! gradient. Run it with [`QuantMode::None`](super::QuantMode) — the
+//! quantizer is a step function, so finite differences across a staged
+//! forward measure the straight-through estimator's mismatch, not a bug.
+
+use crate::runtime::HostValue;
+use crate::tensor::Tensor;
+
+use super::HostModel;
+
+/// Check every parameter of `model` against centered differences on
+/// `batch`. Panics (with the offending slots printed) on mismatch.
+///
+/// A small failure allowance absorbs f32 noise and examples that
+/// straddle a ReLU kink; real backward bugs fail on a large fraction of
+/// indices.
+pub fn grad_check<M: HostModel>(model: &mut M, batch: &[HostValue]) {
+    let eps = 1e-3f32;
+    let slots = model.param_slots();
+    let analytic = model.backward(batch).unwrap();
+    assert_eq!(analytic.grads.len(), slots.len(), "one gradient per parameter slot");
+    let (mut bad, mut total, mut nonzero) = (0usize, 0usize, 0usize);
+    for (si, (name, shape)) in slots.iter().enumerate() {
+        let elems: usize = shape.iter().product();
+        for idx in 0..elems {
+            let nudge = |m: &mut M, delta: f32| {
+                let gs: Vec<Tensor> = slots
+                    .iter()
+                    .enumerate()
+                    .map(|(sj, (_, sh))| {
+                        let mut t = Tensor::zeros(sh.clone());
+                        if sj == si {
+                            t.data_mut()[idx] = -delta;
+                        }
+                        t
+                    })
+                    .collect();
+                m.sgd_step(&gs, 1.0).unwrap();
+            };
+            nudge(&mut *model, eps);
+            let up = model.backward(batch).unwrap().loss_sum;
+            nudge(&mut *model, -2.0 * eps);
+            let down = model.backward(batch).unwrap().loss_sum;
+            nudge(&mut *model, eps); // restore
+            let num = ((up - down) / (2.0 * eps as f64)) as f32;
+            let ana = analytic.grads[si].data()[idx];
+            total += 1;
+            if ana != 0.0 || num.abs() > 1e-3 {
+                nonzero += 1;
+            }
+            if (num - ana).abs() > 0.05 * ana.abs().max(0.2) {
+                bad += 1;
+                eprintln!("{name}[{idx}]: numeric {num} vs analytic {ana}");
+            }
+        }
+    }
+    assert!(nonzero * 4 >= total, "gradcheck degenerate: {nonzero}/{total} nonzero");
+    assert!(bad * 50 <= total, "gradcheck: {bad}/{total} mismatches");
+}

@@ -1,0 +1,300 @@
+//! Shared scalar-loop math for the host model zoo.
+//!
+//! Every primitive here computes one example (or one row/position) with a
+//! fixed arithmetic order that depends only on its own inputs — never on
+//! batch composition or thread count. That discipline is what makes the
+//! zoo's forwards bitwise identical between the serving path (batched
+//! micro-batches) and the training path (shard loops), and what makes
+//! shard gradients one fixed bit pattern no matter which worker computes
+//! them (see DESIGN.md "Host model zoo").
+//!
+//! Forward primitives are f32 end to end; gradient *accumulators* are f64
+//! slices that the per-example backwards fold into in example order, so a
+//! shard's summed gradient rounds to f32 exactly once per slot.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostValue;
+use crate::tensor::Tensor;
+use crate::util::rng::{Pcg32, Rng};
+
+/// `y = x·W + b` for one row, deterministic accumulation order (j outer,
+/// k inner). `W` is row-major `(d_in, d_out)`.
+pub fn dense_fwd(w: &Tensor, b: &[f32], x: &[f32]) -> Vec<f32> {
+    let (d_in, d_out) = (w.shape()[0], w.shape()[1]);
+    debug_assert_eq!(x.len(), d_in);
+    debug_assert_eq!(b.len(), d_out);
+    let wd = w.data();
+    let mut y = Vec::with_capacity(d_out);
+    for j in 0..d_out {
+        let mut acc = b[j];
+        for (k, &xv) in x.iter().enumerate() {
+            acc += xv * wd[k * d_out + j];
+        }
+        y.push(acc);
+    }
+    y
+}
+
+/// `y = x·W` for one row (no bias) — the attention-projection form.
+pub fn matvec(w: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (d_in, d_out) = (w.shape()[0], w.shape()[1]);
+    debug_assert_eq!(x.len(), d_in);
+    let wd = w.data();
+    let mut y = Vec::with_capacity(d_out);
+    for j in 0..d_out {
+        let mut acc = 0.0f32;
+        for (k, &xv) in x.iter().enumerate() {
+            acc += xv * wd[k * d_out + j];
+        }
+        y.push(acc);
+    }
+    y
+}
+
+/// `dx = W·delta` for one row (backprop through a dense layer).
+pub fn dense_bwd_input(w: &Tensor, delta: &[f32]) -> Vec<f32> {
+    let (d_in, d_out) = (w.shape()[0], w.shape()[1]);
+    debug_assert_eq!(delta.len(), d_out);
+    let wd = w.data();
+    let mut dx = Vec::with_capacity(d_in);
+    for k in 0..d_in {
+        let mut acc = 0.0f32;
+        for (j, &dj) in delta.iter().enumerate() {
+            acc += wd[k * d_out + j] * dj;
+        }
+        dx.push(acc);
+    }
+    dx
+}
+
+/// Accumulate one example's dense-layer gradients: `gW += h ⊗ delta`,
+/// `gb += delta` (f64 accumulators, f32 products).
+pub fn dense_accumulate(gw: &mut [f64], gb: &mut [f64], h_in: &[f32], delta: &[f32]) {
+    outer_accumulate(gw, h_in, delta);
+    for (g, &dj) in gb.iter_mut().zip(delta.iter()) {
+        *g += dj as f64;
+    }
+}
+
+/// `gW += h ⊗ delta` only — the bias-free half of [`dense_accumulate`]
+/// (attention projections carry no bias).
+pub fn outer_accumulate(gw: &mut [f64], h_in: &[f32], delta: &[f32]) {
+    let d_out = delta.len();
+    for (k, &hk) in h_in.iter().enumerate() {
+        let row = &mut gw[k * d_out..(k + 1) * d_out];
+        for (g, &dj) in row.iter_mut().zip(delta.iter()) {
+            *g += (hk * dj) as f64;
+        }
+    }
+}
+
+pub fn relu(h: &mut [f32]) {
+    for v in h {
+        *v = v.max(0.0);
+    }
+}
+
+/// Zero the entries of `delta` where the pre-activation was not positive
+/// (ReLU uses the `> 0` mask everywhere, matching the forward's `max`).
+pub fn relu_mask(delta: &mut [f32], pre: &[f32]) {
+    for (d, &a) in delta.iter_mut().zip(pre.iter()) {
+        if a <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Numerically-stable softmax in place: `xs` becomes the probabilities.
+pub fn softmax(xs: &mut [f32]) {
+    let m = xs.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    let mut z = 0.0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - m).exp();
+        z += *v;
+    }
+    for v in xs.iter_mut() {
+        *v /= z;
+    }
+}
+
+/// Softmax backward: given the probabilities `p` and the downstream
+/// gradient `dp`, return `ds` on the pre-softmax scores:
+/// `ds_j = p_j (dp_j − Σ_k p_k dp_k)`.
+pub fn softmax_bwd(p: &[f32], dp: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(p.len(), dp.len());
+    let mut dot = 0.0f32;
+    for (&pi, &di) in p.iter().zip(dp.iter()) {
+        dot += pi * di;
+    }
+    p.iter().zip(dp.iter()).map(|(&pi, &di)| pi * (di - dot)).collect()
+}
+
+/// Variance floor of the layer normalization.
+pub const LN_EPS: f32 = 1e-5;
+
+/// LayerNorm forward over one row: `y = γ·(x−μ)/√(σ²+ε) + β`.
+/// Returns `(y, x̂, 1/std)`; the latter two are exactly what the backward
+/// needs (no need to retain `x` itself).
+pub fn layernorm_fwd(gamma: &[f32], beta: &[f32], x: &[f32]) -> (Vec<f32>, Vec<f32>, f32) {
+    let d = x.len();
+    debug_assert_eq!(gamma.len(), d);
+    debug_assert_eq!(beta.len(), d);
+    let mean = x.iter().sum::<f32>() / d as f32;
+    let var = x.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+    let inv_std = 1.0 / (var + LN_EPS).sqrt();
+    let mut xhat = Vec::with_capacity(d);
+    let mut y = Vec::with_capacity(d);
+    for ((&xv, &gv), &bv) in x.iter().zip(gamma.iter()).zip(beta.iter()) {
+        let h = (xv - mean) * inv_std;
+        xhat.push(h);
+        y.push(gv * h + bv);
+    }
+    (y, xhat, inv_std)
+}
+
+/// LayerNorm backward over one row. Accumulates `dγ += dy·x̂` and
+/// `dβ += dy` into the f64 slot accumulators and returns `dx`:
+/// `dx = (1/std)·(dx̂ − mean(dx̂) − x̂·mean(dx̂⊙x̂))` with `dx̂ = dy·γ`.
+pub fn layernorm_bwd(
+    gamma: &[f32],
+    xhat: &[f32],
+    inv_std: f32,
+    dy: &[f32],
+    dgamma: &mut [f64],
+    dbeta: &mut [f64],
+) -> Vec<f32> {
+    let d = xhat.len();
+    debug_assert_eq!(dy.len(), d);
+    let mut dxhat = Vec::with_capacity(d);
+    let mut sum_dxhat = 0.0f32;
+    let mut sum_dxhat_xhat = 0.0f32;
+    for (k, (&dyk, &xk)) in dy.iter().zip(xhat.iter()).enumerate() {
+        dgamma[k] += (dyk * xk) as f64;
+        dbeta[k] += dyk as f64;
+        let v = dyk * gamma[k];
+        dxhat.push(v);
+        sum_dxhat += v;
+        sum_dxhat_xhat += v * xk;
+    }
+    let inv_d = 1.0 / d as f32;
+    (0..d)
+        .map(|k| inv_std * (dxhat[k] - inv_d * sum_dxhat - xhat[k] * inv_d * sum_dxhat_xhat))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// parameter-slot plumbing shared by every model's `from_slots`
+// ---------------------------------------------------------------------------
+
+/// Find a named slot in checkpoint-style `(name, value)` pairs.
+pub fn find_slot<'a>(slots: &'a [(String, HostValue)], name: &str) -> Option<&'a HostValue> {
+    slots.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+}
+
+/// Take a named f32 tensor out of checkpoint-style slots (cloned).
+pub fn take_f32(slots: &[(String, HostValue)], name: &str) -> Result<Tensor> {
+    let v = find_slot(slots, name).with_context(|| format!("missing slot '{name}'"))?;
+    Ok(v.as_f32().with_context(|| format!("slot '{name}' is not f32"))?.clone())
+}
+
+/// Take a named rank-2 f32 tensor (embedding tables, weight matrices).
+pub fn take_matrix(slots: &[(String, HostValue)], name: &str) -> Result<Tensor> {
+    let t = take_f32(slots, name)?;
+    if t.shape().len() != 2 {
+        bail!("{name}: expected a rank-2 tensor, got {:?}", t.shape());
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// synthetic initialization shared by the `synth_*_slots` generators
+// ---------------------------------------------------------------------------
+
+/// Glorot-uniform `(d_in, d_out)` weight matrix.
+pub fn glorot(rng: &mut Pcg32, d_in: usize, d_out: usize) -> HostValue {
+    let lim = (6.0 / (d_in + d_out) as f32).sqrt();
+    HostValue::f32(
+        vec![d_in, d_out],
+        (0..d_in * d_out).map(|_| rng.next_range_f32(-lim, lim)).collect(),
+    )
+}
+
+/// Normal `(vocab, dim)` embedding table with the given std.
+pub fn embedding(rng: &mut Pcg32, vocab: usize, dim: usize, std: f32) -> HostValue {
+    HostValue::f32(vec![vocab, dim], (0..vocab * dim).map(|_| std * rng.next_normal()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_is_a_distribution_and_stable() {
+        let mut xs = vec![1.0f32, 2.0, 3.0];
+        softmax(&mut xs);
+        let z: f32 = xs.iter().sum();
+        assert!((z - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+        // huge logits must not overflow
+        let mut big = vec![1000.0f32, 1001.0];
+        softmax(&mut big);
+        assert!(big.iter().all(|v| v.is_finite()));
+        assert!((big[0] + big[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_bwd_sums_to_zero() {
+        // softmax is shift-invariant, so the score gradient always sums
+        // to (numerically) zero
+        let mut p = vec![0.5f32, 1.0, -0.25, 0.0];
+        softmax(&mut p);
+        let dp = vec![0.3f32, -1.0, 0.2, 0.9];
+        let ds = softmax_bwd(&p, &dp);
+        let s: f32 = ds.iter().sum();
+        assert!(s.abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn layernorm_normalizes_and_applies_affine() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let gamma = vec![1.0f32; 4];
+        let beta = vec![0.0f32; 4];
+        let (y, xhat, inv_std) = layernorm_fwd(&gamma, &beta, &x);
+        assert_eq!(y, xhat);
+        let mean: f32 = y.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        let var: f32 = y.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-3, "{var}");
+        assert!(inv_std > 0.0);
+        // affine scale/shift applies per-dim
+        let gamma = vec![2.0f32, 2.0, 2.0, 2.0];
+        let beta = vec![1.0f32; 4];
+        let (y2, _, _) = layernorm_fwd(&gamma, &beta, &x);
+        for (a, b) in y2.iter().zip(xhat.iter()) {
+            assert!((a - (2.0 * b + 1.0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense_fwd_with_zero_bias() {
+        let w = Tensor::new(vec![3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = vec![0.5f32, -1.0, 2.0];
+        let a = matvec(&w, &x);
+        let b = dense_fwd(&w, &[0.0, 0.0], &x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn outer_accumulate_is_the_weight_half_of_dense_accumulate() {
+        let h = vec![1.0f32, -2.0];
+        let delta = vec![0.5f32, 0.25, -1.0];
+        let mut gw_a = vec![0.0f64; 6];
+        let mut gb = vec![0.0f64; 3];
+        dense_accumulate(&mut gw_a, &mut gb, &h, &delta);
+        let mut gw_b = vec![0.0f64; 6];
+        outer_accumulate(&mut gw_b, &h, &delta);
+        assert_eq!(gw_a, gw_b);
+        assert_eq!(gb, vec![0.5f64, 0.25, -1.0]);
+    }
+}

@@ -1,0 +1,396 @@
+//! The quickstart MLP classifier as a zoo [`HostModel`]: `fc0..fcN`
+//! Dense→ReLU stack, softmax cross-entropy on the final logits.
+//!
+//! Training batch layout: `[x (B, d_in) f32, y (B) i32]`. Serving
+//! features: `[x (d_in) f32]`, output = the logits row.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::grad_step::ShardGrad;
+use crate::runtime::{Dtype, HostValue};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+use super::math::{self, dense_accumulate, dense_bwd_input, dense_fwd, relu, relu_mask};
+use super::{FeatureSpec, HostModel, ModelKind, ParamSet, QuantMode};
+
+/// Synthetic MLP checkpoint slots (`params/fc{i}/{w,b}`): glorot weights,
+/// zero biases, deterministic in the seed.
+pub fn synth_mlp_slots(dims: &[usize], seed: u64) -> Vec<(String, HostValue)> {
+    assert!(dims.len() >= 2, "need at least input and output dims");
+    let mut rng = Pcg32::new(seed, 0x317);
+    let mut slots = Vec::new();
+    for i in 0..dims.len() - 1 {
+        slots.push((format!("params/fc{i}/w"), math::glorot(&mut rng, dims[i], dims[i + 1])));
+        slots.push((
+            format!("params/fc{i}/b"),
+            HostValue::f32(vec![dims[i + 1]], vec![0.0; dims[i + 1]]),
+        ));
+    }
+    slots
+}
+
+/// Trainable + servable MLP (slot order: `fc{i}/w, fc{i}/b` per layer).
+pub struct MlpModel {
+    p: ParamSet,
+    n_layers: usize,
+}
+
+impl MlpModel {
+    /// Deterministic synthetic initialization ([`synth_mlp_slots`] with
+    /// the same seed gives the same bits).
+    pub fn new(dims: &[usize], seed: u64) -> Self {
+        Self::from_slots(&synth_mlp_slots(dims, seed)).expect("synthetic slots are well-formed")
+    }
+
+    /// Rebuild from checkpoint-style slots (`params/fc{i}/{w,b}`).
+    pub fn from_slots(slots: &[(String, HostValue)]) -> Result<Self> {
+        let mut named: Vec<(String, Tensor)> = Vec::new();
+        let mut prev_out: Option<usize> = None;
+        let mut i = 0usize;
+        while math::find_slot(slots, &format!("params/fc{i}/w")).is_some() {
+            let w = math::take_matrix(slots, &format!("params/fc{i}/w"))?;
+            // unlike the old forward-only serve model, the trainable zoo
+            // requires a bias per dense layer (it is a gradient slot)
+            let b = math::take_f32(slots, &format!("params/fc{i}/b")).with_context(|| {
+                format!("fc{i} has weights but no bias — zoo models require both")
+            })?;
+            if b.shape() != [w.shape()[1]].as_slice() {
+                bail!("params/fc{i}/b shape {:?} vs d_out {}", b.shape(), w.shape()[1]);
+            }
+            if let Some(prev) = prev_out {
+                if prev != w.shape()[0] {
+                    bail!("fc{i} input dim {} does not chain from fc{}", w.shape()[0], i - 1);
+                }
+            }
+            prev_out = Some(w.shape()[1]);
+            named.push((format!("params/fc{i}/w"), w));
+            named.push((format!("params/fc{i}/b"), b));
+            i += 1;
+        }
+        if i == 0 {
+            bail!("no params/fc0/w slot — not an MLP parameter set");
+        }
+        Ok(MlpModel { p: ParamSet::new(named), n_layers: i })
+    }
+
+    fn w(&self, l: usize) -> &Tensor {
+        self.p.eff(2 * l)
+    }
+
+    fn b(&self, l: usize) -> &Tensor {
+        self.p.eff(2 * l + 1)
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.p.master(0).shape()[0]
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.p.master(2 * (self.n_layers - 1)).shape()[1]
+    }
+
+    /// One example's logits (the single forward implementation both the
+    /// serving and training paths run).
+    pub fn forward_row(&self, x: &[f32]) -> Vec<f32> {
+        let mut h = dense_fwd(self.w(0), self.b(0).data(), x);
+        for l in 1..self.n_layers {
+            relu(&mut h);
+            h = dense_fwd(self.w(l), self.b(l).data(), &h);
+        }
+        h
+    }
+}
+
+impl HostModel for MlpModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Mlp
+    }
+
+    fn quant_mode(&self) -> QuantMode {
+        self.p.quant_mode()
+    }
+
+    fn set_quant_mode(&mut self, mode: QuantMode) {
+        self.p.set_quant_mode(mode)
+    }
+
+    fn param_slots(&self) -> Vec<(String, Vec<usize>)> {
+        self.p.slots()
+    }
+
+    fn params(&self) -> Vec<(String, Tensor)> {
+        self.p.snapshot()
+    }
+
+    fn feature_specs(&self) -> Vec<FeatureSpec> {
+        vec![FeatureSpec { name: "x".into(), shape: vec![self.d_in()], dtype: Dtype::F32 }]
+    }
+
+    fn validate_example(&self, features: &[HostValue]) -> Result<()> {
+        if features.len() != 1 {
+            bail!("expected 1 feature tensor, got {}", features.len());
+        }
+        Ok(())
+    }
+
+    fn score_one(&self, features: &[HostValue]) -> Result<Vec<f32>> {
+        self.validate_example(features)?;
+        let x = features[0].as_f32()?;
+        if x.len() != self.d_in() {
+            bail!("mlp input has {} features, expected {}", x.len(), self.d_in());
+        }
+        Ok(self.forward_row(x.data()))
+    }
+
+    fn run_rows(&self, inputs: &[HostValue], n: usize) -> Result<Vec<Vec<f32>>> {
+        let x = inputs[0].as_f32()?;
+        if x.shape().len() != 2 || x.shape()[0] < n {
+            bail!("mlp: bad stacked input shape {:?} for n={n}", x.shape());
+        }
+        Ok((0..n).map(|i| self.forward_row(x.row(i))).collect())
+    }
+
+    fn out_width(&self) -> usize {
+        self.n_classes()
+    }
+
+    fn backward(&self, batch: &[HostValue]) -> Result<ShardGrad> {
+        if batch.len() != 2 {
+            bail!("mlp batch is [x, y], got {} tensors", batch.len());
+        }
+        let x = batch[0].as_f32().context("mlp batch/x")?;
+        let y = batch[1].as_i32().context("mlp batch/y")?;
+        let nl = self.n_layers;
+        let n_classes = self.n_classes();
+        if x.shape().len() != 2 || x.shape()[1] != self.d_in() {
+            bail!("mlp batch/x shape {:?}, expected (B, {})", x.shape(), self.d_in());
+        }
+        let n = x.shape()[0];
+        if y.len() != n {
+            bail!("mlp batch/y has {} labels for {} rows", y.len(), n);
+        }
+
+        let slots = self.param_slots();
+        let mut acc: Vec<Vec<f64>> = slots
+            .iter()
+            .map(|(_, shape)| vec![0.0f64; shape.iter().product()])
+            .collect();
+        let mut loss_sum = 0.0f64;
+
+        for i in 0..n {
+            let label = y[i];
+            if label < 0 || label as usize >= n_classes {
+                bail!("row {i}: label {label} out of range 0..{n_classes}");
+            }
+            let label = label as usize;
+
+            // forward, caching each layer's input and pre-activation
+            let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
+            let mut pre: Vec<Vec<f32>> = Vec::with_capacity(nl);
+            let mut h: Vec<f32> = x.row(i).to_vec();
+            for l in 0..nl {
+                let a = dense_fwd(self.w(l), self.b(l).data(), &h);
+                acts.push(std::mem::take(&mut h));
+                if l + 1 < nl {
+                    h = a.clone();
+                    relu(&mut h);
+                }
+                pre.push(a);
+            }
+
+            // softmax cross-entropy (stable) and its logit gradient
+            let logits = &pre[nl - 1];
+            let m = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let exps: Vec<f32> = logits.iter().map(|&v| (v - m).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            loss_sum += (z.ln() - (logits[label] - m)) as f64;
+            let mut delta: Vec<f32> = exps.iter().map(|&e| e / z).collect();
+            delta[label] -= 1.0;
+
+            // backward
+            for l in (0..nl).rev() {
+                {
+                    let (gw, rest) = acc[2 * l..].split_first_mut().unwrap();
+                    dense_accumulate(gw, &mut rest[0], &acts[l], &delta);
+                }
+                if l > 0 {
+                    let mut dx = dense_bwd_input(self.w(l), &delta);
+                    relu_mask(&mut dx, &pre[l - 1]);
+                    delta = dx;
+                }
+            }
+        }
+
+        let grads = acc
+            .into_iter()
+            .zip(slots)
+            .map(|(a, (_, shape))| Tensor::new(shape, a.into_iter().map(|v| v as f32).collect()))
+            .collect();
+        Ok(ShardGrad { loss_sum, n_examples: n, grads })
+    }
+
+    fn sgd_step(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()> {
+        self.p.sgd_step(mean_grads, lr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_vector;
+    use crate::models::gradcheck::grad_check;
+    use crate::util::rng::Pcg32;
+
+    fn mlp_batch(rng: &mut Pcg32, b: usize, d: usize, classes: usize) -> Vec<HostValue> {
+        synth_vector::batch(rng, b, d, classes)
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut t = MlpModel::new(&[6, 5, 3], 11);
+        let mut rng = Pcg32::new(5, 5);
+        let batch = mlp_batch(&mut rng, 4, 6, 3);
+        grad_check(&mut t, &batch);
+    }
+
+    #[test]
+    fn backward_is_bitwise_deterministic_and_pure() {
+        let t = MlpModel::new(&[8, 6, 4], 2);
+        let mut rng = Pcg32::new(1, 1);
+        let batch = mlp_batch(&mut rng, 5, 8, 4);
+        let p0 = t.params();
+        let a = t.backward(&batch).unwrap();
+        let b = t.backward(&batch).unwrap();
+        assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits());
+        for (ga, gb) in a.grads.iter().zip(b.grads.iter()) {
+            for (x, y) in ga.data().iter().zip(gb.data().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // backward must not have touched the parameters
+        for ((_, x), (_, y)) in p0.iter().zip(t.params().iter()) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn shard_sums_concatenate_to_the_full_batch() {
+        // Gradients are per-example sums, so two half-shards must add up
+        // to the full batch (to f64-accumulation noise).
+        let t = MlpModel::new(&[6, 4, 3], 9);
+        let mut rng = Pcg32::new(4, 4);
+        let full = mlp_batch(&mut rng, 6, 6, 3);
+        let x = full[0].as_f32().unwrap();
+        let y = full[1].as_i32().unwrap();
+        let half = |lo: usize, hi: usize| -> Vec<HostValue> {
+            let d = x.shape()[1];
+            vec![
+                HostValue::f32(vec![hi - lo, d], x.data()[lo * d..hi * d].to_vec()),
+                HostValue::i32(vec![hi - lo], y[lo..hi].to_vec()),
+            ]
+        };
+        let whole = t.backward(&full).unwrap();
+        let a = t.backward(&half(0, 3)).unwrap();
+        let b = t.backward(&half(3, 6)).unwrap();
+        assert_eq!(whole.n_examples, a.n_examples + b.n_examples);
+        assert!((whole.loss_sum - (a.loss_sum + b.loss_sum)).abs() < 1e-6);
+        for (w, (ga, gb)) in whole.grads.iter().zip(a.grads.iter().zip(b.grads.iter())) {
+            for ((&wv, &av), &bv) in w.data().iter().zip(ga.data()).zip(gb.data()) {
+                assert!(
+                    (wv - (av + bv)).abs() <= 1e-5 * wv.abs().max(1.0),
+                    "{wv} vs {av}+{bv}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_replica_training_learns() {
+        let mut t = MlpModel::new(&[20, 16, 10], 1);
+        let mut rng = Pcg32::new(7, 0);
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for step in 0..60 {
+            let batch = mlp_batch(&mut rng, 16, 20, 10);
+            let sg = t.backward(&batch).unwrap();
+            let inv = 1.0 / sg.n_examples as f64;
+            let mean: Vec<Tensor> =
+                sg.grads.iter().map(|g| g.map(|v| (v as f64 * inv) as f32)).collect();
+            t.sgd_step(&mean, 0.1).unwrap();
+            let l = sg.loss_sum * inv;
+            if step == 0 {
+                first = l;
+            }
+            last = l;
+        }
+        assert!(last < 0.6 * first, "mlp loss should fall: {first:.3} → {last:.3}");
+    }
+
+    #[test]
+    fn malformed_batches_are_rejected() {
+        let t = MlpModel::new(&[4, 3], 1);
+        // wrong arity
+        assert!(t.backward(&[HostValue::f32(vec![1, 4], vec![0.0; 4])]).is_err());
+        // label out of range
+        let bad = vec![
+            HostValue::f32(vec![1, 4], vec![0.0; 4]),
+            HostValue::i32(vec![1], vec![7]),
+        ];
+        assert!(t.backward(&bad).is_err());
+        // wrong feature width
+        let bad = vec![
+            HostValue::f32(vec![1, 5], vec![0.0; 5]),
+            HostValue::i32(vec![1], vec![0]),
+        ];
+        assert!(t.backward(&bad).is_err());
+    }
+
+    #[test]
+    fn params_roundtrip_through_slots() {
+        let t = MlpModel::new(&[5, 4, 2], 6);
+        let slots: Vec<(String, HostValue)> =
+            t.params().into_iter().map(|(n, p)| (n, HostValue::F32(p))).collect();
+        let t2 = MlpModel::from_slots(&slots).unwrap();
+        for ((na, a), (nb, b)) in t.params().iter().zip(t2.params().iter()) {
+            assert_eq!(na, nb);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn batched_rows_match_single_scores_bitwise() {
+        let m = MlpModel::new(&[12, 8, 4], 2);
+        assert_eq!(m.out_width(), 4);
+        let mut rng = Pcg32::new(9, 9);
+        let x1 = Tensor::randn(vec![12], &mut rng).into_data();
+        let x2 = Tensor::randn(vec![12], &mut rng).into_data();
+        let mut stacked = x1.clone();
+        stacked.extend_from_slice(&x2);
+        stacked.extend_from_slice(&[0.0; 12]); // padding row
+        let rows = m.run_rows(&[HostValue::f32(vec![3, 12], stacked)], 2).unwrap();
+        let s1 = m.score_one(&[HostValue::f32(vec![12], x1)]).unwrap();
+        let s2 = m.score_one(&[HostValue::f32(vec![12], x2)]).unwrap();
+        assert_eq!(rows[0], s1);
+        assert_eq!(rows[1], s2);
+    }
+
+    #[test]
+    fn quantized_forward_changes_bits_but_stays_close() {
+        let mut rng = Pcg32::new(12, 0);
+        let x = Tensor::randn(vec![16], &mut rng).into_data();
+        let f = vec![HostValue::f32(vec![16], x)];
+        let mut m = MlpModel::new(&[16, 12, 4], 5);
+        let fp32 = m.score_one(&f).unwrap();
+        m.set_quant_mode(QuantMode::parse("s2fp8").unwrap());
+        let q = m.score_one(&f).unwrap();
+        assert_ne!(fp32, q, "s2fp8 staging must actually change the forward");
+        for (a, b) in fp32.iter().zip(q.iter()) {
+            assert!((a - b).abs() < 0.2 * a.abs().max(1.0), "{a} vs {b}");
+        }
+        // masters stay FP32: switching back restores the exact forward
+        m.set_quant_mode(QuantMode::None);
+        let back = m.score_one(&f).unwrap();
+        assert_eq!(fp32, back);
+    }
+}

@@ -1,0 +1,443 @@
+//! The **host model zoo**: one Forward/Backward currency for training,
+//! distributed training and serving.
+//!
+//! Every pure-rust model in the crate lives here behind one trait,
+//! [`HostModel`]: a named-parameter store of FP32 [`Tensor`]s with a
+//! deterministic per-row forward ([`HostModel::run_rows`] /
+//! [`HostModel::score_one`]), a full backward producing summed shard
+//! gradients in parameter order ([`HostModel::backward`]), and plain SGD
+//! ([`HostModel::sgd_step`]). The three paper workload families are all
+//! implemented:
+//!
+//! * [`mlp`] — the quickstart Dense→ReLU classifier;
+//! * [`ncf`] — the NeuMF recommender (paper §4.4);
+//! * [`transformer`] — a host Transformer (embedding → multi-head
+//!   attention → layernorm → FFN, full backward) for the sequence-
+//!   transduction task (`data::synth_translation` + `metrics::bleu`).
+//!
+//! Three consumers dispatch through the trait instead of per-model code:
+//! the single/multi-worker trainer ([`crate::dist`], via the blanket
+//! [`GradStep`](crate::coordinator::grad_step::GradStep) impl), the
+//! serving engine ([`crate::serve`], whose `HostBackend` is a thin
+//! forward-only adapter over the same structs), and the CLI workloads
+//! ([`zoo`]). Because serving and training share one forward
+//! implementation, served predictions are bitwise identical to the
+//! training-path forward on the same weights (pinned by
+//! `tests/integration_serve.rs`).
+//!
+//! ## Quantization-aware steps ([`QuantMode`])
+//!
+//! [`HostModel::set_quant_mode`] routes the *forward* (and the backward's
+//! use of weights) through the packed [`crate::formats::Codec`] path:
+//! parameters stay FP32 masters, and every step reads them through a
+//! staged round-trip into the chosen [`FormatKind`] — the paper's Fig. 2
+//! regime (quantized forward, full-precision gradients and updates,
+//! straight-through estimator across the quantizer). Any format can be
+//! A/B'd against FP32 on any zoo model, including over the S2FP8
+//! gradient wire (`bin/train_dist --quant s2fp8 --wire s2fp8`). Gradcheck
+//! and the bitwise dist-equivalence guarantees hold unchanged because
+//! staging is a pure deterministic function of the master weights.
+
+pub mod gradcheck;
+pub mod math;
+pub mod mlp;
+pub mod ncf;
+pub mod transformer;
+pub mod zoo;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::grad_step::ShardGrad;
+use crate::formats::FormatKind;
+use crate::runtime::{Dtype, HostValue};
+use crate::serve::registry::WeightStore;
+use crate::tensor::Tensor;
+
+pub use mlp::{synth_mlp_slots, MlpModel};
+pub use ncf::{synth_ncf_slots, NcfDims, NcfModel};
+pub use transformer::{synth_transformer_slots, TransformerDims, TransformerModel};
+
+/// Which host model family to build from a checkpoint or slot set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Mlp,
+    Ncf,
+    Transformer,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "mlp" => Ok(ModelKind::Mlp),
+            "ncf" => Ok(ModelKind::Ncf),
+            "transformer" => Ok(ModelKind::Transformer),
+            other => bail!("unknown model kind '{other}' (expected mlp|ncf|transformer)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Ncf => "ncf",
+            ModelKind::Transformer => "transformer",
+        }
+    }
+}
+
+/// One per-example input slot of a served/driven model (no batch dim).
+/// Shared currency between the zoo's [`HostModel::feature_specs`] and the
+/// serving engine's submit-time validation (`serve::backend`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// How a model's step reads its parameters (paper Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Full-precision forward — the FP32 baseline.
+    None,
+    /// FP32 master weights; the forward (and the backward's use of the
+    /// weights) reads a staged round-trip of every parameter through the
+    /// format's codec, re-staged after each SGD step. Gradients and
+    /// updates stay FP32 (straight-through across the quantizer).
+    Weights(FormatKind),
+}
+
+impl QuantMode {
+    /// Parse a CLI/config spelling: `none`/`fp32` → [`QuantMode::None`],
+    /// any [`FormatKind`] name → [`QuantMode::Weights`].
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Some(QuantMode::None),
+            other => match FormatKind::parse(other) {
+                Some(FormatKind::Fp32) => Some(QuantMode::None),
+                Some(kind) => Some(QuantMode::Weights(kind)),
+                None => None,
+            },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantMode::None => "none",
+            QuantMode::Weights(kind) => kind.name(),
+        }
+    }
+}
+
+/// The zoo's named FP32 parameter store: canonical slot order (the wire
+/// layout of the distributed gradient exchange), plus the [`QuantMode`]
+/// staging machinery every model shares.
+pub struct ParamSet {
+    names: Vec<String>,
+    master: Vec<Tensor>,
+    quant: QuantMode,
+    /// Round-trip of `master` through the quant format; empty when
+    /// `quant` is [`QuantMode::None`]. Rebuilt after every SGD step.
+    staged: Vec<Tensor>,
+}
+
+impl ParamSet {
+    pub fn new(slots: Vec<(String, Tensor)>) -> Self {
+        let (names, master) = slots.into_iter().unzip();
+        ParamSet { names, master, quant: QuantMode::None, staged: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.master.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.master.is_empty()
+    }
+
+    pub fn name(&self, i: usize) -> &str {
+        &self.names[i]
+    }
+
+    /// The FP32 master tensor of slot `i` (shape queries, SGD target).
+    pub fn master(&self, i: usize) -> &Tensor {
+        &self.master[i]
+    }
+
+    /// The *effective* tensor of slot `i` that forward/backward math
+    /// reads: the staged quantized copy when a [`QuantMode`] is active,
+    /// the master otherwise.
+    pub fn eff(&self, i: usize) -> &Tensor {
+        if self.staged.is_empty() {
+            &self.master[i]
+        } else {
+            &self.staged[i]
+        }
+    }
+
+    /// `(name, shape)` of every slot in canonical order.
+    pub fn slots(&self) -> Vec<(String, Vec<usize>)> {
+        self.names
+            .iter()
+            .zip(self.master.iter())
+            .map(|(n, t)| (n.clone(), t.shape().to_vec()))
+            .collect()
+    }
+
+    /// Clone of the master parameters as `(name, tensor)` pairs.
+    pub fn snapshot(&self) -> Vec<(String, Tensor)> {
+        self.names.iter().cloned().zip(self.master.iter().cloned()).collect()
+    }
+
+    pub fn quant_mode(&self) -> QuantMode {
+        self.quant
+    }
+
+    pub fn set_quant_mode(&mut self, mode: QuantMode) {
+        self.quant = mode;
+        self.restage();
+    }
+
+    fn restage(&mut self) {
+        match self.quant {
+            QuantMode::None => self.staged.clear(),
+            QuantMode::Weights(kind) => {
+                self.staged = self
+                    .master
+                    .iter()
+                    .map(|t| Tensor::new(t.shape().to_vec(), kind.truncate_tensor(t.data())))
+                    .collect();
+            }
+        }
+    }
+
+    /// `p -= lr·g` on the FP32 masters (shape-validated), then re-stage
+    /// the quantized copies if a [`QuantMode`] is active.
+    pub fn sgd_step(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()> {
+        if mean_grads.len() != self.master.len() {
+            bail!(
+                "{} mean gradients for {} parameter slots",
+                mean_grads.len(),
+                self.master.len()
+            );
+        }
+        for (i, g) in mean_grads.iter().enumerate() {
+            if g.shape() != self.master[i].shape() {
+                bail!(
+                    "gradient for '{}' has shape {:?}, parameter is {:?}",
+                    self.names[i],
+                    g.shape(),
+                    self.master[i].shape()
+                );
+            }
+            for (p, &gv) in self.master[i].data_mut().iter_mut().zip(g.data().iter()) {
+                *p -= lr * gv;
+            }
+        }
+        if self.quant != QuantMode::None {
+            self.restage();
+        }
+        Ok(())
+    }
+}
+
+/// A host model: named FP32 parameters, deterministic per-row forward,
+/// full backward (summed shard gradients in parameter order), SGD.
+///
+/// One implementation serves three masters: `serve::HostBackend` runs
+/// [`HostModel::run_rows`] on micro-batches, the distributed trainer
+/// drives [`HostModel::backward`]/[`HostModel::sgd_step`] through the
+/// blanket [`GradStep`](crate::coordinator::grad_step::GradStep) impl,
+/// and checkpointing round-trips [`HostModel::params`].
+///
+/// Determinism contract (inherited by everything downstream): the
+/// per-example math depends only on `(effective parameters, example)` —
+/// batch composition, worker count and thread count are invisible, so
+/// batched serving is bitwise equal to unbatched scoring and shard
+/// gradients are bitwise reproducible on any worker.
+pub trait HostModel: Send + Sync {
+    fn kind(&self) -> ModelKind;
+
+    fn quant_mode(&self) -> QuantMode;
+
+    /// Switch the forward-quantization regime (see [`QuantMode`]).
+    fn set_quant_mode(&mut self, mode: QuantMode);
+
+    /// `(name, shape)` of every parameter slot, canonical order — the
+    /// wire layout of the distributed gradient exchange.
+    fn param_slots(&self) -> Vec<(String, Vec<usize>)>;
+
+    /// Snapshot of the FP32 master parameters (checkpointing,
+    /// replica-sync checks).
+    fn params(&self) -> Vec<(String, Tensor)>;
+
+    /// Per-example input slots (no batch dim), in submission order.
+    fn feature_specs(&self) -> Vec<FeatureSpec>;
+
+    /// Semantic validation beyond shapes/dtypes (arity, embedding-id /
+    /// token ranges).
+    fn validate_example(&self, features: &[HostValue]) -> Result<()>;
+
+    /// Unbatched single-example forward (the bitwise reference path).
+    fn score_one(&self, features: &[HostValue]) -> Result<Vec<f32>>;
+
+    /// Execute rows `0..n` of stacked (possibly padded) inputs. Row `i`
+    /// is bit-for-bit [`HostModel::score_one`] on example `i`.
+    fn run_rows(&self, inputs: &[HostValue], n: usize) -> Result<Vec<Vec<f32>>>;
+
+    /// Output elements per example.
+    fn out_width(&self) -> usize;
+
+    /// Forward + backward over a training batch: Σ per-example loss and
+    /// **summed** gradients in [`HostModel::param_slots`] order. Pure in
+    /// the parameters (must not mutate them).
+    fn backward(&self, batch: &[HostValue]) -> Result<ShardGrad>;
+
+    /// Apply fully-reduced **mean** gradients with plain SGD on the FP32
+    /// masters.
+    fn sgd_step(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()>;
+}
+
+impl HostModel for Box<dyn HostModel> {
+    fn kind(&self) -> ModelKind {
+        (**self).kind()
+    }
+
+    fn quant_mode(&self) -> QuantMode {
+        (**self).quant_mode()
+    }
+
+    fn set_quant_mode(&mut self, mode: QuantMode) {
+        (**self).set_quant_mode(mode)
+    }
+
+    fn param_slots(&self) -> Vec<(String, Vec<usize>)> {
+        (**self).param_slots()
+    }
+
+    fn params(&self) -> Vec<(String, Tensor)> {
+        (**self).params()
+    }
+
+    fn feature_specs(&self) -> Vec<FeatureSpec> {
+        (**self).feature_specs()
+    }
+
+    fn validate_example(&self, features: &[HostValue]) -> Result<()> {
+        (**self).validate_example(features)
+    }
+
+    fn score_one(&self, features: &[HostValue]) -> Result<Vec<f32>> {
+        (**self).score_one(features)
+    }
+
+    fn run_rows(&self, inputs: &[HostValue], n: usize) -> Result<Vec<Vec<f32>>> {
+        (**self).run_rows(inputs, n)
+    }
+
+    fn out_width(&self) -> usize {
+        (**self).out_width()
+    }
+
+    fn backward(&self, batch: &[HostValue]) -> Result<ShardGrad> {
+        (**self).backward(batch)
+    }
+
+    fn sgd_step(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()> {
+        (**self).sgd_step(mean_grads, lr)
+    }
+}
+
+/// Build a zoo model from checkpoint-style `(name, value)` slots.
+pub fn from_slots(kind: ModelKind, slots: &[(String, HostValue)]) -> Result<Box<dyn HostModel>> {
+    Ok(match kind {
+        ModelKind::Mlp => Box::new(MlpModel::from_slots(slots)?),
+        ModelKind::Ncf => Box::new(NcfModel::from_slots(slots)?),
+        ModelKind::Transformer => Box::new(TransformerModel::from_slots(slots)?),
+    })
+}
+
+/// Build a zoo model from a serving [`WeightStore`]: every entry is
+/// materialized (owned decode, the store's shared cache stays cold — the
+/// packed bytes remain the only other resident copy) and handed to the
+/// model constructor.
+pub fn from_store(kind: ModelKind, store: &WeightStore) -> Result<Box<dyn HostModel>> {
+    let mut slots = Vec::with_capacity(store.len());
+    for name in store.names() {
+        slots.push((name.to_string(), store.materialize(name)?));
+    }
+    from_slots(kind, &slots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn small_set() -> ParamSet {
+        let mut rng = Pcg32::new(3, 3);
+        ParamSet::new(vec![
+            ("params/a".to_string(), Tensor::randn(vec![4, 3], &mut rng).map(|v| v * 0.2)),
+            ("params/b".to_string(), Tensor::randn(vec![3], &mut rng).map(|v| v * 0.2)),
+        ])
+    }
+
+    #[test]
+    fn quant_mode_parses_cli_spellings() {
+        assert_eq!(QuantMode::parse("none"), Some(QuantMode::None));
+        assert_eq!(QuantMode::parse("fp32"), Some(QuantMode::None));
+        assert_eq!(QuantMode::parse("s2fp8"), Some(QuantMode::Weights(FormatKind::S2fp8)));
+        assert_eq!(QuantMode::parse("fp8"), Some(QuantMode::Weights(FormatKind::Fp8)));
+        assert_eq!(
+            QuantMode::parse("fp8-e4m3"),
+            Some(QuantMode::Weights(FormatKind::Fp8E4m3))
+        );
+        assert_eq!(QuantMode::parse("garbage"), None);
+        assert_eq!(QuantMode::None.name(), "none");
+        assert_eq!(QuantMode::Weights(FormatKind::S2fp8).name(), "s2fp8");
+    }
+
+    #[test]
+    fn model_kind_parses() {
+        assert!(matches!(ModelKind::parse("transformer"), Ok(ModelKind::Transformer)));
+        assert!(ModelKind::parse("resnet").is_err());
+        for k in [ModelKind::Mlp, ModelKind::Ncf, ModelKind::Transformer] {
+            assert_eq!(ModelKind::parse(k.name()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn staging_routes_eff_through_the_codec_and_sgd_updates_masters() {
+        let mut p = small_set();
+        // FP32 baseline: eff is the master itself
+        assert_eq!(p.eff(0), p.master(0));
+        p.set_quant_mode(QuantMode::Weights(FormatKind::S2fp8));
+        // staged copy differs from the master (quantization is active)
+        // but stays within the format's round-trip error
+        let (m, e) = (p.master(0).clone(), p.eff(0).clone());
+        assert_ne!(m, e);
+        for (a, b) in m.data().iter().zip(e.data().iter()) {
+            if *a != 0.0 {
+                assert!((a - b).abs() / a.abs() < 0.15, "{a} vs {b}");
+            }
+        }
+        // SGD updates the FP32 master exactly, then re-stages
+        let g = vec![Tensor::filled(vec![4, 3], 1.0), Tensor::filled(vec![3], 1.0)];
+        let before = p.master(0).data()[0];
+        p.sgd_step(&g, 0.5).unwrap();
+        assert_eq!(p.master(0).data()[0], before - 0.5);
+        let restaged = p.eff(0).clone();
+        assert_ne!(restaged, e, "staged copy must follow the master");
+        // back to FP32: eff is the master again
+        p.set_quant_mode(QuantMode::None);
+        assert_eq!(p.eff(0), p.master(0));
+    }
+
+    #[test]
+    fn sgd_step_validates_arity_and_shapes() {
+        let mut p = small_set();
+        assert!(p.sgd_step(&[Tensor::zeros(vec![4, 3])], 0.1).is_err());
+        let bad = vec![Tensor::zeros(vec![4, 3]), Tensor::zeros(vec![4])];
+        let err = p.sgd_step(&bad, 0.1).unwrap_err().to_string();
+        assert!(err.contains("params/b"), "{err}");
+    }
+}

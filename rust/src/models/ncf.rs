@@ -1,0 +1,502 @@
+//! The NeuMF recommender (paper §4.4) as a zoo [`HostModel`]: GMF
+//! element-wise product ∥ MLP tower on a second embedding pair → Dense
+//! head → one logit, binary cross-entropy.
+//!
+//! Training batch layout: `[user (B) i32, item (B) i32, label (B) f32]`
+//! with labels in `[0, 1]`. Serving features: `[user () i32, item () i32]`,
+//! output = the score logit.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::grad_step::ShardGrad;
+use crate::runtime::{Dtype, HostValue};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+use super::math::{self, dense_accumulate, dense_bwd_input, dense_fwd, relu, relu_mask};
+use super::{FeatureSpec, HostModel, ModelKind, ParamSet, QuantMode};
+
+/// NCF dimensions matching the Layer-2 recipe (`models/ncf.py::Config`).
+#[derive(Debug, Clone)]
+pub struct NcfDims {
+    pub n_users: usize,
+    pub n_items: usize,
+    pub factors: usize,
+    pub mlp_dim: usize,
+    pub mlp_layers: Vec<usize>,
+}
+
+impl Default for NcfDims {
+    fn default() -> Self {
+        NcfDims { n_users: 512, n_items: 1024, factors: 8, mlp_dim: 16, mlp_layers: vec![32, 16, 8] }
+    }
+}
+
+/// Synthetic NCF checkpoint slots, named exactly like the flattened
+/// Layer-2 manifest (`params/gmf_user/table`, `params/mlp0/w`, …).
+pub fn synth_ncf_slots(dims: &NcfDims, seed: u64) -> Vec<(String, HostValue)> {
+    let mut rng = Pcg32::new(seed, 0x5E27E);
+    let mut slots = vec![
+        ("params/gmf_user/table".to_string(), math::embedding(&mut rng, dims.n_users, dims.factors, 0.05)),
+        ("params/gmf_item/table".to_string(), math::embedding(&mut rng, dims.n_items, dims.factors, 0.05)),
+        ("params/mlp_user/table".to_string(), math::embedding(&mut rng, dims.n_users, dims.mlp_dim, 0.05)),
+        ("params/mlp_item/table".to_string(), math::embedding(&mut rng, dims.n_items, dims.mlp_dim, 0.05)),
+    ];
+    let mut d = 2 * dims.mlp_dim;
+    for (i, &w) in dims.mlp_layers.iter().enumerate() {
+        slots.push((format!("params/mlp{i}/w"), math::glorot(&mut rng, d, w)));
+        slots.push((format!("params/mlp{i}/b"), HostValue::f32(vec![w], vec![0.0; w])));
+        d = w;
+    }
+    slots.push(("params/head/w".to_string(), math::glorot(&mut rng, dims.factors + d, 1)));
+    slots.push(("params/head/b".to_string(), HostValue::f32(vec![1], vec![0.0])));
+    slots
+}
+
+/// Trainable + servable NeuMF scorer.
+///
+/// Slot order: `[gmf_user, gmf_item, mlp_user, mlp_item, mlp{i}/w,
+/// mlp{i}/b …, head/w, head/b]`.
+pub struct NcfModel {
+    p: ParamSet,
+    n_tower: usize,
+}
+
+const GMF_USER: usize = 0;
+const GMF_ITEM: usize = 1;
+const MLP_USER: usize = 2;
+const MLP_ITEM: usize = 3;
+
+impl NcfModel {
+    /// Deterministic synthetic initialization ([`synth_ncf_slots`]).
+    pub fn new(dims: &NcfDims, seed: u64) -> Self {
+        Self::from_slots(&synth_ncf_slots(dims, seed)).expect("synthetic slots are well-formed")
+    }
+
+    /// Rebuild from checkpoint-style slots (the `params/*` names the
+    /// Layer-2 manifest and [`synth_ncf_slots`] use).
+    pub fn from_slots(slots: &[(String, HostValue)]) -> Result<Self> {
+        let table = |name: &str| -> Result<Tensor> {
+            math::take_matrix(slots, &format!("params/{name}/table"))
+                .with_context(|| format!("NCF checkpoint missing embedding '{name}'"))
+        };
+        let (gmf_user, gmf_item) = (table("gmf_user")?, table("gmf_item")?);
+        let (mlp_user, mlp_item) = (table("mlp_user")?, table("mlp_item")?);
+        if gmf_user.shape()[1] != gmf_item.shape()[1] {
+            bail!("GMF user/item factor dims differ");
+        }
+        if gmf_user.shape()[0] != mlp_user.shape()[0] || gmf_item.shape()[0] != mlp_item.shape()[0]
+        {
+            bail!("GMF and MLP embedding vocab sizes differ");
+        }
+        let mut named: Vec<(String, Tensor)> = vec![
+            ("params/gmf_user/table".to_string(), gmf_user),
+            ("params/gmf_item/table".to_string(), gmf_item),
+            ("params/mlp_user/table".to_string(), mlp_user),
+            ("params/mlp_item/table".to_string(), mlp_item),
+        ];
+        let mut n_tower = 0usize;
+        let mut d = named[MLP_USER].1.shape()[1] + named[MLP_ITEM].1.shape()[1];
+        while math::find_slot(slots, &format!("params/mlp{n_tower}/w")).is_some() {
+            let i = n_tower;
+            let w = math::take_matrix(slots, &format!("params/mlp{i}/w"))?;
+            // the trainable zoo requires a bias per dense layer (it is a
+            // gradient slot); forward-only bias-free layers are not served
+            let b = math::take_f32(slots, &format!("params/mlp{i}/b")).with_context(|| {
+                format!("mlp{i} has weights but no bias — zoo models require both")
+            })?;
+            if b.shape() != [w.shape()[1]].as_slice() {
+                bail!("params/mlp{i} has inconsistent shapes");
+            }
+            if w.shape()[0] != d {
+                bail!("mlp{i} input dim {} does not chain (expected {d})", w.shape()[0]);
+            }
+            d = w.shape()[1];
+            named.push((format!("params/mlp{i}/w"), w));
+            named.push((format!("params/mlp{i}/b"), b));
+            n_tower += 1;
+        }
+        if n_tower == 0 {
+            bail!("no params/mlp0/w slot — not an NCF parameter set");
+        }
+        let head_w = math::take_matrix(slots, "params/head/w")?;
+        let head_b = math::take_f32(slots, "params/head/b")?;
+        if head_w.shape() != [named[GMF_USER].1.shape()[1] + d, 1].as_slice() {
+            bail!("head input dim does not match [gmf, mlp] concat");
+        }
+        if head_b.shape() != [1].as_slice() {
+            bail!("NCF head must produce one logit");
+        }
+        named.push(("params/head/w".to_string(), head_w));
+        named.push(("params/head/b".to_string(), head_b));
+        Ok(NcfModel { p: ParamSet::new(named), n_tower })
+    }
+
+    fn tower_w(&self, l: usize) -> &Tensor {
+        self.p.eff(4 + 2 * l)
+    }
+
+    fn tower_b(&self, l: usize) -> &Tensor {
+        self.p.eff(5 + 2 * l)
+    }
+
+    fn head_w_slot(&self) -> usize {
+        4 + 2 * self.n_tower
+    }
+
+    pub fn n_users(&self) -> usize {
+        self.p.master(GMF_USER).shape()[0]
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.p.master(GMF_ITEM).shape()[0]
+    }
+
+    /// Score one (user, item) pair — the single forward implementation
+    /// both the serving and training paths run. Ids must be in range.
+    pub fn score_row(&self, user: usize, item: usize) -> f32 {
+        let gu = self.p.eff(GMF_USER).row(user);
+        let gi = self.p.eff(GMF_ITEM).row(item);
+        let mu = self.p.eff(MLP_USER).row(user);
+        let mi = self.p.eff(MLP_ITEM).row(item);
+        let mut h = Vec::with_capacity(mu.len() + mi.len());
+        h.extend_from_slice(mu);
+        h.extend_from_slice(mi);
+        for l in 0..self.n_tower {
+            h = dense_fwd(self.tower_w(l), self.tower_b(l).data(), &h);
+            relu(&mut h);
+        }
+        let head_w = self.p.eff(self.head_w_slot());
+        let head_b = self.p.eff(self.head_w_slot() + 1);
+        let mut both = Vec::with_capacity(gu.len() + h.len());
+        both.extend(gu.iter().zip(gi.iter()).map(|(a, b)| a * b));
+        both.extend_from_slice(&h);
+        dense_fwd(head_w, head_b.data(), &both)[0]
+    }
+}
+
+impl HostModel for NcfModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Ncf
+    }
+
+    fn quant_mode(&self) -> QuantMode {
+        self.p.quant_mode()
+    }
+
+    fn set_quant_mode(&mut self, mode: QuantMode) {
+        self.p.set_quant_mode(mode)
+    }
+
+    fn param_slots(&self) -> Vec<(String, Vec<usize>)> {
+        self.p.slots()
+    }
+
+    fn params(&self) -> Vec<(String, Tensor)> {
+        self.p.snapshot()
+    }
+
+    fn feature_specs(&self) -> Vec<FeatureSpec> {
+        vec![
+            FeatureSpec { name: "user".into(), shape: vec![], dtype: Dtype::I32 },
+            FeatureSpec { name: "item".into(), shape: vec![], dtype: Dtype::I32 },
+        ]
+    }
+
+    fn validate_example(&self, features: &[HostValue]) -> Result<()> {
+        if features.len() != 2 {
+            bail!("expected 2 feature tensors, got {}", features.len());
+        }
+        let user = *features[0].as_i32()?.first().context("empty user tensor")?;
+        let item = *features[1].as_i32()?.first().context("empty item tensor")?;
+        if user < 0 || user as usize >= self.n_users() {
+            bail!("user id {user} out of range 0..{}", self.n_users());
+        }
+        if item < 0 || item as usize >= self.n_items() {
+            bail!("item id {item} out of range 0..{}", self.n_items());
+        }
+        Ok(())
+    }
+
+    fn score_one(&self, features: &[HostValue]) -> Result<Vec<f32>> {
+        self.validate_example(features)?;
+        let u = features[0].as_i32()?[0] as usize;
+        let it = features[1].as_i32()?[0] as usize;
+        Ok(vec![self.score_row(u, it)])
+    }
+
+    fn run_rows(&self, inputs: &[HostValue], n: usize) -> Result<Vec<Vec<f32>>> {
+        let users = inputs[0].as_i32()?;
+        let items = inputs[1].as_i32()?;
+        if users.len() < n || items.len() < n {
+            bail!("ncf: stacked ids shorter than n={n}");
+        }
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let (u, it) = (users[i], items[i]);
+            if u < 0 || u as usize >= self.n_users() || it < 0 || it as usize >= self.n_items() {
+                bail!("ncf row {i}: id ({u}, {it}) out of range");
+            }
+            out.push(vec![self.score_row(u as usize, it as usize)]);
+        }
+        Ok(out)
+    }
+
+    fn out_width(&self) -> usize {
+        1
+    }
+
+    fn backward(&self, batch: &[HostValue]) -> Result<ShardGrad> {
+        if batch.len() != 3 {
+            bail!("ncf batch is [user, item, label], got {} tensors", batch.len());
+        }
+        let users = batch[0].as_i32().context("ncf batch/user")?;
+        let items = batch[1].as_i32().context("ncf batch/item")?;
+        let labels = batch[2].as_f32().context("ncf batch/label")?;
+        let n = users.len();
+        if items.len() != n || labels.len() != n {
+            bail!(
+                "ncf batch arity mismatch: {n} users, {} items, {} labels",
+                items.len(),
+                labels.len()
+            );
+        }
+        let f = self.p.master(GMF_USER).shape()[1];
+        // the two MLP embedding widths may differ — each table gets its
+        // own row stride
+        let mu_w = self.p.master(MLP_USER).shape()[1];
+        let mi_w = self.p.master(MLP_ITEM).shape()[1];
+        let nt = self.n_tower;
+
+        let slots = self.param_slots();
+        let mut acc: Vec<Vec<f64>> = slots
+            .iter()
+            .map(|(_, shape)| vec![0.0f64; shape.iter().product()])
+            .collect();
+        let head_w_slot = self.head_w_slot();
+        let mut loss_sum = 0.0f64;
+
+        for i in 0..n {
+            let (u, it, yv) = (users[i], items[i], labels.data()[i]);
+            if u < 0 || u as usize >= self.n_users() {
+                bail!("row {i}: user id {u} out of range 0..{}", self.n_users());
+            }
+            if it < 0 || it as usize >= self.n_items() {
+                bail!("row {i}: item id {it} out of range 0..{}", self.n_items());
+            }
+            if !(0.0..=1.0).contains(&yv) {
+                bail!("row {i}: label {yv} outside [0, 1]");
+            }
+            let (u, it) = (u as usize, it as usize);
+
+            // forward (mirrors `score_row` arithmetic exactly)
+            let gu = self.p.eff(GMF_USER).row(u);
+            let gi = self.p.eff(GMF_ITEM).row(it);
+            let mut h: Vec<f32> = Vec::with_capacity(mu_w + mi_w);
+            h.extend_from_slice(self.p.eff(MLP_USER).row(u));
+            h.extend_from_slice(self.p.eff(MLP_ITEM).row(it));
+            let mut tower_in: Vec<Vec<f32>> = Vec::with_capacity(nt);
+            let mut tower_pre: Vec<Vec<f32>> = Vec::with_capacity(nt);
+            for l in 0..nt {
+                let a = dense_fwd(self.tower_w(l), self.tower_b(l).data(), &h);
+                tower_in.push(std::mem::take(&mut h));
+                h = a.clone();
+                relu(&mut h);
+                tower_pre.push(a);
+            }
+            let head_w = self.p.eff(head_w_slot);
+            let head_b = self.p.eff(head_w_slot + 1);
+            let mut both: Vec<f32> = Vec::with_capacity(f + h.len());
+            both.extend(gu.iter().zip(gi.iter()).map(|(a, b)| a * b));
+            both.extend_from_slice(&h);
+            let s = dense_fwd(head_w, head_b.data(), &both)[0];
+
+            // stable BCE-with-logits and its gradient
+            loss_sum += (s.max(0.0) - s * yv + (-s.abs()).exp().ln_1p()) as f64;
+            let sig = 1.0 / (1.0 + (-s).exp());
+            let d = sig - yv;
+
+            // backward: head
+            {
+                let (gw, rest) = acc[head_w_slot..].split_first_mut().unwrap();
+                dense_accumulate(gw, &mut rest[0], &both, &[d]);
+            }
+            let dboth: Vec<f32> = head_w.data().iter().map(|&w| w * d).collect();
+            let (dgmf, dh) = dboth.split_at(f);
+
+            // GMF embedding rows
+            for (k, &dg) in dgmf.iter().enumerate() {
+                acc[GMF_USER][u * f + k] += (dg * gi[k]) as f64;
+                acc[GMF_ITEM][it * f + k] += (dg * gu[k]) as f64;
+            }
+
+            // MLP tower
+            let mut delta: Vec<f32> = dh.to_vec();
+            for l in (0..nt).rev() {
+                relu_mask(&mut delta, &tower_pre[l]);
+                {
+                    let (gw, rest) = acc[4 + 2 * l..].split_first_mut().unwrap();
+                    dense_accumulate(gw, &mut rest[0], &tower_in[l], &delta);
+                }
+                delta = dense_bwd_input(self.tower_w(l), &delta);
+            }
+
+            // MLP embedding rows
+            let (du, di) = delta.split_at(mu_w);
+            for (k, &v) in du.iter().enumerate() {
+                acc[MLP_USER][u * mu_w + k] += v as f64;
+            }
+            for (k, &v) in di.iter().enumerate() {
+                acc[MLP_ITEM][it * mi_w + k] += v as f64;
+            }
+        }
+
+        let grads = acc
+            .into_iter()
+            .zip(slots)
+            .map(|(a, (_, shape))| Tensor::new(shape, a.into_iter().map(|v| v as f32).collect()))
+            .collect();
+        Ok(ShardGrad { loss_sum, n_examples: n, grads })
+    }
+
+    fn sgd_step(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()> {
+        self.p.sgd_step(mean_grads, lr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::gradcheck::grad_check;
+    use crate::util::rng::{Pcg32, Rng};
+
+    fn ncf_batch(rng: &mut Pcg32, b: usize, users: usize, items: usize) -> Vec<HostValue> {
+        let mut u = Vec::with_capacity(b);
+        let mut it = Vec::with_capacity(b);
+        let mut y = Vec::with_capacity(b);
+        for _ in 0..b {
+            u.push(rng.next_below(users as u64) as i32);
+            it.push(rng.next_below(items as u64) as i32);
+            y.push(if rng.next_f32() < 0.5 { 1.0 } else { 0.0 });
+        }
+        vec![
+            HostValue::i32(vec![b], u),
+            HostValue::i32(vec![b], it),
+            HostValue::f32(vec![b], y),
+        ]
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let dims = NcfDims {
+            n_users: 5,
+            n_items: 6,
+            factors: 3,
+            mlp_dim: 3,
+            mlp_layers: vec![4, 3],
+        };
+        let mut t = NcfModel::new(&dims, 3);
+        let mut rng = Pcg32::new(8, 2);
+        let batch = ncf_batch(&mut rng, 4, 5, 6);
+        grad_check(&mut t, &batch);
+    }
+
+    #[test]
+    fn gradients_with_asymmetric_mlp_embedding_widths() {
+        // mlp_user and mlp_item tables with *different* factor dims —
+        // the backward must stride each table by its own width.
+        let mut rng = Pcg32::new(41, 0);
+        let (users, items, factors) = (4usize, 5usize, 2usize);
+        let (mu_w, mi_w, hidden) = (3usize, 2usize, 4usize);
+        let t = |shape: Vec<usize>, rng: &mut Pcg32| {
+            HostValue::F32(Tensor::randn(shape, rng).map(|v| v * 0.3))
+        };
+        let slots = vec![
+            ("params/gmf_user/table".to_string(), t(vec![users, factors], &mut rng)),
+            ("params/gmf_item/table".to_string(), t(vec![items, factors], &mut rng)),
+            ("params/mlp_user/table".to_string(), t(vec![users, mu_w], &mut rng)),
+            ("params/mlp_item/table".to_string(), t(vec![items, mi_w], &mut rng)),
+            ("params/mlp0/w".to_string(), t(vec![mu_w + mi_w, hidden], &mut rng)),
+            ("params/mlp0/b".to_string(), t(vec![hidden], &mut rng)),
+            ("params/head/w".to_string(), t(vec![factors + hidden, 1], &mut rng)),
+            ("params/head/b".to_string(), t(vec![1], &mut rng)),
+        ];
+        let mut model = NcfModel::from_slots(&slots).unwrap();
+        let mut rng = Pcg32::new(6, 6);
+        let batch = ncf_batch(&mut rng, 5, users, items);
+        grad_check(&mut model, &batch);
+    }
+
+    #[test]
+    fn training_stays_finite_on_random_labels() {
+        let dims = NcfDims { n_users: 30, n_items: 40, ..NcfDims::default() };
+        let mut t = NcfModel::new(&dims, 1);
+        let mut rng = Pcg32::new(9, 0);
+        let mut losses = Vec::new();
+        for _ in 0..40 {
+            let batch = ncf_batch(&mut rng, 16, 30, 40);
+            let sg = t.backward(&batch).unwrap();
+            let inv = 1.0 / sg.n_examples as f64;
+            let mean: Vec<Tensor> =
+                sg.grads.iter().map(|g| g.map(|v| (v as f64 * inv) as f32)).collect();
+            t.sgd_step(&mean, 0.1).unwrap();
+            losses.push(sg.loss_sum * inv);
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn batched_rows_are_bitwise_identical_to_single_scores() {
+        let dims = NcfDims { n_users: 20, n_items: 30, ..NcfDims::default() };
+        let m = NcfModel::new(&dims, 1);
+        let users = HostValue::i32(vec![4], vec![1, 5, 9, 0]); // last row = padding
+        let items = HostValue::i32(vec![4], vec![2, 6, 10, 0]);
+        let rows = m.run_rows(&[users, items], 3).unwrap();
+        for (i, (u, it)) in [(1, 2), (5, 6), (9, 10)].iter().enumerate() {
+            let single = m
+                .score_one(&[HostValue::scalar_i32(*u), HostValue::scalar_i32(*it)])
+                .unwrap();
+            assert_eq!(rows[i][0].to_bits(), single[0].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_ids_are_rejected() {
+        let dims = NcfDims { n_users: 20, n_items: 30, ..NcfDims::default() };
+        let m = NcfModel::new(&dims, 1);
+        let err = m
+            .score_one(&[HostValue::scalar_i32(999), HostValue::scalar_i32(0)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(m
+            .validate_example(&[HostValue::scalar_i32(0), HostValue::scalar_i32(-1)])
+            .is_err());
+        // malformed training batches
+        let bad = vec![
+            HostValue::i32(vec![1], vec![9999]),
+            HostValue::i32(vec![1], vec![0]),
+            HostValue::f32(vec![1], vec![1.0]),
+        ];
+        assert!(m.backward(&bad).is_err(), "user id out of range must fail");
+        let bad = vec![
+            HostValue::i32(vec![1], vec![0]),
+            HostValue::i32(vec![1], vec![0]),
+            HostValue::f32(vec![1], vec![2.0]),
+        ];
+        assert!(m.backward(&bad).is_err(), "label outside [0,1] must fail");
+    }
+
+    #[test]
+    fn params_roundtrip_through_slots() {
+        let dims = NcfDims { n_users: 6, n_items: 7, ..NcfDims::default() };
+        let t = NcfModel::new(&dims, 6);
+        let slots: Vec<(String, HostValue)> =
+            t.params().into_iter().map(|(n, p)| (n, HostValue::F32(p))).collect();
+        let t2 = NcfModel::from_slots(&slots).unwrap();
+        for ((na, a), (nb, b)) in t.params().iter().zip(t2.params().iter()) {
+            assert_eq!(na, nb);
+            assert_eq!(a, b);
+        }
+    }
+}

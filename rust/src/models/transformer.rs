@@ -1,0 +1,976 @@
+//! A host **Transformer** as a zoo [`HostModel`] — the paper's third
+//! workload family (§4.3), runnable and distributable without AOT
+//! artifacts.
+//!
+//! Architecture (single stack, sequence labeling): learned token +
+//! position embeddings → `n_layers ×` [multi-head self-attention →
+//! add&layernorm → ReLU FFN → add&layernorm] → dense vocab head, softmax
+//! cross-entropy per position. On `data::synth_translation` (reverse +
+//! affine token grammar, a fixed-length T→T transduction) the model must
+//! learn both a token mapping and a position-level reversal — the latter
+//! only reachable through attention — and is evaluated with
+//! `metrics::bleu` on greedy (per-position argmax) decodes.
+//!
+//! The full backward (softmax-attention, layernorm, FFN, embeddings) is
+//! finite-difference-checked (`tests/prop_models.rs` and the tests
+//! below). All math follows the zoo's determinism contract: one example
+//! at a time, f32 forward, f64 gradient accumulation in example order.
+//!
+//! Training batch layout: `[src (B, T) i32, tgt (B, T) i32]`; `PAD`
+//! targets are masked out of the loss. Serving features: `[src (T) i32]`,
+//! output = the flattened `(T × vocab)` logits.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::grad_step::ShardGrad;
+use crate::data::synth_translation::PAD;
+use crate::runtime::{Dtype, HostValue};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+use super::math::{self, dense_bwd_input, dense_fwd, relu, relu_mask};
+use super::{FeatureSpec, HostModel, ModelKind, ParamSet, QuantMode};
+
+/// Transformer hyper-shape. `d_model` must be divisible by `n_heads`.
+#[derive(Debug, Clone)]
+pub struct TransformerDims {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+}
+
+impl Default for TransformerDims {
+    fn default() -> Self {
+        TransformerDims { vocab: 64, seq_len: 16, d_model: 32, n_heads: 4, d_ff: 64, n_layers: 2 }
+    }
+}
+
+/// Slots per encoder layer: `wq wk wv wo ln1/g ln1/b ffn1/w ffn1/b
+/// ffn2/w ffn2/b ln2/g ln2/b`.
+const SLOTS_PER_LAYER: usize = 12;
+const EMB: usize = 0;
+const POS: usize = 1;
+
+/// Synthetic transformer checkpoint slots (`params/src_emb/table`,
+/// `params/pos/table`, `params/l{l}/…`, `params/out/{w,b}`, plus the
+/// `params/meta/n_heads` shape marker a checkpoint cannot express through
+/// tensor shapes alone).
+pub fn synth_transformer_slots(dims: &TransformerDims, seed: u64) -> Vec<(String, HostValue)> {
+    assert!(dims.n_heads >= 1 && dims.d_model % dims.n_heads == 0, "d_model % n_heads != 0");
+    assert!(dims.n_layers >= 1, "need at least one layer");
+    let mut rng = Pcg32::new(seed, 0x7F0);
+    let (d, f, v, t) = (dims.d_model, dims.d_ff, dims.vocab, dims.seq_len);
+    let mut slots = vec![
+        ("params/src_emb/table".to_string(), math::embedding(&mut rng, v, d, 0.1)),
+        ("params/pos/table".to_string(), math::embedding(&mut rng, t, d, 0.1)),
+    ];
+    for l in 0..dims.n_layers {
+        for nm in ["wq", "wk", "wv", "wo"] {
+            slots.push((format!("params/l{l}/attn/{nm}"), math::glorot(&mut rng, d, d)));
+        }
+        slots.push((format!("params/l{l}/ln1/g"), HostValue::f32(vec![d], vec![1.0; d])));
+        slots.push((format!("params/l{l}/ln1/b"), HostValue::f32(vec![d], vec![0.0; d])));
+        slots.push((format!("params/l{l}/ffn1/w"), math::glorot(&mut rng, d, f)));
+        slots.push((format!("params/l{l}/ffn1/b"), HostValue::f32(vec![f], vec![0.0; f])));
+        slots.push((format!("params/l{l}/ffn2/w"), math::glorot(&mut rng, f, d)));
+        slots.push((format!("params/l{l}/ffn2/b"), HostValue::f32(vec![d], vec![0.0; d])));
+        slots.push((format!("params/l{l}/ln2/g"), HostValue::f32(vec![d], vec![1.0; d])));
+        slots.push((format!("params/l{l}/ln2/b"), HostValue::f32(vec![d], vec![0.0; d])));
+    }
+    slots.push(("params/out/w".to_string(), math::glorot(&mut rng, d, v)));
+    slots.push(("params/out/b".to_string(), HostValue::f32(vec![v], vec![0.0; v])));
+    slots.push((
+        "params/meta/n_heads".to_string(),
+        HostValue::f32(vec![1], vec![dims.n_heads as f32]),
+    ));
+    slots
+}
+
+/// Per-layer attention intermediates (everything the backward needs).
+struct AttnCache {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// softmax probabilities, `(n_heads × T × T)` flat.
+    p: Vec<f32>,
+    /// heads-concatenated context, `(T × D)`.
+    ctx: Vec<f32>,
+    /// after the output projection, `(T × D)`.
+    out: Vec<f32>,
+}
+
+struct LnCache {
+    y: Vec<f32>,
+    xhat: Vec<f32>,
+    /// one `1/std` per position.
+    inv_std: Vec<f32>,
+}
+
+struct FfnCache {
+    /// pre-ReLU hidden, `(T × d_ff)`.
+    pre1: Vec<f32>,
+    /// post-ReLU hidden, `(T × d_ff)`.
+    hid: Vec<f32>,
+    out: Vec<f32>,
+}
+
+struct LayerCache {
+    h_in: Vec<f32>,
+    attn: AttnCache,
+    ln1: LnCache,
+    ffn: FfnCache,
+    ln2: LnCache,
+}
+
+struct Trace {
+    layers: Vec<LayerCache>,
+    /// hidden states after the last layer, `(T × D)`.
+    h_final: Vec<f32>,
+}
+
+/// Trainable + servable host Transformer.
+pub struct TransformerModel {
+    p: ParamSet,
+    dims: TransformerDims,
+}
+
+impl TransformerModel {
+    /// Deterministic synthetic initialization
+    /// ([`synth_transformer_slots`]).
+    pub fn new(dims: &TransformerDims, seed: u64) -> Self {
+        Self::from_slots(&synth_transformer_slots(dims, seed))
+            .expect("synthetic slots are well-formed")
+    }
+
+    /// Rebuild from checkpoint-style slots.
+    pub fn from_slots(slots: &[(String, HostValue)]) -> Result<Self> {
+        let emb = math::take_matrix(slots, "params/src_emb/table")?;
+        let (vocab, d) = (emb.shape()[0], emb.shape()[1]);
+        let pos = math::take_matrix(slots, "params/pos/table")?;
+        if pos.shape()[1] != d {
+            bail!("pos table width {} vs d_model {d}", pos.shape()[1]);
+        }
+        let seq_len = pos.shape()[0];
+        let heads_t = math::take_f32(slots, "params/meta/n_heads")
+            .context("transformer checkpoints carry a params/meta/n_heads marker")?;
+        if heads_t.len() != 1 {
+            bail!("params/meta/n_heads must hold exactly one value");
+        }
+        // round, don't truncate: a lossy --ckpt-format may round-trip the
+        // marker to e.g. 5.9999995 and `as usize` would silently drop a head
+        let n_heads = heads_t.data()[0].round() as usize;
+        if n_heads == 0 || d % n_heads != 0 {
+            bail!("n_heads {n_heads} does not divide d_model {d}");
+        }
+
+        let mut named: Vec<(String, Tensor)> = vec![
+            ("params/src_emb/table".to_string(), emb),
+            ("params/pos/table".to_string(), pos),
+        ];
+        let mut n_layers = 0usize;
+        let mut d_ff = 0usize;
+        while math::find_slot(slots, &format!("params/l{n_layers}/attn/wq")).is_some() {
+            let l = n_layers;
+            for nm in ["wq", "wk", "wv", "wo"] {
+                let w = math::take_matrix(slots, &format!("params/l{l}/attn/{nm}"))?;
+                if w.shape() != [d, d].as_slice() {
+                    bail!("params/l{l}/attn/{nm} must be ({d}, {d}), got {:?}", w.shape());
+                }
+                named.push((format!("params/l{l}/attn/{nm}"), w));
+            }
+            for nm in ["ln1/g", "ln1/b"] {
+                let g = math::take_f32(slots, &format!("params/l{l}/{nm}"))?;
+                if g.shape() != [d].as_slice() {
+                    bail!("params/l{l}/{nm} must be ({d}), got {:?}", g.shape());
+                }
+                named.push((format!("params/l{l}/{nm}"), g));
+            }
+            let w1 = math::take_matrix(slots, &format!("params/l{l}/ffn1/w"))?;
+            if w1.shape()[0] != d {
+                bail!("params/l{l}/ffn1/w input dim {} vs d_model {d}", w1.shape()[0]);
+            }
+            let f = w1.shape()[1];
+            if l == 0 {
+                d_ff = f;
+            } else if f != d_ff {
+                bail!("layer {l} d_ff {f} differs from layer 0 d_ff {d_ff}");
+            }
+            let b1 = math::take_f32(slots, &format!("params/l{l}/ffn1/b"))?;
+            if b1.shape() != [f].as_slice() {
+                bail!("params/l{l}/ffn1/b must be ({f})");
+            }
+            let w2 = math::take_matrix(slots, &format!("params/l{l}/ffn2/w"))?;
+            if w2.shape() != [f, d].as_slice() {
+                bail!("params/l{l}/ffn2/w must be ({f}, {d}), got {:?}", w2.shape());
+            }
+            let b2 = math::take_f32(slots, &format!("params/l{l}/ffn2/b"))?;
+            if b2.shape() != [d].as_slice() {
+                bail!("params/l{l}/ffn2/b must be ({d})");
+            }
+            named.push((format!("params/l{l}/ffn1/w"), w1));
+            named.push((format!("params/l{l}/ffn1/b"), b1));
+            named.push((format!("params/l{l}/ffn2/w"), w2));
+            named.push((format!("params/l{l}/ffn2/b"), b2));
+            for nm in ["ln2/g", "ln2/b"] {
+                let g = math::take_f32(slots, &format!("params/l{l}/{nm}"))?;
+                if g.shape() != [d].as_slice() {
+                    bail!("params/l{l}/{nm} must be ({d}), got {:?}", g.shape());
+                }
+                named.push((format!("params/l{l}/{nm}"), g));
+            }
+            n_layers += 1;
+        }
+        if n_layers == 0 {
+            bail!("no params/l0/attn/wq slot — not a transformer parameter set");
+        }
+        let out_w = math::take_matrix(slots, "params/out/w")?;
+        if out_w.shape() != [d, vocab].as_slice() {
+            bail!("params/out/w must be ({d}, {vocab}), got {:?}", out_w.shape());
+        }
+        let out_b = math::take_f32(slots, "params/out/b")?;
+        if out_b.shape() != [vocab].as_slice() {
+            bail!("params/out/b must be ({vocab})");
+        }
+        named.push(("params/out/w".to_string(), out_w));
+        named.push(("params/out/b".to_string(), out_b));
+        named.push((
+            "params/meta/n_heads".to_string(),
+            Tensor::new(vec![1], vec![n_heads as f32]),
+        ));
+
+        let dims = TransformerDims { vocab, seq_len, d_model: d, n_heads, d_ff, n_layers };
+        Ok(TransformerModel { p: ParamSet::new(named), dims })
+    }
+
+    pub fn dims(&self) -> &TransformerDims {
+        &self.dims
+    }
+
+    fn layer_base(l: usize) -> usize {
+        2 + SLOTS_PER_LAYER * l
+    }
+
+    fn out_w_idx(&self) -> usize {
+        2 + SLOTS_PER_LAYER * self.dims.n_layers
+    }
+
+    fn check_tokens(&self, what: &str, row: &[i32]) -> Result<()> {
+        if row.is_empty() || row.len() > self.dims.seq_len {
+            bail!("{what} length {} outside 1..={}", row.len(), self.dims.seq_len);
+        }
+        for (t, &tok) in row.iter().enumerate() {
+            if tok < 0 || tok as usize >= self.dims.vocab {
+                bail!("{what}[{t}]: token {tok} out of range 0..{}", self.dims.vocab);
+            }
+        }
+        Ok(())
+    }
+
+    /// `h0 = emb[src] + pos`, `(T × D)`.
+    fn embed(&self, src: &[i32]) -> Vec<f32> {
+        let emb = self.p.eff(EMB);
+        let pos = self.p.eff(POS);
+        let d = self.dims.d_model;
+        let mut h = Vec::with_capacity(src.len() * d);
+        for (t, &tok) in src.iter().enumerate() {
+            let e = emb.row(tok as usize);
+            let pr = pos.row(t);
+            debug_assert_eq!(e.len(), d);
+            for (&ev, &pv) in e.iter().zip(pr.iter()) {
+                h.push(ev + pv);
+            }
+        }
+        h
+    }
+
+    fn attn_forward(&self, base: usize, h: &[f32], t_len: usize) -> AttnCache {
+        let d = self.dims.d_model;
+        let nh = self.dims.n_heads;
+        let hw = d / nh;
+        let scale = 1.0 / (hw as f32).sqrt();
+        let (wq, wk, wv, wo) =
+            (self.p.eff(base), self.p.eff(base + 1), self.p.eff(base + 2), self.p.eff(base + 3));
+        let mut q = Vec::with_capacity(t_len * d);
+        let mut k = Vec::with_capacity(t_len * d);
+        let mut v = Vec::with_capacity(t_len * d);
+        for t in 0..t_len {
+            let x = &h[t * d..(t + 1) * d];
+            q.extend(math::matvec(wq, x));
+            k.extend(math::matvec(wk, x));
+            v.extend(math::matvec(wv, x));
+        }
+        let mut p = vec![0.0f32; nh * t_len * t_len];
+        let mut ctx = vec![0.0f32; t_len * d];
+        for m in 0..nh {
+            let off = m * hw;
+            for i in 0..t_len {
+                let prow = &mut p[(m * t_len + i) * t_len..][..t_len];
+                for (j, pj) in prow.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for c in 0..hw {
+                        acc += q[i * d + off + c] * k[j * d + off + c];
+                    }
+                    *pj = acc * scale;
+                }
+                math::softmax(prow);
+                for c in 0..hw {
+                    let mut acc = 0.0f32;
+                    for (j, &pj) in prow.iter().enumerate() {
+                        acc += pj * v[j * d + off + c];
+                    }
+                    ctx[i * d + off + c] = acc;
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(t_len * d);
+        for t in 0..t_len {
+            out.extend(math::matvec(wo, &ctx[t * d..(t + 1) * d]));
+        }
+        AttnCache { q, k, v, p, ctx, out }
+    }
+
+    fn ln_forward(&self, g_idx: usize, x: &[f32], t_len: usize) -> LnCache {
+        let d = self.dims.d_model;
+        let g = self.p.eff(g_idx).data();
+        let b = self.p.eff(g_idx + 1).data();
+        let mut y = Vec::with_capacity(x.len());
+        let mut xhat = Vec::with_capacity(x.len());
+        let mut inv_std = Vec::with_capacity(t_len);
+        for t in 0..t_len {
+            let (yy, hh, istd) = math::layernorm_fwd(g, b, &x[t * d..(t + 1) * d]);
+            y.extend(yy);
+            xhat.extend(hh);
+            inv_std.push(istd);
+        }
+        LnCache { y, xhat, inv_std }
+    }
+
+    fn ffn_forward(&self, base1: usize, x: &[f32], t_len: usize) -> FfnCache {
+        let d = self.dims.d_model;
+        let f = self.dims.d_ff;
+        let (w1, b1, w2, b2) = (
+            self.p.eff(base1),
+            self.p.eff(base1 + 1),
+            self.p.eff(base1 + 2),
+            self.p.eff(base1 + 3),
+        );
+        let mut pre1 = Vec::with_capacity(t_len * f);
+        let mut hid = Vec::with_capacity(t_len * f);
+        let mut out = Vec::with_capacity(t_len * d);
+        for t in 0..t_len {
+            let a = dense_fwd(w1, b1.data(), &x[t * d..(t + 1) * d]);
+            let mut hh = a.clone();
+            relu(&mut hh);
+            out.extend(dense_fwd(w2, b2.data(), &hh));
+            pre1.extend(a);
+            hid.extend(hh);
+        }
+        FfnCache { pre1, hid, out }
+    }
+
+    /// One example end to end, returning every intermediate the backward
+    /// needs. This is the *only* forward implementation: serving drops
+    /// the caches, training backpropagates through them — so the two
+    /// paths are bitwise identical by construction.
+    fn forward_example(&self, src: &[i32]) -> Trace {
+        let t_len = src.len();
+        let mut h = self.embed(src);
+        let mut layers = Vec::with_capacity(self.dims.n_layers);
+        for l in 0..self.dims.n_layers {
+            let base = Self::layer_base(l);
+            let attn = self.attn_forward(base, &h, t_len);
+            let mut z1 = Vec::with_capacity(h.len());
+            for (hv, av) in h.iter().zip(attn.out.iter()) {
+                z1.push(hv + av);
+            }
+            let ln1 = self.ln_forward(base + 4, &z1, t_len);
+            let ffn = self.ffn_forward(base + 6, &ln1.y, t_len);
+            let mut z2 = Vec::with_capacity(h.len());
+            for (lv, fv) in ln1.y.iter().zip(ffn.out.iter()) {
+                z2.push(lv + fv);
+            }
+            let ln2 = self.ln_forward(base + 10, &z2, t_len);
+            let h_next = ln2.y.clone();
+            layers.push(LayerCache { h_in: h, attn, ln1, ffn, ln2 });
+            h = h_next;
+        }
+        Trace { layers, h_final: h }
+    }
+
+    fn logits_from(&self, h_final: &[f32], t_len: usize) -> Vec<f32> {
+        let d = self.dims.d_model;
+        let out_w = self.p.eff(self.out_w_idx());
+        let out_b = self.p.eff(self.out_w_idx() + 1);
+        let mut logits = Vec::with_capacity(t_len * self.dims.vocab);
+        for t in 0..t_len {
+            logits.extend(dense_fwd(out_w, out_b.data(), &h_final[t * d..(t + 1) * d]));
+        }
+        logits
+    }
+
+    /// Per-position logits for one validated source row, `(T × vocab)`
+    /// flat.
+    pub fn logits_row(&self, src: &[i32]) -> Result<Vec<f32>> {
+        self.check_tokens("src", src)?;
+        let tr = self.forward_example(src);
+        Ok(self.logits_from(&tr.h_final, src.len()))
+    }
+
+    /// Greedy decode: argmax token per position (the BLEU hypothesis).
+    pub fn translate_row(&self, src: &[i32]) -> Result<Vec<i32>> {
+        let v = self.dims.vocab;
+        let logits = self.logits_row(src)?;
+        Ok(logits
+            .chunks_exact(v)
+            .map(|row| {
+                let mut best = 0usize;
+                for (j, &val) in row.iter().enumerate() {
+                    if val > row[best] {
+                        best = j;
+                    }
+                }
+                best as i32
+            })
+            .collect())
+    }
+
+    /// Backward for one (validated) example; accumulates summed gradients
+    /// into `acc` (slot order) and returns the example's loss.
+    fn backward_example(&self, src: &[i32], tgt: &[i32], acc: &mut [Vec<f64>]) -> f64 {
+        let t_len = src.len();
+        let d = self.dims.d_model;
+        let v_sz = self.dims.vocab;
+        let tr = self.forward_example(src);
+        let logits = self.logits_from(&tr.h_final, t_len);
+
+        // masked softmax cross-entropy per position and its logit grads
+        let mut loss = 0.0f64;
+        let mut dlog = vec![0.0f32; t_len * v_sz];
+        for t in 0..t_len {
+            let label = tgt[t];
+            if label == PAD {
+                continue; // masked position: no loss, no gradient
+            }
+            let label = label as usize;
+            let row = &logits[t * v_sz..(t + 1) * v_sz];
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let exps: Vec<f32> = row.iter().map(|&v| (v - m).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            loss += (z.ln() - (row[label] - m)) as f64;
+            let drow = &mut dlog[t * v_sz..(t + 1) * v_sz];
+            for (dj, &e) in drow.iter_mut().zip(exps.iter()) {
+                *dj = e / z;
+            }
+            drow[label] -= 1.0;
+        }
+
+        // output head
+        let out_w_idx = self.out_w_idx();
+        let out_w = self.p.eff(out_w_idx);
+        {
+            let (gw, rest) = acc[out_w_idx..].split_first_mut().unwrap();
+            for t in 0..t_len {
+                math::dense_accumulate(
+                    gw,
+                    &mut rest[0],
+                    &tr.h_final[t * d..(t + 1) * d],
+                    &dlog[t * v_sz..(t + 1) * v_sz],
+                );
+            }
+        }
+        let mut dh = vec![0.0f32; t_len * d];
+        for t in 0..t_len {
+            let dx = dense_bwd_input(out_w, &dlog[t * v_sz..(t + 1) * v_sz]);
+            dh[t * d..(t + 1) * d].copy_from_slice(&dx);
+        }
+
+        // layers in reverse
+        for l in (0..self.dims.n_layers).rev() {
+            let base = Self::layer_base(l);
+            let lc = &tr.layers[l];
+            // ln2: its input was z2 = ln1.y + ffn.out
+            let dz2 = self.ln_backward(base + 10, &lc.ln2, &dh, t_len, acc);
+            let dffn_in = self.ffn_backward(base + 6, lc, &dz2, t_len, acc);
+            // residual: dln1.y = dz2 (skip) + dffn_in (through the FFN)
+            let mut dln1y = dz2;
+            for (a, b) in dln1y.iter_mut().zip(dffn_in.iter()) {
+                *a += b;
+            }
+            // ln1: its input was z1 = h_in + attn.out
+            let dz1 = self.ln_backward(base + 4, &lc.ln1, &dln1y, t_len, acc);
+            let dattn_in = self.attn_backward(base, lc, &dz1, t_len, acc);
+            // residual: dh_in = dz1 (skip) + dattn_in (through attention)
+            let mut dhin = dz1;
+            for (a, b) in dhin.iter_mut().zip(dattn_in.iter()) {
+                *a += b;
+            }
+            dh = dhin;
+        }
+
+        // embeddings: h0 = emb[src[t]] + pos[t]
+        for (t, &tok) in src.iter().enumerate() {
+            let row = &dh[t * d..(t + 1) * d];
+            let e = tok as usize;
+            for (c, &g) in row.iter().enumerate() {
+                acc[EMB][e * d + c] += g as f64;
+                acc[POS][t * d + c] += g as f64;
+            }
+        }
+        loss
+    }
+
+    fn ln_backward(
+        &self,
+        g_idx: usize,
+        cache: &LnCache,
+        dy: &[f32],
+        t_len: usize,
+        acc: &mut [Vec<f64>],
+    ) -> Vec<f32> {
+        let d = self.dims.d_model;
+        let g = self.p.eff(g_idx);
+        let mut dx = vec![0.0f32; dy.len()];
+        let (dgamma, rest) = acc[g_idx..].split_first_mut().unwrap();
+        let dbeta = &mut rest[0];
+        for t in 0..t_len {
+            let out = math::layernorm_bwd(
+                g.data(),
+                &cache.xhat[t * d..(t + 1) * d],
+                cache.inv_std[t],
+                &dy[t * d..(t + 1) * d],
+                dgamma,
+                dbeta,
+            );
+            dx[t * d..(t + 1) * d].copy_from_slice(&out);
+        }
+        dx
+    }
+
+    fn ffn_backward(
+        &self,
+        base1: usize,
+        lc: &LayerCache,
+        dout: &[f32],
+        t_len: usize,
+        acc: &mut [Vec<f64>],
+    ) -> Vec<f32> {
+        let d = self.dims.d_model;
+        let f = self.dims.d_ff;
+        let (w1, w2) = (self.p.eff(base1), self.p.eff(base1 + 2));
+        let x = &lc.ln1.y; // the FFN's input
+        let mut dx = vec![0.0f32; dout.len()];
+        for t in 0..t_len {
+            let dr = &dout[t * d..(t + 1) * d];
+            {
+                let (gw2, rest) = acc[base1 + 2..].split_first_mut().unwrap();
+                math::dense_accumulate(gw2, &mut rest[0], &lc.ffn.hid[t * f..(t + 1) * f], dr);
+            }
+            let mut dhid = dense_bwd_input(w2, dr);
+            relu_mask(&mut dhid, &lc.ffn.pre1[t * f..(t + 1) * f]);
+            {
+                let (gw1, rest) = acc[base1..].split_first_mut().unwrap();
+                math::dense_accumulate(gw1, &mut rest[0], &x[t * d..(t + 1) * d], &dhid);
+            }
+            let dxr = dense_bwd_input(w1, &dhid);
+            dx[t * d..(t + 1) * d].copy_from_slice(&dxr);
+        }
+        dx
+    }
+
+    fn attn_backward(
+        &self,
+        base: usize,
+        lc: &LayerCache,
+        dout: &[f32],
+        t_len: usize,
+        acc: &mut [Vec<f64>],
+    ) -> Vec<f32> {
+        let d = self.dims.d_model;
+        let nh = self.dims.n_heads;
+        let hw = d / nh;
+        let scale = 1.0 / (hw as f32).sqrt();
+        let a = &lc.attn;
+        let (wq, wk, wv, wo) =
+            (self.p.eff(base), self.p.eff(base + 1), self.p.eff(base + 2), self.p.eff(base + 3));
+
+        // output projection: a.out = ctx·Wo
+        for t in 0..t_len {
+            math::outer_accumulate(
+                &mut acc[base + 3],
+                &a.ctx[t * d..(t + 1) * d],
+                &dout[t * d..(t + 1) * d],
+            );
+        }
+        let mut dctx = vec![0.0f32; t_len * d];
+        for t in 0..t_len {
+            let dxr = dense_bwd_input(wo, &dout[t * d..(t + 1) * d]);
+            dctx[t * d..(t + 1) * d].copy_from_slice(&dxr);
+        }
+
+        // per-head: ctx_i = Σ_j p_ij v_j ; p = softmax(q·k / √hw)
+        let mut dq = vec![0.0f32; t_len * d];
+        let mut dk = vec![0.0f32; t_len * d];
+        let mut dv = vec![0.0f32; t_len * d];
+        for m in 0..nh {
+            let off = m * hw;
+            for i in 0..t_len {
+                let prow = &a.p[(m * t_len + i) * t_len..][..t_len];
+                // dp_j = dctx_i[m] · v_j[m]  and  dv_j[m] += p_ij dctx_i[m]
+                let mut dp = Vec::with_capacity(t_len);
+                for (j, &pij) in prow.iter().enumerate() {
+                    let mut dot = 0.0f32;
+                    for c in 0..hw {
+                        let g = dctx[i * d + off + c];
+                        dot += g * a.v[j * d + off + c];
+                        dv[j * d + off + c] += pij * g;
+                    }
+                    dp.push(dot);
+                }
+                // through the softmax, then to q_i and k_j (scaled)
+                let ds = math::softmax_bwd(prow, &dp);
+                for (j, &dsj) in ds.iter().enumerate() {
+                    let s = dsj * scale;
+                    for c in 0..hw {
+                        dq[i * d + off + c] += s * a.k[j * d + off + c];
+                        dk[j * d + off + c] += s * a.q[i * d + off + c];
+                    }
+                }
+            }
+        }
+
+        // projections q/k/v = h_in·W: weight grads + three input paths
+        let x = &lc.h_in;
+        let mut dx = vec![0.0f32; t_len * d];
+        for (slot, w, dy) in [(base, wq, &dq), (base + 1, wk, &dk), (base + 2, wv, &dv)] {
+            for t in 0..t_len {
+                math::outer_accumulate(
+                    &mut acc[slot],
+                    &x[t * d..(t + 1) * d],
+                    &dy[t * d..(t + 1) * d],
+                );
+            }
+            for t in 0..t_len {
+                let dxr = dense_bwd_input(w, &dy[t * d..(t + 1) * d]);
+                for (c, &g) in dxr.iter().enumerate() {
+                    dx[t * d + c] += g;
+                }
+            }
+        }
+        dx
+    }
+}
+
+impl HostModel for TransformerModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Transformer
+    }
+
+    fn quant_mode(&self) -> QuantMode {
+        self.p.quant_mode()
+    }
+
+    fn set_quant_mode(&mut self, mode: QuantMode) {
+        self.p.set_quant_mode(mode)
+    }
+
+    fn param_slots(&self) -> Vec<(String, Vec<usize>)> {
+        self.p.slots()
+    }
+
+    fn params(&self) -> Vec<(String, Tensor)> {
+        self.p.snapshot()
+    }
+
+    fn feature_specs(&self) -> Vec<FeatureSpec> {
+        vec![FeatureSpec { name: "src".into(), shape: vec![self.dims.seq_len], dtype: Dtype::I32 }]
+    }
+
+    fn validate_example(&self, features: &[HostValue]) -> Result<()> {
+        if features.len() != 1 {
+            bail!("expected 1 feature tensor, got {}", features.len());
+        }
+        self.check_tokens("src", features[0].as_i32()?)
+    }
+
+    fn score_one(&self, features: &[HostValue]) -> Result<Vec<f32>> {
+        self.validate_example(features)?;
+        self.logits_row(features[0].as_i32()?)
+    }
+
+    fn run_rows(&self, inputs: &[HostValue], n: usize) -> Result<Vec<Vec<f32>>> {
+        let t = self.dims.seq_len;
+        let src = inputs[0].as_i32()?;
+        let shape = inputs[0].shape();
+        if shape.len() != 2 || shape[1] != t || shape[0] < n {
+            bail!("transformer: bad stacked src shape {shape:?} for n={n} (T={t})");
+        }
+        (0..n).map(|i| self.logits_row(&src[i * t..(i + 1) * t])).collect()
+    }
+
+    fn out_width(&self) -> usize {
+        self.dims.seq_len * self.dims.vocab
+    }
+
+    fn backward(&self, batch: &[HostValue]) -> Result<ShardGrad> {
+        if batch.len() != 2 {
+            bail!("transformer batch is [src, tgt], got {} tensors", batch.len());
+        }
+        let src = batch[0].as_i32().context("transformer batch/src")?;
+        let tgt = batch[1].as_i32().context("transformer batch/tgt")?;
+        let (s_shape, t_shape) = (batch[0].shape(), batch[1].shape());
+        if s_shape.len() != 2 || t_shape != s_shape {
+            bail!("transformer batch shapes src {s_shape:?} vs tgt {t_shape:?}");
+        }
+        let (n, t_len) = (s_shape[0], s_shape[1]);
+        if t_len == 0 || t_len > self.dims.seq_len {
+            bail!("sequence length {t_len} outside 1..={}", self.dims.seq_len);
+        }
+
+        let slots = self.param_slots();
+        let mut acc: Vec<Vec<f64>> = slots
+            .iter()
+            .map(|(_, shape)| vec![0.0f64; shape.iter().product()])
+            .collect();
+        let mut loss_sum = 0.0f64;
+        for i in 0..n {
+            let s_row = &src[i * t_len..(i + 1) * t_len];
+            let t_row = &tgt[i * t_len..(i + 1) * t_len];
+            self.check_tokens("src", s_row).with_context(|| format!("row {i}"))?;
+            self.check_tokens("tgt", t_row).with_context(|| format!("row {i}"))?;
+            loss_sum += self.backward_example(s_row, t_row, &mut acc);
+        }
+
+        let grads = acc
+            .into_iter()
+            .zip(slots)
+            .map(|(a, (_, shape))| Tensor::new(shape, a.into_iter().map(|v| v as f32).collect()))
+            .collect();
+        Ok(ShardGrad { loss_sum, n_examples: n, grads })
+    }
+
+    fn sgd_step(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()> {
+        self.p.sgd_step(mean_grads, lr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_translation::{TranslationCfg, TranslationDataset};
+    use crate::models::gradcheck::grad_check;
+    use crate::util::rng::{Pcg32, Rng};
+
+    fn tiny_dims() -> TransformerDims {
+        TransformerDims { vocab: 9, seq_len: 4, d_model: 8, n_heads: 2, d_ff: 6, n_layers: 1 }
+    }
+
+    fn token_batch(
+        rng: &mut Pcg32,
+        b: usize,
+        t: usize,
+        vocab: usize,
+        pad_one: bool,
+    ) -> Vec<HostValue> {
+        let mut src = Vec::with_capacity(b * t);
+        let mut tgt = Vec::with_capacity(b * t);
+        for i in 0..b * t {
+            src.push(rng.next_below(vocab as u64) as i32);
+            // one masked target position exercises the PAD path
+            tgt.push(if pad_one && i == 1 {
+                PAD
+            } else {
+                1 + rng.next_below(vocab as u64 - 1) as i32
+            });
+        }
+        vec![HostValue::i32(vec![b, t], src), HostValue::i32(vec![b, t], tgt)]
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut m = TransformerModel::new(&tiny_dims(), 4);
+        let mut rng = Pcg32::new(2, 7);
+        let batch = token_batch(&mut rng, 3, 4, 9, true);
+        grad_check(&mut m, &batch);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_two_layers() {
+        let dims = TransformerDims {
+            vocab: 7,
+            seq_len: 3,
+            d_model: 4,
+            n_heads: 1,
+            d_ff: 5,
+            n_layers: 2,
+        };
+        let mut m = TransformerModel::new(&dims, 9);
+        let mut rng = Pcg32::new(3, 1);
+        let batch = token_batch(&mut rng, 2, 3, 7, false);
+        grad_check(&mut m, &batch);
+    }
+
+    #[test]
+    fn backward_is_bitwise_deterministic_and_pure() {
+        let m = TransformerModel::new(&tiny_dims(), 1);
+        let mut rng = Pcg32::new(4, 4);
+        let batch = token_batch(&mut rng, 3, 4, 9, false);
+        let p0 = m.params();
+        let a = m.backward(&batch).unwrap();
+        let b = m.backward(&batch).unwrap();
+        assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits());
+        for (ga, gb) in a.grads.iter().zip(b.grads.iter()) {
+            for (x, y) in ga.data().iter().zip(gb.data().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        for ((_, x), (_, y)) in p0.iter().zip(m.params().iter()) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn shard_sums_concatenate_to_the_full_batch() {
+        let m = TransformerModel::new(&tiny_dims(), 6);
+        let mut rng = Pcg32::new(5, 5);
+        let full = token_batch(&mut rng, 4, 4, 9, false);
+        let src = full[0].as_i32().unwrap();
+        let tgt = full[1].as_i32().unwrap();
+        let half = |lo: usize, hi: usize| -> Vec<HostValue> {
+            vec![
+                HostValue::i32(vec![hi - lo, 4], src[lo * 4..hi * 4].to_vec()),
+                HostValue::i32(vec![hi - lo, 4], tgt[lo * 4..hi * 4].to_vec()),
+            ]
+        };
+        let whole = m.backward(&full).unwrap();
+        let a = m.backward(&half(0, 2)).unwrap();
+        let b = m.backward(&half(2, 4)).unwrap();
+        assert!((whole.loss_sum - (a.loss_sum + b.loss_sum)).abs() < 1e-6);
+        for (w, (ga, gb)) in whole.grads.iter().zip(a.grads.iter().zip(b.grads.iter())) {
+            for ((&wv, &av), &bv) in w.data().iter().zip(ga.data()).zip(gb.data()) {
+                assert!(
+                    (wv - (av + bv)).abs() <= 1e-5 * wv.abs().max(1.0),
+                    "{wv} vs {av}+{bv}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loss_decreases_on_synth_translation() {
+        // Overfit a fixed batch of the transduction task: full-batch SGD
+        // must descend. (Convergence to high BLEU takes far longer than a
+        // unit test; the dist/bin demos run the real schedule.)
+        let cfg = TranslationCfg {
+            vocab: 16,
+            seq_len: 8,
+            n_train: 16,
+            n_test: 4,
+            seed: 3,
+            ..Default::default()
+        };
+        let data = TranslationDataset::generate(cfg);
+        let t = data.cfg.seq_len;
+        let b = data.n_train();
+        let mut src = Vec::with_capacity(b * t);
+        let mut tgt = Vec::with_capacity(b * t);
+        for i in 0..b {
+            let (s, g) = data.train_row(i);
+            src.extend_from_slice(s);
+            tgt.extend_from_slice(g);
+        }
+        let batch = vec![HostValue::i32(vec![b, t], src), HostValue::i32(vec![b, t], tgt)];
+
+        let dims = TransformerDims {
+            vocab: 16,
+            seq_len: 8,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            n_layers: 1,
+        };
+        let mut m = TransformerModel::new(&dims, 11);
+        let mut losses = Vec::new();
+        for _ in 0..120 {
+            let sg = m.backward(&batch).unwrap();
+            let inv = 1.0 / sg.n_examples as f64;
+            let mean: Vec<Tensor> =
+                sg.grads.iter().map(|g| g.map(|v| (v as f64 * inv) as f32)).collect();
+            m.sgd_step(&mean, 0.2).unwrap();
+            losses.push(sg.loss_sum * inv);
+        }
+        assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        let first = losses[0];
+        let last = *losses.last().unwrap();
+        assert!(last < first - 0.05, "loss should fall: {first:.4} → {last:.4}");
+    }
+
+    #[test]
+    fn batched_rows_match_single_scores_bitwise() {
+        let m = TransformerModel::new(&tiny_dims(), 8);
+        assert_eq!(m.out_width(), 4 * 9);
+        let rows_src = vec![1, 2, 3, 4, 5, 6, 7, 8, 0, 0, 0, 0]; // last row = padding
+        let rows = m.run_rows(&[HostValue::i32(vec![3, 4], rows_src.clone())], 2).unwrap();
+        for i in 0..2 {
+            let single = m
+                .score_one(&[HostValue::i32(vec![4], rows_src[i * 4..(i + 1) * 4].to_vec())])
+                .unwrap();
+            assert_eq!(rows[i], single, "row {i}");
+        }
+    }
+
+    #[test]
+    fn translate_row_is_argmax_of_logits() {
+        let m = TransformerModel::new(&tiny_dims(), 8);
+        let src = vec![3, 4, 5, 6];
+        let logits = m.logits_row(&src).unwrap();
+        let toks = m.translate_row(&src).unwrap();
+        assert_eq!(toks.len(), 4);
+        for (t, &tok) in toks.iter().enumerate() {
+            let row = &logits[t * 9..(t + 1) * 9];
+            assert!(row.iter().all(|&v| v <= row[tok as usize]));
+        }
+    }
+
+    #[test]
+    fn malformed_inputs_are_rejected() {
+        let m = TransformerModel::new(&tiny_dims(), 1);
+        // token out of range
+        assert!(m.score_one(&[HostValue::i32(vec![4], vec![1, 2, 3, 99])]).is_err());
+        assert!(m.score_one(&[HostValue::i32(vec![4], vec![1, -1, 3, 4])]).is_err());
+        // too long
+        assert!(m.score_one(&[HostValue::i32(vec![5], vec![1; 5])]).is_err());
+        // batch shape mismatch
+        let bad = vec![
+            HostValue::i32(vec![2, 4], vec![1; 8]),
+            HostValue::i32(vec![2, 3], vec![1; 6]),
+        ];
+        assert!(m.backward(&bad).is_err());
+        // tgt token out of range
+        let bad = vec![
+            HostValue::i32(vec![1, 4], vec![1, 2, 3, 4]),
+            HostValue::i32(vec![1, 4], vec![1, 2, 3, 99]),
+        ];
+        assert!(m.backward(&bad).is_err());
+    }
+
+    #[test]
+    fn params_roundtrip_through_slots_including_heads_meta() {
+        let dims = TransformerDims { n_heads: 4, d_model: 8, ..tiny_dims() };
+        let t = TransformerModel::new(&dims, 6);
+        let slots: Vec<(String, HostValue)> =
+            t.params().into_iter().map(|(n, p)| (n, HostValue::F32(p))).collect();
+        let t2 = TransformerModel::from_slots(&slots).unwrap();
+        assert_eq!(t2.dims().n_heads, 4);
+        assert_eq!(t2.dims().n_layers, t.dims().n_layers);
+        for ((na, a), (nb, b)) in t.params().iter().zip(t2.params().iter()) {
+            assert_eq!(na, nb);
+            assert_eq!(a, b);
+        }
+        // same weights ⇒ bitwise-identical forward
+        let src = vec![1, 2, 3, 4];
+        assert_eq!(t.logits_row(&src).unwrap(), t2.logits_row(&src).unwrap());
+    }
+}

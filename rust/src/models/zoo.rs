@@ -1,0 +1,317 @@
+//! The runnable **workload zoo**: for each host model family, a replica
+//! factory, a deterministic batch provider over its synthetic dataset,
+//! and an evaluator — everything the train bins need, behind one name.
+//!
+//! `bin/train_dist` and `bin/train_host` dispatch through a [`Workload`]
+//! instead of per-model match arms: replicas come out as
+//! `Box<dyn HostModel>` (which the blanket
+//! [`GradStep`](crate::coordinator::grad_step::GradStep) impl makes
+//! drivable by [`crate::dist::train`] directly), batches are pure
+//! functions of `(step, indices)` as the dist determinism contract
+//! requires, and evaluation reports each family's paper metric
+//! (accuracy / HR@10+NDCG@10 / BLEU+token accuracy).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::data::synth_cf::{CfCfg, CfDataset};
+use crate::data::synth_translation::{TranslationCfg, TranslationDataset};
+use crate::data::synth_vector;
+use crate::metrics::{bleu, ranking};
+use crate::runtime::HostValue;
+use crate::tensor::Tensor;
+
+use super::{
+    HostModel, MlpModel, ModelKind, NcfDims, NcfModel, QuantMode, TransformerDims,
+    TransformerModel,
+};
+
+type Builder = Box<dyn Fn() -> Result<Box<dyn HostModel>> + Send + Sync>;
+type Provider = Box<dyn Fn(usize, &[usize]) -> Result<Vec<HostValue>> + Send + Sync>;
+type Evaluator = Box<dyn Fn(&dyn HostModel) -> Result<Vec<(String, f64)>> + Send + Sync>;
+
+/// One trainable host workload: model family + synthetic dataset + eval.
+pub struct Workload {
+    pub name: String,
+    pub kind: ModelKind,
+    /// Training-set size (feed into `DistOptions::n_examples`).
+    pub n_examples: usize,
+    quant: QuantMode,
+    builder: Builder,
+    provider: Provider,
+    evaluator: Evaluator,
+}
+
+impl Workload {
+    /// Build one replica (identical on every call — the dist replica
+    /// factory contract), with the workload's [`QuantMode`] applied.
+    pub fn replica(&self) -> Result<Box<dyn HostModel>> {
+        let mut m = (self.builder)()?;
+        if self.quant != QuantMode::None {
+            m.set_quant_mode(self.quant);
+        }
+        Ok(m)
+    }
+
+    /// Materialize the batch tensors for one chunk's example indices
+    /// (pure function of its arguments).
+    pub fn batch(&self, step: usize, idx: &[usize]) -> Result<Vec<HostValue>> {
+        (self.provider)(step, idx)
+    }
+
+    pub fn quant(&self) -> QuantMode {
+        self.quant
+    }
+
+    /// Evaluate a model on the workload's held-out split, returning
+    /// `(metric name, value)` pairs.
+    pub fn eval(&self, model: &dyn HostModel) -> Result<Vec<(String, f64)>> {
+        (self.evaluator)(model)
+    }
+
+    /// Evaluate final parameters (e.g. `DistReport::final_params`) by
+    /// rebuilding the model from its slots.
+    pub fn eval_params(&self, params: &[(String, Tensor)]) -> Result<Vec<(String, f64)>> {
+        let slots: Vec<(String, HostValue)> =
+            params.iter().map(|(n, t)| (n.clone(), HostValue::F32(t.clone()))).collect();
+        let mut model = super::from_slots(self.kind, &slots)?;
+        if self.quant != QuantMode::None {
+            model.set_quant_mode(self.quant);
+        }
+        self.eval(model.as_ref())
+    }
+}
+
+/// The zoo's workload names (CLI `--model` values).
+pub fn names() -> &'static [&'static str] {
+    &["mlp", "ncf", "transformer"]
+}
+
+/// Build a named workload. `seed` fixes both the synthetic dataset and
+/// the replica initialization; `quant` applies to every replica built.
+pub fn workload(model: &str, seed: u64, quant: QuantMode) -> Result<Workload> {
+    match model {
+        "mlp" => Ok(mlp_workload(seed, quant)),
+        "ncf" => Ok(ncf_workload(seed, quant)),
+        "transformer" => Ok(transformer_workload(seed, quant)),
+        other => bail!("unknown host model '{other}' (mlp | ncf | transformer)"),
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (j, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Separable vector task (`data::synth_vector`) → MLP classifier;
+/// eval = top-1 accuracy on a held-out draw.
+fn mlp_workload(seed: u64, quant: QuantMode) -> Workload {
+    let (n, d, classes) = (4096usize, 32usize, 10usize);
+    let dims = vec![d, 64, classes];
+    let (x, y) = synth_vector::dataset(n, d, classes, seed);
+    let (ex, ey) = synth_vector::dataset(512, d, classes, seed ^ 0xE7A1);
+    Workload {
+        name: "mlp".into(),
+        kind: ModelKind::Mlp,
+        n_examples: n,
+        quant,
+        builder: Box::new(move || Ok(Box::new(MlpModel::new(&dims, seed)) as Box<dyn HostModel>)),
+        provider: Box::new(move |_step: usize, idx: &[usize]| {
+            let xb = x.gather_rows(idx);
+            let yb: Vec<i32> = idx.iter().map(|&i| y[i]).collect();
+            let rows = idx.len();
+            Ok(vec![HostValue::F32(xb), HostValue::i32(vec![rows], yb)])
+        }),
+        evaluator: Box::new(move |m: &dyn HostModel| {
+            let rows = ex.shape()[0];
+            let scored = m.run_rows(&[HostValue::F32(ex.clone())], rows)?;
+            let correct = scored
+                .iter()
+                .zip(ey.iter())
+                .filter(|(r, &lab)| argmax(r) == lab as usize)
+                .count();
+            Ok(vec![("accuracy".to_string(), correct as f64 / rows as f64)])
+        }),
+    }
+}
+
+/// Synthetic implicit feedback (`data::synth_cf`) → NCF; eval = the
+/// paper's 1-positive-vs-N-negatives HR@10 / NDCG@10.
+fn ncf_workload(seed: u64, quant: QuantMode) -> Workload {
+    let cfg = CfCfg { n_users: 128, n_items: 256, seed, ..CfCfg::default() };
+    let data = Arc::new(CfDataset::generate(cfg.clone()));
+    let dims = NcfDims {
+        n_users: cfg.n_users,
+        n_items: cfg.n_items,
+        factors: 8,
+        mlp_dim: 16,
+        mlp_layers: vec![32, 16, 8],
+    };
+    let n = data.n_train();
+    let eval_data = data.clone();
+    Workload {
+        name: "ncf".into(),
+        kind: ModelKind::Ncf,
+        n_examples: n,
+        quant,
+        builder: Box::new(move || Ok(Box::new(NcfModel::new(&dims, seed)) as Box<dyn HostModel>)),
+        provider: Box::new(move |_step: usize, idx: &[usize]| {
+            let rows = idx.len();
+            let mut u = Vec::with_capacity(rows);
+            let mut it = Vec::with_capacity(rows);
+            let mut lb = Vec::with_capacity(rows);
+            for &i in idx {
+                let ex = &data.train[i];
+                u.push(ex.user);
+                it.push(ex.item);
+                lb.push(ex.label);
+            }
+            Ok(vec![
+                HostValue::i32(vec![rows], u),
+                HostValue::i32(vec![rows], it),
+                HostValue::f32(vec![rows], lb),
+            ])
+        }),
+        evaluator: Box::new(move |m: &dyn HostModel| {
+            let mut scores = Vec::with_capacity(eval_data.eval.len());
+            for (u, (pos, negs)) in eval_data.eval.iter().enumerate() {
+                let mut items = Vec::with_capacity(1 + negs.len());
+                items.push(*pos);
+                items.extend_from_slice(negs);
+                let cnt = items.len();
+                let users = vec![u as i32; cnt];
+                let rows = m.run_rows(
+                    &[HostValue::i32(vec![cnt], users), HostValue::i32(vec![cnt], items)],
+                    cnt,
+                )?;
+                scores.push(rows.into_iter().map(|r| r[0]).collect::<Vec<f32>>());
+            }
+            Ok(vec![
+                ("hr@10".to_string(), ranking::hit_ratio_at(&scores, 10)),
+                ("ndcg@10".to_string(), ranking::ndcg_at(&scores, 10)),
+            ])
+        }),
+    }
+}
+
+/// Sequence transduction (`data::synth_translation`) → host Transformer;
+/// eval = corpus BLEU of greedy per-position decodes + token accuracy on
+/// the test split.
+fn transformer_workload(seed: u64, quant: QuantMode) -> Workload {
+    let cfg = TranslationCfg {
+        vocab: 32,
+        seq_len: 8,
+        n_train: 2048,
+        n_test: 256,
+        seed,
+        ..Default::default()
+    };
+    let data = Arc::new(TranslationDataset::generate(cfg));
+    let dims = TransformerDims {
+        vocab: 32,
+        seq_len: 8,
+        d_model: 32,
+        n_heads: 4,
+        d_ff: 64,
+        n_layers: 1,
+    };
+    let n = data.n_train();
+    let eval_data = data.clone();
+    Workload {
+        name: "transformer".into(),
+        kind: ModelKind::Transformer,
+        n_examples: n,
+        quant,
+        builder: Box::new(move || {
+            Ok(Box::new(TransformerModel::new(&dims, seed)) as Box<dyn HostModel>)
+        }),
+        provider: Box::new(move |_step: usize, idx: &[usize]| {
+            let t = data.cfg.seq_len;
+            let rows = idx.len();
+            let mut src = Vec::with_capacity(rows * t);
+            let mut tgt = Vec::with_capacity(rows * t);
+            for &i in idx {
+                let (s, g) = data.train_row(i);
+                src.extend_from_slice(s);
+                tgt.extend_from_slice(g);
+            }
+            Ok(vec![HostValue::i32(vec![rows, t], src), HostValue::i32(vec![rows, t], tgt)])
+        }),
+        evaluator: Box::new(move |m: &dyn HostModel| {
+            let t = eval_data.cfg.seq_len;
+            let v = eval_data.cfg.vocab;
+            let n_eval = eval_data.n_test().min(128);
+            let mut pairs = Vec::with_capacity(n_eval);
+            let (mut correct, mut total) = (0usize, 0usize);
+            for i in 0..n_eval {
+                let (s, g) = eval_data.test_row(i);
+                let logits = m.score_one(&[HostValue::i32(vec![t], s.to_vec())])?;
+                let hyp: Vec<i32> =
+                    logits.chunks_exact(v).map(|row| argmax(row) as i32).collect();
+                total += t;
+                correct += hyp.iter().zip(g.iter()).filter(|(a, b)| a == b).count();
+                pairs.push((hyp, g.to_vec()));
+            }
+            Ok(vec![
+                ("bleu".to_string(), bleu::corpus_bleu(&pairs, None)),
+                ("token_acc".to_string(), correct as f64 / total.max(1) as f64),
+            ])
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_workload_is_an_error() {
+        assert!(workload("resnet", 1, QuantMode::None).is_err());
+    }
+
+    #[test]
+    fn every_zoo_workload_builds_batches_and_replicas() {
+        for &name in names() {
+            let wl = workload(name, 7, QuantMode::None).unwrap();
+            assert_eq!(wl.name, name);
+            assert!(wl.n_examples > 0);
+            let replica = wl.replica().unwrap();
+            assert_eq!(replica.kind().name(), name);
+            // a replica built twice is bitwise identical (dist contract)
+            let again = wl.replica().unwrap();
+            for ((na, a), (nb, b)) in replica.params().iter().zip(again.params().iter()) {
+                assert_eq!(na, nb);
+                assert_eq!(a, b);
+            }
+            // a batch feeds the replica's backward
+            let idx: Vec<usize> = (0..8).collect();
+            let batch = wl.batch(0, &idx).unwrap();
+            let sg = replica.backward(&batch).unwrap();
+            assert_eq!(sg.n_examples, 8);
+            assert!(sg.loss_sum.is_finite());
+        }
+    }
+
+    #[test]
+    fn quant_workload_applies_the_mode_to_replicas() {
+        let wl = workload("mlp", 3, QuantMode::parse("s2fp8").unwrap()).unwrap();
+        let replica = wl.replica().unwrap();
+        assert_eq!(replica.quant_mode().name(), "s2fp8");
+    }
+
+    #[test]
+    fn eval_params_reports_each_familys_metrics() {
+        // keep it cheap: evaluate the untrained mlp replica
+        let wl = workload("mlp", 5, QuantMode::None).unwrap();
+        let replica = wl.replica().unwrap();
+        let metrics = wl.eval_params(&replica.params()).unwrap();
+        assert_eq!(metrics[0].0, "accuracy");
+        assert!((0.0..=1.0).contains(&metrics[0].1));
+    }
+}

@@ -5,9 +5,12 @@
 //! Sync` *factory*: each worker calls [`Backend::make_runner`] on its own
 //! thread and drives the (thread-local) [`BatchRunner`] it gets back.
 //!
-//! * [`HostBackend`] — the pure-rust [`HostModel`](super::model::HostModel)
-//!   forward pass; no artifacts or PJRT needed, bitwise-deterministic rows
-//!   (the integration tests' reference).
+//! * [`HostBackend`] — a thin forward-only adapter over the model zoo
+//!   ([`HostModel`](crate::models::HostModel)): the *same structs* the
+//!   trainer updates serve requests, so no second forward implementation
+//!   exists and batched serving is bitwise identical to the training-path
+//!   forward (the integration tests' reference). No artifacts or PJRT
+//!   needed.
 //! * [`RuntimeBackend`] — an AOT eval executable through
 //!   [`runtime`](crate::runtime): one `Runtime` (PJRT client) + compile per
 //!   worker, param/state inputs bound once from the registry's
@@ -19,20 +22,16 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{Artifact, Dtype, Executable, HostValue, Role, Runtime};
+use crate::models::HostModel;
+use crate::runtime::{Artifact, Executable, HostValue, Role, Runtime};
 
 use super::batcher::split_rows;
-use super::model::HostModel;
 use super::registry::WeightStore;
 
 /// One per-example input slot of a served model (leading batch dim
-/// stripped from the executable's spec).
-#[derive(Debug, Clone, PartialEq)]
-pub struct FeatureSpec {
-    pub name: String,
-    pub shape: Vec<usize>,
-    pub dtype: Dtype,
-}
+/// stripped from the executable's spec). Defined by the model zoo —
+/// re-exported here because it is the serving request contract.
+pub use crate::models::FeatureSpec;
 
 /// Shape/dtype/arity validation of one example against the specs — the
 /// request-path gate that turns malformed payloads into submit-time errors
@@ -93,26 +92,28 @@ pub trait Backend: Send + Sync {
 // host backend
 // ---------------------------------------------------------------------------
 
-/// Serve a [`HostModel`] on plain CPU rust — no PJRT required.
+/// Serve any zoo [`HostModel`] on plain CPU rust — no PJRT required.
+/// Forward-only adapter: the serving engine never sees (or needs) the
+/// model's backward/SGD surface.
 pub struct HostBackend {
-    model: Arc<HostModel>,
+    model: Arc<dyn HostModel>,
     batch_dim: usize,
     specs: Vec<FeatureSpec>,
 }
 
 impl HostBackend {
-    pub fn new(model: Arc<HostModel>, batch_dim: usize) -> Self {
+    pub fn new(model: Arc<dyn HostModel>, batch_dim: usize) -> Self {
         let specs = model.feature_specs();
         HostBackend { model, batch_dim: batch_dim.max(1), specs }
     }
 
-    pub fn model(&self) -> &Arc<HostModel> {
+    pub fn model(&self) -> &Arc<dyn HostModel> {
         &self.model
     }
 }
 
 struct HostRunner {
-    model: Arc<HostModel>,
+    model: Arc<dyn HostModel>,
 }
 
 impl BatchRunner for HostRunner {
@@ -123,10 +124,7 @@ impl BatchRunner for HostRunner {
 
 impl Backend for HostBackend {
     fn name(&self) -> String {
-        match self.model.as_ref() {
-            HostModel::Mlp(_) => "host/mlp".into(),
-            HostModel::Ncf(_) => "host/ncf".into(),
-        }
+        format!("host/{}", self.model.kind().name())
     }
 
     fn batch_dim(&self) -> usize {
@@ -364,7 +362,8 @@ impl Backend for RuntimeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::model::{synth_mlp_slots, HostModel, ModelKind};
+    use crate::models::{self, synth_mlp_slots, ModelKind};
+    use crate::runtime::Dtype;
 
     #[test]
     fn check_features_gates_arity_dtype_and_shape() {
@@ -384,7 +383,8 @@ mod tests {
     #[test]
     fn host_backend_round_trip() {
         let store = WeightStore::from_slots(&synth_mlp_slots(&[6, 4, 2], 1));
-        let model = Arc::new(HostModel::from_store(ModelKind::Mlp, &store).unwrap());
+        let model: Arc<dyn HostModel> =
+            Arc::from(models::from_store(ModelKind::Mlp, &store).unwrap());
         let be = HostBackend::new(model.clone(), 8);
         assert_eq!(be.batch_dim(), 8);
         assert_eq!(be.name(), "host/mlp");

@@ -313,15 +313,16 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::{self, synth_ncf_slots, HostModel, ModelKind, NcfDims};
     use crate::serve::backend::HostBackend;
-    use crate::serve::model::{synth_ncf_slots, HostModel, ModelKind, NcfDims};
     use crate::serve::registry::WeightStore;
     use std::time::Duration;
 
-    fn ncf_engine(workers: usize, max_batch: usize) -> (Engine, Arc<HostModel>) {
+    fn ncf_engine(workers: usize, max_batch: usize) -> (Engine, Arc<dyn HostModel>) {
         let dims = NcfDims { n_users: 64, n_items: 128, ..NcfDims::default() };
         let store = WeightStore::from_slots(&synth_ncf_slots(&dims, 3));
-        let model = Arc::new(HostModel::from_store(ModelKind::Ncf, &store).unwrap());
+        let model: Arc<dyn HostModel> =
+            Arc::from(models::from_store(ModelKind::Ncf, &store).unwrap());
         let backend = Arc::new(HostBackend::new(model.clone(), max_batch));
         let cfg = ServeConfig {
             workers,

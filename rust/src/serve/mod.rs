@@ -14,8 +14,9 @@
 //!   requests or wait at most `max_wait`, stack examples and zero-pad to
 //!   the executable's fixed batch dimension, scatter result rows back per
 //!   request.
-//! * [`backend`] — execution strategies: [`backend::HostBackend`] (pure
-//!   rust NCF/MLP forward pass, bitwise-deterministic rows) and
+//! * [`backend`] — execution strategies: [`backend::HostBackend`] (a
+//!   forward-only adapter over the [`crate::models`] zoo — the same
+//!   structs training updates, bitwise-deterministic rows) and
 //!   [`backend::RuntimeBackend`] (AOT eval executables through PJRT; one
 //!   client per worker because `PjRtClient` is `Rc`-based).
 //! * [`engine`] — the worker pool: submit-time validation, graceful
@@ -29,16 +30,17 @@
 //!
 //! ```no_run
 //! use std::sync::Arc;
+//! use s2fp8::models::{self, HostModel, ModelKind};
 //! use s2fp8::serve::{
 //!     backend::HostBackend,
 //!     engine::{Engine, ServeConfig},
-//!     model::{HostModel, ModelKind},
 //!     registry::WeightStore,
 //! };
 //! use s2fp8::runtime::HostValue;
 //!
 //! let store = WeightStore::open("runs/ncf/final.s2ck").unwrap(); // stays compressed
-//! let model = Arc::new(HostModel::from_store(ModelKind::Ncf, &store).unwrap());
+//! let model: Arc<dyn HostModel> =
+//!     Arc::from(models::from_store(ModelKind::Ncf, &store).unwrap());
 //! let engine =
 //!     Engine::start(Arc::new(HostBackend::new(model, 32)), ServeConfig::default()).unwrap();
 //! let resp = engine
@@ -51,7 +53,6 @@ pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
-pub mod model;
 pub mod queue;
 pub mod registry;
 
@@ -59,6 +60,5 @@ pub use backend::{Backend, BatchRunner, FeatureSpec, HostBackend, RuntimeBackend
 pub use batcher::BatchPolicy;
 pub use engine::{Engine, ServeConfig};
 pub use metrics::ServeMetrics;
-pub use model::{HostModel, ModelKind};
 pub use queue::{Response, Ticket};
 pub use registry::{ModelRegistry, WeightStore};

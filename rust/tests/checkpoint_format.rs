@@ -12,7 +12,7 @@
 use s2fp8::coordinator::checkpoint::{self, deserialize, deserialize_raw, serialize};
 use s2fp8::formats::FormatKind;
 use s2fp8::runtime::HostValue;
-use s2fp8::serve::model::{synth_ncf_slots, NcfDims};
+use s2fp8::models::{synth_ncf_slots, NcfDims};
 
 /// v1 checkpoint written by the pre-codec layout (see the fixture's
 /// generator note in CHANGES.md): one s2fp8 entry with the identity

@@ -15,13 +15,15 @@
 //! counts — the CI matrix runs each value; counts that do not divide the
 //! chunk count are skipped.
 
-use s2fp8::coordinator::host_trainer::{HostMlpTrainer, HostNcfTrainer};
 use s2fp8::coordinator::trainer::LrSchedule;
 use s2fp8::data::synth_cf::{CfCfg, CfDataset};
+use s2fp8::data::synth_translation::{TranslationCfg, TranslationDataset};
 use s2fp8::data::synth_vector;
 use s2fp8::dist::{train, DistOptions, DistReport, WireFormat};
+use s2fp8::models::{
+    HostModel, MlpModel, NcfDims, NcfModel, QuantMode, TransformerDims, TransformerModel,
+};
 use s2fp8::runtime::HostValue;
-use s2fp8::serve::model::NcfDims;
 
 const CHUNKS: usize = 4;
 /// Per-step relative deviation allowed between S2FP8- and FP32-wire loss
@@ -78,7 +80,7 @@ fn run_mlp(workers: usize, wire: WireFormat) -> DistReport {
     opts.seed = 44;
     train(
         &opts,
-        |_rank| Ok(HostMlpTrainer::new(&[d, 32, classes], 7)),
+        |_rank| Ok(MlpModel::new(&[d, 32, classes], 7)),
         |_step, idx| {
             let xb = x.gather_rows(idx);
             let yb: Vec<i32> = idx.iter().map(|&i| y[i]).collect();
@@ -121,7 +123,7 @@ fn run_ncf(workers: usize, wire: WireFormat) -> DistReport {
     opts.seed = 9;
     train(
         &opts,
-        |_rank| Ok(HostNcfTrainer::new(&dims, 13)),
+        |_rank| Ok(NcfModel::new(&dims, 13)),
         |_step, idx| {
             let rows = idx.len();
             let mut u = Vec::with_capacity(rows);
@@ -240,6 +242,104 @@ fn s2fp8_wire_converges_within_bound_and_compresses_the_exchange() {
         "compression ratio {:?} below 3.5×",
         s2.comm.compression_ratio()
     );
+}
+
+// ---------------------------------------------------------------------------
+// Transformer fixture: synthetic translation task
+// ---------------------------------------------------------------------------
+
+fn run_transformer(workers: usize, wire: WireFormat, quant: QuantMode) -> DistReport {
+    let cfg = TranslationCfg {
+        vocab: 16,
+        seq_len: 4,
+        n_train: 256,
+        n_test: 16,
+        seed: 5,
+        ..Default::default()
+    };
+    let data = TranslationDataset::generate(cfg);
+    let dims = TransformerDims {
+        vocab: 16,
+        seq_len: 4,
+        d_model: 8,
+        n_heads: 2,
+        d_ff: 16,
+        n_layers: 1,
+    };
+
+    let mut opts = DistOptions::new(workers, wire);
+    opts.chunks = CHUNKS;
+    opts.global_batch = 16;
+    opts.n_examples = data.n_train();
+    opts.steps = 6;
+    opts.lr = LrSchedule::Constant(0.05);
+    opts.seed = 31;
+    train(
+        &opts,
+        |_rank| {
+            let mut m = TransformerModel::new(&dims, 3);
+            if quant != QuantMode::None {
+                m.set_quant_mode(quant);
+            }
+            Ok(m)
+        },
+        |_step, idx| {
+            let t = data.cfg.seq_len;
+            let rows = idx.len();
+            let mut src = Vec::with_capacity(rows * t);
+            let mut tgt = Vec::with_capacity(rows * t);
+            for &i in idx {
+                let (s, g) = data.train_row(i);
+                src.extend_from_slice(s);
+                tgt.extend_from_slice(g);
+            }
+            Ok(vec![
+                HostValue::i32(vec![rows, t], src),
+                HostValue::i32(vec![rows, t], tgt),
+            ])
+        },
+    )
+    .expect("transformer dist run")
+}
+
+#[test]
+fn transformer_fp32_wire_is_bitwise_equal_across_worker_counts() {
+    let base = run_transformer(1, WireFormat::Fp32, QuantMode::None);
+    let losses = base.curve.column("loss");
+    assert!(losses.iter().all(|l| l.is_finite()));
+    // per-position softmax CE over vocab 16 starts near ln 13
+    assert!(losses[0] > 1.5, "{losses:?}");
+    for w in worker_counts() {
+        if w == 1 {
+            continue;
+        }
+        let multi = run_transformer(w, WireFormat::Fp32, QuantMode::None);
+        assert_bitwise_equal(&base, &multi, &format!("transformer fp32 wire, {w} workers"));
+    }
+}
+
+#[test]
+fn transformer_s2fp8_wire_with_quantized_forward_is_bitwise_worker_invariant() {
+    // The acceptance run: S2FP8 on the gradient wire AND on the forward
+    // weights at once. Staging is a pure function of the master weights,
+    // so the lossy end-to-end pipeline stays bitwise identical between a
+    // 1-worker and any multi-worker run on the same chunk layout.
+    let quant = QuantMode::parse("s2fp8").unwrap();
+    let base = run_transformer(1, WireFormat::S2fp8, quant);
+    assert!(!base.diverged);
+    assert!(base.curve.column("loss").iter().all(|l| l.is_finite()));
+    for w in worker_counts() {
+        if w == 1 {
+            continue;
+        }
+        let multi = run_transformer(w, WireFormat::S2fp8, quant);
+        assert_bitwise_equal(
+            &base,
+            &multi,
+            &format!("transformer s2fp8 wire + s2fp8 quant, {w} workers"),
+        );
+        assert!(multi.comm.wire_bytes > 0);
+    }
 }
 
 #[test]

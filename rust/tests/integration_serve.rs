@@ -7,11 +7,14 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use s2fp8::coordinator::checkpoint;
+use s2fp8::models::{
+    self, synth_mlp_slots, synth_ncf_slots, synth_transformer_slots, HostModel, ModelKind,
+    NcfDims, TransformerDims,
+};
 use s2fp8::runtime::HostValue;
 use s2fp8::serve::{
     backend::HostBackend,
     engine::{Engine, ServeConfig},
-    model::{synth_ncf_slots, HostModel, ModelKind, NcfDims},
     registry::WeightStore,
     BatchPolicy,
 };
@@ -28,8 +31,13 @@ fn compressed_store(name: &str) -> Arc<WeightStore> {
     Arc::new(WeightStore::open(&path).unwrap())
 }
 
-fn engine(store: &Arc<WeightStore>, workers: usize, max_batch: usize) -> (Engine, Arc<HostModel>) {
-    let model = Arc::new(HostModel::from_store(ModelKind::Ncf, store).unwrap());
+fn engine(
+    store: &Arc<WeightStore>,
+    workers: usize,
+    max_batch: usize,
+) -> (Engine, Arc<dyn HostModel>) {
+    let model: Arc<dyn HostModel> =
+        Arc::from(models::from_store(ModelKind::Ncf, store).unwrap());
     let backend = Arc::new(HostBackend::new(model.clone(), max_batch));
     let cfg = ServeConfig {
         workers,
@@ -96,9 +104,10 @@ fn compressed_and_raw_checkpoints_serve_close_scores() {
     let base = std::env::temp_dir().join("s2fp8_serve_it");
     let raw_path = base.join("raw.s2ck");
     checkpoint::save(&raw_path, &slots, false).unwrap();
-    let raw = HostModel::from_store(ModelKind::Ncf, &WeightStore::open(&raw_path).unwrap()).unwrap();
+    let raw =
+        models::from_store(ModelKind::Ncf, &WeightStore::open(&raw_path).unwrap()).unwrap();
     let comp_store = compressed_store("lossy");
-    let comp = HostModel::from_store(ModelKind::Ncf, &comp_store).unwrap();
+    let comp = models::from_store(ModelKind::Ncf, &comp_store).unwrap();
 
     let mut rng = Pcg32::new(1, 1);
     let mut total = 0.0f64;
@@ -147,6 +156,119 @@ fn malformed_requests_never_reach_workers() {
     assert_eq!(engine.metrics().failed.load(std::sync::atomic::Ordering::Relaxed), 0);
     // …and the engine still serves
     assert!(engine.predict(pair(5, 5)).is_ok());
+}
+
+/// One random serving example per zoo model kind.
+fn zoo_example(kind: ModelKind, rng: &mut Pcg32) -> Vec<HostValue> {
+    match kind {
+        ModelKind::Mlp => {
+            vec![HostValue::f32(vec![12], (0..12).map(|_| rng.next_normal()).collect())]
+        }
+        ModelKind::Ncf => vec![
+            HostValue::scalar_i32(rng.next_below(32) as i32),
+            HostValue::scalar_i32(rng.next_below(48) as i32),
+        ],
+        ModelKind::Transformer => vec![HostValue::i32(
+            vec![6],
+            (0..6).map(|_| 3 + rng.next_below(17) as i32).collect(),
+        )],
+    }
+}
+
+#[test]
+fn zoo_serve_forward_is_bitwise_identical_to_training_forward() {
+    // For every zoo model: the registry-served forward (WeightStore →
+    // HostBackend → engine, concurrent micro-batching) must be bitwise
+    // identical to the training-path forward (the trainable object built
+    // from the same slots) — there is only one forward implementation.
+    let zoo: Vec<(ModelKind, Vec<(String, HostValue)>)> = vec![
+        (ModelKind::Mlp, synth_mlp_slots(&[12, 8, 4], 21)),
+        (
+            ModelKind::Ncf,
+            synth_ncf_slots(&NcfDims { n_users: 32, n_items: 48, ..NcfDims::default() }, 21),
+        ),
+        (
+            ModelKind::Transformer,
+            synth_transformer_slots(
+                &TransformerDims {
+                    vocab: 20,
+                    seq_len: 6,
+                    d_model: 8,
+                    n_heads: 2,
+                    d_ff: 16,
+                    n_layers: 1,
+                },
+                21,
+            ),
+        ),
+    ];
+    for (kind, slots) in zoo {
+        // the training-path object (full backward/SGD surface)
+        let trainer = models::from_slots(kind, &slots).unwrap();
+        // the serving path over the same raw weights
+        let store = Arc::new(WeightStore::from_slots(&slots));
+        let served: Arc<dyn HostModel> = Arc::from(models::from_store(kind, &store).unwrap());
+        let backend = Arc::new(HostBackend::new(served, 8));
+        let cfg = ServeConfig {
+            workers: 2,
+            queue_capacity: 256,
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+        };
+        let engine = Engine::start(backend, cfg).unwrap();
+
+        let mut rng = Pcg32::new(77, kind.name().len() as u64);
+        for i in 0..40 {
+            let features = zoo_example(kind, &mut rng);
+            let got = engine.predict(features.clone()).unwrap().output;
+            let want = trainer.score_one(&features).unwrap();
+            assert_eq!(got.len(), want.len(), "{} example {i}", kind.name());
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{} example {i}", kind.name());
+            }
+        }
+        // running a training compute phase must not perturb the weights
+        // the comparison depends on
+        let before = trainer.params();
+        match kind {
+            ModelKind::Mlp => {
+                let batch = vec![
+                    HostValue::f32(vec![2, 12], vec![0.1; 24]),
+                    HostValue::i32(vec![2], vec![0, 1]),
+                ];
+                trainer.backward(&batch).unwrap();
+            }
+            ModelKind::Ncf => {
+                let batch = vec![
+                    HostValue::i32(vec![2], vec![0, 1]),
+                    HostValue::i32(vec![2], vec![0, 1]),
+                    HostValue::f32(vec![2], vec![1.0, 0.0]),
+                ];
+                trainer.backward(&batch).unwrap();
+            }
+            ModelKind::Transformer => {
+                let batch = vec![
+                    HostValue::i32(vec![2, 6], vec![3; 12]),
+                    HostValue::i32(vec![2, 6], vec![4; 12]),
+                ];
+                trainer.backward(&batch).unwrap();
+            }
+        }
+        for ((_, a), (_, b)) in before.iter().zip(trainer.params().iter()) {
+            assert_eq!(a, b, "{}: backward must be pure", kind.name());
+        }
+        engine.shutdown();
+    }
+}
+
+#[test]
+fn from_store_leaves_the_shared_decode_cache_empty() {
+    // Host models own their decoded weights; the store's shared cache
+    // stays cold, so the packed bytes remain the only resident copy.
+    let store = compressed_store("cache_cold");
+    assert!(store.compressed_entries() > 0);
+    let model = models::from_store(ModelKind::Ncf, &store).unwrap();
+    assert_eq!(model.out_width(), 1);
+    assert_eq!(store.decoded_tensors(), 0);
 }
 
 #[test]
