@@ -17,6 +17,14 @@
 //!
 //! Writes `curve.csv` and `dist.json` (loss curve, wire bytes,
 //! compression ratio, eval metrics) under `--out`.
+//!
+//! **Crash safety:** `--ckpt-every N` checkpoints the full train state
+//! (params, step, data cursor, RNG state) atomically every N steps;
+//! `--resume PATH` continues a killed run **bitwise identically** to the
+//! uninterrupted one — even at a different `--workers` count, since the
+//! worker count is arithmetically invisible (the geometry that *does*
+//! matter — batch, chunks, dataset, seed, lr, quant, wire — is validated
+//! against the checkpoint and mismatches are refused).
 
 use anyhow::{Context, Result};
 
@@ -52,6 +60,9 @@ fn run(args: &[String]) -> Result<()> {
         .opt("lr", "0.08", "SGD learning rate")
         .opt("seed", "2020", "init + data seed")
         .opt("log-every", "20", "console cadence (steps)")
+        .opt("ckpt-every", "0", "checkpoint the full train state every N steps (0 = off)")
+        .opt_optional("ckpt", "train-state path (default: <out dir>/state.s2ts)")
+        .opt_optional("resume", "resume bitwise from a train-state file (see --ckpt-every)")
         .opt("out", "runs/train_dist", "output directory");
     let p = match spec.parse(args) {
         Err(ArgError::HelpRequested) => {
@@ -78,8 +89,40 @@ fn run(args: &[String]) -> Result<()> {
     opts.log_every = p.usize("log-every");
     opts.n_examples = wl.n_examples;
 
-    let report =
-        s2fp8::dist::train(&opts, |_rank| wl.replica(), |step, idx| wl.batch(step, idx))?;
+    let out = std::path::PathBuf::from(p.str("out")).join(format!(
+        "{model}_w{}_{}_{}",
+        opts.workers,
+        wire.name(),
+        quant.name()
+    ));
+    let ckpt_path = p
+        .get("ckpt")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| out.join("state.s2ts"));
+    // the worker count may change across a resume (it is arithmetically
+    // invisible); everything else that shapes the step arithmetic must
+    // match — geometry via the state's own fields (validated by the
+    // coordinator), the rest via these tags
+    let tags = [
+        ("model", model.to_string()),
+        ("quant", quant.name().to_string()),
+        ("wire", wire.name().to_string()),
+        ("lr", p.str("lr").to_string()),
+    ];
+    let (policy, state) =
+        s2fp8::dist::cli_ckpt_setup(p.usize("ckpt-every"), ckpt_path, &tags, p.get("resume"))?;
+    if let Some(s) = &state {
+        println!("resuming from {} at step {}", p.str("resume"), s.step);
+    }
+
+    let report = s2fp8::dist::train_resumable(
+        &opts,
+        |_rank| wl.replica(),
+        |step, idx| wl.batch(step, idx),
+        policy.as_ref(),
+        state.as_ref(),
+        None,
+    )?;
 
     let losses = report.curve.column("loss");
     println!(
@@ -107,12 +150,6 @@ fn run(args: &[String]) -> Result<()> {
         println!("eval {name}: {value:.4}");
     }
 
-    let out = std::path::PathBuf::from(p.str("out")).join(format!(
-        "{model}_w{}_{}_{}",
-        opts.workers,
-        wire.name(),
-        quant.name()
-    ));
     std::fs::create_dir_all(&out)?;
     report.curve.save_csv(out.join("curve.csv"))?;
     let mut eval_obj = std::collections::BTreeMap::new();

@@ -16,6 +16,12 @@
 //!
 //! # FP32 baseline for the same run
 //! cargo run --release --bin train_host -- --model transformer
+//!
+//! # crash-safe training: checkpoint the full train state every 2 steps,
+//! # then resume a killed run bitwise identically
+//! cargo run --release --bin train_host -- --model mlp --ckpt-every 2
+//! cargo run --release --bin train_host -- --model mlp --ckpt-every 2 \
+//!     --resume runs/train_host/mlp_none/state.s2ts
 //! ```
 //!
 //! Writes `curve.csv` and `train_host.json` (loss curve + eval metrics:
@@ -52,6 +58,9 @@ fn run(args: &[String]) -> Result<()> {
         .opt("lr", "0.1", "SGD learning rate")
         .opt("seed", "2020", "init + data seed")
         .opt("log-every", "20", "console cadence (steps)")
+        .opt("ckpt-every", "0", "checkpoint the full train state every N steps (0 = off)")
+        .opt_optional("ckpt", "train-state path (default: <out dir>/state.s2ts)")
+        .opt_optional("resume", "resume bitwise from a train-state file (see --ckpt-every)")
         .opt("out", "runs/train_host", "output directory");
     let p = match spec.parse(args) {
         Err(ArgError::HelpRequested) => {
@@ -78,8 +87,33 @@ fn run(args: &[String]) -> Result<()> {
     opts.log_every = p.usize("log-every");
     opts.n_examples = wl.n_examples;
 
-    let report =
-        s2fp8::dist::train(&opts, |_rank| wl.replica(), |step, idx| wl.batch(step, idx))?;
+    let out = std::path::PathBuf::from(p.str("out")).join(format!("{model}_{}", quant.name()));
+    let ckpt_path = p
+        .get("ckpt")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| out.join("state.s2ts"));
+    // anything that changes the step arithmetic must match on resume; the
+    // geometry (batch size, dataset, chunks) is validated by the
+    // coordinator from the state's own fields
+    let tags = [
+        ("model", model.to_string()),
+        ("quant", quant.name().to_string()),
+        ("lr", p.str("lr").to_string()),
+    ];
+    let (policy, state) =
+        s2fp8::dist::cli_ckpt_setup(p.usize("ckpt-every"), ckpt_path, &tags, p.get("resume"))?;
+    if let Some(s) = &state {
+        println!("resuming from {} at step {}", p.str("resume"), s.step);
+    }
+
+    let report = s2fp8::dist::train_resumable(
+        &opts,
+        |_rank| wl.replica(),
+        |step, idx| wl.batch(step, idx),
+        policy.as_ref(),
+        state.as_ref(),
+        None,
+    )?;
 
     let losses = report.curve.column("loss");
     println!(
@@ -96,8 +130,6 @@ fn run(args: &[String]) -> Result<()> {
         println!("eval {name}: {value:.4}");
     }
 
-    let out = std::path::PathBuf::from(p.str("out"))
-        .join(format!("{model}_{}", quant.name()));
     std::fs::create_dir_all(&out)?;
     report.curve.save_csv(out.join("curve.csv"))?;
     let mut eval_obj = std::collections::BTreeMap::new();

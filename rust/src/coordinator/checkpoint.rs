@@ -35,11 +35,13 @@ const VERSION: u32 = 2;
 /// counters need exactness.
 const COMPRESS_MIN_ELEMS: usize = 64;
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+/// Little-endian u32 append (shared with the sibling `resume` frame).
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
+/// Little-endian u64 append (shared with the sibling `resume` frame).
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -84,29 +86,61 @@ pub fn serialize_as(slots: &[(String, HostValue)], format: Option<FormatKind>) -
     buf
 }
 
-struct Reader<'a> {
+/// Serialize named f32 tensors (v2 layout, always FP32-packed — lossless)
+/// without routing through owned [`HostValue`]s: the resume frame
+/// ([`crate::coordinator::resume`]) checkpoints the full parameter set on
+/// a step cadence, and cloning every tensor into a `HostValue` first
+/// would double the copy on that hot path. Byte-identical to
+/// [`serialize_as`]`(slots, None)` over the same tensors.
+pub fn serialize_f32(slots: &[(String, Tensor)]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, VERSION);
+    put_u32(&mut buf, slots.len() as u32);
+    for (name, t) in slots {
+        put_u32(&mut buf, name.len() as u32);
+        buf.extend_from_slice(name.as_bytes());
+        buf.push(0); // dtype f32
+        t.quantize(FormatKind::Fp32).write_to(&mut buf);
+    }
+    buf
+}
+
+/// Bounds-checked little-endian reader over a byte buffer — the one
+/// cursor every binary frame in `coordinator/` parses through (this
+/// checkpoint format and the `resume::TrainState` frame).
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Current byte offset from the start of the buffer.
+    pub(crate) fn offset(&self) -> usize {
+        self.pos
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         // `n` can be derived from on-disk lengths; avoid `pos + n`, which
         // could overflow (and panic) on a crafted value.
         if n > self.buf.len() - self.pos {
-            bail!("checkpoint truncated at offset {}", self.pos);
+            bail!("truncated at offset {}", self.pos);
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         let b = self.take(8)?;
         Ok(u64::from_le_bytes(b.try_into().unwrap()))
     }
@@ -257,13 +291,13 @@ fn entry_v2(r: &mut Reader) -> Result<(String, RawPayload)> {
             RawPayload::Quantized(qt)
         }
         1 => {
-            let rank = r.u32()? as usize;
+            let rank = r.u32().with_context(|| format!("entry '{name}'"))? as usize;
             let mut shape = Vec::with_capacity(rank.min(64));
             for _ in 0..rank {
-                shape.push(r.u64()? as usize);
+                shape.push(r.u64().with_context(|| format!("entry '{name}'"))? as usize);
             }
-            let count = checked_count(&shape)?;
-            let bytes = r.take(count * 4)?;
+            let count = checked_count(&shape).with_context(|| format!("entry '{name}'"))?;
+            let bytes = r.take(count * 4).with_context(|| format!("entry '{name}'"))?;
             let data = bytes
                 .chunks_exact(4)
                 .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -277,9 +311,12 @@ fn entry_v2(r: &mut Reader) -> Result<(String, RawPayload)> {
 
 /// Deserialize a checkpoint without decoding packed payloads.
 pub fn deserialize_raw(bytes: &[u8]) -> Result<Vec<(String, RawPayload)>> {
-    let mut r = Reader { buf: bytes, pos: 0 };
+    if bytes.is_empty() {
+        bail!("empty checkpoint (zero bytes) — was the file written at all?");
+    }
+    let mut r = Reader::new(bytes);
     if r.take(4)? != MAGIC {
-        bail!("not a S2CK checkpoint");
+        bail!("not a S2CK checkpoint (bad magic)");
     }
     let version = r.u32()?;
     if version != 1 && version != VERSION {

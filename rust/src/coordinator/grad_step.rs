@@ -65,6 +65,16 @@ pub trait GradStep {
     /// Snapshot of the current parameters as (name, tensor) pairs —
     /// replica-sync checks, equivalence tests and checkpointing.
     fn params(&self) -> Vec<(String, Tensor)>;
+
+    /// Rewind the replica's parameters to a [`GradStep::params`] snapshot
+    /// (crash-safe resume: the distributed coordinator calls this with a
+    /// checkpointed `TrainState`'s parameters before re-entering the step
+    /// loop). Replicas that cannot restore — e.g. AOT executables whose
+    /// state lives on-device — report why instead of panicking.
+    fn restore(&mut self, params: &[(String, Tensor)]) -> Result<()> {
+        let _ = params;
+        anyhow::bail!("this replica type does not support parameter restore")
+    }
 }
 
 /// Every zoo model is a distributed training replica: the two-phase
@@ -87,5 +97,9 @@ impl<M: crate::models::HostModel> GradStep for M {
 
     fn params(&self) -> Vec<(String, Tensor)> {
         crate::models::HostModel::params(self)
+    }
+
+    fn restore(&mut self, params: &[(String, Tensor)]) -> Result<()> {
+        self.restore_params(params)
     }
 }

@@ -19,9 +19,16 @@
 //!   [`crate::models`] zoo model implements it through a blanket impl
 //!   (the pure-rust replicas formerly in `coordinator/host_trainer.rs`
 //!   now live in the zoo).
+//! * [`resume`] — the crash-safe **`TrainState` frame**: parameters
+//!   (lossless FP32), step counter, data-stream cursor and RNG state,
+//!   written atomically (temp + rename) on a checkpoint cadence so a
+//!   killed run resumes bitwise identical to an uninterrupted one
+//!   (`tests/integration_resume.rs`; fault injection in
+//!   [`crate::testkit`]).
 
 pub mod checkpoint;
 pub mod grad_step;
+pub mod resume;
 pub mod runner;
 pub mod eval;
 pub mod loss_scale;
@@ -29,6 +36,7 @@ pub mod stats;
 pub mod trainer;
 
 pub use grad_step::{GradStep, ShardGrad};
+pub use resume::TrainState;
 pub use loss_scale::{LossScaleController, LossScalePolicy};
 pub use runner::{run_experiment, ExperimentOutcome};
 pub use trainer::{LrSchedule, PendingStep, StepOutputs, TrainOptions, Trainer};

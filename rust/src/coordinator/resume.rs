@@ -1,0 +1,378 @@
+//! Crash-safe resumable training: the **`TrainState` frame**.
+//!
+//! A `TrainState` is everything a data-parallel training run needs to
+//! continue after a crash as if nothing happened: the FP32 master
+//! parameters (stored losslessly — resume must be *bitwise*, so the
+//! S2FP8 checkpoint compression is deliberately not applied here), the
+//! completed-step counter, the data-stream cursor
+//! ([`ShardedBatcher::position`](crate::data::sharded::ShardedBatcher)),
+//! the shuffle-RNG raw state (a cross-check that the replayed stream
+//! landed exactly where the interrupted run left off), the run seed, and
+//! free-form `meta` tags the CLI layer uses to refuse resuming under a
+//! different configuration (model, quant, wire, batch geometry).
+//!
+//! On-disk layout, version 1 (little-endian), layered on the checkpoint
+//! v2 codec for the parameter block:
+//!
+//! ```text
+//!   magic "S2TS" | version u32 = 1
+//!   | step u64 | epoch u64 | cursor u64
+//!   | n_examples u64 | global_batch u64 | chunks u64
+//!   | rng_state u64 | rng_inc u64 | seed u64
+//!   | n_meta u32 | per tag: key_len u32 | key | val_len u32 | val
+//!   | params_len u64 | checkpoint-v2 bytes (FP32 QuantizedTensor frames)
+//!   | crc32 u32  (CRC-32/IEEE of every preceding byte)
+//! ```
+//!
+//! **Atomicity:** [`TrainState::save_atomic`] writes to `<path>.tmp`,
+//! fsyncs, then renames over the target. A crash mid-write therefore
+//! leaves either the previous complete state or an orphaned `.tmp` — a
+//! partially-written `TrainState` is never observable at the real path,
+//! and a truncated or bit-flipped file fails its CRC with a typed error
+//! instead of resuming from garbage (`testkit` injects exactly these
+//! faults; `tests/integration_resume.rs` pins the behavior).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint::{self, put_u32, put_u64, Reader};
+use crate::runtime::HostValue;
+use crate::tensor::Tensor;
+use crate::util::crc32::crc32;
+
+const MAGIC: &[u8; 4] = b"S2TS";
+const VERSION: u32 = 1;
+
+/// A resumable snapshot of a training run at a step boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    /// Completed steps (the resumed run continues at `step + 1`).
+    pub step: usize,
+    /// Batch-stream epoch at the boundary (see
+    /// [`Batcher::position`](crate::data::batcher::Batcher::position)).
+    pub epoch: usize,
+    /// Batch-stream cursor at the boundary.
+    pub cursor: usize,
+    /// Dataset size the batcher shuffles over — part of the stream
+    /// identity; a resume under different batch geometry is refused.
+    pub n_examples: usize,
+    /// Global batch size of the run.
+    pub global_batch: usize,
+    /// Reduce granularity (chunks per global batch) — part of the step
+    /// arithmetic, so it must match exactly for a bitwise resume.
+    pub chunks: usize,
+    /// Raw `(state, inc)` of the batcher's shuffle RNG at the boundary —
+    /// verified against the replayed stream on resume.
+    pub rng_state: (u64, u64),
+    /// The run seed (batcher + replica init).
+    pub seed: u64,
+    /// Free-form configuration tags (`model`, `quant`, `wire`, …) the
+    /// caller stamps at save time and validates at resume time.
+    pub meta: Vec<(String, String)>,
+    /// FP32 master parameters in canonical slot order, lossless.
+    pub params: Vec<(String, Tensor)>,
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Length-prefixed utf-8 string off the shared checkpoint [`Reader`].
+fn read_str(r: &mut Reader) -> Result<String> {
+    let len = r.u32()? as usize;
+    String::from_utf8(r.take(len)?.to_vec()).context("bad utf-8 in train state")
+}
+
+impl TrainState {
+    /// One tag's value, if present.
+    pub fn meta(&self, key: &str) -> Option<&str> {
+        self.meta.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Fail with a configuration-mismatch error unless tag `key` was
+    /// saved with exactly `expected` — the guard the train bins run over
+    /// every CLI-visible knob before resuming.
+    pub fn require_meta(&self, key: &str, expected: &str) -> Result<()> {
+        match self.meta(key) {
+            Some(v) if v == expected => Ok(()),
+            Some(v) => bail!(
+                "cannot resume: checkpoint was written with {key}={v}, this run has \
+                 {key}={expected}"
+            ),
+            None => bail!("cannot resume: checkpoint carries no '{key}' tag"),
+        }
+    }
+
+    /// The framed byte representation (see the module docs for layout).
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        put_u32(&mut buf, VERSION);
+        put_u64(&mut buf, self.step as u64);
+        put_u64(&mut buf, self.epoch as u64);
+        put_u64(&mut buf, self.cursor as u64);
+        put_u64(&mut buf, self.n_examples as u64);
+        put_u64(&mut buf, self.global_batch as u64);
+        put_u64(&mut buf, self.chunks as u64);
+        put_u64(&mut buf, self.rng_state.0);
+        put_u64(&mut buf, self.rng_state.1);
+        put_u64(&mut buf, self.seed);
+        put_u32(&mut buf, self.meta.len() as u32);
+        for (k, v) in &self.meta {
+            put_str(&mut buf, k);
+            put_str(&mut buf, v);
+        }
+        // parameters ride the checkpoint v2 codec, pinned to FP32 frames
+        // (a lossy storage format here would break bitwise resume) and
+        // serialized from borrowed tensors — no HostValue clone of the
+        // full parameter set on the per-checkpoint hot path
+        let ckpt = checkpoint::serialize_f32(&self.params);
+        put_u64(&mut buf, ckpt.len() as u64);
+        buf.extend_from_slice(&ckpt);
+        let crc = crc32(&buf);
+        put_u32(&mut buf, crc);
+        buf
+    }
+
+    /// Parse a serialized `TrainState`, verifying the trailing CRC-32
+    /// first — corruption anywhere in the file (truncation, bit flips,
+    /// a crash that half-wrote it without the atomic rename) surfaces as
+    /// a typed error, never as a silently wrong resume.
+    pub fn deserialize(bytes: &[u8]) -> Result<Self> {
+        if bytes.is_empty() {
+            bail!("empty train state (zero bytes)");
+        }
+        let mut r = Reader::new(bytes);
+        if r.take(4)? != MAGIC {
+            bail!("not a S2TS train state (bad magic)");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported train-state version {version} (this build reads v{VERSION})");
+        }
+        // the magic + version reads above guarantee ≥ 8 bytes, so the
+        // 4-byte checksum split below cannot underflow
+        let body = &bytes[..bytes.len() - 4];
+        let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let computed = crc32(body);
+        if stored != computed {
+            bail!(
+                "train state failed its CRC-32 check (stored {stored:#010x}, computed \
+                 {computed:#010x}) — truncated or corrupt file"
+            );
+        }
+        let step = r.u64()? as usize;
+        let epoch = r.u64()? as usize;
+        let cursor = r.u64()? as usize;
+        let n_examples = r.u64()? as usize;
+        let global_batch = r.u64()? as usize;
+        let chunks = r.u64()? as usize;
+        let rng_state = (r.u64()?, r.u64()?);
+        let seed = r.u64()?;
+        let n_meta = r.u32()? as usize;
+        let mut meta = Vec::with_capacity(n_meta.min(64));
+        for _ in 0..n_meta {
+            let k = read_str(&mut r)?;
+            let v = read_str(&mut r)?;
+            meta.push((k, v));
+        }
+        let ckpt_len = r.u64()? as usize;
+        let ckpt = r.take(ckpt_len)?;
+        // r reads against the full buffer, so a crafted ckpt_len could
+        // land past `body` (inside the checksum field): treat any
+        // mismatch — short or long — as corruption
+        if r.offset() < body.len() {
+            bail!("{} trailing bytes in train state", body.len() - r.offset());
+        }
+        if r.offset() > body.len() {
+            bail!("train-state parameter block overruns into the checksum");
+        }
+        let mut params = Vec::new();
+        for (name, value) in checkpoint::deserialize(ckpt).context("train-state parameters")? {
+            match value {
+                HostValue::F32(t) => params.push((name, t)),
+                other => bail!(
+                    "train-state parameter '{name}' is {:?}, expected f32",
+                    other.dtype()
+                ),
+            }
+        }
+        Ok(TrainState {
+            step,
+            epoch,
+            cursor,
+            n_examples,
+            global_batch,
+            chunks,
+            rng_state,
+            seed,
+            meta,
+            params,
+        })
+    }
+
+    /// Write the state to `path` atomically: serialize to `<path>.tmp`,
+    /// fsync, rename over the target. Either the previous complete state
+    /// or the new complete state is on disk at every instant — a crash
+    /// mid-checkpoint can cost at most the steps since the last
+    /// checkpoint, never the checkpoint itself.
+    pub fn save_atomic(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let tmp = tmp_path(path);
+        let bytes = self.serialize();
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&bytes)?;
+            f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
+        // make the rename itself durable: without a directory fsync a
+        // power loss can roll the directory entry back to the previous
+        // state even though the data blocks were synced (best-effort —
+        // not every filesystem supports fsync on a directory handle)
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                if let Ok(d) = std::fs::File::open(parent) {
+                    let _ = d.sync_all();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a state written by [`TrainState::save_atomic`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("opening train state {}", path.as_ref().display()))?;
+        Self::deserialize(&bytes)
+            .with_context(|| format!("reading train state {}", path.as_ref().display()))
+    }
+}
+
+/// The sibling temp path the atomic save stages through (exposed so
+/// `testkit` can simulate a crash *between* write and rename).
+pub fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn sample_state() -> TrainState {
+        let mut rng = Pcg32::new(11, 2);
+        TrainState {
+            step: 42,
+            epoch: 3,
+            cursor: 128,
+            n_examples: 512,
+            global_batch: 32,
+            chunks: 4,
+            rng_state: (0xDEAD_BEEF_0123, 0x4567 | 1),
+            seed: 2020,
+            meta: vec![
+                ("model".into(), "mlp".into()),
+                ("quant".into(), "none".into()),
+            ],
+            params: vec![
+                ("params/w".into(), Tensor::randn(vec![6, 4], &mut rng)),
+                ("params/b".into(), Tensor::randn(vec![4], &mut rng)),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_exact() {
+        let state = sample_state();
+        let back = TrainState::deserialize(&state.serialize()).unwrap();
+        assert_eq!(back.step, state.step);
+        assert_eq!(back.epoch, state.epoch);
+        assert_eq!(back.cursor, state.cursor);
+        assert_eq!(back.n_examples, state.n_examples);
+        assert_eq!(back.global_batch, state.global_batch);
+        assert_eq!(back.chunks, state.chunks);
+        assert_eq!(back.rng_state, state.rng_state);
+        assert_eq!(back.seed, state.seed);
+        assert_eq!(back.meta, state.meta);
+        assert_eq!(back.params.len(), state.params.len());
+        for ((na, ta), (nb, tb)) in back.params.iter().zip(state.params.iter()) {
+            assert_eq!(na, nb);
+            assert_eq!(ta.shape(), tb.shape());
+            for (x, y) in ta.data().iter().zip(tb.data().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "resume storage must be lossless");
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_is_a_typed_error_never_a_wrong_resume() {
+        let bytes = sample_state().serialize();
+        // empty
+        let err = TrainState::deserialize(&[]).unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(TrainState::deserialize(&bad).unwrap_err().to_string().contains("magic"));
+        // unknown version
+        let mut bad = bytes.clone();
+        bad[4..8].copy_from_slice(&9u32.to_le_bytes());
+        let err = TrainState::deserialize(&bad).unwrap_err().to_string();
+        assert!(err.contains("version 9"), "{err}");
+        // every possible truncation errors (mid-write crash without the
+        // atomic rename), never parses
+        for keep in 0..bytes.len() {
+            assert!(
+                TrainState::deserialize(&bytes[..keep]).is_err(),
+                "{keep}-byte prefix parsed"
+            );
+        }
+        // a single flipped bit deep in the parameter payload fails the CRC
+        let mut bad = bytes.clone();
+        let mid = bytes.len() - 24;
+        bad[mid] ^= 0x40;
+        let err = TrainState::deserialize(&bad).unwrap_err().to_string();
+        assert!(err.contains("CRC-32"), "{err}");
+    }
+
+    #[test]
+    fn save_atomic_roundtrips_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("s2fp8_resume_test");
+        let path = dir.join("state.s2ts");
+        let state = sample_state();
+        state.save_atomic(&path).unwrap();
+        assert!(!tmp_path(&path).exists(), "tmp must be renamed away");
+        let back = TrainState::load(&path).unwrap();
+        assert_eq!(back, state);
+        // overwriting with a newer state is just as atomic
+        let mut newer = sample_state();
+        newer.step = 43;
+        newer.save_atomic(&path).unwrap();
+        assert_eq!(TrainState::load(&path).unwrap().step, 43);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_guard_reports_mismatches_clearly() {
+        let state = sample_state();
+        assert!(state.require_meta("model", "mlp").is_ok());
+        let err = state.require_meta("model", "ncf").unwrap_err().to_string();
+        assert!(err.contains("model=mlp") && err.contains("model=ncf"), "{err}");
+        let err = state.require_meta("wire", "fp32").unwrap_err().to_string();
+        assert!(err.contains("no 'wire' tag"), "{err}");
+    }
+}

@@ -3,6 +3,15 @@
 //! A [`Batcher`] yields shuffled index windows per epoch (dropping the
 //! ragged tail, like the reference training loops); model-specific code
 //! gathers rows into the manifest's `batch/*` slots.
+//!
+//! The stream position is checkpointable: [`Batcher::position`] captures
+//! `(epoch, cursor)` and [`Batcher::seek`] replays the epoch shuffles from
+//! the seed to land a fresh batcher on the exact same position — the data
+//! cursor half of the crash-safe resume contract
+//! ([`crate::coordinator::resume`]), bitwise (every batch after a seek
+//! equals the batch an uninterrupted batcher would have produced).
+
+use anyhow::{bail, Result};
 
 use crate::util::rng::{Pcg32, Rng};
 
@@ -11,6 +20,7 @@ use crate::util::rng::{Pcg32, Rng};
 pub struct Batcher {
     n: usize,
     batch: usize,
+    seed: u64,
     order: Vec<usize>,
     cursor: usize,
     rng: Pcg32,
@@ -23,6 +33,7 @@ impl Batcher {
         let mut b = Batcher {
             n,
             batch,
+            seed,
             order: (0..n).collect(),
             cursor: 0,
             rng: Pcg32::new(seed, 0xBA7C),
@@ -51,6 +62,48 @@ impl Batcher {
         let out = &self.order[self.cursor..self.cursor + self.batch];
         self.cursor += self.batch;
         out
+    }
+
+    /// The checkpointable stream position: `(epoch, cursor)` after however
+    /// many [`Batcher::next_batch`] calls have happened. Feed back into
+    /// [`Batcher::seek`] to resume the stream bitwise.
+    pub fn position(&self) -> (usize, usize) {
+        (self.epoch, self.cursor)
+    }
+
+    /// Raw state of the shuffle RNG at the current position. Stored in
+    /// training checkpoints purely as a cross-check: after a
+    /// [`Batcher::seek`] the replayed RNG must land on exactly this state,
+    /// otherwise the checkpoint was written by a different (n, batch,
+    /// seed) stream.
+    pub fn rng_raw_state(&self) -> (u64, u64) {
+        self.rng.raw_state()
+    }
+
+    /// Reposition this batcher to a saved [`Batcher::position`] by
+    /// replaying the epoch shuffles from the seed: the order permutation,
+    /// the cursor, and the shuffle RNG all end up bitwise identical to an
+    /// uninterrupted batcher that was stepped to the same position, so
+    /// every subsequent batch matches exactly.
+    pub fn seek(&mut self, epoch: usize, cursor: usize) -> Result<()> {
+        if cursor % self.batch != 0 || cursor > self.batches_per_epoch() * self.batch {
+            bail!(
+                "cannot seek to cursor {cursor}: not a batch boundary of batch {} over {} \
+                 examples",
+                self.batch,
+                self.n
+            );
+        }
+        self.rng = Pcg32::new(self.seed, 0xBA7C);
+        self.order = (0..self.n).collect();
+        // epoch e's order is the (e+1)-th consecutive shuffle (new() does
+        // the first); replaying them also replays the RNG stream exactly
+        for _ in 0..=epoch {
+            self.rng.shuffle(&mut self.order);
+        }
+        self.epoch = epoch;
+        self.cursor = cursor;
+        Ok(())
     }
 }
 
@@ -83,6 +136,37 @@ mod tests {
         assert_eq!(b.epoch, 0);
         b.next_batch(); // 11th rolls the epoch
         assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn seek_reproduces_the_uninterrupted_stream_bitwise() {
+        // step a reference batcher k times, then seek a fresh one to its
+        // position: every subsequent batch must match, across epochs
+        for k in [0usize, 1, 7, 10, 23] {
+            let mut reference = Batcher::new(50, 10, 99);
+            for _ in 0..k {
+                reference.next_batch();
+            }
+            let (epoch, cursor) = reference.position();
+            let mut resumed = Batcher::new(50, 10, 99);
+            resumed.seek(epoch, cursor).unwrap();
+            assert_eq!(resumed.rng_raw_state(), reference.rng_raw_state(), "k={k}");
+            for step in 0..12 {
+                assert_eq!(
+                    resumed.next_batch().to_vec(),
+                    reference.next_batch().to_vec(),
+                    "k={k} step {step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn seek_rejects_non_boundary_cursors() {
+        let mut b = Batcher::new(50, 10, 1);
+        assert!(b.seek(0, 7).is_err(), "mid-batch cursor");
+        assert!(b.seek(2, 60).is_err(), "cursor past the epoch");
+        assert!(b.seek(3, 50).is_ok(), "epoch-end cursor is a boundary");
     }
 
     #[test]

@@ -74,6 +74,24 @@ impl ShardedBatcher {
             .map(|c| c.to_vec())
             .collect()
     }
+
+    /// Checkpointable stream position (see [`Batcher::position`]).
+    pub fn position(&self) -> (usize, usize) {
+        self.inner.position()
+    }
+
+    /// Raw shuffle-RNG state at the current position (resume cross-check;
+    /// see [`Batcher::rng_raw_state`]).
+    pub fn rng_raw_state(&self) -> (u64, u64) {
+        self.inner.rng_raw_state()
+    }
+
+    /// Reposition to a saved [`ShardedBatcher::position`] — every
+    /// subsequent chunk set matches the uninterrupted stream bitwise (see
+    /// [`Batcher::seek`]).
+    pub fn seek(&mut self, epoch: usize, cursor: usize) -> Result<()> {
+        self.inner.seek(epoch, cursor)
+    }
 }
 
 #[cfg(test)]
@@ -121,5 +139,99 @@ mod tests {
         assert!(ShardedBatcher::new(10, 20, 2, 1).is_err(), "batch > dataset");
         let ok = ShardedBatcher::new(100, 20, 20, 1).unwrap();
         assert_eq!(ok.chunk_size(), 1);
+    }
+
+    #[test]
+    fn seek_matches_the_uninterrupted_chunk_stream() {
+        for k in [0usize, 3, 9, 14] {
+            let mut reference = ShardedBatcher::new(60, 12, 4, 21).unwrap();
+            for _ in 0..k {
+                reference.next_chunks();
+            }
+            let (epoch, cursor) = reference.position();
+            let mut resumed = ShardedBatcher::new(60, 12, 4, 21).unwrap();
+            resumed.seek(epoch, cursor).unwrap();
+            assert_eq!(resumed.rng_raw_state(), reference.rng_raw_state());
+            for _ in 0..10 {
+                assert_eq!(resumed.next_chunks(), reference.next_chunks(), "after k={k}");
+            }
+        }
+    }
+
+    /// Pin the partition contract under arbitrary geometry: any chunk
+    /// count that divides the global batch partitions the single-worker
+    /// stream exactly (no dropped or duplicated rows, order preserved);
+    /// any chunk count that does not divide it — and any worker count
+    /// that does not divide the chunk count, at the dist layer — is
+    /// rejected with a clear error rather than silently skewing shards.
+    #[test]
+    fn prop_chunks_partition_or_reject_under_random_geometry() {
+        use crate::util::prop::{check, FnGen};
+        use crate::util::rng::Rng;
+
+        let g = FnGen(|rng: &mut crate::util::rng::Pcg32| {
+            let batch = 1 + rng.next_below(24) as usize;
+            let n = batch + rng.next_below(200) as usize;
+            let chunks = 1 + rng.next_below(12) as usize;
+            let seed = rng.next_u64();
+            (n, batch, chunks, seed)
+        });
+        check("sharded partition/reject", &g, |&(n, batch, chunks, seed): &(usize, usize, usize, u64)| {
+            match ShardedBatcher::new(n, batch, chunks, seed) {
+                Err(e) => {
+                    if batch % chunks == 0 {
+                        return Err(format!("valid geometry rejected: {e}"));
+                    }
+                    let msg = e.to_string();
+                    if msg.contains("not divisible") {
+                        Ok(())
+                    } else {
+                        Err(format!("unclear rejection: {msg}"))
+                    }
+                }
+                Ok(mut sharded) => {
+                    if batch % chunks != 0 {
+                        return Err(format!(
+                            "batch {batch} not divisible by {chunks} chunks but accepted"
+                        ));
+                    }
+                    let mut plain = Batcher::new(n, batch, seed);
+                    for step in 0..12 {
+                        let reference = plain.next_batch().to_vec();
+                        let got = sharded.next_chunks();
+                        if got.len() != chunks
+                            || got.iter().any(|c| c.len() != batch / chunks)
+                        {
+                            return Err(format!("step {step}: ragged chunks {got:?}"));
+                        }
+                        if got.concat() != reference {
+                            return Err(format!(
+                                "step {step}: chunks {got:?} != stream {reference:?}"
+                            ));
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        });
+
+        // the dist layer's half of the contract: worker counts that do
+        // not divide the chunk count are rejected up front with an error
+        // naming both numbers (never a skewed partition)
+        use crate::dist::{DistOptions, WireFormat};
+        for (workers, chunks) in [(3usize, 4usize), (5, 8), (2, 3), (7, 12)] {
+            let mut opts = DistOptions::new(workers, WireFormat::Fp32);
+            opts.chunks = chunks;
+            let err = opts.validate().unwrap_err().to_string();
+            assert!(
+                err.contains(&workers.to_string()) && err.contains(&chunks.to_string()),
+                "({workers}, {chunks}): {err}"
+            );
+        }
+        for (workers, chunks) in [(1usize, 4usize), (2, 4), (4, 8), (3, 9)] {
+            let mut opts = DistOptions::new(workers, WireFormat::Fp32);
+            opts.chunks = chunks;
+            assert!(opts.validate().is_ok(), "({workers}, {chunks}) must divide");
+        }
     }
 }

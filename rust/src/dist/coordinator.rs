@@ -23,11 +23,13 @@
 //! identical to *each other* across worker counts, and track the FP32
 //! curve within the wire-noise bound while moving ≤ ¼ of the bytes.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::grad_step::GradStep;
+use crate::coordinator::resume::TrainState;
 use crate::coordinator::trainer::LrSchedule;
 use crate::data::sharded::ShardedBatcher;
 use crate::metrics::comm::{CommCounters, CommReport};
@@ -105,6 +107,81 @@ impl DistOptions {
     }
 }
 
+/// Periodic checkpointing of the full training state (crash-safe resume).
+///
+/// Rank 0 writes a [`TrainState`] — parameters (lossless FP32), step
+/// counter, data-stream cursor, RNG state, plus the caller's `meta` tags —
+/// atomically (temp + rename) every `every` steps. Because every rank is
+/// bitwise identical at each step boundary, rank 0's snapshot *is* the
+/// fleet's state; resuming from it reproduces the uninterrupted run
+/// exactly (`tests/integration_resume.rs`).
+#[derive(Debug, Clone)]
+pub struct CkptPolicy {
+    /// Checkpoint cadence in steps (0 disables checkpointing).
+    pub every: usize,
+    /// Target file; the atomic save stages through `<path>.tmp`.
+    pub path: PathBuf,
+    /// Configuration tags stamped into every state (`model`, `wire`, …) so
+    /// a resume under a different configuration is refused, not garbled.
+    pub meta: Vec<(String, String)>,
+}
+
+impl CkptPolicy {
+    pub fn new(every: usize, path: impl Into<PathBuf>) -> Self {
+        CkptPolicy { every, path: path.into(), meta: Vec::new() }
+    }
+
+    /// Add a configuration tag (builder style).
+    pub fn tag(mut self, key: &str, value: impl std::fmt::Display) -> Self {
+        self.meta.push((key.to_string(), value.to_string()));
+        self
+    }
+}
+
+/// Shared CLI wiring for `bin/train_host` / `bin/train_dist`: build the
+/// optional [`CkptPolicy`] (`every == 0` disables checkpointing, every
+/// `tags` entry is stamped into the state) and load + guard the optional
+/// `--resume` state (each tag must match what the checkpoint was written
+/// with; the geometry fields are validated separately by
+/// [`train_resumable`]).
+pub fn cli_ckpt_setup(
+    every: usize,
+    path: PathBuf,
+    tags: &[(&str, String)],
+    resume_path: Option<&str>,
+) -> Result<(Option<CkptPolicy>, Option<TrainState>)> {
+    let policy = (every > 0).then(|| {
+        let mut p = CkptPolicy::new(every, path);
+        p.meta = tags.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        p
+    });
+    let state = match resume_path {
+        Some(rp) => {
+            let s = TrainState::load(rp)?;
+            for (k, v) in tags {
+                s.require_meta(k, v)?;
+            }
+            Some(s)
+        }
+        None => None,
+    };
+    Ok((policy, state))
+}
+
+/// A deterministic injected crash: worker `kill_rank` dies (its thread
+/// errors out mid-step, *before* the gradient exchange) at `kill_step`.
+///
+/// This is the [`crate::testkit`] chaos hook: it exercises the real
+/// failure path — the remaining workers observe a ring disconnect, the
+/// run surfaces the root-cause error, and whatever checkpoint rank 0
+/// last wrote stays on disk for the resume — without any nondeterministic
+/// signal/thread machinery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub kill_rank: usize,
+    pub kill_step: usize,
+}
+
 /// Result of a distributed run (rank 0's view; all ranks are verified
 /// bitwise identical before this is returned).
 #[derive(Debug)]
@@ -139,9 +216,65 @@ where
     MF: Fn(usize) -> Result<R> + Sync,
     BP: Fn(usize, &[usize]) -> Result<Vec<HostValue>> + Sync,
 {
+    train_resumable(opts, make_replica, provider, None, None, None)
+}
+
+/// [`train`] with the fault-tolerance machinery exposed: periodic
+/// [`CkptPolicy`] checkpointing, resumption from a loaded [`TrainState`]
+/// (every worker restores the snapshot parameters and seeks its batch
+/// stream to the saved cursor, so the continued run is **bitwise
+/// identical** to an uninterrupted one), and an optional injected
+/// [`FaultSpec`] crash for the chaos suite.
+///
+/// On resume the report's loss curve covers only the resumed segment
+/// (steps `state.step + 1 ..= opts.steps`); its rows are bitwise equal to
+/// the same rows of the uninterrupted run's curve.
+pub fn train_resumable<R, MF, BP>(
+    opts: &DistOptions,
+    make_replica: MF,
+    provider: BP,
+    ckpt: Option<&CkptPolicy>,
+    resume: Option<&TrainState>,
+    fault: Option<&FaultSpec>,
+) -> Result<DistReport>
+where
+    R: GradStep,
+    MF: Fn(usize) -> Result<R> + Sync,
+    BP: Fn(usize, &[usize]) -> Result<Vec<HostValue>> + Sync,
+{
     opts.validate()?;
     // surface bad batch geometry before spawning anything
     ShardedBatcher::new(opts.n_examples, opts.global_batch, opts.chunks, opts.seed)?;
+    if let Some(state) = resume {
+        if state.seed != opts.seed {
+            bail!(
+                "cannot resume: checkpoint was written under seed {}, this run has seed {}",
+                state.seed,
+                opts.seed
+            );
+        }
+        // the batch geometry is part of the step arithmetic: any change
+        // makes a bitwise continuation impossible, so refuse it up front
+        for (what, saved, now) in [
+            ("dataset size", state.n_examples, opts.n_examples),
+            ("global batch", state.global_batch, opts.global_batch),
+            ("chunk count", state.chunks, opts.chunks),
+        ] {
+            if saved != now {
+                bail!(
+                    "cannot resume: checkpoint was written with {what} {saved}, this run \
+                     has {now}"
+                );
+            }
+        }
+        if state.step >= opts.steps {
+            bail!(
+                "nothing to resume: checkpoint is at step {} but the run targets {} steps",
+                state.step,
+                opts.steps
+            );
+        }
+    }
 
     let counters = CommCounters::new();
     let wall = Instant::now();
@@ -152,7 +285,7 @@ where
             .into_iter()
             .map(|node| {
                 let (make, prov, ctr) = (&make_replica, &provider, &counters);
-                s.spawn(move || worker_loop(opts, node, make, prov, ctr))
+                s.spawn(move || worker_loop(opts, node, make, prov, ctr, ckpt, resume, fault))
             })
             .collect();
         handles
@@ -199,12 +332,16 @@ where
     })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop<R: GradStep>(
     opts: &DistOptions,
     node: RingNode<Vec<ChunkGrad>>,
     make_replica: &(impl Fn(usize) -> Result<R> + Sync),
     provider: &(impl Fn(usize, &[usize]) -> Result<Vec<HostValue>> + Sync),
     counters: &CommCounters,
+    ckpt: Option<&CkptPolicy>,
+    resume: Option<&TrainState>,
+    fault: Option<&FaultSpec>,
 ) -> Result<WorkerOut> {
     let rank = node.rank();
     let mut replica =
@@ -215,14 +352,42 @@ fn worker_loop<R: GradStep>(
     let chunks_per_worker = opts.chunks / opts.workers;
     let first_chunk = rank * chunks_per_worker;
 
+    let start_step = match resume {
+        None => 0,
+        Some(state) => {
+            // rewind this replica to the checkpointed boundary: restore
+            // the FP32 masters and seek the batch stream to the saved
+            // cursor — then verify the replayed shuffle RNG landed on the
+            // exact stored state (a mismatch means the checkpoint came
+            // from a different data stream, and a bitwise resume is
+            // impossible)
+            replica
+                .restore(&state.params)
+                .with_context(|| format!("restoring rank {rank} from train state"))?;
+            batcher.seek(state.epoch, state.cursor).with_context(|| {
+                format!("seeking rank {rank}'s batch stream to the checkpoint cursor")
+            })?;
+            if batcher.rng_raw_state() != state.rng_state {
+                bail!(
+                    "cannot resume: replayed batch stream diverges from the checkpoint \
+                     (RNG state {:?} vs stored {:?}) — was the checkpoint written with a \
+                     different dataset size or batch geometry?",
+                    batcher.rng_raw_state(),
+                    state.rng_state
+                );
+            }
+            state.step
+        }
+    };
+
     let mut curve = Curve::new(&["loss", "lr"]);
     let mut bundle: Vec<ChunkGrad> =
         (0..chunks_per_worker).map(|_| ChunkGrad::empty(opts.wire)).collect();
     let mut bad_streak = 0usize;
     let mut diverged = false;
-    let mut steps_run = 0usize;
+    let mut steps_run = start_step;
 
-    for step in 1..=opts.steps {
+    for step in start_step + 1..=opts.steps {
         let chunk_indices = batcher.next_chunks();
         let lr = opts.lr.at(step - 1);
 
@@ -239,6 +404,13 @@ fn worker_loop<R: GradStep>(
             }
             msg.encode_into(chunk, sg.n_examples, sg.loss_sum, &sg.grads, opts.wire)
                 .with_context(|| format!("encoding wire gradients at step {step}"))?;
+        }
+
+        // injected crash (chaos testing): this worker dies mid-step,
+        // before the exchange — peers see a ring disconnect, exactly like
+        // a real worker loss
+        if fault.is_some_and(|f| f.kill_rank == rank && f.kill_step == step) {
+            bail!("injected fault: worker {rank} killed at step {step}");
         }
 
         // exchange: ring all-gather of packed bundles (clones cross the
@@ -264,6 +436,31 @@ fn worker_loop<R: GradStep>(
 
         curve.push(step, &[red.loss_mean, lr as f64]);
         steps_run = step;
+
+        // checkpoint cadence: rank 0's state is the fleet's state (all
+        // ranks are bitwise identical at this boundary); the atomic save
+        // means a crash *during* the save costs nothing but re-compute
+        if let Some(c) =
+            ckpt.filter(|c| rank == 0 && c.every > 0 && step % c.every == 0)
+        {
+            let (epoch, cursor) = batcher.position();
+            let state = TrainState {
+                step,
+                epoch,
+                cursor,
+                n_examples: opts.n_examples,
+                global_batch: opts.global_batch,
+                chunks: opts.chunks,
+                rng_state: batcher.rng_raw_state(),
+                seed: opts.seed,
+                meta: c.meta.clone(),
+                params: replica.params(),
+            };
+            state
+                .save_atomic(&c.path)
+                .with_context(|| format!("checkpointing at step {step}"))?;
+        }
+
         if rank == 0 && opts.log_every > 0 && step % opts.log_every == 0 {
             crate::log_info!(
                 "dist step {step}/{}: loss {:.5} (wire {}, workers {})",
@@ -399,6 +596,100 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err:#}").contains("no data today"), "{err:#}");
+    }
+
+    fn resume_fixture_opts(steps: usize) -> DistOptions {
+        let mut opts = DistOptions::new(2, WireFormat::Fp32);
+        opts.chunks = 4;
+        opts.global_batch = 16;
+        opts.n_examples = 256;
+        opts.steps = steps;
+        opts.lr = LrSchedule::Constant(0.08);
+        opts
+    }
+
+    fn run_resumable(
+        opts: &DistOptions,
+        ckpt: Option<&CkptPolicy>,
+        resume: Option<&TrainState>,
+        fault: Option<&FaultSpec>,
+    ) -> Result<DistReport> {
+        let (x, y) = synth_vector::dataset(256, 12, 4, 5);
+        train_resumable(
+            opts,
+            |_rank| Ok(MlpModel::new(&[12, 10, 4], 77)),
+            |_step, idx| {
+                let xb = x.gather_rows(idx);
+                let yb: Vec<i32> = idx.iter().map(|&i| y[i]).collect();
+                let n = idx.len();
+                Ok(vec![HostValue::F32(xb), HostValue::i32(vec![n], yb)])
+            },
+            ckpt,
+            resume,
+            fault,
+        )
+    }
+
+    #[test]
+    fn kill_then_resume_is_bitwise_identical_to_uninterrupted() {
+        let dir = std::env::temp_dir().join("s2fp8_dist_resume_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.s2ts");
+        let opts = resume_fixture_opts(12);
+
+        let baseline = run_resumable(&opts, None, None, None).unwrap();
+
+        // crash worker 1 at step 9 with checkpoints every 4 steps …
+        let policy = CkptPolicy::new(4, &path);
+        let fault = FaultSpec { kill_rank: 1, kill_step: 9 };
+        let err = run_resumable(&opts, Some(&policy), None, Some(&fault)).unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+
+        // … the surviving checkpoint is the step-8 boundary …
+        let state = TrainState::load(&path).unwrap();
+        assert_eq!(state.step, 8);
+
+        // … and the resumed run finishes bitwise identical to baseline
+        let resumed = run_resumable(&opts, Some(&policy), Some(&state), None).unwrap();
+        assert_eq!(resumed.steps_run, 12);
+        assert!(params_bitwise_eq(&baseline.final_params, &resumed.final_params));
+        // the resumed curve is exactly the tail of the baseline curve
+        let (bl, rl) = (baseline.curve.column("loss"), resumed.curve.column("loss"));
+        assert_eq!(rl.len(), 4);
+        for (i, (b, r)) in bl[8..].iter().zip(rl.iter()).enumerate() {
+            assert_eq!(b.to_bits(), r.to_bits(), "resumed step {}", 9 + i);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_guards_reject_mismatched_runs() {
+        let dir = std::env::temp_dir().join("s2fp8_dist_resume_guard_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.s2ts");
+        let opts = resume_fixture_opts(8);
+        let policy = CkptPolicy::new(4, &path);
+        run_resumable(&opts, Some(&policy), None, None).unwrap();
+        let state = TrainState::load(&path).unwrap();
+        assert_eq!(state.step, 8);
+
+        // completed run: nothing to resume
+        let err = run_resumable(&opts, None, Some(&state), None).unwrap_err();
+        assert!(format!("{err:#}").contains("nothing to resume"), "{err:#}");
+
+        // different seed: refused up front
+        let mut other = resume_fixture_opts(16);
+        other.seed = opts.seed + 1;
+        let err = run_resumable(&other, None, Some(&state), None).unwrap_err();
+        assert!(format!("{err:#}").contains("seed"), "{err:#}");
+
+        // different batch geometry: refused up front with a clear error
+        let mut skewed = resume_fixture_opts(16);
+        skewed.global_batch = 32;
+        let err = run_resumable(&skewed, None, Some(&state), None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("global batch"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -35,11 +35,21 @@
 //! `cargo run --bin train_dist` (host MLP/NCF/Transformer workloads on
 //! synthetic data, with `--quant` forward quantization),
 //! `cargo bench --bench perf_allreduce` (wire throughput + compression).
+//!
+//! **Crash safety:** [`coordinator::train_resumable`] layers periodic
+//! atomic checkpointing ([`CkptPolicy`] → a
+//! [`TrainState`](crate::coordinator::resume::TrainState) frame) and
+//! bitwise resume on the same loop, plus a deterministic injected-crash
+//! hook ([`FaultSpec`]) that [`crate::testkit`]'s chaos driver uses to
+//! kill-and-resume runs under a seeded fault plan
+//! (`tests/integration_resume.rs`).
 
 pub mod coordinator;
 pub mod ring;
 pub mod wire;
 
-pub use coordinator::{train, DistOptions, DistReport};
+pub use coordinator::{
+    cli_ckpt_setup, train, train_resumable, CkptPolicy, DistOptions, DistReport, FaultSpec,
+};
 pub use ring::{ring, RingError, RingNode};
 pub use wire::{reduce_chunks, ChunkGrad, Reduced, WireError, WireFormat};

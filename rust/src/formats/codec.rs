@@ -42,8 +42,13 @@ use super::{bf16, fp16, fp8, fp8e4m3, s2fp8};
 /// Framing magic for a serialized [`QuantizedTensor`].
 pub const QT_MAGIC: &[u8; 4] = b"S2QT";
 /// Current framing version ([`QuantizedTensor::to_bytes`] writes this;
-/// readers reject anything newer with [`CodecError::UnsupportedVersion`]).
-pub const QT_VERSION: u8 = 1;
+/// readers accept v1 — the pre-checksum layout — and v2, and reject
+/// anything newer with [`CodecError::UnsupportedVersion`]). v2 appends a
+/// CRC-32 of the whole frame, so corrupted bytes (a flipped bit in a wire
+/// frame or a checkpoint entry) surface as a typed
+/// [`CodecError::ChecksumMismatch`] instead of silently decoding to wrong
+/// values.
+pub const QT_VERSION: u8 = 2;
 
 /// Typed errors of the codec layer. Nothing here panics on untrusted
 /// input: malformed framing, wrong-format decodes and shape mismatches
@@ -52,8 +57,10 @@ pub const QT_VERSION: u8 = 1;
 pub enum CodecError {
     #[error("not a quantized tensor (bad magic; expected \"S2QT\")")]
     BadMagic,
-    #[error("unsupported quantized-tensor version {0} (this build reads v1)")]
+    #[error("unsupported quantized-tensor version {0} (this build reads v1–v2)")]
     UnsupportedVersion(u8),
+    #[error("quantized tensor failed its CRC-32 check (stored {stored:#010x}, computed {computed:#010x}) — corrupt frame")]
+    ChecksumMismatch { stored: u32, computed: u32 },
     #[error("unknown format tag {0} in quantized tensor")]
     UnknownTag(u8),
     #[error("quantized tensor truncated: need {need} more bytes at offset {at}")]
@@ -256,13 +263,17 @@ impl QuantizedTensor {
     //
     //   magic "S2QT" | version u8 | kind tag u8 | flags u8 (bit0: has α/β)
     //   | rank u32 | dims u64[rank] | [α f32, β f32] | payload_len u64
-    //   | payload bytes
+    //   | payload bytes | crc32 u32 (v2+: CRC-32/IEEE of every preceding
+    //   frame byte, magic included)
     //
     // All integers little-endian. Readers reject unknown versions/tags
-    // instead of guessing.
+    // instead of guessing, and verify the v2 checksum so corrupted frames
+    // never decode silently (v1 frames — written before the checksum
+    // existed — are still read, without the integrity check).
 
     /// Append the framed tensor to `buf`.
     pub fn write_to(&self, buf: &mut Vec<u8>) {
+        let start = buf.len();
         buf.extend_from_slice(QT_MAGIC);
         buf.push(QT_VERSION);
         buf.push(kind_tag(self.kind));
@@ -277,6 +288,8 @@ impl QuantizedTensor {
         }
         buf.extend_from_slice(&(self.payload.len() as u64).to_le_bytes());
         buf.extend_from_slice(&self.payload);
+        let crc = crate::util::crc32::crc32(&buf[start..]);
+        buf.extend_from_slice(&crc.to_le_bytes());
     }
 
     /// Exact number of bytes [`Self::write_to`] appends — wire/size
@@ -292,8 +305,8 @@ impl QuantizedTensor {
     /// kept in lockstep with [`Self::write_to`].
     pub fn framed_bytes_for(kind: FormatKind, rank: usize, elems: usize) -> usize {
         // magic 4 + version 1 + tag 1 + flags 1 + rank u32 + dims 8·rank
-        // + optional (α, β) 8 + payload_len u64 + payload
-        19 + 8 * rank
+        // + optional (α, β) 8 + payload_len u64 + payload + crc32 u32
+        23 + 8 * rank
             + if kind.uses_tensor_stats() { 8 } else { 0 }
             + elems * bytes_per_element(kind)
     }
@@ -329,7 +342,7 @@ impl QuantizedTensor {
             return Err(CodecError::BadMagic);
         }
         let version = take(buf, &mut pos, 1)?[0];
-        if version != QT_VERSION {
+        if version != 1 && version != QT_VERSION {
             return Err(CodecError::UnsupportedVersion(version));
         }
         let kind = kind_from_tag(take(buf, &mut pos, 1)?[0])?;
@@ -349,6 +362,14 @@ impl QuantizedTensor {
         let l = take(buf, &mut pos, 8)?;
         let payload_len = u64::from_le_bytes(l.try_into().unwrap()) as usize;
         let payload = take(buf, &mut pos, payload_len)?.to_vec();
+        if version >= 2 {
+            let computed = crate::util::crc32::crc32(&buf[..pos]);
+            let c = take(buf, &mut pos, 4)?;
+            let stored = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            if stored != computed {
+                return Err(CodecError::ChecksumMismatch { stored, computed });
+            }
+        }
         let qt = QuantizedTensor::from_parts(kind, shape, payload, s2)?;
         Ok((qt, pos))
     }
@@ -876,6 +897,48 @@ mod tests {
             QuantizedTensor::from_bytes(&trailing).unwrap_err(),
             CodecError::TrailingBytes(1)
         );
+    }
+
+    #[test]
+    fn corrupt_payload_bits_fail_the_checksum() {
+        let xs = lognormal(64, -4.0, 2.0, 6);
+        let bytes = FormatKind::S2fp8.codec().encode(&xs).to_bytes();
+        // flip one bit in the middle of the payload: without the v2
+        // checksum this would silently decode to a wrong value
+        let mut bad = bytes.clone();
+        let mid = bytes.len() - 20;
+        bad[mid] ^= 0x10;
+        assert!(matches!(
+            QuantizedTensor::from_bytes(&bad).unwrap_err(),
+            CodecError::ChecksumMismatch { .. }
+        ));
+        // ... and a flipped dimension byte (header region) fails typed too
+        let mut bad = bytes.clone();
+        bad[12] ^= 0x01;
+        assert!(QuantizedTensor::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn legacy_v1_frames_without_checksum_still_parse() {
+        // Hand-build the v1 layout (no trailing crc32) for an fp8 tensor:
+        // old checkpoints embed these and must stay readable.
+        let payload = vec![0x3Cu8, 0x40, 0xBC];
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(QT_MAGIC);
+        v1.push(1); // version 1
+        v1.push(3); // fp8 tag
+        v1.push(0); // no α/β
+        v1.extend_from_slice(&1u32.to_le_bytes()); // rank
+        v1.extend_from_slice(&3u64.to_le_bytes()); // dim
+        v1.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        v1.extend_from_slice(&payload);
+        let qt = QuantizedTensor::from_bytes(&v1).unwrap();
+        assert_eq!(qt.kind(), FormatKind::Fp8);
+        assert_eq!(qt.shape(), &[3]);
+        assert_eq!(qt.payload(), &payload[..]);
+        // re-serialized, it upgrades to the checksummed v2 frame
+        let rt = QuantizedTensor::from_bytes(&qt.to_bytes()).unwrap();
+        assert_eq!(rt, qt);
     }
 
     #[test]

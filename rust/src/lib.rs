@@ -69,6 +69,24 @@
 //! formats can be A/B'd on any host model, including over the S2FP8
 //! gradient wire.
 //!
+//! ## Fault tolerance & chaos testing
+//!
+//! Long-running jobs survive crashes without losing reproducibility:
+//! [`dist::train_resumable`] checkpoints the **full training state** — a
+//! [`coordinator::resume::TrainState`] frame holding the FP32 master
+//! parameters (lossless), step counter, data-stream cursor and RNG state
+//! — atomically (write-temp + rename) on a fixed cadence, and a resumed
+//! run is **bitwise identical** to the uninterrupted one, for every zoo
+//! model, at any worker count. The [`testkit`] subsystem locks this
+//! down deterministically: a seeded [`testkit::FaultPlan`] decides which
+//! worker dies at which step, how wire frames get bit-flipped or
+//! truncated, and where checkpoint writes get torn; the
+//! [`testkit::chaos`] driver runs kill-and-resume cycles through the
+//! real coordinator, and the v2 `QuantizedTensor` framing's CRC-32
+//! guarantees corrupted bytes surface as typed errors instead of
+//! silently-wrong numbers (`tests/integration_resume.rs`,
+//! `tests/prop_formats.rs`).
+//!
 //! ## Serving
 //!
 //! Beyond training, the crate serves trained models online: [`serve`] is a
@@ -120,6 +138,7 @@ pub mod models;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;
+pub mod testkit;
 pub mod util;
 
 /// Crate-wide result type (anyhow-based, matching the `xla` crate style).

@@ -233,6 +233,10 @@ impl HostModel for MlpModel {
     fn sgd_step(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()> {
         self.p.sgd_step(mean_grads, lr)
     }
+
+    fn restore_params(&mut self, params: &[(String, Tensor)]) -> Result<()> {
+        self.p.restore(params)
+    }
 }
 
 #[cfg(test)]

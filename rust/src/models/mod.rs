@@ -210,6 +210,43 @@ impl ParamSet {
         }
     }
 
+    /// Overwrite the FP32 masters from a checkpoint snapshot (canonical
+    /// slot order, names and shapes validated), then re-stage the
+    /// quantized copies if a [`QuantMode`] is active — the restore half
+    /// of the crash-safe resume contract: after `restore(snapshot())`
+    /// the effective parameters are bitwise identical to the originals.
+    pub fn restore(&mut self, slots: &[(String, Tensor)]) -> Result<()> {
+        if slots.len() != self.master.len() {
+            bail!(
+                "snapshot has {} slots, model has {} parameter slots",
+                slots.len(),
+                self.master.len()
+            );
+        }
+        for (i, (name, t)) in slots.iter().enumerate() {
+            if name != &self.names[i] {
+                bail!(
+                    "snapshot slot {i} is '{name}', model expects '{}' (canonical order)",
+                    self.names[i]
+                );
+            }
+            if t.shape() != self.master[i].shape() {
+                bail!(
+                    "snapshot '{name}' has shape {:?}, parameter is {:?}",
+                    t.shape(),
+                    self.master[i].shape()
+                );
+            }
+        }
+        for (m, (_, t)) in self.master.iter_mut().zip(slots.iter()) {
+            *m = t.clone();
+        }
+        if self.quant != QuantMode::None {
+            self.restage();
+        }
+        Ok(())
+    }
+
     /// `p -= lr·g` on the FP32 masters (shape-validated), then re-stage
     /// the quantized copies if a [`QuantMode`] is active.
     pub fn sgd_step(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()> {
@@ -295,6 +332,13 @@ pub trait HostModel: Send + Sync {
     /// Apply fully-reduced **mean** gradients with plain SGD on the FP32
     /// masters.
     fn sgd_step(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()>;
+
+    /// Overwrite every FP32 master from a [`HostModel::params`] snapshot
+    /// (canonical order; names/shapes validated) and re-stage any active
+    /// [`QuantMode`] — the restore hook crash-safe resume
+    /// ([`crate::coordinator::resume`]) uses to rewind a replica to a
+    /// checkpointed step, bitwise.
+    fn restore_params(&mut self, params: &[(String, Tensor)]) -> Result<()>;
 }
 
 impl HostModel for Box<dyn HostModel> {
@@ -344,6 +388,10 @@ impl HostModel for Box<dyn HostModel> {
 
     fn sgd_step(&mut self, mean_grads: &[Tensor], lr: f32) -> Result<()> {
         (**self).sgd_step(mean_grads, lr)
+    }
+
+    fn restore_params(&mut self, params: &[(String, Tensor)]) -> Result<()> {
+        (**self).restore_params(params)
     }
 }
 
@@ -430,6 +478,47 @@ mod tests {
         // back to FP32: eff is the master again
         p.set_quant_mode(QuantMode::None);
         assert_eq!(p.eff(0), p.master(0));
+    }
+
+    #[test]
+    fn restore_rewinds_masters_bitwise_and_restages_quant() {
+        let mut p = small_set();
+        p.set_quant_mode(QuantMode::Weights(FormatKind::S2fp8));
+        let snapshot = p.snapshot();
+        let staged_before = p.eff(0).clone();
+        // take a step, then restore: masters AND staged copies must be
+        // bitwise back where they were
+        let g = vec![Tensor::filled(vec![4, 3], 0.25), Tensor::filled(vec![3], 0.25)];
+        p.sgd_step(&g, 0.1).unwrap();
+        assert_ne!(p.snapshot()[0].1, snapshot[0].1);
+        p.restore(&snapshot).unwrap();
+        for ((na, ta), (nb, tb)) in p.snapshot().iter().zip(snapshot.iter()) {
+            assert_eq!(na, nb);
+            for (x, y) in ta.data().iter().zip(tb.data().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        for (x, y) in p.eff(0).data().iter().zip(staged_before.data().iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "staged copy must follow the restore");
+        }
+    }
+
+    #[test]
+    fn restore_validates_order_names_and_shapes() {
+        let mut p = small_set();
+        let snapshot = p.snapshot();
+        // wrong arity
+        assert!(p.restore(&snapshot[..1]).is_err());
+        // swapped order
+        let mut swapped = snapshot.clone();
+        swapped.swap(0, 1);
+        let err = p.restore(&swapped).unwrap_err().to_string();
+        assert!(err.contains("canonical order"), "{err}");
+        // wrong shape
+        let mut bad = snapshot.clone();
+        bad[1].1 = Tensor::zeros(vec![4]);
+        let err = p.restore(&bad).unwrap_err().to_string();
+        assert!(err.contains("params/b"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,160 @@
+//! The **run–kill–resume driver**: execute the same workload three times —
+//! uninterrupted baseline, a run that crashes under an injected
+//! [`FaultPlan`] kill while checkpointing, and a resume from whatever
+//! checkpoint survived — and hand back everything a test needs to assert
+//! the resumed run is bitwise indistinguishable from the baseline.
+//!
+//! The driver is deliberately dumb about *what* it trains: it takes the
+//! same `make_replica` / `provider` closures as
+//! [`dist::train_resumable`](crate::dist::train_resumable), so the chaos
+//! suite runs the real zoo workloads through the real coordinator — no
+//! mocked trainer, no special code path.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::grad_step::GradStep;
+use crate::coordinator::resume::TrainState;
+use crate::dist::{train_resumable, CkptPolicy, DistOptions, DistReport};
+use crate::runtime::HostValue;
+
+use super::fault::FaultPlan;
+
+/// Outcome of one kill-and-resume cycle.
+#[derive(Debug)]
+pub struct ChaosReport {
+    /// The uninterrupted reference run.
+    pub baseline: DistReport,
+    /// The run continued from the surviving checkpoint (or from scratch
+    /// when the kill landed before the first checkpoint boundary).
+    pub resumed: DistReport,
+    /// Step of the checkpoint the resume started from (0 = cold restart).
+    pub resumed_from_step: usize,
+    /// The crashed run's error chain (must name the injected fault).
+    pub crash_error: String,
+}
+
+/// Run baseline → crash (under `plan.kill`, checkpointing every
+/// `ckpt_every` steps into `dir`) → resume. Returns every artifact;
+/// assert with [`verify_bitwise_resume`].
+pub fn run_kill_resume<R, MF, BP>(
+    opts: &DistOptions,
+    ckpt_every: usize,
+    dir: &Path,
+    plan: &FaultPlan,
+    make_replica: MF,
+    provider: BP,
+) -> Result<ChaosReport>
+where
+    R: GradStep,
+    MF: Fn(usize) -> Result<R> + Sync,
+    BP: Fn(usize, &[usize]) -> Result<Vec<HostValue>> + Sync,
+{
+    if plan.kill.kill_step > opts.steps {
+        bail!(
+            "fault plan kills at step {} but the run only has {} steps",
+            plan.kill.kill_step,
+            opts.steps
+        );
+    }
+    if plan.kill.kill_rank >= opts.workers {
+        bail!(
+            "fault plan kills rank {} but the run only has {} workers",
+            plan.kill.kill_rank,
+            opts.workers
+        );
+    }
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(format!("chaos_{:016x}.s2ts", plan.seed));
+    std::fs::remove_file(&path).ok();
+    let policy = CkptPolicy::new(ckpt_every, &path);
+
+    let baseline = train_resumable(opts, &make_replica, &provider, None, None, None)
+        .context("uninterrupted baseline run")?;
+
+    let crash_error = match train_resumable(
+        opts,
+        &make_replica,
+        &provider,
+        Some(&policy),
+        None,
+        Some(&plan.kill),
+    ) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => bail!(
+            "injected kill at rank {} step {} never fired",
+            plan.kill.kill_rank,
+            plan.kill.kill_step
+        ),
+    };
+    if !crash_error.contains("injected fault") {
+        bail!("crash run failed for the wrong reason: {crash_error}");
+    }
+
+    // resume from whatever survived: the newest atomic checkpoint, or —
+    // when the kill landed before the first boundary — a cold restart
+    let state = if path.exists() {
+        Some(TrainState::load(&path).context("loading the surviving checkpoint")?)
+    } else {
+        None
+    };
+    let resumed_from_step = state.as_ref().map(|s| s.step).unwrap_or(0);
+    let resumed = train_resumable(
+        opts,
+        &make_replica,
+        &provider,
+        Some(&policy),
+        state.as_ref(),
+        None,
+    )
+    .context("resumed run")?;
+
+    Ok(ChaosReport { baseline, resumed, resumed_from_step, crash_error })
+}
+
+/// Assert the resumed run is bitwise indistinguishable from the baseline:
+/// identical final parameters, and a loss curve that is exactly the tail
+/// of the baseline's (`resumed_from_step + 1 ..= steps`). Returns a
+/// descriptive error naming the first divergence.
+pub fn verify_bitwise_resume(report: &ChaosReport) -> Result<()> {
+    let (a, b) = (&report.baseline, &report.resumed);
+    if a.final_params.len() != b.final_params.len() {
+        bail!(
+            "{} baseline params vs {} resumed",
+            a.final_params.len(),
+            b.final_params.len()
+        );
+    }
+    for ((na, ta), (nb, tb)) in a.final_params.iter().zip(b.final_params.iter()) {
+        if na != nb {
+            bail!("param order diverged: '{na}' vs '{nb}'");
+        }
+        if ta.shape() != tb.shape() {
+            bail!("'{na}': shape {:?} vs {:?}", ta.shape(), tb.shape());
+        }
+        for (i, (x, y)) in ta.data().iter().zip(tb.data().iter()).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                bail!("'{na}'[{i}]: baseline {x} vs resumed {y} — resume is not bitwise");
+            }
+        }
+    }
+    let (la, lb) = (a.curve.column("loss"), b.curve.column("loss"));
+    let skip = report.resumed_from_step;
+    if la.len() != skip + lb.len() {
+        bail!(
+            "baseline curve has {} rows, resumed {} from step {skip} — lengths disagree",
+            la.len(),
+            lb.len()
+        );
+    }
+    for (i, (x, y)) in la[skip..].iter().zip(lb.iter()).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            bail!(
+                "loss diverged at step {}: baseline {x} vs resumed {y}",
+                skip + i + 1
+            );
+        }
+    }
+    Ok(())
+}

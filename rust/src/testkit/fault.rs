@@ -1,0 +1,150 @@
+//! Seeded, replayable fault plans.
+//!
+//! A [`FaultPlan`] deterministically derives every fault the chaos suite
+//! injects — which worker dies and when, how a wire frame gets corrupted,
+//! where a checkpoint write gets cut off — from a single `u64` seed. A
+//! failing chaos run is therefore reproducible from one number in the CI
+//! log, the same contract the property framework (`util::prop`) uses.
+
+use crate::dist::FaultSpec;
+use crate::util::rng::{Pcg32, Rng};
+
+/// One deterministic byte-level corruption, drawn with raw entropy and
+/// reduced against the actual buffer length at apply time (so one plan
+/// works on frames of any size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Corruption {
+    /// Flip bit `entropy % (8 · len)` of the buffer.
+    BitFlip { entropy: u64 },
+    /// Truncate the buffer to `entropy % len` bytes (always strictly
+    /// shorter — a prefix, like a torn write).
+    Truncate { entropy: u64 },
+}
+
+impl Corruption {
+    /// Apply to `bytes` in place; empty buffers are left alone.
+    pub fn apply(&self, bytes: &mut Vec<u8>) {
+        if bytes.is_empty() {
+            return;
+        }
+        match self {
+            Corruption::BitFlip { entropy } => {
+                let bit = (*entropy % (bytes.len() as u64 * 8)) as usize;
+                bytes[bit / 8] ^= 1 << (bit % 8);
+            }
+            Corruption::Truncate { entropy } => {
+                let keep = (*entropy % bytes.len() as u64) as usize;
+                bytes.truncate(keep);
+            }
+        }
+    }
+
+    /// Human description against a concrete buffer length (test failure
+    /// messages).
+    pub fn describe(&self, len: usize) -> String {
+        if len == 0 {
+            return "no-op (empty buffer)".to_string();
+        }
+        match self {
+            Corruption::BitFlip { entropy } => {
+                let bit = (*entropy % (len as u64 * 8)) as usize;
+                format!("flip bit {} of byte {} (of {len} bytes)", bit % 8, bit / 8)
+            }
+            Corruption::Truncate { entropy } => {
+                format!("truncate {len} bytes to {}", *entropy % len as u64)
+            }
+        }
+    }
+}
+
+/// Everything a chaos run injects, derived from one seed.
+///
+/// * `kill` — worker `kill_rank` crashes at `kill_step` (the
+///   [`FaultSpec`] hook in [`crate::dist::train_resumable`]);
+/// * `wire` — a corruption to apply to a framed wire/checkpoint tensor
+///   (must surface as a typed `CodecError`, never a silent decode);
+/// * `ckpt` — a corruption to apply to a serialized `TrainState` (must
+///   surface as a typed load error, never a wrong resume).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub kill: FaultSpec,
+    pub wire: Corruption,
+    pub ckpt: Corruption,
+}
+
+impl FaultPlan {
+    /// Derive the plan for a run of `workers` workers over `steps` steps.
+    /// The kill lands in `[2, steps]` so at least one step always
+    /// completes before the crash; the same `(seed, workers, steps)`
+    /// always yields the identical plan.
+    pub fn from_seed(seed: u64, workers: usize, steps: usize) -> Self {
+        assert!(workers >= 1 && steps >= 2, "need ≥1 worker and ≥2 steps for a kill plan");
+        let mut rng = Pcg32::new(seed, 0xFA_0173);
+        let kill = FaultSpec {
+            kill_rank: rng.next_below(workers as u64) as usize,
+            kill_step: 2 + rng.next_below(steps as u64 - 1) as usize,
+        };
+        let wire = if rng.next_f32() < 0.5 {
+            Corruption::BitFlip { entropy: rng.next_u64() }
+        } else {
+            Corruption::Truncate { entropy: rng.next_u64() }
+        };
+        let ckpt = if rng.next_f32() < 0.5 {
+            Corruption::BitFlip { entropy: rng.next_u64() }
+        } else {
+            Corruption::Truncate { entropy: rng.next_u64() }
+        };
+        FaultPlan { seed, kill, wire, ckpt }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_in_the_seed() {
+        for seed in [0u64, 1, 2020, 0xDEAD_BEEF] {
+            let a = FaultPlan::from_seed(seed, 4, 20);
+            let b = FaultPlan::from_seed(seed, 4, 20);
+            assert_eq!(a, b);
+        }
+        assert_ne!(
+            FaultPlan::from_seed(1, 4, 20),
+            FaultPlan::from_seed(2, 4, 20),
+            "different seeds must draw different plans"
+        );
+    }
+
+    #[test]
+    fn kill_lands_in_bounds() {
+        for seed in 0..200u64 {
+            let plan = FaultPlan::from_seed(seed, 3, 10);
+            assert!(plan.kill.kill_rank < 3, "{plan:?}");
+            assert!((2..=10).contains(&plan.kill.kill_step), "{plan:?}");
+        }
+    }
+
+    #[test]
+    fn corruption_applies_deterministically() {
+        let flip = Corruption::BitFlip { entropy: 1234567 };
+        let mut a = vec![0u8; 64];
+        let mut b = vec![0u8; 64];
+        flip.apply(&mut a);
+        flip.apply(&mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.iter().map(|x| x.count_ones()).sum::<u32>(), 1, "exactly one bit");
+
+        let trunc = Corruption::Truncate { entropy: 70 };
+        let mut c = vec![7u8; 64];
+        trunc.apply(&mut c);
+        assert_eq!(c.len(), 70 % 64);
+
+        // empty buffers are a no-op, not a panic
+        let mut empty: Vec<u8> = Vec::new();
+        flip.apply(&mut empty);
+        trunc.apply(&mut empty);
+        assert!(empty.is_empty());
+    }
+}

@@ -1,0 +1,37 @@
+//! **Deterministic fault injection** for the crash-safety guarantees.
+//!
+//! Production-scale training jobs die: workers crash mid-step, wire
+//! frames arrive with flipped bits, checkpoint writes get cut off at an
+//! arbitrary byte. Low-precision state makes such corruption cheaper to
+//! hit and harder to notice (a wrong FP8 code is just another small
+//! number), so this crate treats failure paths as first-class tested
+//! behavior rather than ad-hoc smoke runs. `testkit` is the machinery:
+//!
+//! * [`fault::FaultPlan`] — every fault of a chaos run (kill
+//!   worker *k* at step *s*, bit-flip/truncate a frame, cut a checkpoint
+//!   write short) derived deterministically from **one seed**, so any CI
+//!   failure replays from a single number;
+//! * [`fault::Corruption`] — seeded byte-level corruption (single-bit
+//!   flip, prefix truncation) applied to framed
+//!   [`QuantizedTensor`](crate::formats::QuantizedTensor) bytes or
+//!   serialized [`TrainState`](crate::coordinator::resume::TrainState)s;
+//!   both must answer with typed errors, never a panic and never a
+//!   silently wrong decode (the v2 framing's CRC-32 is what makes the
+//!   latter provable);
+//! * [`chaos::run_kill_resume`] — the run–kill–resume driver: baseline
+//!   run, a crashed run under the plan's kill (through the real
+//!   [`FaultSpec`](crate::dist::FaultSpec) hook in the distributed
+//!   coordinator, so peers see a genuine ring disconnect), then a resume
+//!   from the surviving atomic checkpoint;
+//!   [`chaos::verify_bitwise_resume`] asserts the resumed run is
+//!   bitwise indistinguishable from the baseline.
+//!
+//! `tests/integration_resume.rs` drives all of it over the zoo workloads
+//! (MLP, NCF, Transformer) under FP32 and S2FP8 wire/quant; the CI chaos
+//! leg runs the suite under fixed plan seeds.
+
+pub mod chaos;
+pub mod fault;
+
+pub use chaos::{run_kill_resume, verify_bitwise_resume, ChaosReport};
+pub use fault::{Corruption, FaultPlan};

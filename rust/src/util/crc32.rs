@@ -1,0 +1,71 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the integrity
+//! check behind the v2 `QuantizedTensor` framing and the `TrainState`
+//! resume frame. The offline vendor set has no `crc` crate, so the
+//! byte-at-a-time table implementation lives here; throughput is
+//! irrelevant next to the payload encode itself (one table lookup per
+//! byte), and the format-level property is what matters: any single-bit
+//! flip in a protected frame is detected with certainty, and random
+//! corruption escapes with probability 2^-32.
+
+/// Lookup table for the reflected IEEE polynomial, built at compile time.
+const TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32/IEEE of `bytes` (init `0xFFFF_FFFF`, final xor `0xFFFF_FFFF` —
+/// the common zlib/PNG parameterization).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Reference values from the zlib crc32 parameterization.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+        assert_eq!(crc32(&[0u8]), 0xD202_EF8D);
+    }
+
+    #[test]
+    fn every_single_bit_flip_changes_the_crc() {
+        let data: Vec<u8> = (0..64u8).collect();
+        let clean = crc32(&data);
+        for byte in 0..data.len() {
+            for bit in 0..8 {
+                let mut flipped = data.clone();
+                flipped[byte] ^= 1 << bit;
+                assert_ne!(crc32(&flipped), clean, "flip at byte {byte} bit {bit}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_truncation_changes_the_crc() {
+        let data: Vec<u8> = (0..100u8).map(|i| i.wrapping_mul(37)).collect();
+        let clean = crc32(&data);
+        for keep in 0..data.len() {
+            assert_ne!(crc32(&data[..keep]), clean, "truncated to {keep}");
+        }
+    }
+}

@@ -12,6 +12,7 @@
 //!   shrinking (stand-in for `proptest`).
 
 pub mod argparse;
+pub mod crc32;
 pub mod json;
 pub mod logging;
 pub mod prop;

@@ -135,6 +135,20 @@ impl Pcg32 {
         Pcg32::new(self.next_u64(), stream)
     }
 
+    /// The raw `(state, inc)` pair — everything the generator is.
+    /// Training-state checkpoints store this so a resumed run can verify
+    /// its replayed RNG landed on the exact sequence position the
+    /// interrupted run left off at (`coordinator::resume`).
+    pub fn raw_state(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg32::raw_state`] output — bitwise
+    /// continuation of the original stream.
+    pub fn from_raw_state(state: u64, inc: u64) -> Self {
+        Pcg32 { state, inc }
+    }
+
     #[inline]
     fn step(&mut self) -> u64 {
         let old = self.state;
@@ -186,6 +200,19 @@ mod tests {
         assert_eq!(v[0], 6457827717110365317);
         assert_eq!(v[1], 3203168211198807973);
         assert_eq!(v[2], 9817491932198370423);
+    }
+
+    #[test]
+    fn raw_state_roundtrip_continues_the_stream() {
+        let mut a = Pcg32::new(9, 4);
+        for _ in 0..17 {
+            a.next_u32();
+        }
+        let (state, inc) = a.raw_state();
+        let mut b = Pcg32::from_raw_state(state, inc);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -83,6 +83,86 @@ fn unknown_versions_are_rejected_not_misparsed() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// corrupt-load coverage: zero-length, garbage-header and mid-tensor-
+// truncated files answer with typed errors naming the offending slot
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_length_checkpoint_is_a_clear_error() {
+    let err = deserialize(&[]).unwrap_err().to_string();
+    assert!(err.contains("empty checkpoint"), "{err}");
+    let err = deserialize_raw(&[]).unwrap_err().to_string();
+    assert!(err.contains("empty checkpoint"), "{err}");
+}
+
+#[test]
+fn garbage_header_is_a_clear_error() {
+    // plausible-length garbage: must fail on the magic, not misparse
+    let garbage: Vec<u8> = (0..256u32).map(|i| (i * 31 % 251) as u8).collect();
+    let err = deserialize(&garbage).unwrap_err().to_string();
+    assert!(err.contains("not a S2CK checkpoint"), "{err}");
+    // a file shorter than the magic itself
+    let err = deserialize(b"S2").unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+}
+
+#[test]
+fn mid_tensor_truncation_names_the_offending_slot() {
+    // single known slot: header is magic 4 + version 4 + n 4, entry
+    // header is name_len 4 + name + dtype 1, then the packed frame
+    let name = "params/truncate_me";
+    let t: Vec<f32> = (0..1000).map(|i| (i as f32) * 2.5e-4).collect();
+    let slots = vec![(name.to_string(), HostValue::f32(vec![1000], t))];
+    let bytes = serialize(&slots, true);
+    let frame_start = 12 + 4 + name.len() + 1;
+    // cut mid-frame at several depths (frame header, α/β region, deep in
+    // the payload): the error chain must name the slot
+    for off in [2usize, 20, 40, 500, 1000] {
+        let cut = frame_start + off;
+        let err = format!("{:#}", deserialize(&bytes[..cut]).unwrap_err());
+        assert!(err.contains(name), "cut at frame+{off}: {err}");
+        assert!(
+            err.contains("truncated") || err.contains("CRC-32") || err.contains("Truncated"),
+            "cut at frame+{off}: {err}"
+        );
+    }
+    // and on the real multi-tensor model, every truncation whatsoever is
+    // an error — never a parse, never a panic
+    let bytes = serialize(&reference_slots(), true);
+    for keep in (0..bytes.len()).step_by(257) {
+        assert!(deserialize(&bytes[..keep]).is_err(), "{keep}-byte prefix parsed");
+    }
+}
+
+#[test]
+fn mid_tensor_bit_flips_fail_the_frame_checksum_with_the_slot_name() {
+    // single slot so the payload offset is known exactly: the checkpoint
+    // header is magic 4 + version 4 + n 4, the entry header is
+    // name_len 4 + name + dtype 1, and everything after that is the
+    // packed QuantizedTensor frame
+    let name = "params/corrupt_me";
+    let t: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 1e-3).collect();
+    let slots = vec![(name.to_string(), HostValue::f32(vec![1000], t))];
+    let bytes = serialize(&slots, true);
+    let frame_start = 12 + 4 + name.len() + 1;
+    // flip one bit at several depths inside the frame (header, α/β,
+    // payload, trailing crc): every one must fail typed, with the slot
+    // named in the context chain, and the deep-payload flips must be the
+    // CRC-32 catching what structural checks cannot see
+    for (off, must_mention_crc) in
+        [(8usize, false), (30, false), (200, true), (900, true)]
+    {
+        let mut bad = bytes.clone();
+        bad[frame_start + off] ^= 0x08;
+        let err = format!("{:#}", deserialize(&bad).unwrap_err());
+        assert!(err.contains(name) || err.contains("entry '"), "flip at +{off}: {err}");
+        if must_mention_crc {
+            assert!(err.contains("CRC-32"), "flip at +{off} should fail the crc: {err}");
+        }
+    }
+}
+
 /// Reference model for the CI size gate.
 fn reference_slots() -> Vec<(String, HostValue)> {
     synth_ncf_slots(&NcfDims::default(), 7)

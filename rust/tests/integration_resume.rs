@@ -1,0 +1,266 @@
+//! Chaos suite: crash-safe resumable training under deterministic fault
+//! injection (`src/testkit/`).
+//!
+//! For every zoo workload (MLP, NCF, Transformer) and both gradient wire
+//! formats (FP32 and S2FP8), a run that is **killed mid-step** by a
+//! seeded `FaultPlan` and **resumed** from the surviving atomic
+//! checkpoint must be bitwise identical to the uninterrupted run: same
+//! final parameters, same loss-curve tail, same eval metrics. A second
+//! block pins the corruption story: a bit-flipped or truncated wire
+//! frame, checkpoint file, or train state answers with a typed error —
+//! never a panic, never a silently wrong resume.
+//!
+//! Knobs (CI): `CHAOS_SEEDS` — comma-separated `FaultPlan` seeds
+//! (default `2020,77`); `DIST_WORKERS` — worker count for the chaos runs
+//! (default 2; must divide 4).
+
+use s2fp8::coordinator::resume::{tmp_path, TrainState};
+use s2fp8::coordinator::trainer::LrSchedule;
+use s2fp8::dist::{DistOptions, WireFormat};
+use s2fp8::formats::QuantizedTensor;
+use s2fp8::models::{zoo, QuantMode};
+use s2fp8::testkit::{run_kill_resume, verify_bitwise_resume, ChaosReport, FaultPlan};
+
+const CHUNKS: usize = 4;
+
+fn chaos_seeds() -> Vec<u64> {
+    let raw = std::env::var("CHAOS_SEEDS").unwrap_or_default();
+    let seeds: Vec<u64> = raw.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+    if seeds.is_empty() {
+        // a malformed (non-empty) spec must fail loudly, not turn every
+        // chaos test into a vacuous zero-iteration pass
+        assert!(
+            raw.trim().is_empty(),
+            "CHAOS_SEEDS='{raw}' parsed to no seeds — use comma-separated u64s"
+        );
+        return vec![2020, 77];
+    }
+    seeds
+}
+
+fn chaos_workers() -> usize {
+    let raw = std::env::var("DIST_WORKERS").unwrap_or_default();
+    let first = raw.split(',').next().map(str::trim).unwrap_or("");
+    if first.is_empty() {
+        return 2;
+    }
+    // fail loudly on a misconfigured matrix instead of silently testing
+    // at a different worker count than the CI leg claims
+    let w: usize = first
+        .parse()
+        .unwrap_or_else(|_| panic!("DIST_WORKERS='{raw}' is not a worker count"));
+    assert!(
+        w >= 1 && CHUNKS % w == 0,
+        "DIST_WORKERS={w} must be ≥1 and divide {CHUNKS} for the chaos suite"
+    );
+    w
+}
+
+fn chaos_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("s2fp8_chaos_{tag}"))
+}
+
+/// One kill-and-resume cycle on a zoo workload; returns the report for
+/// extra assertions on top of the bitwise verification.
+fn chaos_cycle(
+    model: &str,
+    wire: WireFormat,
+    quant: QuantMode,
+    plan_seed: u64,
+    steps: usize,
+) -> ChaosReport {
+    let wl = zoo::workload(model, 7, quant).unwrap();
+    let workers = chaos_workers();
+    let mut opts = DistOptions::new(workers, wire);
+    opts.chunks = CHUNKS;
+    opts.global_batch = 16;
+    opts.n_examples = wl.n_examples;
+    opts.steps = steps;
+    opts.lr = LrSchedule::Constant(0.05);
+    opts.seed = 7;
+
+    let plan = FaultPlan::from_seed(plan_seed, workers, steps);
+    let dir = chaos_dir(&format!("{model}_{}_{}_{plan_seed}", wire.name(), quant.name()));
+    let report = run_kill_resume(
+        &opts,
+        2, // checkpoint every 2 steps
+        &dir,
+        &plan,
+        |_rank| wl.replica(),
+        |step, idx| wl.batch(step, idx),
+    )
+    .unwrap_or_else(|e| panic!("{model}/{}/{}, plan seed {plan_seed}: {e:#}", wire.name(), quant.name()));
+
+    verify_bitwise_resume(&report).unwrap_or_else(|e| {
+        panic!(
+            "{model}/{}/{} not bitwise under plan seed {plan_seed} (kill {:?}): {e:#}",
+            wire.name(),
+            quant.name(),
+            plan.kill
+        )
+    });
+
+    // eval metrics of the resumed parameters are exactly the baseline's
+    let base = wl.eval_params(&report.baseline.final_params).unwrap();
+    let res = wl.eval_params(&report.resumed.final_params).unwrap();
+    assert_eq!(base.len(), res.len());
+    for ((na, va), (nb, vb)) in base.iter().zip(res.iter()) {
+        assert_eq!(na, nb);
+        assert_eq!(
+            va.to_bits(),
+            vb.to_bits(),
+            "{model}/{}: eval '{na}' diverged: {va} vs {vb}",
+            wire.name()
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    report
+}
+
+// ---------------------------------------------------------------------------
+// kill-then-resume is bitwise identical, per model × wire, per plan seed
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mlp_kill_resume_is_bitwise_on_both_wires() {
+    for wire in [WireFormat::Fp32, WireFormat::S2fp8] {
+        for seed in chaos_seeds() {
+            let report = chaos_cycle("mlp", wire, QuantMode::None, seed, 10);
+            assert!(report.crash_error.contains("injected fault"), "{}", report.crash_error);
+        }
+    }
+}
+
+#[test]
+fn ncf_kill_resume_is_bitwise_on_both_wires() {
+    for wire in [WireFormat::Fp32, WireFormat::S2fp8] {
+        for seed in chaos_seeds() {
+            chaos_cycle("ncf", wire, QuantMode::None, seed, 10);
+        }
+    }
+}
+
+#[test]
+fn transformer_kill_resume_is_bitwise_on_both_wires() {
+    for wire in [WireFormat::Fp32, WireFormat::S2fp8] {
+        for seed in chaos_seeds() {
+            chaos_cycle("transformer", wire, QuantMode::None, seed, 6);
+        }
+    }
+}
+
+#[test]
+fn quantized_forward_kill_resume_is_bitwise() {
+    // the paper's full regime: S2FP8-quantized forward over the S2FP8
+    // wire — resume must restore masters AND re-stage the quantized
+    // copies to land bitwise
+    let quant = QuantMode::parse("s2fp8").unwrap();
+    for seed in chaos_seeds() {
+        chaos_cycle("mlp", WireFormat::S2fp8, quant, seed, 10);
+    }
+}
+
+#[test]
+fn chaos_cycles_replay_identically_from_the_same_seed() {
+    let a = chaos_cycle("mlp", WireFormat::S2fp8, QuantMode::None, 4242, 10);
+    let b = chaos_cycle("mlp", WireFormat::S2fp8, QuantMode::None, 4242, 10);
+    assert_eq!(a.resumed_from_step, b.resumed_from_step);
+    assert_eq!(a.crash_error, b.crash_error);
+    for ((na, ta), (nb, tb)) in
+        a.resumed.final_params.iter().zip(b.resumed.final_params.iter())
+    {
+        assert_eq!(na, nb);
+        for (x, y) in ta.data().iter().zip(tb.data().iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// corruption: wire frames and train states fail typed, never lie
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupted_wire_frames_fail_typed_under_the_fault_plan() {
+    // frames like the gradient wire's: an S2FP8 tensor and an FP32 one
+    let values: Vec<f32> = (0..257).map(|i| ((i as f32) - 128.0) * 1.7e-4).collect();
+    for wire in [WireFormat::Fp32, WireFormat::S2fp8] {
+        let frame = wire.kind().codec().encode(&values).to_bytes();
+        for seed in chaos_seeds() {
+            let plan = FaultPlan::from_seed(seed, 2, 10);
+            let mut corrupt = frame.clone();
+            plan.wire.apply(&mut corrupt);
+            let err = QuantizedTensor::from_bytes(&corrupt).expect_err(&format!(
+                "{} frame must not decode after: {}",
+                wire.name(),
+                plan.wire.describe(frame.len())
+            ));
+            // typed CodecError, and stringly useful
+            assert!(!format!("{err}").is_empty());
+        }
+    }
+}
+
+#[test]
+fn corrupted_train_states_fail_typed_under_the_fault_plan() {
+    let state = sample_state();
+    let bytes = state.serialize();
+    for seed in chaos_seeds().into_iter().chain(0..32) {
+        let plan = FaultPlan::from_seed(seed, 2, 10);
+        let mut corrupt = bytes.clone();
+        plan.ckpt.apply(&mut corrupt);
+        assert!(
+            TrainState::deserialize(&corrupt).is_err(),
+            "train state still parsed after: {}",
+            plan.ckpt.describe(bytes.len())
+        );
+    }
+}
+
+#[test]
+fn torn_checkpoint_write_leaves_the_previous_state_loadable() {
+    // the atomic-save contract: a crash *during* a checkpoint write (temp
+    // file half-written, rename never happened) must leave the previous
+    // complete state in place
+    let dir = chaos_dir("torn_write");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("state.s2ts");
+
+    let old = sample_state();
+    old.save_atomic(&path).unwrap();
+
+    let mut newer = sample_state();
+    newer.step += 10;
+    let mut torn = newer.serialize();
+    torn.truncate(torn.len() / 3); // the crash point
+    std::fs::write(tmp_path(&path), &torn).unwrap();
+
+    // the real path still holds the old state, bitwise
+    let loaded = TrainState::load(&path).unwrap();
+    assert_eq!(loaded, old);
+    // and the torn temp itself is typed-rejected, not resumed from
+    assert!(TrainState::load(tmp_path(&path)).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn sample_state() -> TrainState {
+    use s2fp8::tensor::Tensor;
+    use s2fp8::util::rng::Pcg32;
+    let mut rng = Pcg32::new(3, 9);
+    TrainState {
+        step: 6,
+        epoch: 0,
+        cursor: 96,
+        n_examples: 256,
+        global_batch: 16,
+        chunks: 4,
+        rng_state: (123, 77),
+        seed: 7,
+        meta: vec![("model".into(), "mlp".into())],
+        params: vec![
+            ("params/w".into(), Tensor::randn(vec![8, 4], &mut rng)),
+            ("params/b".into(), Tensor::randn(vec![4], &mut rng)),
+        ],
+    }
+}
