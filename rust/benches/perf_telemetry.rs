@@ -1,0 +1,129 @@
+//! §Perf bench — overhead of the telemetry layer on the instrumented
+//! encode hot path (span around an S2FP8 encode whose codec calls the
+//! quant-health hook), in the three operating points:
+//!
+//! * `off`       — no trace, sampling 0: the production default. Every
+//!   telemetry touch point is one relaxed atomic load.
+//! * `traced`    — journal active, quant sampling still 0: spans pay
+//!   `Instant::now()` + one journal event each.
+//! * `sampled16` — journal active, quant sampling 1-in-16: every 16th
+//!   encode pays one O(n) health walk.
+//!
+//! Emits `runs/perf_telemetry/{telemetry.md,BENCH_telemetry.json}` and
+//! **gates the overhead contract** from DESIGN.md "Observability":
+//! `traced` ≤ 3% over `off` (p50), `sampled16` ≤ 10% over `off` — CI
+//! uploads the JSON as an artifact and a regression fails the job here.
+//!
+//! Scale knobs: `S2FP8_BENCH_FAST=1` shrinks the tensor.
+
+use std::time::Duration;
+
+use s2fp8::bench::harness::bench_fn;
+use s2fp8::bench::paper;
+use s2fp8::bench::report::Table;
+use s2fp8::formats::codec::{Codec, QuantizedTensor, S2fp8RneCodec};
+use s2fp8::telemetry::{self, quant, span};
+use s2fp8::util::json::Json;
+use s2fp8::util::rng::{Pcg32, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let bench = "perf_telemetry";
+    let fast = std::env::var("S2FP8_BENCH_FAST").as_deref() == Ok("1");
+    let elems: usize = if fast { 1 << 14 } else { 1 << 16 };
+    let budget = Duration::from_millis(400);
+    let (warmup, min_iters) = (20usize, 50usize);
+
+    let mut rng = Pcg32::new(2020, 0x7E1E);
+    let xs: Vec<f32> = (0..elems).map(|_| rng.next_normal() * 0.02).collect();
+    let codec = S2fp8RneCodec;
+    let mut scratch = QuantizedTensor::empty(codec.kind());
+
+    // the exact shape of the instrumented hot path: a span around an
+    // encode whose codec reports into the quant-health hook
+    let mut pass = |scratch: &mut QuantizedTensor| {
+        let _s = span::enter("bench.encode");
+        codec.encode_into(&xs, scratch);
+        std::hint::black_box(scratch.payload().len());
+    };
+
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Telemetry overhead on the S2FP8 encode path",
+        &["mode", "elems", "p50 µs", "mean µs", "vs off"],
+    );
+    let mut p50 = [0.0f64; 3];
+    let modes: [(&str, bool, u32); 3] =
+        [("off", false, 0), ("traced", true, 0), ("sampled16", true, 16)];
+    for (mi, (mode, trace, sample)) in modes.into_iter().enumerate() {
+        if trace && !telemetry::active() {
+            telemetry::init_trace(&paper::out_dir(bench).join("trace.jsonl"));
+        }
+        quant::set_sample_every(sample);
+        let result = bench_fn(
+            &format!("{mode} {elems}"),
+            warmup,
+            min_iters,
+            budget,
+            Some(elems as f64),
+            || pass(&mut scratch),
+        );
+        quant::set_sample_every(0);
+        p50[mi] = result.p50.as_secs_f64() * 1e6;
+        let ratio = p50[mi] / p50[0];
+        println!(
+            "{mode:<10} {elems:>7} elems  p50 {:>8.1} µs  mean {:>8.1} µs  {ratio:.3}× vs off",
+            p50[mi],
+            result.mean.as_secs_f64() * 1e6,
+        );
+        table.row(vec![
+            mode.to_string(),
+            elems.to_string(),
+            format!("{:.1}", p50[mi]),
+            format!("{:.1}", result.mean.as_secs_f64() * 1e6),
+            format!("{ratio:.3}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("elems", Json::num(elems as f64)),
+            ("iters", Json::num(result.iters as f64)),
+            ("p50_us", Json::num(p50[mi])),
+            ("mean_us", Json::num(result.mean.as_secs_f64() * 1e6)),
+            ("ratio_vs_off", Json::num(ratio)),
+        ]));
+    }
+    if let Some(written) = telemetry::finish_trace()? {
+        println!("wrote {}", written.display());
+    }
+    quant::reset();
+
+    table.print();
+    table.save(paper::out_dir(bench).join("telemetry.md"))?;
+
+    let (traced_ratio, sampled_ratio) = (p50[1] / p50[0], p50[2] / p50[0]);
+    let record = Json::obj(vec![
+        ("bench", Json::str("telemetry")),
+        ("traced_ratio", Json::num(traced_ratio)),
+        ("traced_ratio_max", Json::num(1.03)),
+        ("sampled16_ratio", Json::num(sampled_ratio)),
+        ("sampled16_ratio_max", Json::num(1.10)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let json_path = paper::out_dir(bench).join("BENCH_telemetry.json");
+    std::fs::write(&json_path, record.to_string_pretty())?;
+    println!("wrote {}", json_path.display());
+
+    // the overhead contract as a hard gate; the JSON above is uploaded
+    // by CI either way, so a failure here still leaves the evidence
+    anyhow::ensure!(
+        traced_ratio <= 1.03,
+        "tracing (sampling off) costs {traced_ratio:.3}× on the encode path (max 1.03×)"
+    );
+    anyhow::ensure!(
+        sampled_ratio <= 1.10,
+        "1-in-16 quant sampling costs {sampled_ratio:.3}× on the encode path (max 1.10×)"
+    );
+    println!(
+        "overhead gates passed: traced {traced_ratio:.3}× ≤ 1.03×, sampled16 {sampled_ratio:.3}× ≤ 1.10×"
+    );
+    Ok(())
+}

@@ -36,6 +36,7 @@ use s2fp8::serve::{
     registry::{ModelRegistry, WeightStore},
     BatchPolicy,
 };
+use s2fp8::telemetry;
 use s2fp8::util::argparse::{ArgError, Command};
 use s2fp8::util::logging;
 use s2fp8::util::rng::{Pcg32, Rng};
@@ -70,6 +71,7 @@ fn run(args: &[String]) -> Result<()> {
         .opt("clients", "8", "concurrent client threads")
         .opt("seed", "7", "request-generator seed")
         .flag("verbose", "debug logging");
+    let spec = telemetry::cli::add_args(spec);
     let p = match spec.parse(args) {
         Err(ArgError::HelpRequested) => {
             print!("{}", spec.help_text());
@@ -80,6 +82,7 @@ fn run(args: &[String]) -> Result<()> {
     if p.flag("verbose") {
         logging::set_level(logging::Level::Debug);
     }
+    let tel = telemetry::cli::init_from_args(&p)?;
     let kind = ModelKind::parse(p.str("model"))?;
 
     // --- weights ---------------------------------------------------------
@@ -97,27 +100,31 @@ fn run(args: &[String]) -> Result<()> {
         let path = std::path::PathBuf::from("runs/serve-cli")
             .join(format!("synth_{}.s2ck", p.str("model")));
         checkpoint::save_as(&path, &slots, Some(fmt))?;
-        println!(
-            "synthesized checkpoint ({} weights) → {} ({} tensors)",
-            fmt.name(),
-            path.display(),
-            slots.len()
-        );
+        if !tel.quiet {
+            println!(
+                "synthesized checkpoint ({} weights) → {} ({} tensors)",
+                fmt.name(),
+                path.display(),
+                slots.len()
+            );
+        }
         registry.open_checkpoint(p.str("model"), &path)?
     } else {
         let path = p.get("checkpoint").context("--checkpoint or --synth required")?;
         registry.open_checkpoint(p.str("model"), path)?
     };
     let (stored, full) = store.memory_footprint();
-    println!(
-        "checkpoint {}: {} tensors, {} KiB stored vs {} KiB as f32 ({:.2}× smaller, {} compressed)",
-        store.source,
-        store.len(),
-        stored / 1024,
-        full / 1024,
-        full as f64 / stored.max(1) as f64,
-        store.compressed_entries(),
-    );
+    if !tel.quiet {
+        println!(
+            "checkpoint {}: {} tensors, {} KiB stored vs {} KiB as f32 ({:.2}× smaller, {} compressed)",
+            store.source,
+            store.len(),
+            stored / 1024,
+            full / 1024,
+            full as f64 / stored.max(1) as f64,
+            store.compressed_entries(),
+        );
+    }
 
     // --- backend ---------------------------------------------------------
     let max_batch: usize = p.usize("max-batch");
@@ -172,10 +179,12 @@ fn run(args: &[String]) -> Result<()> {
     let total: usize = p.usize("requests");
     let clients: usize = p.usize("clients").max(1);
     let bounds = id_bounds(&store);
-    println!(
-        "serving {total} requests from {clients} clients against {}…",
-        backend.name()
-    );
+    if !tel.quiet {
+        println!(
+            "serving {total} requests from {clients} clients against {}…",
+            backend.name()
+        );
+    }
     let served = Arc::new(AtomicU64::new(0));
     let wall = std::time::Instant::now();
     std::thread::scope(|s| -> Result<()> {
@@ -204,23 +213,32 @@ fn run(args: &[String]) -> Result<()> {
     let secs = wall.elapsed().as_secs_f64();
 
     // --- report ----------------------------------------------------------
-    let m = engine.metrics();
-    println!("\n== serving summary ==");
-    println!("{}", m.summary());
-    println!(
-        "wall      : {:.2}s for {} requests ⇒ {:.0} req/s offered",
-        secs,
-        served.load(Ordering::Relaxed),
-        served.load(Ordering::Relaxed) as f64 / secs.max(1e-9),
-    );
-    println!(
-        "registry  : {} of {} compressed tensors decoded (decode is per-tensor, never per-request)",
-        store.decoded_tensors(),
-        store.compressed_entries(),
-    );
+    // the engine's ServeMetrics already live in the registry under
+    // `serve.*`; add the load-generator's view and render one snapshot
+    let reg = telemetry::registry();
+    reg.gauge_f("serve.wall_secs").set(secs);
+    reg.gauge_f("serve.offered_rps")
+        .set(served.load(Ordering::Relaxed) as f64 / secs.max(1e-9));
+    reg.gauge("serve.registry_decoded").set(store.decoded_tensors() as i64);
+    if !tel.quiet {
+        println!("\n== serving summary ==");
+        println!(
+            "wall      : {:.2}s for {} requests ⇒ {:.0} req/s offered",
+            secs,
+            served.load(Ordering::Relaxed),
+            served.load(Ordering::Relaxed) as f64 / secs.max(1e-9),
+        );
+        println!(
+            "registry  : {} of {} compressed tensors decoded (decode is per-tensor, never per-request)",
+            store.decoded_tensors(),
+            store.compressed_entries(),
+        );
+        print!("{}", reg.snapshot().render());
+    }
     if let Ok(e) = Arc::try_unwrap(engine) {
         e.shutdown();
     }
+    tel.finish()?;
     Ok(())
 }
 

@@ -31,6 +31,7 @@ use anyhow::{Context, Result};
 use s2fp8::coordinator::trainer::LrSchedule;
 use s2fp8::dist::{DistOptions, WireFormat};
 use s2fp8::models::{zoo, QuantMode};
+use s2fp8::telemetry;
 use s2fp8::util::argparse::{ArgError, Command};
 use s2fp8::util::json::Json;
 use s2fp8::util::logging;
@@ -64,6 +65,7 @@ fn run(args: &[String]) -> Result<()> {
         .opt_optional("ckpt", "train-state path (default: <out dir>/state.s2ts)")
         .opt_optional("resume", "resume bitwise from a train-state file (see --ckpt-every)")
         .opt("out", "runs/train_dist", "output directory");
+    let spec = telemetry::cli::add_args(spec);
     let p = match spec.parse(args) {
         Err(ArgError::HelpRequested) => {
             print!("{}", spec.help_text());
@@ -72,6 +74,7 @@ fn run(args: &[String]) -> Result<()> {
         other => other?,
     };
 
+    let tel = telemetry::cli::init_from_args(&p)?;
     let wire = WireFormat::parse(p.str("wire"))
         .with_context(|| format!("bad --wire '{}' (fp32 | s2fp8)", p.str("wire")))?;
     let quant = QuantMode::parse(p.str("quant"))
@@ -112,7 +115,9 @@ fn run(args: &[String]) -> Result<()> {
     let (policy, state) =
         s2fp8::dist::cli_ckpt_setup(p.usize("ckpt-every"), ckpt_path, &tags, p.get("resume"))?;
     if let Some(s) = &state {
-        println!("resuming from {} at step {}", p.str("resume"), s.step);
+        if !tel.quiet {
+            println!("resuming from {} at step {}", p.str("resume"), s.step);
+        }
     }
 
     let report = s2fp8::dist::train_resumable(
@@ -125,29 +130,34 @@ fn run(args: &[String]) -> Result<()> {
     )?;
 
     let losses = report.curve.column("loss");
-    println!(
-        "{model} × {} workers, {} wire, {} quant: loss {:.4} → {:.4} over {} steps ({:.2}s){}",
-        opts.workers,
-        wire.name(),
-        quant.name(),
-        losses.first().copied().unwrap_or(f64::NAN),
-        losses.last().copied().unwrap_or(f64::NAN),
-        report.steps_run,
-        report.wall_secs,
-        if report.diverged { "  [DIVERGED]" } else { "" },
-    );
-    match report.comm.compression_ratio() {
-        Some(ratio) => println!(
-            "wire: {} B total, {:.0} B/step, {:.2}× smaller than an fp32 wire",
-            report.comm.wire_bytes,
-            report.comm.bytes_per_step(),
-            ratio
-        ),
-        None => println!("wire: silent (single worker exchanges no gradients)"),
-    }
     let metrics = wl.eval_params(&report.final_params)?;
+
+    // publish the run's end state into the registry: the console
+    // summary, `--metrics-out` and the journal's counters events all
+    // read the same snapshot
+    let reg = telemetry::registry();
+    reg.gauge("train.steps_run").set(report.steps_run as i64);
+    reg.gauge_f("train.final_loss").set(losses.last().copied().unwrap_or(f64::NAN));
+    reg.gauge_f("train.wall_secs").set(report.wall_secs);
+    reg.gauge_f("dist.comm.compression_vs_fp32")
+        .set(report.comm.compression_ratio().unwrap_or(1.0));
     for (name, value) in &metrics {
-        println!("eval {name}: {value:.4}");
+        reg.gauge_f(&format!("eval.{name}")).set(*value);
+    }
+
+    if !tel.quiet {
+        println!(
+            "{model} × {} workers, {} wire, {} quant: loss {:.4} → {:.4} over {} steps ({:.2}s){}",
+            opts.workers,
+            wire.name(),
+            quant.name(),
+            losses.first().copied().unwrap_or(f64::NAN),
+            losses.last().copied().unwrap_or(f64::NAN),
+            report.steps_run,
+            report.wall_secs,
+            if report.diverged { "  [DIVERGED]" } else { "" },
+        );
+        print!("{}", reg.snapshot().render());
     }
 
     std::fs::create_dir_all(&out)?;
@@ -178,6 +188,9 @@ fn run(args: &[String]) -> Result<()> {
     ]);
     let json_path = out.join("dist.json");
     std::fs::write(&json_path, record.to_string_pretty())?;
-    println!("wrote {} and curve.csv", json_path.display());
+    if !tel.quiet {
+        println!("wrote {} and curve.csv", json_path.display());
+    }
+    tel.finish()?;
     Ok(())
 }

@@ -248,6 +248,7 @@ impl TrainState {
                 }
             }
         }
+        crate::telemetry::ckpt_event("ckpt_save", self.step as u64, bytes.len(), path);
         Ok(())
     }
 
@@ -255,8 +256,10 @@ impl TrainState {
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let bytes = std::fs::read(&path)
             .with_context(|| format!("opening train state {}", path.as_ref().display()))?;
-        Self::deserialize(&bytes)
-            .with_context(|| format!("reading train state {}", path.as_ref().display()))
+        let state = Self::deserialize(&bytes)
+            .with_context(|| format!("reading train state {}", path.as_ref().display()))?;
+        crate::telemetry::ckpt_event("ckpt_load", state.step as u64, bytes.len(), path.as_ref());
+        Ok(state)
     }
 }
 

@@ -389,6 +389,7 @@ impl Trainer {
         let mut steps_run = 0usize;
 
         for step in 1..=opts.steps {
+            let _step_span = crate::telemetry::span::enter("trainer.step");
             let t_data = std::time::Instant::now();
             let batch = provider(step - 1);
             self.profiler.add("data", t_data.elapsed());
@@ -400,6 +401,7 @@ impl Trainer {
             controller.observe(out.grad_finite);
             steps_run = step;
             last_loss = out.loss;
+            crate::telemetry::record_step(step as u64, out.loss as f64, lr as f64);
 
             if capture {
                 stats.record(step, out.site_stats.as_ref(), out.grad_stats.as_ref());

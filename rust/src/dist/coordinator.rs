@@ -276,7 +276,9 @@ where
         }
     }
 
-    let counters = CommCounters::new();
+    // registry-adopted counters: the same atomics the workers bump are
+    // visible in `telemetry::registry()` snapshots as `dist.comm.*`
+    let counters = CommCounters::registered(crate::telemetry::registry(), "dist.comm");
     let wall = Instant::now();
     let nodes = ring::<Vec<ChunkGrad>>(opts.workers);
 
@@ -322,8 +324,11 @@ where
         }
     }
 
+    let comm = counters.report(rank0.steps_run);
+    crate::telemetry::comm_event(&comm);
+
     Ok(DistReport {
-        comm: counters.report(rank0.steps_run),
+        comm,
         curve: rank0.curve,
         final_params: rank0.params,
         steps_run: rank0.steps_run,
@@ -388,42 +393,59 @@ fn worker_loop<R: GradStep>(
     let mut steps_run = start_step;
 
     for step in start_step + 1..=opts.steps {
+        let _step_span = crate::telemetry::span::enter("train.step");
         let chunk_indices = batcher.next_chunks();
         let lr = opts.lr.at(step - 1);
 
         // compute phase over this worker's chunk range
-        for (local, msg) in bundle.iter_mut().enumerate() {
-            let chunk = first_chunk + local;
-            let batch = provider(step - 1, &chunk_indices[chunk])
-                .with_context(|| format!("building batch for step {step} chunk {chunk}"))?;
-            let sg = replica
-                .compute(&batch)
-                .with_context(|| format!("compute at step {step} chunk {chunk}"))?;
-            if sg.grads.len() != slots.len() {
-                bail!("replica produced {} grads for {} slots", sg.grads.len(), slots.len());
+        {
+            let _s = crate::telemetry::span::enter("train.backward");
+            // label the wire encodes inside `encode_into` with their
+            // gradient slot names (per-tensor quant health); the guard
+            // clears the thread-local labels at the end of the phase
+            let _labels = crate::telemetry::quant::sampling_enabled().then(|| {
+                crate::telemetry::quant::slot_labels(slots.iter().map(|(n, _)| n.clone()))
+            });
+            for (local, msg) in bundle.iter_mut().enumerate() {
+                let chunk = first_chunk + local;
+                let batch = provider(step - 1, &chunk_indices[chunk])
+                    .with_context(|| format!("building batch for step {step} chunk {chunk}"))?;
+                let sg = replica
+                    .compute(&batch)
+                    .with_context(|| format!("compute at step {step} chunk {chunk}"))?;
+                if sg.grads.len() != slots.len() {
+                    bail!("replica produced {} grads for {} slots", sg.grads.len(), slots.len());
+                }
+                msg.encode_into(chunk, sg.n_examples, sg.loss_sum, &sg.grads, opts.wire)
+                    .with_context(|| format!("encoding wire gradients at step {step}"))?;
             }
-            msg.encode_into(chunk, sg.n_examples, sg.loss_sum, &sg.grads, opts.wire)
-                .with_context(|| format!("encoding wire gradients at step {step}"))?;
         }
 
         // injected crash (chaos testing): this worker dies mid-step,
         // before the exchange — peers see a ring disconnect, exactly like
         // a real worker loss
         if fault.is_some_and(|f| f.kill_rank == rank && f.kill_step == step) {
+            crate::telemetry::fault_event("kill", rank, step);
             bail!("injected fault: worker {rank} killed at step {step}");
         }
 
         // exchange: ring all-gather of packed bundles (clones cross the
         // "wire"; our own bundle comes back in slot `rank` so its
         // buffers are reclaimed below — steady state allocates nothing)
-        let mut gathered = node.all_gather(std::mem::take(&mut bundle), |msg| {
-            let wire: usize = msg.iter().map(|c| c.wire_bytes()).sum();
-            let f32eq: usize = msg.iter().map(|c| c.f32_wire_bytes()).sum();
-            counters.record_send(wire as u64, f32eq as u64);
-        })?;
+        let mut gathered = {
+            let _s = crate::telemetry::span::enter("allreduce.exchange");
+            node.all_gather(std::mem::take(&mut bundle), |msg| {
+                let wire: usize = msg.iter().map(|c| c.wire_bytes()).sum();
+                let f32eq: usize = msg.iter().map(|c| c.f32_wire_bytes()).sum();
+                counters.record_send(wire as u64, f32eq as u64);
+            })?
+        };
 
         // reduce + apply phases (identical on every rank)
-        let red = reduce_chunks(gathered.iter().flatten(), opts.chunks)?;
+        let red = {
+            let _s = crate::telemetry::span::enter("allreduce.reduce");
+            reduce_chunks(gathered.iter().flatten(), opts.chunks)?
+        };
         bundle = std::mem::take(&mut gathered[rank]);
         let mut shaped = Vec::with_capacity(slots.len());
         for (g, (name, shape)) in red.grads.into_iter().zip(slots.iter()) {
@@ -432,10 +454,16 @@ fn worker_loop<R: GradStep>(
             }
             shaped.push(g.reshape(shape.clone()));
         }
-        replica.apply(&shaped, lr).with_context(|| format!("apply at step {step}"))?;
+        {
+            let _s = crate::telemetry::span::enter("train.apply");
+            replica.apply(&shaped, lr).with_context(|| format!("apply at step {step}"))?;
+        }
 
         curve.push(step, &[red.loss_mean, lr as f64]);
         steps_run = step;
+        if rank == 0 {
+            crate::telemetry::record_step(step as u64, red.loss_mean, lr as f64);
+        }
 
         // checkpoint cadence: rank 0's state is the fleet's state (all
         // ranks are bitwise identical at this boundary); the atomic save
@@ -456,6 +484,7 @@ fn worker_loop<R: GradStep>(
                 meta: c.meta.clone(),
                 params: replica.params(),
             };
+            let _s = crate::telemetry::span::enter("train.checkpoint");
             state
                 .save_atomic(&c.path)
                 .with_context(|| format!("checkpointing at step {step}"))?;

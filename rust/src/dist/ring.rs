@@ -71,11 +71,13 @@ impl<T: Send> RingNode<T> {
 
     /// Send one message to the successor rank.
     pub fn send_next(&self, msg: T) -> Result<(), RingError> {
+        let _s = crate::telemetry::span::enter("ring.send");
         self.tx_next.send(msg).map_err(|_| RingError::Disconnected(self.rank))
     }
 
     /// Receive one message from the predecessor rank (blocking).
     pub fn recv_prev(&self) -> Result<T, RingError> {
+        let _s = crate::telemetry::span::enter("ring.recv");
         self.rx_prev.recv().map_err(|_| RingError::Disconnected(self.rank))
     }
 

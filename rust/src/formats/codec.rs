@@ -639,6 +639,7 @@ impl Codec for Fp8E5m2Codec {
             }
         });
         out.set_flat(FormatKind::Fp8, xs.len(), None);
+        crate::telemetry::quant::observe_e5m2_encode("fp8", xs, out.payload(), None);
     }
 }
 
@@ -687,6 +688,7 @@ impl Codec for S2fp8RneCodec {
             }
         });
         out.set_flat(FormatKind::S2fp8, xs.len(), Some((c.alpha, c.beta)));
+        crate::telemetry::quant::observe_e5m2_encode("s2fp8", xs, out.payload(), out.s2_params());
     }
 }
 
@@ -733,6 +735,12 @@ impl Codec for S2fp8SrCodec {
             }
         });
         out.set_flat(FormatKind::S2fp8Sr, xs.len(), Some((c.alpha, c.beta)));
+        crate::telemetry::quant::observe_e5m2_encode(
+            "s2fp8-sr",
+            xs,
+            out.payload(),
+            out.s2_params(),
+        );
     }
 }
 

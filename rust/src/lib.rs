@@ -102,6 +102,26 @@
 //! concurrent NCF requests end-to-end; `cargo run --release --bin serve`
 //! is the CLI entry point.
 //!
+//! ## Observability
+//!
+//! [`telemetry`] is the crate's unified observability layer: a
+//! process-wide **metrics registry** (named lock-free counters, gauges
+//! and latency histograms — the comm counters, serve metrics and trainer
+//! step/loss gauges all register their storage through it), **span
+//! tracing** (`span!("allreduce.exchange")` scoped timers with
+//! thread-local nesting, feeding a bounded JSONL event journal written
+//! with the same atomic temp+rename discipline as checkpoints), and
+//! **quantization-health monitors** sampled on the E5M2 codec encode
+//! path (per-tensor α/β trajectories, saturation and underflow-to-zero
+//! ratios, exponent-bucket histograms — the paper's Figure-1 analysis as
+//! a live instrument). All three bins take `--trace <path>` /
+//! `--metrics-every N` / `--quant-sample N`, and
+//! [`telemetry::report::summarize_file`] renders a journal into a human
+//! summary. The overhead contract: with tracing off, every
+//! instrumentation site costs one relaxed atomic load (gated in
+//! `benches/perf_telemetry.rs`), and tracing on vs off never changes
+//! training results bitwise.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -137,6 +157,7 @@ pub mod metrics;
 pub mod models;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod tensor;
 pub mod testkit;
 pub mod util;

@@ -4,14 +4,17 @@
 //! the dist tests, the `train_dist` CLI and `benches/perf_allreduce.rs`
 //! report against the paper's 4× claim.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::telemetry::{Counter, Metric, Registry};
 
-/// Shared atomic counters; workers record every ring message they send.
-#[derive(Debug, Default)]
+/// Shared lock-free counters; workers record every ring message they
+/// send. Built on [`crate::telemetry::Counter`] handles so a run can
+/// [`CommCounters::registered`] its storage into the metrics registry —
+/// the registry then sees the same atomics the workers bump.
+#[derive(Debug, Clone, Default)]
 pub struct CommCounters {
-    wire_bytes: AtomicU64,
-    f32_equiv_bytes: AtomicU64,
-    messages: AtomicU64,
+    wire_bytes: Counter,
+    f32_equiv_bytes: Counter,
+    messages: Counter,
 }
 
 impl CommCounters {
@@ -19,29 +22,40 @@ impl CommCounters {
         Self::default()
     }
 
+    /// New counters whose handles are also registered under
+    /// `{prefix}.wire_bytes` / `{prefix}.f32_equiv_bytes` /
+    /// `{prefix}.messages` (replacing any previous run's registration).
+    pub fn registered(reg: &Registry, prefix: &str) -> Self {
+        let c = Self::new();
+        reg.adopt(&format!("{prefix}.wire_bytes"), Metric::Counter(c.wire_bytes.clone()));
+        reg.adopt(&format!("{prefix}.f32_equiv_bytes"), Metric::Counter(c.f32_equiv_bytes.clone()));
+        reg.adopt(&format!("{prefix}.messages"), Metric::Counter(c.messages.clone()));
+        c
+    }
+
     /// Record one sent message: its actual framed wire bytes and what the
     /// same tensors would have cost on an FP32 wire.
     pub fn record_send(&self, wire_bytes: u64, f32_equiv_bytes: u64) {
-        self.wire_bytes.fetch_add(wire_bytes, Ordering::Relaxed);
-        self.f32_equiv_bytes.fetch_add(f32_equiv_bytes, Ordering::Relaxed);
-        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.wire_bytes.add(wire_bytes);
+        self.f32_equiv_bytes.add(f32_equiv_bytes);
+        self.messages.inc();
     }
 
     pub fn wire_bytes(&self) -> u64 {
-        self.wire_bytes.load(Ordering::Relaxed)
+        self.wire_bytes.get()
     }
 
     pub fn messages(&self) -> u64 {
-        self.messages.load(Ordering::Relaxed)
+        self.messages.get()
     }
 
     /// Snapshot into a report over `steps` training steps.
     pub fn report(&self, steps: usize) -> CommReport {
         CommReport {
             steps,
-            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
-            f32_equiv_bytes: self.f32_equiv_bytes.load(Ordering::Relaxed),
-            messages: self.messages.load(Ordering::Relaxed),
+            wire_bytes: self.wire_bytes.get(),
+            f32_equiv_bytes: self.f32_equiv_bytes.get(),
+            messages: self.messages.get(),
         }
     }
 }
@@ -103,6 +117,23 @@ mod tests {
         assert_eq!(r.compression_ratio(), None);
         assert_eq!(r.bytes_per_step(), 0.0);
         assert_eq!(CommCounters::new().report(0).bytes_per_step(), 0.0);
+    }
+
+    #[test]
+    fn registered_counters_share_storage_with_registry() {
+        let reg = Registry::new();
+        let c = CommCounters::registered(&reg, "dist.comm");
+        c.record_send(100, 400);
+        let snap = reg.snapshot().to_json();
+        assert_eq!(snap.get("dist.comm.wire_bytes").as_usize(), Some(100));
+        assert_eq!(snap.get("dist.comm.f32_equiv_bytes").as_usize(), Some(400));
+        assert_eq!(snap.get("dist.comm.messages").as_usize(), Some(1));
+        // a second run adopts the same names; the registry follows it
+        let c2 = CommCounters::registered(&reg, "dist.comm");
+        c2.record_send(7, 28);
+        assert_eq!(reg.snapshot().to_json().get("dist.comm.wire_bytes").as_usize(), Some(7));
+        // the first run's own handle still reads its own totals
+        assert_eq!(c.wire_bytes(), 100);
     }
 
     #[test]

@@ -18,6 +18,23 @@ pub struct LatencyHistogram {
     count: AtomicU64,
     sum_micros: AtomicU64,
     max_micros: AtomicU64,
+    /// Samples whose microsecond value exceeded `u64::MAX` and had to be
+    /// clamped; kept so aggregation over workers can report the loss.
+    overflow: AtomicU64,
+}
+
+/// `fetch_add` that pins at `u64::MAX` instead of wrapping, so merged
+/// multi-worker totals degrade to "saturated" rather than a bogus small
+/// number.
+fn saturating_fetch_add(a: &AtomicU64, n: u64) {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_add(n);
+        match a.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
 }
 
 fn bucket_index(micros: u64) -> usize {
@@ -60,15 +77,43 @@ impl LatencyHistogram {
             count: AtomicU64::new(0),
             sum_micros: AtomicU64::new(0),
             max_micros: AtomicU64::new(0),
+            overflow: AtomicU64::new(0),
         }
     }
 
     pub fn record(&self, d: Duration) {
-        let micros = d.as_micros().min(u64::MAX as u128) as u64;
+        let raw = d.as_micros();
+        if raw > u64::MAX as u128 {
+            self.overflow.fetch_add(1, Ordering::Relaxed);
+        }
+        let micros = raw.min(u64::MAX as u128) as u64;
         self.buckets[bucket_index(micros)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+        saturating_fetch_add(&self.sum_micros, micros);
         self.max_micros.fetch_max(micros, Ordering::Relaxed);
+    }
+
+    /// Fold `other`'s samples into `self` (saturating, never lossy on
+    /// counts): per-worker histograms aggregate into one without storing
+    /// samples. Concurrent `record`s on either side stay safe; a merge
+    /// racing a `record` may or may not see that sample, like any
+    /// relaxed-atomic snapshot.
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                saturating_fetch_add(mine, n);
+            }
+        }
+        saturating_fetch_add(&self.count, other.count.load(Ordering::Relaxed));
+        saturating_fetch_add(&self.sum_micros, other.sum_micros.load(Ordering::Relaxed));
+        self.max_micros.fetch_max(other.max_micros.load(Ordering::Relaxed), Ordering::Relaxed);
+        saturating_fetch_add(&self.overflow, other.overflow.load(Ordering::Relaxed));
+    }
+
+    /// Samples clamped at `u64::MAX` µs on record (summed across merges).
+    pub fn overflow_count(&self) -> u64 {
+        self.overflow.load(Ordering::Relaxed)
     }
 
     pub fn count(&self) -> u64 {
@@ -105,8 +150,9 @@ impl LatencyHistogram {
     }
 
     /// `"p50 1.2ms  p95 3.1ms  p99 4.8ms  mean 1.4ms  max 9.2ms  (n=1000)"`
+    /// (plus an `overflow=k` tail when any sample was clamped).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "p50 {:.3?}  p95 {:.3?}  p99 {:.3?}  mean {:.3?}  max {:.3?}  (n={})",
             self.quantile(0.50),
             self.quantile(0.95),
@@ -114,7 +160,12 @@ impl LatencyHistogram {
             self.mean(),
             self.max(),
             self.count()
-        )
+        );
+        let o = self.overflow_count();
+        if o > 0 {
+            s.push_str(&format!("  overflow={o}"));
+        }
+        s
     }
 }
 
@@ -159,6 +210,45 @@ mod tests {
         assert_eq!(h.quantile(0.99), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
         assert!(h.summary().contains("n=0"));
+    }
+
+    #[test]
+    fn merge_aggregates_without_loss() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        for i in 1..=500u64 {
+            a.record(Duration::from_micros(i));
+            b.record(Duration::from_micros(500 + i));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 1000);
+        assert_eq!(a.max(), Duration::from_micros(1000));
+        // merged quantiles match a histogram that saw all samples directly
+        let direct = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            direct.record(Duration::from_micros(i));
+        }
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(a.quantile(q), direct.quantile(q), "q={q}");
+        }
+        assert_eq!(a.mean(), direct.mean());
+    }
+
+    #[test]
+    fn overflow_clamps_and_saturates() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::MAX); // > u64::MAX µs → clamped + counted
+        assert_eq!(h.overflow_count(), 1);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), Duration::from_micros(u64::MAX));
+        // summing two near-u64::MAX totals must pin, not wrap
+        let other = LatencyHistogram::new();
+        other.record(Duration::MAX);
+        h.merge(&other);
+        assert_eq!(h.overflow_count(), 2);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum_micros.load(Ordering::Relaxed), u64::MAX);
+        assert!(h.summary().contains("overflow=2"));
     }
 
     #[test]

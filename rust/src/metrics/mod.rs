@@ -5,6 +5,16 @@
 //! ([`crate::serve::metrics`]), and the distributed-training
 //! communication counters ([`comm`]: per-step wire bytes + compression
 //! ratio of the gradient exchange).
+//!
+//! Operational metrics register through the process-wide
+//! [`crate::telemetry`] registry: [`CommCounters`] and
+//! [`crate::serve::metrics::ServeMetrics`] are built on shared handles
+//! ([`crate::telemetry::Counter`] / latency histograms) that can be
+//! adopted under stable names (`dist.comm.*`, `serve.*`), so one registry
+//! snapshot sees every subsystem without double counting.
+//! [`LatencyHistogram`] additionally supports lossless multi-worker
+//! aggregation via [`LatencyHistogram::merge`] with saturating totals and
+//! an overflow-clamp count.
 
 pub mod bleu;
 pub mod classification;

@@ -49,6 +49,7 @@ impl MicroBatcher {
     /// Next micro-batch (blocking); `None` when the queue is closed and
     /// drained — the worker's signal to exit.
     pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let _s = crate::telemetry::span::enter("serve.dequeue");
         self.queue.pop_batch(self.policy.max_batch, self.policy.max_wait)
     }
 }

@@ -67,7 +67,10 @@ impl Engine {
         let mut policy = cfg.policy;
         policy.max_batch = policy.max_batch.clamp(1, backend.batch_dim());
         let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
-        let metrics = Arc::new(ServeMetrics::new());
+        // registry-adopted: `serve.*` names in `telemetry::registry()`
+        // snapshots read this engine's own atomics
+        let metrics =
+            Arc::new(ServeMetrics::registered(crate::telemetry::registry(), "serve"));
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -163,6 +166,7 @@ impl Engine {
 
     /// Enqueue a request, blocking while the queue is full.
     pub fn submit(&self, features: Vec<HostValue>) -> Result<Ticket> {
+        let _s = crate::telemetry::span::enter("serve.enqueue");
         let (req, ticket) = self.make_request(features)?;
         self.count_accepted();
         match self.queue.push(req) {
@@ -178,6 +182,7 @@ impl Engine {
     /// Enqueue without blocking: a full queue is an immediate error (load
     /// shedding — callers retry or drop).
     pub fn try_submit(&self, features: Vec<HostValue>) -> Result<Ticket> {
+        let _s = crate::telemetry::span::enter("serve.enqueue");
         let (req, ticket) = self.make_request(features)?;
         self.count_accepted();
         match self.queue.try_push(req) {
@@ -256,6 +261,7 @@ fn worker_loop(
         metrics.queue_depth.fetch_sub(batch.len() as i64, Ordering::Relaxed);
         let n = batch.len();
         let fixed_b = backend.batch_dim();
+        let batch_span = crate::telemetry::span::enter("serve.batch");
         let t = Instant::now();
         let examples: Vec<&[HostValue]> = batch.iter().map(|r| r.features.as_slice()).collect();
         // Contain panics from the runner (e.g. inside the xla bindings):
@@ -268,6 +274,8 @@ fn worker_loop(
             Err(anyhow!("worker panicked during execution: {}", panic_msg(p.as_ref())))
         });
         let exec = t.elapsed();
+        drop(batch_span);
+        crate::telemetry::tick_snapshot(metrics.batches.load(Ordering::Relaxed) + 1);
         match result {
             Ok(rows) if rows.len() == n => {
                 metrics.record_batch(n, fixed_b - n, exec);

@@ -3,35 +3,40 @@
 //! [`metrics::histogram::LatencyHistogram`](crate::metrics::histogram).
 //! One [`ServeMetrics`] is shared by the engine, all workers and all
 //! producers; every field is atomic, so reading a snapshot never blocks
-//! the serving path.
+//! the serving path. Fields are `Arc`-shared so an engine can
+//! [`ServeMetrics::registered`] its storage into the
+//! [`crate::telemetry`] registry under `serve.*` names — registry
+//! snapshots then read the very atomics the workers update.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::metrics::histogram::LatencyHistogram;
+use crate::telemetry::{Counter, Gauge, Metric, Registry};
 use crate::util::json::Json;
 
 #[derive(Debug)]
 pub struct ServeMetrics {
     /// End-to-end request latency (submit → response).
-    pub latency: LatencyHistogram,
+    pub latency: Arc<LatencyHistogram>,
     /// Per-micro-batch execution time (stack + run + scatter).
-    pub batch_exec: LatencyHistogram,
+    pub batch_exec: Arc<LatencyHistogram>,
     /// Accepted into the queue.
-    pub submitted: AtomicU64,
+    pub submitted: Arc<AtomicU64>,
     /// Completed successfully.
-    pub completed: AtomicU64,
+    pub completed: Arc<AtomicU64>,
     /// Completed with an execution error.
-    pub failed: AtomicU64,
+    pub failed: Arc<AtomicU64>,
     /// Shed at submit time (queue full — backpressure).
-    pub rejected: AtomicU64,
-    pub batches: AtomicU64,
+    pub rejected: Arc<AtomicU64>,
+    pub batches: Arc<AtomicU64>,
     /// Live (request) rows executed.
-    pub batched_rows: AtomicU64,
+    pub batched_rows: Arc<AtomicU64>,
     /// Padding rows executed and discarded.
-    pub padded_rows: AtomicU64,
+    pub padded_rows: Arc<AtomicU64>,
     /// Requests currently queued (gauge: +1 on accept, −1 on dequeue).
-    pub queue_depth: AtomicI64,
+    pub queue_depth: Arc<AtomicI64>,
     started: Instant,
 }
 
@@ -44,18 +49,43 @@ impl Default for ServeMetrics {
 impl ServeMetrics {
     pub fn new() -> Self {
         ServeMetrics {
-            latency: LatencyHistogram::new(),
-            batch_exec: LatencyHistogram::new(),
-            submitted: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
-            failed: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            batched_rows: AtomicU64::new(0),
-            padded_rows: AtomicU64::new(0),
-            queue_depth: AtomicI64::new(0),
+            latency: Arc::new(LatencyHistogram::new()),
+            batch_exec: Arc::new(LatencyHistogram::new()),
+            submitted: Arc::new(AtomicU64::new(0)),
+            completed: Arc::new(AtomicU64::new(0)),
+            failed: Arc::new(AtomicU64::new(0)),
+            rejected: Arc::new(AtomicU64::new(0)),
+            batches: Arc::new(AtomicU64::new(0)),
+            batched_rows: Arc::new(AtomicU64::new(0)),
+            padded_rows: Arc::new(AtomicU64::new(0)),
+            queue_depth: Arc::new(AtomicI64::new(0)),
             started: Instant::now(),
         }
+    }
+
+    /// New metrics whose storage is also registered under `{prefix}.*`
+    /// (latency histograms, request/batch counters, queue-depth gauge),
+    /// replacing any previous engine's registration.
+    pub fn registered(reg: &Registry, prefix: &str) -> Self {
+        let m = Self::new();
+        reg.adopt(&format!("{prefix}.latency"), Metric::Histogram(m.latency.clone()));
+        reg.adopt(&format!("{prefix}.batch_exec"), Metric::Histogram(m.batch_exec.clone()));
+        for (name, c) in [
+            ("submitted", &m.submitted),
+            ("completed", &m.completed),
+            ("failed", &m.failed),
+            ("rejected", &m.rejected),
+            ("batches", &m.batches),
+            ("batched_rows", &m.batched_rows),
+            ("padded_rows", &m.padded_rows),
+        ] {
+            reg.adopt(&format!("{prefix}.{name}"), Metric::Counter(Counter::shared(c.clone())));
+        }
+        reg.adopt(
+            &format!("{prefix}.queue_depth"),
+            Metric::Gauge(Gauge::shared(m.queue_depth.clone())),
+        );
+        m
     }
 
     pub fn record_batch(&self, live_rows: usize, padded_rows: usize, exec: Duration) {
@@ -171,5 +201,18 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("completed").as_usize(), Some(8));
         assert!(j.get("p99_us").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn registered_metrics_share_storage_with_registry() {
+        let reg = Registry::new();
+        let m = ServeMetrics::registered(&reg, "serve");
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.queue_depth.fetch_add(2, Ordering::Relaxed);
+        m.record_done(Duration::from_micros(100), true);
+        let snap = reg.snapshot().to_json();
+        assert_eq!(snap.get("serve.submitted").as_usize(), Some(3));
+        assert_eq!(snap.get("serve.queue_depth").as_usize(), Some(2));
+        assert_eq!(snap.at(&["serve.latency", "count"]).as_usize(), Some(1));
     }
 }

@@ -1,0 +1,87 @@
+//! CLI plumbing shared by the `train_host` / `train_dist` / `serve`
+//! bins: one place declares the observability flags, flips the global
+//! switches from parsed args, and finalizes outputs at end of run.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::util::argparse::{Command, Parsed};
+
+/// Add the shared observability options to a bin's arg spec: `--trace`,
+/// `--metrics-every`, `--quant-sample`, `--metrics-out`, `--quiet`.
+pub fn add_args(cmd: Command) -> Command {
+    cmd.opt_optional("trace", "write a JSONL trace journal to this path at end of run")
+        .opt("metrics-every", "0", "journal a registry snapshot every N steps/batches (0 = off)")
+        .opt(
+            "quant-sample",
+            "auto",
+            "sample quant health every Nth encode per tensor (0 = off, auto = 16 when tracing)",
+        )
+        .opt_optional("metrics-out", "write the final registry snapshot as JSON to this path")
+        .flag("quiet", "suppress end-of-run console reporting")
+}
+
+/// Observability switches resolved from parsed args; [`TelemetryCli::finish`]
+/// consumes them at end of run.
+pub struct TelemetryCli {
+    pub trace: Option<PathBuf>,
+    pub metrics_out: Option<PathBuf>,
+    pub quiet: bool,
+}
+
+/// Flip the global telemetry switches (trace journal, snapshot cadence,
+/// quant sampling) according to the parsed args.
+pub fn init_from_args(p: &Parsed) -> Result<TelemetryCli> {
+    let trace = p.get("trace").map(PathBuf::from);
+    if let Some(t) = &trace {
+        super::init_trace(t);
+    }
+    super::set_metrics_every(p.parse_num::<u64>("metrics-every")?);
+    let sample = match p.str("quant-sample") {
+        "auto" => {
+            if trace.is_some() {
+                16
+            } else {
+                0
+            }
+        }
+        s => s.parse::<u32>().with_context(|| format!("bad --quant-sample '{s}'"))?,
+    };
+    super::quant::set_sample_every(sample);
+    Ok(TelemetryCli {
+        trace,
+        metrics_out: p.get("metrics-out").map(PathBuf::from),
+        quiet: p.flag("quiet"),
+    })
+}
+
+impl TelemetryCli {
+    /// End-of-run finalization: write `--metrics-out` (the registry
+    /// snapshot as JSON), write the trace journal, and — unless quiet —
+    /// print its [`super::report`] summary.
+    pub fn finish(&self) -> Result<()> {
+        if let Some(path) = &self.metrics_out {
+            if let Some(parent) = path.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            std::fs::write(path, super::registry().snapshot().to_json().to_string_pretty())
+                .with_context(|| format!("writing {}", path.display()))?;
+            if !self.quiet {
+                println!("wrote metrics snapshot to {}", path.display());
+            }
+        }
+        if let Some(written) = super::finish_trace()? {
+            if !self.quiet {
+                println!("wrote trace journal to {}", written.display());
+                match super::report::summarize_file(&written) {
+                    Ok(text) => print!("{text}"),
+                    Err(e) => eprintln!("trace summary failed: {e}"),
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,170 @@
+//! Bounded structured JSONL event journal.
+//!
+//! Events (spans, counter snapshots, quant-health samples, checkpoint
+//! save/load, injected faults) accumulate in memory while a trace is
+//! active and are written once at [`finish`] — one JSON object per line —
+//! using the same atomic temp+rename discipline as
+//! [`crate::coordinator::resume::TrainState::save_atomic`], so a crash
+//! mid-write never leaves a torn journal at the target path.
+//!
+//! The buffer is bounded: past `cap` events new ones are dropped and
+//! counted, and the final `journal_end` line reports both totals, so a
+//! runaway trace degrades to a truncated-but-honest journal instead of
+//! unbounded memory.
+//!
+//! [`active`] is a single relaxed atomic load — the only cost tracing
+//! imposes on an untraced process.
+
+use std::fs::File;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default in-memory event cap (~64k events; a 2-worker 100-step trace
+/// with 1-in-16 quant sampling is well under 10k).
+pub const DEFAULT_CAP: usize = 1 << 16;
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+struct State {
+    path: PathBuf,
+    start: Instant,
+    events: Vec<Json>,
+    dropped: u64,
+    cap: usize,
+}
+
+static STATE: Mutex<Option<State>> = Mutex::new(None);
+
+/// Is a trace journal collecting events? One relaxed load; every
+/// instrumentation site outside this module gates on it before building
+/// any `Json`.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Start collecting into an in-memory journal destined for `path`
+/// (replacing any active one). Emits a `trace_start` event.
+pub fn init(path: &Path, cap: usize) {
+    let state = State {
+        path: path.to_path_buf(),
+        start: Instant::now(),
+        events: Vec::new(),
+        dropped: 0,
+        cap: cap.max(2),
+    };
+    *STATE.lock().unwrap() = Some(state);
+    ACTIVE.store(true, Ordering::Relaxed);
+    event(Json::obj(vec![("ev", Json::str("trace_start"))]));
+}
+
+/// Append one event (a JSON object). Stamps `t_us` (microseconds since
+/// `init`). No-op when no trace is active; counted-as-dropped when the
+/// buffer is full.
+pub fn event(mut e: Json) {
+    if !active() {
+        return;
+    }
+    let mut guard = STATE.lock().unwrap();
+    let Some(state) = guard.as_mut() else { return };
+    let t_us = state.start.elapsed().as_micros().min(u64::MAX as u128) as u64;
+    if let Json::Obj(map) = &mut e {
+        map.insert("t_us".to_string(), Json::num(t_us as f64));
+    }
+    if state.events.len() >= state.cap {
+        state.dropped += 1;
+    } else {
+        state.events.push(e);
+    }
+}
+
+/// Stop collecting and atomically write the journal to its path.
+/// Returns the path written, or `None` if no trace was active. Appends a
+/// final `journal_end` event carrying event/dropped totals.
+pub fn finish() -> anyhow::Result<Option<PathBuf>> {
+    ACTIVE.store(false, Ordering::Relaxed);
+    let state = STATE.lock().unwrap().take();
+    let Some(mut state) = state else { return Ok(None) };
+    let t_us = state.start.elapsed().as_micros().min(u64::MAX as u128) as u64;
+    state.events.push(Json::obj(vec![
+        ("ev", Json::str("journal_end")),
+        ("t_us", Json::num(t_us as f64)),
+        ("events", Json::num(state.events.len() as f64 + 1.0)),
+        ("dropped", Json::num(state.dropped as f64)),
+    ]));
+
+    let mut body = String::new();
+    for e in &state.events {
+        body.push_str(&e.to_string());
+        body.push('\n');
+    }
+    // same crash discipline as TrainState::save_atomic: tmp + fsync +
+    // rename + best-effort parent fsync
+    if let Some(parent) = state.path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = crate::coordinator::resume::tmp_path(&state.path);
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(body.as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &state.path)?;
+    if let Some(parent) = state.path.parent() {
+        if !parent.as_os_str().is_empty() {
+            if let Ok(dir) = File::open(parent) {
+                let _ = dir.sync_all();
+            }
+        }
+    }
+    Ok(Some(state.path))
+}
+
+/// Reading a journal back can fail on I/O or on a malformed line (e.g. a
+/// tail truncated by a crash before the atomic rename landed).
+#[derive(Debug, thiserror::Error)]
+pub enum JournalError {
+    #[error("journal {path}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("journal {path} line {line}: {msg}")]
+    Malformed { path: PathBuf, line: usize, msg: String },
+}
+
+/// Parse a JSONL journal into its events. Every line must be a JSON
+/// object; anything else (including a truncated final line) is a typed
+/// [`JournalError::Malformed`], never a panic.
+pub fn read(path: &Path) -> Result<Vec<Json>, JournalError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|source| JournalError::Io { path: path.to_path_buf(), source })?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let e = Json::parse(line).map_err(|pe| JournalError::Malformed {
+            path: path.to_path_buf(),
+            line: i + 1,
+            msg: pe.to_string(),
+        })?;
+        if !matches!(e, Json::Obj(_)) {
+            return Err(JournalError::Malformed {
+                path: path.to_path_buf(),
+                line: i + 1,
+                msg: "event is not a JSON object".to_string(),
+            });
+        }
+        events.push(e);
+    }
+    Ok(events)
+}

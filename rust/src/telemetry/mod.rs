@@ -1,0 +1,139 @@
+//! Unified observability: metrics registry, span tracing with a JSONL
+//! event journal, and quantization-health monitoring.
+//!
+//! Three pillars, one switchboard:
+//!
+//! - [`registry`]: the process-wide named-metric map ([`Counter`] /
+//!   [`Gauge`] / [`GaugeF`] / latency histograms). Always on — handle
+//!   updates are lock-free atomics; instrumented structs
+//!   ([`crate::metrics::CommCounters`],
+//!   [`crate::serve::metrics::ServeMetrics`]) adopt their storage into it
+//!   under stable names.
+//! - [`span`] + [`journal`]: scoped timers with thread-local nesting,
+//!   feeding a bounded in-memory event journal written atomically
+//!   (temp+rename) at [`finish_trace`]. Inactive unless [`init_trace`]
+//!   ran; the inactive cost is one relaxed atomic load per site.
+//! - [`quant`]: per-tensor α/β, saturation, underflow-to-zero, and
+//!   exponent-bucket stats sampled on the E5M2 codec encode path behind
+//!   [`quant::set_sample_every`] (0 = off = one relaxed load).
+//!
+//! Everything here is observation-only: tracing on vs off must never
+//! change training results bitwise (`tests/integration_telemetry.rs`
+//! asserts this), and [`report`] renders a journal after the fact.
+
+pub mod cli;
+pub mod journal;
+pub mod quant;
+pub mod registry;
+pub mod report;
+pub mod span;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub use journal::JournalError;
+pub use registry::{Counter, Gauge, GaugeF, Metric, Registry, SnapValue, Snapshot};
+
+use crate::util::json::Json;
+
+/// The process-wide metric registry.
+pub fn registry() -> &'static registry::Registry {
+    registry::registry()
+}
+
+/// Is a trace journal active? (One relaxed load; gate any event-building
+/// work on this.)
+#[inline]
+pub fn active() -> bool {
+    journal::active()
+}
+
+/// Start tracing into `path` (written on [`finish_trace`]).
+pub fn init_trace(path: &Path) {
+    journal::init(path, journal::DEFAULT_CAP);
+}
+
+/// Stop tracing and atomically write the journal. `None` if tracing was
+/// never started.
+pub fn finish_trace() -> anyhow::Result<Option<PathBuf>> {
+    journal::finish()
+}
+
+static METRICS_EVERY: AtomicU64 = AtomicU64::new(0);
+
+/// Emit a registry snapshot into the journal every `n` ticks (steps for
+/// trainers, batches for serve); `0` disables snapshots.
+pub fn set_metrics_every(n: u64) {
+    METRICS_EVERY.store(n, Ordering::Relaxed);
+}
+
+/// Called once per tick (training step / served batch) by instrumented
+/// loops: emits a `counters` journal event with a full registry snapshot
+/// on the configured cadence. No-op without an active trace.
+pub fn tick_snapshot(tick: u64) {
+    if !active() {
+        return;
+    }
+    let every = METRICS_EVERY.load(Ordering::Relaxed);
+    if every == 0 || tick % every != 0 {
+        return;
+    }
+    journal::event(Json::obj(vec![
+        ("ev", Json::str("counters")),
+        ("tick", Json::num(tick as f64)),
+        ("metrics", registry().snapshot().to_json()),
+    ]));
+}
+
+/// Record one training step's headline numbers into the registry (step /
+/// loss / lr gauges + a total-steps counter) and drive the snapshot
+/// cadence. Cheap enough to call unconditionally from training loops.
+pub fn record_step(step: u64, loss: f64, lr: f64) {
+    let reg = registry();
+    reg.gauge("train.step").set(step as i64);
+    reg.gauge_f("train.loss").set(loss);
+    reg.gauge_f("train.lr").set(lr);
+    reg.counter("train.steps_total").inc();
+    tick_snapshot(step);
+}
+
+/// Journal an injected fault (chaos testing). No-op without a trace.
+pub fn fault_event(kind: &'static str, rank: usize, step: usize) {
+    if !active() {
+        return;
+    }
+    journal::event(Json::obj(vec![
+        ("ev", Json::str("fault")),
+        ("kind", Json::str(kind)),
+        ("rank", Json::num(rank as f64)),
+        ("step", Json::num(step as f64)),
+    ]));
+}
+
+/// Journal a checkpoint event (`ev` is `"ckpt_save"` or `"ckpt_load"`).
+/// No-op without a trace.
+pub fn ckpt_event(ev: &'static str, step: u64, bytes: usize, path: &Path) {
+    if !active() {
+        return;
+    }
+    journal::event(Json::obj(vec![
+        ("ev", Json::str(ev)),
+        ("step", Json::num(step as f64)),
+        ("bytes", Json::num(bytes as f64)),
+        ("path", Json::str(path.display().to_string())),
+    ]));
+}
+
+/// Journal a run's final gradient-exchange totals. No-op without a trace.
+pub fn comm_event(report: &crate::metrics::CommReport) {
+    if !active() {
+        return;
+    }
+    journal::event(Json::obj(vec![
+        ("ev", Json::str("comm")),
+        ("steps", Json::num(report.steps as f64)),
+        ("wire_bytes", Json::num(report.wire_bytes as f64)),
+        ("f32_equiv_bytes", Json::num(report.f32_equiv_bytes as f64)),
+        ("messages", Json::num(report.messages as f64)),
+    ]));
+}

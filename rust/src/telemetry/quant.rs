@@ -1,0 +1,251 @@
+//! Quantization-health monitors on the E5M2 `Codec` encode path: the
+//! paper's Figure-1 analysis (why FP8 clips where S2FP8 trains) as a live
+//! instrument.
+//!
+//! Every hooked `encode_into` reports its produced bytes here. When the
+//! sampling knob is off (`sample_every == 0`, the default) the call is a
+//! single relaxed atomic load. When on, every `sample_every`-th encode of
+//! each tensor is walked once to count:
+//!
+//! - **saturation**: codes at the max-finite magnitude `0x7B` or beyond
+//!   (`fp8::encode_fast` saturates overflowing values there), i.e. values
+//!   the format clipped;
+//! - **underflow-to-zero**: nonzero inputs that quantized to ±0;
+//! - the **exponent-bucket histogram** (32 buckets, the raw E5M2 exponent
+//!   field) — the tensor's distribution inside the representable range;
+//! - the latest **α/β** squeeze/shift parameters for S2FP8 codecs.
+//!
+//! The first encode of every tensor label is always sampled, so even a
+//! 4-step CI smoke run has a health record per parameter tensor.
+//!
+//! Monitors cover the paper's E5M2-family codecs (`fp8`, `s2fp8`,
+//! `s2fp8-sr`); E4M3 has a different bit layout and is not hooked.
+//!
+//! Tensor labels: the encode path doesn't know tensor names, so callers
+//! that do (the dist worker iterating gradient slots) install them via
+//! [`slot_labels`] on the encoding thread; unlabeled encodes fall under
+//! `"unlabeled"`.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+use super::journal;
+use crate::util::json::Json;
+
+/// E5M2 codes with magnitude ≥ this are the saturation point
+/// (`fp8::encode_fast` clamps overflow to `sign | 0x7B`; `0x7C`/`0x7F`
+/// are inf/NaN).
+const E5M2_SATURATED_ABS: u8 = 0x7B;
+
+static SAMPLE_EVERY: AtomicU32 = AtomicU32::new(0);
+
+/// Sample every `n`-th encode per tensor; `0` disables monitoring
+/// entirely (the default — encode pays one relaxed load).
+pub fn set_sample_every(n: u32) {
+    SAMPLE_EVERY.store(n, Ordering::Relaxed);
+}
+
+pub fn sampling_enabled() -> bool {
+    SAMPLE_EVERY.load(Ordering::Relaxed) != 0
+}
+
+/// Aggregated health of one tensor label across its sampled encodes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TensorHealth {
+    /// Total encodes seen (sampled or not).
+    pub encodes: u64,
+    /// Encodes actually walked.
+    pub samples: u64,
+    /// Elements across sampled encodes.
+    pub elems: u64,
+    /// Elements that clipped to the max-finite code.
+    pub saturated: u64,
+    /// Nonzero inputs that quantized to ±0.
+    pub underflowed: u64,
+    /// Nonzero inputs (denominator for the ratios).
+    pub nonzero: u64,
+    pub last_alpha: Option<f32>,
+    pub last_beta: Option<f32>,
+    /// Counts per raw E5M2 exponent field value, over sampled encodes.
+    pub exp_hist: [u64; 32],
+}
+
+static STATE: Mutex<BTreeMap<String, TensorHealth>> = Mutex::new(BTreeMap::new());
+
+thread_local! {
+    /// (labels, cursor): names for the tensors this thread is about to
+    /// encode, consumed in order.
+    static LABELS: RefCell<Option<(Vec<String>, usize)>> = const { RefCell::new(None) };
+}
+
+/// Install per-tensor labels for subsequent encodes on this thread; the
+/// guard clears them on drop. The dist worker installs its gradient slot
+/// names before `ChunkGrad::encode_into` walks the slots.
+pub fn slot_labels(names: impl IntoIterator<Item = String>) -> SlotLabels {
+    LABELS.with(|l| *l.borrow_mut() = Some((names.into_iter().collect(), 0)));
+    SlotLabels { _priv: () }
+}
+
+/// Guard from [`slot_labels`]; labels live until it drops.
+#[must_use = "labels are cleared when the guard drops"]
+pub struct SlotLabels {
+    _priv: (),
+}
+
+impl Drop for SlotLabels {
+    fn drop(&mut self) {
+        LABELS.with(|l| *l.borrow_mut() = None);
+    }
+}
+
+fn next_label() -> String {
+    LABELS.with(|l| {
+        let mut guard = l.borrow_mut();
+        match guard.as_mut() {
+            Some((names, cursor)) if !names.is_empty() => {
+                let name = names[*cursor % names.len()].clone();
+                *cursor += 1;
+                name
+            }
+            _ => "unlabeled".to_string(),
+        }
+    })
+}
+
+/// Health hook called by the E5M2-family codecs after encoding: `xs` is
+/// the input tensor, `codes` the produced bytes (1 per element), `s2` the
+/// (α, β) pair for S2FP8 codecs. Sampling decisions are per tensor label;
+/// the first encode of each label is always sampled.
+pub fn observe_e5m2_encode(format: &'static str, xs: &[f32], codes: &[u8], s2: Option<(f32, f32)>) {
+    let every = SAMPLE_EVERY.load(Ordering::Relaxed);
+    if every == 0 {
+        return;
+    }
+    let label = next_label();
+    let sample = {
+        let mut state = STATE.lock().unwrap();
+        let h = state.entry(label.clone()).or_default();
+        h.encodes += 1;
+        (h.encodes - 1) % every as u64 == 0
+    };
+    if !sample {
+        return;
+    }
+    // the O(n) walk happens outside the lock; only aggregation re-locks
+    let mut saturated = 0u64;
+    let mut underflowed = 0u64;
+    let mut nonzero = 0u64;
+    let mut exp_hist = [0u64; 32];
+    for (&x, &code) in xs.iter().zip(codes.iter()) {
+        let abs = code & 0x7F;
+        exp_hist[(abs >> 2) as usize] += 1;
+        if abs >= E5M2_SATURATED_ABS {
+            saturated += 1;
+        }
+        if x != 0.0 {
+            nonzero += 1;
+            if abs == 0 {
+                underflowed += 1;
+            }
+        }
+    }
+    {
+        let mut state = STATE.lock().unwrap();
+        let h = state.entry(label.clone()).or_default();
+        h.samples += 1;
+        h.elems += xs.len() as u64;
+        h.saturated += saturated;
+        h.underflowed += underflowed;
+        h.nonzero += nonzero;
+        if let Some((a, b)) = s2 {
+            h.last_alpha = Some(a);
+            h.last_beta = Some(b);
+        }
+        for (agg, n) in h.exp_hist.iter_mut().zip(exp_hist.iter()) {
+            *agg += n;
+        }
+    }
+    if journal::active() {
+        let (alpha, beta) = match s2 {
+            Some((a, b)) => (Json::num(a), Json::num(b)),
+            None => (Json::Null, Json::Null),
+        };
+        journal::event(Json::obj(vec![
+            ("ev", Json::str("quant")),
+            ("tensor", Json::str(label)),
+            ("format", Json::str(format)),
+            ("n", Json::num(xs.len() as f64)),
+            ("alpha", alpha),
+            ("beta", beta),
+            ("saturated", Json::num(saturated as f64)),
+            ("underflow_to_zero", Json::num(underflowed as f64)),
+            ("nonzero", Json::num(nonzero as f64)),
+            ("exp_hist", Json::arr_usize(&exp_hist.map(|n| n as usize))),
+        ]));
+    }
+}
+
+/// Current per-tensor aggregates, by label.
+pub fn health_snapshot() -> BTreeMap<String, TensorHealth> {
+    STATE.lock().unwrap().clone()
+}
+
+/// Clear all aggregates (test isolation between traced runs).
+pub fn reset() {
+    STATE.lock().unwrap().clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: sampling state is process-global; this single test owns it
+    // (unit tests in one binary run concurrently).
+    #[test]
+    fn observe_counts_saturation_underflow_and_labels() {
+        reset();
+        set_sample_every(1);
+        // 70000 saturates (>57344), 1e-9 underflows to zero, 0.0 is not
+        // counted as nonzero, 1.0 is healthy
+        let xs = [70000.0f32, 1e-9, 0.0, 1.0];
+        let codes: Vec<u8> = xs.iter().map(|&x| crate::formats::fp8::encode_fast(x)).collect();
+        {
+            let _g = slot_labels(["w1".to_string()]);
+            observe_e5m2_encode("fp8", &xs, &codes, None);
+            observe_e5m2_encode("fp8", &xs, &codes, Some((1.5, 2.0)));
+        }
+        observe_e5m2_encode("fp8", &xs, &codes, None); // guard dropped
+        let snap = health_snapshot();
+        let w1 = &snap["w1"];
+        assert_eq!(w1.encodes, 2);
+        assert_eq!(w1.samples, 2);
+        assert_eq!(w1.elems, 8);
+        assert_eq!(w1.saturated, 2);
+        assert_eq!(w1.underflowed, 2);
+        assert_eq!(w1.nonzero, 6);
+        assert_eq!(w1.last_alpha, Some(1.5));
+        assert_eq!(w1.exp_hist.iter().sum::<u64>(), 8);
+        assert_eq!(snap["unlabeled"].samples, 1);
+
+        // sampling off: pure no-op, aggregates untouched
+        set_sample_every(0);
+        observe_e5m2_encode("fp8", &xs, &codes, None);
+        assert_eq!(health_snapshot()["unlabeled"].samples, 1);
+
+        // every-2: first encode of a fresh label still sampled
+        set_sample_every(2);
+        {
+            let _g = slot_labels(["w2".to_string()]);
+            observe_e5m2_encode("fp8", &xs, &codes, None);
+            observe_e5m2_encode("fp8", &xs, &codes, None);
+            observe_e5m2_encode("fp8", &xs, &codes, None);
+        }
+        let snap = health_snapshot();
+        assert_eq!(snap["w2"].encodes, 3);
+        assert_eq!(snap["w2"].samples, 2); // encodes 1 and 3
+        set_sample_every(0);
+        reset();
+    }
+}

@@ -1,0 +1,367 @@
+//! Process-wide **metrics registry**: named counters, gauges, and latency
+//! histograms behind one [`Metric`] handle API.
+//!
+//! Registration (name → handle) goes through a mutex, but that lock is
+//! only taken when a handle is created or a snapshot is read — every
+//! *update* goes straight to the handle's shared atomic, so the hot paths
+//! (ring sends, serve workers, codec encodes) never contend on the map.
+//! Handles are cheap clones of an `Arc`'d atomic; a struct that used to
+//! own ad-hoc `AtomicU64` fields (e.g. [`crate::metrics::CommCounters`],
+//! [`crate::serve::metrics::ServeMetrics`]) now holds handles and
+//! [`Registry::adopt`]s them under stable names, so the same storage the
+//! struct updates is visible in [`Registry::snapshot`] — no double
+//! counting, no copying.
+//!
+//! Snapshots iterate a `BTreeMap`, so their rendering (text or JSON) is
+//! deterministic for a given set of metric values.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::metrics::histogram::LatencyHistogram;
+use crate::util::json::Json;
+
+/// Monotonic event count. Clones share the same storage.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wrap an existing shared atomic (adopting a struct's own field).
+    pub fn shared(inner: Arc<AtomicU64>) -> Self {
+        Counter(inner)
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Signed instantaneous value (queue depths, step counters).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn shared(inner: Arc<AtomicI64>) -> Self {
+        Gauge(inner)
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Floating-point gauge (loss, learning rate, ratios): an `f64` stored as
+/// bits in an `AtomicU64`, last-write-wins.
+#[derive(Debug, Clone)]
+pub struct GaugeF(Arc<AtomicU64>);
+
+impl Default for GaugeF {
+    fn default() -> Self {
+        GaugeF(Arc::new(AtomicU64::new(0f64.to_bits())))
+    }
+}
+
+impl GaugeF {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// One registered metric: the handle API every instrumented struct and
+/// call site trades in.
+#[derive(Debug, Clone)]
+pub enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    GaugeF(GaugeF),
+    Histogram(Arc<LatencyHistogram>),
+}
+
+impl Metric {
+    fn kind_name(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::GaugeF(_) => "gauge_f",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Named metric map. One process-wide instance lives behind
+/// [`registry()`]; tests can create private ones.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create a counter under `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric kind.
+    pub fn counter(&self, name: &str) -> Counter {
+        match self.get_or_insert(name, || Metric::Counter(Counter::new())) {
+            Metric::Counter(c) => c,
+            other => panic!("metric '{name}' is a {}, not a counter", other.kind_name()),
+        }
+    }
+
+    /// Get-or-create a signed gauge under `name` (same panic contract as
+    /// [`Registry::counter`]).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        match self.get_or_insert(name, || Metric::Gauge(Gauge::new())) {
+            Metric::Gauge(g) => g,
+            other => panic!("metric '{name}' is a {}, not a gauge", other.kind_name()),
+        }
+    }
+
+    /// Get-or-create a floating-point gauge under `name`.
+    pub fn gauge_f(&self, name: &str) -> GaugeF {
+        match self.get_or_insert(name, || Metric::GaugeF(GaugeF::new())) {
+            Metric::GaugeF(g) => g,
+            other => panic!("metric '{name}' is a {}, not a gauge_f", other.kind_name()),
+        }
+    }
+
+    /// Get-or-create a latency histogram under `name`.
+    pub fn histogram(&self, name: &str) -> Arc<LatencyHistogram> {
+        match self.get_or_insert(name, || Metric::Histogram(Arc::new(LatencyHistogram::new()))) {
+            Metric::Histogram(h) => h,
+            other => panic!("metric '{name}' is a {}, not a histogram", other.kind_name()),
+        }
+    }
+
+    /// Register (or replace) an externally-owned metric under `name`.
+    /// This is how per-run structs re-register their own storage: the
+    /// registry sees the same atomics the struct updates, and a newer run
+    /// in the same process simply takes the name over.
+    pub fn adopt(&self, name: &str, metric: Metric) {
+        self.metrics.lock().unwrap().insert(name.to_string(), metric);
+    }
+
+    fn get_or_insert(&self, name: &str, make: impl FnOnce() -> Metric) -> Metric {
+        let mut map = self.metrics.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(make).clone()
+    }
+
+    /// Point-in-time read of every registered metric, in name order.
+    pub fn snapshot(&self) -> Snapshot {
+        let map = self.metrics.lock().unwrap();
+        let values = map
+            .iter()
+            .map(|(name, m)| {
+                let v = match m {
+                    Metric::Counter(c) => SnapValue::Counter(c.get()),
+                    Metric::Gauge(g) => SnapValue::Gauge(g.get()),
+                    Metric::GaugeF(g) => SnapValue::GaugeF(g.get()),
+                    Metric::Histogram(h) => SnapValue::Histogram(HistSnap::of(h)),
+                };
+                (name.clone(), v)
+            })
+            .collect();
+        Snapshot { values }
+    }
+}
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Snapshot of one histogram: quantiles in microseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnap {
+    pub count: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_us: u64,
+    pub max_us: u64,
+    pub overflow: u64,
+}
+
+impl HistSnap {
+    fn of(h: &LatencyHistogram) -> Self {
+        let us = |d: Duration| d.as_micros().min(u64::MAX as u128) as u64;
+        HistSnap {
+            count: h.count(),
+            p50_us: us(h.quantile(0.50)),
+            p95_us: us(h.quantile(0.95)),
+            p99_us: us(h.quantile(0.99)),
+            mean_us: us(h.mean()),
+            max_us: us(h.max()),
+            overflow: h.overflow_count(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("p50_us", Json::num(self.p50_us as f64)),
+            ("p95_us", Json::num(self.p95_us as f64)),
+            ("p99_us", Json::num(self.p99_us as f64)),
+            ("mean_us", Json::num(self.mean_us as f64)),
+            ("max_us", Json::num(self.max_us as f64)),
+            ("overflow", Json::num(self.overflow as f64)),
+        ])
+    }
+}
+
+/// One metric's value inside a [`Snapshot`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum SnapValue {
+    Counter(u64),
+    Gauge(i64),
+    GaugeF(f64),
+    Histogram(HistSnap),
+}
+
+/// Deterministic (name-ordered) read of a [`Registry`].
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub values: BTreeMap<String, SnapValue>,
+}
+
+impl Snapshot {
+    /// Machine-readable form (the `--metrics-out` payload and the
+    /// journal's `counters` events).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (name, v) in &self.values {
+            let j = match v {
+                SnapValue::Counter(n) => Json::num(*n as f64),
+                SnapValue::Gauge(n) => Json::num(*n as f64),
+                SnapValue::GaugeF(x) => Json::num(*x),
+                SnapValue::Histogram(h) => h.to_json(),
+            };
+            obj.insert(name.clone(), j);
+        }
+        Json::Obj(obj)
+    }
+
+    /// Human-readable form, one metric per line.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for (name, v) in &self.values {
+            match v {
+                SnapValue::Counter(n) => {
+                    let _ = writeln!(s, "  {name:<32} {n}");
+                }
+                SnapValue::Gauge(n) => {
+                    let _ = writeln!(s, "  {name:<32} {n}");
+                }
+                SnapValue::GaugeF(x) => {
+                    let _ = writeln!(s, "  {name:<32} {x:.6}");
+                }
+                SnapValue::Histogram(h) => {
+                    let _ = writeln!(
+                        s,
+                        "  {name:<32} p50 {}µs  p95 {}µs  p99 {}µs  mean {}µs  max {}µs  (n={})",
+                        h.p50_us, h.p95_us, h.p99_us, h.mean_us, h.max_us, h.count
+                    );
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_storage_and_snapshot_sees_updates() {
+        let reg = Registry::new();
+        let a = reg.counter("x.count");
+        let b = reg.counter("x.count");
+        a.add(3);
+        b.inc();
+        assert_eq!(a.get(), 4);
+        reg.gauge("x.depth").set(-2);
+        reg.gauge_f("x.loss").set(0.25);
+        reg.histogram("x.lat").record(Duration::from_micros(100));
+        let snap = reg.snapshot();
+        assert_eq!(snap.values["x.count"], SnapValue::Counter(4));
+        assert_eq!(snap.values["x.depth"], SnapValue::Gauge(-2));
+        assert_eq!(snap.values["x.loss"], SnapValue::GaugeF(0.25));
+        match &snap.values["x.lat"] {
+            SnapValue::Histogram(h) => assert_eq!(h.count, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        // deterministic rendering: BTreeMap order, every metric present
+        let text = snap.render();
+        assert!(text.contains("x.count") && text.contains("x.lat"), "{text}");
+        let json = snap.to_json();
+        assert_eq!(json.get("x.count").as_usize(), Some(4));
+        assert_eq!(json.at(&["x.lat", "count"]).as_usize(), Some(1));
+    }
+
+    #[test]
+    fn adopt_replaces_and_shares_external_storage() {
+        let reg = Registry::new();
+        let external = Arc::new(AtomicU64::new(7));
+        reg.adopt("run.bytes", Metric::Counter(Counter::shared(external.clone())));
+        external.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(snap_counter(&reg, "run.bytes"), 8);
+        // a second run takes the name over
+        reg.adopt("run.bytes", Metric::Counter(Counter::new()));
+        assert_eq!(snap_counter(&reg, "run.bytes"), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a gauge")]
+    fn kind_clash_panics() {
+        let reg = Registry::new();
+        reg.counter("m");
+        reg.gauge("m");
+    }
+
+    fn snap_counter(reg: &Registry, name: &str) -> u64 {
+        match &reg.snapshot().values[name] {
+            SnapValue::Counter(n) => *n,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

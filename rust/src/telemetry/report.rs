@@ -1,0 +1,243 @@
+//! Render a trace journal into a human summary: per-span self-time
+//! quantiles, the quantization-health table, comm ratios, and notable
+//! events (checkpoints, faults, dropped-event counts).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::journal::{self, JournalError};
+use crate::util::json::Json;
+
+/// Read `path` as a JSONL journal and summarize it.
+pub fn summarize_file(path: &Path) -> Result<String, JournalError> {
+    Ok(summarize(&journal::read(path)?))
+}
+
+/// Summarize parsed journal events. Quantiles here are exact (computed
+/// from the recorded per-span self times, not histogram buckets).
+pub fn summarize(events: &[Json]) -> String {
+    let mut spans: BTreeMap<&str, Vec<u64>> = BTreeMap::new();
+    let mut quant: BTreeMap<&str, QuantRow> = BTreeMap::new();
+    let mut ckpt_saves = 0u64;
+    let mut ckpt_loads = 0u64;
+    let mut faults: Vec<&str> = Vec::new();
+    let mut comm: Option<&Json> = None;
+    let mut dropped = 0u64;
+    let mut total = 0usize;
+
+    for e in events {
+        total += 1;
+        match e.get("ev").as_str() {
+            Some("span") => {
+                if let (Some(name), Some(self_us)) =
+                    (e.get("name").as_str(), e.get("self_us").as_usize())
+                {
+                    spans.entry(name).or_default().push(self_us as u64);
+                }
+            }
+            Some("quant") => {
+                if let Some(tensor) = e.get("tensor").as_str() {
+                    let row = quant.entry(tensor).or_default();
+                    row.samples += 1;
+                    row.nonzero += e.get("nonzero").as_usize().unwrap_or(0) as u64;
+                    row.elems += e.get("n").as_usize().unwrap_or(0) as u64;
+                    row.saturated += e.get("saturated").as_usize().unwrap_or(0) as u64;
+                    row.underflowed += e.get("underflow_to_zero").as_usize().unwrap_or(0) as u64;
+                    if let Some(a) = e.get("alpha").as_f64() {
+                        row.alpha = Some(a);
+                    }
+                    if let Some(b) = e.get("beta").as_f64() {
+                        row.beta = Some(b);
+                    }
+                    if let Some(f) = e.get("format").as_str() {
+                        row.format = f.to_string();
+                    }
+                }
+            }
+            Some("ckpt_save") => ckpt_saves += 1,
+            Some("ckpt_load") => ckpt_loads += 1,
+            Some("fault") => faults.push(e.get("kind").as_str().unwrap_or("?")),
+            Some("comm") => comm = Some(e),
+            Some("journal_end") => {
+                dropped = e.get("dropped").as_usize().unwrap_or(0) as u64;
+            }
+            _ => {}
+        }
+    }
+
+    let mut s = String::new();
+    let _ = writeln!(s, "trace summary ({total} events)");
+
+    if !spans.is_empty() {
+        let _ = writeln!(s, "\nspans (self time):");
+        let _ = writeln!(
+            s,
+            "  {:<24} {:>8} {:>12} {:>10} {:>10}",
+            "name", "count", "total", "p50", "p95"
+        );
+        for (name, times) in &mut spans {
+            times.sort_unstable();
+            let total_us: u64 = times.iter().sum();
+            let _ = writeln!(
+                s,
+                "  {:<24} {:>8} {:>12} {:>10} {:>10}",
+                name,
+                times.len(),
+                fmt_us(total_us),
+                fmt_us(exact_quantile(times, 0.50)),
+                fmt_us(exact_quantile(times, 0.95)),
+            );
+        }
+    }
+
+    if !quant.is_empty() {
+        let _ = writeln!(s, "\nquantization health (sampled encodes):");
+        let _ = writeln!(
+            s,
+            "  {:<24} {:<9} {:>7} {:>10} {:>9} {:>9} {:>9}",
+            "tensor", "format", "samples", "α", "β", "sat", "uflow→0"
+        );
+        for (tensor, row) in &quant {
+            let _ = writeln!(
+                s,
+                "  {:<24} {:<9} {:>7} {:>10} {:>9} {:>9} {:>9}",
+                tensor,
+                row.format,
+                row.samples,
+                row.alpha.map_or("-".to_string(), |a| format!("{a:.4}")),
+                row.beta.map_or("-".to_string(), |b| format!("{b:.3}")),
+                ratio(row.saturated, row.elems),
+                ratio(row.underflowed, row.nonzero),
+            );
+        }
+    }
+
+    if let Some(c) = comm {
+        let wire = c.get("wire_bytes").as_f64().unwrap_or(0.0);
+        let f32eq = c.get("f32_equiv_bytes").as_f64().unwrap_or(0.0);
+        let msgs = c.get("messages").as_usize().unwrap_or(0);
+        let steps = c.get("steps").as_usize().unwrap_or(0);
+        let _ = writeln!(s, "\ncomm:");
+        let _ = write!(
+            s,
+            "  {wire:.0} wire bytes over {msgs} messages / {steps} steps"
+        );
+        if wire > 0.0 {
+            let _ = write!(s, "  ({:.2}x vs fp32 wire)", f32eq / wire);
+        }
+        s.push('\n');
+    }
+
+    if ckpt_saves + ckpt_loads > 0 {
+        let _ = writeln!(s, "\ncheckpoints: {ckpt_saves} saved, {ckpt_loads} loaded");
+    }
+    if !faults.is_empty() {
+        let _ = writeln!(s, "faults injected: {} ({})", faults.len(), faults.join(", "));
+    }
+    if dropped > 0 {
+        let _ = writeln!(s, "WARNING: {dropped} events dropped (journal cap reached)");
+    }
+    s
+}
+
+#[derive(Debug, Default)]
+struct QuantRow {
+    format: String,
+    samples: u64,
+    elems: u64,
+    nonzero: u64,
+    saturated: u64,
+    underflowed: u64,
+    alpha: Option<f64>,
+    beta: Option<f64>,
+}
+
+fn ratio(num: u64, den: u64) -> String {
+    if den == 0 {
+        "-".to_string()
+    } else {
+        format!("{:.2}%", 100.0 * num as f64 / den as f64)
+    }
+}
+
+/// Nearest-rank quantile of a sorted slice.
+fn exact_quantile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+fn fmt_us(us: u64) -> String {
+    if us >= 1_000_000 {
+        format!("{:.2}s", us as f64 / 1e6)
+    } else if us >= 1_000 {
+        format!("{:.2}ms", us as f64 / 1e3)
+    } else {
+        format!("{us}µs")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span_ev(name: &str, self_us: u64) -> Json {
+        Json::obj(vec![
+            ("ev", Json::str("span")),
+            ("name", Json::str(name)),
+            ("self_us", Json::num(self_us as f64)),
+        ])
+    }
+
+    #[test]
+    fn summarizes_spans_quant_and_comm() {
+        let events = vec![
+            Json::obj(vec![("ev", Json::str("trace_start"))]),
+            span_ev("train.step", 100),
+            span_ev("train.step", 300),
+            span_ev("allreduce.exchange", 40),
+            Json::obj(vec![
+                ("ev", Json::str("quant")),
+                ("tensor", Json::str("w1")),
+                ("format", Json::str("s2fp8")),
+                ("n", Json::num(1000.0)),
+                ("alpha", Json::num(1.25)),
+                ("beta", Json::num(12.5)),
+                ("saturated", Json::num(10.0)),
+                ("underflow_to_zero", Json::num(5.0)),
+                ("nonzero", Json::num(900.0)),
+            ]),
+            Json::obj(vec![
+                ("ev", Json::str("comm")),
+                ("wire_bytes", Json::num(1000.0)),
+                ("f32_equiv_bytes", Json::num(4000.0)),
+                ("messages", Json::num(8.0)),
+                ("steps", Json::num(4.0)),
+            ]),
+            Json::obj(vec![("ev", Json::str("ckpt_save"))]),
+            Json::obj(vec![
+                ("ev", Json::str("journal_end")),
+                ("dropped", Json::num(2.0)),
+            ]),
+        ];
+        let text = summarize(&events);
+        assert!(text.contains("train.step"), "{text}");
+        assert!(text.contains("allreduce.exchange"), "{text}");
+        assert!(text.contains("w1"), "{text}");
+        assert!(text.contains("1.00%"), "sat ratio: {text}"); // 10/1000
+        assert!(text.contains("4.00x"), "comm ratio: {text}");
+        assert!(text.contains("1 saved"), "{text}");
+        assert!(text.contains("2 events dropped"), "{text}");
+    }
+
+    #[test]
+    fn exact_quantile_nearest_rank() {
+        let xs = [10, 20, 30, 40];
+        assert_eq!(exact_quantile(&xs, 0.50), 20);
+        assert_eq!(exact_quantile(&xs, 0.95), 40);
+        assert_eq!(exact_quantile(&[], 0.5), 0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Scoped span timing with thread-local nesting.
+//!
+//! [`enter`] returns a guard; dropping it closes the span. Each thread
+//! keeps its own span stack, so parent/child attribution never crosses
+//! threads (a worker's `allreduce.exchange` nests under *that worker's*
+//! `train.step`, not under whatever rank 0 happens to be doing). On close
+//! a span:
+//!
+//! - records its **self time** (duration minus time attributed to child
+//!   spans) into the registry histogram `span.<name>`, and
+//! - appends a `span` event to the journal with its duration, self time,
+//!   depth, parent name, and a per-thread tag.
+//!
+//! When no trace is active, [`enter`] is one relaxed atomic load and the
+//! guard is inert — no `Instant::now()`, no thread-local touch. This is
+//! the overhead contract `benches/perf_telemetry.rs` gates.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::journal;
+use crate::util::json::Json;
+
+struct Frame {
+    name: &'static str,
+    /// Microseconds already attributed to closed children, subtracted
+    /// from this frame's duration to get self time.
+    child_micros: u64,
+}
+
+thread_local! {
+    static STACK: RefCell<Vec<Frame>> = const { RefCell::new(Vec::new()) };
+    static THREAD_TAG: u64 = NEXT_THREAD_TAG.fetch_add(1, Ordering::Relaxed);
+}
+
+static NEXT_THREAD_TAG: AtomicU64 = AtomicU64::new(0);
+
+/// Open a span. Hold the returned guard for the timed region:
+///
+/// ```
+/// let _s = s2fp8::telemetry::span::enter("allreduce.exchange");
+/// // ... timed work ...
+/// ```
+pub fn enter(name: &'static str) -> Span {
+    if !journal::active() {
+        return Span { name, start: None };
+    }
+    STACK.with(|s| s.borrow_mut().push(Frame { name, child_micros: 0 }));
+    Span { name, start: Some(Instant::now()) }
+}
+
+/// Current nesting depth on this thread (0 outside any span). Test hook.
+pub fn depth() -> usize {
+    STACK.with(|s| s.borrow().len())
+}
+
+/// Guard for an open span; closes (and records) on drop.
+#[must_use = "a span measures nothing unless the guard is held"]
+pub struct Span {
+    name: &'static str,
+    /// `None` when tracing was inactive at `enter` — drop is a no-op.
+    start: Option<Instant>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let dur_us = start.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        let (depth, parent, child_micros) = STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            // guards drop in reverse creation order within a thread, so
+            // the top of the stack is this span's frame
+            let frame = stack.pop().expect("span stack underflow");
+            debug_assert_eq!(frame.name, self.name);
+            let parent = stack.last_mut().map(|p| {
+                p.child_micros = p.child_micros.saturating_add(dur_us);
+                p.name
+            });
+            (stack.len(), parent, frame.child_micros)
+        });
+        let self_us = dur_us.saturating_sub(child_micros);
+        super::registry()
+            .histogram(&format!("span.{}", self.name))
+            .record(std::time::Duration::from_micros(self_us));
+        journal::event(Json::obj(vec![
+            ("ev", Json::str("span")),
+            ("name", Json::str(self.name)),
+            ("parent", parent.map_or(Json::Null, Json::str)),
+            ("depth", Json::num(depth as f64)),
+            ("thread", Json::num(THREAD_TAG.with(|t| *t) as f64)),
+            ("dur_us", Json::num(dur_us as f64)),
+            ("self_us", Json::num(self_us as f64)),
+        ]));
+    }
+}
+
+/// `span!("name")` — open a scoped span bound to a hidden local, closing
+/// at end of the enclosing block.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        let _s2fp8_span_guard = $crate::telemetry::span::enter($name);
+    };
+}

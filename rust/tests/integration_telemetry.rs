@@ -1,0 +1,351 @@
+//! Observability suite for `src/telemetry/`:
+//!
+//! * **registry**: concurrent counter/gauge/histogram hammering from many
+//!   threads lands exactly the serial totals (handles share storage,
+//!   updates are lock-free).
+//! * **tracing is observation-only**: a 2-worker S2FP8-wire run traced
+//!   with quant sampling at 1-in-1 and per-step counter snapshots is
+//!   **bitwise identical** to the untraced run — and its journal is
+//!   well-formed JSONL with correctly nested spans, per-tensor quant
+//!   health covering every gradient slot, counter snapshots, checkpoint
+//!   events, and comm totals.
+//! * **journal read-back**: a tail truncated mid-line (crash before the
+//!   atomic rename landed) is a typed [`JournalError::Malformed`], never
+//!   a panic.
+//! * **CI smoke** (`ci_journal_smoke`): pointed at a journal produced by
+//!   a real `train_dist --trace` run via `S2FP8_TRACE_JOURNAL`, asserts
+//!   the acceptance shape (backward/exchange/apply spans, quant records,
+//!   terminal `journal_end`).
+//!
+//! NOTE: the trace journal, quant sampling, and snapshot cadence are
+//! process-global, so exactly one test here
+//! (`traced_run_is_bitwise_identical_and_journal_is_well_formed`) touches
+//! them; every other test uses private state or read-only file parsing.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use s2fp8::coordinator::trainer::LrSchedule;
+use s2fp8::coordinator::GradStep;
+use s2fp8::data::synth_vector;
+use s2fp8::dist::{train_resumable, CkptPolicy, DistOptions, DistReport, WireFormat};
+use s2fp8::models::MlpModel;
+use s2fp8::runtime::HostValue;
+use s2fp8::telemetry::{self, journal, quant, registry::Registry, span, JournalError};
+use s2fp8::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("s2fp8_telemetry_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn ev(e: &Json) -> &str {
+    e.get("ev").as_str().unwrap_or("")
+}
+
+// ---------------------------------------------------------------------------
+// registry: concurrent updates are exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_concurrent_updates_match_serial_totals() {
+    let reg = Arc::new(Registry::new());
+    let (threads, iters) = (8u64, 2_000u64);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let reg = reg.clone();
+            s.spawn(move || {
+                // every thread re-resolves the same names: handles must
+                // share storage, never shadow each other
+                let c = reg.counter("hammer.count");
+                let h = reg.histogram("hammer.lat");
+                for i in 0..iters {
+                    c.inc();
+                    reg.counter("hammer.bytes").add(3);
+                    reg.gauge("hammer.last").set((t * iters + i) as i64);
+                    h.record(Duration::from_micros(i % 50));
+                }
+            });
+        }
+    });
+    let snap = reg.snapshot();
+    let json = snap.to_json();
+    assert_eq!(json.get("hammer.count").as_usize(), Some((threads * iters) as usize));
+    assert_eq!(json.get("hammer.bytes").as_usize(), Some((threads * iters * 3) as usize));
+    assert_eq!(json.at(&["hammer.lat", "count"]).as_usize(), Some((threads * iters) as usize));
+    // the gauge saw *some* thread's last write
+    let last = json.get("hammer.last").as_i64().unwrap();
+    assert!((0..(threads * iters) as i64).contains(&last), "{last}");
+}
+
+// ---------------------------------------------------------------------------
+// the acceptance run: traced == untraced, bitwise; journal is well-formed
+// ---------------------------------------------------------------------------
+
+fn run_mlp(ckpt: Option<&CkptPolicy>) -> DistReport {
+    let (n, d, classes) = (256usize, 16usize, 10usize);
+    let (x, y) = synth_vector::dataset(n, d, classes, 33);
+    let mut opts = DistOptions::new(2, WireFormat::S2fp8);
+    opts.chunks = 4;
+    opts.global_batch = 32;
+    opts.n_examples = n;
+    opts.steps = 8;
+    opts.lr = LrSchedule::Constant(0.08);
+    opts.seed = 44;
+    opts.log_every = 0;
+    train_resumable(
+        &opts,
+        |_rank| Ok(MlpModel::new(&[d, 16, classes], 7)),
+        |_step, idx| {
+            let xb = x.gather_rows(idx);
+            let yb: Vec<i32> = idx.iter().map(|&i| y[i]).collect();
+            let rows = idx.len();
+            Ok(vec![HostValue::F32(xb), HostValue::i32(vec![rows], yb)])
+        },
+        ckpt,
+        None,
+        None,
+    )
+    .expect("mlp dist run")
+}
+
+fn assert_bitwise_equal(a: &DistReport, b: &DistReport) {
+    let (la, lb) = (a.curve.column("loss"), b.curve.column("loss"));
+    assert_eq!(la.len(), lb.len(), "curve lengths differ");
+    for (step, (x, y)) in la.iter().zip(lb.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "loss diverges at recorded step {step}: {x} vs {y}");
+    }
+    assert_eq!(a.final_params.len(), b.final_params.len());
+    for ((na, ta), (nb, tb)) in a.final_params.iter().zip(b.final_params.iter()) {
+        assert_eq!(na, nb, "param order differs");
+        for (i, (x, y)) in ta.data().iter().zip(tb.data().iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{na}[{i}]: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn traced_run_is_bitwise_identical_and_journal_is_well_formed() {
+    let dir = tmp_dir("trace");
+
+    // --- span nesting property: per-thread stacks, no cross-thread leakage
+    telemetry::init_trace(&dir.join("nesting.jsonl"));
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                assert_eq!(span::depth(), 0);
+                let _a = span::enter("outer");
+                assert_eq!(span::depth(), 1);
+                {
+                    let _b = span::enter("inner");
+                    assert_eq!(span::depth(), 2);
+                }
+                assert_eq!(span::depth(), 1);
+            });
+        }
+        // spans on other threads never show up on this one
+        assert_eq!(span::depth(), 0);
+    });
+    let nest_path = telemetry::finish_trace().unwrap().expect("nesting journal written");
+    let nest = journal::read(&nest_path).unwrap();
+    let inners: Vec<&Json> =
+        nest.iter().filter(|e| ev(e) == "span" && e.get("name").as_str() == Some("inner")).collect();
+    assert_eq!(inners.len(), 4);
+    let mut inner_threads = BTreeSet::new();
+    for e in &inners {
+        assert_eq!(e.get("parent").as_str(), Some("outer"), "{e:?}");
+        assert_eq!(e.get("depth").as_usize(), Some(1));
+        inner_threads.insert(e.get("thread").as_i64().unwrap());
+    }
+    assert_eq!(inner_threads.len(), 4, "each inner span belongs to its own thread");
+    for e in nest.iter().filter(|e| ev(e) == "span" && e.get("name").as_str() == Some("outer")) {
+        // outer is a root on its thread and absorbed inner's time
+        assert_eq!(e.get("parent"), &Json::Null);
+        assert!(e.get("dur_us").as_f64().unwrap() >= e.get("self_us").as_f64().unwrap());
+    }
+
+    // --- baseline: untraced, sampling off
+    assert!(!telemetry::active());
+    assert!(!quant::sampling_enabled());
+    let base = run_mlp(Some(&CkptPolicy::new(3, dir.join("base_state.s2ts"))));
+
+    // --- traced run: journal + per-step snapshots + 1-in-1 quant sampling
+    quant::reset();
+    telemetry::init_trace(&dir.join("journal.jsonl"));
+    telemetry::set_metrics_every(1);
+    quant::set_sample_every(1);
+    let traced = run_mlp(Some(&CkptPolicy::new(3, dir.join("traced_state.s2ts"))));
+    quant::set_sample_every(0);
+    telemetry::set_metrics_every(0);
+    let path = telemetry::finish_trace().unwrap().expect("journal written");
+
+    // tracing must never change the arithmetic
+    assert_bitwise_equal(&base, &traced);
+    assert_eq!(span::depth(), 0, "no span leaked past the run");
+
+    // --- the in-memory health aggregates cover every gradient slot
+    let slot_names: BTreeSet<String> = MlpModel::new(&[16usize, 16, 10], 7)
+        .grad_slots()
+        .into_iter()
+        .map(|(n, _)| n)
+        .collect();
+    let health = quant::health_snapshot();
+    let seen: BTreeSet<String> = health.keys().cloned().collect();
+    assert_eq!(seen, slot_names, "every gradient slot has a health record");
+    for (name, h) in &health {
+        assert!(h.samples > 0 && h.elems > 0, "{name}: {h:?}");
+        assert_eq!(h.exp_hist.iter().sum::<u64>(), h.elems, "{name}");
+        assert!(h.last_alpha.is_some() && h.last_beta.is_some(), "{name}: s2fp8 carries α/β");
+    }
+    quant::reset();
+
+    // --- journal shape
+    let events = journal::read(&path).unwrap();
+    assert_eq!(ev(&events[0]), "trace_start");
+    assert_eq!(ev(events.last().unwrap()), "journal_end");
+    assert_eq!(events.last().unwrap().get("dropped").as_usize(), Some(0));
+    for e in &events {
+        assert!(e.get("t_us").as_f64().is_some(), "every event is timestamped: {e:?}");
+    }
+
+    // spans: all instrumented phases present, nested correctly per thread
+    let mut by_name: BTreeMap<&str, Vec<&Json>> = BTreeMap::new();
+    for e in events.iter().filter(|e| ev(e) == "span") {
+        by_name.entry(e.get("name").as_str().unwrap()).or_default().push(e);
+    }
+    for phase in [
+        "train.step",
+        "train.backward",
+        "allreduce.exchange",
+        "allreduce.reduce",
+        "train.apply",
+        "train.checkpoint",
+        "ring.send",
+        "ring.recv",
+    ] {
+        assert!(by_name.contains_key(phase), "missing span '{phase}': {:?}", by_name.keys());
+    }
+    // 2 workers × 8 steps
+    assert_eq!(by_name["train.step"].len(), 16);
+    let step_threads: BTreeSet<i64> =
+        by_name["train.step"].iter().map(|e| e.get("thread").as_i64().unwrap()).collect();
+    assert_eq!(step_threads.len(), 2, "one span stream per worker thread");
+    for (child, parent) in [
+        ("train.backward", "train.step"),
+        ("allreduce.exchange", "train.step"),
+        ("train.apply", "train.step"),
+        ("ring.send", "allreduce.exchange"),
+        ("ring.recv", "allreduce.exchange"),
+    ] {
+        for e in &by_name[child] {
+            assert_eq!(e.get("parent").as_str(), Some(parent), "{child}: {e:?}");
+            assert!(
+                step_threads.contains(&e.get("thread").as_i64().unwrap()),
+                "{child} attributed to a non-worker thread: {e:?}"
+            );
+        }
+    }
+
+    // quant events: per-tensor records with α/β and a full exponent histogram
+    let quant_tensors: BTreeSet<String> = events
+        .iter()
+        .filter(|e| ev(e) == "quant")
+        .map(|e| e.get("tensor").as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(quant_tensors, slot_names);
+    for e in events.iter().filter(|e| ev(e) == "quant") {
+        assert_eq!(e.get("format").as_str(), Some("s2fp8"));
+        assert!(e.get("alpha").as_f64().is_some() && e.get("beta").as_f64().is_some());
+        assert_eq!(e.get("exp_hist").as_arr().unwrap().len(), 32);
+    }
+
+    // counter snapshots on the every-step cadence, carrying the registry
+    let counters: Vec<&Json> = events.iter().filter(|e| ev(e) == "counters").collect();
+    assert_eq!(counters.len(), 8, "one snapshot per step at --metrics-every 1");
+    let last = counters.last().unwrap().get("metrics");
+    assert_eq!(last.get("train.step").as_usize(), Some(8));
+    assert!(last.get("dist.comm.wire_bytes").as_f64().unwrap() > 0.0);
+    assert!(last.at(&["span.train.backward", "count"]).as_f64().unwrap() > 0.0);
+
+    // checkpoint + comm events
+    let saves: Vec<&Json> = events.iter().filter(|e| ev(e) == "ckpt_save").collect();
+    assert_eq!(saves.len(), 2, "ckpt-every 3 over 8 steps saves at 3 and 6");
+    assert!(saves.iter().all(|e| e.get("bytes").as_f64().unwrap() > 0.0));
+    let comm: Vec<&Json> = events.iter().filter(|e| ev(e) == "comm").collect();
+    assert_eq!(comm.len(), 1);
+    assert_eq!(
+        comm[0].get("wire_bytes").as_f64().unwrap() as u64,
+        traced.comm.wire_bytes,
+        "journal comm totals match the report"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// journal read-back: truncation is a typed error
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncated_journal_tail_is_a_typed_error_never_a_panic() {
+    let dir = tmp_dir("truncated");
+    let path = dir.join("torn.jsonl");
+    std::fs::write(
+        &path,
+        "{\"ev\":\"trace_start\",\"t_us\":0}\n{\"ev\":\"span\",\"name\":\"train.st",
+    )
+    .unwrap();
+    match journal::read(&path) {
+        Err(JournalError::Malformed { line, .. }) => assert_eq!(line, 2),
+        other => panic!("expected Malformed at line 2, got {other:?}"),
+    }
+    // a non-object line is rejected too
+    std::fs::write(&path, "[1, 2, 3]\n").unwrap();
+    assert!(matches!(journal::read(&path), Err(JournalError::Malformed { line: 1, .. })));
+    // and a missing file is a typed I/O error
+    assert!(matches!(
+        journal::read(Path::new("/nonexistent/journal.jsonl")),
+        Err(JournalError::Io { .. })
+    ));
+}
+
+// ---------------------------------------------------------------------------
+// CI smoke: validate a journal produced by a real traced train_dist run
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ci_journal_smoke() {
+    let Ok(path) = std::env::var("S2FP8_TRACE_JOURNAL") else {
+        return; // only meaningful when CI hands us a freshly traced run
+    };
+    let events = journal::read(Path::new(&path)).expect("trace journal must parse");
+    assert_eq!(ev(&events[0]), "trace_start");
+    assert_eq!(ev(events.last().unwrap()), "journal_end");
+
+    let span_names: BTreeSet<&str> = events
+        .iter()
+        .filter(|e| ev(e) == "span")
+        .map(|e| e.get("name").as_str().unwrap())
+        .collect();
+    for phase in ["train.step", "train.backward", "allreduce.exchange", "train.apply"] {
+        assert!(span_names.contains(phase), "missing span '{phase}' in {span_names:?}");
+    }
+
+    let quant_tensors: BTreeSet<&str> = events
+        .iter()
+        .filter(|e| ev(e) == "quant")
+        .map(|e| e.get("tensor").as_str().unwrap())
+        .collect();
+    assert!(quant_tensors.len() >= 2, "expected per-tensor quant records, got {quant_tensors:?}");
+    for e in events.iter().filter(|e| ev(e) == "quant") {
+        assert_eq!(e.get("exp_hist").as_arr().unwrap().len(), 32);
+    }
+
+    assert!(
+        events.iter().any(|e| ev(e) == "counters"),
+        "expected registry snapshots (--metrics-every)"
+    );
+    let report = s2fp8::telemetry::report::summarize(&events);
+    assert!(report.contains("train.step"), "report must summarize spans:\n{report}");
+}
