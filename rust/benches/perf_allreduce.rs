@@ -15,16 +15,28 @@
 //! trajectory, not an absolute exchange throughput; the wire-byte ratio
 //! gate is exact either way.
 //!
-//! Scale knobs: `S2FP8_BENCH_FAST=1` drops the largest tier.
+//! A second section runs the same exchange over a **real TCP-loopback
+//! socket ring** (`transport::SocketTransport`), synchronous and then
+//! bucketed through the `BucketPipeline` comm thread — and **asserts
+//! the overlapped exchange wait stays below the compute it hides
+//! behind** (encode + reduce), the property that makes the bucketed
+//! socket path free in wall-clock terms.
+//!
+//! Scale knobs: `S2FP8_BENCH_FAST=1` drops the largest tier and shrinks
+//! the socket legs.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use s2fp8::bench::harness::bench_fn;
 use s2fp8::bench::paper;
 use s2fp8::bench::report::Table;
-use s2fp8::dist::{reduce_chunks, ring, ChunkGrad, WireFormat};
+use s2fp8::dist::{reduce_chunks, ring, ChunkGrad, StreamReducer, WireFormat};
 use s2fp8::metrics::comm::CommCounters;
 use s2fp8::tensor::Tensor;
+use s2fp8::transport::{
+    all_gather, BucketPipeline, Endpoint, Listener, SocketOptions, SocketTransport, Transport,
+    TransportCounters,
+};
 use s2fp8::util::json::Json;
 use s2fp8::util::rng::{Pcg32, Rng};
 
@@ -75,6 +87,111 @@ fn allreduce_step(
             });
         }
     });
+}
+
+/// Build a 2-rank ring over real TCP-loopback sockets (ephemeral ports).
+fn tcp_pair() -> (SocketTransport, SocketTransport) {
+    let l0 = Listener::bind(&Endpoint::parse("127.0.0.1:0")).unwrap();
+    let l1 = Listener::bind(&Endpoint::parse("127.0.0.1:0")).unwrap();
+    let e0 = l0.local_endpoint().unwrap();
+    let e1 = l1.local_endpoint().unwrap();
+    let peer = std::thread::spawn(move || {
+        SocketTransport::connect_ring(
+            1,
+            2,
+            l1,
+            &e0,
+            SocketOptions::default(),
+            TransportCounters::new(),
+        )
+        .unwrap()
+    });
+    let tp0 = SocketTransport::connect_ring(
+        0,
+        2,
+        l0,
+        &e1,
+        SocketOptions::default(),
+        TransportCounters::new(),
+    )
+    .unwrap();
+    (tp0, peer.join().unwrap())
+}
+
+/// One rank's synchronous socket loop: encode every chunk's full slot
+/// list, all-gather the bundle, reduce — `steps` times.
+fn sync_socket_rank(
+    tp: &mut SocketTransport,
+    grads: &[Vec<Tensor>],
+    chunks: usize,
+    steps: usize,
+    counters: &CommCounters,
+) {
+    let rank = tp.rank();
+    let cpw = chunks / tp.world();
+    for _ in 0..steps {
+        let bundle: Vec<ChunkGrad> = (0..cpw)
+            .map(|local| {
+                let c = rank * cpw + local;
+                ChunkGrad::encode(c, 8, 1.0, &grads[c], WireFormat::S2fp8).unwrap()
+            })
+            .collect();
+        let gathered = all_gather(tp, bundle, &mut |msg| {
+            let w: usize = msg.iter().map(|c| c.wire_bytes()).sum();
+            let f: usize = msg.iter().map(|c| c.f32_wire_bytes()).sum();
+            counters.record_send(w as u64, f as u64);
+        })
+        .unwrap();
+        let all: Vec<ChunkGrad> = gathered.into_iter().flatten().collect();
+        std::hint::black_box(reduce_chunks(&all, chunks).unwrap());
+    }
+}
+
+/// One rank's overlapped socket loop: encode and submit each slot bucket
+/// (bucket 0 = the big matrix, bucket 1 = the rest), then collect and
+/// fold in order while later buckets are still on the wire. Returns
+/// accumulated `(compute_secs, exchange_wait_secs)` — compute is the
+/// encode + reduce work the comm thread hides behind, wait is the time
+/// actually blocked in `collect`.
+fn overlap_socket_rank(
+    tp: SocketTransport,
+    grads: &[Vec<Tensor>],
+    chunks: usize,
+    steps: usize,
+    counters: CommCounters,
+) -> (f64, f64) {
+    let rank = tp.rank();
+    let cpw = chunks / tp.world();
+    let pipe = BucketPipeline::new(tp, counters);
+    let bounds = [(0usize, 1usize), (1, 3)];
+    let (mut compute, mut wait) = (0.0f64, 0.0f64);
+    for _ in 0..steps {
+        let t0 = Instant::now();
+        for &(lo, hi) in &bounds {
+            let bundle: Vec<ChunkGrad> = (0..cpw)
+                .map(|local| {
+                    let c = rank * cpw + local;
+                    let (n_ex, loss) = if lo == 0 { (8, 1.0) } else { (0, 0.0) };
+                    ChunkGrad::encode(c, n_ex, loss, &grads[c][lo..hi], WireFormat::S2fp8).unwrap()
+                })
+                .collect();
+            pipe.submit(bundle).unwrap();
+        }
+        compute += t0.elapsed().as_secs_f64();
+        for _ in 0..bounds.len() {
+            let w0 = Instant::now();
+            let gathered = pipe.collect().unwrap();
+            wait += w0.elapsed().as_secs_f64();
+            let r0 = Instant::now();
+            let mut sr = StreamReducer::new(chunks);
+            for cg in gathered.iter().flatten() {
+                sr.push_ref(cg).unwrap();
+            }
+            std::hint::black_box(sr.finish().unwrap());
+            compute += r0.elapsed().as_secs_f64();
+        }
+    }
+    (compute, wait)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -144,13 +261,94 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- real sockets: synchronous TCP leg, then bucketed overlap ----
+    let sock_elems = if fast { 1 << 16 } else { 1 << 18 };
+    let sock_steps = 10usize;
+    let (mut tp0, mut tp1) = tcp_pair();
+    let peer = std::thread::spawn(move || {
+        let grads: Vec<Vec<Tensor>> =
+            (0..chunks).map(|c| chunk_grads(sock_elems, c as u64)).collect();
+        sync_socket_rank(&mut tp1, &grads, chunks, sock_steps, &CommCounters::new());
+        overlap_socket_rank(tp1, &grads, chunks, sock_steps, CommCounters::new())
+    });
+    let sock_grads: Vec<Vec<Tensor>> =
+        (0..chunks).map(|c| chunk_grads(sock_elems, c as u64)).collect();
+
+    let sync_counters = CommCounters::new();
+    let t0 = Instant::now();
+    sync_socket_rank(&mut tp0, &sock_grads, chunks, sock_steps, &sync_counters);
+    let sync_secs = t0.elapsed().as_secs_f64();
+
+    let overlap_counters = CommCounters::new();
+    let t1 = Instant::now();
+    let (compute_secs, wait_secs) =
+        overlap_socket_rank(tp0, &sock_grads, chunks, sock_steps, overlap_counters.clone());
+    let overlap_secs = t1.elapsed().as_secs_f64();
+    peer.join().expect("peer rank");
+
+    let sync_sps = sock_steps as f64 / sync_secs;
+    let overlap_sps = sock_steps as f64 / overlap_secs;
+    let sync_kib = sync_counters.wire_bytes() as f64 / sock_steps as f64 / 1024.0;
+    let overlap_kib = overlap_counters.wire_bytes() as f64 / sock_steps as f64 / 1024.0;
+    let compute_ms = 1e3 * compute_secs / sock_steps as f64;
+    let wait_ms = 1e3 * wait_secs / sock_steps as f64;
+    println!(
+        "tcp    w2 {sock_elems:>8} elems/chunk  {sync_sps:>8.1} steps/s  {sync_kib:>9.1} \
+         KiB/step  (synchronous)"
+    );
+    println!(
+        "tcp+b2 w2 {sock_elems:>8} elems/chunk  {overlap_sps:>8.1} steps/s  {overlap_kib:>9.1} \
+         KiB/step  wait {wait_ms:.2} ms vs compute {compute_ms:.2} ms"
+    );
+    table.row(vec![
+        "s2fp8/tcp".to_string(),
+        "2".to_string(),
+        sock_elems.to_string(),
+        format!("{sync_sps:.1}"),
+        format!("{sync_kib:.1}"),
+        "-".to_string(),
+    ]);
+    table.row(vec![
+        "s2fp8/tcp b2".to_string(),
+        "2".to_string(),
+        sock_elems.to_string(),
+        format!("{overlap_sps:.1}"),
+        format!("{overlap_kib:.1}"),
+        "-".to_string(),
+    ]);
+
     table.print();
     table.save(paper::out_dir(bench).join("allreduce.md"))?;
+
+    let socket = Json::obj(vec![
+        ("transport", Json::str("tcp-loopback")),
+        ("wire", Json::str("s2fp8")),
+        ("workers", Json::num(2.0)),
+        ("elems_per_chunk", Json::num(sock_elems as f64)),
+        ("chunks", Json::num(chunks as f64)),
+        ("steps", Json::num(sock_steps as f64)),
+        ("sync_steps_per_sec", Json::num(sync_sps)),
+        (
+            "sync_wire_bytes_per_step",
+            Json::num(sync_counters.wire_bytes() as f64 / sock_steps as f64),
+        ),
+        (
+            "overlap",
+            Json::obj(vec![
+                ("buckets", Json::num(2.0)),
+                ("steps_per_sec", Json::num(overlap_sps)),
+                ("compute_secs_per_step", Json::num(compute_secs / sock_steps as f64)),
+                ("exchange_wait_secs_per_step", Json::num(wait_secs / sock_steps as f64)),
+                ("wait_below_compute", Json::Bool(wait_secs < compute_secs)),
+            ]),
+        ),
+    ]);
 
     let record = Json::obj(vec![
         ("bench", Json::str("allreduce")),
         ("compression_worst", Json::num(worst_ratio)),
         ("compression_required", Json::num(3.5)),
+        ("socket", socket),
         ("rows", Json::Arr(rows)),
     ]);
     let json_path = paper::out_dir(bench).join("BENCH_allreduce.json");
@@ -165,5 +363,15 @@ fn main() -> anyhow::Result<()> {
         "S2FP8 wire compression regressed: worst {worst_ratio:.2}× < required 3.5×"
     );
     println!("compression gate passed: worst S2FP8 wire ratio {worst_ratio:.2}× ≥ 3.5×");
+
+    // Overlap gate: the bucketed socket exchange must hide behind the
+    // compute it overlaps with, or the comm thread is pure overhead.
+    anyhow::ensure!(
+        wait_secs < compute_secs,
+        "overlap regressed: exchange wait {wait_ms:.2} ms/step ≥ compute {compute_ms:.2} ms/step"
+    );
+    println!(
+        "overlap gate passed: exchange wait {wait_ms:.2} ms/step < compute {compute_ms:.2} ms/step"
+    );
     Ok(())
 }

@@ -15,8 +15,24 @@
 //! cargo run --release --bin train_dist -- --model transformer --quant s2fp8 --wire s2fp8
 //! ```
 //!
+//! **Multi-process rings:** with `--listen/--join` each rank is its own
+//! process and gradients cross real sockets (TCP, or Unix-domain with a
+//! `unix:` prefix). Launch one process per rank with the same geometry;
+//! each writes into `<out>_rank<R>` and the runs are bitwise identical
+//! to the in-process ring at the same worker count (compare
+//! `params_crc32` in `dist.json`):
+//!
+//! ```text
+//! train_dist --workers 2 --rank 0 --listen 127.0.0.1:7400 --join 127.0.0.1:7401 &
+//! train_dist --workers 2 --rank 1 --listen 127.0.0.1:7401 --join 127.0.0.1:7400 &
+//! wait
+//! ```
+//!
+//! `--buckets N` (any mode) overlaps the exchange of one gradient bucket
+//! with the reduce of the previous — bitwise identical at any N.
+//!
 //! Writes `curve.csv` and `dist.json` (loss curve, wire bytes,
-//! compression ratio, eval metrics) under `--out`.
+//! compression ratio, eval metrics, `params_crc32`) under `--out`.
 //!
 //! **Crash safety:** `--ckpt-every N` checkpoints the full train state
 //! (params, step, data cursor, RNG state) atomically every N steps;
@@ -26,15 +42,35 @@
 //! matter — batch, chunks, dataset, seed, lr, quant, wire — is validated
 //! against the checkpoint and mismatches are refused).
 
-use anyhow::{Context, Result};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
 
 use s2fp8::coordinator::trainer::LrSchedule;
-use s2fp8::dist::{DistOptions, WireFormat};
+use s2fp8::dist::{DistOptions, DistReport, WireFormat};
 use s2fp8::models::{zoo, QuantMode};
 use s2fp8::telemetry;
+use s2fp8::tensor::Tensor;
+use s2fp8::transport::{Endpoint, Listener, SocketOptions, SocketTransport, TransportCounters};
 use s2fp8::util::argparse::{ArgError, Command};
+use s2fp8::util::crc32::crc32;
 use s2fp8::util::json::Json;
 use s2fp8::util::logging;
+
+/// CRC-32 over every named parameter's exact bits — a one-line bitwise
+/// identity check across ranks and modes (the CI socket smoke diffs this
+/// field between the multi-process ranks and the in-process reference).
+fn params_crc32(params: &[(String, Tensor)]) -> u32 {
+    let mut bytes = Vec::new();
+    for (name, t) in params {
+        bytes.extend_from_slice(&(name.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(name.as_bytes());
+        for v in t.data() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    crc32(&bytes)
+}
 
 fn main() {
     logging::init_from_env();
@@ -57,6 +93,15 @@ fn run(args: &[String]) -> Result<()> {
         )
         .opt("chunks", "8", "fixed reduce granularity (chunks per global batch)")
         .opt("batch", "64", "global batch size, split across workers")
+        .opt("buckets", "1", "gradient buckets for compute/comm overlap (1 = synchronous)")
+        .opt_optional(
+            "listen",
+            "multi-process mode: address this rank accepts on (host:port or unix:/path)",
+        )
+        .opt_optional("join", "multi-process mode: successor rank's --listen address")
+        .opt("rank", "0", "this process's rank in --listen/--join mode")
+        .opt("world-size", "0", "ring size in --listen/--join mode (0 = --workers)")
+        .opt("net-timeout", "30", "socket connect/io timeout in seconds")
         .opt("steps", "120", "training steps")
         .opt("lr", "0.08", "SGD learning rate")
         .opt("seed", "2020", "init + data seed")
@@ -83,17 +128,38 @@ fn run(args: &[String]) -> Result<()> {
     let model = p.str("model");
     let wl = zoo::workload(model, seed, quant)?;
 
-    let mut opts = DistOptions::new(p.usize("workers"), wire);
+    // multi-process mode: --listen/--join make this process one rank of
+    // a socket ring (TCP or unix:); both flags or neither
+    let net = match (p.get("listen"), p.get("join")) {
+        (Some(listen), Some(join)) => Some((Endpoint::parse(listen), Endpoint::parse(join))),
+        (None, None) => None,
+        _ => bail!("--listen and --join must be given together (one socket ring per process)"),
+    };
+    let rank = p.usize("rank");
+    let world = match p.usize("world-size") {
+        0 => p.usize("workers"),
+        w => w,
+    };
+    if net.is_none() && rank != 0 {
+        bail!("--rank is only meaningful with --listen/--join");
+    }
+
+    let mut opts = DistOptions::new(if net.is_some() { world } else { p.usize("workers") }, wire);
     opts.chunks = p.usize("chunks");
     opts.global_batch = p.usize("batch");
+    opts.buckets = p.usize("buckets");
     opts.steps = p.usize("steps");
     opts.lr = LrSchedule::Constant(p.f32("lr"));
     opts.seed = seed;
     opts.log_every = p.usize("log-every");
     opts.n_examples = wl.n_examples;
 
+    let rank_suffix = match &net {
+        Some(_) => format!("_rank{rank}"),
+        None => String::new(),
+    };
     let out = std::path::PathBuf::from(p.str("out")).join(format!(
-        "{model}_w{}_{}_{}",
+        "{model}_w{}_{}_{}{rank_suffix}",
         opts.workers,
         wire.name(),
         quant.name()
@@ -120,14 +186,38 @@ fn run(args: &[String]) -> Result<()> {
         }
     }
 
-    let report = s2fp8::dist::train_resumable(
-        &opts,
-        |_rank| wl.replica(),
-        |step, idx| wl.batch(step, idx),
-        policy.as_ref(),
-        state.as_ref(),
-        None,
-    )?;
+    let report: DistReport = match &net {
+        None => s2fp8::dist::train_resumable(
+            &opts,
+            |_rank| wl.replica(),
+            |step, idx| wl.batch(step, idx),
+            policy.as_ref(),
+            state.as_ref(),
+            None,
+        )?,
+        Some((listen, join)) => {
+            // bind before connecting: the peer's connect retries converge
+            // as soon as every rank's listener exists
+            let listener = Listener::bind(listen)
+                .with_context(|| format!("binding --listen {listen}"))?;
+            let timeout = Duration::from_secs(p.u64("net-timeout"));
+            let sock_opts = SocketOptions { connect_timeout: timeout, io_timeout: timeout };
+            let counters = TransportCounters::registered(telemetry::registry(), "transport");
+            if !tel.quiet {
+                println!("rank {rank}/{world}: listening on {listen}, joining {join}");
+            }
+            let tp = SocketTransport::connect_ring(rank, world, listener, join, sock_opts, counters)
+                .with_context(|| format!("establishing the rank-{rank} socket ring"))?;
+            s2fp8::dist::train_process(
+                &opts,
+                tp,
+                |_rank| wl.replica(),
+                |step, idx| wl.batch(step, idx),
+                policy.as_ref(),
+                state.as_ref(),
+            )?
+        }
+    };
 
     let losses = report.curve.column("loss");
     let metrics = wl.eval_params(&report.final_params)?;
@@ -184,6 +274,7 @@ fn run(args: &[String]) -> Result<()> {
             Json::num(report.comm.compression_ratio().unwrap_or(1.0)),
         ),
         ("eval", Json::Obj(eval_obj)),
+        ("params_crc32", Json::str(&format!("{:08x}", params_crc32(&report.final_params)))),
         ("wall_secs", Json::num(report.wall_secs)),
     ]);
     let json_path = out.join("dist.json");

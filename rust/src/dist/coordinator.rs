@@ -36,9 +36,10 @@ use crate::metrics::comm::{CommCounters, CommReport};
 use crate::metrics::curve::Curve;
 use crate::runtime::HostValue;
 use crate::tensor::Tensor;
+use crate::transport::{all_gather, in_process_ring, BucketPipeline, Transport, TransportError};
 
-use super::ring::{ring, RingError, RingNode};
-use super::wire::{reduce_chunks, ChunkGrad, WireFormat};
+use super::ring::RingError;
+use super::wire::{reduce_chunks, ChunkGrad, Reduced, StreamReducer, WireFormat};
 
 /// Configuration of a distributed run.
 #[derive(Debug, Clone)]
@@ -50,6 +51,15 @@ pub struct DistOptions {
     /// Fixed reduce granularity: chunks per global batch. Changing this
     /// changes the arithmetic; changing `workers` does not.
     pub chunks: usize,
+    /// Gradient buckets for compute/comm **overlap**: the slot list is
+    /// cut into this many contiguous ranges, each exchanged as its own
+    /// bundle by a dedicated comm thread
+    /// ([`BucketPipeline`](crate::transport::BucketPipeline)), so the
+    /// reduce of bucket *N − 1* runs while bucket *N* is on the wire.
+    /// `1` (the default) keeps the synchronous in-loop exchange; every
+    /// value produces bitwise-identical training (the reduce arithmetic
+    /// never changes — see [`ReducedSums`](super::wire::ReducedSums)).
+    pub buckets: usize,
     /// Global batch size (split into `chunks` equal chunks).
     pub global_batch: usize,
     /// Dataset size the batcher shuffles over.
@@ -78,6 +88,7 @@ impl DistOptions {
             workers,
             wire,
             chunks: 4,
+            buckets: 1,
             global_batch: 32,
             n_examples: 1024,
             steps: 50,
@@ -101,6 +112,9 @@ impl DistOptions {
         }
         if self.steps == 0 {
             bail!("steps must be >= 1");
+        }
+        if self.buckets == 0 {
+            bail!("buckets must be >= 1 (1 = synchronous exchange)");
         }
         // batch/chunk divisibility is validated by ShardedBatcher::new
         Ok(())
@@ -242,52 +256,20 @@ where
     MF: Fn(usize) -> Result<R> + Sync,
     BP: Fn(usize, &[usize]) -> Result<Vec<HostValue>> + Sync,
 {
-    opts.validate()?;
-    // surface bad batch geometry before spawning anything
-    ShardedBatcher::new(opts.n_examples, opts.global_batch, opts.chunks, opts.seed)?;
-    if let Some(state) = resume {
-        if state.seed != opts.seed {
-            bail!(
-                "cannot resume: checkpoint was written under seed {}, this run has seed {}",
-                state.seed,
-                opts.seed
-            );
-        }
-        // the batch geometry is part of the step arithmetic: any change
-        // makes a bitwise continuation impossible, so refuse it up front
-        for (what, saved, now) in [
-            ("dataset size", state.n_examples, opts.n_examples),
-            ("global batch", state.global_batch, opts.global_batch),
-            ("chunk count", state.chunks, opts.chunks),
-        ] {
-            if saved != now {
-                bail!(
-                    "cannot resume: checkpoint was written with {what} {saved}, this run \
-                     has {now}"
-                );
-            }
-        }
-        if state.step >= opts.steps {
-            bail!(
-                "nothing to resume: checkpoint is at step {} but the run targets {} steps",
-                state.step,
-                opts.steps
-            );
-        }
-    }
+    validate_run(opts, resume)?;
 
     // registry-adopted counters: the same atomics the workers bump are
     // visible in `telemetry::registry()` snapshots as `dist.comm.*`
     let counters = CommCounters::registered(crate::telemetry::registry(), "dist.comm");
     let wall = Instant::now();
-    let nodes = ring::<Vec<ChunkGrad>>(opts.workers);
+    let endpoints = in_process_ring(opts.workers);
 
     let results: Vec<Result<WorkerOut>> = std::thread::scope(|s| {
-        let handles: Vec<_> = nodes
+        let handles: Vec<_> = endpoints
             .into_iter()
-            .map(|node| {
+            .map(|tp| {
                 let (make, prov, ctr) = (&make_replica, &provider, &counters);
-                s.spawn(move || worker_loop(opts, node, make, prov, ctr, ckpt, resume, fault))
+                s.spawn(move || worker_loop(opts, tp, make, prov, ctr, ckpt, resume, fault))
             })
             .collect();
         handles
@@ -337,10 +319,118 @@ where
     })
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop<R: GradStep>(
+/// One rank of a **multi-process** run: drive this process's replica
+/// through the same worker loop [`train_resumable`] runs in-thread, over
+/// a caller-supplied [`Transport`] — typically a
+/// [`SocketTransport`](crate::transport::SocketTransport) ring connected
+/// with `train_dist --listen/--join`. Every participating process must be
+/// launched with identical `opts` (factory, provider, seed and geometry
+/// are the determinism contract, exactly as for threads); the report is
+/// **this rank's** view, and in a healthy run every rank's curve and
+/// parameters are bitwise identical — pinned by
+/// `tests/integration_transport.rs` and the CI socket smoke, which
+/// compare the per-rank artifacts.
+///
+/// Checkpointing (`ckpt`) is honored on rank 0 only, matching the
+/// in-process coordinator.
+pub fn train_process<R, MF, BP, T>(
     opts: &DistOptions,
-    node: RingNode<Vec<ChunkGrad>>,
+    tp: T,
+    make_replica: MF,
+    provider: BP,
+    ckpt: Option<&CkptPolicy>,
+    resume: Option<&TrainState>,
+) -> Result<DistReport>
+where
+    R: GradStep,
+    MF: Fn(usize) -> Result<R> + Sync,
+    BP: Fn(usize, &[usize]) -> Result<Vec<HostValue>> + Sync,
+    T: Transport + 'static,
+{
+    validate_run(opts, resume)?;
+    if tp.world() != opts.workers {
+        bail!(
+            "transport world size {} does not match workers {} — every process must be \
+             launched with the same geometry",
+            tp.world(),
+            opts.workers
+        );
+    }
+    let counters = CommCounters::registered(crate::telemetry::registry(), "dist.comm");
+    let wall = Instant::now();
+    let out = worker_loop(opts, tp, &make_replica, &provider, &counters, ckpt, resume, None)?;
+    let comm = counters.report(out.steps_run);
+    crate::telemetry::comm_event(&comm);
+    Ok(DistReport {
+        comm,
+        curve: out.curve,
+        final_params: out.params,
+        steps_run: out.steps_run,
+        diverged: out.diverged,
+        wall_secs: wall.elapsed().as_secs_f64(),
+    })
+}
+
+/// Shared up-front guards for [`train_resumable`] and [`train_process`]:
+/// the options must be coherent, the batch geometry constructible, and a
+/// resume state must match the run it is being resumed into.
+fn validate_run(opts: &DistOptions, resume: Option<&TrainState>) -> Result<()> {
+    opts.validate()?;
+    // surface bad batch geometry before spawning anything
+    ShardedBatcher::new(opts.n_examples, opts.global_batch, opts.chunks, opts.seed)?;
+    if let Some(state) = resume {
+        if state.seed != opts.seed {
+            bail!(
+                "cannot resume: checkpoint was written under seed {}, this run has seed {}",
+                state.seed,
+                opts.seed
+            );
+        }
+        // the batch geometry is part of the step arithmetic: any change
+        // makes a bitwise continuation impossible, so refuse it up front
+        for (what, saved, now) in [
+            ("dataset size", state.n_examples, opts.n_examples),
+            ("global batch", state.global_batch, opts.global_batch),
+            ("chunk count", state.chunks, opts.chunks),
+        ] {
+            if saved != now {
+                bail!(
+                    "cannot resume: checkpoint was written with {what} {saved}, this run \
+                     has {now}"
+                );
+            }
+        }
+        if state.step >= opts.steps {
+            bail!(
+                "nothing to resume: checkpoint is at step {} but the run targets {} steps",
+                state.step,
+                opts.steps
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Cut `n_slots` gradient slots into `n_buckets` contiguous ranges
+/// (earlier buckets take the remainder, so no range is empty while
+/// `n_buckets <= n_slots`).
+fn bucket_bounds(n_slots: usize, n_buckets: usize) -> Vec<(usize, usize)> {
+    let base = n_slots / n_buckets;
+    let rem = n_slots % n_buckets;
+    let mut bounds = Vec::with_capacity(n_buckets);
+    let mut lo = 0usize;
+    for b in 0..n_buckets {
+        let hi = lo + base + usize::from(b < rem);
+        bounds.push((lo, hi));
+        lo = hi;
+    }
+    bounds
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<R: GradStep, T: Transport + 'static>(
+    opts: &DistOptions,
+    tp: T,
     make_replica: &(impl Fn(usize) -> Result<R> + Sync),
     provider: &(impl Fn(usize, &[usize]) -> Result<Vec<HostValue>> + Sync),
     counters: &CommCounters,
@@ -348,7 +438,7 @@ fn worker_loop<R: GradStep>(
     resume: Option<&TrainState>,
     fault: Option<&FaultSpec>,
 ) -> Result<WorkerOut> {
-    let rank = node.rank();
+    let rank = tp.rank();
     let mut replica =
         make_replica(rank).with_context(|| format!("building replica for rank {rank}"))?;
     let slots = replica.grad_slots();
@@ -386,8 +476,26 @@ fn worker_loop<R: GradStep>(
     };
 
     let mut curve = Curve::new(&["loss", "lr"]);
-    let mut bundle: Vec<ChunkGrad> =
-        (0..chunks_per_worker).map(|_| ChunkGrad::empty(opts.wire)).collect();
+
+    // compute/comm overlap: with `buckets > 1` the slot list is cut into
+    // contiguous ranges and a dedicated comm thread exchanges each range
+    // as its own bundle, so the frontier reduce of one bucket overlaps
+    // the wire time of the next; `buckets == 1` keeps the synchronous
+    // in-loop exchange (and its exact span structure)
+    let n_buckets = if opts.buckets > 1 {
+        opts.buckets.min(slots.len().max(1))
+    } else {
+        1
+    };
+    let bounds = bucket_bounds(slots.len(), n_buckets);
+    let mut sync_tp = Some(tp);
+    let pipeline = (n_buckets > 1).then(|| {
+        BucketPipeline::new(sync_tp.take().expect("transport is unclaimed"), counters.clone())
+    });
+    let mut bundles: Vec<Vec<ChunkGrad>> = (0..n_buckets)
+        .map(|_| (0..chunks_per_worker).map(|_| ChunkGrad::empty(opts.wire)).collect())
+        .collect();
+
     let mut bad_streak = 0usize;
     let mut diverged = false;
     let mut steps_run = start_step;
@@ -406,7 +514,7 @@ fn worker_loop<R: GradStep>(
             let _labels = crate::telemetry::quant::sampling_enabled().then(|| {
                 crate::telemetry::quant::slot_labels(slots.iter().map(|(n, _)| n.clone()))
             });
-            for (local, msg) in bundle.iter_mut().enumerate() {
+            for local in 0..chunks_per_worker {
                 let chunk = first_chunk + local;
                 let batch = provider(step - 1, &chunk_indices[chunk])
                     .with_context(|| format!("building batch for step {step} chunk {chunk}"))?;
@@ -416,8 +524,20 @@ fn worker_loop<R: GradStep>(
                 if sg.grads.len() != slots.len() {
                     bail!("replica produced {} grads for {} slots", sg.grads.len(), slots.len());
                 }
-                msg.encode_into(chunk, sg.n_examples, sg.loss_sum, &sg.grads, opts.wire)
-                    .with_context(|| format!("encoding wire gradients at step {step}"))?;
+                // bucket 0 carries the example count and loss sum; the
+                // encode walks buckets in ascending slot order, so the
+                // wire sees the same per-chunk tensor sequence at every
+                // bucket count (quant-health slot labels included)
+                for (b, &(lo, hi)) in bounds.iter().enumerate() {
+                    let (n_ex, loss) = if b == 0 {
+                        (sg.n_examples, sg.loss_sum)
+                    } else {
+                        (0, 0.0)
+                    };
+                    bundles[b][local]
+                        .encode_into(chunk, n_ex, loss, &sg.grads[lo..hi], opts.wire)
+                        .with_context(|| format!("encoding wire gradients at step {step}"))?;
+                }
             }
         }
 
@@ -429,24 +549,64 @@ fn worker_loop<R: GradStep>(
             bail!("injected fault: worker {rank} killed at step {step}");
         }
 
-        // exchange: ring all-gather of packed bundles (clones cross the
-        // "wire"; our own bundle comes back in slot `rank` so its
-        // buffers are reclaimed below — steady state allocates nothing)
-        let mut gathered = {
-            let _s = crate::telemetry::span::enter("allreduce.exchange");
-            node.all_gather(std::mem::take(&mut bundle), |msg| {
-                let wire: usize = msg.iter().map(|c| c.wire_bytes()).sum();
-                let f32eq: usize = msg.iter().map(|c| c.f32_wire_bytes()).sum();
-                counters.record_send(wire as u64, f32eq as u64);
-            })?
+        // exchange + reduce phases (identical arithmetic on every rank,
+        // at every bucket count)
+        let red = match &pipeline {
+            None => {
+                // synchronous: ring all-gather of the one bundle (clones
+                // or serialized bytes cross the wire; our own bundle
+                // comes back in slot `rank` so its buffers are reclaimed
+                // below — steady state allocates nothing)
+                let tp = sync_tp.as_mut().expect("sync path owns the transport");
+                let mut gathered = {
+                    let _s = crate::telemetry::span::enter("allreduce.exchange");
+                    all_gather(tp, std::mem::take(&mut bundles[0]), &mut |msg| {
+                        let wire: usize = msg.iter().map(|c| c.wire_bytes()).sum();
+                        let f32eq: usize = msg.iter().map(|c| c.f32_wire_bytes()).sum();
+                        counters.record_send(wire as u64, f32eq as u64);
+                    })?
+                };
+                let red = {
+                    let _s = crate::telemetry::span::enter("allreduce.reduce");
+                    reduce_chunks(gathered.iter().flatten(), opts.chunks)?
+                };
+                bundles[0] = std::mem::take(&mut gathered[rank]);
+                red
+            }
+            Some(pipe) => {
+                // overlapped: submit every bucket, then fold them back in
+                // submission order — the comm thread is exchanging bucket
+                // b + 1 while this thread reduces bucket b
+                for bundle in bundles.iter_mut() {
+                    pipe.submit(std::mem::take(bundle))?;
+                }
+                let _s = crate::telemetry::span::enter("allreduce.reduce");
+                let mut grads = Vec::with_capacity(slots.len());
+                let mut loss_mean = 0.0f64;
+                let mut n = 0usize;
+                for (b, bundle) in bundles.iter_mut().enumerate() {
+                    let mut gathered = pipe.collect()?;
+                    let mut sr = StreamReducer::new(opts.chunks);
+                    for cg in gathered.iter().flatten() {
+                        sr.push_ref(cg)?;
+                    }
+                    let sums = sr.finish()?;
+                    if b == 0 {
+                        n = sums.n_examples;
+                    }
+                    // secondary buckets carry no example count: divide by
+                    // bucket 0's — the same single rounding point the
+                    // synchronous reduce applies
+                    let part = sums.into_mean(n)?;
+                    if b == 0 {
+                        loss_mean = part.loss_mean;
+                    }
+                    grads.extend(part.grads);
+                    *bundle = std::mem::take(&mut gathered[rank]);
+                }
+                Reduced { grads, loss_mean, n_examples: n }
+            }
         };
-
-        // reduce + apply phases (identical on every rank)
-        let red = {
-            let _s = crate::telemetry::span::enter("allreduce.reduce");
-            reduce_chunks(gathered.iter().flatten(), opts.chunks)?
-        };
-        bundle = std::mem::take(&mut gathered[rank]);
         let mut shaped = Vec::with_capacity(slots.len());
         for (g, (name, shape)) in red.grads.into_iter().zip(slots.iter()) {
             if g.len() != shape.iter().product::<usize>() {
@@ -518,7 +678,10 @@ fn worker_loop<R: GradStep>(
 }
 
 fn is_disconnect(e: &anyhow::Error) -> bool {
-    e.chain().any(|c| c.downcast_ref::<RingError>().is_some())
+    e.chain().any(|c| {
+        c.downcast_ref::<RingError>().is_some()
+            || c.downcast_ref::<TransportError>().is_some_and(|t| t.is_disconnect())
+    })
 }
 
 fn curves_bitwise_eq(a: &Curve, b: &Curve) -> bool {
@@ -551,12 +714,17 @@ mod tests {
     use crate::models::MlpModel;
 
     fn run(workers: usize, wire: WireFormat, steps: usize) -> DistReport {
+        run_buckets(workers, wire, steps, 1)
+    }
+
+    fn run_buckets(workers: usize, wire: WireFormat, steps: usize, buckets: usize) -> DistReport {
         let (x, y) = synth_vector::dataset(256, 12, 4, 5);
         let mut opts = DistOptions::new(workers, wire);
         opts.chunks = 4;
         opts.global_batch = 16;
         opts.n_examples = 256;
         opts.steps = steps;
+        opts.buckets = buckets;
         opts.lr = LrSchedule::Constant(0.08);
         train(
             &opts,
@@ -582,6 +750,26 @@ mod tests {
         assert!(o.validate().is_ok());
         o.steps = 0;
         assert!(o.validate().is_err());
+        o.steps = 5;
+        o.buckets = 0;
+        assert!(o.validate().is_err(), "0 buckets is meaningless");
+    }
+
+    #[test]
+    fn bucketed_overlap_is_bitwise_identical_to_synchronous() {
+        for wire in [WireFormat::Fp32, WireFormat::S2fp8] {
+            let sync = run(2, wire, 6);
+            // 7 buckets > slot count exercises the clamp to one slot each
+            for buckets in [2usize, 7] {
+                let b = run_buckets(2, wire, 6, buckets);
+                assert!(
+                    curves_bitwise_eq(&sync.curve, &b.curve),
+                    "{} x{buckets}: loss curves diverged",
+                    wire.name()
+                );
+                assert!(params_bitwise_eq(&sync.final_params, &b.final_params));
+            }
+        }
     }
 
     #[test]

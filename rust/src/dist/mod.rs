@@ -36,6 +36,15 @@
 //! synthetic data, with `--quant` forward quantization),
 //! `cargo bench --bench perf_allreduce` (wire throughput + compression).
 //!
+//! **Transports:** the exchange runs over the [`crate::transport`]
+//! abstraction — in-process channels by default, TCP or Unix-domain
+//! sockets for **multi-process** rings ([`coordinator::train_process`],
+//! `train_dist --listen/--join`), all carrying the same wire bytes. With
+//! `DistOptions::buckets > 1`, gradient slots are split into buckets and
+//! a comm thread overlaps the exchange of one bucket with the streaming
+//! reduce ([`wire::StreamReducer`]) of the previous — bitwise identical
+//! to the synchronous path at any bucket count.
+//!
 //! **Crash safety:** [`coordinator::train_resumable`] layers periodic
 //! atomic checkpointing ([`CkptPolicy`] → a
 //! [`TrainState`](crate::coordinator::resume::TrainState) frame) and
@@ -49,7 +58,10 @@ pub mod ring;
 pub mod wire;
 
 pub use coordinator::{
-    cli_ckpt_setup, train, train_resumable, CkptPolicy, DistOptions, DistReport, FaultSpec,
+    cli_ckpt_setup, train, train_process, train_resumable, CkptPolicy, DistOptions, DistReport,
+    FaultSpec,
 };
 pub use ring::{ring, RingError, RingNode};
-pub use wire::{reduce_chunks, ChunkGrad, Reduced, WireError, WireFormat};
+pub use wire::{
+    reduce_chunks, ChunkGrad, Reduced, ReducedSums, StreamReducer, WireError, WireFormat,
+};

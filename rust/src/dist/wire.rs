@@ -19,7 +19,7 @@
 //! containing non-finite values fails the reduce — both as typed
 //! [`WireError`]s, mirroring the codec layer's no-panic rule.
 
-use crate::formats::{CodecError, FormatKind, QuantizedTensor};
+use crate::formats::{CodecError, FormatKind, QuantizedTensor, RangeDecoder};
 use crate::tensor::Tensor;
 
 /// Which format gradient payloads use on the wire.
@@ -180,6 +180,203 @@ pub struct Reduced {
     pub n_examples: usize,
 }
 
+/// Per-slot f64 gradient **sums** over a complete chunk set, before the
+/// division by the example count — what [`StreamReducer::finish`] yields.
+/// Keeping the sums and the mean separate is what lets gradient buckets
+/// (disjoint slot ranges exchanged as separate bundles, only one of which
+/// carries the example count) reduce independently and still divide by
+/// the one shared `n`: [`ReducedSums::into_mean`] applies exactly the
+/// rounding [`reduce_chunks`] always used, so bucketed and unbucketed
+/// reduces are bitwise identical per slot.
+#[derive(Debug, Clone)]
+pub struct ReducedSums {
+    /// Per-slot f64 sums, folded in chunk-index order.
+    pub sums: Vec<Vec<f64>>,
+    /// Σ loss over the folded chunks.
+    pub loss_sum: f64,
+    /// Σ examples over the folded chunks (0 for buckets that do not carry
+    /// the count).
+    pub n_examples: usize,
+}
+
+impl ReducedSums {
+    /// Divide by `n` and round each element to f32 once (the single
+    /// rounding point of the whole reduce). `n` is a parameter rather
+    /// than `self.n_examples` so secondary buckets can borrow bucket 0's
+    /// count.
+    pub fn into_mean(self, n: usize) -> Result<Reduced, WireError> {
+        if n == 0 {
+            return Err(WireError::NoExamples);
+        }
+        let inv = 1.0 / n as f64;
+        let grads = self
+            .sums
+            .into_iter()
+            .map(|a| {
+                let data: Vec<f32> = a.into_iter().map(|v| (v * inv) as f32).collect();
+                let len = data.len();
+                Tensor::new(vec![len], data)
+            })
+            .collect();
+        Ok(Reduced { grads, loss_mean: self.loss_sum * inv, n_examples: n })
+    }
+}
+
+/// Incremental chunk reduce: push [`ChunkGrad`]s **as they arrive** (any
+/// order) and the reducer folds them into per-slot f64 sums strictly in
+/// chunk-index order — chunks ahead of the frontier are buffered, and the
+/// frontier advances the moment its chunk lands. A socket rank can
+/// therefore start accumulating chunk *k* while its peer is still
+/// transmitting chunk *k + 1*, and the result is still bitwise identical
+/// to the batch [`reduce_chunks`] (which is now implemented on top of
+/// this type).
+///
+/// Validation matches the batch reduce: the chunk set must be exactly
+/// `0..expected`, slot arity and lengths must agree with chunk 0, and a
+/// decoded non-finite value fails typed. Refills go through a per-tensor
+/// [`RangeDecoder`] (format dispatch hoisted out of the hot loop).
+#[derive(Debug)]
+pub struct StreamReducer {
+    expected: usize,
+    /// Next chunk index to fold (everything below is folded).
+    next: usize,
+    /// Out-of-order arrivals waiting for the frontier.
+    pending: Vec<Option<ChunkGrad>>,
+    /// Per-slot element counts, established by chunk 0.
+    lens: Vec<usize>,
+    acc: Vec<Vec<f64>>,
+    loss: f64,
+    n: usize,
+    scratch: Vec<f32>,
+}
+
+impl StreamReducer {
+    pub fn new(expected_chunks: usize) -> Self {
+        StreamReducer {
+            expected: expected_chunks,
+            next: 0,
+            pending: (0..expected_chunks).map(|_| None).collect(),
+            lens: Vec::new(),
+            acc: Vec::new(),
+            loss: 0.0,
+            n: 0,
+            scratch: vec![0.0f32; REDUCE_SCRATCH_ELEMS],
+        }
+    }
+
+    /// True once every chunk of `0..expected` has been folded.
+    pub fn is_complete(&self) -> bool {
+        self.next == self.expected
+    }
+
+    /// Chunk indices received so far (folded + buffered) — error context.
+    fn seen(&self) -> Vec<usize> {
+        let mut got: Vec<usize> = (0..self.next).collect();
+        got.extend((self.next..self.expected).filter(|&i| self.pending[i].is_some()));
+        got
+    }
+
+    fn admit(&self, chunk: usize) -> Result<(), WireError> {
+        if chunk >= self.expected || chunk < self.next || self.pending[chunk].is_some() {
+            let mut got = self.seen();
+            got.push(chunk);
+            return Err(WireError::BadChunkSet { expected: self.expected, got });
+        }
+        Ok(())
+    }
+
+    /// Fold or buffer one chunk (owned — the streaming-transport path).
+    pub fn push(&mut self, cg: ChunkGrad) -> Result<(), WireError> {
+        self.admit(cg.chunk)?;
+        if cg.chunk == self.next {
+            self.fold(&cg)?;
+            self.drain()
+        } else {
+            let c = cg.chunk;
+            self.pending[c] = Some(cg);
+            Ok(())
+        }
+    }
+
+    /// [`Self::push`] by reference: clones only when the chunk has to be
+    /// buffered ahead of the frontier (in-order feeds never clone).
+    pub fn push_ref(&mut self, cg: &ChunkGrad) -> Result<(), WireError> {
+        self.admit(cg.chunk)?;
+        if cg.chunk == self.next {
+            self.fold(cg)?;
+            self.drain()
+        } else {
+            self.pending[cg.chunk] = Some(cg.clone());
+            Ok(())
+        }
+    }
+
+    fn drain(&mut self) -> Result<(), WireError> {
+        while self.next < self.expected {
+            match self.pending[self.next].take() {
+                Some(cg) => self.fold(&cg)?,
+                None => break,
+            }
+        }
+        Ok(())
+    }
+
+    fn fold(&mut self, cg: &ChunkGrad) -> Result<(), WireError> {
+        debug_assert_eq!(cg.chunk, self.next, "fold must advance the frontier");
+        if self.next == 0 {
+            self.lens = cg.tensors.iter().map(|t| t.len()).collect();
+            self.acc = self.lens.iter().map(|&l| vec![0.0f64; l]).collect();
+        }
+        if cg.tensors.len() != self.lens.len() {
+            return Err(WireError::SlotArity {
+                chunk: cg.chunk,
+                got: cg.tensors.len(),
+                expected: self.lens.len(),
+            });
+        }
+        for (slot, t) in cg.tensors.iter().enumerate() {
+            if t.len() != self.lens[slot] {
+                return Err(WireError::SlotLen {
+                    chunk: cg.chunk,
+                    slot,
+                    got: t.len(),
+                    expected: self.lens[slot],
+                });
+            }
+        }
+        self.loss += cg.loss_sum;
+        self.n += cg.n_examples;
+        for (slot, t) in cg.tensors.iter().enumerate() {
+            let len = self.lens[slot];
+            let dec = RangeDecoder::new(t);
+            let mut start = 0usize;
+            while start < len {
+                let take = REDUCE_SCRATCH_ELEMS.min(len - start);
+                let view = &mut self.scratch[..take];
+                dec.decode_range(start, view);
+                for (a, &v) in self.acc[slot][start..start + take].iter_mut().zip(view.iter()) {
+                    if !v.is_finite() {
+                        return Err(WireError::CorruptPayload { chunk: cg.chunk, slot });
+                    }
+                    *a += v as f64;
+                }
+                start += take;
+            }
+        }
+        self.next += 1;
+        Ok(())
+    }
+
+    /// Finish the fold; fails with the chunk indices actually seen if the
+    /// set `0..expected` is incomplete.
+    pub fn finish(self) -> Result<ReducedSums, WireError> {
+        if !self.is_complete() {
+            return Err(WireError::BadChunkSet { expected: self.expected, got: self.seen() });
+        }
+        Ok(ReducedSums { sums: self.acc, loss_sum: self.loss, n_examples: self.n })
+    }
+}
+
 /// Deterministic all-reduce completion: validate that `chunks` is exactly
 /// the set `0..expected_chunks`, then for every slot accumulate the
 /// decoded chunk tensors in **chunk index order** into f64, divide by the
@@ -190,7 +387,8 @@ pub struct Reduced {
 /// over the same chunk set produces bitwise-identical gradients, at any
 /// worker count (the property `tests/prop_allreduce.rs` pins). Takes any
 /// iterator of chunk refs so callers can feed an all-gather result
-/// without flattening it into an owned `Vec` first.
+/// without flattening it into an owned `Vec` first. Implemented on top of
+/// [`StreamReducer`], so the batch and streaming reduces cannot diverge.
 pub fn reduce_chunks<'a>(
     chunks: impl IntoIterator<Item = &'a ChunkGrad>,
     expected_chunks: usize,
@@ -204,67 +402,13 @@ pub fn reduce_chunks<'a>(
     {
         return Err(WireError::BadChunkSet { expected: expected_chunks, got });
     }
-
-    let slots = order[0].tensors.len();
-    let lens: Vec<usize> = order[0].tensors.iter().map(|t| t.len()).collect();
-    for cg in &order {
-        if cg.tensors.len() != slots {
-            return Err(WireError::SlotArity {
-                chunk: cg.chunk,
-                got: cg.tensors.len(),
-                expected: slots,
-            });
-        }
-        for (slot, t) in cg.tensors.iter().enumerate() {
-            if t.len() != lens[slot] {
-                return Err(WireError::SlotLen {
-                    chunk: cg.chunk,
-                    slot,
-                    got: t.len(),
-                    expected: lens[slot],
-                });
-            }
-        }
+    let mut sr = StreamReducer::new(expected_chunks);
+    for cg in order {
+        sr.push_ref(cg)?;
     }
-
-    let mut loss = 0.0f64;
-    let mut n = 0usize;
-    let mut acc: Vec<Vec<f64>> = lens.iter().map(|&l| vec![0.0f64; l]).collect();
-    let mut scratch = vec![0.0f32; REDUCE_SCRATCH_ELEMS];
-    for cg in &order {
-        loss += cg.loss_sum;
-        n += cg.n_examples;
-        for (slot, t) in cg.tensors.iter().enumerate() {
-            let len = lens[slot];
-            let mut start = 0usize;
-            while start < len {
-                let take = REDUCE_SCRATCH_ELEMS.min(len - start);
-                let view = &mut scratch[..take];
-                t.decode_range(start, view);
-                for (a, &v) in acc[slot][start..start + take].iter_mut().zip(view.iter()) {
-                    if !v.is_finite() {
-                        return Err(WireError::CorruptPayload { chunk: cg.chunk, slot });
-                    }
-                    *a += v as f64;
-                }
-                start += take;
-            }
-        }
-    }
-    if n == 0 {
-        return Err(WireError::NoExamples);
-    }
-
-    let inv = 1.0 / n as f64;
-    let grads = acc
-        .into_iter()
-        .map(|a| {
-            let data: Vec<f32> = a.into_iter().map(|v| (v * inv) as f32).collect();
-            let len = data.len();
-            Tensor::new(vec![len], data)
-        })
-        .collect();
-    Ok(Reduced { grads, loss_mean: loss * inv, n_examples: n })
+    let sums = sr.finish()?;
+    let n = sums.n_examples;
+    sums.into_mean(n)
 }
 
 #[cfg(test)]
@@ -419,6 +563,97 @@ mod tests {
         let c = ChunkGrad::encode(0, 0, 0.0, &[Tensor::new(vec![0], vec![])], WireFormat::Fp32)
             .unwrap();
         assert!(matches!(reduce_chunks(&[c], 1).unwrap_err(), WireError::NoExamples));
+    }
+
+    #[test]
+    fn stream_reducer_is_bitwise_identical_to_batch_reduce_in_any_order() {
+        let gs: Vec<Vec<Tensor>> =
+            (0..4).map(|c| vec![grad(vec![40], c), grad(vec![3, 3], c + 20)]).collect();
+        for wire in [WireFormat::Fp32, WireFormat::S2fp8] {
+            let chunks: Vec<ChunkGrad> = gs
+                .iter()
+                .enumerate()
+                .map(|(c, g)| ChunkGrad::encode(c, 4, c as f64 * 0.25, g, wire).unwrap())
+                .collect();
+            let batch = reduce_chunks(&chunks, 4).unwrap();
+            // push in a scrambled order: 2, 0, 3, 1 — the frontier folds
+            // 0, buffers 2 and 3, then drains 1..=3 when 1 arrives
+            let mut sr = StreamReducer::new(4);
+            for &i in &[2usize, 0, 3, 1] {
+                assert!(!sr.is_complete());
+                sr.push(chunks[i].clone()).unwrap();
+            }
+            assert!(sr.is_complete());
+            let sums = sr.finish().unwrap();
+            assert_eq!(sums.n_examples, 16);
+            let red = sums.into_mean(16).unwrap();
+            assert_eq!(red.loss_mean.to_bits(), batch.loss_mean.to_bits());
+            for (a, b) in red.grads.iter().zip(batch.grads.iter()) {
+                for (x, y) in a.data().iter().zip(b.data().iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{} wire", wire.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_reducer_rejects_duplicates_overflow_and_incomplete_sets() {
+        let g = vec![grad(vec![8], 9)];
+        let c0 = ChunkGrad::encode(0, 2, 0.0, &g, WireFormat::Fp32).unwrap();
+        let c1 = ChunkGrad::encode(1, 2, 0.0, &g, WireFormat::Fp32).unwrap();
+
+        // duplicate of a folded chunk
+        let mut sr = StreamReducer::new(2);
+        sr.push(c0.clone()).unwrap();
+        assert!(matches!(sr.push(c0.clone()).unwrap_err(), WireError::BadChunkSet { .. }));
+
+        // duplicate of a buffered chunk
+        let mut sr = StreamReducer::new(2);
+        sr.push(c1.clone()).unwrap();
+        assert!(matches!(sr.push(c1.clone()).unwrap_err(), WireError::BadChunkSet { .. }));
+
+        // chunk index past the expected set
+        let mut sr = StreamReducer::new(1);
+        assert!(matches!(sr.push(c1.clone()).unwrap_err(), WireError::BadChunkSet { .. }));
+
+        // incomplete set at finish reports what arrived
+        let mut sr = StreamReducer::new(3);
+        sr.push(c0).unwrap();
+        sr.push(c1).unwrap();
+        match sr.finish().unwrap_err() {
+            WireError::BadChunkSet { expected, got } => {
+                assert_eq!(expected, 3);
+                assert_eq!(got, vec![0, 1]);
+            }
+            other => panic!("expected BadChunkSet, got {other}"),
+        }
+    }
+
+    #[test]
+    fn secondary_bucket_sums_borrow_the_primary_example_count() {
+        // A bucket that carries no example count reduces to sums and is
+        // divided by the primary bucket's n — bitwise equal to reducing
+        // the slot unbucketed.
+        let g = vec![grad(vec![31], 3)];
+        let full = ChunkGrad::encode(0, 8, 2.0, &g, WireFormat::Fp32).unwrap();
+        let whole = reduce_chunks(&[full], 1).unwrap();
+
+        let secondary = ChunkGrad::encode(0, 0, 0.0, &g, WireFormat::Fp32).unwrap();
+        let mut sr = StreamReducer::new(1);
+        sr.push(secondary).unwrap();
+        let sums = sr.finish().unwrap();
+        assert_eq!(sums.n_examples, 0);
+        let red = sums.into_mean(8).unwrap();
+        for (x, y) in red.grads[0].data().iter().zip(whole.grads[0].data().iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // dividing by zero examples is a typed error
+        let mut sr = StreamReducer::new(1);
+        sr.push(ChunkGrad::encode(0, 0, 0.0, &g, WireFormat::Fp32).unwrap()).unwrap();
+        assert!(matches!(
+            sr.finish().unwrap().into_mean(0).unwrap_err(),
+            WireError::NoExamples
+        ));
     }
 
     #[test]

@@ -50,6 +50,15 @@ pub const QT_MAGIC: &[u8; 4] = b"S2QT";
 /// values.
 pub const QT_VERSION: u8 = 2;
 
+/// Largest payload a framed tensor may declare. [`QuantizedTensor::from_slice`]
+/// (and the streaming [`crate::transport::FrameDecoder`]) check the length
+/// field against this cap *before* allocating anything, so a corrupted or
+/// attacker-controlled socket length surfaces as a typed
+/// [`CodecError::Oversized`] instead of driving an unbounded allocation.
+pub const MAX_FRAME_PAYLOAD_BYTES: u64 = 1 << 28;
+/// Largest tensor rank a frame may declare (same pre-allocation gate).
+pub const MAX_FRAME_RANK: u32 = 64;
+
 /// Typed errors of the codec layer. Nothing here panics on untrusted
 /// input: malformed framing, wrong-format decodes and shape mismatches
 /// all surface as values.
@@ -65,6 +74,8 @@ pub enum CodecError {
     UnknownTag(u8),
     #[error("quantized tensor truncated: need {need} more bytes at offset {at}")]
     Truncated { at: usize, need: usize },
+    #[error("quantized tensor declares {field} {got}, over the decode cap {cap} — refusing the allocation")]
+    Oversized { field: &'static str, got: u64, cap: u64 },
     #[error("payload of {got} bytes does not match shape {shape:?} at {bpe} B/element")]
     PayloadMismatch { shape: Vec<usize>, bpe: usize, got: usize },
     #[error("shape {shape:?} does not hold {elems} elements")]
@@ -348,8 +359,16 @@ impl QuantizedTensor {
         let kind = kind_from_tag(take(buf, &mut pos, 1)?[0])?;
         let has_s2 = take(buf, &mut pos, 1)?[0] != 0;
         let rank_b = take(buf, &mut pos, 4)?;
-        let rank = u32::from_le_bytes([rank_b[0], rank_b[1], rank_b[2], rank_b[3]]) as usize;
-        let mut shape = Vec::with_capacity(rank.min(64));
+        let rank32 = u32::from_le_bytes([rank_b[0], rank_b[1], rank_b[2], rank_b[3]]);
+        if rank32 > MAX_FRAME_RANK {
+            return Err(CodecError::Oversized {
+                field: "rank",
+                got: rank32 as u64,
+                cap: MAX_FRAME_RANK as u64,
+            });
+        }
+        let rank = rank32 as usize;
+        let mut shape = Vec::with_capacity(rank);
         for _ in 0..rank {
             let d = take(buf, &mut pos, 8)?;
             shape.push(u64::from_le_bytes(d.try_into().unwrap()) as usize);
@@ -360,7 +379,15 @@ impl QuantizedTensor {
             None
         };
         let l = take(buf, &mut pos, 8)?;
-        let payload_len = u64::from_le_bytes(l.try_into().unwrap()) as usize;
+        let payload_len64 = u64::from_le_bytes(l.try_into().unwrap());
+        if payload_len64 > MAX_FRAME_PAYLOAD_BYTES {
+            return Err(CodecError::Oversized {
+                field: "payload length",
+                got: payload_len64,
+                cap: MAX_FRAME_PAYLOAD_BYTES,
+            });
+        }
+        let payload_len = payload_len64 as usize;
         let payload = take(buf, &mut pos, payload_len)?.to_vec();
         if version >= 2 {
             let computed = crate::util::crc32::crc32(&buf[..pos]);
@@ -381,6 +408,107 @@ impl QuantizedTensor {
             return Err(CodecError::TrailingBytes(buf.len() - used));
         }
         Ok(qt)
+    }
+}
+
+/// A per-tensor decode plan resolved **once** instead of per refill: the
+/// hot path of the distributed reduce walks a large wire tensor through a
+/// small scratch buffer via repeated [`QuantizedTensor::decode_range`]
+/// calls, and each of those re-matched the [`FormatKind`] and rebuilt the
+/// S2FP8 unsqueeze transform. `RangeDecoder::new` hoists that dispatch out
+/// of the loop — for every 1-byte format it fuses the format decode and
+/// the per-tensor (α, β) transform into a single 256-entry f32 table, so a
+/// refill is one table lookup per element. Bitwise identical to
+/// [`QuantizedTensor::decode_range`] for every format (the table entries
+/// are computed with the exact per-element expressions).
+pub struct RangeDecoder<'a> {
+    qt: &'a QuantizedTensor,
+    plan: DecodePlan,
+}
+
+enum DecodePlan {
+    F32,
+    F16,
+    Bf16,
+    /// Fused per-byte decode table (FP8 family and S2FP8: format decode
+    /// composed with the tensor's unsqueeze where applicable).
+    Lut(Box<[f32; 256]>),
+}
+
+impl<'a> RangeDecoder<'a> {
+    /// Resolve the decode plan for `qt` (one `FormatKind` match, one LUT
+    /// build for byte-wide formats).
+    pub fn new(qt: &'a QuantizedTensor) -> Self {
+        let plan = match qt.kind {
+            FormatKind::Fp32 => DecodePlan::F32,
+            FormatKind::Fp16 => DecodePlan::F16,
+            FormatKind::Bf16 => DecodePlan::Bf16,
+            FormatKind::Fp8 => {
+                let mut lut = Box::new([0.0f32; 256]);
+                for (b, slot) in lut.iter_mut().enumerate() {
+                    *slot = fp8::decode_lut(b as u8);
+                }
+                DecodePlan::Lut(lut)
+            }
+            FormatKind::Fp8E4m3 => {
+                let mut lut = Box::new([0.0f32; 256]);
+                for (b, slot) in lut.iter_mut().enumerate() {
+                    *slot = fp8e4m3::decode_lut(b as u8);
+                }
+                DecodePlan::Lut(lut)
+            }
+            FormatKind::S2fp8 | FormatKind::S2fp8Sr => {
+                let (alpha, beta) = qt.s2.expect("constructors enforce α/β for S2FP8");
+                let c = s2fp8::S2fp8Codec { alpha, beta };
+                let mut lut = Box::new([0.0f32; 256]);
+                for (b, slot) in lut.iter_mut().enumerate() {
+                    *slot = c.unsqueeze(fp8::decode_lut(b as u8));
+                }
+                DecodePlan::Lut(lut)
+            }
+        };
+        RangeDecoder { qt, plan }
+    }
+
+    /// Elements of the underlying tensor.
+    pub fn len(&self) -> usize {
+        self.qt.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.qt.is_empty()
+    }
+
+    /// Decode elements `[start, start + out.len())` into `out` — same
+    /// contract (and same bits) as [`QuantizedTensor::decode_range`],
+    /// without the per-call dispatch.
+    pub fn decode_range(&self, start: usize, out: &mut [f32]) {
+        let bpe = bytes_per_element(self.qt.kind);
+        let end = start + out.len();
+        assert!(end <= self.qt.len(), "decode_range {start}..{end} past len {}", self.qt.len());
+        let p = &self.qt.payload[start * bpe..end * bpe];
+        match &self.plan {
+            DecodePlan::F32 => {
+                for (c, y) in p.chunks_exact(4).zip(out.iter_mut()) {
+                    *y = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            DecodePlan::F16 => {
+                for (c, y) in p.chunks_exact(2).zip(out.iter_mut()) {
+                    *y = fp16::decode(u16::from_le_bytes([c[0], c[1]]));
+                }
+            }
+            DecodePlan::Bf16 => {
+                for (c, y) in p.chunks_exact(2).zip(out.iter_mut()) {
+                    *y = bf16::decode(u16::from_le_bytes([c[0], c[1]]));
+                }
+            }
+            DecodePlan::Lut(lut) => {
+                for (&b, y) in p.iter().zip(out.iter_mut()) {
+                    *y = lut[b as usize];
+                }
+            }
+        }
     }
 }
 
@@ -1026,6 +1154,76 @@ mod tests {
             // empty range at the end is fine
             qt.decode_range(qt.len(), &mut []);
         }
+    }
+
+    #[test]
+    fn range_decoder_is_bitwise_identical_to_decode_range() {
+        let xs = lognormal(777, -7.0, 4.0, 13);
+        for &kind in FormatKind::all() {
+            let qt = kind.codec().encode(&xs);
+            let dec = RangeDecoder::new(&qt);
+            assert_eq!(dec.len(), qt.len());
+            assert!(!dec.is_empty());
+            let mut a = vec![0.0f32; 129];
+            let mut b = vec![0.0f32; 129];
+            for start in [0usize, 1, 300, 648] {
+                let take = a.len().min(qt.len() - start);
+                qt.decode_range(start, &mut a[..take]);
+                dec.decode_range(start, &mut b[..take]);
+                for (i, (x, y)) in a[..take].iter().zip(b[..take].iter()).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{} elem {}", kind.name(), start + i);
+                }
+            }
+            // empty range at the end is fine
+            dec.decode_range(qt.len(), &mut []);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "decode_range")]
+    fn range_decoder_rejects_overrun() {
+        let qt = FormatKind::Fp8.codec().encode(&[1.0, 2.0]);
+        let dec = RangeDecoder::new(&qt);
+        let mut buf = [0.0f32; 3];
+        dec.decode_range(0, &mut buf);
+    }
+
+    #[test]
+    fn oversized_length_fields_are_refused_before_allocating() {
+        // Hand-build a frame whose payload_len claims more than the cap:
+        // the parse must fail typed without attempting the allocation.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(QT_MAGIC);
+        frame.push(QT_VERSION);
+        frame.push(3); // fp8 tag
+        frame.push(0); // no α/β
+        frame.extend_from_slice(&1u32.to_le_bytes()); // rank
+        frame.extend_from_slice(&u64::MAX.to_le_bytes()); // dim (unchecked here)
+        frame.extend_from_slice(&(MAX_FRAME_PAYLOAD_BYTES + 1).to_le_bytes());
+        assert_eq!(
+            QuantizedTensor::from_slice(&frame).unwrap_err(),
+            CodecError::Oversized {
+                field: "payload length",
+                got: MAX_FRAME_PAYLOAD_BYTES + 1,
+                cap: MAX_FRAME_PAYLOAD_BYTES
+            }
+        );
+
+        // ... and an absurd rank is refused before the dims loop
+        let mut frame = Vec::new();
+        frame.extend_from_slice(QT_MAGIC);
+        frame.push(QT_VERSION);
+        frame.push(0); // fp32 tag
+        frame.push(0);
+        frame.extend_from_slice(&u32::MAX.to_le_bytes()); // rank
+        assert_eq!(
+            QuantizedTensor::from_slice(&frame).unwrap_err(),
+            CodecError::Oversized {
+                field: "rank",
+                got: u32::MAX as u64,
+                cap: MAX_FRAME_RANK as u64
+            }
+        );
     }
 
     #[test]

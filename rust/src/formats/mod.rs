@@ -35,5 +35,5 @@ pub mod fp8e4m3;
 pub mod s2fp8;
 pub mod traits;
 
-pub use codec::{Codec, CodecError, QuantizedTensor};
+pub use codec::{Codec, CodecError, QuantizedTensor, RangeDecoder};
 pub use traits::{FormatKind, NumericFormat};

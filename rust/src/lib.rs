@@ -69,6 +69,26 @@
 //! formats can be A/B'd on any host model, including over the S2FP8
 //! gradient wire.
 //!
+//! ## Socket transport & compute/comm overlap
+//!
+//! [`transport`] generalizes the exchange beyond one process: a
+//! [`transport::Transport`] trait with in-process channel, **TCP** and
+//! **Unix-domain socket** implementations, all running the identical
+//! ring all-gather ([`transport::all_gather`]). Socket rings carry
+//! length-framed, fully CRC-checksummed bundles of [`dist::ChunkGrad`]s;
+//! the receive side is an **incremental** pull parser
+//! ([`transport::FrameDecoder`]) that accepts arbitrary partial reads
+//! and yields each tensor the moment its bytes land — feeding the
+//! streaming [`dist::StreamReducer`] so reduce work starts before the
+//! peer finishes transmitting. Every malformed byte is a typed
+//! [`transport::TransportError`] (never a panic), every blocking call a
+//! timeout (never a hang). On top, [`transport::BucketPipeline`] plus
+//! `DistOptions::buckets` overlap the exchange of one gradient bucket
+//! with the reduce of the previous, bitwise identically to the
+//! synchronous path; `train_dist --listen/--join` runs true
+//! multi-process rings that match the in-process run bit for bit on the
+//! FP32 wire (`tests/integration_transport.rs`).
+//!
 //! ## Fault tolerance & chaos testing
 //!
 //! Long-running jobs survive crashes without losing reproducibility:
@@ -160,6 +180,7 @@ pub mod serve;
 pub mod telemetry;
 pub mod tensor;
 pub mod testkit;
+pub mod transport;
 pub mod util;
 
 /// Crate-wide result type (anyhow-based, matching the `xla` crate style).

@@ -64,13 +64,17 @@ impl Corruption {
 /// * `wire` — a corruption to apply to a framed wire/checkpoint tensor
 ///   (must surface as a typed `CodecError`, never a silent decode);
 /// * `ckpt` — a corruption to apply to a serialized `TrainState` (must
-///   surface as a typed load error, never a wrong resume).
+///   surface as a typed load error, never a wrong resume);
+/// * `stream` — a corruption to apply to an encoded **transport byte
+///   stream** (a [`crate::transport::FrameDecoder`] feed: must surface
+///   as a typed `TransportError`, never a panic or a hang).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FaultPlan {
     pub seed: u64,
     pub kill: FaultSpec,
     pub wire: Corruption,
     pub ckpt: Corruption,
+    pub stream: Corruption,
 }
 
 impl FaultPlan {
@@ -95,7 +99,14 @@ impl FaultPlan {
         } else {
             Corruption::Truncate { entropy: rng.next_u64() }
         };
-        FaultPlan { seed, kill, wire, ckpt }
+        // drawn after `ckpt` so plans for the pre-transport draws are
+        // unchanged under the same seed
+        let stream = if rng.next_f32() < 0.5 {
+            Corruption::BitFlip { entropy: rng.next_u64() }
+        } else {
+            Corruption::Truncate { entropy: rng.next_u64() }
+        };
+        FaultPlan { seed, kill, wire, ckpt, stream }
     }
 }
 

@@ -13,11 +13,14 @@
 //!   failure replays from a single number;
 //! * [`fault::Corruption`] — seeded byte-level corruption (single-bit
 //!   flip, prefix truncation) applied to framed
-//!   [`QuantizedTensor`](crate::formats::QuantizedTensor) bytes or
-//!   serialized [`TrainState`](crate::coordinator::resume::TrainState)s;
-//!   both must answer with typed errors, never a panic and never a
-//!   silently wrong decode (the v2 framing's CRC-32 is what makes the
-//!   latter provable);
+//!   [`QuantizedTensor`](crate::formats::QuantizedTensor) bytes,
+//!   serialized [`TrainState`](crate::coordinator::resume::TrainState)s,
+//!   or encoded transport streams fed through
+//!   [`FrameDecoder`](crate::transport::FrameDecoder); all must answer
+//!   with typed errors, never a panic and never a silently wrong decode
+//!   (the framing's CRC-32 coverage is what makes the latter provable —
+//!   `tests/prop_transport.rs` runs the chaos property over the socket
+//!   wire grammar);
 //! * [`chaos::run_kill_resume`] — the run–kill–resume driver: baseline
 //!   run, a crashed run under the plan's kill (through the real
 //!   [`FaultSpec`](crate::dist::FaultSpec) hook in the distributed

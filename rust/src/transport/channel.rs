@@ -1,0 +1,102 @@
+//! The in-process transport: the original thread-to-thread channel hop
+//! ([`RingNode`]) behind the [`Transport`] trait. Bundles cross as the
+//! structs themselves — no serialization, no framing — which is exactly
+//! what the coordinator's default path has always done; the trait is the
+//! only thing that changed.
+
+use crate::dist::ring::{ring, RingNode};
+use crate::dist::wire::ChunkGrad;
+
+use super::{Transport, TransportError};
+
+/// [`Transport`] over an in-process channel ring.
+pub struct ChannelTransport {
+    node: RingNode<Vec<ChunkGrad>>,
+}
+
+impl ChannelTransport {
+    pub fn new(node: RingNode<Vec<ChunkGrad>>) -> Self {
+        ChannelTransport { node }
+    }
+}
+
+/// Build an N-endpoint in-process ring; element `r` belongs to rank `r`.
+pub fn in_process_ring(n: usize) -> Vec<ChannelTransport> {
+    ring(n).into_iter().map(ChannelTransport::new).collect()
+}
+
+impl Transport for ChannelTransport {
+    fn rank(&self) -> usize {
+        self.node.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.node.len()
+    }
+
+    fn send_bundle(&mut self, bundle: &[ChunkGrad]) -> Result<(), TransportError> {
+        // The clone is what "crosses the wire" — the caller keeps its
+        // buffer, matching the socket transports (which serialize a copy).
+        self.node.send_next(bundle.to_vec())?;
+        Ok(())
+    }
+
+    fn recv_bundle(&mut self) -> Result<Vec<ChunkGrad>, TransportError> {
+        Ok(self.node.recv_prev()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::wire::WireFormat;
+    use crate::tensor::Tensor;
+    use crate::transport::all_gather;
+    use crate::util::rng::{Pcg32, Rng};
+
+    fn chunk(c: usize, seed: u64) -> ChunkGrad {
+        let mut rng = Pcg32::new(seed, 0xC4);
+        let g = vec![Tensor::randn(vec![16], &mut rng).map(|v| v * 0.1)];
+        ChunkGrad::encode(c, 2, c as f64, &g, WireFormat::Fp32).unwrap()
+    }
+
+    #[test]
+    fn all_gather_over_channels_matches_ring_semantics() {
+        for n in [1usize, 2, 4] {
+            let endpoints = in_process_ring(n);
+            let outs: Vec<(usize, Vec<Vec<ChunkGrad>>, usize)> = std::thread::scope(|s| {
+                let handles: Vec<_> = endpoints
+                    .into_iter()
+                    .map(|mut t| {
+                        s.spawn(move || {
+                            let rank = t.rank();
+                            let mine = vec![chunk(rank, rank as u64)];
+                            let mut sends = 0usize;
+                            let got = all_gather(&mut t, mine, &mut |_| sends += 1).unwrap();
+                            (rank, got, sends)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (rank, got, sends) in outs {
+                assert_eq!(got.len(), n, "rank {rank}");
+                assert_eq!(sends, n - 1, "rank {rank}");
+                for (origin, b) in got.iter().enumerate() {
+                    assert_eq!(b[0].chunk, origin, "rank {rank} slot {origin}");
+                    assert_eq!(b[0].tensors, vec![chunk(origin, origin as u64).tensors[0].clone()]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dead_peer_surfaces_as_disconnect() {
+        let mut endpoints = in_process_ring(2);
+        let b = endpoints.pop().unwrap();
+        let mut a = endpoints.pop().unwrap();
+        drop(b);
+        let err = all_gather(&mut a, vec![chunk(0, 0)], &mut |_| {}).unwrap_err();
+        assert!(err.is_disconnect(), "{err}");
+    }
+}

@@ -1,0 +1,726 @@
+//! The socket **byte grammar** for gradient bundles and its incremental,
+//! resumable decoder.
+//!
+//! A bundle (one rank's [`ChunkGrad`]s for one all-gather round) is
+//! framed as, all integers little-endian:
+//!
+//! ```text
+//! bundle header (12 B): magic "S2BD" | n_chunks u32 | crc32 u32
+//! per chunk    (44 B+): magic "S2CH" | body_len u64
+//!                       | chunk u64 | n_examples u64 | loss_sum f64
+//!                       | n_tensors u32 | crc32 u32
+//!                       | n_tensors × S2QT tensor frames
+//! ```
+//!
+//! The `chunk | n_examples | loss_sum` triple is exactly the 24-byte
+//! header [`CHUNK_HEADER_BYTES`](crate::dist::wire::CHUNK_HEADER_BYTES)
+//! always budgeted; `body_len` counts every byte after itself (the
+//! 32-byte fixed remainder plus the tensor frames), so a reader can skip
+//! or account a chunk without parsing its tensors. Each CRC-32 covers
+//! every preceding byte of its header, and the tensor frames carry the
+//! codec layer's own trailing CRC — **every byte on the stream is
+//! checksummed**, so any single corrupted bit surfaces as a typed error
+//! rather than a silently wrong gradient.
+//!
+//! [`FrameDecoder`] is a pull parser over arbitrary partial buffers:
+//! [`FrameDecoder::feed`] bytes as they arrive (any split), then drain
+//! [`FrameDecoder::next_event`] — each completed tensor is yielded the
+//! moment its last byte lands, which is what lets a receiving rank fold
+//! chunk *k* into its [`StreamReducer`](crate::dist::wire::StreamReducer)
+//! while the peer is still transmitting chunk *k + 1*. Malformed input
+//! (bad magic, over-cap length, CRC mismatch, overrunning or stray
+//! bytes) fails typed and poisons the decoder; a stream that simply ends
+//! mid-frame is caught by [`FrameDecoder::finish`]. Nothing here panics
+//! on untrusted bytes, and length fields are capped **before** any
+//! allocation.
+
+use crate::dist::wire::ChunkGrad;
+use crate::formats::codec::{MAX_FRAME_PAYLOAD_BYTES, MAX_FRAME_RANK, QT_MAGIC, QT_VERSION};
+use crate::formats::{CodecError, QuantizedTensor};
+use crate::util::crc32::crc32;
+
+use super::TransportError;
+
+/// Framing magic opening a bundle.
+pub const BUNDLE_MAGIC: &[u8; 4] = b"S2BD";
+/// Framing magic opening each chunk within a bundle.
+pub const CHUNK_MAGIC: &[u8; 4] = b"S2CH";
+/// Bytes of the fixed bundle header (magic + chunk count + CRC).
+pub const BUNDLE_HEADER_BYTES: usize = 12;
+/// Bytes of the fixed per-chunk prelude (magic + body length + the
+/// 24-byte chunk header + tensor count + CRC).
+pub const CHUNK_PRELUDE_BYTES: usize = 44;
+
+/// Most chunks a bundle may declare (decode cap, checked pre-allocation).
+pub const MAX_CHUNKS_PER_BUNDLE: u64 = 1 << 20;
+/// Most tensor frames a chunk may declare.
+pub const MAX_TENSORS_PER_CHUNK: u64 = 4096;
+/// Largest chunk body a frame may declare.
+pub const MAX_CHUNK_BODY_BYTES: u64 = 1 << 30;
+
+/// Bytes of the chunk body that are not tensor frames: chunk index,
+/// example count, loss sum, tensor count and the prelude CRC.
+const CHUNK_BODY_OVERHEAD: u64 = 32;
+/// Tensor-frame prefix needed to learn the frame's own length: magic,
+/// version, kind tag, flags and rank.
+const TENSOR_PEEK: usize = 11;
+/// Consumed-prefix size at which [`FrameDecoder::feed`] compacts its
+/// buffer instead of letting it grow.
+const COMPACT_THRESHOLD: usize = 64 * 1024;
+
+/// Serialize a bundle into `out` (cleared first — callers reuse one
+/// buffer across steps). The exact grammar [`FrameDecoder`] parses.
+pub fn encode_bundle(bundle: &[ChunkGrad], out: &mut Vec<u8>) {
+    debug_assert!((bundle.len() as u64) <= MAX_CHUNKS_PER_BUNDLE);
+    out.clear();
+    out.extend_from_slice(BUNDLE_MAGIC);
+    out.extend_from_slice(&(bundle.len() as u32).to_le_bytes());
+    let hc = crc32(&out[..8]);
+    out.extend_from_slice(&hc.to_le_bytes());
+    for cg in bundle {
+        debug_assert!((cg.tensors.len() as u64) <= MAX_TENSORS_PER_CHUNK);
+        let body_len = CHUNK_BODY_OVERHEAD
+            + cg.tensors.iter().map(|t| t.framed_bytes() as u64).sum::<u64>();
+        let start = out.len();
+        out.extend_from_slice(CHUNK_MAGIC);
+        out.extend_from_slice(&body_len.to_le_bytes());
+        out.extend_from_slice(&(cg.chunk as u64).to_le_bytes());
+        out.extend_from_slice(&(cg.n_examples as u64).to_le_bytes());
+        out.extend_from_slice(&cg.loss_sum.to_le_bytes());
+        out.extend_from_slice(&(cg.tensors.len() as u32).to_le_bytes());
+        let crc = crc32(&out[start..]);
+        out.extend_from_slice(&crc.to_le_bytes());
+        for t in &cg.tensors {
+            t.write_to(out);
+        }
+    }
+}
+
+/// One parsed element of the stream, in strict grammar order:
+/// `BundleStart (ChunkStart Tensor* ChunkEnd)* BundleEnd`, repeating for
+/// each bundle on the stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FrameEvent {
+    BundleStart { n_chunks: usize },
+    ChunkStart { chunk: usize, n_examples: usize, loss_sum: f64, n_tensors: usize },
+    /// A completed tensor — emitted as soon as its final byte arrives.
+    Tensor(QuantizedTensor),
+    ChunkEnd { chunk: usize },
+    BundleEnd,
+}
+
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// Expecting a 12-byte bundle header (the only state a stream may
+    /// legally end in).
+    #[default]
+    BundleHeader,
+    /// Expecting a 44-byte chunk prelude.
+    ChunkPrelude,
+    /// Inside a chunk body, expecting `tensors_left` tensor frames within
+    /// `body_left` bytes.
+    TensorBytes,
+    /// The chunk's last tensor was delivered; emit `ChunkEnd` next.
+    ChunkDone,
+    /// The bundle's last chunk ended; emit `BundleEnd` next.
+    BundleDone,
+    /// A prior call failed; every further call fails.
+    Poisoned,
+}
+
+/// Incremental pull parser for the bundle grammar. [`Self::feed`] never
+/// fails (it only buffers); [`Self::next_event`] parses as far as the
+/// buffered bytes allow, returning `Ok(None)` when a frame is still
+/// incomplete and a typed [`TransportError`] on any malformed input —
+/// after which the decoder is poisoned (the stream position is no longer
+/// trustworthy). Call [`Self::finish`] at EOF to turn "the stream just
+/// stopped" into `Ok` at a bundle boundary or a typed mid-frame error.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+    state: State,
+    chunks_left: u64,
+    tensors_left: u64,
+    body_left: u64,
+    current_chunk: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Buffer more stream bytes. Any split is fine, including one byte at
+    /// a time; consumed prefix is compacted away once it passes
+    /// [`COMPACT_THRESHOLD`].
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= COMPACT_THRESHOLD {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Parse the next event out of the buffered bytes. `Ok(None)` means
+    /// "feed me more"; an `Err` is terminal for this decoder.
+    pub fn next_event(&mut self) -> Result<Option<FrameEvent>, TransportError> {
+        match self.step() {
+            Err(e) => {
+                self.state = State::Poisoned;
+                Err(e)
+            }
+            ok => ok,
+        }
+    }
+
+    /// Typed EOF check: `Ok` iff the stream ended exactly at a bundle
+    /// boundary with nothing buffered. A socket reader calls this when
+    /// the peer closes, so a connection dropped mid-frame is a
+    /// [`TransportError::UnexpectedEof`], never a hang or a silently
+    /// short bundle.
+    pub fn finish(&self) -> Result<(), TransportError> {
+        match self.state {
+            State::Poisoned => Err(poisoned()),
+            State::BundleHeader => {
+                if self.buffered() == 0 {
+                    Ok(())
+                } else {
+                    Err(TransportError::UnexpectedEof { context: "reading a bundle header" })
+                }
+            }
+            State::ChunkPrelude => {
+                Err(TransportError::UnexpectedEof { context: "reading a chunk header" })
+            }
+            State::TensorBytes => {
+                Err(TransportError::UnexpectedEof { context: "reading a tensor frame" })
+            }
+            State::ChunkDone | State::BundleDone => Err(TransportError::Protocol(
+                "finish() called with undelivered events pending".into(),
+            )),
+        }
+    }
+
+    fn step(&mut self) -> Result<Option<FrameEvent>, TransportError> {
+        loop {
+            match self.state {
+                State::Poisoned => return Err(poisoned()),
+                State::BundleHeader => {
+                    if self.buffered() < BUNDLE_HEADER_BYTES {
+                        return Ok(None);
+                    }
+                    let h = &self.buf[self.pos..self.pos + BUNDLE_HEADER_BYTES];
+                    if &h[..4] != BUNDLE_MAGIC {
+                        return Err(TransportError::BadMagic { expected: "S2BD" });
+                    }
+                    let stored = rd_u32(&h[8..]);
+                    let computed = crc32(&h[..8]);
+                    if stored != computed {
+                        return Err(TransportError::HeaderCrc {
+                            what: "bundle header",
+                            stored,
+                            computed,
+                        });
+                    }
+                    let n_chunks = rd_u32(&h[4..]) as u64;
+                    if n_chunks > MAX_CHUNKS_PER_BUNDLE {
+                        return Err(TransportError::Oversized {
+                            field: "chunk count",
+                            got: n_chunks,
+                            cap: MAX_CHUNKS_PER_BUNDLE,
+                        });
+                    }
+                    self.pos += BUNDLE_HEADER_BYTES;
+                    self.chunks_left = n_chunks;
+                    self.state =
+                        if n_chunks == 0 { State::BundleDone } else { State::ChunkPrelude };
+                    return Ok(Some(FrameEvent::BundleStart { n_chunks: n_chunks as usize }));
+                }
+                State::ChunkPrelude => {
+                    if self.buffered() < CHUNK_PRELUDE_BYTES {
+                        return Ok(None);
+                    }
+                    let h = &self.buf[self.pos..self.pos + CHUNK_PRELUDE_BYTES];
+                    if &h[..4] != CHUNK_MAGIC {
+                        return Err(TransportError::BadMagic { expected: "S2CH" });
+                    }
+                    let stored = rd_u32(&h[40..]);
+                    let computed = crc32(&h[..40]);
+                    if stored != computed {
+                        return Err(TransportError::HeaderCrc {
+                            what: "chunk header",
+                            stored,
+                            computed,
+                        });
+                    }
+                    let body_len = rd_u64(&h[4..]);
+                    if body_len > MAX_CHUNK_BODY_BYTES {
+                        return Err(TransportError::Oversized {
+                            field: "chunk body length",
+                            got: body_len,
+                            cap: MAX_CHUNK_BODY_BYTES,
+                        });
+                    }
+                    if body_len < CHUNK_BODY_OVERHEAD {
+                        return Err(TransportError::Protocol(format!(
+                            "chunk body length {body_len} below the \
+                             {CHUNK_BODY_OVERHEAD}-byte fixed remainder"
+                        )));
+                    }
+                    let n_tensors = rd_u32(&h[36..]) as u64;
+                    if n_tensors > MAX_TENSORS_PER_CHUNK {
+                        return Err(TransportError::Oversized {
+                            field: "tensor count",
+                            got: n_tensors,
+                            cap: MAX_TENSORS_PER_CHUNK,
+                        });
+                    }
+                    let chunk = rd_u64(&h[12..]) as usize;
+                    let n_examples = rd_u64(&h[20..]) as usize;
+                    let loss_sum = rd_f64(&h[28..]);
+                    self.pos += CHUNK_PRELUDE_BYTES;
+                    self.tensors_left = n_tensors;
+                    self.body_left = body_len - CHUNK_BODY_OVERHEAD;
+                    self.current_chunk = chunk;
+                    self.state = State::TensorBytes;
+                    return Ok(Some(FrameEvent::ChunkStart {
+                        chunk,
+                        n_examples,
+                        loss_sum,
+                        n_tensors: n_tensors as usize,
+                    }));
+                }
+                State::TensorBytes => {
+                    if self.tensors_left == 0 {
+                        if self.body_left != 0 {
+                            return Err(TransportError::Protocol(format!(
+                                "{} stray bytes in chunk body after the last tensor",
+                                self.body_left
+                            )));
+                        }
+                        self.state = State::ChunkDone;
+                        continue;
+                    }
+                    // Incremental length discovery: peek just enough of the
+                    // S2QT header to learn the frame's total size (rank and
+                    // flags vary the header, payload_len the body), cap-check
+                    // each length as it is read, then wait for the full frame
+                    // before handing it to the codec parser.
+                    let avail = self.buffered();
+                    if avail < TENSOR_PEEK {
+                        return Ok(None);
+                    }
+                    let h = &self.buf[self.pos..];
+                    if &h[..4] != QT_MAGIC {
+                        return Err(CodecError::BadMagic.into());
+                    }
+                    let version = h[4];
+                    if version != 1 && version != QT_VERSION {
+                        return Err(CodecError::UnsupportedVersion(version).into());
+                    }
+                    let flags = h[6];
+                    let rank32 = rd_u32(&h[7..]);
+                    if rank32 > MAX_FRAME_RANK {
+                        return Err(CodecError::Oversized {
+                            field: "rank",
+                            got: rank32 as u64,
+                            cap: MAX_FRAME_RANK as u64,
+                        }
+                        .into());
+                    }
+                    let header_len = TENSOR_PEEK
+                        + 8 * rank32 as usize
+                        + if flags & 1 != 0 { 8 } else { 0 }
+                        + 8;
+                    if avail < header_len {
+                        return Ok(None);
+                    }
+                    let payload_len = rd_u64(&self.buf[self.pos + header_len - 8..]);
+                    if payload_len > MAX_FRAME_PAYLOAD_BYTES {
+                        return Err(CodecError::Oversized {
+                            field: "payload length",
+                            got: payload_len,
+                            cap: MAX_FRAME_PAYLOAD_BYTES,
+                        }
+                        .into());
+                    }
+                    let total =
+                        header_len as u64 + payload_len + if version >= 2 { 4 } else { 0 };
+                    if total > self.body_left {
+                        return Err(TransportError::Protocol(format!(
+                            "tensor frame of {total} bytes overruns the remaining \
+                             chunk body ({} bytes)",
+                            self.body_left
+                        )));
+                    }
+                    if (avail as u64) < total {
+                        return Ok(None);
+                    }
+                    let total = total as usize;
+                    let frame = &self.buf[self.pos..self.pos + total];
+                    let (qt, used) = QuantizedTensor::from_slice(frame)?;
+                    if used != total {
+                        return Err(TransportError::Protocol(format!(
+                            "tensor frame consumed {used} bytes, framing promised {total}"
+                        )));
+                    }
+                    self.pos += total;
+                    self.body_left -= total as u64;
+                    self.tensors_left -= 1;
+                    return Ok(Some(FrameEvent::Tensor(qt)));
+                }
+                State::ChunkDone => {
+                    self.chunks_left -= 1;
+                    self.state =
+                        if self.chunks_left == 0 { State::BundleDone } else { State::ChunkPrelude };
+                    return Ok(Some(FrameEvent::ChunkEnd { chunk: self.current_chunk }));
+                }
+                State::BundleDone => {
+                    self.state = State::BundleHeader;
+                    return Ok(Some(FrameEvent::BundleEnd));
+                }
+            }
+        }
+    }
+}
+
+fn poisoned() -> TransportError {
+    TransportError::Protocol("frame decoder is poisoned after a prior error".into())
+}
+
+fn rd_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[..4].try_into().expect("4 bytes"))
+}
+
+fn rd_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().expect("8 bytes"))
+}
+
+fn rd_f64(b: &[u8]) -> f64 {
+    f64::from_le_bytes(b[..8].try_into().expect("8 bytes"))
+}
+
+/// Reassemble [`FrameDecoder`] events into [`ChunkGrad`]s: push each
+/// event in decoder order; [`Self::push`] returns the completed bundle at
+/// `BundleEnd`. The decoder guarantees grammar order, so feeding events
+/// out of order is an internal-caller bug (panics), not a decode error.
+#[derive(Debug, Default)]
+pub struct BundleAssembler {
+    chunks: Vec<ChunkGrad>,
+    cur: Option<ChunkGrad>,
+}
+
+impl BundleAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, ev: FrameEvent) -> Option<Vec<ChunkGrad>> {
+        match ev {
+            FrameEvent::BundleStart { n_chunks } => {
+                self.chunks.clear();
+                self.chunks.reserve(n_chunks);
+                None
+            }
+            FrameEvent::ChunkStart { chunk, n_examples, loss_sum, n_tensors } => {
+                self.cur = Some(ChunkGrad {
+                    chunk,
+                    n_examples,
+                    loss_sum,
+                    tensors: Vec::with_capacity(n_tensors),
+                });
+                None
+            }
+            FrameEvent::Tensor(qt) => {
+                self.cur.as_mut().expect("Tensor event outside a chunk").tensors.push(qt);
+                None
+            }
+            FrameEvent::ChunkEnd { .. } => {
+                self.chunks.push(self.cur.take().expect("ChunkEnd without ChunkStart"));
+                None
+            }
+            FrameEvent::BundleEnd => Some(std::mem::take(&mut self.chunks)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::wire::WireFormat;
+    use crate::tensor::Tensor;
+    use crate::util::rng::{Pcg32, Rng};
+
+    fn bundle(wire: WireFormat, chunks: usize, seed: u64) -> Vec<ChunkGrad> {
+        (0..chunks)
+            .map(|c| {
+                let mut rng = Pcg32::new(seed + c as u64, 0xF7);
+                let g = vec![
+                    Tensor::randn(vec![40], &mut rng).map(|v| v * 0.1),
+                    Tensor::randn(vec![3, 5], &mut rng).map(|v| v * 0.1),
+                ];
+                ChunkGrad::encode(c, 4, c as f64 + 0.25, &g, wire).unwrap()
+            })
+            .collect()
+    }
+
+    fn drain(dec: &mut FrameDecoder) -> Result<Vec<FrameEvent>, TransportError> {
+        let mut evs = Vec::new();
+        while let Some(ev) = dec.next_event()? {
+            evs.push(ev);
+        }
+        Ok(evs)
+    }
+
+    fn pump_err(bytes: &[u8]) -> TransportError {
+        let mut dec = FrameDecoder::new();
+        dec.feed(bytes);
+        loop {
+            match dec.next_event() {
+                Ok(Some(_)) => {}
+                Ok(None) => return dec.finish().expect_err("expected a decode error"),
+                Err(e) => return e,
+            }
+        }
+    }
+
+    #[test]
+    fn bundle_roundtrips_and_reassembles() {
+        for wire in [WireFormat::Fp32, WireFormat::S2fp8] {
+            let b = bundle(wire, 3, 7);
+            let mut bytes = Vec::new();
+            encode_bundle(&b, &mut bytes);
+            let mut dec = FrameDecoder::new();
+            dec.feed(&bytes);
+            let evs = drain(&mut dec).unwrap();
+            dec.finish().unwrap();
+            assert_eq!(evs.first(), Some(&FrameEvent::BundleStart { n_chunks: 3 }));
+            assert_eq!(evs.last(), Some(&FrameEvent::BundleEnd));
+            let mut asm = BundleAssembler::new();
+            let mut done = None;
+            for ev in evs {
+                if let Some(out) = asm.push(ev) {
+                    done = Some(out);
+                }
+            }
+            let got = done.expect("bundle completed");
+            assert_eq!(got.len(), b.len());
+            for (x, y) in got.iter().zip(b.iter()) {
+                assert_eq!(x.chunk, y.chunk);
+                assert_eq!(x.n_examples, y.n_examples);
+                assert_eq!(x.loss_sum.to_bits(), y.loss_sum.to_bits());
+                assert_eq!(x.tensors, y.tensors);
+            }
+        }
+    }
+
+    #[test]
+    fn back_to_back_bundles_share_one_decoder() {
+        let a = bundle(WireFormat::S2fp8, 2, 1);
+        let b = bundle(WireFormat::Fp32, 1, 2);
+        let mut bytes = Vec::new();
+        encode_bundle(&a, &mut bytes);
+        let mut more = Vec::new();
+        encode_bundle(&b, &mut more);
+        bytes.extend_from_slice(&more);
+        let mut dec = FrameDecoder::new();
+        dec.feed(&bytes);
+        let evs = drain(&mut dec).unwrap();
+        dec.finish().unwrap();
+        let ends = evs.iter().filter(|e| **e == FrameEvent::BundleEnd).count();
+        assert_eq!(ends, 2);
+        let starts: Vec<_> = evs
+            .iter()
+            .filter_map(|e| match e {
+                FrameEvent::BundleStart { n_chunks } => Some(*n_chunks),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(starts, vec![2, 1]);
+    }
+
+    #[test]
+    fn byte_at_a_time_matches_whole_buffer() {
+        let b = bundle(WireFormat::S2fp8, 2, 9);
+        let mut bytes = Vec::new();
+        encode_bundle(&b, &mut bytes);
+        let mut whole = FrameDecoder::new();
+        whole.feed(&bytes);
+        let want = drain(&mut whole).unwrap();
+        whole.finish().unwrap();
+
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for &byte in &bytes {
+            dec.feed(std::slice::from_ref(&byte));
+            got.extend(drain(&mut dec).unwrap());
+        }
+        dec.finish().unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_bundle_is_legal() {
+        let mut bytes = Vec::new();
+        encode_bundle(&[], &mut bytes);
+        assert_eq!(bytes.len(), BUNDLE_HEADER_BYTES);
+        let mut dec = FrameDecoder::new();
+        dec.feed(&bytes);
+        let evs = drain(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(evs, vec![FrameEvent::BundleStart { n_chunks: 0 }, FrameEvent::BundleEnd]);
+    }
+
+    #[test]
+    fn bad_magics_are_typed() {
+        let b = bundle(WireFormat::Fp32, 1, 3);
+        let mut bytes = Vec::new();
+        encode_bundle(&b, &mut bytes);
+
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(matches!(pump_err(&bad), TransportError::BadMagic { expected: "S2BD" }));
+
+        let mut bad = bytes.clone();
+        bad[BUNDLE_HEADER_BYTES] = b'X'; // chunk magic
+        assert!(matches!(pump_err(&bad), TransportError::BadMagic { expected: "S2CH" }));
+
+        let mut bad = bytes.clone();
+        bad[BUNDLE_HEADER_BYTES + CHUNK_PRELUDE_BYTES] = b'X'; // tensor magic
+        assert!(matches!(pump_err(&bad), TransportError::Codec(CodecError::BadMagic)));
+    }
+
+    #[test]
+    fn header_crc_catches_flipped_bits() {
+        let b = bundle(WireFormat::S2fp8, 1, 4);
+        let mut bytes = Vec::new();
+        encode_bundle(&b, &mut bytes);
+
+        // bundle chunk count
+        let mut bad = bytes.clone();
+        bad[5] ^= 0x04;
+        assert!(matches!(
+            pump_err(&bad),
+            TransportError::HeaderCrc { what: "bundle header", .. }
+        ));
+
+        // chunk prelude loss_sum byte
+        let mut bad = bytes.clone();
+        bad[BUNDLE_HEADER_BYTES + 30] ^= 0x80;
+        assert!(matches!(
+            pump_err(&bad),
+            TransportError::HeaderCrc { what: "chunk header", .. }
+        ));
+
+        // a flipped tensor payload byte is the codec CRC's job
+        let mut bad = bytes.clone();
+        let off = bytes.len() - 10;
+        bad[off] ^= 0x01;
+        assert!(matches!(
+            pump_err(&bad),
+            TransportError::Codec(CodecError::ChecksumMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn oversized_declarations_are_refused_before_allocating() {
+        // bundle header declaring 2^31 chunks (valid CRC)
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(BUNDLE_MAGIC);
+        bytes.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        let crc = crc32(&bytes[..8]);
+        bytes.extend_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            pump_err(&bytes),
+            TransportError::Oversized { field: "chunk count", .. }
+        ));
+
+        // chunk prelude declaring an over-cap body length (valid CRC)
+        let mut bytes = Vec::new();
+        encode_bundle(&bundle(WireFormat::Fp32, 1, 5), &mut bytes);
+        let p = BUNDLE_HEADER_BYTES;
+        bytes[p + 4..p + 12].copy_from_slice(&(MAX_CHUNK_BODY_BYTES + 1).to_le_bytes());
+        let crc = crc32(&bytes[p..p + 40]);
+        bytes[p + 40..p + 44].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            pump_err(&bytes),
+            TransportError::Oversized { field: "chunk body length", .. }
+        ));
+
+        // chunk prelude declaring an over-cap tensor count (valid CRC)
+        let mut bytes = Vec::new();
+        encode_bundle(&bundle(WireFormat::Fp32, 1, 5), &mut bytes);
+        bytes[p + 36..p + 40].copy_from_slice(&(MAX_TENSORS_PER_CHUNK as u32 + 1).to_le_bytes());
+        let crc = crc32(&bytes[p..p + 40]);
+        bytes[p + 40..p + 44].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            pump_err(&bytes),
+            TransportError::Oversized { field: "tensor count", .. }
+        ));
+    }
+
+    #[test]
+    fn truncation_is_a_typed_eof_never_a_hang() {
+        let b = bundle(WireFormat::S2fp8, 2, 11);
+        let mut bytes = Vec::new();
+        encode_bundle(&b, &mut bytes);
+        // cut at every interesting boundary: mid bundle header, mid chunk
+        // prelude, mid tensor frame
+        for cut in [5, BUNDLE_HEADER_BYTES + 10, bytes.len() - 3] {
+            let err = pump_err(&bytes[..cut]);
+            assert!(matches!(err, TransportError::UnexpectedEof { .. }), "cut {cut}: {err}");
+        }
+        // a clean cut at the bundle boundary is not an error
+        let mut dec = FrameDecoder::new();
+        dec.feed(&bytes);
+        drain(&mut dec).unwrap();
+        dec.finish().unwrap();
+    }
+
+    #[test]
+    fn stray_and_overrunning_body_bytes_are_protocol_errors() {
+        // body_len one byte longer than the tensors need: after the last
+        // tensor, a stray byte remains (CRC recomputed so the prelude is
+        // "valid" — this is a framing lie, not line noise)
+        let b = bundle(WireFormat::Fp32, 1, 6);
+        let mut bytes = Vec::new();
+        encode_bundle(&b, &mut bytes);
+        let p = BUNDLE_HEADER_BYTES;
+        let body_len = rd_u64(&bytes[p + 4..]);
+        bytes[p + 4..p + 12].copy_from_slice(&(body_len + 1).to_le_bytes());
+        let crc = crc32(&bytes[p..p + 40]);
+        bytes[p + 40..p + 44].copy_from_slice(&crc.to_le_bytes());
+        bytes.push(0xAA);
+        assert!(matches!(pump_err(&bytes), TransportError::Protocol(_)));
+
+        // body_len shorter than the first tensor frame: the tensor overruns
+        let mut bytes = Vec::new();
+        encode_bundle(&b, &mut bytes);
+        bytes[p + 4..p + 12].copy_from_slice(&(CHUNK_BODY_OVERHEAD + 4).to_le_bytes());
+        let crc = crc32(&bytes[p..p + 40]);
+        bytes[p + 40..p + 44].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(pump_err(&bytes), TransportError::Protocol(_)));
+    }
+
+    #[test]
+    fn decoder_is_sticky_after_an_error() {
+        let mut bytes = Vec::new();
+        encode_bundle(&bundle(WireFormat::Fp32, 1, 8), &mut bytes);
+        bytes[0] = b'X';
+        let mut dec = FrameDecoder::new();
+        dec.feed(&bytes);
+        assert!(dec.next_event().is_err());
+        // the original error is not repeated; the poison is
+        let again = dec.next_event().unwrap_err();
+        assert!(matches!(again, TransportError::Protocol(_)), "{again}");
+        assert!(dec.finish().is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Byte/frame/reconnect accounting for the socket transports, published
+//! through the telemetry registry as `transport.*` counters (same
+//! shared-atomics idiom as [`crate::metrics::CommCounters`]): the socket
+//! code bumps its own handles, and a registry snapshot sees the totals
+//! live.
+
+use crate::telemetry::{Counter, Metric, Registry};
+
+/// Lock-free counters for one transport endpoint. Bytes are raw framed
+/// stream bytes (bundle + chunk framing + tensor frames); frames are
+/// whole bundles; `reconnects` counts connect attempts beyond the first
+/// while establishing the ring (a peer that wasn't listening yet).
+#[derive(Debug, Clone, Default)]
+pub struct TransportCounters {
+    bytes_sent: Counter,
+    bytes_recvd: Counter,
+    frames_sent: Counter,
+    frames_recvd: Counter,
+    reconnects: Counter,
+}
+
+impl TransportCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// New counters whose handles are also registered under
+    /// `{prefix}.bytes_sent` / `.bytes_recvd` / `.frames_sent` /
+    /// `.frames_recvd` / `.reconnects` (replacing any previous run's
+    /// registration).
+    pub fn registered(reg: &Registry, prefix: &str) -> Self {
+        let c = Self::new();
+        reg.adopt(&format!("{prefix}.bytes_sent"), Metric::Counter(c.bytes_sent.clone()));
+        reg.adopt(&format!("{prefix}.bytes_recvd"), Metric::Counter(c.bytes_recvd.clone()));
+        reg.adopt(&format!("{prefix}.frames_sent"), Metric::Counter(c.frames_sent.clone()));
+        reg.adopt(&format!("{prefix}.frames_recvd"), Metric::Counter(c.frames_recvd.clone()));
+        reg.adopt(&format!("{prefix}.reconnects"), Metric::Counter(c.reconnects.clone()));
+        c
+    }
+
+    /// Record one transmitted bundle of `bytes` framed stream bytes.
+    pub fn record_sent(&self, bytes: u64) {
+        self.bytes_sent.add(bytes);
+        self.frames_sent.inc();
+    }
+
+    /// Record one fully decoded incoming bundle of `bytes` stream bytes.
+    pub fn record_recvd(&self, bytes: u64) {
+        self.bytes_recvd.add(bytes);
+        self.frames_recvd.inc();
+    }
+
+    /// Record one retried connect attempt during ring setup.
+    pub fn record_reconnect(&self) {
+        self.reconnects.inc();
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent.get()
+    }
+
+    pub fn bytes_recvd(&self) -> u64 {
+        self.bytes_recvd.get()
+    }
+
+    pub fn frames_sent(&self) -> u64 {
+        self.frames_sent.get()
+    }
+
+    pub fn frames_recvd(&self) -> u64 {
+        self.frames_recvd.get()
+    }
+
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let c = TransportCounters::new();
+        c.record_sent(100);
+        c.record_sent(50);
+        c.record_recvd(70);
+        c.record_reconnect();
+        assert_eq!(c.bytes_sent(), 150);
+        assert_eq!(c.frames_sent(), 2);
+        assert_eq!(c.bytes_recvd(), 70);
+        assert_eq!(c.frames_recvd(), 1);
+        assert_eq!(c.reconnects(), 1);
+    }
+
+    #[test]
+    fn registered_counters_share_storage_with_registry() {
+        let reg = Registry::new();
+        let c = TransportCounters::registered(&reg, "transport");
+        c.record_sent(64);
+        c.record_recvd(32);
+        let snap = reg.snapshot().to_json();
+        assert_eq!(snap.get("transport.bytes_sent").as_usize(), Some(64));
+        assert_eq!(snap.get("transport.bytes_recvd").as_usize(), Some(32));
+        assert_eq!(snap.get("transport.frames_sent").as_usize(), Some(1));
+        assert_eq!(snap.get("transport.frames_recvd").as_usize(), Some(1));
+        assert_eq!(snap.get("transport.reconnects").as_usize(), Some(0));
+    }
+}

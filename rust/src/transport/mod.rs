@@ -1,0 +1,155 @@
+//! Pluggable **gradient transports**: the same ring all-gather the
+//! in-process coordinator has always run, abstracted over how bundles of
+//! [`ChunkGrad`]s actually move between ranks.
+//!
+//! Three implementations of the [`Transport`] trait:
+//!
+//! * [`channel::ChannelTransport`] — the original in-process hop
+//!   (mpsc channels between worker threads), refactored behind the
+//!   trait; moves the structs themselves, no serialization;
+//! * [`socket::SocketTransport`] over **TCP** — length-framed byte
+//!   streams across real sockets, so ranks can live in different
+//!   processes (or boxes): `train_dist --listen/--join`;
+//! * [`socket::SocketTransport`] over **Unix-domain sockets** — same
+//!   framing, same code path, local-host transport.
+//!
+//! The byte format ([`frame`]) is the wire `dist/wire.rs` always
+//! specified: a 24-byte chunk header (chunk index, example count, loss
+//! sum) followed by CRC-framed [`QuantizedTensor`]s, wrapped in
+//! checksummed bundle/chunk framing. Decode is **incremental**: the
+//! [`FrameDecoder`] state machine accepts arbitrary partial buffers and
+//! yields each tensor the moment its bytes land, so a receiving rank can
+//! start f64-accumulating chunk *k* (via
+//! [`StreamReducer`](crate::dist::wire::StreamReducer)) while the peer is
+//! still transmitting chunk *k + 1*. Every malformed input — bad magic,
+//! oversized length, CRC mismatch, truncated stream, mid-frame EOF — is a
+//! typed [`TransportError`], never a panic; connect/accept/read/write all
+//! carry timeouts, never a hang.
+//!
+//! On top of the trait, [`pipeline::BucketPipeline`] adds compute/comm
+//! **overlap**: gradient slots are partitioned into buckets, and a
+//! dedicated comm thread exchanges bucket *N* while the worker reduces
+//! bucket *N − 1* (`DistOptions::buckets`; bitwise identical to the
+//! synchronous path). [`metrics::TransportCounters`] publishes
+//! `transport.*` byte/frame/reconnect counters through the telemetry
+//! registry. See DESIGN.md "Socket transport & overlap".
+
+pub mod channel;
+pub mod frame;
+pub mod metrics;
+pub mod pipeline;
+pub mod socket;
+
+use std::time::Duration;
+
+use crate::dist::ring::RingError;
+use crate::dist::wire::ChunkGrad;
+use crate::formats::CodecError;
+
+pub use channel::{in_process_ring, ChannelTransport};
+pub use frame::{encode_bundle, FrameDecoder, FrameEvent};
+pub use metrics::TransportCounters;
+pub use pipeline::BucketPipeline;
+pub use socket::{Endpoint, Listener, SocketOptions, SocketTransport};
+
+/// Typed failures of the transport layer. Decode-side corruption
+/// (`BadMagic`, `HeaderCrc`, `Oversized`, `Codec`, `UnexpectedEof`,
+/// `Protocol`) is distinguished from connectivity loss (`Timeout`, `Io`,
+/// `Disconnected`, `Ring`) — the coordinator prefers the former as a root
+/// cause when both surface.
+#[derive(Debug, thiserror::Error)]
+pub enum TransportError {
+    #[error("bad frame magic (expected {expected:?}) — stream out of sync or corrupt")]
+    BadMagic { expected: &'static str },
+    #[error("{what} failed its CRC-32 check (stored {stored:#010x}, computed {computed:#010x})")]
+    HeaderCrc { what: &'static str, stored: u32, computed: u32 },
+    #[error("frame declares {field} {got}, over the transport cap {cap} — refusing it")]
+    Oversized { field: &'static str, got: u64, cap: u64 },
+    #[error(transparent)]
+    Codec(#[from] CodecError),
+    #[error("unexpected end of stream while {context}")]
+    UnexpectedEof { context: &'static str },
+    #[error("{op} timed out after {timeout:?}")]
+    Timeout { op: &'static str, timeout: Duration },
+    #[error("transport i/o: {0}")]
+    Io(#[from] std::io::Error),
+    #[error(transparent)]
+    Ring(#[from] RingError),
+    #[error("peer disconnected ({context})")]
+    Disconnected { context: &'static str },
+    #[error("ring handshake failed: {0}")]
+    Handshake(String),
+    #[error("protocol violation: {0}")]
+    Protocol(String),
+}
+
+impl TransportError {
+    /// True for connectivity-loss errors (the noise every peer sees when
+    /// one rank dies) as opposed to decode/protocol root causes.
+    pub fn is_disconnect(&self) -> bool {
+        matches!(
+            self,
+            TransportError::Ring(_)
+                | TransportError::Io(_)
+                | TransportError::Timeout { .. }
+                | TransportError::Disconnected { .. }
+        )
+    }
+}
+
+/// How ranks exchange gradient bundles: point-to-point ring primitives
+/// (send to successor, receive from predecessor) over whatever medium the
+/// implementation owns. [`all_gather`] builds the store-and-forward
+/// all-gather on top, identically for every implementation.
+pub trait Transport: Send {
+    /// This endpoint's rank in `0..world()`.
+    fn rank(&self) -> usize;
+
+    /// Ring size.
+    fn world(&self) -> usize;
+
+    /// Send one bundle to the successor rank `(rank + 1) % world`.
+    fn send_bundle(&mut self, bundle: &[ChunkGrad]) -> Result<(), TransportError>;
+
+    /// Receive one bundle from the predecessor rank (blocking, bounded by
+    /// the implementation's read timeout).
+    fn recv_bundle(&mut self) -> Result<Vec<ChunkGrad>, TransportError>;
+}
+
+/// Ring all-gather over any [`Transport`]: contribute `mine` and return
+/// all `world` bundles indexed by **origin rank** — the same `N − 1`
+/// store-and-forward schedule (and the same origin arithmetic) as
+/// [`RingNode::all_gather`](crate::dist::ring::RingNode::all_gather), so
+/// the reduce downstream consumes an identical chunk set no matter which
+/// transport carried it. `on_send` fires once per transmitted bundle
+/// (wire accounting). For `world == 1` this is the identity: no traffic,
+/// no callbacks. Slot `rank` of the result is the caller's original
+/// `mine`, so steady-state callers can reclaim its buffers.
+pub fn all_gather(
+    t: &mut dyn Transport,
+    mine: Vec<ChunkGrad>,
+    on_send: &mut dyn FnMut(&[ChunkGrad]),
+) -> Result<Vec<Vec<ChunkGrad>>, TransportError> {
+    let n = t.world();
+    let rank = t.rank();
+    debug_assert!(rank < n, "rank {rank} outside world {n}");
+    let rounds = n - 1;
+    let mut out: Vec<Option<Vec<ChunkGrad>>> = (0..n).map(|_| None).collect();
+    out[rank] = Some(mine);
+    // Round r forwards what round r-1 delivered (round 0 sends our own
+    // bundle); after r + 1 hops the received bundle originated r + 1
+    // ranks behind us.
+    let mut send_from = rank;
+    for round in 0..rounds {
+        {
+            let msg = out[send_from].as_deref().expect("bundle to forward is present");
+            on_send(msg);
+            t.send_bundle(msg)?;
+        }
+        let got = t.recv_bundle()?;
+        let origin = (rank + n - round - 1) % n;
+        out[origin] = Some(got);
+        send_from = origin;
+    }
+    Ok(out.into_iter().map(|o| o.expect("every origin delivered")).collect())
+}

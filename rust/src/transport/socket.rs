@@ -1,0 +1,712 @@
+//! Real-socket transport: the ring over **TCP** or **Unix-domain
+//! sockets**, so ranks can live in different processes (`train_dist
+//! --listen/--join`). Byte layout is [`frame`](super::frame)'s bundle
+//! grammar; decode is incremental ([`FrameDecoder`]), so a bundle is
+//! assembled tensor-by-tensor as bytes land.
+//!
+//! Topology: every rank binds a [`Listener`] first, then
+//! [`SocketTransport::connect_ring`] dials its successor's endpoint and
+//! accepts its predecessor — bind-before-connect plus the OS accept
+//! backlog means startup order cannot deadlock, and connects retry until
+//! the connect timeout while the peer process is still launching. A
+//! 21-byte handshake (`"S2HS" | version | rank | world`) pins both sides
+//! to the same ring geometry before any gradient bytes flow.
+//!
+//! Each link's **writes run on a dedicated writer thread** fed by a
+//! queue: `send_bundle` never blocks on the peer, so the uniform
+//! send-then-receive all-gather schedule cannot deadlock over bounded OS
+//! socket buffers (a synchronous write of a large bundle could otherwise
+//! stall every rank simultaneously). All socket operations — connect,
+//! accept, read, write — carry timeouts and fail as typed
+//! [`TransportError`]s, never a hang.
+
+use std::fmt;
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::dist::wire::ChunkGrad;
+
+use super::frame::{encode_bundle, BundleAssembler, FrameDecoder};
+use super::metrics::TransportCounters;
+use super::{Transport, TransportError};
+
+/// Handshake magic ([`handshake_bytes`] layout).
+pub const HS_MAGIC: &[u8; 4] = b"S2HS";
+/// Handshake protocol version.
+pub const HS_VERSION: u8 = 1;
+/// Acknowledgement a listener sends back after validating a handshake.
+pub const HS_ACK: &[u8; 4] = b"S2OK";
+/// Handshake frame size: magic 4 + version 1 + rank u64 + world u64.
+pub const HS_BYTES: usize = 21;
+
+/// Bytes per read from the socket into the frame decoder.
+const READ_CHUNK_BYTES: usize = 64 * 1024;
+/// Pause between connect/accept retries during ring setup.
+const RETRY_PAUSE: Duration = Duration::from_millis(20);
+
+/// The ring handshake frame a joining rank sends: exported so tests can
+/// impersonate a peer (and then corrupt what follows).
+pub fn handshake_bytes(rank: usize, world: usize) -> Vec<u8> {
+    let mut b = Vec::with_capacity(HS_BYTES);
+    b.extend_from_slice(HS_MAGIC);
+    b.push(HS_VERSION);
+    b.extend_from_slice(&(rank as u64).to_le_bytes());
+    b.extend_from_slice(&(world as u64).to_le_bytes());
+    b
+}
+
+/// A transport address: `host:port` for TCP, `unix:/path/to.sock` for a
+/// Unix-domain socket (the CLI syntax of `--listen` / `--join`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    Tcp(String),
+    Unix(PathBuf),
+}
+
+impl Endpoint {
+    /// Parse the CLI syntax: a `unix:` prefix selects a Unix-domain
+    /// socket path, anything else is a TCP `host:port`.
+    pub fn parse(s: &str) -> Self {
+        match s.strip_prefix("unix:") {
+            Some(path) => Endpoint::Unix(PathBuf::from(path)),
+            None => Endpoint::Tcp(s.to_string()),
+        }
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Tcp(addr) => write!(f, "{addr}"),
+            Endpoint::Unix(path) => write!(f, "unix:{}", path.display()),
+        }
+    }
+}
+
+/// Timeouts governing every socket operation.
+#[derive(Debug, Clone, Copy)]
+pub struct SocketOptions {
+    /// Budget for establishing the ring: connect retries while the peer
+    /// process launches, and the accept wait for the predecessor.
+    pub connect_timeout: Duration,
+    /// Per-operation read/write timeout once the ring is up.
+    pub io_timeout: Duration,
+}
+
+impl Default for SocketOptions {
+    fn default() -> Self {
+        SocketOptions {
+            connect_timeout: Duration::from_secs(10),
+            io_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// A bound listening socket (bind first, then
+/// [`SocketTransport::connect_ring`] — binding early is what makes the
+/// peer's connect retries converge).
+pub enum Listener {
+    Tcp(TcpListener),
+    Unix { listener: UnixListener, path: PathBuf },
+}
+
+impl Listener {
+    pub fn bind(ep: &Endpoint) -> io::Result<Listener> {
+        match ep {
+            Endpoint::Tcp(addr) => Ok(Listener::Tcp(TcpListener::bind(addr.as_str())?)),
+            Endpoint::Unix(path) => {
+                // A stale socket file from a crashed run blocks the bind.
+                match std::fs::remove_file(path) {
+                    Ok(()) => {}
+                    Err(e) if e.kind() == ErrorKind::NotFound => {}
+                    Err(e) => return Err(e),
+                }
+                Ok(Listener::Unix { listener: UnixListener::bind(path)?, path: path.clone() })
+            }
+        }
+    }
+
+    /// The actually-bound endpoint (resolves an ephemeral `:0` TCP port).
+    pub fn local_endpoint(&self) -> io::Result<Endpoint> {
+        match self {
+            Listener::Tcp(l) => Ok(Endpoint::Tcp(l.local_addr()?.to_string())),
+            Listener::Unix { path, .. } => Ok(Endpoint::Unix(path.clone())),
+        }
+    }
+
+    /// Accept one connection, polling until `deadline`.
+    fn accept_deadline(
+        &self,
+        deadline: Instant,
+        total: Duration,
+    ) -> Result<Stream, TransportError> {
+        self.set_nonblocking(true)?;
+        loop {
+            let res = match self {
+                Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+                Listener::Unix { listener, .. } => listener.accept().map(|(s, _)| Stream::Unix(s)),
+            };
+            match res {
+                Ok(s) => {
+                    s.set_nonblocking(false)?;
+                    return Ok(s);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::Timeout { op: "accept", timeout: total });
+                    }
+                    std::thread::sleep(RETRY_PAUSE);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(TransportError::Io(e)),
+            }
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            Listener::Unix { listener, .. } => listener.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// One established connection, TCP or UDS, with a uniform Read/Write face.
+pub enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            Stream::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            Stream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn set_write_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(d),
+            Stream::Unix(s) => s.set_write_timeout(d),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// The two sockets of one ring position plus the streaming decode state.
+struct Link {
+    /// Connection from the predecessor (read side).
+    reader: Stream,
+    /// Queue into the writer thread owning the successor connection.
+    writer_tx: mpsc::Sender<Vec<u8>>,
+    writer_err: Arc<Mutex<Option<io::Error>>>,
+    writer_join: Option<JoinHandle<()>>,
+    decoder: FrameDecoder,
+    assembler: BundleAssembler,
+    /// Raw bytes read since the last completed bundle (recv accounting).
+    pending_bytes: u64,
+}
+
+/// [`Transport`] over real sockets. See the module docs for the
+/// connection topology and deadlock-freedom argument.
+pub struct SocketTransport {
+    rank: usize,
+    world: usize,
+    /// `None` for a single-rank world (no sockets, all-gather is identity).
+    link: Option<Link>,
+    counters: TransportCounters,
+    io_timeout: Duration,
+    read_buf: Vec<u8>,
+}
+
+impl SocketTransport {
+    /// Establish this rank's position in a `world`-rank ring: dial the
+    /// successor at `join` (retrying until `opts.connect_timeout` while
+    /// that process launches), accept the predecessor on `listener`, and
+    /// handshake both links. `counters` receives byte/frame/reconnect
+    /// accounting (pass [`TransportCounters::new`] or a
+    /// registry-registered set).
+    pub fn connect_ring(
+        rank: usize,
+        world: usize,
+        listener: Listener,
+        join: &Endpoint,
+        opts: SocketOptions,
+        counters: TransportCounters,
+    ) -> Result<Self, TransportError> {
+        if world == 0 || rank >= world {
+            return Err(TransportError::Protocol(format!(
+                "rank {rank} outside world of {world}"
+            )));
+        }
+        if world == 1 {
+            // Degenerate ring: no traffic ever flows; the listener is
+            // released immediately.
+            return Ok(SocketTransport {
+                rank,
+                world,
+                link: None,
+                counters,
+                io_timeout: opts.io_timeout,
+                read_buf: Vec::new(),
+            });
+        }
+        let deadline = Instant::now() + opts.connect_timeout;
+
+        // 1. Dial the successor and introduce ourselves. The write lands
+        //    in the OS buffer, so nothing here waits on the peer's
+        //    application logic — see the module docs for why this
+        //    ordering cannot deadlock.
+        let mut out = connect_with_retry(join, deadline, opts.connect_timeout, &counters)?;
+        out.set_write_timeout(Some(opts.io_timeout))?;
+        out.set_read_timeout(Some(opts.io_timeout))?;
+        out.write_all(&handshake_bytes(rank, world))
+            .map_err(io_or_timeout("handshake send", opts.io_timeout))?;
+
+        // 2. Accept the predecessor and validate its introduction.
+        let mut reader = listener.accept_deadline(deadline, opts.connect_timeout)?;
+        reader.set_read_timeout(Some(opts.io_timeout))?;
+        reader.set_write_timeout(Some(opts.io_timeout))?;
+        let mut hs = [0u8; HS_BYTES];
+        reader
+            .read_exact(&mut hs)
+            .map_err(io_or_timeout("handshake recv", opts.io_timeout))?;
+        if &hs[..4] != HS_MAGIC {
+            return Err(TransportError::Handshake("bad handshake magic from peer".into()));
+        }
+        if hs[4] != HS_VERSION {
+            return Err(TransportError::Handshake(format!(
+                "peer speaks handshake v{}, this build speaks v{HS_VERSION}",
+                hs[4]
+            )));
+        }
+        let peer_rank = u64::from_le_bytes(hs[5..13].try_into().expect("8 bytes")) as usize;
+        let peer_world = u64::from_le_bytes(hs[13..21].try_into().expect("8 bytes")) as usize;
+        if peer_world != world {
+            return Err(TransportError::Handshake(format!(
+                "peer believes the world has {peer_world} ranks, ours has {world}"
+            )));
+        }
+        let want = (rank + world - 1) % world;
+        if peer_rank != want {
+            return Err(TransportError::Handshake(format!(
+                "expected predecessor rank {want}, a rank-{peer_rank} process connected"
+            )));
+        }
+        reader.write_all(HS_ACK).map_err(io_or_timeout("handshake ack send", opts.io_timeout))?;
+
+        // 3. Wait for our own introduction to be acknowledged.
+        let mut ack = [0u8; 4];
+        out.read_exact(&mut ack).map_err(io_or_timeout("handshake ack recv", opts.io_timeout))?;
+        if &ack != HS_ACK {
+            return Err(TransportError::Handshake("successor rejected the handshake".into()));
+        }
+
+        // 4. Hand the write side to its thread.
+        let (writer_tx, writer_rx) = mpsc::channel::<Vec<u8>>();
+        let writer_err: Arc<Mutex<Option<io::Error>>> = Arc::new(Mutex::new(None));
+        let slot = writer_err.clone();
+        let writer_join = std::thread::Builder::new()
+            .name(format!("transport-writer-{rank}"))
+            .spawn(move || {
+                while let Ok(buf) = writer_rx.recv() {
+                    if let Err(e) = out.write_all(&buf) {
+                        *slot.lock().expect("writer error slot") = Some(e);
+                        break;
+                    }
+                }
+            })
+            .map_err(TransportError::Io)?;
+
+        Ok(SocketTransport {
+            rank,
+            world,
+            link: Some(Link {
+                reader,
+                writer_tx,
+                writer_err,
+                writer_join: Some(writer_join),
+                decoder: FrameDecoder::new(),
+                assembler: BundleAssembler::new(),
+                pending_bytes: 0,
+            }),
+            counters,
+            io_timeout: opts.io_timeout,
+            read_buf: vec![0u8; READ_CHUNK_BYTES],
+        })
+    }
+
+    pub fn counters(&self) -> &TransportCounters {
+        &self.counters
+    }
+}
+
+impl Transport for SocketTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send_bundle(&mut self, bundle: &[ChunkGrad]) -> Result<(), TransportError> {
+        let _s = crate::telemetry::span::enter("transport.send");
+        let link = self
+            .link
+            .as_mut()
+            .ok_or_else(|| TransportError::Protocol("send on a single-rank transport".into()))?;
+        // A write failure lands in the slot asynchronously; surface it on
+        // the next send instead of losing it.
+        if let Some(e) = link.writer_err.lock().expect("writer error slot").take() {
+            return Err(TransportError::Io(e));
+        }
+        let mut buf = Vec::new();
+        encode_bundle(bundle, &mut buf);
+        let nbytes = buf.len() as u64;
+        if link.writer_tx.send(buf).is_err() {
+            let e = link.writer_err.lock().expect("writer error slot").take();
+            return Err(match e {
+                Some(e) => TransportError::Io(e),
+                None => TransportError::Disconnected { context: "writer thread exited" },
+            });
+        }
+        self.counters.record_sent(nbytes);
+        Ok(())
+    }
+
+    fn recv_bundle(&mut self) -> Result<Vec<ChunkGrad>, TransportError> {
+        let _s = crate::telemetry::span::enter("transport.recv");
+        let link = self
+            .link
+            .as_mut()
+            .ok_or_else(|| TransportError::Protocol("recv on a single-rank transport".into()))?;
+        loop {
+            // Drain whatever the buffered bytes complete before touching
+            // the socket again.
+            while let Some(ev) = link.decoder.next_event()? {
+                if let Some(bundle) = link.assembler.push(ev) {
+                    self.counters.record_recvd(std::mem::take(&mut link.pending_bytes));
+                    return Ok(bundle);
+                }
+            }
+            let n = match link.reader.read(&mut self.read_buf) {
+                Ok(n) => n,
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    return Err(TransportError::Timeout {
+                        op: "recv_bundle",
+                        timeout: self.io_timeout,
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(TransportError::Io(e)),
+            };
+            if n == 0 {
+                // EOF: clean at a bundle boundary (peer closed between
+                // steps) vs. typed mid-frame truncation.
+                link.decoder.finish()?;
+                return Err(TransportError::Disconnected { context: "peer closed the connection" });
+            }
+            link.pending_bytes += n as u64;
+            link.decoder.feed(&self.read_buf[..n]);
+        }
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        if let Some(mut link) = self.link.take() {
+            // Closing the queue stops the writer after it drains any
+            // queued bundles (a peer mid-recv still gets our last send).
+            drop(link.writer_tx);
+            if let Some(h) = link.writer_join.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn connect_with_retry(
+    ep: &Endpoint,
+    deadline: Instant,
+    total: Duration,
+    counters: &TransportCounters,
+) -> Result<Stream, TransportError> {
+    let mut first = true;
+    loop {
+        if !first {
+            counters.record_reconnect();
+        }
+        first = false;
+        let res = match ep {
+            Endpoint::Tcp(addr) => {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                match addr.to_socket_addrs().ok().and_then(|mut a| a.next()) {
+                    Some(sa) if !remaining.is_zero() => {
+                        TcpStream::connect_timeout(&sa, remaining).map(Stream::Tcp)
+                    }
+                    Some(_) => Err(io::Error::new(ErrorKind::TimedOut, "connect budget spent")),
+                    None => Err(io::Error::new(
+                        ErrorKind::InvalidInput,
+                        format!("unresolvable address {addr}"),
+                    )),
+                }
+            }
+            Endpoint::Unix(path) => UnixStream::connect(path).map(Stream::Unix),
+        };
+        match res {
+            Ok(s) => return Ok(s),
+            Err(e) if e.kind() == ErrorKind::InvalidInput => return Err(TransportError::Io(e)),
+            Err(_) if Instant::now() < deadline => std::thread::sleep(RETRY_PAUSE),
+            Err(_) => return Err(TransportError::Timeout { op: "connect", timeout: total }),
+        }
+    }
+}
+
+/// Map an I/O error during ring setup: timeout kinds become
+/// [`TransportError::Timeout`], everything else stays [`TransportError::Io`].
+fn io_or_timeout(op: &'static str, timeout: Duration) -> impl Fn(io::Error) -> TransportError {
+    move |e| {
+        if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+            TransportError::Timeout { op, timeout }
+        } else {
+            TransportError::Io(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::wire::WireFormat;
+    use crate::tensor::Tensor;
+    use crate::transport::all_gather;
+    use crate::util::rng::{Pcg32, Rng};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn uds_path(tag: &str) -> PathBuf {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("s2fp8-{}-{}-{tag}.sock", std::process::id(), n))
+    }
+
+    fn chunk(c: usize, seed: u64, wire: WireFormat) -> ChunkGrad {
+        let mut rng = Pcg32::new(seed, 0x50C);
+        let g = vec![
+            Tensor::randn(vec![100], &mut rng).map(|v| v * 0.1),
+            Tensor::randn(vec![7], &mut rng).map(|v| v * 0.1),
+        ];
+        ChunkGrad::encode(c, 3, c as f64 + 0.5, &g, wire).unwrap()
+    }
+
+    fn ring_endpoints(n: usize, tag: &str, tcp: bool) -> (Vec<Listener>, Vec<Endpoint>) {
+        let listeners: Vec<Listener> = (0..n)
+            .map(|r| {
+                let ep = if tcp {
+                    Endpoint::Tcp("127.0.0.1:0".into())
+                } else {
+                    Endpoint::Unix(uds_path(&format!("{tag}{r}")))
+                };
+                Listener::bind(&ep).unwrap()
+            })
+            .collect();
+        let eps = listeners.iter().map(|l| l.local_endpoint().unwrap()).collect();
+        (listeners, eps)
+    }
+
+    fn gather_over_sockets(n: usize, tag: &str, tcp: bool, wire: WireFormat) {
+        let (listeners, eps) = ring_endpoints(n, tag, tcp);
+        let outs: Vec<(usize, Vec<Vec<ChunkGrad>>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = listeners
+                .into_iter()
+                .enumerate()
+                .map(|(r, l)| {
+                    let join = eps[(r + 1) % n].clone();
+                    s.spawn(move || {
+                        let mut t = SocketTransport::connect_ring(
+                            r,
+                            n,
+                            l,
+                            &join,
+                            SocketOptions::default(),
+                            TransportCounters::new(),
+                        )
+                        .unwrap();
+                        let mine = vec![chunk(r, r as u64, wire)];
+                        let got = all_gather(&mut t, mine, &mut |_| {}).unwrap();
+                        (r, got)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, got) in outs {
+            assert_eq!(got.len(), n, "rank {rank}");
+            for (origin, b) in got.iter().enumerate() {
+                let want = chunk(origin, origin as u64, wire);
+                assert_eq!(b[0].chunk, want.chunk, "rank {rank} slot {origin}");
+                assert_eq!(b[0].n_examples, want.n_examples);
+                assert_eq!(b[0].loss_sum.to_bits(), want.loss_sum.to_bits());
+                assert_eq!(b[0].tensors, want.tensors, "rank {rank} slot {origin}");
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_ring_gathers_bitwise() {
+        gather_over_sockets(2, "tcp2", true, WireFormat::Fp32);
+        gather_over_sockets(3, "tcp3", true, WireFormat::S2fp8);
+    }
+
+    #[test]
+    fn uds_ring_gathers_bitwise() {
+        gather_over_sockets(2, "uds2", false, WireFormat::S2fp8);
+        gather_over_sockets(4, "uds4", false, WireFormat::Fp32);
+    }
+
+    #[test]
+    fn single_rank_world_needs_no_sockets() {
+        let ep = Endpoint::Tcp("127.0.0.1:0".into());
+        let l = Listener::bind(&ep).unwrap();
+        let join = l.local_endpoint().unwrap();
+        let mut t = SocketTransport::connect_ring(
+            0,
+            1,
+            l,
+            &join,
+            SocketOptions::default(),
+            TransportCounters::new(),
+        )
+        .unwrap();
+        let mine = vec![chunk(0, 0, WireFormat::Fp32)];
+        let got = all_gather(&mut t, mine.clone(), &mut |_| panic!("no sends")).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0][0].tensors, mine[0].tensors);
+    }
+
+    #[test]
+    fn accept_times_out_typed_when_no_peer_arrives() {
+        let l = Listener::bind(&Endpoint::Tcp("127.0.0.1:0".into())).unwrap();
+        // join an endpoint that is bound but will never handshake back
+        let dead = Listener::bind(&Endpoint::Tcp("127.0.0.1:0".into())).unwrap();
+        let join = dead.local_endpoint().unwrap();
+        let opts = SocketOptions {
+            connect_timeout: Duration::from_millis(300),
+            io_timeout: Duration::from_millis(300),
+        };
+        let err = SocketTransport::connect_ring(0, 2, l, &join, opts, TransportCounters::new())
+            .unwrap_err();
+        assert!(
+            matches!(err, TransportError::Timeout { .. }),
+            "expected a typed timeout, got {err}"
+        );
+    }
+
+    #[test]
+    fn connect_times_out_typed_when_no_listener_exists() {
+        let l = Listener::bind(&Endpoint::Unix(uds_path("orphan"))).unwrap();
+        let join = Endpoint::Unix(uds_path("nobody-home"));
+        let opts = SocketOptions {
+            connect_timeout: Duration::from_millis(300),
+            io_timeout: Duration::from_millis(300),
+        };
+        let counters = TransportCounters::new();
+        let err = SocketTransport::connect_ring(0, 2, l, &join, opts, counters.clone())
+            .unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { op: "connect", .. }), "{err}");
+        assert!(counters.reconnects() > 0, "retries should be counted");
+    }
+
+    #[test]
+    fn wrong_geometry_handshake_is_rejected() {
+        let (listeners, eps) = ring_endpoints(2, "geom", true);
+        let mut it = listeners.into_iter();
+        let l0 = it.next().unwrap();
+        let l1 = it.next().unwrap();
+        let opts = SocketOptions {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(5),
+        };
+        let join0 = eps[1].clone();
+        std::thread::scope(|s| {
+            let h0 = s.spawn(move || {
+                SocketTransport::connect_ring(0, 2, l0, &join0, opts, TransportCounters::new())
+            });
+            // rank 1 lies about the world size — rank 0 must reject it
+            let h1 = s.spawn(move || {
+                let _l1 = l1; // keep our listener bound so rank 0's dial succeeds
+                let mut out = connect_with_retry(
+                    &eps[0],
+                    Instant::now() + opts.connect_timeout,
+                    opts.connect_timeout,
+                    &TransportCounters::new(),
+                )
+                .unwrap();
+                out.write_all(&handshake_bytes(1, 3)).unwrap();
+                let mut ack = [0u8; 4];
+                out.read_exact(&mut ack).is_ok()
+            });
+            let err = h0.join().unwrap().unwrap_err();
+            assert!(matches!(err, TransportError::Handshake(_)), "{err}");
+            assert!(!h1.join().unwrap(), "no ack should be sent for a bad handshake");
+        });
+    }
+
+    #[test]
+    fn endpoint_parse_roundtrips() {
+        assert_eq!(Endpoint::parse("127.0.0.1:4000"), Endpoint::Tcp("127.0.0.1:4000".into()));
+        assert_eq!(
+            Endpoint::parse("unix:/tmp/x.sock"),
+            Endpoint::Unix(PathBuf::from("/tmp/x.sock"))
+        );
+        for s in ["127.0.0.1:4000", "unix:/tmp/x.sock"] {
+            assert_eq!(Endpoint::parse(s).to_string(), s);
+        }
+    }
+}

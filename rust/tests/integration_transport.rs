@@ -1,0 +1,275 @@
+//! End-to-end suite for the socket transport (`src/transport/`): real
+//! multi-rank training over TCP and Unix-domain sockets must be
+//! **bitwise identical** to the in-process channel ring, bucketed
+//! compute/comm overlap included; and a socket peer that stalls, dies
+//! mid-frame, or ships corrupted bytes must surface as a **typed**
+//! [`TransportError`] — never a panic, never a hang.
+//!
+//! Knobs (CI): `CHAOS_SEEDS` — comma-separated `FaultPlan` seeds for the
+//! corrupted-peer block (default `2020,77`).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use s2fp8::coordinator::trainer::LrSchedule;
+use s2fp8::data::synth_vector;
+use s2fp8::dist::{train, train_process, ChunkGrad, DistOptions, DistReport, WireFormat};
+use s2fp8::models::MlpModel;
+use s2fp8::runtime::HostValue;
+use s2fp8::tensor::Tensor;
+use s2fp8::testkit::FaultPlan;
+use s2fp8::transport::{
+    encode_bundle, handshake_bytes, Endpoint, HS_ACK, HS_BYTES, Listener, SocketOptions,
+    SocketTransport, Transport, TransportCounters, TransportError,
+};
+use s2fp8::util::rng::Pcg32;
+
+fn chaos_seeds() -> Vec<u64> {
+    let raw = std::env::var("CHAOS_SEEDS").unwrap_or_default();
+    let seeds: Vec<u64> = raw.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+    if seeds.is_empty() {
+        assert!(
+            raw.trim().is_empty(),
+            "CHAOS_SEEDS='{raw}' parsed to no seeds — use comma-separated u64s"
+        );
+        return vec![2020, 77];
+    }
+    seeds
+}
+
+fn uds_endpoint(tag: &str) -> Endpoint {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    let name = format!("s2fp8_it_{tag}_{}_{n}.sock", std::process::id());
+    Endpoint::Unix(std::env::temp_dir().join(name))
+}
+
+// ---- bitwise train equivalence: sockets vs in-process -----------------
+
+fn fixture_opts(wire: WireFormat, buckets: usize) -> DistOptions {
+    let mut opts = DistOptions::new(2, wire);
+    opts.chunks = 4;
+    opts.global_batch = 16;
+    opts.n_examples = 256;
+    opts.steps = 6;
+    opts.buckets = buckets;
+    opts.lr = LrSchedule::Constant(0.08);
+    opts
+}
+
+fn train_in_process(opts: &DistOptions) -> DistReport {
+    let (x, y) = synth_vector::dataset(256, 12, 4, 5);
+    train(
+        opts,
+        |_rank| Ok(MlpModel::new(&[12, 10, 4], 77)),
+        |_step, idx| {
+            let xb = x.gather_rows(idx);
+            let yb: Vec<i32> = idx.iter().map(|&i| y[i]).collect();
+            let n = idx.len();
+            Ok(vec![HostValue::F32(xb), HostValue::i32(vec![n], yb)])
+        },
+    )
+    .unwrap()
+}
+
+/// Run a 2-rank socket ring (one thread per "process") and return both
+/// ranks' reports. Listeners bind first so the connect retries converge.
+fn train_over_sockets(opts: &DistOptions, e0: Endpoint, e1: Endpoint) -> Vec<DistReport> {
+    let l0 = Listener::bind(&e0).unwrap();
+    let l1 = Listener::bind(&e1).unwrap();
+    let e0 = l0.local_endpoint().unwrap(); // resolve :0 ephemeral ports
+    let e1 = l1.local_endpoint().unwrap();
+    let (x, y) = synth_vector::dataset(256, 12, 4, 5);
+    let (x, y) = (&x, &y);
+    let mut reports: Vec<(usize, DistReport)> = std::thread::scope(|s| {
+        let handles: Vec<_> = [(0usize, l0, e1), (1usize, l1, e0)]
+            .into_iter()
+            .map(|(rank, listener, join)| {
+                s.spawn(move || {
+                    let tp = SocketTransport::connect_ring(
+                        rank,
+                        2,
+                        listener,
+                        &join,
+                        SocketOptions::default(),
+                        TransportCounters::new(),
+                    )
+                    .unwrap();
+                    let report = train_process(
+                        opts,
+                        tp,
+                        |_rank| Ok(MlpModel::new(&[12, 10, 4], 77)),
+                        |_step, idx| {
+                            let xb = x.gather_rows(idx);
+                            let yb: Vec<i32> = idx.iter().map(|&i| y[i]).collect();
+                            let n = idx.len();
+                            Ok(vec![HostValue::F32(xb), HostValue::i32(vec![n], yb)])
+                        },
+                        None,
+                        None,
+                    )
+                    .unwrap();
+                    (rank, report)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    reports.sort_by_key(|(rank, _)| *rank);
+    reports.into_iter().map(|(_, r)| r).collect()
+}
+
+fn assert_bitwise_eq(a: &DistReport, b: &DistReport, what: &str) {
+    let (al, bl) = (a.curve.column("loss"), b.curve.column("loss"));
+    assert_eq!(al.len(), bl.len(), "{what}: curve lengths");
+    for (i, (x, y)) in al.iter().zip(bl.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: loss at row {i}");
+    }
+    assert_eq!(a.final_params.len(), b.final_params.len(), "{what}: param count");
+    for ((na, ta), (nb, tb)) in a.final_params.iter().zip(b.final_params.iter()) {
+        assert_eq!(na, nb, "{what}: param order");
+        assert_eq!(ta.shape(), tb.shape(), "{what}: shape of {na}");
+        for (x, y) in ta.data().iter().zip(tb.data().iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: bits of {na}");
+        }
+    }
+}
+
+#[test]
+fn tcp_training_is_bitwise_identical_to_in_process() {
+    let opts = fixture_opts(WireFormat::Fp32, 1);
+    let reference = train_in_process(&opts);
+    let e = || Endpoint::Tcp("127.0.0.1:0".into());
+    let reports = train_over_sockets(&opts, e(), e());
+    assert_bitwise_eq(&reports[0], &reports[1], "tcp rank0 vs rank1");
+    assert_bitwise_eq(&reports[0], &reference, "tcp vs in-process");
+    assert!(reports[0].comm.wire_bytes > 0, "gradients crossed real sockets");
+}
+
+#[test]
+fn uds_bucketed_s2fp8_training_matches_in_process_and_compresses() {
+    // overlap (buckets = 2) over Unix sockets vs the synchronous
+    // in-process run: same bits, and the S2FP8 wire holds the paper's
+    // compression through the socket framing
+    let reference = train_in_process(&fixture_opts(WireFormat::S2fp8, 1));
+    let opts = fixture_opts(WireFormat::S2fp8, 2);
+    let reports = train_over_sockets(&opts, uds_endpoint("tr0"), uds_endpoint("tr1"));
+    assert_bitwise_eq(&reports[0], &reports[1], "uds rank0 vs rank1");
+    assert_bitwise_eq(&reports[0], &reference, "uds+buckets vs in-process");
+    let comm = &reports[0].comm;
+    assert!(
+        (comm.wire_bytes as f64) <= 0.30 * comm.f32_equiv_bytes as f64,
+        "S2FP8 wire moved {} of {} FP32-equivalent bytes (> 0.30×)",
+        comm.wire_bytes,
+        comm.f32_equiv_bytes
+    );
+}
+
+// ---- typed failure modes over real sockets ----------------------------
+
+fn sample_bundle(seed: u64) -> Vec<ChunkGrad> {
+    let mut rng = Pcg32::new(seed, 0xFEED);
+    (0..2)
+        .map(|c| {
+            let g = vec![
+                Tensor::randn(vec![60], &mut rng).map(|v| v * 0.1),
+                Tensor::randn(vec![7], &mut rng).map(|v| v * 0.1),
+            ];
+            ChunkGrad::encode(c, 4, c as f64 + 0.5, &g, WireFormat::S2fp8).unwrap()
+        })
+        .collect()
+}
+
+/// Stand up a real rank-0 [`SocketTransport`] against an impersonated
+/// rank 1 (raw [`TcpStream`]s speaking the handshake protocol), run
+/// `script` with the connection rank 0 **receives bundles on**, and
+/// return what rank 0's `recv_bundle` said. The fake peer is how the
+/// suite injects byte-exact garbage below the transport API.
+fn recv_against_fake_peer(
+    io_timeout: Duration,
+    script: impl FnOnce(&mut TcpStream),
+) -> TransportError {
+    let listener = Listener::bind(&Endpoint::parse("127.0.0.1:0")).unwrap();
+    let rank0_addr = listener.local_endpoint().unwrap().to_string();
+    let fake = TcpListener::bind("127.0.0.1:0").unwrap();
+    let join = Endpoint::Tcp(fake.local_addr().unwrap().to_string());
+
+    let rank0 = std::thread::spawn(move || {
+        let opts = SocketOptions { connect_timeout: Duration::from_secs(5), io_timeout };
+        let mut tp = SocketTransport::connect_ring(
+            0,
+            2,
+            listener,
+            &join,
+            opts,
+            TransportCounters::new(),
+        )
+        .unwrap();
+        tp.recv_bundle().unwrap_err()
+    });
+
+    // the fake rank 1: dial rank 0's listener (its in-link), present a
+    // valid handshake, then ack rank 0's own handshake on the connection
+    // it dialed us with
+    let mut to_rank0 = TcpStream::connect(&rank0_addr).unwrap();
+    to_rank0.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    to_rank0.write_all(&handshake_bytes(1, 2)).unwrap();
+    let (mut from_rank0, _) = fake.accept().unwrap();
+    from_rank0.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut hs = vec![0u8; HS_BYTES];
+    from_rank0.read_exact(&mut hs).unwrap();
+    from_rank0.write_all(HS_ACK).unwrap();
+    let mut ack = [0u8; 4];
+    to_rank0.read_exact(&mut ack).unwrap();
+    assert_eq!(&ack, HS_ACK, "rank 0 acked our handshake");
+
+    script(&mut to_rank0);
+    drop(to_rank0);
+    drop(from_rank0);
+    rank0.join().expect("rank 0 must fail typed, not panic")
+}
+
+#[test]
+fn silent_peer_times_out_typed() {
+    let err = recv_against_fake_peer(Duration::from_millis(300), |conn| {
+        // say nothing; hold the connection open past rank 0's timeout
+        std::thread::sleep(Duration::from_millis(600));
+        let _ = conn.flush();
+    });
+    assert!(matches!(err, TransportError::Timeout { .. }), "{err}");
+}
+
+#[test]
+fn mid_frame_eof_is_a_typed_error() {
+    let mut bytes = Vec::new();
+    encode_bundle(&sample_bundle(9), &mut bytes);
+    let cut = bytes.len() / 2;
+    let err = recv_against_fake_peer(Duration::from_secs(5), move |conn| {
+        conn.write_all(&bytes[..cut]).unwrap();
+        // dropping the connection delivers EOF mid-bundle
+    });
+    assert!(matches!(err, TransportError::UnexpectedEof { .. }), "{err}");
+}
+
+#[test]
+fn corrupted_socket_frames_fail_typed_under_chaos_seeds() {
+    for seed in chaos_seeds() {
+        let plan = FaultPlan::from_seed(seed, 2, 4);
+        let mut bytes = Vec::new();
+        encode_bundle(&sample_bundle(seed), &mut bytes);
+        let what = plan.stream.describe(bytes.len());
+        let mut dirty = bytes;
+        plan.stream.apply(&mut dirty);
+        let err = recv_against_fake_peer(Duration::from_secs(5), move |conn| {
+            let _ = conn.write_all(&dirty);
+        });
+        // a typed error within the timeout: no panic, no hang, and a
+        // flipped bit can never decode silently (CRC coverage)
+        assert!(
+            !matches!(err, TransportError::Timeout { .. }),
+            "seed {seed} ({what}): corruption must fail fast, got {err}"
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! Property tests of the transport frame grammar (`src/transport/`).
+//!
+//! Two invariants carry the socket transport's correctness story:
+//!
+//! 1. **Split invariance** — the incremental [`FrameDecoder`] is a pull
+//!    parser over arbitrary partial buffers: decoding a bundle byte by
+//!    byte, or across random split points, yields the exact same event
+//!    sequence as decoding the whole buffer at once. This is what makes
+//!    the decoder safe to drive from `read()` calls that return however
+//!    many bytes the kernel felt like delivering.
+//! 2. **Chaos** — a corrupted stream (seeded single-bit flip or prefix
+//!    truncation, the same [`Corruption`] draws the chaos suite uses)
+//!    never panics and never decodes silently wrong: a flipped bit is
+//!    always a typed error (every stream byte is CRC-covered), and a
+//!    truncation yields either a typed error or a strict prefix of the
+//!    clean event sequence.
+//!
+//! Replay any failure with `S2FP8_PROP_SEED=<seed>` (`util::prop`).
+
+use s2fp8::dist::{ChunkGrad, WireFormat};
+use s2fp8::tensor::Tensor;
+use s2fp8::testkit::{Corruption, FaultPlan};
+use s2fp8::transport::{encode_bundle, FrameDecoder, FrameEvent, TransportError};
+use s2fp8::util::prop::{check, FnGen};
+use s2fp8::util::rng::{Pcg32, Rng};
+
+/// A random bundle: 0–4 chunks, each with 1–3 tensors of 1–40 elements,
+/// drawing the wire format per chunk so FP32 and S2FP8 frames interleave
+/// on the same stream.
+fn gen_bundle(rng: &mut Pcg32) -> Vec<ChunkGrad> {
+    let n_chunks = rng.next_below(5) as usize; // 0..=4; 0 = empty bundle
+    (0..n_chunks)
+        .map(|c| {
+            let wire = if rng.next_f32() < 0.5 { WireFormat::Fp32 } else { WireFormat::S2fp8 };
+            let n_tensors = 1 + rng.next_below(3) as usize;
+            let grads: Vec<Tensor> = (0..n_tensors)
+                .map(|_| {
+                    let len = 1 + rng.next_below(40) as usize;
+                    Tensor::randn(vec![len], rng).map(|v| v * 0.1)
+                })
+                .collect();
+            let n_ex = 1 + rng.next_below(8) as usize;
+            let loss = rng.next_f32() as f64;
+            ChunkGrad::encode(c, n_ex, loss, &grads, wire).expect("finite grads encode")
+        })
+        .collect()
+}
+
+/// Decode `bytes` feeding the slices `[0, cuts[0])`, `[cuts[0], cuts[1])`,
+/// …, `[last, len)` — an empty `cuts` is the whole-buffer decode. Returns
+/// the full event sequence after a clean [`FrameDecoder::finish`].
+fn decode_split(bytes: &[u8], cuts: &[usize]) -> Result<Vec<FrameEvent>, TransportError> {
+    let mut dec = FrameDecoder::new();
+    let mut events = Vec::new();
+    let mut pos = 0usize;
+    for &cut in cuts.iter().chain(std::iter::once(&bytes.len())) {
+        dec.feed(&bytes[pos..cut]);
+        pos = cut;
+        while let Some(ev) = dec.next_event()? {
+            events.push(ev);
+        }
+    }
+    dec.finish()?;
+    Ok(events)
+}
+
+fn seed_gen() -> FnGen<impl Fn(&mut Pcg32) -> u64> {
+    FnGen(|rng: &mut Pcg32| rng.next_u64())
+}
+
+#[test]
+fn prop_decode_is_split_invariant() {
+    check("frame decode split invariance", &seed_gen(), |&seed: &u64| {
+        let mut rng = Pcg32::new(seed, 0x51D5);
+        let bundle = gen_bundle(&mut rng);
+        let mut bytes = Vec::new();
+        encode_bundle(&bundle, &mut bytes);
+
+        let whole = decode_split(&bytes, &[])
+            .map_err(|e| format!("whole-buffer decode failed: {e}"))?;
+
+        // byte at a time: every possible read boundary at once
+        let every_byte: Vec<usize> = (1..bytes.len()).collect();
+        let trickled = decode_split(&bytes, &every_byte)
+            .map_err(|e| format!("byte-at-a-time decode failed: {e}"))?;
+        if trickled != whole {
+            return Err(format!(
+                "byte-at-a-time decode produced {} events, whole buffer {}",
+                trickled.len(),
+                whole.len()
+            ));
+        }
+
+        // a handful of random split points (duplicates = empty feeds)
+        let n_cuts = rng.next_below(6) as usize;
+        let mut cuts: Vec<usize> =
+            (0..n_cuts).map(|_| rng.next_below(bytes.len() as u64 + 1) as usize).collect();
+        cuts.sort_unstable();
+        let split = decode_split(&bytes, &cuts)
+            .map_err(|e| format!("decode across splits {cuts:?} failed: {e}"))?;
+        if split != whole {
+            return Err(format!("decode across splits {cuts:?} diverged from whole buffer"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corrupted_streams_fail_typed_never_silently() {
+    check("frame decode chaos", &seed_gen(), |&seed: &u64| {
+        let mut rng = Pcg32::new(seed, 0xC405);
+        let bundle = gen_bundle(&mut rng);
+        let mut bytes = Vec::new();
+        encode_bundle(&bundle, &mut bytes);
+        let clean = decode_split(&bytes, &[]).expect("clean stream decodes");
+
+        // the same draw the chaos suite's fault plans use
+        let plan = FaultPlan::from_seed(seed, 2, 4);
+        let mut dirty = bytes.clone();
+        plan.stream.apply(&mut dirty);
+        let what = plan.stream.describe(bytes.len());
+
+        match (plan.stream, decode_split(&dirty, &[])) {
+            // any typed error is the contract — and reaching here at all
+            // means no panic and no hang
+            (_, Err(_)) => Ok(()),
+            (Corruption::BitFlip { .. }, Ok(events)) => Err(format!(
+                "a flipped bit decoded cleanly into {} events ({what})",
+                events.len()
+            )),
+            (Corruption::Truncate { .. }, Ok(events)) => {
+                if events.len() <= clean.len() && events[..] == clean[..events.len()] {
+                    Ok(())
+                } else {
+                    Err(format!("truncated stream ({what}) invented events"))
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_garbage_bytes_are_rejected_up_front() {
+    let gen = FnGen(|rng: &mut Pcg32| {
+        let len = rng.next_below(200) as usize;
+        (0..len).map(|_| rng.next_u64() as u8).collect::<Vec<u8>>()
+    });
+    check("garbage rejection", &gen, |bytes: &Vec<u8>| {
+        if bytes.starts_with(b"S2BD") {
+            return Ok(()); // astronomically unlikely, but not garbage
+        }
+        match decode_split(bytes, &[]) {
+            Err(_) if !bytes.is_empty() => Ok(()),
+            Ok(events) if bytes.is_empty() && events.is_empty() => Ok(()),
+            Ok(events) => {
+                Err(format!("{} garbage bytes decoded into {} events", bytes.len(), events.len()))
+            }
+            Err(e) => Err(format!("empty input must finish clean, got {e}")),
+        }
+    });
+}
