@@ -1,98 +1,293 @@
-//! §Perf bench — codec encode/decode throughput for every format in the
-//! zoo, at 1K / 1M / 16M elements, through the unified `Codec` trait
-//! (true packed payloads, chunk-parallel encode, buffer-reusing decode).
-//! Emits `runs/perf_codec/{codec.md,BENCH_codec.json}` so the perf
-//! trajectory tracks the format layer alongside the training hot paths
-//! (`perf_hotpath`) and serving (`perf_serve`).
+//! §Perf bench — **competitive codec harness**: every format's optimized
+//! encode/decode (branch-free FP8, fused single-pass S2FP8, LUT decode,
+//! chunk-parallel loops) raced against the retained naive scalar
+//! reference (`formats::scalar_ref`) on the same tensors. Emits
+//! `runs/perf_codec/{codec.md,BENCH_codec.json}` with GB/s for both
+//! sides and the p50-based speedup ratios, and **gates the speed
+//! contract** from DESIGN.md "Codec hot path":
 //!
-//! GB/s is measured on the f32 side (4 × elements bytes per pass) — the
-//! number to compare against memory bandwidth.
+//! * hard floors — at the 1M-element lognormal tier, S2FP8 and FP8-E4M3
+//!   must beat the scalar reference by ≥ 3× on encode and ≥ 5× on
+//!   decode;
+//! * regression gate — if a committed baseline exists
+//!   (`benches/baselines/BENCH_codec.json`, override with
+//!   `S2FP8_BENCH_BASELINE`), every gated row's speedup must stay within
+//!   10% of it (`fresh ≥ 0.9 × baseline`). Speedups are dimensionless
+//!   (optimized vs in-run reference), so the gate survives machine
+//!   changes far better than raw GB/s would; CI additionally pins
+//!   `S2FP8_CODEC_THREADS` so thread-count variance is out of the
+//!   picture.
 //!
-//! Scale knobs: `S2FP8_BENCH_FAST=1` drops the 16M-element tier.
+//! Input bias is covered by adversarial distributions alongside the
+//! lognormal primary: `denormal` (everything in E5M2's denormal band),
+//! `saturating` (a heavy clipping tail), and `constant` (all one value —
+//! the S2FP8 `m == μ` MIN_SPREAD guard, and perfectly predictable
+//! branches for the scalar ladders).
+//!
+//! Scale knobs: `S2FP8_BENCH_FAST=1` drops the 16M-element tier;
+//! `S2FP8_BENCH_WRITE_BASELINE=1` rewrites the committed baseline from
+//! this run's numbers (re-baselining after an intentional perf change).
 
+use std::path::PathBuf;
 use std::time::Duration;
 
 use s2fp8::bench::harness::bench_fn;
 use s2fp8::bench::paper;
 use s2fp8::bench::report::Table;
-use s2fp8::formats::FormatKind;
+use s2fp8::formats::{scalar_ref, Codec, FormatKind, QuantizedTensor};
 use s2fp8::util::json::Json;
 use s2fp8::util::rng::{Pcg32, Rng};
+
+/// Speedup floors of the 1M lognormal tier (DESIGN.md "Codec hot path").
+const ENCODE_SPEEDUP_FLOOR: f64 = 3.0;
+const DECODE_SPEEDUP_FLOOR: f64 = 5.0;
+/// Formats the hard floors apply to.
+const GATED_FORMATS: [FormatKind; 2] = [FormatKind::S2fp8, FormatKind::Fp8E4m3];
+/// Rows at or above this element count participate in the floors and the
+/// baseline regression gate; the reference is only measured up to here
+/// (a 16M naive-scalar S2FP8 walk is pure waiting).
+const GATED_ELEMS: usize = 1 << 20;
+/// Fraction of the baseline speedup a fresh run must retain.
+const BASELINE_RETENTION: f64 = 0.9;
+
+fn signed(rng: &mut Pcg32, mag: f32) -> f32 {
+    if rng.next_f32() < 0.5 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Input distributions. Each is deterministic in (n, dist) so baseline
+/// runs and fresh runs bench identical tensors.
+fn tensor(dist: &str, n: usize) -> Vec<f32> {
+    let mut rng = Pcg32::new(2026, (n as u64) ^ (dist.len() as u64) << 32);
+    match dist {
+        // the primary: wide signed lognormal, the shape of real gradients
+        "lognormal" => (0..n)
+            .map(|_| {
+                let mag = rng.next_lognormal(-6.0, 4.0);
+                signed(&mut rng, mag)
+            })
+            .collect(),
+        // everything inside E5M2's denormal band [2^-16, 2^-14): the
+        // encoder's magic-add denormal path on every element
+        "denormal" => (0..n)
+            .map(|_| {
+                let e = -16.0 + 2.0 * rng.next_f32(); // log2 magnitude
+                signed(&mut rng, e.exp2())
+            })
+            .collect(),
+        // a heavy clipping tail: 10% of elements far above MAX_NORMAL
+        "saturating" => (0..n)
+            .map(|_| {
+                let mag = if rng.next_f32() < 0.1 {
+                    1.0e7 * (1.0 + rng.next_f32())
+                } else {
+                    rng.next_lognormal(0.0, 2.0)
+                };
+                signed(&mut rng, mag)
+            })
+            .collect(),
+        // one repeated value: S2FP8's m == μ MIN_SPREAD guard, and the
+        // best case for the scalar ladders' branch predictors
+        "constant" => vec![0.37f32; n],
+        other => unreachable!("unknown distribution {other}"),
+    }
+}
+
+struct Measured {
+    enc_gbs: f64,
+    dec_gbs: f64,
+    enc_p50: f64,
+    dec_p50: f64,
+    iters: (usize, usize),
+}
 
 fn main() -> anyhow::Result<()> {
     let bench = "perf_codec";
     let fast = std::env::var("S2FP8_BENCH_FAST").as_deref() == Ok("1");
-    let sizes: &[usize] =
-        if fast { &[1 << 10, 1 << 20] } else { &[1 << 10, 1 << 20, 1 << 24] };
+    let sizes: &[usize] = if fast { &[1 << 10, 1 << 20] } else { &[1 << 10, 1 << 20, 1 << 24] };
     let budget = Duration::from_millis(250);
+    let threads_pin = std::env::var("S2FP8_CODEC_THREADS").ok();
 
     let mut table = Table::new(
-        "Codec throughput (GB/s of f32 processed; encode is chunk-parallel)",
-        &["format", "elements", "encode GB/s", "decode GB/s", "packed B/elem", "size vs fp32"],
+        "Codec throughput: optimized vs naive scalar reference (GB/s of f32 processed)",
+        &[
+            "format", "dist", "elements", "enc GB/s", "dec GB/s", "ref enc", "ref dec",
+            "enc ×", "dec ×",
+        ],
     );
     let mut rows = Vec::new();
+    let mut floor_failures: Vec<String> = Vec::new();
 
     for &kind in FormatKind::all() {
         let codec = kind.codec();
-        for &n in sizes {
-            let mut rng = Pcg32::new(2026, n as u64);
-            let xs: Vec<f32> =
-                (0..n).map(|_| rng.next_lognormal(-6.0, 4.0)).collect();
-            let f32_bytes = (n * 4) as f64;
+        // adversarial distributions only where the hot path differs per
+        // element value (the FP8 byte formats); multi-byte formats are
+        // bit moves whatever the input
+        let dists: &[&str] = match kind {
+            FormatKind::Fp8 | FormatKind::Fp8E4m3 | FormatKind::S2fp8 => {
+                &["lognormal", "denormal", "saturating", "constant"]
+            }
+            _ => &["lognormal"],
+        };
+        for &dist in dists {
+            // the primary runs the full size ladder; adversarial dists
+            // only need the gated tier
+            let dist_sizes: &[usize] = if dist == "lognormal" { sizes } else { &[GATED_ELEMS] };
+            for &n in dist_sizes {
+                let xs = tensor(dist, n);
+                let f32_bytes = (n * 4) as f64;
 
-            let enc = bench_fn(
-                &format!("{} encode {n}", kind.name()),
-                1,
-                3,
-                budget,
-                Some(f32_bytes),
-                || {
-                    std::hint::black_box(codec.encode(&xs));
-                },
-            );
+                // ---- optimized paths (buffer-reused, as production runs them)
+                let mut scratch = QuantizedTensor::empty(kind);
+                let enc = bench_fn(
+                    &format!("{} {dist} encode {n}", kind.name()),
+                    1,
+                    3,
+                    budget,
+                    Some(f32_bytes),
+                    || {
+                        codec.encode_into(&xs, &mut scratch);
+                        std::hint::black_box(scratch.payload().len());
+                    },
+                );
+                let qt = codec.encode(&xs);
+                let mut buf: Vec<f32> = Vec::with_capacity(n);
+                let dec = bench_fn(
+                    &format!("{} {dist} decode {n}", kind.name()),
+                    1,
+                    3,
+                    budget,
+                    Some(f32_bytes),
+                    || {
+                        codec.decode_into(&qt, &mut buf).expect("kind matches");
+                        std::hint::black_box(&buf);
+                    },
+                );
+                let opt = Measured {
+                    enc_gbs: enc.throughput().unwrap_or(0.0) / 1e9,
+                    dec_gbs: dec.throughput().unwrap_or(0.0) / 1e9,
+                    enc_p50: enc.p50.as_secs_f64(),
+                    dec_p50: dec.p50.as_secs_f64(),
+                    iters: (enc.iters, dec.iters),
+                };
 
-            let qt = codec.encode(&xs);
-            let mut buf: Vec<f32> = Vec::with_capacity(n);
-            let dec = bench_fn(
-                &format!("{} decode {n}", kind.name()),
-                1,
-                3,
-                budget,
-                Some(f32_bytes),
-                || {
-                    codec.decode_into(&qt, &mut buf).expect("kind matches");
-                    std::hint::black_box(&buf);
-                },
-            );
+                // ---- the naive scalar reference, same tensors
+                let reference = if n <= GATED_ELEMS {
+                    let mut ref_payload: Vec<u8> = Vec::with_capacity(n * 4);
+                    let renc = bench_fn(
+                        &format!("{} {dist} ref-encode {n}", kind.name()),
+                        1,
+                        3,
+                        budget,
+                        Some(f32_bytes),
+                        || {
+                            std::hint::black_box(scalar_ref::encode_into(
+                                kind,
+                                &xs,
+                                &mut ref_payload,
+                            ));
+                        },
+                    );
+                    // the race is only meaningful if both sides produce
+                    // the same bytes — assert it right here, per row
+                    anyhow::ensure!(
+                        ref_payload == qt.payload(),
+                        "{} {dist} {n}: scalar reference bytes diverge from optimized encode",
+                        kind.name()
+                    );
+                    let mut ref_buf = vec![0.0f32; n];
+                    let rdec = bench_fn(
+                        &format!("{} {dist} ref-decode {n}", kind.name()),
+                        1,
+                        3,
+                        budget,
+                        Some(f32_bytes),
+                        || {
+                            scalar_ref::decode_into(&qt, &mut ref_buf).expect("sized buffer");
+                            std::hint::black_box(&ref_buf);
+                        },
+                    );
+                    Some(Measured {
+                        enc_gbs: renc.throughput().unwrap_or(0.0) / 1e9,
+                        dec_gbs: rdec.throughput().unwrap_or(0.0) / 1e9,
+                        enc_p50: renc.p50.as_secs_f64(),
+                        dec_p50: rdec.p50.as_secs_f64(),
+                        iters: (renc.iters, rdec.iters),
+                    })
+                } else {
+                    None
+                };
 
-            let enc_gbs = enc.throughput().unwrap_or(0.0) / 1e9;
-            let dec_gbs = dec.throughput().unwrap_or(0.0) / 1e9;
-            let ratio = qt.stored_bytes() as f64 / (n as f64 * 4.0);
-            println!(
-                "{:<10} {:>10}  enc {enc_gbs:>7.2} GB/s  dec {dec_gbs:>7.2} GB/s  \
-                 {:.2}× fp32 size",
-                kind.name(),
-                n,
-                ratio
-            );
-            table.row(vec![
-                kind.name().to_string(),
-                n.to_string(),
-                format!("{enc_gbs:.2}"),
-                format!("{dec_gbs:.2}"),
-                format!("{}", qt.bytes_per_element()),
-                format!("{ratio:.3}"),
-            ]);
-            rows.push(Json::obj(vec![
-                ("format", Json::str(kind.name())),
-                ("elements", Json::num(n as f64)),
-                ("encode_gbs", Json::num(enc_gbs)),
-                ("decode_gbs", Json::num(dec_gbs)),
-                ("packed_bytes", Json::num(qt.stored_bytes() as f64)),
-                ("ratio_vs_fp32", Json::num(ratio)),
-                ("encode_iters", Json::num(enc.iters as f64)),
-                ("decode_iters", Json::num(dec.iters as f64)),
-            ]));
+                let speedups = reference.as_ref().map(|r| {
+                    (r.enc_p50 / opt.enc_p50.max(1e-12), r.dec_p50 / opt.dec_p50.max(1e-12))
+                });
+                let (enc_x, dec_x) = speedups.unwrap_or((f64::NAN, f64::NAN));
+                println!(
+                    "{:<10} {:<10} {:>9}  enc {:>7.2} GB/s  dec {:>7.2} GB/s  {}",
+                    kind.name(),
+                    dist,
+                    n,
+                    opt.enc_gbs,
+                    opt.dec_gbs,
+                    if speedups.is_some() {
+                        format!("speedup enc {enc_x:.2}× dec {dec_x:.2}×")
+                    } else {
+                        "(reference skipped at this size)".to_string()
+                    },
+                );
+                let fmt_x = |x: f64| if x.is_nan() { "—".to_string() } else { format!("{x:.2}") };
+                table.row(vec![
+                    kind.name().to_string(),
+                    dist.to_string(),
+                    n.to_string(),
+                    format!("{:.2}", opt.enc_gbs),
+                    format!("{:.2}", opt.dec_gbs),
+                    reference.as_ref().map_or("—".into(), |r| format!("{:.2}", r.enc_gbs)),
+                    reference.as_ref().map_or("—".into(), |r| format!("{:.2}", r.dec_gbs)),
+                    fmt_x(enc_x),
+                    fmt_x(dec_x),
+                ]);
+                let num_or_null = |x: f64| if x.is_nan() { Json::Null } else { Json::num(x) };
+                rows.push(Json::obj(vec![
+                    ("format", Json::str(kind.name())),
+                    ("dist", Json::str(dist)),
+                    ("elements", Json::num(n as f64)),
+                    ("encode_gbs", Json::num(opt.enc_gbs)),
+                    ("decode_gbs", Json::num(opt.dec_gbs)),
+                    (
+                        "ref_encode_gbs",
+                        reference.as_ref().map_or(Json::Null, |r| Json::num(r.enc_gbs)),
+                    ),
+                    (
+                        "ref_decode_gbs",
+                        reference.as_ref().map_or(Json::Null, |r| Json::num(r.dec_gbs)),
+                    ),
+                    ("encode_speedup", num_or_null(enc_x)),
+                    ("decode_speedup", num_or_null(dec_x)),
+                    ("packed_bytes", Json::num(qt.stored_bytes() as f64)),
+                    ("encode_iters", Json::num(opt.iters.0 as f64)),
+                    ("decode_iters", Json::num(opt.iters.1 as f64)),
+                ]));
+
+                // hard floors: the gated formats at the gated lognormal tier
+                if dist == "lognormal" && n == GATED_ELEMS && GATED_FORMATS.contains(&kind) {
+                    if enc_x < ENCODE_SPEEDUP_FLOOR {
+                        floor_failures.push(format!(
+                            "{} encode {enc_x:.2}× < {ENCODE_SPEEDUP_FLOOR}× floor",
+                            kind.name()
+                        ));
+                    }
+                    if dec_x < DECODE_SPEEDUP_FLOOR {
+                        floor_failures.push(format!(
+                            "{} decode {dec_x:.2}× < {DECODE_SPEEDUP_FLOOR}× floor",
+                            kind.name()
+                        ));
+                    }
+                }
+            }
         }
     }
 
@@ -102,10 +297,94 @@ fn main() -> anyhow::Result<()> {
     let record = Json::obj(vec![
         ("bench", Json::str("codec")),
         ("basis", Json::str("f32_bytes")),
+        (
+            "threads",
+            threads_pin.as_deref().map_or(Json::Null, |t| Json::str(t.to_string())),
+        ),
+        ("encode_speedup_floor", Json::num(ENCODE_SPEEDUP_FLOOR)),
+        ("decode_speedup_floor", Json::num(DECODE_SPEEDUP_FLOOR)),
         ("rows", Json::Arr(rows)),
     ]);
     let json_path = paper::out_dir(bench).join("BENCH_codec.json");
     std::fs::write(&json_path, record.to_string_pretty())?;
     println!("wrote {}", json_path.display());
+
+    // ---- baseline regression gate --------------------------------------
+    let baseline_path = std::env::var("S2FP8_BENCH_BASELINE").map(PathBuf::from).unwrap_or_else(
+        |_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("benches/baselines/BENCH_codec.json"),
+    );
+    if std::env::var("S2FP8_BENCH_WRITE_BASELINE").as_deref() == Ok("1") {
+        if let Some(dir) = baseline_path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::copy(&json_path, &baseline_path)?;
+        println!("baseline rewritten: {}", baseline_path.display());
+    } else if baseline_path.is_file() {
+        let baseline = Json::parse(&std::fs::read_to_string(&baseline_path)?)
+            .map_err(|e| anyhow::anyhow!("unreadable baseline {}: {e:?}", baseline_path.display()))?;
+        let fresh = Json::parse(&std::fs::read_to_string(&json_path)?).expect("own output");
+        let mut regressions = Vec::new();
+        let mut compared = 0usize;
+        for base_row in baseline.get("rows").as_arr().unwrap_or(&[]) {
+            let elements = base_row.get("elements").as_f64().unwrap_or(0.0);
+            if (elements as usize) < GATED_ELEMS {
+                continue; // small tiers are too noisy to gate
+            }
+            let key = (
+                base_row.get("format").as_str().unwrap_or(""),
+                base_row.get("dist").as_str().unwrap_or(""),
+                elements,
+            );
+            let Some(fresh_row) = fresh.get("rows").as_arr().unwrap_or(&[]).iter().find(|r| {
+                r.get("format").as_str().unwrap_or("") == key.0
+                    && r.get("dist").as_str().unwrap_or("") == key.1
+                    && r.get("elements").as_f64().unwrap_or(0.0) == key.2
+            }) else {
+                continue; // matrix changed shape; re-baseline to re-arm
+            };
+            for op in ["encode_speedup", "decode_speedup"] {
+                let (Some(b), Some(f)) =
+                    (base_row.get(op).as_f64(), fresh_row.get(op).as_f64())
+                else {
+                    continue;
+                };
+                compared += 1;
+                if f < b * BASELINE_RETENTION {
+                    regressions.push(format!(
+                        "{} {} {}: {op} {f:.2}× < {:.2}× (90% of baseline {b:.2}×)",
+                        key.0,
+                        key.1,
+                        key.2 as usize,
+                        b * BASELINE_RETENTION,
+                    ));
+                }
+            }
+        }
+        if regressions.is_empty() {
+            println!(
+                "baseline gate passed: {compared} speedup ratios within {:.0}% of {}",
+                (1.0 - BASELINE_RETENTION) * 100.0,
+                baseline_path.display()
+            );
+        } else {
+            anyhow::bail!("throughput regression vs baseline:\n  {}", regressions.join("\n  "));
+        }
+    } else {
+        println!(
+            "no baseline at {} — skipping the regression gate \
+             (set S2FP8_BENCH_WRITE_BASELINE=1 to create one)",
+            baseline_path.display()
+        );
+    }
+
+    anyhow::ensure!(
+        floor_failures.is_empty(),
+        "speedup floors failed:\n  {}",
+        floor_failures.join("\n  ")
+    );
+    println!(
+        "speedup floors passed: gated formats ≥ {ENCODE_SPEEDUP_FLOOR}× encode, \
+         ≥ {DECODE_SPEEDUP_FLOOR}× decode vs scalar reference at {GATED_ELEMS} elements"
+    );
     Ok(())
 }

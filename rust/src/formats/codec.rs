@@ -22,12 +22,21 @@
 //! }
 //! ```
 //!
-//! Encoding of large tensors is chunk-parallel across the host cores;
-//! decoding offers [`Codec::decode_into`] / [`QuantizedTensor::decode_into`]
-//! so repeated decodes (weight rebinding, benches) reuse one buffer. The
-//! stochastic-rounding S2FP8 variant derives its per-element randomness
-//! from a stateless hash of the element index, so its output is
-//! bit-deterministic regardless of how the encode was chunked or threaded.
+//! Encoding of large tensors is chunk-parallel across the host cores
+//! (capped by the `S2FP8_CODEC_THREADS` env knob); decoding offers
+//! [`Codec::decode_into`] / [`QuantizedTensor::decode_into`] so repeated
+//! decodes (weight rebinding, benches) reuse one buffer. Byte-wide
+//! formats decode through fused 256-entry tables ([`lut`], cached per
+//! tensor for the S2FP8 family), the FP8 encoders are branch-free
+//! bit-twiddling ([`fp8::encode_fast`], [`fp8e4m3::encode_fast`]), and
+//! the S2FP8 encode computes each element's `log2` exactly once, shared
+//! between the stats fit and the squeeze (see DESIGN.md "Codec hot
+//! path"). Every one of these paths is **bitwise identical** to the
+//! retained naive reference in [`super::scalar_ref`] — enforced by
+//! `tests/prop_formats.rs`. The stochastic-rounding S2FP8 variant derives
+//! its per-element randomness from a stateless hash of the element index,
+//! so its output is bit-deterministic regardless of how the encode was
+//! chunked or threaded.
 //!
 //! To add a new format: implement the element conversions in a sibling
 //! module, add a [`FormatKind`] variant (name/parse/bits), give it a
@@ -36,8 +45,10 @@
 //! analysis sweeps, the perf benches — picks the format up through the
 //! trait. See DESIGN.md "Codec API".
 
+use std::sync::{Arc, OnceLock};
+
 use super::traits::FormatKind;
-use super::{bf16, fp16, fp8, fp8e4m3, s2fp8};
+use super::{bf16, fp16, fp8, fp8e4m3, lut, s2fp8};
 
 /// Framing magic for a serialized [`QuantizedTensor`].
 pub const QT_MAGIC: &[u8; 4] = b"S2QT";
@@ -94,7 +105,7 @@ pub enum CodecError {
 /// little-endian for multi-byte formats), the logical shape, and — for the
 /// S2FP8 family — the fitted per-tensor (α, β). Self-describing: decoding
 /// needs no external state beyond this struct.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Clone)]
 pub struct QuantizedTensor {
     kind: FormatKind,
     shape: Vec<usize>,
@@ -102,6 +113,37 @@ pub struct QuantizedTensor {
     /// (α, β) of the shift/squeeze transform; `Some` iff
     /// `kind.uses_tensor_stats()` (enforced by every constructor).
     s2: Option<(f32, f32)>,
+    /// Lazily-built fused decode table for the S2FP8 family (the (α, β)
+    /// unsqueeze folded into a 256-entry gather table, see [`lut`]).
+    /// Built on first decode and reused by every subsequent
+    /// `decode`/`decode_into`/`decode_range`/[`RangeDecoder`] on this
+    /// tensor — serve's weight store decoding one tensor in row slices
+    /// pays one table build, not one per call. Derived state only:
+    /// ignored by `PartialEq`, shared (via `Arc`) by `Clone`, and
+    /// invalidated when a codec refills the tensor in place.
+    s2_lut: OnceLock<Arc<[f32; 256]>>,
+}
+
+/// Equality is over the logical tensor (kind, shape, payload, α/β); the
+/// cached decode table is derived state and never observed.
+impl PartialEq for QuantizedTensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.kind == other.kind
+            && self.shape == other.shape
+            && self.s2 == other.s2
+            && self.payload == other.payload
+    }
+}
+
+impl std::fmt::Debug for QuantizedTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("QuantizedTensor")
+            .field("kind", &self.kind)
+            .field("shape", &self.shape)
+            .field("payload", &self.payload)
+            .field("s2", &self.s2)
+            .finish()
+    }
 }
 
 impl QuantizedTensor {
@@ -110,7 +152,7 @@ impl QuantizedTensor {
     /// reused) on every call. The (α, β) placeholder is the identity.
     pub fn empty(kind: FormatKind) -> Self {
         let s2 = kind.uses_tensor_stats().then_some((1.0, 0.0));
-        QuantizedTensor { kind, shape: vec![0], payload: Vec::new(), s2 }
+        QuantizedTensor { kind, shape: vec![0], payload: Vec::new(), s2, s2_lut: OnceLock::new() }
     }
 
     /// Internal post-encode fixup: the payload has just been written by a
@@ -123,6 +165,9 @@ impl QuantizedTensor {
         self.shape.clear();
         self.shape.push(elems);
         self.s2 = s2;
+        // the tensor now holds different data under possibly different
+        // (α, β) — a stale cached decode table would decode wrong values
+        self.s2_lut = OnceLock::new();
     }
 
     /// Validating constructor from raw parts (checkpoint readers, tests).
@@ -145,7 +190,7 @@ impl QuantizedTensor {
             (false, true) => return Err(CodecError::BadStats("present for an element-wise format")),
             _ => {}
         }
-        Ok(QuantizedTensor { kind, shape, payload, s2 })
+        Ok(QuantizedTensor { kind, shape, payload, s2, s2_lut: OnceLock::new() })
     }
 
     pub fn kind(&self) -> FormatKind {
@@ -205,21 +250,30 @@ impl QuantizedTensor {
 
     /// Decode into `out`, reusing its allocation (resized to fit, every
     /// element overwritten). The tensor is self-describing, so this never
-    /// fails; chunk-parallel for large tensors.
+    /// fails; chunk-parallel for large tensors. Byte-wide formats decode
+    /// as one table gather per element (see [`lut`]).
     pub fn decode_into(&self, out: &mut Vec<f32>) {
         let n = self.len();
         // Every decode arm overwrites all of out[0..n]; resize only
         // zero-fills newly grown tail elements, so buffer reuse pays no
         // per-decode fill.
         out.resize(n, 0.0);
-        let bpe = bytes_per_element(self.kind);
-        decode_chunked(&self.payload, bpe, out, &|p, o| self.decode_payload(p, o));
+        if let Some(t) = self.byte_table() {
+            // resolve the table once, outside the parallel chunk loop
+            decode_chunked(&self.payload, 1, out, &|p, o| lut::gather(t, p, o));
+        } else {
+            let bpe = bytes_per_element(self.kind);
+            decode_chunked(&self.payload, bpe, out, &|p, o| self.decode_payload_wide(p, o));
+        }
     }
 
     /// Decode elements `[start, start + out.len())` into `out` — the
     /// chunk-view primitive behind streaming consumers (the distributed
     /// gradient reduce accumulates large wire tensors through a small
     /// reusable scratch instead of materializing each one in full).
+    /// Repeated range calls on one tensor reuse its cached decode table
+    /// (built on the first call) — serve's weight store and the reduce
+    /// loop pay no per-call dispatch or table rebuild.
     ///
     /// Panics if the range runs past the tensor (an internal-caller
     /// contract, like slice indexing).
@@ -227,13 +281,35 @@ impl QuantizedTensor {
         let bpe = bytes_per_element(self.kind);
         let end = start + out.len();
         assert!(end <= self.len(), "decode_range {start}..{end} past len {}", self.len());
-        self.decode_payload(&self.payload[start * bpe..end * bpe], out);
+        if let Some(t) = self.byte_table() {
+            lut::gather(t, &self.payload[start..end], out);
+        } else {
+            self.decode_payload_wide(&self.payload[start * bpe..end * bpe], out);
+        }
     }
 
-    /// Sequential element decode of one payload slice (shared by the
-    /// chunk-parallel [`Self::decode_into`] and [`Self::decode_range`];
-    /// no per-element state, so any chunking gives identical bits).
-    fn decode_payload(&self, p: &[u8], o: &mut [f32]) {
+    /// The 256-entry decode table of a byte-wide tensor: the static
+    /// format table for plain FP8, the cached per-tensor fused table
+    /// (α/β folded in) for the S2FP8 family; `None` for multi-byte
+    /// formats. Entries are built with the exact scalar decode
+    /// expressions, so table decodes are bitwise identical to
+    /// [`super::scalar_ref::decode`].
+    fn byte_table(&self) -> Option<&[f32; 256]> {
+        match self.kind {
+            FormatKind::Fp8 => Some(lut::e5m2_table()),
+            FormatKind::Fp8E4m3 => Some(lut::e4m3_table()),
+            FormatKind::S2fp8 | FormatKind::S2fp8Sr => {
+                let (alpha, beta) = self.s2.expect("constructors enforce α/β for S2FP8");
+                Some(&**self.s2_lut.get_or_init(|| lut::s2_table(alpha, beta)))
+            }
+            _ => None,
+        }
+    }
+
+    /// Sequential element decode of one payload slice for the multi-byte
+    /// formats (byte-wide formats go through [`Self::byte_table`]); no
+    /// per-element state, so any chunking gives identical bits.
+    fn decode_payload_wide(&self, p: &[u8], o: &mut [f32]) {
         match self.kind {
             FormatKind::Fp32 => {
                 for (c, y) in p.chunks_exact(4).zip(o.iter_mut()) {
@@ -250,23 +326,7 @@ impl QuantizedTensor {
                     *y = bf16::decode(u16::from_le_bytes([c[0], c[1]]));
                 }
             }
-            FormatKind::Fp8 => {
-                for (&b, y) in p.iter().zip(o.iter_mut()) {
-                    *y = fp8::decode_lut(b);
-                }
-            }
-            FormatKind::Fp8E4m3 => {
-                for (&b, y) in p.iter().zip(o.iter_mut()) {
-                    *y = fp8e4m3::decode_lut(b);
-                }
-            }
-            FormatKind::S2fp8 | FormatKind::S2fp8Sr => {
-                let (alpha, beta) = self.s2.expect("constructors enforce α/β for S2FP8");
-                let c = s2fp8::S2fp8Codec { alpha, beta };
-                for (&b, y) in p.iter().zip(o.iter_mut()) {
-                    *y = c.unsqueeze(fp8::decode_lut(b));
-                }
-            }
+            _ => unreachable!("byte-wide formats decode through byte_table"),
         }
     }
 
@@ -414,58 +474,40 @@ impl QuantizedTensor {
 /// A per-tensor decode plan resolved **once** instead of per refill: the
 /// hot path of the distributed reduce walks a large wire tensor through a
 /// small scratch buffer via repeated [`QuantizedTensor::decode_range`]
-/// calls, and each of those re-matched the [`FormatKind`] and rebuilt the
-/// S2FP8 unsqueeze transform. `RangeDecoder::new` hoists that dispatch out
-/// of the loop — for every 1-byte format it fuses the format decode and
-/// the per-tensor (α, β) transform into a single 256-entry f32 table, so a
-/// refill is one table lookup per element. Bitwise identical to
+/// calls. For every 1-byte format the plan is the tensor's fused 256-entry
+/// decode table (format decode composed with the per-tensor (α, β)
+/// transform, see [`lut`]) — **borrowed from the tensor's own cache**, so
+/// constructing a `RangeDecoder` after any prior decode of the same tensor
+/// is free, and tables are never built twice. Bitwise identical to
 /// [`QuantizedTensor::decode_range`] for every format (the table entries
 /// are computed with the exact per-element expressions).
 pub struct RangeDecoder<'a> {
     qt: &'a QuantizedTensor,
-    plan: DecodePlan,
+    plan: DecodePlan<'a>,
 }
 
-enum DecodePlan {
+enum DecodePlan<'a> {
     F32,
     F16,
     Bf16,
-    /// Fused per-byte decode table (FP8 family and S2FP8: format decode
-    /// composed with the tensor's unsqueeze where applicable).
-    Lut(Box<[f32; 256]>),
+    /// Fused per-byte decode table (FP8 family and S2FP8), borrowed from
+    /// the static format table or the tensor's cached fused table.
+    Lut(&'a [f32; 256]),
 }
 
 impl<'a> RangeDecoder<'a> {
-    /// Resolve the decode plan for `qt` (one `FormatKind` match, one LUT
-    /// build for byte-wide formats).
+    /// Resolve the decode plan for `qt` (one `FormatKind` match; byte-wide
+    /// formats reuse the tensor's cached table, building it only if this
+    /// is the first decode of the tensor).
     pub fn new(qt: &'a QuantizedTensor) -> Self {
-        let plan = match qt.kind {
-            FormatKind::Fp32 => DecodePlan::F32,
-            FormatKind::Fp16 => DecodePlan::F16,
-            FormatKind::Bf16 => DecodePlan::Bf16,
-            FormatKind::Fp8 => {
-                let mut lut = Box::new([0.0f32; 256]);
-                for (b, slot) in lut.iter_mut().enumerate() {
-                    *slot = fp8::decode_lut(b as u8);
-                }
-                DecodePlan::Lut(lut)
-            }
-            FormatKind::Fp8E4m3 => {
-                let mut lut = Box::new([0.0f32; 256]);
-                for (b, slot) in lut.iter_mut().enumerate() {
-                    *slot = fp8e4m3::decode_lut(b as u8);
-                }
-                DecodePlan::Lut(lut)
-            }
-            FormatKind::S2fp8 | FormatKind::S2fp8Sr => {
-                let (alpha, beta) = qt.s2.expect("constructors enforce α/β for S2FP8");
-                let c = s2fp8::S2fp8Codec { alpha, beta };
-                let mut lut = Box::new([0.0f32; 256]);
-                for (b, slot) in lut.iter_mut().enumerate() {
-                    *slot = c.unsqueeze(fp8::decode_lut(b as u8));
-                }
-                DecodePlan::Lut(lut)
-            }
+        let plan = match qt.byte_table() {
+            Some(t) => DecodePlan::Lut(t),
+            None => match qt.kind {
+                FormatKind::Fp32 => DecodePlan::F32,
+                FormatKind::Fp16 => DecodePlan::F16,
+                FormatKind::Bf16 => DecodePlan::Bf16,
+                _ => unreachable!("byte-wide formats have a byte_table"),
+            },
         };
         RangeDecoder { qt, plan }
     }
@@ -599,12 +641,28 @@ fn kind_from_tag(tag: u8) -> Result<FormatKind, CodecError> {
 /// Elements below this stay on the calling thread.
 const PAR_MIN_ELEMS: usize = 1 << 16;
 
+/// Upper bound on codec worker threads: `S2FP8_CODEC_THREADS` if set to a
+/// positive integer, else 16. Read once; the env knob exists so benches
+/// and CI can pin the thread count (a committed perf baseline is only
+/// comparable when both runs used the same pin — see DESIGN.md "Codec hot
+/// path").
+fn worker_limit() -> usize {
+    static LIMIT: OnceLock<usize> = OnceLock::new();
+    *LIMIT.get_or_init(|| {
+        std::env::var("S2FP8_CODEC_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(16)
+    })
+}
+
 fn worker_count(n: usize) -> usize {
     if n < PAR_MIN_ELEMS {
         return 1;
     }
     let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-    hw.min(n.div_ceil(PAR_MIN_ELEMS)).min(16)
+    hw.min(n.div_ceil(PAR_MIN_ELEMS)).min(worker_limit())
 }
 
 /// Run `enc(base_element_index, input_chunk, output_chunk)` over contiguous
@@ -649,6 +707,61 @@ fn encode_chunked(
             base += take;
         }
     });
+}
+
+/// Parallel element-wise `f32 → f32` map (the `log2` pass of the fused
+/// S2FP8 encode). Same chunking scheme as [`encode_chunked`]; `f` is
+/// stateless per element, so any chunking gives identical bits.
+fn map_chunked(xs: &[f32], out: &mut [f32], f: &(impl Fn(f32) -> f32 + Sync)) {
+    debug_assert_eq!(xs.len(), out.len());
+    let workers = worker_count(xs.len());
+    if workers <= 1 {
+        for (x, y) in xs.iter().zip(out.iter_mut()) {
+            *y = f(*x);
+        }
+        return;
+    }
+    let per = xs.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest_x = xs;
+        let mut rest_o = out;
+        while !rest_x.is_empty() {
+            let take = per.min(rest_x.len());
+            let (cx, rx) = rest_x.split_at(take);
+            let (co, ro) = rest_o.split_at_mut(take);
+            rest_x = rx;
+            rest_o = ro;
+            s.spawn(move || {
+                for (x, y) in cx.iter().zip(co.iter_mut()) {
+                    *y = f(*x);
+                }
+            });
+        }
+    });
+}
+
+thread_local! {
+    /// Per-thread `log2|x|` cache for the fused S2FP8 encode: filled in
+    /// parallel, read by the sequential stats accumulation and again by
+    /// the squeeze walk — one `log2` per element instead of two, zero
+    /// steady-state allocation (the buffer is retained and reused by
+    /// every encode on this thread).
+    static LOG2_SCRATCH: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Run `body` with `logs[i] == xs[i].abs().log2()` for every element,
+/// computed in parallel into the thread-local scratch. The cached values
+/// are the exact f32s the scalar path would compute per element, which is
+/// what keeps the fused encode bitwise identical to
+/// [`super::scalar_ref::encode_into`].
+fn with_log2_cache<R>(xs: &[f32], body: impl FnOnce(&[f32]) -> R) -> R {
+    LOG2_SCRATCH.with(|cell| {
+        let mut logs = cell.borrow_mut();
+        // resize only zero-fills a grown tail; every slot is overwritten
+        logs.resize(xs.len(), 0.0);
+        map_chunked(xs, &mut logs, &|x| x.abs().log2());
+        body(&logs)
+    })
 }
 
 /// Parallel counterpart for decode: `dec(payload_chunk, output_chunk)`.
@@ -786,7 +899,7 @@ impl Codec for Fp8E4m3Codec {
     fn encode_into(&self, xs: &[f32], out: &mut QuantizedTensor) {
         encode_chunked(xs, 1, &mut out.payload, &|_, c, o| {
             for (x, b) in c.iter().zip(o.iter_mut()) {
-                *b = fp8e4m3::encode(*x);
+                *b = fp8e4m3::encode_fast(*x);
             }
         });
         out.set_flat(FormatKind::Fp8E4m3, xs.len(), None);
@@ -807,13 +920,23 @@ impl Codec for S2fp8RneCodec {
     }
 
     fn encode_into(&self, xs: &[f32], out: &mut QuantizedTensor) {
-        // The statistics pass stays sequential so the fitted (α, β) are
-        // bit-identical to `s2fp8::truncate_tensor`'s.
-        let c = s2fp8::S2fp8Codec::fit(xs);
-        encode_chunked(xs, 1, &mut out.payload, &|_, ch, o| {
-            for (x, b) in ch.iter().zip(o.iter_mut()) {
-                *b = fp8::encode_fast(c.squeeze(*x));
-            }
+        // Fused hot path: one parallel log2 pass feeds both the stats fit
+        // and the squeeze walk. The order-sensitive f64 accumulation
+        // (`stats_from_logs`) stays sequential over the cached logs, so
+        // the fitted (α, β) are bit-identical to `s2fp8::fit`'s — the
+        // only serial work left is one add/compare per element.
+        let c = with_log2_cache(xs, |logs| {
+            let c = match s2fp8::stats_from_logs(xs, logs) {
+                Some(s) => s2fp8::S2fp8Codec::from_stats(s),
+                None => s2fp8::S2fp8Codec::identity(),
+            };
+            encode_chunked(xs, 1, &mut out.payload, &|base, ch, o| {
+                let ls = &logs[base..base + ch.len()];
+                for ((x, l), b) in ch.iter().zip(ls.iter()).zip(o.iter_mut()) {
+                    *b = fp8::encode_fast(c.squeeze_from_log(*x, *l));
+                }
+            });
+            c
         });
         out.set_flat(FormatKind::S2fp8, xs.len(), Some((c.alpha, c.beta)));
         crate::telemetry::quant::observe_e5m2_encode("s2fp8", xs, out.payload(), out.s2_params());
@@ -835,8 +958,9 @@ impl Default for S2fp8SrCodec {
 }
 
 /// Uniform in [0, 1) from a splitmix64-style finalizer over (seed, index).
+/// `pub(crate)` so [`super::scalar_ref`] reproduces the exact SR stream.
 #[inline]
-fn sr_u01(seed: u64, i: u64) -> f32 {
+pub(crate) fn sr_u01(seed: u64, i: u64) -> f32 {
     let mut z = seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
@@ -854,13 +978,28 @@ impl Codec for S2fp8SrCodec {
     }
 
     fn encode_into(&self, xs: &[f32], out: &mut QuantizedTensor) {
-        let c = s2fp8::S2fp8Codec::fit(xs);
+        // Same fused single-log2 structure as `S2fp8RneCodec` (see there);
+        // the index-hashed SR draw keeps chunking-independence.
         let seed = self.seed;
-        encode_chunked(xs, 1, &mut out.payload, &|base, ch, o| {
-            for (i, (x, b)) in ch.iter().zip(o.iter_mut()).enumerate() {
-                let u = sr_u01(seed, (base + i) as u64);
-                *b = fp8::encode(fp8::truncate_stochastic(c.squeeze(*x), u));
-            }
+        let c = with_log2_cache(xs, |logs| {
+            let c = match s2fp8::stats_from_logs(xs, logs) {
+                Some(s) => s2fp8::S2fp8Codec::from_stats(s),
+                None => s2fp8::S2fp8Codec::identity(),
+            };
+            encode_chunked(xs, 1, &mut out.payload, &|base, ch, o| {
+                let ls = &logs[base..base + ch.len()];
+                for (i, ((x, l), b)) in ch.iter().zip(ls.iter()).zip(o.iter_mut()).enumerate() {
+                    let u = sr_u01(seed, (base + i) as u64);
+                    // truncate_stochastic returns a value already on the
+                    // FP8 grid, so the branch-free encoder is bitwise
+                    // safe here
+                    *b = fp8::encode_fast(fp8::truncate_stochastic(
+                        c.squeeze_from_log(*x, *l),
+                        u,
+                    ));
+                }
+            });
+            c
         });
         out.set_flat(FormatKind::S2fp8Sr, xs.len(), Some((c.alpha, c.beta)));
         crate::telemetry::quant::observe_e5m2_encode(

@@ -139,63 +139,51 @@ pub fn truncate(x: f32) -> f32 {
     decode_lut(encode_fast(x))
 }
 
-/// Bit-twiddled FP8 encode. Integer-only on the common path:
-/// round-to-nearest-even happens by adding `(grid_half - 1) + lsb` to the
-/// f32 bit pattern (carry ripples into the exponent exactly when the
-/// mantissa overflows the grid), then the E5M2 fields are extracted.
-#[inline]
+/// Branch-free bit-twiddled FP8 encode — the codec hot path (see
+/// DESIGN.md "Codec hot path"). Both magnitude candidates are computed
+/// unconditionally and picked with compares, so the loop body is
+/// straight-line and autovectorization-friendly:
+///
+/// * **normal region** (`|x| ≥ 2^-14`): round-to-nearest-even on the low
+///   21 f32 mantissa bits by integer carry — `abs + 0x000F_FFFF + lsb`
+///   ripples into the exponent exactly when the mantissa overflows its
+///   binade — then the E5M2 magnitude is `(rounded >> 21) − 448`
+///   (re-biasing 127 → 15 folded into the shifted subtraction), clamped
+///   to the max-normal code `0x7B` (saturation, Inf included);
+/// * **denormal region** (`|x| < 2^-14`): adding `128.0 = 2^7` makes the
+///   FP adder itself round `|x|` onto the `2^-16` grid (the ulp of the
+///   `2^7` binade) with RNE; the grid index — the magnitude code `0..=4`,
+///   where 4 *is* the min-normal code `0x04` — sits in the sum's low
+///   mantissa bits.
+///
+/// Equivalence with the arithmetic [`encode`] is pinned by a dense-sweep
+/// unit test here, an exhaustive all-`u32` sweep (`#[ignore]`, release
+/// runs), and the `scalar_ref` property suite in `tests/prop_formats.rs`.
+#[inline(always)]
 pub fn encode_fast(x: f32) -> u8 {
     let bits = x.to_bits();
     let sign = ((bits >> 31) as u8) << 7;
     let abs = bits & 0x7FFF_FFFF;
-    // NaN
+    // normal candidate: integer-carry RNE, rebias, saturation clamp
+    let lsb = (abs >> 21) & 1;
+    let rounded = abs + 0x000F_FFFF + lsb;
+    let norm = ((rounded >> 21).wrapping_sub(448)).min(0x7B) as u8;
+    // denormal candidate: magic-add RNE onto the 2^-16 grid
+    let denorm = ((f32::from_bits(abs) + 128.0).to_bits() & 0x007F_FFFF) as u8;
+    let mag = if abs >= 0x3880_0000 { norm } else { denorm };
     if abs > 0x7F80_0000 {
-        return CODE_NAN;
+        CODE_NAN // NaN propagates, sign dropped
+    } else {
+        sign | mag
     }
-    // |x| > max normal (incl. Inf) saturates; the RNE carry below can also
-    // reach the boundary, handled after rounding.
-    const MAX_BITS: u32 = 0x4760_0000; // 57344.0f32
-    // normal-FP8 region: exponent ≥ -14 ⇔ abs ≥ 2^-14
-    const MIN_NORMAL_BITS: u32 = 0x3880_0000; // 2^-14
-    if abs >= MIN_NORMAL_BITS {
-        // RNE on the low 21 mantissa bits (keep 2 of 23)
-        let lsb = (abs >> 21) & 1;
-        let rounded = abs + 0x000F_FFFF + lsb;
-        if rounded >= MAX_BITS + 0x0020_0000 {
-            // would round above max normal → saturate
-            return sign | 0x7B;
-        }
-        if rounded >= 0x4780_0000 {
-            // rounded into [57344's binade top, 65536) → still max normal
-            return sign | 0x7B;
-        }
-        let e_field = (((rounded >> 23) as i32) - 127 + BIAS) as u8;
-        let m = ((rounded >> 21) & 0x3) as u8;
-        return sign | (e_field << MANT_BITS) | m;
-    }
-    // denormal region: grid step 2^-16; round |x|/2^-16 RNE (exact float op)
-    let ax = f32::from_bits(abs);
-    let q = (ax * 65536.0).round_ties_even(); // exact: scaling by 2^16
-    if q == 0.0 {
-        return sign;
-    }
-    if q >= 4.0 {
-        return sign | 0x04; // rounded up to min normal 2^-14
-    }
-    sign | (q as u8)
 }
 
-/// 256-entry decode lookup table.
+/// 256-entry decode lookup table (shared with [`super::lut`]; per-tensor
+/// decode loops gather from the table directly instead of calling this
+/// per element).
 #[inline]
 pub fn decode_lut(code: u8) -> f32 {
-    static LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
-    LUT.get_or_init(|| {
-        let mut t = [0.0f32; 256];
-        for (c, slot) in t.iter_mut().enumerate() {
-            *slot = decode(c as u8);
-        }
-        t
-    })[code as usize]
+    super::lut::e5m2_table()[code as usize]
 }
 
 /// Reference arithmetic implementation of [`truncate`] (the algorithm
@@ -440,6 +428,19 @@ mod tests {
             if !x.is_nan() {
                 assert_eq!(slow, fast, "code mismatch at {x}");
             }
+        }
+    }
+
+    /// Full 2^32 bit-pattern sweep of the branch-free encoder against the
+    /// arithmetic reference. Too slow for the debug test suite; run with
+    /// `cargo test --release -- --ignored fp8::tests::encode_fast_exhaustive`.
+    #[test]
+    #[ignore = "exhaustive 2^32 sweep; run manually in release"]
+    fn encode_fast_matches_encode_exhaustive() {
+        for bits in 0u64..=u32::MAX as u64 {
+            let x = f32::from_bits(bits as u32);
+            let (slow, fast) = (encode(x), encode_fast(x));
+            assert_eq!(slow, fast, "bits {bits:#010x} x={x}: slow {slow:#04x} fast {fast:#04x}");
         }
     }
 

@@ -94,23 +94,50 @@ pub fn encode(x: f32) -> u8 {
     }
 }
 
-/// 256-entry decode lookup table (hot decode path).
+/// Branch-free bit-twiddled E4M3 encode — same construction as
+/// [`super::fp8::encode_fast`] with this format's constants (see
+/// DESIGN.md "Codec hot path"): integer-carry RNE on the low 20 mantissa
+/// bits for normals (`|x| ≥ 2^-6`), rebias 127 → 7 as `(rounded >> 20) −
+/// 960`, saturation clamp at the max-normal code `0x7E` (E4M3 reclaims
+/// `0x7F` for NaN, so the clamp also keeps rounding from ever
+/// fabricating a NaN); denormals round onto the `2^-9` grid by adding
+/// `16384.0 = 2^14` (grid step = that binade's ulp) and reading the
+/// sum's low mantissa bits. Equivalence with the arithmetic [`encode`]
+/// is pinned by a dense sweep, an exhaustive `#[ignore]` sweep, and the
+/// `scalar_ref` property suite.
+#[inline(always)]
+pub fn encode_fast(x: f32) -> u8 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 31) as u8) << 7;
+    let abs = bits & 0x7FFF_FFFF;
+    // normal candidate: integer-carry RNE, rebias, saturation clamp
+    let lsb = (abs >> 20) & 1;
+    let rounded = abs + 0x0007_FFFF + lsb;
+    let norm = ((rounded >> 20).wrapping_sub(960)).min(0x7E) as u8;
+    // denormal candidate: magic-add RNE onto the 2^-9 grid
+    let denorm = ((f32::from_bits(abs) + 16384.0).to_bits() & 0x007F_FFFF) as u8;
+    let mag = if abs >= 0x3C80_0000 { norm } else { denorm };
+    if abs > 0x7F80_0000 {
+        CODE_NAN // NaN propagates, sign dropped
+    } else {
+        sign | mag
+    }
+}
+
+/// 256-entry decode lookup table (shared with [`super::lut`]; per-tensor
+/// decode loops gather from the table directly instead of calling this
+/// per element).
 #[inline]
 pub fn decode_lut(code: u8) -> f32 {
-    static LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
-    LUT.get_or_init(|| {
-        let mut t = [0.0f32; 256];
-        for (c, slot) in t.iter_mut().enumerate() {
-            *slot = decode(c as u8);
-        }
-        t
-    })[code as usize]
+    super::lut::e4m3_table()[code as usize]
 }
 
 /// Truncate to E4M3 precision: `decode(encode(x))` (RNE, saturating).
+/// Rides the branch-free encoder and the decode table; bitwise identical
+/// to the arithmetic pair by the `encode_fast` equivalence tests.
 #[inline]
 pub fn truncate(x: f32) -> f32 {
-    decode_lut(encode(x))
+    decode_lut(encode_fast(x))
 }
 
 /// Every *finite* representable value, ascending (format introspection).
@@ -219,6 +246,61 @@ mod tests {
             assert!(y >= prev, "non-monotone at {x}: {y} < {prev}");
             prev = y;
             x *= 1.0173;
+        }
+    }
+
+    #[test]
+    fn encode_fast_matches_encode_everywhere_interesting() {
+        // specials + every code's decoded value ± a nudge + dense log sweep
+        let mut inputs: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1.0625, // tie to even (1.0)
+            1.1875, // tie to even (1.25)
+            MIN_POSITIVE,
+            MIN_POSITIVE / 2.0,
+            MIN_POSITIVE * 0.51,
+            1.5 * MIN_POSITIVE,
+            MIN_NORMAL,
+            0.9999 * MIN_NORMAL,
+            MAX_NORMAL,
+            449.0,
+            456.0, // midpoint of the top grid step, ties to even (448)
+            460.0,
+            464.0,
+            1e9,
+            3e38,
+            1e-45,
+        ];
+        for v in all_finite_values() {
+            inputs.push(v);
+            inputs.push(v * 1.0001);
+            inputs.push(v * 0.9999);
+        }
+        let mut x = 1e-12f32;
+        while x < 1e12 {
+            inputs.push(x);
+            inputs.push(-x);
+            x *= 1.00917;
+        }
+        for x in inputs {
+            let (slow, fast) = (encode(x), encode_fast(x));
+            assert_eq!(slow, fast, "x={x} ({:#010x})", x.to_bits());
+        }
+    }
+
+    /// Full 2^32 bit-pattern sweep; run with
+    /// `cargo test --release -- --ignored fp8e4m3::tests::encode_fast_exhaustive`.
+    #[test]
+    #[ignore = "exhaustive 2^32 sweep; run manually in release"]
+    fn encode_fast_matches_encode_exhaustive() {
+        for bits in 0u64..=u32::MAX as u64 {
+            let x = f32::from_bits(bits as u32);
+            let (slow, fast) = (encode(x), encode_fast(x));
+            assert_eq!(slow, fast, "bits {bits:#010x} x={x}: slow {slow:#04x} fast {fast:#04x}");
         }
     }
 

@@ -1,0 +1,116 @@
+//! Shared 256-entry decode tables for the byte-wide formats — the decode
+//! half of the codec hot path (see DESIGN.md "Codec hot path").
+//!
+//! An FP8 payload byte has only 256 possible values, so decoding is a
+//! table gather instead of per-element field extraction. For the plain
+//! FP8 formats the table is static (built once per process); for the
+//! S2FP8 family the per-tensor (α, β) unsqueeze is **folded into the
+//! table**, so the whole `FP8-decode ∘ unsqueeze` pipeline — two `log2`/
+//! `exp2` calls per element on the scalar path — collapses to one load.
+//! Entries are computed with the exact per-element scalar expressions
+//! ([`super::fp8::decode`], [`super::fp8e4m3::decode`],
+//! [`super::s2fp8::S2fp8Codec::unsqueeze`]), which is what makes every
+//! table-driven decode bitwise identical to the retained scalar
+//! reference ([`super::scalar_ref`]); `tests/prop_formats.rs` checks all
+//! 256 bytes exhaustively per format.
+//!
+//! [`QuantizedTensor`](super::QuantizedTensor) caches its fitted S2FP8
+//! table in a `OnceLock<Arc<…>>`, so repeated decodes of one tensor
+//! (serve's weight store materializing row slices, the dist reduce
+//! refilling scratch windows) build it once.
+
+use std::sync::{Arc, OnceLock};
+
+use super::{fp8, fp8e4m3, s2fp8};
+
+/// Static E5M2 decode table (`fp8::decode` of every byte).
+pub fn e5m2_table() -> &'static [f32; 256] {
+    static T: OnceLock<[f32; 256]> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut t = [0.0f32; 256];
+        for (c, slot) in t.iter_mut().enumerate() {
+            *slot = fp8::decode(c as u8);
+        }
+        t
+    })
+}
+
+/// Static E4M3 decode table (`fp8e4m3::decode` of every byte).
+pub fn e4m3_table() -> &'static [f32; 256] {
+    static T: OnceLock<[f32; 256]> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut t = [0.0f32; 256];
+        for (c, slot) in t.iter_mut().enumerate() {
+            *slot = fp8e4m3::decode(c as u8);
+        }
+        t
+    })
+}
+
+/// Fill `table` with the fused `unsqueeze(fp8::decode(b))` of every byte
+/// for the given (α, β) — the S2FP8 decode pipeline folded into one
+/// gather table.
+pub fn s2_fill(table: &mut [f32; 256], alpha: f32, beta: f32) {
+    let c = s2fp8::S2fp8Codec { alpha, beta };
+    for (b, slot) in table.iter_mut().enumerate() {
+        *slot = c.unsqueeze(fp8::decode(b as u8));
+    }
+}
+
+/// Allocate the fused S2FP8 table for (α, β) (shared via `Arc` so a
+/// tensor's cached table survives clones for free).
+pub fn s2_table(alpha: f32, beta: f32) -> Arc<[f32; 256]> {
+    let mut t = [0.0f32; 256];
+    s2_fill(&mut t, alpha, beta);
+    Arc::new(t)
+}
+
+/// The table-gather decode loop: one load per element, no per-element
+/// dispatch or arithmetic. Trailing payload bytes beyond `out.len()` are
+/// ignored (caller slices exactly in practice).
+#[inline]
+pub fn gather(table: &[f32; 256], payload: &[u8], out: &mut [f32]) {
+    for (&b, y) in payload.iter().zip(out.iter_mut()) {
+        *y = table[b as usize];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_tables_match_scalar_decodes() {
+        for c in 0u16..=255 {
+            let c = c as u8;
+            let (a, b) = (fp8::decode(c), e5m2_table()[c as usize]);
+            assert!(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()), "e5m2 {c:#04x}");
+            let (a, b) = (fp8e4m3::decode(c), e4m3_table()[c as usize]);
+            assert!(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()), "e4m3 {c:#04x}");
+        }
+    }
+
+    #[test]
+    fn s2_table_folds_the_unsqueeze() {
+        let (alpha, beta) = (2.5f32, 40.0f32);
+        let c = s2fp8::S2fp8Codec { alpha, beta };
+        let t = s2_table(alpha, beta);
+        for b in 0u16..=255 {
+            let want = c.unsqueeze(fp8::decode(b as u8));
+            let got = t[b as usize];
+            assert!(
+                want.to_bits() == got.to_bits() || (want.is_nan() && got.is_nan()),
+                "byte {b:#04x}: {want} vs {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn gather_is_a_plain_lookup() {
+        let t = e5m2_table();
+        let payload = [0x00u8, 0x3C, 0xBC, 0x7B];
+        let mut out = [0.0f32; 4];
+        gather(t, &payload, &mut out);
+        assert_eq!(out, [0.0, 1.0, -1.0, fp8::MAX_NORMAL]);
+    }
+}

@@ -19,6 +19,12 @@
 //!   transform (Eq. 1–5). Statistics (μ, m), factors (α, β), tensor
 //!   round-trip truncation, and packed compression via the codec layer.
 //! * [`bf16`] / [`fp16`] — the 16-bit comparison points of Tables A1/A2.
+//! * [`lut`] — the 256-entry decode tables behind the hot path: static
+//!   E5M2/E4M3 tables plus per-tensor S2FP8 tables that fold the (α, β)
+//!   unsqueeze into the entries (DESIGN.md "Codec hot path").
+//! * [`scalar_ref`] — the retained **naive scalar reference** codec: the
+//!   bitwise contract anchor for every optimized path and the baseline
+//!   `benches/perf_codec.rs` races against. Deliberately unoptimized.
 //! * [`traits`] — [`FormatKind`] (names, config/CLI parsing, storage
 //!   width, [`FormatKind::codec`]) and the static [`NumericFormat`]
 //!   metadata behind Table A1.
@@ -32,7 +38,9 @@ pub mod codec;
 pub mod fp16;
 pub mod fp8;
 pub mod fp8e4m3;
+pub mod lut;
 pub mod s2fp8;
+pub mod scalar_ref;
 pub mod traits;
 
 pub use codec::{Codec, CodecError, QuantizedTensor, RangeDecoder};

@@ -34,7 +34,13 @@
 //! [`super::codec`]).
 
 use super::codec::{Codec, CodecError, QuantizedTensor, S2fp8RneCodec};
-use super::fp8;
+use super::{fp8, lut};
+
+/// Element count above which the fused tensor truncation builds its
+/// 256-entry round-trip table (512 `log2`/`exp2` calls) instead of going
+/// per-element; below it the table build dominates. Either path is
+/// bitwise identical, so this is a pure perf knob.
+const FUSED_MIN_ELEMS: usize = 128;
 
 /// Tensor statistics of Eq. 3 (computed over non-zero elements).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -88,6 +94,35 @@ pub fn stats(xs: &[f32]) -> Option<Stats> {
     }
 }
 
+/// [`stats`] over **precomputed log-magnitudes**: `logs[i]` must equal
+/// `xs[i].abs().log2()` wherever `xs[i]` is nonzero and finite (other
+/// slots may hold anything — they are skipped on `xs[i]`, exactly as
+/// [`stats`] skips them). This is the sequential half of the fused codec
+/// encode: the `log2` calls are hoisted into a parallel pass, while the
+/// order-sensitive f64 accumulation below stays element-ordered — the
+/// resulting (μ, m), and therefore the fitted (α, β), are **bitwise
+/// identical** to [`stats`] on the same tensor.
+pub fn stats_from_logs(xs: &[f32], logs: &[f32]) -> Option<Stats> {
+    debug_assert_eq!(xs.len(), logs.len());
+    let mut sum = 0.0f64;
+    let mut max = f32::NEG_INFINITY;
+    let mut n = 0usize;
+    for (&x, &l) in xs.iter().zip(logs.iter()) {
+        if x != 0.0 && x.is_finite() {
+            sum += l as f64;
+            if l > max {
+                max = l;
+            }
+            n += 1;
+        }
+    }
+    if n == 0 {
+        None
+    } else {
+        Some(Stats { mu: (sum / n as f64) as f32, max, n_nonzero: n })
+    }
+}
+
 impl S2fp8Codec {
     /// Identity codec (α=1, β=0): plain FP8.
     pub fn identity() -> Self {
@@ -125,6 +160,24 @@ impl S2fp8Codec {
         }
     }
 
+    /// [`Self::squeeze`] of an element whose `log2|x|` is already known
+    /// (`l` must equal `x.abs().log2()` — the fused encode's cached
+    /// value). Bitwise identical to `squeeze(x)`: same expression, the
+    /// logarithm merely computed earlier. Non-finite `x` flows through
+    /// the same way (`l` is then ±∞/NaN and `exp2` propagates it).
+    #[inline]
+    pub fn squeeze_from_log(&self, x: f32, l: f32) -> f32 {
+        if x == 0.0 {
+            return x;
+        }
+        let y = exp2f(self.beta + self.alpha * l);
+        if x < 0.0 {
+            -y
+        } else {
+            y
+        }
+    }
+
     /// Inverse transform of one element: `x = ±(2^{−β} |y|)^{1/α}`.
     #[inline]
     pub fn unsqueeze(&self, y: f32) -> f32 {
@@ -150,9 +203,52 @@ impl S2fp8Codec {
 
     /// Eq. 5 truncation of a whole tensor (stats are *not* refitted;
     /// callers wanting the paper's per-tensor behaviour use
-    /// [`truncate_tensor`]).
+    /// [`truncate_tensor`]). Fused hot path for large tensors
+    /// ([`Self::truncate_into`]).
     pub fn truncate_vec(&self, xs: &[f32]) -> Vec<f32> {
-        xs.iter().map(|&x| self.truncate(x)).collect()
+        let mut out = vec![0.0f32; xs.len()];
+        self.truncate_into(xs, &mut out);
+        out
+    }
+
+    /// Eq. 5 truncation of a whole tensor into a caller buffer — the
+    /// fused hot path behind [`Self::truncate_vec`] and
+    /// [`truncate_tensor`]. The `decode ∘ unsqueeze` half of the
+    /// round-trip is folded into a 256-entry table built once per call
+    /// ([`lut::s2_fill`]), so each element costs one squeeze, one
+    /// branch-free FP8 encode and one table load — half the `log2`/`exp2`
+    /// calls of the per-element path. Bitwise identical to mapping
+    /// [`Self::truncate`] over `xs` (the table entries are computed with
+    /// the exact scalar expressions; NaNs pass through verbatim, payload
+    /// bits preserved).
+    ///
+    /// Panics if the buffers differ in length (internal-caller contract,
+    /// like slice indexing).
+    pub fn truncate_into(&self, xs: &[f32], out: &mut [f32]) {
+        assert_eq!(xs.len(), out.len(), "truncate_into: {} elements into {}", xs.len(), out.len());
+        if xs.len() < FUSED_MIN_ELEMS {
+            for (&x, y) in xs.iter().zip(out.iter_mut()) {
+                *y = self.truncate(x);
+            }
+            return;
+        }
+        let mut table = [0.0f32; 256];
+        lut::s2_fill(&mut table, self.alpha, self.beta);
+        for (&x, y) in xs.iter().zip(out.iter_mut()) {
+            *y = self.truncate_fused(&table, x);
+        }
+    }
+
+    /// One element of the fused path: ±0 round-trips through codes
+    /// 0x00/0x80 bit-exactly, so only NaN (returned verbatim by
+    /// [`Self::truncate`], payload included) needs a guard.
+    #[inline]
+    fn truncate_fused(&self, table: &[f32; 256], x: f32) -> f32 {
+        if x.is_nan() {
+            x
+        } else {
+            table[fp8::encode_fast(self.squeeze(x)) as usize]
+        }
     }
 }
 
@@ -164,11 +260,19 @@ pub fn truncate_tensor(xs: &[f32]) -> (Vec<f32>, S2fp8Codec) {
     (codec.truncate_vec(xs), codec)
 }
 
-/// In-place variant of [`truncate_tensor`].
+/// In-place variant of [`truncate_tensor`] (same fused table path).
 pub fn truncate_tensor_inplace(xs: &mut [f32]) -> S2fp8Codec {
     let codec = S2fp8Codec::fit(xs);
+    if xs.len() < FUSED_MIN_ELEMS {
+        for x in xs.iter_mut() {
+            *x = codec.truncate(*x);
+        }
+        return codec;
+    }
+    let mut table = [0.0f32; 256];
+    lut::s2_fill(&mut table, codec.alpha, codec.beta);
     for x in xs.iter_mut() {
-        *x = codec.truncate(*x);
+        *x = codec.truncate_fused(&table, *x);
     }
     codec
 }
@@ -337,6 +441,66 @@ mod tests {
         let t2 = codec.truncate_vec(&t1);
         for (a, b) in t1.iter().zip(t2.iter()) {
             assert!(rel_err(*a, *b) < 2.0 * fp8::EPSILON, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cached_log_paths_are_bitwise_identical() {
+        let mut rng = Pcg32::new(5, 5);
+        let mut xs: Vec<f32> = (0..2048)
+            .map(|_| rng.next_lognormal(-6.0, 4.0) * if rng.next_f32() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        xs[10] = 0.0;
+        xs[11] = -0.0;
+        xs[12] = f32::NAN;
+        xs[13] = f32::INFINITY;
+        xs[14] = -f32::INFINITY;
+        let logs: Vec<f32> = xs.iter().map(|x| x.abs().log2()).collect();
+        let (a, b) = (stats(&xs).unwrap(), stats_from_logs(&xs, &logs).unwrap());
+        assert_eq!(a.mu.to_bits(), b.mu.to_bits());
+        assert_eq!(a.max.to_bits(), b.max.to_bits());
+        assert_eq!(a.n_nonzero, b.n_nonzero);
+        let codec = S2fp8Codec::from_stats(a);
+        for (i, (&x, &l)) in xs.iter().zip(logs.iter()).enumerate() {
+            let (p, q) = (codec.squeeze(x), codec.squeeze_from_log(x, l));
+            assert!(
+                p.to_bits() == q.to_bits() || (p.is_nan() && q.is_nan()),
+                "elem {i}: squeeze {p} vs from-log {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_truncate_is_bitwise_identical_to_per_element() {
+        // Above FUSED_MIN_ELEMS the table path runs; it must reproduce
+        // the per-element `truncate` bit for bit, specials included.
+        let mut rng = Pcg32::new(42, 7);
+        let mut xs: Vec<f32> = (0..FUSED_MIN_ELEMS * 4)
+            .map(|_| rng.next_lognormal(-8.0, 5.0) * if rng.next_f32() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        xs[0] = 0.0;
+        xs[1] = -0.0;
+        xs[2] = f32::NAN;
+        xs[3] = f32::from_bits(0x7FC0_1234); // NaN with payload
+        xs[4] = f32::INFINITY;
+        xs[5] = f32::NEG_INFINITY;
+        xs[6] = f32::from_bits(1); // smallest f32 subnormal
+        xs[7] = f32::MAX;
+        let codec = S2fp8Codec::fit(&xs);
+        let mut fused = vec![0.0f32; xs.len()];
+        codec.truncate_into(&xs, &mut fused);
+        for (i, (&x, &y)) in xs.iter().zip(fused.iter()).enumerate() {
+            let want = codec.truncate(x);
+            assert_eq!(want.to_bits(), y.to_bits(), "elem {i}: {x} → {y} want {want}");
+        }
+        // … and the in-place variant, which refits, agrees with
+        // truncate_tensor on the same data.
+        let (want, wc) = truncate_tensor(&xs);
+        let mut inplace = xs.clone();
+        let ic = truncate_tensor_inplace(&mut inplace);
+        assert_eq!((wc.alpha, wc.beta), (ic.alpha, ic.beta));
+        for (i, (a, b)) in want.iter().zip(inplace.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "inplace elem {i}");
         }
     }
 

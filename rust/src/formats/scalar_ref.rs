@@ -1,0 +1,169 @@
+//! The retained **naive scalar reference** codec: single-threaded,
+//! per-element, arithmetic-ladder implementations of every
+//! [`FormatKind`]'s encode and decode.
+//!
+//! This module exists for two reasons (see DESIGN.md "Codec hot path"):
+//!
+//! 1. **Bitwise contract anchor.** The optimized paths — branch-free
+//!    bit-twiddled FP8 conversion, fused S2FP8 encode, table-gather
+//!    decode, chunk-parallel loops — must produce exactly the bytes and
+//!    bits this module produces. `tests/prop_formats.rs` races the two
+//!    on randomized tensors (specials included) and on all 256 payload
+//!    bytes per format.
+//! 2. **Competitive baseline.** `benches/perf_codec.rs` measures the
+//!    optimized paths *against* this reference and records the speedup
+//!    ratios in `BENCH_codec.json`; a CI gate fails on regression. A
+//!    self-normalized ratio is far less machine-sensitive than a raw
+//!    GB/s number, which is what makes the gate practical in CI.
+//!
+//! Implementations are deliberately the transparent ones: the float
+//! ladders ([`fp8::encode`], [`fp8e4m3::encode`]), per-element
+//! [`fp8::decode`] / unsqueeze, no threads, no tables beyond what the
+//! scalar functions themselves use. Do not optimize this module — it is
+//! the thing the optimizations are measured and verified against.
+
+use super::codec::{sr_u01, CodecError, QuantizedTensor, S2fp8SrCodec};
+use super::traits::FormatKind;
+use super::{bf16, fp16, fp8, fp8e4m3, s2fp8};
+
+/// Reference encode into a reusable payload buffer; returns the fitted
+/// (α, β) for the S2FP8 family. Byte layout is identical to the
+/// optimized [`Codec::encode_into`](super::Codec::encode_into).
+pub fn encode_into(kind: FormatKind, xs: &[f32], payload: &mut Vec<u8>) -> Option<(f32, f32)> {
+    payload.clear();
+    match kind {
+        FormatKind::Fp32 => {
+            for &x in xs {
+                payload.extend_from_slice(&x.to_le_bytes());
+            }
+            None
+        }
+        FormatKind::Fp16 => {
+            for &x in xs {
+                payload.extend_from_slice(&fp16::encode(x).to_le_bytes());
+            }
+            None
+        }
+        FormatKind::Bf16 => {
+            for &x in xs {
+                payload.extend_from_slice(&bf16::encode(x).to_le_bytes());
+            }
+            None
+        }
+        FormatKind::Fp8 => {
+            payload.extend(xs.iter().map(|&x| fp8::encode(x)));
+            None
+        }
+        FormatKind::Fp8E4m3 => {
+            payload.extend(xs.iter().map(|&x| fp8e4m3::encode(x)));
+            None
+        }
+        FormatKind::S2fp8 => {
+            let c = s2fp8::S2fp8Codec::fit(xs);
+            payload.extend(xs.iter().map(|&x| fp8::encode(c.squeeze(x))));
+            Some((c.alpha, c.beta))
+        }
+        FormatKind::S2fp8Sr => {
+            let c = s2fp8::S2fp8Codec::fit(xs);
+            let seed = S2fp8SrCodec::default().seed;
+            payload.extend(xs.iter().enumerate().map(|(i, &x)| {
+                fp8::encode(fp8::truncate_stochastic(c.squeeze(x), sr_u01(seed, i as u64)))
+            }));
+            Some((c.alpha, c.beta))
+        }
+    }
+}
+
+/// Reference encode to a packed tensor (allocating).
+pub fn encode(kind: FormatKind, xs: &[f32]) -> QuantizedTensor {
+    let mut payload = Vec::new();
+    let s2 = encode_into(kind, xs, &mut payload);
+    QuantizedTensor::from_parts(kind, vec![xs.len()], payload, s2)
+        .expect("reference encode writes a consistent payload")
+}
+
+/// Reference decode: per-element arithmetic, single thread. Same bits as
+/// [`QuantizedTensor::decode`] for every format.
+pub fn decode(qt: &QuantizedTensor) -> Vec<f32> {
+    let mut out = vec![0.0f32; qt.len()];
+    decode_into(qt, &mut out).expect("buffer sized to the tensor");
+    out
+}
+
+/// Reference decode into a caller-owned buffer (sized to `qt.len()`).
+pub fn decode_into(qt: &QuantizedTensor, out: &mut [f32]) -> Result<(), CodecError> {
+    if out.len() != qt.len() {
+        return Err(CodecError::ShapeMismatch { shape: qt.shape().to_vec(), elems: out.len() });
+    }
+    let p = qt.payload();
+    match qt.kind() {
+        FormatKind::Fp32 => {
+            for (c, y) in p.chunks_exact(4).zip(out.iter_mut()) {
+                *y = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        FormatKind::Fp16 => {
+            for (c, y) in p.chunks_exact(2).zip(out.iter_mut()) {
+                *y = fp16::decode(u16::from_le_bytes([c[0], c[1]]));
+            }
+        }
+        FormatKind::Bf16 => {
+            for (c, y) in p.chunks_exact(2).zip(out.iter_mut()) {
+                *y = bf16::decode(u16::from_le_bytes([c[0], c[1]]));
+            }
+        }
+        FormatKind::Fp8 => {
+            for (&b, y) in p.iter().zip(out.iter_mut()) {
+                *y = fp8::decode(b);
+            }
+        }
+        FormatKind::Fp8E4m3 => {
+            for (&b, y) in p.iter().zip(out.iter_mut()) {
+                *y = fp8e4m3::decode(b);
+            }
+        }
+        FormatKind::S2fp8 | FormatKind::S2fp8Sr => {
+            let (alpha, beta) = qt.s2_params().expect("constructors enforce α/β for S2FP8");
+            let c = s2fp8::S2fp8Codec { alpha, beta };
+            for (&b, y) in p.iter().zip(out.iter_mut()) {
+                *y = c.unsqueeze(fp8::decode(b));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg32, Rng};
+
+    #[test]
+    fn reference_roundtrip_matches_optimized_on_a_smoke_tensor() {
+        let mut rng = Pcg32::new(99, 0);
+        let xs: Vec<f32> = (0..512)
+            .map(|_| rng.next_lognormal(-6.0, 4.0) * if rng.next_f32() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        for &kind in FormatKind::all() {
+            let reference = encode(kind, &xs);
+            let optimized = kind.codec().encode(&xs);
+            assert_eq!(reference, optimized, "{} encode diverged", kind.name());
+            let a = decode(&reference);
+            let b = optimized.decode();
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()),
+                    "{} decode elem {i}: {x} vs {y}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_into_checks_the_buffer_length() {
+        let qt = encode(FormatKind::Fp8, &[1.0, 2.0, 3.0]);
+        let mut short = [0.0f32; 2];
+        assert!(decode_into(&qt, &mut short).is_err());
+    }
+}

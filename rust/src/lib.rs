@@ -34,9 +34,15 @@
 //! store ([`serve::WeightStore`]) and the analysis/bench sweeps
 //! ([`formats::analysis::codec_sweep`], `benches/perf_codec.rs`) all trade
 //! in this one currency, so adding a format is implementing a codec — not
-//! forking a storage path. Chunk-parallel encode and buffer-reusing
-//! `decode_into` keep both directions at memory bandwidth; nothing in the
-//! public format API panics on valid input (tensor-statistics formats
+//! forking a storage path. The codec inner loop is tuned (branch-free
+//! bit-twiddled FP8 conversion, a fused single-`log2`-pass S2FP8 encode,
+//! 256-entry table-gather decode via [`formats::lut`], chunk-parallel
+//! loops, buffer-reusing `decode_into`) under a bitwise contract: every
+//! optimized path produces exactly the bytes of the naive scalar
+//! reference [`formats::scalar_ref`], enforced exhaustively by
+//! `tests/prop_formats.rs` and raced competitively by
+//! `benches/perf_codec.rs` (see DESIGN.md "Codec hot path"). Nothing in
+//! the public format API panics on valid input (tensor-statistics formats
 //! return `None` from element-wise truncation instead).
 //!
 //! ## Distributed training

@@ -5,7 +5,9 @@
 //! Every hooked `encode_into` reports its produced bytes here. When the
 //! sampling knob is off (`sample_every == 0`, the default) the call is a
 //! single relaxed atomic load. When on, every `sample_every`-th encode of
-//! each tensor is walked once to count:
+//! each tensor walks a rotating 1/`sample_every` window of it (amortized
+//! O(1) per encoded element; the windows tile the tensor across
+//! consecutive samples) to count:
 //!
 //! - **saturation**: codes at the max-finite magnitude `0x7B` or beyond
 //!   (`fp8::encode_fast` saturates overflowing values there), i.e. values
@@ -117,28 +119,44 @@ fn next_label() -> String {
 /// Health hook called by the E5M2-family codecs after encoding: `xs` is
 /// the input tensor, `codes` the produced bytes (1 per element), `s2` the
 /// (α, β) pair for S2FP8 codecs. Sampling decisions are per tensor label;
-/// the first encode of each label is always sampled.
+/// the first encode of each label is always sampled. A sampled encode
+/// walks only a 1/`sample_every` window of the tensor (rotating so full
+/// coverage accrues across samples), keeping the monitor's amortized cost
+/// O(1) per encoded element at any sampling rate.
 pub fn observe_e5m2_encode(format: &'static str, xs: &[f32], codes: &[u8], s2: Option<(f32, f32)>) {
     let every = SAMPLE_EVERY.load(Ordering::Relaxed);
     if every == 0 {
         return;
     }
     let label = next_label();
-    let sample = {
+    let (sample, ordinal) = {
         let mut state = STATE.lock().unwrap();
         let h = state.entry(label.clone()).or_default();
         h.encodes += 1;
-        (h.encodes - 1) % every as u64 == 0
+        ((h.encodes - 1) % every as u64 == 0, h.samples)
     };
     if !sample {
         return;
     }
-    // the O(n) walk happens outside the lock; only aggregation re-locks
+    // The walk happens outside the lock, and covers only a contiguous
+    // window of ⌈n/every⌉ elements — so a 1-in-N sampling rate costs
+    // O(n/N) per sampled encode (amortized O(1) per element per encode),
+    // not a full O(n) re-walk. The window start rotates with the sample
+    // ordinal, so across `every` consecutive samples the whole tensor is
+    // covered. `every == 1` degenerates to the full walk.
+    let n = xs.len().min(codes.len());
+    let (start, end) = if n == 0 {
+        (0, 0)
+    } else {
+        let w = n.div_ceil(every as usize);
+        let start = (ordinal as usize).wrapping_mul(w) % n;
+        (start, (start + w).min(n))
+    };
     let mut saturated = 0u64;
     let mut underflowed = 0u64;
     let mut nonzero = 0u64;
     let mut exp_hist = [0u64; 32];
-    for (&x, &code) in xs.iter().zip(codes.iter()) {
+    for (&x, &code) in xs[start..end].iter().zip(codes[start..end].iter()) {
         let abs = code & 0x7F;
         exp_hist[(abs >> 2) as usize] += 1;
         if abs >= E5M2_SATURATED_ABS {
@@ -155,7 +173,7 @@ pub fn observe_e5m2_encode(format: &'static str, xs: &[f32], codes: &[u8], s2: O
         let mut state = STATE.lock().unwrap();
         let h = state.entry(label.clone()).or_default();
         h.samples += 1;
-        h.elems += xs.len() as u64;
+        h.elems += (end - start) as u64;
         h.saturated += saturated;
         h.underflowed += underflowed;
         h.nonzero += nonzero;
@@ -176,7 +194,7 @@ pub fn observe_e5m2_encode(format: &'static str, xs: &[f32], codes: &[u8], s2: O
             ("ev", Json::str("quant")),
             ("tensor", Json::str(label)),
             ("format", Json::str(format)),
-            ("n", Json::num(xs.len() as f64)),
+            ("n", Json::num((end - start) as f64)),
             ("alpha", alpha),
             ("beta", beta),
             ("saturated", Json::num(saturated as f64)),
@@ -245,6 +263,29 @@ mod tests {
         let snap = health_snapshot();
         assert_eq!(snap["w2"].encodes, 3);
         assert_eq!(snap["w2"].samples, 2); // encodes 1 and 3
+        // each of the 2 sampled walks covered a 2-element half window
+        assert_eq!(snap["w2"].elems, 4);
+
+        // windowed walks tile the tensor: at every=4 on 8 elements each
+        // sample covers 2, rotating — 4 samples cover all 8 exactly once.
+        set_sample_every(4);
+        {
+            let _g = slot_labels(["w3".to_string()]);
+            // 16 encodes ⇒ samples at ordinals 0..4, windows 0..2, 2..4,
+            // 4..6, 6..8. Element 0 saturates, element 7 underflows; both
+            // must be seen exactly once.
+            let xs = [70000.0f32, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1e-9];
+            let codes: Vec<u8> =
+                xs.iter().map(|&x| crate::formats::fp8::encode_fast(x)).collect();
+            for _ in 0..16 {
+                observe_e5m2_encode("fp8", &xs, &codes, None);
+            }
+        }
+        let snap = health_snapshot();
+        assert_eq!(snap["w3"].samples, 4);
+        assert_eq!(snap["w3"].elems, 8, "4 samples × 2-element windows");
+        assert_eq!(snap["w3"].saturated, 1);
+        assert_eq!(snap["w3"].underflowed, 1);
         set_sample_every(0);
         reset();
     }

@@ -8,7 +8,10 @@
 //! payloads used by checkpoints and serving quantize exactly like the
 //! training simulation.
 
-use s2fp8::formats::{bf16, fp16, fp8, s2fp8 as s2, CodecError, FormatKind, QuantizedTensor};
+use s2fp8::formats::{
+    bf16, fp16, fp8, s2fp8 as s2, scalar_ref, CodecError, FormatKind, QuantizedTensor,
+    RangeDecoder,
+};
 use s2fp8::util::prop::{check, F32WideLog, Gen, VecGen};
 
 /// Bitwise equality with NaN ≡ NaN (payload bits of a NaN are not
@@ -629,6 +632,215 @@ fn prop_bit_flipped_frames_error_and_never_silently_decode() {
                 }
             },
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// optimized hot paths vs the retained naive scalar reference: the bitwise
+// contract of DESIGN.md "Codec hot path". The LUT decode is checked on
+// EVERY possible payload byte; the branch-free encoders on randomized and
+// adversarial tensors with all specials in the stream.
+// ---------------------------------------------------------------------------
+
+/// All 256 payload bytes as a packed tensor of `kind`; `s2params`
+/// supplies (α, β) for the S2FP8 family.
+fn every_byte_tensor(kind: FormatKind, s2params: Option<(f32, f32)>) -> QuantizedTensor {
+    let payload: Vec<u8> = (0u8..=255).collect();
+    QuantizedTensor::from_parts(kind, vec![256], payload, s2params).expect("valid 256-byte tensor")
+}
+
+#[test]
+fn exhaustive_byte_decode_is_bitwise_identical_to_scalar_reference() {
+    // (α, β) pairs: identity, a typical fit, the MIN_SPREAD-capped
+    // extreme, a squeezing fit (α<1), and a huge negative shift.
+    let s2_pairs =
+        [(1.0f32, 0.0f32), (2.5, 40.0), (15000.0, -3000.0), (0.25, 1.0), (5.0, -120.0)];
+    let mut cases: Vec<QuantizedTensor> = vec![
+        every_byte_tensor(FormatKind::Fp8, None),
+        every_byte_tensor(FormatKind::Fp8E4m3, None),
+    ];
+    for &(a, b) in &s2_pairs {
+        cases.push(every_byte_tensor(FormatKind::S2fp8, Some((a, b))));
+        cases.push(every_byte_tensor(FormatKind::S2fp8Sr, Some((a, b))));
+    }
+    for qt in &cases {
+        let name = format!("{} {:?}", qt.kind().name(), qt.s2_params());
+        let want = scalar_ref::decode(qt);
+
+        // full decode (table gather)
+        let got = qt.decode();
+        for (byte, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                bits_eq(*g, *w),
+                "{name} byte {byte:#04x}: decode {g} ({:#010x}) vs scalar {w} ({:#010x})",
+                g.to_bits(),
+                w.to_bits()
+            );
+        }
+
+        // decode_range in awkward windows (cached-table path)
+        let mut buf = vec![0.0f32; 37];
+        for start in [0usize, 1, 100, 219, 255] {
+            let take = buf.len().min(256 - start);
+            qt.decode_range(start, &mut buf[..take]);
+            for (i, (g, w)) in buf[..take].iter().zip(want[start..].iter()).enumerate() {
+                assert!(bits_eq(*g, *w), "{name} decode_range byte {}", start + i);
+            }
+        }
+
+        // RangeDecoder (borrowed-table plan)
+        let dec = RangeDecoder::new(qt);
+        for start in [0usize, 13, 200] {
+            let take = buf.len().min(256 - start);
+            dec.decode_range(start, &mut buf[..take]);
+            for (i, (g, w)) in buf[..take].iter().zip(want[start..].iter()).enumerate() {
+                assert!(bits_eq(*g, *w), "{name} RangeDecoder byte {}", start + i);
+            }
+        }
+    }
+}
+
+#[test]
+fn exhaustive_u16_decode_is_bitwise_identical_to_scalar_reference() {
+    // fp16/bf16 have 65536 codes — cheap enough to sweep them all too.
+    for kind in [FormatKind::Fp16, FormatKind::Bf16] {
+        let payload: Vec<u8> =
+            (0u32..65536).flat_map(|c| (c as u16).to_le_bytes()).collect();
+        let qt = QuantizedTensor::from_parts(kind, vec![65536], payload, None).unwrap();
+        let want = scalar_ref::decode(&qt);
+        let got = qt.decode();
+        for (code, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                bits_eq(*g, *w),
+                "{} code {code:#06x}: decode {g} vs scalar {w}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_optimized_encode_is_bitwise_identical_to_scalar_reference() {
+    // Randomized tensors with ±0 / denormal-scale magnitudes in the
+    // stream, for every format: the optimized encode (branch-free FP8,
+    // fused S2FP8, chunk-parallel, index-hashed SR) must produce the
+    // exact payload bytes and (α, β) bits of the naive reference, and
+    // the optimized decode must return the reference's f32 bits.
+    let g = VecGen {
+        elem: F32WideLog { log2_lo: -40.0, log2_hi: 40.0, specials: true },
+        min_len: 0,
+        max_len: 300,
+    };
+    for &kind in FormatKind::all() {
+        let codec = kind.codec();
+        check(
+            &format!("optimized == scalar_ref [{}]", kind.name()),
+            &g,
+            |xs: &Vec<f32>| {
+                let reference = scalar_ref::encode(kind, xs);
+                let optimized = codec.encode(xs);
+                if optimized.payload() != reference.payload() {
+                    let i = optimized
+                        .payload()
+                        .iter()
+                        .zip(reference.payload().iter())
+                        .position(|(a, b)| a != b)
+                        .unwrap_or(0);
+                    return Err(format!(
+                        "payload byte {i} differs: optimized {:#04x} vs scalar {:#04x} \
+                         (input {:?})",
+                        optimized.payload().get(i).copied().unwrap_or(0),
+                        reference.payload().get(i).copied().unwrap_or(0),
+                        xs.get(i / optimized.bytes_per_element().max(1)),
+                    ));
+                }
+                match (optimized.s2_params(), reference.s2_params()) {
+                    (Some((a1, b1)), Some((a2, b2))) => {
+                        if a1.to_bits() != a2.to_bits() || b1.to_bits() != b2.to_bits() {
+                            return Err(format!(
+                                "fitted stats differ: optimized ({a1}, {b1}) vs scalar \
+                                 ({a2}, {b2})"
+                            ));
+                        }
+                    }
+                    (None, None) => {}
+                    (o, r) => return Err(format!("stats presence differs: {o:?} vs {r:?}")),
+                }
+                let got = optimized.decode();
+                let want = scalar_ref::decode(&reference);
+                for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                    if !bits_eq(*g, *w) {
+                        return Err(format!("decode elem {i}: optimized {g} vs scalar {w}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn adversarial_tensors_encode_identically_to_scalar_reference() {
+    // The perf harness's adversarial distributions as correctness cases:
+    // all-denormal (E5M2's magic-add denormal path on every element), a
+    // saturating tail (the clamp path), NaN/±Inf mixes, and constant
+    // tensors (the S2FP8 m == μ MIN_SPREAD guard).
+    use s2fp8::util::rng::{Pcg32, Rng};
+    let mut rng = Pcg32::new(2026, 0xAD5E);
+    let mut sign = {
+        let mut r = Pcg32::new(2026, 0xAD5E + 1);
+        move |m: f32| if r.next_f32() < 0.5 { -m } else { m }
+    };
+    let denormal: Vec<f32> =
+        (0..4096).map(|_| sign((-16.0 + 2.0 * rng.next_f32()).exp2())).collect();
+    let saturating: Vec<f32> = (0..4096)
+        .map(|_| {
+            sign(if rng.next_f32() < 0.1 {
+                1.0e7 * (1.0 + rng.next_f32())
+            } else {
+                rng.next_lognormal(0.0, 2.0)
+            })
+        })
+        .collect();
+    let mut specials: Vec<f32> =
+        (0..1024).map(|_| sign(rng.next_lognormal(-6.0, 6.0))).collect();
+    for (i, v) in [0.0f32, -0.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, f32::from_bits(1)]
+        .into_iter()
+        .enumerate()
+    {
+        specials[i * 100] = v;
+    }
+    let cases: Vec<(&str, Vec<f32>)> = vec![
+        ("denormal-band", denormal),
+        ("saturating-tail", saturating),
+        ("constant", vec![0.37f32; 1024]),
+        ("constant-negative", vec![-2.5e-7f32; 1024]),
+        ("specials-mix", specials),
+    ];
+
+    for (name, xs) in &cases {
+        for &kind in FormatKind::all() {
+            let codec = kind.codec();
+            let reference = scalar_ref::encode(kind, xs);
+            let optimized = codec.encode(xs);
+            assert_eq!(
+                optimized.payload(),
+                reference.payload(),
+                "{name} [{}]: encode payload diverged",
+                kind.name()
+            );
+            assert_eq!(
+                optimized.s2_params().map(|(a, b)| (a.to_bits(), b.to_bits())),
+                reference.s2_params().map(|(a, b)| (a.to_bits(), b.to_bits())),
+                "{name} [{}]: fitted stats diverged",
+                kind.name()
+            );
+            let got = optimized.decode();
+            let want = scalar_ref::decode(&reference);
+            for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!(bits_eq(*g, *w), "{name} [{}] decode elem {i}", kind.name());
+            }
+        }
     }
 }
 
