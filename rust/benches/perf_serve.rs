@@ -1,29 +1,60 @@
-//! §Perf bench — serving throughput and tail latency vs micro-batch size.
+//! §Perf bench — serving throughput and tail latency, in-process and
+//! through the socket front door.
 //!
-//! Drives the batched inference engine (host NCF backend, S2FP8-compressed
-//! checkpoint) with concurrent closed-loop clients at batch caps 1/8/32,
-//! reporting requests/sec and p50/p99 latency per configuration, and
-//! emitting `runs/perf_serve/BENCH_serve.json` so the perf trajectory
-//! tracks serving alongside the training hot paths.
+//! Two stages:
 //!
-//! Scale knobs: `S2FP8_BENCH_FAST=1` (quarter-size run).
+//! 1. **Closed-loop engine rows** (the original bench): concurrent
+//!    clients drive the batched inference engine directly at batch caps
+//!    1/8/32 — requests/sec and p50/p99 per configuration.
+//! 2. **Open-loop socket legs** against `serve::net` (ND-JSON over TCP,
+//!    host NCF backend behind a hot-swappable router), a million
+//!    requests total in full mode:
+//!    * `paced` — windowed pipelined load below the shed watermark;
+//!      **gated**: p99 client-observed latency ≤ `S2FP8_SERVE_SLO_MS`
+//!      (default 250), zero failures, zero sheds.
+//!    * `firehose` — deliberate overload past the admission-control
+//!      watermark; **gated**: sheds actually happen, every request gets
+//!      a typed answer, nothing fails, and the queue-depth gauge lands
+//!      on exactly 0 afterwards.
+//!    * `hotswap` — generations republished every ~100 ms mid-load;
+//!      **gated**: zero failures and at least two generations observed
+//!      in responses.
+//!    * `chaos` — testkit [`Corruption`]s fed straight into the socket
+//!      (seeds from `CHAOS_SEEDS`); **gated**: malformed traffic never
+//!      kills a worker — a fresh connection still serves after every
+//!      corrupt line.
+//!
+//! Emits `runs/perf_serve/BENCH_serve.json` (closed-loop rows + socket
+//! legs + gate verdicts). Gate violations exit non-zero so CI fails.
+//!
+//! Scale knobs: `S2FP8_BENCH_FAST=1` (small run), `S2FP8_SERVE_SLO_MS`,
+//! `CHAOS_SEEDS`.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use s2fp8::bench::paper;
 use s2fp8::bench::report::Table;
 use s2fp8::coordinator::checkpoint;
+use s2fp8::metrics::histogram::LatencyHistogram;
 use s2fp8::models::{self, synth_ncf_slots, HostModel, ModelKind, NcfDims};
 use s2fp8::runtime::HostValue;
 use s2fp8::serve::{
     backend::HostBackend,
     engine::{Engine, ServeConfig},
+    net::{NetClient, NetConfig, NetServer},
     registry::WeightStore,
+    router::Router,
     BatchPolicy,
 };
+use s2fp8::testkit::fault::Corruption;
+use s2fp8::transport::socket::{Endpoint, SocketOptions};
 use s2fp8::util::json::Json;
 use s2fp8::util::rng::{Pcg32, Rng};
+
+const MODEL: &str = "ncf";
 
 fn main() -> anyhow::Result<()> {
     let bench = "perf_serve";
@@ -39,6 +70,9 @@ fn main() -> anyhow::Result<()> {
     let store = Arc::new(WeightStore::open(&path)?);
     let model: Arc<dyn HostModel> = Arc::from(models::from_store(ModelKind::Ncf, &store)?);
 
+    // ------------------------------------------------------------------
+    // stage 1: closed-loop engine rows (batch-size sweep)
+    // ------------------------------------------------------------------
     let mut table = Table::new(
         &format!(
             "Serving throughput vs micro-batch size ({requests} requests, {clients} clients, \
@@ -57,6 +91,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch,
                 max_wait: Duration::from_micros(if max_batch == 1 { 0 } else { 500 }),
             },
+            ..ServeConfig::default()
         };
         let engine = Arc::new(Engine::start(backend, cfg)?);
         let wall = std::time::Instant::now();
@@ -79,10 +114,10 @@ fn main() -> anyhow::Result<()> {
         });
         let secs = wall.elapsed().as_secs_f64();
         let m = engine.metrics();
-        let done = m.completed.load(std::sync::atomic::Ordering::Relaxed);
+        let done = m.completed.load(Ordering::Relaxed);
         let rps = done as f64 / secs;
-        let live = m.batched_rows.load(std::sync::atomic::Ordering::Relaxed);
-        let pad = m.padded_rows.load(std::sync::atomic::Ordering::Relaxed);
+        let live = m.batched_rows.load(Ordering::Relaxed);
+        let pad = m.padded_rows.load(Ordering::Relaxed);
         let pad_pct = 100.0 * pad as f64 / (live + pad).max(1) as f64;
         println!(
             "batch ≤ {max_batch:>2}: {rps:>8.0} req/s  p50 {:>9.3?}  p99 {:>9.3?}  \
@@ -111,6 +146,136 @@ fn main() -> anyhow::Result<()> {
     table.print();
     table.save(paper::out_dir(bench).join("serve.md"))?;
 
+    // ------------------------------------------------------------------
+    // stage 2: open-loop socket legs through the front door
+    // ------------------------------------------------------------------
+    let slo_ms: u64 = std::env::var("S2FP8_SERVE_SLO_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(250);
+    let net_clients = 8usize;
+    let watermark = 256usize;
+    // full mode totals a million socket requests across the three legs
+    let (n_paced, n_firehose, n_hotswap) =
+        if fast { (25_000, 20_000, 5_000) } else { (500_000, 400_000, 100_000) };
+
+    let router = Arc::new(Router::new(ServeConfig {
+        workers,
+        queue_capacity: 4096,
+        policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(500) },
+        ..ServeConfig::default()
+    }));
+    router.publish(MODEL, Arc::new(HostBackend::new(model.clone(), 32)))?;
+    let server = NetServer::start(
+        router.clone(),
+        NetConfig {
+            endpoint: Endpoint::Tcp("127.0.0.1:0".to_string()),
+            io_timeout: Duration::from_secs(5),
+            request_timeout: Duration::from_secs(30),
+            shed_watermark: Some(watermark),
+            ..NetConfig::default()
+        },
+    )?;
+    let endpoint = server.endpoint().clone();
+    println!("\nsocket legs against {endpoint} (watermark {watermark}, SLO p99 ≤ {slo_ms}ms)");
+
+    let mut violations: Vec<String> = Vec::new();
+    let mut legs_json = Vec::new();
+    let mut net_table = Table::new(
+        &format!(
+            "Socket front door, open-loop ({net_clients} connections, watermark {watermark})"
+        ),
+        &["leg", "offered", "ok", "shed", "failed", "p50", "p99", "req/s", "gens"],
+    );
+
+    // -- paced: windowed load below the watermark; the latency-SLO gate --
+    let paced = drive_leg(&endpoint, net_clients, n_paced, 16, &dims)?;
+    let p99 = paced.hist.quantile(0.99);
+    if paced.failed > 0 {
+        violations.push(format!("paced: {} requests failed", paced.failed));
+    }
+    if paced.shed > 0 {
+        violations.push(format!("paced: {} sheds below the watermark", paced.shed));
+    }
+    if p99 > Duration::from_millis(slo_ms) {
+        violations.push(format!("paced: p99 {p99:?} over the {slo_ms}ms SLO"));
+    }
+    report_leg(&mut net_table, &mut legs_json, "paced", &paced);
+    // engine-side view of the same leg (fresh metrics arrive on republish)
+    if let Ok(route) = router.route(Some(MODEL)) {
+        if let Json::Obj(last) = legs_json.last_mut().unwrap() {
+            last.insert("engine".into(), route.engine.metrics().to_json());
+        }
+    }
+
+    // -- firehose: deliberate overload; the shed-accounting gate --------
+    router.publish(MODEL, Arc::new(HostBackend::new(model.clone(), 32)))?;
+    let firehose = drive_leg(&endpoint, net_clients, n_firehose, 512, &dims)?;
+    if firehose.shed == 0 {
+        violations.push("firehose: overload produced zero sheds".to_string());
+    }
+    if firehose.failed > 0 {
+        violations.push(format!("firehose: {} requests failed", firehose.failed));
+    }
+    if firehose.ok + firehose.shed + firehose.failed != firehose.offered as u64 {
+        violations.push(format!(
+            "firehose: {} answers for {} requests",
+            firehose.ok + firehose.shed + firehose.failed,
+            firehose.offered
+        ));
+    }
+    let depth_after = router.route(Some(MODEL))?.engine.metrics().queue_depth.load(Ordering::Relaxed);
+    if depth_after != 0 {
+        violations.push(format!("firehose: queue-depth gauge {depth_after} after drain"));
+    }
+    report_leg(&mut net_table, &mut legs_json, "firehose", &firehose);
+
+    // -- hotswap: republish generations mid-load; zero-failure gate -----
+    let stop_swapping = Arc::new(AtomicBool::new(false));
+    let swapper = {
+        let (router, model, stop) = (router.clone(), model.clone(), stop_swapping.clone());
+        std::thread::spawn(move || {
+            let mut swaps = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(100));
+                router
+                    .publish(MODEL, Arc::new(HostBackend::new(model.clone(), 32)))
+                    .expect("hot swap publish failed");
+                swaps += 1;
+            }
+            swaps
+        })
+    };
+    let hotswap = drive_leg(&endpoint, net_clients, n_hotswap, 16, &dims)?;
+    stop_swapping.store(true, Ordering::Relaxed);
+    let swaps = swapper.join().expect("swapper thread panicked");
+    if hotswap.failed > 0 {
+        violations.push(format!("hotswap: {} requests failed across {swaps} swaps", hotswap.failed));
+    }
+    if swaps > 0 && hotswap.gen_max <= hotswap.gen_min {
+        violations.push(format!(
+            "hotswap: {swaps} swaps but only generation {} observed",
+            hotswap.gen_min
+        ));
+    }
+    report_leg(&mut net_table, &mut legs_json, "hotswap", &hotswap);
+    println!("hotswap: {swaps} republishes, generations {}..{} observed", hotswap.gen_min, hotswap.gen_max);
+
+    // -- chaos: corrupt bytes at the socket; the survival gate ----------
+    let seeds_env = std::env::var("CHAOS_SEEDS").unwrap_or_else(|_| "2020,77".to_string());
+    let (corrupt_lines, survived) = chaos_leg(&endpoint, &seeds_env, &dims)?;
+    if !survived {
+        violations.push("chaos: server stopped answering after corrupt traffic".to_string());
+    }
+    println!("chaos: {corrupt_lines} corrupt lines (seeds {seeds_env}), server survived: {survived}");
+
+    net_table.print();
+    server.shutdown();
+    router.shutdown();
+
+    // ------------------------------------------------------------------
+    // record + gates
+    // ------------------------------------------------------------------
     let record = Json::obj(vec![
         ("bench", Json::str("serve")),
         ("backend", Json::str("host/ncf")),
@@ -118,9 +283,227 @@ fn main() -> anyhow::Result<()> {
         ("clients", Json::num(clients as f64)),
         ("requests", Json::num(requests as f64)),
         ("rows", Json::Arr(rows_json)),
+        (
+            "socket",
+            Json::obj(vec![
+                ("connections", Json::num(net_clients as f64)),
+                ("shed_watermark", Json::num(watermark as f64)),
+                ("slo_ms", Json::num(slo_ms as f64)),
+                ("legs", Json::Arr(legs_json)),
+                (
+                    "chaos",
+                    Json::obj(vec![
+                        ("seeds", Json::str(seeds_env)),
+                        ("corrupt_lines", Json::num(corrupt_lines as f64)),
+                        ("survived", Json::Bool(survived)),
+                    ]),
+                ),
+                (
+                    "gate_violations",
+                    Json::Arr(violations.iter().map(|v| Json::str(v.clone())).collect()),
+                ),
+            ]),
+        ),
     ]);
     let json_path = paper::out_dir(bench).join("BENCH_serve.json");
     std::fs::write(&json_path, record.to_string_pretty())?;
     println!("wrote {}", json_path.display());
+
+    if !violations.is_empty() {
+        eprintln!("\nserve bench GATE FAILURES:");
+        for v in &violations {
+            eprintln!("  ✗ {v}");
+        }
+        std::process::exit(1);
+    }
+    println!("all serve gates passed");
     Ok(())
+}
+
+/// One open-loop leg's client-side tally.
+struct LegResult {
+    offered: usize,
+    ok: u64,
+    shed: u64,
+    failed: u64,
+    gen_min: u64,
+    gen_max: u64,
+    hist: Arc<LatencyHistogram>,
+    wall_secs: f64,
+}
+
+/// Drive `total` pipelined requests over `clients` connections, `window`
+/// in flight per connection, recording client-observed latency
+/// (send → response) and response classes.
+fn drive_leg(
+    endpoint: &Endpoint,
+    clients: usize,
+    total: usize,
+    window: usize,
+    dims: &NcfDims,
+) -> anyhow::Result<LegResult> {
+    let hist = Arc::new(LatencyHistogram::new());
+    let ok = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let gen_min = Arc::new(AtomicU64::new(u64::MAX));
+    let gen_max = Arc::new(AtomicU64::new(0));
+    let wall = Instant::now();
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let endpoint = endpoint.clone();
+            let hist = hist.clone();
+            let (ok, shed, failed) = (ok.clone(), shed.clone(), failed.clone());
+            let (gen_min, gen_max) = (gen_min.clone(), gen_max.clone());
+            let (nu, ni) = (dims.n_users as u64, dims.n_items as u64);
+            let share = total / clients + usize::from(c < total % clients);
+            handles.push(s.spawn(move || -> anyhow::Result<()> {
+                let opts = SocketOptions {
+                    connect_timeout: Duration::from_secs(10),
+                    io_timeout: Duration::from_secs(60),
+                };
+                let mut client = NetClient::connect(&endpoint, opts)?;
+                let mut rng = Pcg32::new(0x5E21E, c as u64 + 1);
+                let mut pending: VecDeque<Instant> = VecDeque::with_capacity(window);
+                let (mut sent, mut recvd) = (0usize, 0usize);
+                while recvd < share {
+                    while sent < share && sent - recvd < window {
+                        let u = Json::num(rng.next_below(nu) as f64);
+                        let i = Json::num(rng.next_below(ni) as f64);
+                        client.send(Some(MODEL), &[u, i])?;
+                        pending.push_back(Instant::now());
+                        sent += 1;
+                    }
+                    let resp = client.recv()?;
+                    let t0 = pending.pop_front().expect("response without a send");
+                    hist.record(t0.elapsed());
+                    recvd += 1;
+                    if resp.get("error").as_obj().is_some() {
+                        if resp.at(&["error", "code"]).as_usize() == Some(429) {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    } else {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                        if let Some(g) = resp.get("gen").as_f64() {
+                            gen_min.fetch_min(g as u64, Ordering::Relaxed);
+                            gen_max.fetch_max(g as u64, Ordering::Relaxed);
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("leg client panicked")?;
+        }
+        Ok(())
+    })?;
+    Ok(LegResult {
+        offered: total,
+        ok: ok.load(Ordering::Relaxed),
+        shed: shed.load(Ordering::Relaxed),
+        failed: failed.load(Ordering::Relaxed),
+        gen_min: gen_min.load(Ordering::Relaxed),
+        gen_max: gen_max.load(Ordering::Relaxed),
+        hist,
+        wall_secs: wall.elapsed().as_secs_f64(),
+    })
+}
+
+fn report_leg(table: &mut Table, legs_json: &mut Vec<Json>, name: &str, leg: &LegResult) {
+    let rps = (leg.ok + leg.shed + leg.failed) as f64 / leg.wall_secs.max(1e-9);
+    let gens = if leg.gen_min == u64::MAX {
+        "-".to_string()
+    } else {
+        format!("{}..{}", leg.gen_min, leg.gen_max)
+    };
+    println!(
+        "{name:>9}: {rps:>8.0} req/s  p50 {:>9.3?}  p99 {:>9.3?}  \
+         ok {} shed {} failed {}  gens {gens}",
+        leg.hist.quantile(0.50),
+        leg.hist.quantile(0.99),
+        leg.ok,
+        leg.shed,
+        leg.failed,
+    );
+    table.row(vec![
+        name.to_string(),
+        leg.offered.to_string(),
+        leg.ok.to_string(),
+        leg.shed.to_string(),
+        leg.failed.to_string(),
+        format!("{:.3?}", leg.hist.quantile(0.50)),
+        format!("{:.3?}", leg.hist.quantile(0.99)),
+        format!("{rps:.0}"),
+        gens,
+    ]);
+    legs_json.push(Json::obj(vec![
+        ("leg", Json::str(name)),
+        ("offered", Json::num(leg.offered as f64)),
+        ("ok", Json::num(leg.ok as f64)),
+        ("shed", Json::num(leg.shed as f64)),
+        ("failed", Json::num(leg.failed as f64)),
+        ("rps", Json::num(rps)),
+        ("p50_us", Json::num(leg.hist.quantile(0.50).as_micros() as f64)),
+        ("p99_us", Json::num(leg.hist.quantile(0.99).as_micros() as f64)),
+        ("wall_secs", Json::num(leg.wall_secs)),
+    ]));
+}
+
+/// Feed corrupt request bytes at the socket — bit flips and truncations
+/// from the deterministic testkit corruption set — and verify the server
+/// answers typed errors (or closes the connection) without ever killing a
+/// worker: after every corrupt line, a **fresh** connection must serve.
+fn chaos_leg(endpoint: &Endpoint, seeds: &str, dims: &NcfDims) -> anyhow::Result<(usize, bool)> {
+    let opts = SocketOptions {
+        connect_timeout: Duration::from_secs(10),
+        io_timeout: Duration::from_secs(2),
+    };
+    let mut corrupt_lines = 0usize;
+    for seed in seeds.split(',').filter_map(|s| s.trim().parse::<u64>().ok()) {
+        let mut rng = Pcg32::new(seed, 0xC0A5);
+        for round in 0..10u64 {
+            let valid = format!(
+                "{{\"id\":{round},\"model\":\"{MODEL}\",\"features\":[{},{}]}}\n",
+                rng.next_below(dims.n_users as u64),
+                rng.next_below(dims.n_items as u64),
+            );
+            let mut bytes = valid.clone().into_bytes();
+            let corruption = if rng.next_f32() < 0.5 {
+                Corruption::BitFlip { entropy: rng.next_u64() }
+            } else {
+                Corruption::Truncate { entropy: rng.next_u64() }
+            };
+            corruption.apply(&mut bytes);
+            corrupt_lines += 1;
+
+            let mut sick = NetClient::connect(endpoint, opts)?;
+            sick.send_raw(&bytes)?;
+            sick.send_raw(b"\n")?;
+            // any typed outcome is fine: an error response, a normal
+            // response (the flip may leave valid JSON), a closed
+            // connection, or the server waiting for more bytes mid-value
+            // — the one forbidden outcome is a dead worker, checked below
+            let _ = sick.recv();
+            drop(sick);
+
+            // the survival probe: a fresh connection must still serve
+            let mut probe = NetClient::connect(endpoint, opts)?;
+            let resp = probe.call(
+                Some(MODEL),
+                &[Json::num(1.0_f64), Json::num(2.0_f64)],
+            )?;
+            if resp.get("output").as_arr().is_none() {
+                eprintln!(
+                    "chaos: probe failed after {} (seed {seed} round {round}): {resp}",
+                    corruption.describe(valid.len())
+                );
+                return Ok((corrupt_lines, false));
+            }
+        }
+    }
+    Ok((corrupt_lines, true))
 }

@@ -1,18 +1,30 @@
 //! `serve` — load an S2FP8-compressed checkpoint and serve prediction
 //! requests through the batched inference engine, then report latency and
-//! throughput. With no network stack in the vendor set, load is generated
-//! in-process: `--clients` threads submit `--requests` synthetic requests
-//! shaped by the backend's feature specs (the same code path a network
-//! front end would call).
+//! throughput. Two modes:
+//!
+//! * **in-process** (default): `--clients` threads submit `--requests`
+//!   synthetic requests shaped by the backend's feature specs directly
+//!   into the engine;
+//! * **socket** (`--listen`): the checkpoint is published through a
+//!   hot-swappable [`Router`] behind the ND-JSON socket front door
+//!   (`serve::net`), and the same synthetic load is driven through real
+//!   [`NetClient`] connections — TCP or `unix:` endpoints, pipelined,
+//!   with admission control via `--shed-watermark`. `--requests 0` just
+//!   listens until killed.
 //!
 //! ```text
 //! # synthesize + compress an NCF checkpoint, then serve 2000 requests
 //! cargo run --release --bin serve -- --synth --model ncf
 //!
-//! # serve a real training checkpoint on the host backend
-//! cargo run --release --bin serve -- --checkpoint runs/ncf/final.s2ck --model ncf
+//! # same checkpoint behind a socket, self-driven load over TCP
+//! cargo run --release --bin serve -- --synth --model ncf --listen 127.0.0.1:0
 //!
-//! # serve through a PJRT eval executable (requires `make artifacts`)
+//! # plain network server for external clients (no synthetic load)
+//! cargo run --release --bin serve -- --checkpoint runs/ncf/final.s2ck \
+//!     --model ncf --listen 0.0.0.0:7450 --requests 0 --shed-watermark 512
+//!
+//! # serve through a PJRT eval executable (requires AOT artifacts:
+//! #   cd python && python -m compile.aot --out ../artifacts)
 //! cargo run --release --bin serve -- --checkpoint runs/ncf/final.s2ck \
 //!     --backend runtime --artifact ncf_s2fp8_eval
 //! ```
@@ -33,10 +45,15 @@ use s2fp8::runtime::{Dtype, HostValue};
 use s2fp8::serve::{
     backend::{Backend, FeatureSpec, HostBackend, RuntimeBackend},
     engine::{Engine, ServeConfig},
+    net::{NetClient, NetConfig, NetServer},
     registry::{ModelRegistry, WeightStore},
+    router::Router,
     BatchPolicy,
 };
 use s2fp8::telemetry;
+use s2fp8::telemetry::cli::TelemetryCli;
+use s2fp8::transport::socket::{Endpoint, SocketOptions};
+use s2fp8::util::json::Json;
 use s2fp8::util::argparse::{ArgError, Command};
 use s2fp8::util::logging;
 use s2fp8::util::rng::{Pcg32, Rng};
@@ -67,9 +84,13 @@ fn run(args: &[String]) -> Result<()> {
         .opt("max-batch", "32", "micro-batch size cap")
         .opt("max-wait-us", "2000", "max µs an under-full batch waits for more requests")
         .opt("queue-cap", "1024", "submission queue capacity (backpressure bound)")
-        .opt("requests", "2000", "synthetic requests to serve")
+        .opt("requests", "2000", "synthetic requests to serve (0 with --listen: serve until killed)")
         .opt("clients", "8", "concurrent client threads")
         .opt("seed", "7", "request-generator seed")
+        .opt_optional("listen", "socket front door endpoint: host:port or unix:/path")
+        .opt("shed-watermark", "0", "shed (429) past this queue depth (--listen; 0 disables)")
+        .opt("request-timeout-ms", "30000", "server-side per-request budget (--listen)")
+        .opt("io-timeout-ms", "10000", "mid-request socket stall budget (--listen)")
         .flag("verbose", "debug logging");
     let spec = telemetry::cli::add_args(spec);
     let p = match spec.parse(args) {
@@ -172,7 +193,28 @@ fn run(args: &[String]) -> Result<()> {
             max_batch,
             max_wait: Duration::from_micros(p.u64("max-wait-us")),
         },
+        ..ServeConfig::default()
     };
+
+    // --- socket mode ------------------------------------------------------
+    if let Some(listen) = p.get("listen") {
+        let shed = p.usize("shed-watermark");
+        let opts = ListenOpts {
+            model: p.str("model").to_string(),
+            requests: p.usize("requests"),
+            clients: p.usize("clients").max(1),
+            seed: p.u64("seed"),
+            net: NetConfig {
+                endpoint: Endpoint::parse(listen),
+                io_timeout: Duration::from_millis(p.u64("io-timeout-ms")),
+                request_timeout: Duration::from_millis(p.u64("request-timeout-ms")),
+                shed_watermark: (shed > 0).then_some(shed),
+                ..NetConfig::default()
+            },
+        };
+        return run_listen(opts, backend, &store, cfg, tel);
+    }
+
     let engine = Arc::new(Engine::start(backend.clone(), cfg)?);
 
     // --- synthetic load --------------------------------------------------
@@ -240,6 +282,149 @@ fn run(args: &[String]) -> Result<()> {
     }
     tel.finish()?;
     Ok(())
+}
+
+/// `--listen` mode bundle (everything `run_listen` needs off the CLI).
+struct ListenOpts {
+    model: String,
+    requests: usize,
+    clients: usize,
+    seed: u64,
+    net: NetConfig,
+}
+
+/// Socket mode: publish the backend through a hot-swappable router behind
+/// the ND-JSON front door, then (unless `--requests 0`) drive the
+/// synthetic load through real client connections, pipelined.
+fn run_listen(
+    opts: ListenOpts,
+    backend: Arc<dyn Backend>,
+    store: &Arc<WeightStore>,
+    cfg: ServeConfig,
+    tel: TelemetryCli,
+) -> Result<()> {
+    let router = Arc::new(Router::new(cfg));
+    let generation = router.publish(&opts.model, backend.clone())?;
+    let server = NetServer::start(router.clone(), opts.net.clone())?;
+    let endpoint = server.endpoint().clone();
+    if !tel.quiet {
+        let shed = match opts.net.shed_watermark {
+            Some(w) => format!(", shedding past queue depth {w}"),
+            None => String::new(),
+        };
+        println!("front door on {endpoint}: model '{}' generation {generation}{shed}", opts.model);
+    }
+
+    if opts.requests == 0 {
+        println!("serving until killed…");
+        loop {
+            std::thread::park();
+        }
+    }
+
+    // --- synthetic load over real sockets --------------------------------
+    let bounds = id_bounds(store);
+    let specs = backend.feature_specs().to_vec();
+    let ok = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let wall = std::time::Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for c in 0..opts.clients {
+            let endpoint = endpoint.clone();
+            let specs = specs.clone();
+            let (ok, shed, failed) = (ok.clone(), shed.clone(), failed.clone());
+            let share =
+                opts.requests / opts.clients + usize::from(c < opts.requests % opts.clients);
+            let seed = opts.seed;
+            handles.push(s.spawn(move || -> Result<()> {
+                let sock = SocketOptions::default();
+                let mut client = NetClient::connect(&endpoint, sock)?;
+                let mut rng = Pcg32::new(seed, c as u64 + 1);
+                // pipelined: keep a window of requests in flight so the
+                // micro-batcher coalesces across the socket
+                const WINDOW: usize = 16;
+                let (mut sent, mut recvd) = (0usize, 0usize);
+                while recvd < share {
+                    while sent < share && sent - recvd < WINDOW {
+                        let features = synth_example(&specs, bounds, &mut rng);
+                        let json: Vec<Json> = features.iter().map(feature_json).collect();
+                        client.send(None, &json)?;
+                        sent += 1;
+                    }
+                    let resp = client.recv()?;
+                    recvd += 1;
+                    if resp.get("error").as_obj().is_some() {
+                        if resp.at(&["error", "code"]).as_usize() == Some(429) {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    } else {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread panicked")?;
+        }
+        Ok(())
+    })?;
+    let secs = wall.elapsed().as_secs_f64();
+
+    // --- report ----------------------------------------------------------
+    let reg = telemetry::registry();
+    reg.gauge_f("serve.wall_secs").set(secs);
+    reg.gauge_f("serve.offered_rps").set(opts.requests as f64 / secs.max(1e-9));
+    reg.gauge("serve.registry_decoded").set(store.decoded_tensors() as i64);
+    if !tel.quiet {
+        println!("\n== socket serving summary ==");
+        println!(
+            "wall      : {:.2}s for {} requests over {} connections ⇒ {:.0} req/s offered",
+            secs,
+            opts.requests,
+            opts.clients,
+            opts.requests as f64 / secs.max(1e-9),
+        );
+        println!(
+            "responses : {} ok, {} shed (429), {} failed",
+            ok.load(Ordering::Relaxed),
+            shed.load(Ordering::Relaxed),
+            failed.load(Ordering::Relaxed),
+        );
+        print!("{}", reg.snapshot().render());
+    }
+    server.shutdown();
+    router.shutdown();
+    tel.finish()?;
+    Ok(())
+}
+
+/// One [`HostValue`] feature as its wire form: a bare number for scalar
+/// slots, a flat number array otherwise.
+fn feature_json(v: &HostValue) -> Json {
+    let scalar = v.shape().is_empty();
+    match v.dtype() {
+        Dtype::I32 => {
+            let data = v.as_i32().expect("dtype just checked");
+            if scalar {
+                Json::num(data[0] as f64)
+            } else {
+                Json::Arr(data.iter().map(|&i| Json::num(i as f64)).collect())
+            }
+        }
+        Dtype::F32 => {
+            let data = v.as_f32().expect("dtype just checked").data();
+            if scalar {
+                Json::num(data[0] as f64)
+            } else {
+                Json::arr_f32(data)
+            }
+        }
+    }
 }
 
 /// Embedding-id/token bounds for synthetic requests, read off the

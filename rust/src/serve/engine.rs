@@ -38,11 +38,20 @@ pub struct ServeConfig {
     /// Submission-queue capacity: the backpressure bound.
     pub queue_capacity: usize,
     pub policy: BatchPolicy,
+    /// Telemetry-registry prefix for this engine's metrics (`serve` by
+    /// default; the router uses `serve.<model>` so engines don't clobber
+    /// each other's registrations).
+    pub metrics_prefix: String,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 2, queue_capacity: 1024, policy: BatchPolicy::default() }
+        ServeConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            policy: BatchPolicy::default(),
+            metrics_prefix: "serve".to_string(),
+        }
     }
 }
 
@@ -66,11 +75,17 @@ impl Engine {
         }
         let mut policy = cfg.policy;
         policy.max_batch = policy.max_batch.clamp(1, backend.batch_dim());
-        let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
-        // registry-adopted: `serve.*` names in `telemetry::registry()`
+        // registry-adopted: `{prefix}.*` names in `telemetry::registry()`
         // snapshots read this engine's own atomics
-        let metrics =
-            Arc::new(ServeMetrics::registered(crate::telemetry::registry(), "serve"));
+        let metrics = Arc::new(ServeMetrics::registered(
+            crate::telemetry::registry(),
+            &cfg.metrics_prefix,
+        ));
+        // the queue owns the depth gauge: every update happens under its
+        // mutex, so no engine code path can double- or miss-decrement it
+        let queue = Arc::new(
+            BoundedQueue::new(cfg.queue_capacity).with_gauge(metrics.queue_depth.clone()),
+        );
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -152,29 +167,18 @@ impl Engine {
         Ok((Request { id, features, enqueued: Instant::now(), responder }, ticket))
     }
 
-    /// Count the request before the push so a fast worker's decrement can
-    /// never be observed ahead of the increment (no negative gauge).
-    fn count_accepted(&self) {
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-    }
-
-    fn uncount_accepted(&self) {
-        self.metrics.submitted.fetch_sub(1, Ordering::Relaxed);
-        self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-    }
-
-    /// Enqueue a request, blocking while the queue is full.
+    /// Enqueue a request, blocking while the queue is full. The queue
+    /// itself maintains the depth gauge (under its mutex), so `submitted`
+    /// is bumped only on an accepted push — failed submits touch nothing.
     pub fn submit(&self, features: Vec<HostValue>) -> Result<Ticket> {
         let _s = crate::telemetry::span::enter("serve.enqueue");
         let (req, ticket) = self.make_request(features)?;
-        self.count_accepted();
         match self.queue.push(req) {
-            Ok(()) => Ok(ticket),
-            Err(PushError::Closed(_)) => {
-                self.uncount_accepted();
-                bail!("serve engine is shut down")
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(ticket)
             }
+            Err(PushError::Closed(_)) => bail!("serve engine is shut down"),
             Err(PushError::Full(_)) => unreachable!("blocking push never reports Full"),
         }
     }
@@ -184,27 +188,34 @@ impl Engine {
     pub fn try_submit(&self, features: Vec<HostValue>) -> Result<Ticket> {
         let _s = crate::telemetry::span::enter("serve.enqueue");
         let (req, ticket) = self.make_request(features)?;
-        self.count_accepted();
         match self.queue.try_push(req) {
-            Ok(()) => Ok(ticket),
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(ticket)
+            }
             Err(PushError::Full(_)) => {
-                self.uncount_accepted();
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 bail!(
                     "backpressure: queue full ({} pending requests)",
                     self.queue.capacity()
                 );
             }
-            Err(PushError::Closed(_)) => {
-                self.uncount_accepted();
-                bail!("serve engine is shut down")
-            }
+            Err(PushError::Closed(_)) => bail!("serve engine is shut down"),
         }
     }
 
     /// Submit + wait: the blocking request path.
     pub fn predict(&self, features: Vec<HostValue>) -> Result<Response> {
         self.submit(features)?.wait()
+    }
+
+    /// Begin a graceful shutdown without blocking: the queue closes (new
+    /// submissions fail typed), workers keep draining what was accepted.
+    /// The eventual [`shutdown`](Engine::shutdown)/`Drop` joins the pool.
+    /// This is the hot-swap primitive: the router calls it on the old
+    /// generation's engine while the new one is already taking traffic.
+    pub fn initiate_shutdown(&self) {
+        self.queue.close();
     }
 
     /// Graceful shutdown: stop accepting, drain accepted requests, join
@@ -220,12 +231,16 @@ impl Engine {
         }
         // If a worker died, requests may still sit in the queue; resolve
         // their tickets with an error instead of leaving waiters hanging.
+        // (pop_batch decrements the depth gauge under the queue mutex.)
         while let Some(batch) = self.queue.pop_batch(64, std::time::Duration::ZERO) {
             for req in batch {
-                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
                 self.metrics.record_done(req.enqueued.elapsed(), false);
-                req.responder
+                let delivered = req
+                    .responder
                     .fulfill(Err(anyhow!("request {} abandoned: no live workers", req.id)));
+                if !delivered {
+                    self.metrics.abandoned.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
     }
@@ -258,7 +273,6 @@ fn worker_loop(
     metrics: &ServeMetrics,
 ) {
     while let Some(batch) = batcher.next_batch() {
-        metrics.queue_depth.fetch_sub(batch.len() as i64, Ordering::Relaxed);
         let n = batch.len();
         let fixed_b = backend.batch_dim();
         let batch_span = crate::telemetry::span::enter("serve.batch");
@@ -282,7 +296,11 @@ fn worker_loop(
                 for (req, output) in batch.into_iter().zip(rows) {
                     let latency = req.enqueued.elapsed();
                     metrics.record_done(latency, true);
-                    req.responder.fulfill(Ok(Response { id: req.id, output, latency }));
+                    let delivered =
+                        req.responder.fulfill(Ok(Response { id: req.id, output, latency }));
+                    if !delivered {
+                        metrics.abandoned.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
             }
             Ok(rows) => {
@@ -304,7 +322,9 @@ fn worker_loop(
 fn fail_batch(batch: Vec<Request>, msg: &str, metrics: &ServeMetrics) {
     for req in batch {
         metrics.record_done(req.enqueued.elapsed(), false);
-        req.responder.fulfill(Err(anyhow!("{msg}")));
+        if !req.responder.fulfill(Err(anyhow!("{msg}"))) {
+            metrics.abandoned.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -336,6 +356,7 @@ mod tests {
             workers,
             queue_capacity: 256,
             policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(500) },
+            ..ServeConfig::default()
         };
         (Engine::start(backend, cfg).unwrap(), model)
     }
@@ -399,8 +420,157 @@ mod tests {
     fn submitting_after_shutdown_fails_cleanly() {
         let (engine, _) = ncf_engine(1, 4);
         let engine = Arc::new(engine);
-        engine.queue.close();
+        engine.initiate_shutdown();
         let err = engine.predict(pair(0, 0)).unwrap_err().to_string();
         assert!(err.contains("shut down"), "{err}");
+    }
+
+    /// Deterministic-delay backend: one f32 scalar in, one row out, with a
+    /// per-batch sleep so tests can hold the queue full on purpose.
+    struct SlowBackend {
+        specs: Vec<crate::serve::backend::FeatureSpec>,
+        batch_dim: usize,
+        delay: Duration,
+    }
+
+    impl SlowBackend {
+        fn new(batch_dim: usize, delay: Duration) -> Self {
+            SlowBackend {
+                specs: vec![crate::serve::backend::FeatureSpec {
+                    name: "x".into(),
+                    shape: vec![],
+                    dtype: crate::runtime::Dtype::F32,
+                }],
+                batch_dim,
+                delay,
+            }
+        }
+    }
+
+    struct SlowRunner {
+        delay: Duration,
+    }
+
+    impl super::super::backend::BatchRunner for SlowRunner {
+        fn run(&mut self, inputs: &[HostValue], n: usize) -> Result<Vec<Vec<f32>>> {
+            std::thread::sleep(self.delay);
+            let xs = inputs[0].as_f32()?;
+            Ok((0..n).map(|i| vec![xs.data()[i] * 2.0]).collect())
+        }
+    }
+
+    impl Backend for SlowBackend {
+        fn name(&self) -> String {
+            "test/slow".into()
+        }
+        fn batch_dim(&self) -> usize {
+            self.batch_dim
+        }
+        fn feature_specs(&self) -> &[crate::serve::backend::FeatureSpec] {
+            &self.specs
+        }
+        fn make_runner(&self) -> Result<Box<dyn super::super::backend::BatchRunner>> {
+            Ok(Box::new(SlowRunner { delay: self.delay }))
+        }
+    }
+
+    /// The satellite bugfix's pin: after a mixed workload — successes,
+    /// `try_submit` rejections against a full queue, timed-out waiters, and
+    /// a shutdown with requests still queued — the queue-depth gauge reads
+    /// exactly 0 and every accepted request was resolved exactly once.
+    #[test]
+    fn queue_depth_gauge_is_exactly_zero_after_mixed_workload() {
+        let backend = Arc::new(SlowBackend::new(2, Duration::from_millis(4)));
+        let cfg = ServeConfig {
+            workers: 1,
+            queue_capacity: 2,
+            policy: BatchPolicy { max_batch: 2, max_wait: Duration::ZERO },
+            metrics_prefix: "serve.test_mixed".into(),
+        };
+        let engine = Engine::start(backend, cfg).unwrap();
+        let m = engine.metrics();
+        let x = |v: f32| vec![HostValue::scalar_f32(v)];
+
+        // successes
+        for i in 0..4 {
+            let resp = engine.predict(x(i as f32)).unwrap();
+            assert_eq!(resp.output, vec![i as f32 * 2.0]);
+        }
+
+        // rejections: with a 4 ms batch delay and capacity 2, spamming
+        // try_submit must hit Full; keep every accepted ticket
+        let mut tickets = Vec::new();
+        let mut spins = 0;
+        while m.rejected.load(Ordering::Relaxed) == 0 {
+            if let Ok(t) = engine.try_submit(x(1.0)) {
+                tickets.push(t);
+            }
+            spins += 1;
+            assert!(spins < 100_000, "never saw a Full rejection");
+        }
+
+        // timeouts: waiters give up immediately — workers will later find
+        // the slots abandoned and count the no-op deliveries
+        let timed_out = 6;
+        for _ in 0..timed_out {
+            if let Ok(t) = engine.try_submit(x(2.0)) {
+                assert!(t.wait_timeout(Duration::ZERO).is_err());
+            }
+        }
+
+        // shutdown with work still queued: accepted requests must resolve
+        for _ in 0..2 {
+            if let Ok(t) = engine.submit(x(3.0)) {
+                tickets.push(t);
+            }
+        }
+        engine.shutdown();
+        for t in tickets {
+            let _ = t.wait_timeout(Duration::from_secs(5)); // Ok or typed error — never a hang
+        }
+
+        assert_eq!(
+            m.queue_depth.load(Ordering::Relaxed),
+            0,
+            "gauge must return to exactly 0 after drain: {}",
+            m.summary()
+        );
+        // conservation: every accepted request was resolved exactly once
+        let sub = m.submitted.load(Ordering::Relaxed);
+        let done = m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed);
+        assert_eq!(sub, done, "accepted ≠ resolved: {}", m.summary());
+        assert!(m.rejected.load(Ordering::Relaxed) > 0);
+    }
+
+    /// Stress the timeout-vs-worker race through the whole engine: late
+    /// fulfills after `wait_timeout` must be silent no-ops, counted in
+    /// `ServeMetrics::abandoned`, and the worker pool must stay alive.
+    #[test]
+    fn abandoned_tickets_are_counted_and_harmless() {
+        let backend = Arc::new(SlowBackend::new(4, Duration::from_millis(1)));
+        let cfg = ServeConfig {
+            workers: 2,
+            queue_capacity: 64,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+            metrics_prefix: "serve.test_abandon".into(),
+        };
+        let engine = Engine::start(backend, cfg).unwrap();
+        let m = engine.metrics();
+        let x = |v: f32| vec![HostValue::scalar_f32(v)];
+        for i in 0..50 {
+            let t = engine.submit(x(i as f32)).unwrap();
+            // a mix of instant and marginal deadlines to cross the
+            // fulfill on both sides
+            let _ = t.wait_timeout(Duration::from_micros((i % 3) * 400));
+        }
+        // the engine still serves fresh requests afterwards
+        assert!(engine.predict(x(7.0)).is_ok());
+        engine.shutdown();
+        assert!(
+            m.abandoned.load(Ordering::Relaxed) > 0,
+            "expected some timed-out deliveries to be counted: {}",
+            m.summary()
+        );
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
     }
 }

@@ -30,12 +30,18 @@ pub struct ServeMetrics {
     pub failed: Arc<AtomicU64>,
     /// Shed at submit time (queue full — backpressure).
     pub rejected: Arc<AtomicU64>,
+    /// Delivered after the waiter gave up (timeout or disconnect): the
+    /// work ran but nobody received it — a no-op fulfill, never a panic.
+    pub abandoned: Arc<AtomicU64>,
     pub batches: Arc<AtomicU64>,
     /// Live (request) rows executed.
     pub batched_rows: Arc<AtomicU64>,
     /// Padding rows executed and discarded.
     pub padded_rows: Arc<AtomicU64>,
-    /// Requests currently queued (gauge: +1 on accept, −1 on dequeue).
+    /// Requests currently queued. Maintained exclusively by
+    /// [`BoundedQueue`](super::queue::BoundedQueue) under its mutex
+    /// (`with_gauge`): +1 per accepted push, −n per popped batch — no
+    /// other code path may touch it, so it reads exactly 0 at drain.
     pub queue_depth: Arc<AtomicI64>,
     started: Instant,
 }
@@ -55,6 +61,7 @@ impl ServeMetrics {
             completed: Arc::new(AtomicU64::new(0)),
             failed: Arc::new(AtomicU64::new(0)),
             rejected: Arc::new(AtomicU64::new(0)),
+            abandoned: Arc::new(AtomicU64::new(0)),
             batches: Arc::new(AtomicU64::new(0)),
             batched_rows: Arc::new(AtomicU64::new(0)),
             padded_rows: Arc::new(AtomicU64::new(0)),
@@ -75,6 +82,7 @@ impl ServeMetrics {
             ("completed", &m.completed),
             ("failed", &m.failed),
             ("rejected", &m.rejected),
+            ("abandoned", &m.abandoned),
             ("batches", &m.batches),
             ("batched_rows", &m.batched_rows),
             ("padded_rows", &m.padded_rows),
@@ -129,17 +137,19 @@ impl ServeMetrics {
     /// Human-readable multi-line summary (CLI / demo output).
     pub fn summary(&self) -> String {
         let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
-        let (sub, ok, fail, rej) = (
+        let (sub, ok, fail, rej, aband) = (
             get(&self.submitted),
             get(&self.completed),
             get(&self.failed),
             get(&self.rejected),
+            get(&self.abandoned),
         );
         let (batches, live, pad) =
             (get(&self.batches), get(&self.batched_rows), get(&self.padded_rows));
         let pad_pct = if live + pad > 0 { 100.0 * pad as f64 / (live + pad) as f64 } else { 0.0 };
         format!(
-            "requests  : {sub} submitted, {ok} ok, {fail} failed, {rej} rejected (backpressure)\n\
+            "requests  : {sub} submitted, {ok} ok, {fail} failed, {rej} rejected (backpressure), \
+             {aband} abandoned\n\
              batches   : {batches} executed, {:.1} rows/batch mean, {pad_pct:.1}% padding\n\
              queue     : depth {}\n\
              latency   : {}\n\
@@ -163,6 +173,7 @@ impl ServeMetrics {
             ("completed", Json::num(get(&self.completed))),
             ("failed", Json::num(get(&self.failed))),
             ("rejected", Json::num(get(&self.rejected))),
+            ("abandoned", Json::num(get(&self.abandoned))),
             ("batches", Json::num(get(&self.batches))),
             ("batched_rows", Json::num(get(&self.batched_rows))),
             ("padded_rows", Json::num(get(&self.padded_rows))),

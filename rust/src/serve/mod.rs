@@ -21,6 +21,15 @@
 //!   client per worker because `PjRtClient` is `Rc`-based).
 //! * [`engine`] — the worker pool: submit-time validation, graceful
 //!   shutdown, load shedding when the queue is full.
+//! * [`router`] — per-model routing and **checkpoint hot-swap**: publish
+//!   a rebuilt backend without dropping in-flight requests; responses
+//!   carry the generation that served them.
+//! * [`net`] — the socket **front door**: newline-delimited JSON over
+//!   TCP/UDS ([`crate::transport::socket`]'s endpoints and timeout
+//!   discipline), parsed incrementally by
+//!   [`crate::util::json::StreamParser`]; admission control sheds typed
+//!   429s past a queue-depth watermark, malformed traffic kills only its
+//!   own connection.
 //! * [`metrics`] — latency histograms (p50/p95/p99), throughput counters
 //!   and the queue-depth gauge.
 //!
@@ -53,12 +62,16 @@ pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod net;
 pub mod queue;
 pub mod registry;
+pub mod router;
 
 pub use backend::{Backend, BatchRunner, FeatureSpec, HostBackend, RuntimeBackend, Validator};
 pub use batcher::BatchPolicy;
 pub use engine::{Engine, ServeConfig};
 pub use metrics::ServeMetrics;
+pub use net::{NetClient, NetConfig, NetServer, NetStats};
 pub use queue::{Response, Ticket};
 pub use registry::{ModelRegistry, WeightStore};
+pub use router::{RouteRef, Router};

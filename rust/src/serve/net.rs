@@ -1,0 +1,657 @@
+//! The serving **front door**: a socket listener speaking
+//! newline-delimited JSON over TCP or Unix-domain sockets.
+//!
+//! Transport reuse: endpoints, listeners and streams are
+//! [`crate::transport::socket`]'s — the same `host:port` / `unix:/path`
+//! syntax, the same typed-timeout discipline (connect, accept, read and
+//! write all carry deadlines, never a hang). Request parsing is
+//! [`StreamParser`]'s incremental, resumable decode: requests split across
+//! arbitrary TCP segment boundaries are fine, and any malformed byte
+//! becomes one typed error response followed by a connection close —
+//! never a worker death (the chaos leg of `benches/perf_serve.rs` feeds
+//! testkit corruptions straight into this path).
+//!
+//! ## Protocol (`s2serve` v1)
+//!
+//! One JSON value per line, each direction. On connect the server sends a
+//! hello:
+//!
+//! ```text
+//! {"proto":"s2serve","version":1,"models":["ncf"],"gens":{"ncf":1}}
+//! ```
+//!
+//! Requests name a model (optional while exactly one is published) and
+//! carry one flat number array per feature slot (a bare number is
+//! accepted for scalar slots):
+//!
+//! ```text
+//! {"id":7,"model":"ncf","features":[3,41]}
+//! {"id":8,"features":[[3],[41]]}
+//! ```
+//!
+//! Responses echo the id and stamp the checkpoint generation that served
+//! the row ([`Router`] hot-swap visibility):
+//!
+//! ```text
+//! {"id":7,"gen":1,"output":[0.53],"latency_us":812}
+//! {"id":9,"error":{"code":429,"kind":"overloaded","msg":"queue depth ≥ 512"}}
+//! ```
+//!
+//! Error codes follow HTTP idiom: 400 bad request (malformed JSON,
+//! wrong features, validation failure), 404 unknown model, 408 request
+//! or read timeout, 429 shed (admission control: queue depth past
+//! [`NetConfig::shed_watermark`], or the queue itself full), 500
+//! execution failure, 503 shutting down. A JSON parse error is
+//! unrecoverable on a byte stream (framing is lost), so it is answered
+//! with a 400 carrying the typed [`ErrorKind`] and the connection closes;
+//! requests that had already parsed still get their answers first.
+//!
+//! ## Pipelining
+//!
+//! Clients may stream many requests without waiting. Each read's worth of
+//! completed requests is submitted to the engine **as a burst** before
+//! any ticket is waited on, so the micro-batcher coalesces pipelined
+//! requests from a single connection; responses come back in request
+//! order.
+
+use std::io::{ErrorKind as IoErrorKind, Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Dtype, HostValue};
+use crate::telemetry::{Counter, Metric, Registry};
+use crate::transport::socket::{Endpoint, Listener, SocketOptions, Stream};
+use crate::transport::TransportError;
+use crate::util::json::{ErrorKind, Json, ParseError, StreamParser};
+
+use super::backend::FeatureSpec;
+use super::queue::{Response, Ticket};
+use super::router::Router;
+
+/// Protocol name in the hello frame.
+pub const PROTO: &str = "s2serve";
+/// Protocol version in the hello frame.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Accept/read poll tick: how often blocked socket waits re-check the
+/// stop flag.
+const TICK: Duration = Duration::from_millis(50);
+
+/// Front-door knobs.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Where to listen (`host:port` or `unix:/path`); TCP port 0 binds an
+    /// ephemeral port, readable back via [`NetServer::endpoint`].
+    pub endpoint: Endpoint,
+    /// Mid-request stall budget: a connection silent for this long in the
+    /// middle of a value gets a 408 and is closed. Idle connections
+    /// (between requests) are never timed out.
+    pub io_timeout: Duration,
+    /// Server-side cap on one request's queue wait + execution.
+    pub request_timeout: Duration,
+    /// Admission control: shed (429) when the routed engine's queue depth
+    /// is at or past this mark. `None` sheds only on a full queue.
+    pub shed_watermark: Option<usize>,
+    /// Byte budget for a single in-flight request value
+    /// ([`StreamParser::with_max_value_bytes`]).
+    pub max_request_bytes: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            endpoint: Endpoint::Tcp("127.0.0.1:0".to_string()),
+            io_timeout: Duration::from_secs(10),
+            request_timeout: Duration::from_secs(30),
+            shed_watermark: None,
+            max_request_bytes: 1 << 20,
+        }
+    }
+}
+
+/// Front-door counters, registered under `serve.net.*` so registry
+/// snapshots see them next to the per-model engine metrics.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    pub connections: Arc<AtomicU64>,
+    /// Request values parsed off sockets (including ones later rejected).
+    pub requests: Arc<AtomicU64>,
+    /// Response lines written (success or typed error).
+    pub responses: Arc<AtomicU64>,
+    /// 429s: admission-control watermark or queue-full backpressure.
+    pub shed: Arc<AtomicU64>,
+    /// Malformed traffic: JSON parse errors and mid-value stalls.
+    pub protocol_errors: Arc<AtomicU64>,
+}
+
+impl NetStats {
+    pub fn registered(reg: &Registry) -> Self {
+        let s = NetStats::default();
+        for (name, c) in [
+            ("connections", &s.connections),
+            ("requests", &s.requests),
+            ("responses", &s.responses),
+            ("shed", &s.shed),
+            ("protocol_errors", &s.protocol_errors),
+        ] {
+            reg.adopt(&format!("serve.net.{name}"), Metric::Counter(Counter::shared(c.clone())));
+        }
+        s
+    }
+}
+
+/// A running socket front end: one accept thread, one handler thread per
+/// connection, all answering through a shared [`Router`].
+pub struct NetServer {
+    endpoint: Endpoint,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    stats: Arc<NetStats>,
+}
+
+impl NetServer {
+    /// Bind and start serving. The router may be (re)populated while the
+    /// server runs — `publish` on a live router is the hot-swap path.
+    pub fn start(router: Arc<Router>, cfg: NetConfig) -> Result<NetServer> {
+        let listener = Listener::bind(&cfg.endpoint)
+            .with_context(|| format!("binding serve listener on {}", cfg.endpoint))?;
+        let endpoint = listener.local_endpoint()?;
+        let stats = Arc::new(NetStats::registered(crate::telemetry::registry()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::default();
+        let accept = {
+            let (stop, conns, stats) = (stop.clone(), conns.clone(), stats.clone());
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(listener, router, cfg, stop, conns, stats))
+                .context("spawning serve accept thread")?
+        };
+        crate::log_info!("serve front door listening on {endpoint}");
+        Ok(NetServer { endpoint, stop, accept: Some(accept), conns, stats })
+    }
+
+    /// The actually-bound endpoint (resolves an ephemeral `:0` port).
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    pub fn stats(&self) -> &Arc<NetStats> {
+        &self.stats
+    }
+
+    /// Stop accepting, wake idle connections, join every handler. In-flight
+    /// requests get up to [`NetConfig::request_timeout`] to finish.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.conns.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn accept_loop(
+    listener: Listener,
+    router: Arc<Router>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    stats: Arc<NetStats>,
+) {
+    let mut n = 0usize;
+    while !stop.load(Ordering::Relaxed) {
+        let stream = match listener.accept_timeout(TICK) {
+            Ok(s) => s,
+            Err(TransportError::Timeout { .. }) => continue,
+            Err(e) => {
+                crate::log_error!("serve accept failed: {e}");
+                std::thread::sleep(TICK);
+                continue;
+            }
+        };
+        stats.connections.fetch_add(1, Ordering::Relaxed);
+        n += 1;
+        let handle = {
+            let (router, cfg, stop, stats) =
+                (router.clone(), cfg.clone(), stop.clone(), stats.clone());
+            std::thread::Builder::new().name(format!("serve-conn-{n}")).spawn(move || {
+                if let Err(e) = serve_connection(stream, &router, &cfg, &stop, &stats) {
+                    crate::log_debug!("serve connection closed: {e:#}");
+                }
+            })
+        };
+        match handle {
+            Ok(h) => conns.lock().unwrap().push(h),
+            Err(e) => crate::log_error!("spawning serve connection handler: {e}"),
+        }
+    }
+}
+
+/// One connection's lifetime: hello, then read → parse → burst-submit →
+/// respond, until EOF, stop, stall or a poisoned parse. Any error here
+/// kills only this connection — the worker pool and every other
+/// connection are untouched.
+fn serve_connection(
+    mut stream: Stream,
+    router: &Router,
+    cfg: &NetConfig,
+    stop: &AtomicBool,
+    stats: &NetStats,
+) -> Result<()> {
+    stream.set_read_timeout(Some(TICK))?;
+    stream.set_write_timeout(Some(cfg.io_timeout))?;
+    write_line(&mut stream, &hello_json(router))?;
+
+    let mut parser = StreamParser::with_max_value_bytes(cfg.max_request_bytes);
+    let mut buf = vec![0u8; 8192];
+    let mut last_byte = Instant::now();
+    loop {
+        // answer everything already parsed before reading more
+        respond_burst(&mut stream, &mut parser, router, cfg, stats)?;
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return Ok(()), // client closed; a partial trailing value is dropped
+            Ok(n) => {
+                last_byte = Instant::now();
+                if let Err(e) = parser.feed(&buf[..n]) {
+                    // requests completed before the bad byte still answer…
+                    respond_burst(&mut stream, &mut parser, router, cfg, stats)?;
+                    // …then one typed parse error, and the connection dies:
+                    // after a framing loss there is no safe resync point
+                    stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    stats.responses.fetch_add(1, Ordering::Relaxed);
+                    write_line(&mut stream, &parse_error_json(&e))?;
+                    return Err(e.into());
+                }
+            }
+            Err(e) if matches!(e.kind(), IoErrorKind::WouldBlock | IoErrorKind::TimedOut) => {
+                // idle between requests is fine; silence *mid-value* past
+                // the io budget is a stalled/truncated request
+                if parser.mid_value() && last_byte.elapsed() >= cfg.io_timeout {
+                    stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    let msg = format!(
+                        "connection stalled mid-request for {:?} ({} bytes in flight)",
+                        cfg.io_timeout,
+                        parser.in_flight_bytes()
+                    );
+                    stats.responses.fetch_add(1, Ordering::Relaxed);
+                    let _ = write_line(&mut stream, &err_json(Json::Null, 408, "timeout", &msg));
+                    bail!("{msg}");
+                }
+            }
+            Err(e) if e.kind() == IoErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Drain every parsed value: submit the whole burst (the micro-batcher
+/// coalesces it), then wait and answer in request order.
+fn respond_burst(
+    stream: &mut Stream,
+    parser: &mut StreamParser,
+    router: &Router,
+    cfg: &NetConfig,
+    stats: &NetStats,
+) -> Result<()> {
+    let mut pending = Vec::new();
+    while let Some(v) = parser.next_value() {
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        pending.push(submit_one(v, router, cfg, stats));
+    }
+    for p in pending {
+        let response = match p {
+            Ok(pend) => await_ticket(pend, cfg),
+            Err(rejection) => rejection,
+        };
+        stats.responses.fetch_add(1, Ordering::Relaxed);
+        write_line(stream, &response)?;
+    }
+    Ok(())
+}
+
+/// A request admitted into an engine: its ticket plus the response stamps.
+struct Pending {
+    id: Json,
+    generation: u64,
+    ticket: Ticket,
+}
+
+fn await_ticket(p: Pending, cfg: &NetConfig) -> Json {
+    let deadline = Instant::now() + cfg.request_timeout;
+    match p.ticket.wait_timeout(cfg.request_timeout) {
+        Ok(resp) => ok_json(p.id, p.generation, &resp),
+        Err(e) if Instant::now() >= deadline => {
+            err_json(p.id, 408, "timeout", &format!("{e:#}"))
+        }
+        Err(e) => err_json(p.id, 500, "execution", &format!("{e:#}")),
+    }
+}
+
+/// Validate and admit one parsed request. `Err` carries the ready-to-send
+/// rejection response.
+fn submit_one(
+    v: Json,
+    router: &Router,
+    cfg: &NetConfig,
+    stats: &NetStats,
+) -> std::result::Result<Pending, Json> {
+    if v.as_obj().is_none() {
+        return Err(err_json(Json::Null, 400, "bad_request", "request must be a JSON object"));
+    }
+    let id = v.get("id").clone();
+    if !matches!(id, Json::Num(_)) {
+        return Err(err_json(id, 400, "bad_request", "request needs a numeric \"id\""));
+    }
+    let model = match v.get("model") {
+        Json::Str(s) => Some(s.as_str()),
+        Json::Null => None,
+        _ => return Err(err_json(id, 400, "bad_request", "\"model\" must be a string")),
+    };
+    let route = match router.route(model) {
+        Ok(r) => r,
+        Err(e) => {
+            // unknown name → 404; "must name a model" ambiguity → 400
+            let (code, kind) =
+                if model.is_some() { (404, "model_not_found") } else { (400, "bad_request") };
+            return Err(err_json(id, code, kind, &format!("{e:#}")));
+        }
+    };
+
+    // Admission control: shed before decoding features — the cheapest
+    // rejection path, keyed off the same gauge the queue maintains.
+    if let Some(watermark) = cfg.shed_watermark {
+        if route.engine.queue_depth() >= watermark {
+            stats.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(err_json(
+                id,
+                429,
+                "overloaded",
+                &format!("'{}' queue depth at the shed watermark ({watermark})", route.model),
+            ));
+        }
+    }
+
+    let features = match decode_features(v.get("features"), route.engine.backend().feature_specs())
+    {
+        Ok(f) => f,
+        Err(e) => return Err(err_json(id, 400, "bad_request", &format!("{e:#}"))),
+    };
+    // keep a copy so a submit that races a hot swap can re-route once
+    match route.engine.try_submit(features.clone()) {
+        Ok(ticket) => Ok(Pending { id, generation: route.generation, ticket }),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            if msg.contains("backpressure") {
+                stats.shed.fetch_add(1, Ordering::Relaxed);
+                Err(err_json(id, 429, "overloaded", &msg))
+            } else if msg.contains("shut down") {
+                // raced a hot swap: the slot already has (or is getting) a
+                // fresh generation — resolve it again, once
+                match router.route(model) {
+                    Ok(r2) => match r2.engine.try_submit(features) {
+                        Ok(ticket) => Ok(Pending { id, generation: r2.generation, ticket }),
+                        Err(e2) => {
+                            Err(err_json(id, 503, "shutting_down", &format!("{e2:#}")))
+                        }
+                    },
+                    Err(e2) => Err(err_json(id, 503, "shutting_down", &format!("{e2:#}"))),
+                }
+            } else {
+                // submit-time validation (id ranges etc.)
+                Err(err_json(id, 400, "bad_request", &msg))
+            }
+        }
+    }
+}
+
+/// JSON feature payload → one [`HostValue`] per spec slot. A bare number
+/// is accepted where the slot is scalar; otherwise a flat number array of
+/// exactly the spec's element count, reshaped to the spec.
+fn decode_features(v: &Json, specs: &[FeatureSpec]) -> Result<Vec<HostValue>> {
+    let arr = v
+        .as_arr()
+        .context("\"features\" must be an array with one entry per feature slot")?;
+    if arr.len() != specs.len() {
+        bail!(
+            "request has {} feature slots, model expects {} ({:?})",
+            arr.len(),
+            specs.len(),
+            specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>()
+        );
+    }
+    arr.iter()
+        .zip(specs.iter())
+        .map(|(slot, spec)| {
+            let count: usize = spec.shape.iter().product();
+            let nums: Vec<f64> = match slot {
+                Json::Num(n) if count == 1 => vec![*n],
+                Json::Arr(a) => a
+                    .iter()
+                    .map(|x| {
+                        x.as_f64().with_context(|| {
+                            format!("feature '{}': non-numeric element", spec.name)
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+                _ => bail!("feature '{}' must be a number or a flat number array", spec.name),
+            };
+            if nums.len() != count {
+                bail!(
+                    "feature '{}': {} values, expected {count} (shape {:?})",
+                    spec.name,
+                    nums.len(),
+                    spec.shape
+                );
+            }
+            match spec.dtype {
+                Dtype::I32 => {
+                    let data = nums
+                        .iter()
+                        .map(|&n| {
+                            if n.fract() != 0.0 || n < i32::MIN as f64 || n > i32::MAX as f64 {
+                                bail!("feature '{}': {n} is not an i32", spec.name);
+                            }
+                            Ok(n as i32)
+                        })
+                        .collect::<Result<Vec<i32>>>()?;
+                    Ok(HostValue::i32(spec.shape.clone(), data))
+                }
+                Dtype::F32 => Ok(HostValue::f32(
+                    spec.shape.clone(),
+                    nums.iter().map(|&n| n as f32).collect(),
+                )),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// wire helpers
+// ---------------------------------------------------------------------------
+
+fn write_line(stream: &mut Stream, v: &Json) -> std::io::Result<()> {
+    let mut line = v.to_string();
+    line.push('\n');
+    stream.write_all(line.as_bytes())
+}
+
+fn hello_json(router: &Router) -> Json {
+    let models = router.models();
+    let gens = models
+        .iter()
+        .filter_map(|m| router.generation(m).map(|g| (m.clone(), Json::num(g as f64))))
+        .collect();
+    Json::obj(vec![
+        ("proto", Json::str(PROTO)),
+        ("version", Json::num(PROTO_VERSION as f64)),
+        ("models", Json::Arr(models.into_iter().map(Json::Str).collect())),
+        ("gens", Json::Obj(gens)),
+    ])
+}
+
+fn ok_json(id: Json, generation: u64, resp: &Response) -> Json {
+    Json::obj(vec![
+        ("id", id),
+        ("gen", Json::num(generation as f64)),
+        ("output", Json::arr_f32(&resp.output)),
+        ("latency_us", Json::num(resp.latency.as_micros() as f64)),
+    ])
+}
+
+fn err_json(id: Json, code: u32, kind: &str, msg: &str) -> Json {
+    Json::obj(vec![
+        ("id", id),
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::num(code as f64)),
+                ("kind", Json::str(kind)),
+                ("msg", Json::str(msg)),
+            ]),
+        ),
+    ])
+}
+
+fn parse_error_json(e: &ParseError) -> Json {
+    let kind = match e.kind {
+        ErrorKind::Syntax => "syntax",
+        ErrorKind::DuplicateKey => "duplicate_key",
+        ErrorKind::UnexpectedEof => "unexpected_eof",
+        ErrorKind::TrailingGarbage => "trailing_garbage",
+        ErrorKind::TooDeep => "too_deep",
+        ErrorKind::ValueTooLarge => "value_too_large",
+    };
+    err_json(Json::Null, 400, kind, &e.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+/// Blocking `s2serve` client: dial, read the hello, then pipeline
+/// requests ([`send`](NetClient::send) many, [`recv`](NetClient::recv) in
+/// order) or call one at a time ([`call`](NetClient::call)). The load
+/// generator and the integration tests drive servers through this; its
+/// [`send_raw`](NetClient::send_raw) is the chaos tests' corruption
+/// channel.
+pub struct NetClient {
+    stream: Stream,
+    parser: StreamParser,
+    buf: Vec<u8>,
+    next_id: u64,
+    hello: Json,
+}
+
+impl NetClient {
+    pub fn connect(ep: &Endpoint, opts: SocketOptions) -> Result<NetClient> {
+        let stream = Stream::connect(ep, opts.connect_timeout)
+            .with_context(|| format!("dialing serve front door at {ep}"))?;
+        stream.set_read_timeout(Some(opts.io_timeout))?;
+        stream.set_write_timeout(Some(opts.io_timeout))?;
+        let mut client = NetClient {
+            stream,
+            parser: StreamParser::new(),
+            buf: vec![0u8; 8192],
+            next_id: 0,
+            hello: Json::Null,
+        };
+        let hello = client.recv().context("reading server hello")?;
+        if hello.get("proto").as_str() != Some(PROTO) {
+            bail!("peer is not an {PROTO} server: {hello}");
+        }
+        client.hello = hello;
+        Ok(client)
+    }
+
+    /// The server's hello frame (protocol version, models, generations).
+    pub fn hello(&self) -> &Json {
+        &self.hello
+    }
+
+    /// Model names the server advertised at connect time.
+    pub fn models(&self) -> Vec<String> {
+        self.hello
+            .get("models")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|m| m.as_str().map(String::from)).collect())
+            .unwrap_or_default()
+    }
+
+    /// Fire one request without waiting (pipelining). `features` is one
+    /// JSON value per feature slot (numbers or flat number arrays).
+    /// Returns the id the response will echo.
+    pub fn send(&mut self, model: Option<&str>, features: &[Json]) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut fields = vec![("id", Json::num(id as f64))];
+        if let Some(m) = model {
+            fields.push(("model", Json::str(m)));
+        }
+        fields.push(("features", Json::Arr(features.to_vec())));
+        let mut line = Json::obj(fields).to_string();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes())?;
+        Ok(id)
+    }
+
+    /// Put raw bytes on the wire — the chaos tests' corruption channel.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream.write_all(bytes)?;
+        Ok(())
+    }
+
+    /// Read the next response value (blocking, bounded by the socket's
+    /// read timeout).
+    pub fn recv(&mut self) -> Result<Json> {
+        loop {
+            if let Some(v) = self.parser.next_value() {
+                return Ok(v);
+            }
+            match self.stream.read(&mut self.buf) {
+                Ok(0) => bail!("server closed the connection"),
+                Ok(n) => {
+                    let slice = &self.buf[..n];
+                    self.parser.feed(slice).context("malformed bytes from server")?;
+                }
+                Err(e)
+                    if matches!(e.kind(), IoErrorKind::WouldBlock | IoErrorKind::TimedOut) =>
+                {
+                    bail!("timed out waiting for a response");
+                }
+                Err(e) if e.kind() == IoErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Send one request and wait for its response.
+    pub fn call(&mut self, model: Option<&str>, features: &[Json]) -> Result<Json> {
+        let id = self.send(model, features)?;
+        let resp = self.recv()?;
+        if resp.get("id").as_f64() != Some(id as f64) && !matches!(resp.get("id"), Json::Null) {
+            bail!("response id {} does not match request {id}", resp.get("id"));
+        }
+        Ok(resp)
+    }
+}

@@ -9,6 +9,7 @@
 //! and [`BoundedQueue::push`] blocks the producer.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -36,13 +37,23 @@ pub struct Response {
     pub latency: Duration,
 }
 
+struct SlotState {
+    result: Option<Result<Response>>,
+    /// Set (under this mutex) when the waiter gives up — timeout or ticket
+    /// drop. A later `fulfill` is then a silent no-op, reported to the
+    /// worker so it can count the wasted delivery.
+    abandoned: bool,
+}
+
 struct Slot {
-    state: Mutex<Option<Result<Response>>>,
+    state: Mutex<SlotState>,
     cv: Condvar,
 }
 
 /// Client half of the completion channel: blocks until a worker fulfills
-/// (or drops) the paired [`Responder`].
+/// (or drops) the paired [`Responder`]. Dropping a ticket — including the
+/// implicit drop after [`Ticket::wait_timeout`] gives up — marks the slot
+/// abandoned, so a late delivery can never panic, hang, or leak.
 pub struct Ticket {
     pub id: u64,
     slot: Arc<Slot>,
@@ -59,25 +70,34 @@ pub struct Responder {
 
 /// Create a linked (worker, client) completion pair.
 pub fn oneshot(id: u64) -> (Responder, Ticket) {
-    let slot = Arc::new(Slot { state: Mutex::new(None), cv: Condvar::new() });
+    let slot = Arc::new(Slot {
+        state: Mutex::new(SlotState { result: None, abandoned: false }),
+        cv: Condvar::new(),
+    });
     (Responder { id, slot: slot.clone(), done: false }, Ticket { id, slot })
 }
 
 impl Responder {
-    pub fn fulfill(mut self, result: Result<Response>) {
-        self.deliver(result);
+    /// Deliver the result. Returns `false` when the waiter had already
+    /// abandoned the ticket (timeout, disconnect): the result is dropped
+    /// silently and the caller should count the orphaned delivery.
+    pub fn fulfill(mut self, result: Result<Response>) -> bool {
+        self.deliver(result)
     }
 
-    fn deliver(&mut self, result: Result<Response>) {
+    fn deliver(&mut self, result: Result<Response>) -> bool {
         if self.done {
-            return;
+            return true;
         }
         self.done = true;
         let mut g = self.slot.state.lock().unwrap();
-        if g.is_none() {
-            *g = Some(result);
+        let live = !g.abandoned;
+        if live && g.result.is_none() {
+            g.result = Some(result);
         }
+        drop(g);
         self.slot.cv.notify_all();
+        live
     }
 }
 
@@ -96,25 +116,40 @@ impl Ticket {
     /// Block until the paired responder delivers.
     pub fn wait(self) -> Result<Response> {
         let mut g = self.slot.state.lock().unwrap();
-        while g.is_none() {
+        while g.result.is_none() {
             g = self.slot.cv.wait(g).unwrap();
         }
-        g.take().unwrap()
+        g.result.take().unwrap()
     }
 
-    /// Block up to `timeout`; `Err` if the deadline passes first.
+    /// Block up to `timeout`; `Err` if the deadline passes first. Giving up
+    /// abandons the slot *under the state mutex*, so exactly one of the two
+    /// outcomes happens: either this returns the response, or the worker's
+    /// eventual `fulfill` observes the abandonment and becomes a no-op.
     pub fn wait_timeout(self, timeout: Duration) -> Result<Response> {
         let deadline = Instant::now() + timeout;
         let mut g = self.slot.state.lock().unwrap();
-        while g.is_none() {
+        while g.result.is_none() {
             let now = Instant::now();
             if now >= deadline {
+                g.abandoned = true;
                 bail!("request {} timed out after {timeout:?}", self.id);
             }
             let (g2, _) = self.slot.cv.wait_timeout(g, deadline - now).unwrap();
             g = g2;
         }
-        g.take().unwrap()
+        g.result.take().unwrap()
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        // Runs on every exit path (wait consumed the result, timeout bailed,
+        // or the producer dropped the ticket without waiting — a client
+        // disconnect in the socket front end). Marking an already-delivered
+        // slot is harmless; marking an undelivered one makes the late
+        // fulfill a counted no-op.
+        self.slot.state.lock().unwrap().abandoned = true;
     }
 }
 
@@ -136,12 +171,20 @@ struct Inner<T> {
 /// fail but consumers drain the remaining items before seeing `None`
 /// (graceful shutdown never drops accepted requests).
 ///
+/// The queue optionally maintains an external depth gauge
+/// ([`with_gauge`]): it is incremented/decremented only here, while the
+/// queue mutex is held, so the gauge can never drift from the true depth
+/// or go negative — there is exactly one writer site per direction, not
+/// one per caller code path.
+///
 /// [`close`]: BoundedQueue::close
+/// [`with_gauge`]: BoundedQueue::with_gauge
 pub struct BoundedQueue<T> {
     inner: Mutex<Inner<T>>,
     not_empty: Condvar,
     not_full: Condvar,
     capacity: usize,
+    gauge: Option<Arc<AtomicI64>>,
 }
 
 impl<T> BoundedQueue<T> {
@@ -152,6 +195,22 @@ impl<T> BoundedQueue<T> {
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             capacity,
+            gauge: None,
+        }
+    }
+
+    /// Attach a depth gauge (e.g. `ServeMetrics::queue_depth`). All updates
+    /// happen under the queue mutex: +1 per accepted push, −n per popped
+    /// batch. At quiescence the gauge always equals [`depth`](Self::depth).
+    pub fn with_gauge(mut self, gauge: Arc<AtomicI64>) -> Self {
+        gauge.store(0, Ordering::Relaxed);
+        self.gauge = Some(gauge);
+        self
+    }
+
+    fn gauge_add(&self, delta: i64) {
+        if let Some(g) = &self.gauge {
+            g.fetch_add(delta, Ordering::Relaxed);
         }
     }
 
@@ -178,6 +237,7 @@ impl<T> BoundedQueue<T> {
             return Err(PushError::Full(item));
         }
         g.items.push_back(item);
+        self.gauge_add(1);
         drop(g);
         self.not_empty.notify_one();
         Ok(())
@@ -192,6 +252,7 @@ impl<T> BoundedQueue<T> {
             }
             if g.items.len() < self.capacity {
                 g.items.push_back(item);
+                self.gauge_add(1);
                 drop(g);
                 self.not_empty.notify_one();
                 return Ok(());
@@ -238,6 +299,7 @@ impl<T> BoundedQueue<T> {
                 break;
             }
         }
+        self.gauge_add(-(out.len() as i64));
         drop(g);
         self.not_full.notify_all();
         Some(out)
@@ -325,7 +387,7 @@ mod tests {
     #[test]
     fn ticket_resolves_on_fulfill_and_on_drop() {
         let (r, t) = oneshot(7);
-        r.fulfill(Ok(Response { id: 7, output: vec![1.0], latency: Duration::ZERO }));
+        assert!(r.fulfill(Ok(Response { id: 7, output: vec![1.0], latency: Duration::ZERO })));
         let resp = t.wait().unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.output, vec![1.0]);
@@ -336,5 +398,72 @@ mod tests {
 
         let (_r, t) = oneshot(9);
         assert!(t.wait_timeout(Duration::from_millis(5)).unwrap_err().to_string().contains("timed out"));
+    }
+
+    #[test]
+    fn late_fulfill_after_timeout_is_a_silent_noop() {
+        let (r, t) = oneshot(1);
+        assert!(t.wait_timeout(Duration::ZERO).is_err());
+        // the waiter is gone: delivery must be a no-op, reported as such
+        assert!(!r.fulfill(Ok(Response { id: 1, output: vec![], latency: Duration::ZERO })));
+
+        // dropping a ticket without waiting (client disconnect) abandons too
+        let (r, t) = oneshot(2);
+        drop(t);
+        assert!(!r.fulfill(Ok(Response { id: 2, output: vec![], latency: Duration::ZERO })));
+    }
+
+    /// Loom-style schedule sweep of the timeout-vs-fulfill race: whatever
+    /// the interleaving, exactly one side wins — a ticket that timed out
+    /// means the fulfill reported `false`, a delivered response means it
+    /// reported `true`. Never a panic, never both.
+    #[test]
+    fn timeout_fulfill_race_is_linearized() {
+        for i in 0..400u64 {
+            let (r, t) = oneshot(i);
+            let h = std::thread::spawn(move || {
+                for _ in 0..(i % 5) {
+                    std::thread::yield_now();
+                }
+                r.fulfill(Ok(Response { id: i, output: vec![i as f32], latency: Duration::ZERO }))
+            });
+            let waited = t.wait_timeout(Duration::from_micros((i % 3) * 40));
+            let delivered = h.join().unwrap();
+            match waited {
+                Ok(resp) => {
+                    assert!(delivered, "iter {i}: waiter got a response the worker saw as dropped");
+                    assert_eq!(resp.id, i);
+                }
+                Err(e) => {
+                    assert!(!delivered, "iter {i}: both timeout and delivery claimed the slot");
+                    assert!(e.to_string().contains("timed out"), "iter {i}: {e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gauge_tracks_depth_under_the_queue_mutex() {
+        use std::sync::atomic::AtomicI64;
+        let gauge = Arc::new(AtomicI64::new(99)); // with_gauge must reset it
+        let q = BoundedQueue::new(4).with_gauge(gauge.clone());
+        assert_eq!(gauge.load(Ordering::Relaxed), 0);
+        q.try_push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(gauge.load(Ordering::Relaxed), 2);
+        // rejected pushes must not move the gauge
+        q.try_push(3).unwrap();
+        q.try_push(4).unwrap();
+        assert!(matches!(q.try_push(5), Err(PushError::Full(5))));
+        assert_eq!(gauge.load(Ordering::Relaxed), 4);
+        assert_eq!(q.pop_batch(3, Duration::ZERO).unwrap(), vec![1, 2, 3]);
+        assert_eq!(gauge.load(Ordering::Relaxed), 1);
+        q.close();
+        assert!(matches!(q.try_push(6), Err(PushError::Closed(6))));
+        // close + drain: remaining items come out, gauge lands on exactly 0
+        assert_eq!(q.pop_batch(8, Duration::ZERO).unwrap(), vec![4]);
+        assert!(q.pop_batch(8, Duration::ZERO).is_none());
+        assert_eq!(gauge.load(Ordering::Relaxed), 0);
+        assert_eq!(q.depth(), 0);
     }
 }

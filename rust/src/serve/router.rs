@@ -1,0 +1,346 @@
+//! Per-model routing and **checkpoint hot-swap**.
+//!
+//! A [`Router`] maps model names to live [`Engine`]s and lets an operator
+//! [`publish`](Router::publish) a replacement backend (typically a model
+//! rebuilt from a fresh checkpoint) **without dropping in-flight
+//! requests**:
+//!
+//! 1. the replacement engine is fully started *before* the slot is
+//!    touched — a failed start (bad checkpoint, missing tensor) leaves the
+//!    old generation serving, untouched;
+//! 2. the slot's active engine is swapped under a write lock and the
+//!    generation counter bumps, so every response produced from then on
+//!    carries the new generation;
+//! 3. the old engine gets [`Engine::initiate_shutdown`]: its queue closes
+//!    (a racing submit fails typed, and the front door re-routes once),
+//!    but its workers drain everything already accepted — every old
+//!    ticket resolves with its result.
+//!
+//! Each model's engine registers its metrics under `serve.<model>.*`
+//! (via [`ServeConfig::metrics_prefix`]), so generations of the same
+//! model share one telemetry surface and different models don't clobber
+//! each other.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Result};
+
+use super::backend::Backend;
+use super::engine::{Engine, ServeConfig};
+
+/// What [`Router::route`] hands the front door: the engine to submit to
+/// and the generation stamp responses should carry.
+pub struct RouteRef {
+    pub model: String,
+    pub engine: Arc<Engine>,
+    /// Checkpoint generation (1 for the first publish, +1 per swap).
+    pub generation: u64,
+}
+
+struct Active {
+    engine: Arc<Engine>,
+    generation: u64,
+}
+
+/// One model name's current engine + generation, swapped atomically.
+struct ModelSlot {
+    active: RwLock<Active>,
+}
+
+/// Name → engine routing table with hot-swap. Cheap to share via `Arc`;
+/// the read path (`route`) takes two read locks and clones an `Arc`.
+pub struct Router {
+    slots: RwLock<BTreeMap<String, Arc<ModelSlot>>>,
+    /// Engine sizing template; `metrics_prefix` is overridden per model.
+    base: ServeConfig,
+}
+
+impl Router {
+    /// `base` sizes every engine this router starts (workers, queue
+    /// capacity, batch policy); its `metrics_prefix` is ignored in favour
+    /// of `serve.<model>`.
+    pub fn new(base: ServeConfig) -> Self {
+        Router { slots: RwLock::new(BTreeMap::new()), base }
+    }
+
+    /// Publish (or replace) the engine serving `name`. Builds and starts
+    /// the new engine first — on failure the previous generation keeps
+    /// serving and the error is returned. On success the new generation
+    /// number is returned and the old engine (if any) begins a graceful
+    /// drain: already-accepted requests complete, new submissions that
+    /// raced the swap fail typed and re-route.
+    pub fn publish(&self, name: &str, backend: Arc<dyn Backend>) -> Result<u64> {
+        let mut cfg = self.base.clone();
+        cfg.metrics_prefix = format!("serve.{name}");
+        // Start the replacement before touching the routing table: a
+        // worker that cannot build its runner must not interrupt service.
+        let engine = Arc::new(Engine::start(backend, cfg)?);
+
+        let slot = self.slots.read().unwrap().get(name).cloned();
+        let slot = match slot {
+            Some(s) => s,
+            None => {
+                let mut g = self.slots.write().unwrap();
+                // a racing publisher may have created the slot meanwhile
+                g.entry(name.to_string())
+                    .or_insert_with(|| {
+                        Arc::new(ModelSlot {
+                            // generation 0 is a placeholder the swap below
+                            // immediately replaces — route() can never see
+                            // it because the slot is inserted under the
+                            // table's write lock and swapped right after
+                            active: RwLock::new(Active {
+                                engine: engine.clone(),
+                                generation: 0,
+                            }),
+                        })
+                    })
+                    .clone()
+            }
+        };
+
+        let (old, generation) = {
+            let mut a = slot.active.write().unwrap();
+            a.generation += 1;
+            let old = std::mem::replace(&mut a.engine, engine.clone());
+            (old, a.generation)
+        };
+        // Outside the lock: close the old queue so its workers drain and
+        // exit. On the first publish of a name, `old` is the placeholder
+        // clone of the engine we just installed — it must keep accepting.
+        if !Arc::ptr_eq(&old, &engine) {
+            old.initiate_shutdown();
+        }
+        drop(old); // last Arc drop joins the drained workers
+        crate::log_info!("published '{name}' generation {generation}");
+        Ok(generation)
+    }
+
+    /// Resolve a model name to its live engine. `None` resolves only when
+    /// exactly one model is published (the protocol's default-model rule).
+    pub fn route(&self, name: Option<&str>) -> Result<RouteRef> {
+        let g = self.slots.read().unwrap();
+        let (model, slot) = match name {
+            Some(n) => match g.get(n) {
+                Some(s) => (n.to_string(), s.clone()),
+                None => {
+                    let have: Vec<&String> = g.keys().collect();
+                    bail!("model '{n}' not published (have: {have:?})")
+                }
+            },
+            None => match g.len() {
+                1 => {
+                    let (n, s) = g.iter().next().unwrap();
+                    (n.clone(), s.clone())
+                }
+                0 => bail!("no models published"),
+                _ => {
+                    let have: Vec<&String> = g.keys().collect();
+                    bail!("request must name a model (have: {have:?})")
+                }
+            },
+        };
+        drop(g);
+        let a = slot.active.read().unwrap();
+        Ok(RouteRef { model, engine: a.engine.clone(), generation: a.generation })
+    }
+
+    /// Published model names (the hello frame's `models` list).
+    pub fn models(&self) -> Vec<String> {
+        self.slots.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Current generation of a published model.
+    pub fn generation(&self, name: &str) -> Option<u64> {
+        let slot = self.slots.read().unwrap().get(name).cloned()?;
+        let g = slot.active.read().unwrap().generation;
+        Some(g)
+    }
+
+    /// Begin a graceful drain of every published engine (new submissions
+    /// fail typed; accepted requests complete). Engines join their worker
+    /// pools when the last `Arc<Engine>` clone drops.
+    pub fn shutdown(&self) {
+        for slot in self.slots.read().unwrap().values() {
+            slot.active.read().unwrap().engine.initiate_shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostValue;
+    use crate::serve::backend::{BatchRunner, FeatureSpec};
+    use crate::serve::batcher::BatchPolicy;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::time::Duration;
+
+    /// Backend whose outputs are `x * scale` — generations are told apart
+    /// by their scale.
+    struct ScaleBackend {
+        specs: Vec<FeatureSpec>,
+        scale: f32,
+        fail_start: bool,
+    }
+
+    impl ScaleBackend {
+        fn new(scale: f32) -> Arc<Self> {
+            Arc::new(ScaleBackend {
+                specs: vec![FeatureSpec {
+                    name: "x".into(),
+                    shape: vec![],
+                    dtype: crate::runtime::Dtype::F32,
+                }],
+                scale,
+                fail_start: false,
+            })
+        }
+    }
+
+    struct ScaleRunner {
+        scale: f32,
+    }
+
+    impl BatchRunner for ScaleRunner {
+        fn run(&mut self, inputs: &[HostValue], n: usize) -> Result<Vec<Vec<f32>>> {
+            let xs = inputs[0].as_f32()?;
+            Ok((0..n).map(|i| vec![xs.data()[i] * self.scale]).collect())
+        }
+    }
+
+    impl Backend for ScaleBackend {
+        fn name(&self) -> String {
+            format!("test/scale{}", self.scale)
+        }
+        fn batch_dim(&self) -> usize {
+            4
+        }
+        fn feature_specs(&self) -> &[FeatureSpec] {
+            &self.specs
+        }
+        fn make_runner(&self) -> Result<Box<dyn BatchRunner>> {
+            if self.fail_start {
+                bail!("synthetic runner-init failure");
+            }
+            Ok(Box::new(ScaleRunner { scale: self.scale }))
+        }
+    }
+
+    fn router() -> Router {
+        Router::new(ServeConfig {
+            workers: 2,
+            queue_capacity: 128,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+            metrics_prefix: "serve.test_router".into(),
+        })
+    }
+
+    fn x(v: f32) -> Vec<HostValue> {
+        vec![HostValue::scalar_f32(v)]
+    }
+
+    #[test]
+    fn publish_route_and_generation_bump() {
+        let r = router();
+        assert!(r.route(None).is_err(), "empty router routes nothing");
+        assert_eq!(r.publish("m", ScaleBackend::new(2.0)).unwrap(), 1);
+        // default-model rule: a single published model needs no name
+        let route = r.route(None).unwrap();
+        assert_eq!(route.model, "m");
+        assert_eq!(route.generation, 1);
+        assert_eq!(route.engine.predict(x(3.0)).unwrap().output, vec![6.0]);
+
+        assert_eq!(r.publish("m", ScaleBackend::new(10.0)).unwrap(), 2);
+        let route = r.route(Some("m")).unwrap();
+        assert_eq!(route.generation, 2);
+        assert_eq!(route.engine.predict(x(3.0)).unwrap().output, vec![30.0]);
+
+        assert!(r.route(Some("nope")).unwrap_err().to_string().contains("not published"));
+        // two models: the default-model rule stops resolving
+        r.publish("m2", ScaleBackend::new(1.0)).unwrap();
+        assert!(r.route(None).unwrap_err().to_string().contains("must name"));
+        assert_eq!(r.models(), vec!["m".to_string(), "m2".to_string()]);
+        assert_eq!(r.generation("m"), Some(2));
+        assert_eq!(r.generation("m2"), Some(1));
+        r.shutdown();
+    }
+
+    #[test]
+    fn failed_publish_leaves_the_old_generation_serving() {
+        let r = router();
+        r.publish("m", ScaleBackend::new(2.0)).unwrap();
+        let bad = Arc::new(ScaleBackend {
+            specs: vec![FeatureSpec {
+                name: "x".into(),
+                shape: vec![],
+                dtype: crate::runtime::Dtype::F32,
+            }],
+            scale: 99.0,
+            fail_start: true,
+        });
+        let err = r.publish("m", bad).unwrap_err().to_string();
+        assert!(err.contains("synthetic"), "{err}");
+        let route = r.route(Some("m")).unwrap();
+        assert_eq!(route.generation, 1, "generation must not bump on failure");
+        assert_eq!(route.engine.predict(x(2.0)).unwrap().output, vec![4.0]);
+        r.shutdown();
+    }
+
+    #[test]
+    fn hot_swap_under_load_drops_no_requests() {
+        // Clients hammer the router while generations flip; every request
+        // must succeed (on whichever generation caught it) — the old
+        // engine drains, racing submits re-route once.
+        let r = Arc::new(router());
+        r.publish("m", ScaleBackend::new(1.0)).unwrap();
+        let failures = Arc::new(AtomicU64::new(0));
+        let done = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for c in 0..4 {
+                let r = r.clone();
+                let failures = failures.clone();
+                let done = done.clone();
+                s.spawn(move || {
+                    for i in 0..200u32 {
+                        let v = (c * 1000 + i) as f32;
+                        // the engine resolved now may close mid-request;
+                        // re-route once like the front door does
+                        let mut ok = false;
+                        for _ in 0..2 {
+                            let route = r.route(Some("m")).unwrap();
+                            match route.engine.predict(x(v)) {
+                                Ok(resp) => {
+                                    // whichever generation answered, the
+                                    // row is the request's, not a stale one
+                                    assert_eq!(resp.output.len(), 1);
+                                    assert!(resp.output[0] == v || resp.output[0] == 2.0 * v);
+                                    ok = true;
+                                    break;
+                                }
+                                Err(e) if e.to_string().contains("shut down") => continue,
+                                Err(e) => panic!("request failed: {e:#}"),
+                            }
+                        }
+                        if ok {
+                            done.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+            // swap generations while the clients run
+            for gen in 0..6 {
+                std::thread::sleep(Duration::from_millis(3));
+                let scale = if gen % 2 == 0 { 2.0 } else { 1.0 };
+                r.publish("m", ScaleBackend::new(scale)).unwrap();
+            }
+        });
+        assert_eq!(failures.load(Ordering::Relaxed), 0);
+        assert_eq!(done.load(Ordering::Relaxed), 800);
+        assert_eq!(r.generation("m"), Some(7));
+        r.shutdown();
+    }
+}

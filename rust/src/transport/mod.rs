@@ -50,7 +50,7 @@ pub use channel::{in_process_ring, ChannelTransport};
 pub use frame::{encode_bundle, FrameDecoder, FrameEvent};
 pub use metrics::TransportCounters;
 pub use pipeline::BucketPipeline;
-pub use socket::{Endpoint, Listener, SocketOptions, SocketTransport};
+pub use socket::{Endpoint, Listener, SocketOptions, SocketTransport, Stream};
 
 /// Typed failures of the transport layer. Decode-side corruption
 /// (`BadMagic`, `HeaderCrc`, `Oversized`, `Codec`, `UnexpectedEof`,

@@ -140,6 +140,14 @@ impl Listener {
         }
     }
 
+    /// Accept one connection, waiting up to `timeout` — the serving front
+    /// door's accept-loop tick ([`crate::serve::net`]). A typed
+    /// [`TransportError::Timeout`] when nobody dials in time, never a hang,
+    /// so the loop can poll a stop flag between waits.
+    pub fn accept_timeout(&self, timeout: Duration) -> Result<Stream, TransportError> {
+        self.accept_deadline(Instant::now() + timeout, timeout)
+    }
+
     /// Accept one connection, polling until `deadline`.
     fn accept_deadline(
         &self,
@@ -192,6 +200,15 @@ pub enum Stream {
 }
 
 impl Stream {
+    /// Dial an endpoint, retrying until `timeout` while the peer process
+    /// is still binding — the same retry loop the ring setup uses, exposed
+    /// for point-to-point clients (the serve front door's [`NetClient`]).
+    ///
+    /// [`NetClient`]: crate::serve::net::NetClient
+    pub fn connect(ep: &Endpoint, timeout: Duration) -> Result<Stream, TransportError> {
+        connect_with_retry(ep, Instant::now() + timeout, timeout, &TransportCounters::new())
+    }
+
     fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
         match self {
             Stream::Tcp(s) => s.set_nonblocking(nb),
@@ -199,14 +216,14 @@ impl Stream {
         }
     }
 
-    fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
         match self {
             Stream::Tcp(s) => s.set_read_timeout(d),
             Stream::Unix(s) => s.set_read_timeout(d),
         }
     }
 
-    fn set_write_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+    pub fn set_write_timeout(&self, d: Option<Duration>) -> io::Result<()> {
         match self {
             Stream::Tcp(s) => s.set_write_timeout(d),
             Stream::Unix(s) => s.set_write_timeout(d),

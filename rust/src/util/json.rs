@@ -1,9 +1,14 @@
 //! A complete JSON parser and writer (RFC 8259 subset: UTF-8 text, `\uXXXX`
-//! escapes including surrogate pairs, numbers as `f64`).
+//! escapes including surrogate pairs, numbers as `f64`), plus an
+//! incremental [`StreamParser`] for newline-delimited request streams
+//! (feed partial buffers, resume mid-value, typed errors).
 //!
-//! Used for the L2→L3 artifact manifests (`artifacts/*.manifest.json`) and
-//! for metric/report emission. Built in-tree because `serde`/`serde_json`
-//! are not in the offline vendor set (see DESIGN.md "Substitutions").
+//! Used for the L2→L3 artifact manifests (`artifacts/*.manifest.json`),
+//! metric/report emission, and the serving front door's wire protocol
+//! (`serve::net`). Strict by design: trailing garbage and duplicate object
+//! keys are typed [`ParseError`]s. Built in-tree because
+//! `serde`/`serde_json` are not in the offline vendor set (see DESIGN.md
+//! "Substitutions").
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -20,13 +25,33 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-/// Parse error with byte offset and 1-based line/column.
-#[derive(Debug, thiserror::Error)]
+/// What class of malformation a [`ParseError`] reports. Callers that map
+/// parse failures onto protocol error codes (the serve front door) match on
+/// this instead of scraping the message text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Malformed token or structure (bad literal, stray character, …).
+    Syntax,
+    /// The same key appeared twice in one object.
+    DuplicateKey,
+    /// Input ended mid-value (`finish` on a partial stream, truncated text).
+    UnexpectedEof,
+    /// Extra non-whitespace bytes after the top-level value.
+    TrailingGarbage,
+    /// Nesting deeper than [`StreamParser::MAX_DEPTH`].
+    TooDeep,
+    /// One in-flight value exceeded the stream parser's byte budget.
+    ValueTooLarge,
+}
+
+/// Parse error with typed kind and 1-based line/column.
+#[derive(Debug, Clone, thiserror::Error)]
 #[error("json parse error at line {line}, col {col}: {msg}")]
 pub struct ParseError {
     pub msg: String,
     pub line: usize,
     pub col: usize,
+    pub kind: ErrorKind,
 }
 
 impl Json {
@@ -123,7 +148,10 @@ impl Json {
         let v = p.value()?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
-            return Err(p.err("trailing characters after top-level value"));
+            return Err(p.err_kind(
+                ErrorKind::TrailingGarbage,
+                "trailing characters after top-level value",
+            ));
         }
         Ok(v)
     }
@@ -242,6 +270,10 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> ParseError {
+        self.err_kind(ErrorKind::Syntax, msg)
+    }
+
+    fn err_kind(&self, kind: ErrorKind, msg: &str) -> ParseError {
         let (mut line, mut col) = (1, 1);
         for &b in &self.bytes[..self.pos.min(self.bytes.len())] {
             if b == b'\n' {
@@ -251,7 +283,7 @@ impl<'a> Parser<'a> {
                 col += 1;
             }
         }
-        ParseError { msg: msg.to_string(), line, col }
+        ParseError { msg: msg.to_string(), line, col, kind }
     }
 
     fn peek(&self) -> Option<u8> {
@@ -283,7 +315,7 @@ impl<'a> Parser<'a> {
             Some(b'n') => self.literal("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             Some(c) => Err(self.err(&format!("unexpected character '{}'", c as char))),
-            None => Err(self.err("unexpected end of input")),
+            None => Err(self.err_kind(ErrorKind::UnexpectedEof, "unexpected end of input")),
         }
     }
 
@@ -328,7 +360,7 @@ impl<'a> Parser<'a> {
         let mut s = String::new();
         loop {
             match self.peek() {
-                None => return Err(self.err("unterminated string")),
+                None => return Err(self.err_kind(ErrorKind::UnexpectedEof, "unterminated string")),
                 Some(b'"') => {
                     self.pos += 1;
                     return Ok(s);
@@ -431,7 +463,12 @@ impl<'a> Parser<'a> {
             self.expect(b':')?;
             self.skip_ws();
             let val = self.value()?;
-            map.insert(key, val);
+            if map.insert(key.clone(), val).is_some() {
+                return Err(self.err_kind(
+                    ErrorKind::DuplicateKey,
+                    &format!("duplicate object key \"{key}\""),
+                ));
+            }
             self.skip_ws();
             match self.peek() {
                 Some(b',') => self.pos += 1,
@@ -441,6 +478,526 @@ impl<'a> Parser<'a> {
                 }
                 _ => return Err(self.err("expected ',' or '}' in object")),
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental stream parser
+// ---------------------------------------------------------------------------
+
+/// Which container the stream parser is currently inside.
+enum Frame {
+    Arr(Vec<Json>),
+    Obj { map: BTreeMap<String, Json>, key: Option<String> },
+}
+
+/// Where the byte-at-a-time state machine is between bytes. `Str`/`Num`
+/// scratch lives in dedicated [`StreamParser`] fields so `Mode` stays `Copy`.
+#[derive(Clone, Copy)]
+enum Mode {
+    /// Expecting the start of a value (top level, after `[`, `,`, or `:`).
+    Value,
+    /// Inside an array after a value: expecting `,` or `]`.
+    ArrSep,
+    /// Inside an object after a value: expecting `,` or `}`.
+    ObjSep,
+    /// Right after `{`: expecting a key string or `}`.
+    KeyOrEnd,
+    /// After `,` in an object: expecting a key string.
+    Key,
+    /// After a key: expecting `:`.
+    Colon,
+    /// Inside a string literal (`is_key` routes it to the pending-key slot).
+    Str { is_key: bool },
+    /// Inside a number literal.
+    Num,
+    /// Inside `true`/`false`/`null`, `matched` bytes in.
+    Lit { word: &'static [u8], matched: usize },
+}
+
+/// Escape state inside a string literal.
+#[derive(Clone, Copy)]
+enum Esc {
+    /// Not in an escape.
+    None,
+    /// Just saw `\`.
+    Start,
+    /// Inside `\uXXXX`; `hi` is a pending high surrogate awaiting its pair.
+    Hex { digits: u8, acc: u32, hi: Option<u32> },
+    /// After a high surrogate: expecting `\`.
+    PairBackslash { hi: u32 },
+    /// After a high surrogate's `\`: expecting `u`.
+    PairU { hi: u32 },
+}
+
+/// Incremental, resumable JSON parser for newline-delimited request streams.
+///
+/// The push-parser analogue of [`Json::parse`], built the way
+/// `transport::FrameDecoder` ports incremental frame decode: callers
+/// [`feed`](StreamParser::feed) whatever bytes the socket produced — any
+/// split, including mid-escape, mid-UTF-8-sequence, or mid-number — and drain
+/// completed top-level values with [`next_value`](StreamParser::next_value).
+/// Malformed input surfaces as a typed [`ParseError`] at the offending byte
+/// and poisons the parser (every later call returns the same error), so one
+/// bad connection fails loud exactly once and never panics a worker.
+///
+/// Strictness matches the batch parser: duplicate object keys are typed
+/// errors ([`ErrorKind::DuplicateKey`]), garbage between values is a syntax
+/// error. Two denial-of-service guards are built in for untrusted sockets:
+/// nesting is capped at [`StreamParser::MAX_DEPTH`] and a single in-flight
+/// value is capped at `max_value_bytes` (default 16 MiB).
+///
+/// A top-level number only completes on a delimiter (the protocol's newline)
+/// or [`finish`](StreamParser::finish); containers, strings, and literals
+/// complete on their final byte.
+pub struct StreamParser {
+    mode: Mode,
+    stack: Vec<Frame>,
+    str_buf: Vec<u8>,
+    esc: Esc,
+    num_buf: String,
+    ready: std::collections::VecDeque<Json>,
+    dead: Option<ParseError>,
+    line: usize,
+    col: usize,
+    value_bytes: usize,
+    max_value_bytes: usize,
+}
+
+impl Default for StreamParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamParser {
+    /// Maximum container nesting depth accepted from a stream.
+    pub const MAX_DEPTH: usize = 64;
+    /// Default cap on the bytes of one in-flight top-level value.
+    pub const DEFAULT_MAX_VALUE_BYTES: usize = 16 << 20;
+
+    pub fn new() -> Self {
+        Self::with_max_value_bytes(Self::DEFAULT_MAX_VALUE_BYTES)
+    }
+
+    /// Parser with a custom per-value byte budget (protocol front ends set
+    /// this to their request-size limit).
+    pub fn with_max_value_bytes(max_value_bytes: usize) -> Self {
+        StreamParser {
+            mode: Mode::Value,
+            stack: Vec::new(),
+            str_buf: Vec::new(),
+            esc: Esc::None,
+            num_buf: String::new(),
+            ready: std::collections::VecDeque::new(),
+            dead: None,
+            line: 1,
+            col: 1,
+            value_bytes: 0,
+            max_value_bytes,
+        }
+    }
+
+    /// True if the parser has consumed part of a value that has not yet
+    /// completed (a socket that stalls here is mid-request, not idle).
+    pub fn mid_value(&self) -> bool {
+        !(matches!(self.mode, Mode::Value) && self.stack.is_empty())
+    }
+
+    /// Bytes consumed by the current in-flight value (0 when idle).
+    pub fn in_flight_bytes(&self) -> usize {
+        self.value_bytes
+    }
+
+    /// Pop the next completed top-level value, if any.
+    pub fn next_value(&mut self) -> Option<Json> {
+        self.ready.pop_front()
+    }
+
+    /// Consume `bytes`, queueing every top-level value completed along the
+    /// way. On a malformed byte the typed error is returned *and* retained:
+    /// the parser is poisoned and all later calls fail identically.
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<(), ParseError> {
+        if let Some(e) = &self.dead {
+            return Err(e.clone());
+        }
+        for &b in bytes {
+            let mut consumed = false;
+            while !consumed {
+                consumed = self.step(b)?;
+            }
+            if b == b'\n' {
+                self.line += 1;
+                self.col = 1;
+            } else {
+                self.col += 1;
+            }
+            if self.mid_value() {
+                self.value_bytes += 1;
+                if self.value_bytes > self.max_value_bytes {
+                    return Err(self.fail(
+                        ErrorKind::ValueTooLarge,
+                        &format!("value exceeds {} bytes", self.max_value_bytes),
+                    ));
+                }
+            } else {
+                self.value_bytes = 0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Declare end-of-stream. Completes a pending top-level number (the one
+    /// shape with no self-delimiting final byte); any other partial value is
+    /// a typed [`ErrorKind::UnexpectedEof`].
+    pub fn finish(&mut self) -> Result<(), ParseError> {
+        if let Some(e) = &self.dead {
+            return Err(e.clone());
+        }
+        match self.mode {
+            Mode::Value if self.stack.is_empty() => Ok(()),
+            Mode::Num if self.stack.is_empty() => {
+                let v = self.take_number()?;
+                self.attach(v);
+                self.value_bytes = 0;
+                Ok(())
+            }
+            _ => Err(self.fail(ErrorKind::UnexpectedEof, "stream ended mid-value")),
+        }
+    }
+
+    fn fail(&mut self, kind: ErrorKind, msg: &str) -> ParseError {
+        let e = ParseError { msg: msg.to_string(), line: self.line, col: self.col, kind };
+        self.dead = Some(e.clone());
+        e
+    }
+
+    /// Route a completed value to its destination: the ready queue at top
+    /// level, the open array, or the open object's pending key.
+    fn attach(&mut self, v: Json) {
+        match self.stack.last_mut() {
+            None => {
+                self.ready.push_back(v);
+                self.mode = Mode::Value;
+            }
+            Some(Frame::Arr(items)) => {
+                items.push(v);
+                self.mode = Mode::ArrSep;
+            }
+            Some(Frame::Obj { map, key }) => {
+                let k = key.take().expect("value attached to object without a pending key");
+                map.insert(k, v);
+                self.mode = Mode::ObjSep;
+            }
+        }
+    }
+
+    fn pop_container(&mut self) {
+        let v = match self.stack.pop().expect("close with empty container stack") {
+            Frame::Arr(items) => Json::Arr(items),
+            Frame::Obj { map, .. } => Json::Obj(map),
+        };
+        self.attach(v);
+    }
+
+    fn take_number(&mut self) -> Result<Json, ParseError> {
+        match self.num_buf.parse::<f64>() {
+            Ok(n) => {
+                self.num_buf.clear();
+                Ok(Json::Num(n))
+            }
+            Err(_) => Err(self.fail(ErrorKind::Syntax, "invalid number")),
+        }
+    }
+
+    /// Process one byte in the current mode. `Ok(false)` means the byte
+    /// terminated a number and must be re-processed in the successor mode.
+    fn step(&mut self, b: u8) -> Result<bool, ParseError> {
+        match self.mode {
+            Mode::Value => self.step_value(b),
+            Mode::ArrSep => match b {
+                b' ' | b'\t' | b'\n' | b'\r' => Ok(true),
+                b',' => {
+                    self.mode = Mode::Value;
+                    Ok(true)
+                }
+                b']' => {
+                    self.pop_container();
+                    Ok(true)
+                }
+                _ => Err(self.fail(ErrorKind::Syntax, "expected ',' or ']' in array")),
+            },
+            Mode::ObjSep => match b {
+                b' ' | b'\t' | b'\n' | b'\r' => Ok(true),
+                b',' => {
+                    self.mode = Mode::Key;
+                    Ok(true)
+                }
+                b'}' => {
+                    self.pop_container();
+                    Ok(true)
+                }
+                _ => Err(self.fail(ErrorKind::Syntax, "expected ',' or '}' in object")),
+            },
+            Mode::KeyOrEnd => match b {
+                b' ' | b'\t' | b'\n' | b'\r' => Ok(true),
+                b'"' => {
+                    self.str_buf.clear();
+                    self.esc = Esc::None;
+                    self.mode = Mode::Str { is_key: true };
+                    Ok(true)
+                }
+                b'}' => {
+                    self.pop_container();
+                    Ok(true)
+                }
+                _ => Err(self.fail(ErrorKind::Syntax, "expected '\"' or '}' in object")),
+            },
+            Mode::Key => match b {
+                b' ' | b'\t' | b'\n' | b'\r' => Ok(true),
+                b'"' => {
+                    self.str_buf.clear();
+                    self.esc = Esc::None;
+                    self.mode = Mode::Str { is_key: true };
+                    Ok(true)
+                }
+                _ => Err(self.fail(ErrorKind::Syntax, "expected object key")),
+            },
+            Mode::Colon => match b {
+                b' ' | b'\t' | b'\n' | b'\r' => Ok(true),
+                b':' => {
+                    self.mode = Mode::Value;
+                    Ok(true)
+                }
+                _ => Err(self.fail(ErrorKind::Syntax, "expected ':'")),
+            },
+            Mode::Str { is_key } => {
+                self.step_str(b, is_key)?;
+                Ok(true)
+            }
+            Mode::Num => {
+                if b.is_ascii_digit() || matches!(b, b'.' | b'e' | b'E' | b'+' | b'-') {
+                    self.num_buf.push(b as char);
+                    Ok(true)
+                } else {
+                    let v = self.take_number()?;
+                    self.attach(v);
+                    Ok(false) // terminator byte belongs to the successor mode
+                }
+            }
+            Mode::Lit { word, matched } => {
+                if word.get(matched) == Some(&b) {
+                    if matched + 1 == word.len() {
+                        let v = match word {
+                            b"true" => Json::Bool(true),
+                            b"false" => Json::Bool(false),
+                            _ => Json::Null,
+                        };
+                        self.attach(v);
+                    } else {
+                        self.mode = Mode::Lit { word, matched: matched + 1 };
+                    }
+                    Ok(true)
+                } else {
+                    let want = std::str::from_utf8(word).unwrap();
+                    Err(self.fail(ErrorKind::Syntax, &format!("invalid literal, expected '{want}'")))
+                }
+            }
+        }
+    }
+
+    fn step_value(&mut self, b: u8) -> Result<bool, ParseError> {
+        match b {
+            b' ' | b'\t' | b'\n' | b'\r' => Ok(true),
+            b'{' => {
+                self.push_frame(Frame::Obj { map: BTreeMap::new(), key: None })?;
+                self.mode = Mode::KeyOrEnd;
+                Ok(true)
+            }
+            b'[' => {
+                self.push_frame(Frame::Arr(Vec::new()))?;
+                self.mode = Mode::Value;
+                Ok(true)
+            }
+            b'"' => {
+                self.str_buf.clear();
+                self.esc = Esc::None;
+                self.mode = Mode::Str { is_key: false };
+                Ok(true)
+            }
+            b't' => {
+                self.mode = Mode::Lit { word: b"true", matched: 1 };
+                Ok(true)
+            }
+            b'f' => {
+                self.mode = Mode::Lit { word: b"false", matched: 1 };
+                Ok(true)
+            }
+            b'n' => {
+                self.mode = Mode::Lit { word: b"null", matched: 1 };
+                Ok(true)
+            }
+            b'-' => {
+                self.num_buf.clear();
+                self.num_buf.push('-');
+                self.mode = Mode::Num;
+                Ok(true)
+            }
+            c if c.is_ascii_digit() => {
+                self.num_buf.clear();
+                self.num_buf.push(c as char);
+                self.mode = Mode::Num;
+                Ok(true)
+            }
+            b']' => {
+                // `[]` — legal only directly after the opening bracket;
+                // `[1,]` lands here with a non-empty frame and stays an error.
+                match self.stack.last() {
+                    Some(Frame::Arr(items)) if items.is_empty() => {
+                        self.pop_container();
+                        Ok(true)
+                    }
+                    _ => Err(self.fail(ErrorKind::Syntax, "expected value before ']'")),
+                }
+            }
+            c => Err(self.fail(ErrorKind::Syntax, &format!("unexpected character '{}'", c as char))),
+        }
+    }
+
+    fn push_frame(&mut self, f: Frame) -> Result<(), ParseError> {
+        if self.stack.len() >= Self::MAX_DEPTH {
+            return Err(
+                self.fail(ErrorKind::TooDeep, &format!("nesting deeper than {}", Self::MAX_DEPTH))
+            );
+        }
+        self.stack.push(f);
+        Ok(())
+    }
+
+    fn step_str(&mut self, b: u8, is_key: bool) -> Result<(), ParseError> {
+        match self.esc {
+            Esc::None => match b {
+                b'"' => self.end_str(is_key),
+                b'\\' => {
+                    self.esc = Esc::Start;
+                    Ok(())
+                }
+                // Raw bytes (including multi-byte UTF-8 split across feeds)
+                // accumulate here; validity is checked once at the closing
+                // quote, matching the batch parser.
+                _ => {
+                    self.str_buf.push(b);
+                    Ok(())
+                }
+            },
+            Esc::Start => {
+                let c = match b {
+                    b'"' => '"',
+                    b'\\' => '\\',
+                    b'/' => '/',
+                    b'b' => '\u{8}',
+                    b'f' => '\u{c}',
+                    b'n' => '\n',
+                    b'r' => '\r',
+                    b't' => '\t',
+                    b'u' => {
+                        self.esc = Esc::Hex { digits: 0, acc: 0, hi: None };
+                        return Ok(());
+                    }
+                    _ => return Err(self.fail(ErrorKind::Syntax, "invalid escape")),
+                };
+                self.push_char(c);
+                self.esc = Esc::None;
+                Ok(())
+            }
+            Esc::Hex { digits, acc, hi } => {
+                let d = match (b as char).to_digit(16) {
+                    Some(d) => d,
+                    None => return Err(self.fail(ErrorKind::Syntax, "invalid \\u escape")),
+                };
+                let acc = (acc << 4) | d;
+                if digits + 1 < 4 {
+                    self.esc = Esc::Hex { digits: digits + 1, acc, hi };
+                    return Ok(());
+                }
+                match hi {
+                    None if (0xD800..0xDC00).contains(&acc) => {
+                        self.esc = Esc::PairBackslash { hi: acc };
+                        Ok(())
+                    }
+                    None => match char::from_u32(acc) {
+                        Some(c) => {
+                            self.push_char(c);
+                            self.esc = Esc::None;
+                            Ok(())
+                        }
+                        None => Err(self.fail(ErrorKind::Syntax, "invalid \\u escape")),
+                    },
+                    Some(h) => {
+                        if !(0xDC00..0xE000).contains(&acc) {
+                            return Err(self.fail(ErrorKind::Syntax, "invalid surrogate pair"));
+                        }
+                        let cp = 0x10000 + ((h - 0xD800) << 10) + (acc - 0xDC00);
+                        match char::from_u32(cp) {
+                            Some(c) => {
+                                self.push_char(c);
+                                self.esc = Esc::None;
+                                Ok(())
+                            }
+                            None => Err(self.fail(ErrorKind::Syntax, "invalid surrogate pair")),
+                        }
+                    }
+                }
+            }
+            Esc::PairBackslash { hi } => {
+                if b == b'\\' {
+                    self.esc = Esc::PairU { hi };
+                    Ok(())
+                } else {
+                    Err(self.fail(ErrorKind::Syntax, "lone high surrogate"))
+                }
+            }
+            Esc::PairU { hi } => {
+                if b == b'u' {
+                    self.esc = Esc::Hex { digits: 0, acc: 0, hi: Some(hi) };
+                    Ok(())
+                } else {
+                    Err(self.fail(ErrorKind::Syntax, "lone high surrogate"))
+                }
+            }
+        }
+    }
+
+    fn push_char(&mut self, c: char) {
+        let mut buf = [0u8; 4];
+        self.str_buf.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+    }
+
+    fn end_str(&mut self, is_key: bool) -> Result<(), ParseError> {
+        let bytes = std::mem::take(&mut self.str_buf);
+        let s = match String::from_utf8(bytes) {
+            Ok(s) => s,
+            Err(_) => return Err(self.fail(ErrorKind::Syntax, "invalid utf-8")),
+        };
+        if is_key {
+            match self.stack.last_mut() {
+                Some(Frame::Obj { map, key }) => {
+                    if map.contains_key(&s) {
+                        return Err(self.fail(
+                            ErrorKind::DuplicateKey,
+                            &format!("duplicate object key \"{s}\""),
+                        ));
+                    }
+                    *key = Some(s);
+                    self.mode = Mode::Colon;
+                    Ok(())
+                }
+                _ => unreachable!("key string outside an object frame"),
+            }
+        } else {
+            self.attach(Json::Str(s));
+            Ok(())
         }
     }
 }
@@ -509,5 +1066,229 @@ mod tests {
         assert_eq!(v.at(&["meta", "model"]).as_str(), Some("resnet8"));
         assert_eq!(v.at(&["meta", "batch"]).as_usize(), Some(64));
         assert_eq!(v.at(&["meta", "missing"]), &Json::Null);
+    }
+
+    #[test]
+    fn error_kinds_are_typed() {
+        assert_eq!(Json::parse("1 2").unwrap_err().kind, ErrorKind::TrailingGarbage);
+        assert_eq!(Json::parse("").unwrap_err().kind, ErrorKind::UnexpectedEof);
+        assert_eq!(Json::parse("\"abc").unwrap_err().kind, ErrorKind::UnexpectedEof);
+        assert_eq!(Json::parse("[1,]").unwrap_err().kind, ErrorKind::Syntax);
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        let e = Json::parse(r#"{"a":1,"a":2}"#).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::DuplicateKey);
+        assert!(e.msg.contains("\"a\""), "{e}");
+        // nested duplicates too
+        assert_eq!(
+            Json::parse(r#"{"x":{"b":1,"b":1}}"#).unwrap_err().kind,
+            ErrorKind::DuplicateKey
+        );
+        // same key in *different* objects is fine
+        assert!(Json::parse(r#"[{"a":1},{"a":2}]"#).is_ok());
+    }
+
+    // ---------- stream parser ----------
+
+    /// Feed `bytes` in the given chunks, then `finish`; returns the values
+    /// produced before any error plus the error (if one fired).
+    fn run_stream(bytes: &[u8], chunks: &[usize]) -> (Vec<Json>, Option<ParseError>) {
+        let mut p = StreamParser::new();
+        let mut vals = Vec::new();
+        let mut off = 0;
+        for &n in chunks {
+            let end = (off + n).min(bytes.len());
+            let res = p.feed(&bytes[off..end]);
+            while let Some(v) = p.next_value() {
+                vals.push(v);
+            }
+            if let Err(e) = res {
+                return (vals, Some(e));
+            }
+            off = end;
+        }
+        if off < bytes.len() {
+            let res = p.feed(&bytes[off..]);
+            while let Some(v) = p.next_value() {
+                vals.push(v);
+            }
+            if let Err(e) = res {
+                return (vals, Some(e));
+            }
+        }
+        let fin = p.finish().err();
+        while let Some(v) = p.next_value() {
+            vals.push(v);
+        }
+        (vals, fin)
+    }
+
+    #[test]
+    fn stream_parses_ndjson() {
+        let mut p = StreamParser::new();
+        p.feed(b"{\"id\":1}\n{\"id\":2}\n").unwrap();
+        assert_eq!(p.next_value().unwrap().get("id").as_i64(), Some(1));
+        assert_eq!(p.next_value().unwrap().get("id").as_i64(), Some(2));
+        assert!(p.next_value().is_none());
+        assert!(!p.mid_value());
+        p.finish().unwrap();
+    }
+
+    #[test]
+    fn stream_resumes_mid_value() {
+        let mut p = StreamParser::new();
+        // split inside a key, an escape, a number, and a multi-byte char
+        p.feed(b"{\"na").unwrap();
+        assert!(p.mid_value());
+        assert!(p.next_value().is_none());
+        p.feed(b"me\":\"a\\").unwrap();
+        p.feed(b"n\xC3").unwrap(); // first byte of 'é'
+        p.feed(b"\xA9\",\"n\":4").unwrap();
+        p.feed(b"2}\n").unwrap();
+        let v = p.next_value().unwrap();
+        assert_eq!(v.get("name").as_str(), Some("a\né"));
+        assert_eq!(v.get("n").as_i64(), Some(42));
+    }
+
+    #[test]
+    fn stream_top_level_number_needs_delimiter_or_finish() {
+        let mut p = StreamParser::new();
+        p.feed(b"12").unwrap();
+        assert!(p.next_value().is_none(), "could still be '123...'");
+        p.feed(b"3\n").unwrap();
+        assert_eq!(p.next_value(), Some(Json::Num(123.0)));
+
+        let mut p = StreamParser::new();
+        p.feed(b"4.5").unwrap();
+        p.finish().unwrap();
+        assert_eq!(p.next_value(), Some(Json::Num(4.5)));
+    }
+
+    #[test]
+    fn stream_typed_errors_poison() {
+        let mut p = StreamParser::new();
+        let e = p.feed(b"{\"a\":nope}").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::Syntax);
+        // poisoned: same error on every later call
+        let e2 = p.feed(b"{}").unwrap_err();
+        assert_eq!(e2.msg, e.msg);
+        assert!(p.finish().is_err());
+
+        let mut p = StreamParser::new();
+        assert_eq!(
+            p.feed(br#"{"a":1,"a":2}"#).unwrap_err().kind,
+            ErrorKind::DuplicateKey,
+        );
+
+        let mut p = StreamParser::new();
+        p.feed(b"[1,2").unwrap();
+        assert_eq!(p.finish().unwrap_err().kind, ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn stream_guards_depth_and_size() {
+        let mut p = StreamParser::new();
+        let deep = vec![b'['; StreamParser::MAX_DEPTH + 1];
+        assert_eq!(p.feed(&deep).unwrap_err().kind, ErrorKind::TooDeep);
+
+        let mut p = StreamParser::with_max_value_bytes(64);
+        let long = format!("\"{}\"", "x".repeat(100));
+        assert_eq!(p.feed(long.as_bytes()).unwrap_err().kind, ErrorKind::ValueTooLarge);
+        // a small value after reset-by-new parser is fine at the same cap
+        let mut p = StreamParser::with_max_value_bytes(64);
+        p.feed(b"\"ok\"\n\"also ok\"\n").unwrap();
+        assert_eq!(p.next_value(), Some(Json::str("ok")));
+        assert_eq!(p.next_value(), Some(Json::str("also ok")));
+    }
+
+    #[test]
+    fn stream_rejects_garbage_between_values() {
+        let mut p = StreamParser::new();
+        let e = p.feed(b"{\"a\":1} xyz").unwrap_err();
+        assert_eq!(e.kind, ErrorKind::Syntax);
+    }
+
+    // deterministic random document generator for the property tests
+    use crate::util::rng::{Pcg32, Rng};
+
+    fn gen_string(rng: &mut Pcg32) -> String {
+        const PALETTE: &[&str] = &["a", "é", "😀", "\"", "\\", "\n", "\u{8}", "x", " ", "\t", "𝄞"];
+        let n = rng.next_below(6) as usize;
+        (0..n).map(|_| PALETTE[rng.next_below(PALETTE.len() as u64) as usize]).collect()
+    }
+
+    fn gen_value(rng: &mut Pcg32, depth: usize) -> Json {
+        let max = if depth >= 4 { 5 } else { 7 };
+        match rng.next_below(max) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f32() < 0.5),
+            2 => Json::Num((rng.next_below(16000) as f64 - 8000.0) / 8.0),
+            3 | 4 => Json::Str(gen_string(rng)),
+            5 => {
+                let n = rng.next_below(4) as usize;
+                Json::Arr((0..n).map(|_| gen_value(rng, depth + 1)).collect())
+            }
+            _ => {
+                let n = rng.next_below(4) as usize;
+                Json::Obj(
+                    (0..n).map(|i| (format!("k{i}"), gen_value(rng, depth + 1))).collect(),
+                )
+            }
+        }
+    }
+
+    /// Split invariance: byte-at-a-time ≡ random chunks ≡ whole buffer, for
+    /// both pristine and bit-flipped documents (values *and* error positions
+    /// must agree); pristine streams must also agree with the batch parser.
+    #[test]
+    fn stream_split_invariance_property() {
+        for seed in 0..150u64 {
+            let mut rng = Pcg32::new(seed, 0x5EED);
+            let doc = gen_value(&mut rng, 0);
+            let text =
+                if rng.next_f32() < 0.5 { doc.to_string() } else { doc.to_string_pretty() };
+            let mut bytes = text.into_bytes();
+            bytes.push(b'\n'); // protocol delimiter
+
+            let corrupt = rng.next_f32() < 0.4;
+            if corrupt && !bytes.is_empty() {
+                let bit = rng.next_below(bytes.len() as u64 * 8) as usize;
+                bytes[bit / 8] ^= 1 << (bit % 8);
+            }
+
+            let whole = run_stream(&bytes, &[bytes.len()]);
+            let by_byte = run_stream(&bytes, &vec![1; bytes.len()]);
+            let chunks: Vec<usize> =
+                (0..bytes.len()).map(|_| 1 + rng.next_below(7) as usize).collect();
+            let chunked = run_stream(&bytes, &chunks);
+
+            for (name, got) in [("byte-at-a-time", &by_byte), ("chunked", &chunked)] {
+                assert_eq!(got.0, whole.0, "seed {seed}: {name} values diverge");
+                match (&got.1, &whole.1) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert_eq!(
+                            (a.kind, a.line, a.col, &a.msg),
+                            (b.kind, b.line, b.col, &b.msg),
+                            "seed {seed}: {name} error diverges"
+                        );
+                    }
+                    _ => panic!("seed {seed}: {name} error presence diverges"),
+                }
+            }
+
+            if !corrupt {
+                assert!(whole.1.is_none(), "seed {seed}: pristine doc failed: {:?}", whole.1);
+                assert_eq!(whole.0, vec![doc], "seed {seed}: stream != generator");
+                // batch parser agreement on the undelimited text
+                let batch = Json::parse(
+                    std::str::from_utf8(&bytes[..bytes.len() - 1]).unwrap(),
+                )
+                .unwrap();
+                assert_eq!(batch, whole.0[0], "seed {seed}: batch != stream");
+            }
+        }
     }
 }

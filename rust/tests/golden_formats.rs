@@ -1,5 +1,6 @@
-//! Cross-language golden tests: `python -m compile.golden` (run by
-//! `make artifacts`) dumps test vectors computed by the jnp reference;
+//! Cross-language golden tests: `cd python && python -m compile.golden
+//! --out ../artifacts/golden` dumps test vectors computed by the jnp
+//! reference;
 //! the rust format library must reproduce them — **bit-exactly** for the
 //! FP8/BF16/FP16 truncations and stochastic rounding (shared exact
 //! algorithm), and to tight tolerance for the S2FP8 pow path (libm ulps;
@@ -7,11 +8,12 @@
 
 use s2fp8::formats::{bf16, fp16, fp8, s2fp8 as s2};
 
-/// KNOWN GAP: the golden vectors come from `python -m compile.golden`
-/// (run by `make artifacts`) and are not checked into the repo, so a
+/// KNOWN GAP: the golden vectors come from
+/// `cd python && python -m compile.golden --out ../artifacts/golden`
+/// (needs a local jax install) and are not checked into the repo, so a
 /// fresh checkout has nothing to compare against. Each test skips with a
-/// note instead of failing tier-1; a built artifact set (or
-/// S2FP8_ARTIFACTS) runs the full bit-exact cross-language comparison.
+/// note naming that command instead of failing tier-1; a built artifact
+/// set (or S2FP8_ARTIFACTS) runs the full bit-exact comparison.
 fn golden_dir() -> Option<std::path::PathBuf> {
     let dir = std::env::var("S2FP8_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let p = std::path::PathBuf::from(dir).join("golden");
@@ -23,7 +25,8 @@ fn golden_dir() -> Option<std::path::PathBuf> {
         panic!("S2FP8_REQUIRE_ARTIFACTS is set but golden files are missing ({})", p.display());
     } else {
         eprintln!(
-            "SKIP: golden files not built — run `make artifacts` (looked in {})",
+            "SKIP: golden files not built — run `cd python && python -m compile.golden \
+             --out ../artifacts/golden` (looked in {})",
             p.display()
         );
         None

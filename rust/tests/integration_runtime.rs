@@ -1,17 +1,19 @@
 //! Integration tests: load real AOT artifacts and execute them on the PJRT
 //! CPU client, validating numerics against the rust format library.
 //!
-//! Requires `make artifacts` to have populated `artifacts/`; without a
-//! built artifact set each test skips with a note (see `artifacts_dir`).
+//! Requires `cd python && python -m compile.aot --out ../artifacts` to
+//! have populated `artifacts/`; without a built artifact set each test
+//! skips with a note (see `artifacts_dir`).
 
 use s2fp8::formats::{fp8, s2fp8 as s2};
 use s2fp8::runtime::{Artifact, HostValue, Role, Runtime};
 use s2fp8::util::rng::{Pcg32, Rng};
 
-/// KNOWN GAP: the AOT artifacts come from `make artifacts`
-/// (python/compile/aot.py + a local XLA install) and are not checked into
-/// the repo. Without them these tests skip with a note instead of failing
-/// tier-1; a built artifact set (or S2FP8_ARTIFACTS) runs them in full.
+/// KNOWN GAP: the AOT artifacts come from
+/// `cd python && python -m compile.aot --out ../artifacts` (needs a local
+/// jax/XLA install) and are not checked into the repo. Without them these
+/// tests skip with a note naming that command instead of failing tier-1;
+/// a built artifact set (or S2FP8_ARTIFACTS) runs them in full.
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::env::var("S2FP8_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let p = std::path::PathBuf::from(dir);
@@ -23,7 +25,8 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
         panic!("S2FP8_REQUIRE_ARTIFACTS is set but artifacts are missing ({})", p.display());
     } else {
         eprintln!(
-            "SKIP: artifacts not built — run `make artifacts` first (looked in {})",
+            "SKIP: artifacts not built — run `cd python && python -m compile.aot \
+             --out ../artifacts` (looked in {})",
             p.display()
         );
         None

@@ -43,6 +43,7 @@ fn engine(
         workers,
         queue_capacity: 2048,
         policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(800) },
+        ..ServeConfig::default()
     };
     (Engine::start(backend, cfg).unwrap(), model)
 }
@@ -213,6 +214,7 @@ fn zoo_serve_forward_is_bitwise_identical_to_training_forward() {
             workers: 2,
             queue_capacity: 256,
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            ..ServeConfig::default()
         };
         let engine = Engine::start(backend, cfg).unwrap();
 

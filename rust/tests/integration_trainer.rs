@@ -10,12 +10,13 @@ use s2fp8::coordinator::{checkpoint, eval::Evaluator};
 use s2fp8::runtime::{Artifact, HostValue, Runtime};
 use s2fp8::util::rng::{Pcg32, Rng};
 
-/// KNOWN GAP: the AOT artifacts come from `make artifacts`
-/// (python/compile/aot.py + a local XLA install) and are not checked into
-/// the repo, so a fresh checkout has nothing for these integration tests
-/// to execute. They skip with a note instead of failing tier-1; building
-/// the artifacts (or pointing S2FP8_ARTIFACTS at a built set) runs them
-/// in full.
+/// KNOWN GAP: the AOT artifacts come from
+/// `cd python && python -m compile.aot --out ../artifacts` (needs a local
+/// jax/XLA install) and are not checked into the repo, so a fresh checkout
+/// has nothing for these integration tests to execute. They skip with a
+/// note naming that command instead of failing tier-1; building the
+/// artifacts (or pointing S2FP8_ARTIFACTS at a built set) runs them in
+/// full.
 fn artifacts_dir() -> Option<String> {
     let dir = std::env::var("S2FP8_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     if std::path::Path::new(&dir).join("index.json").exists() {
@@ -25,7 +26,10 @@ fn artifacts_dir() -> Option<String> {
         // fails loudly instead of silently skipping the whole suite
         panic!("S2FP8_REQUIRE_ARTIFACTS is set but artifacts are missing (looked in {dir})");
     } else {
-        eprintln!("SKIP: artifacts not built — run `make artifacts` (looked in {dir})");
+        eprintln!(
+            "SKIP: artifacts not built — run `cd python && python -m compile.aot \
+             --out ../artifacts` (looked in {dir})"
+        );
         None
     }
 }
